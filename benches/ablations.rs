@@ -1,0 +1,103 @@
+//! Robustness ablations (paper §4's "robust to the shape of 2-norm
+//! distribution" claim + supplementary "more configurations"):
+//!
+//! (a) norm-distribution sweep — log-normal σ from 0 (uniform norms, where
+//!     RANGE degenerates to SIMPLE) to 0.6 (heavy tail): RANGE must never
+//!     lose, and the gap must widen with the tail;
+//! (b) top-k sweep (k ∈ {1, 10, 50}) at a fixed operating point;
+//! (c) full baseline field including SIGN-ALSH (Shrivastava & Li 2015) —
+//!     the lineage panel: RANGE > SIMPLE > SIGN-ALSH ≥ L2-ALSH.
+//!
+//! Run with: `cargo bench --bench ablations`
+
+mod common;
+
+use rangelsh::bench::Table;
+use rangelsh::config::IndexAlgo;
+use rangelsh::data::synthetic;
+use rangelsh::eval::harness::{format_probe_table, ground_truth, run_curve, CurveSpec};
+use rangelsh::eval::recall::geometric_checkpoints;
+
+fn main() -> rangelsh::Result<()> {
+    // ---- (a) norm-distribution robustness --------------------------------
+    println!("=== (a) 2-norm distribution sweep: log-normal sigma, 20K x 64d, L=32 ===");
+    let mut table = Table::new(&[
+        "sigma", "tail ratio", "range@50%", "simple@50%", "advantage",
+    ]);
+    for sigma in [0.0f32, 0.1, 0.2, 0.35, 0.5, 0.6] {
+        let items = synthetic::longtail_with_sigma(20_000, 64, sigma, 11);
+        let queries = synthetic::correlated_queries(&items, 200, 0.4, 12);
+        let gt = ground_truth(&items, &queries, 10);
+        let cps = geometric_checkpoints(10, items.len(), 5);
+        let range = run_curve(
+            &items, &queries, &gt, &cps,
+            &CurveSpec::new(IndexAlgo::RangeLsh, 32, 32),
+            "r",
+        )?;
+        let simple = run_curve(
+            &items, &queries, &gt, &cps,
+            &CurveSpec::new(IndexAlgo::SimpleLsh, 32, 1),
+            "s",
+        )?;
+        let rp = range.curve.probes_to_reach(0.5).unwrap_or(items.len());
+        let sp = simple.curve.probes_to_reach(0.5).unwrap_or(items.len());
+        table.row(vec![
+            format!("{sigma}"),
+            format!("{:.2}", items.norm_stats().tail_ratio()),
+            rp.to_string(),
+            sp.to_string(),
+            format!("{:.2}x", sp as f64 / rp as f64),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("expected shape: advantage ~1x at sigma=0, growing with the tail\n");
+
+    // ---- (b) top-k sweep ---------------------------------------------------
+    println!("=== (b) top-k sweep on yahoo-sim, L=32 m=64 ===");
+    let wl = common::yahoo();
+    let cps = geometric_checkpoints(10, wl.items.len(), 4);
+    let mut table = Table::new(&["k", "range@80%", "simple@80%", "advantage"]);
+    for k in [1usize, 10, 50] {
+        let gt = ground_truth(&wl.items, &wl.queries, k);
+        let mut rspec = CurveSpec::new(IndexAlgo::RangeLsh, 32, 64);
+        rspec.top_k = k;
+        let mut sspec = CurveSpec::new(IndexAlgo::SimpleLsh, 32, 1);
+        sspec.top_k = k;
+        let range = run_curve(&wl.items, &wl.queries, &gt, &cps, &rspec, "r")?;
+        let simple = run_curve(&wl.items, &wl.queries, &gt, &cps, &sspec, "s")?;
+        let rp = range.curve.probes_to_reach(0.8).unwrap_or(wl.items.len());
+        let sp = simple.curve.probes_to_reach(0.8).unwrap_or(wl.items.len());
+        table.row(vec![
+            k.to_string(),
+            rp.to_string(),
+            sp.to_string(),
+            format!("{:.2}x", sp as f64 / rp as f64),
+        ]);
+    }
+    println!("{}", table.render());
+
+    // ---- (c) full baseline field (incl. SIGN-ALSH) -------------------------
+    println!("=== (c) all baselines on netflix-sim, L=32 ===");
+    let wl = common::netflix();
+    let gt = ground_truth(&wl.items, &wl.queries, 10);
+    let cps = geometric_checkpoints(10, wl.items.len(), 4);
+    let mut results = Vec::new();
+    for (algo, m, label) in [
+        (IndexAlgo::RangeLsh, 64, "range_lsh      L=32 m=64"),
+        (IndexAlgo::SimpleLsh, 1, "simple_lsh     L=32"),
+        (IndexAlgo::SignAlsh, 1, "sign_alsh      L=32"),
+        (IndexAlgo::L2Alsh, 1, "l2_alsh        K=32"),
+        (IndexAlgo::RangedL2Alsh, 64, "ranged_l2_alsh K=32 m=64"),
+    ] {
+        results.push(run_curve(
+            &wl.items,
+            &wl.queries,
+            &gt,
+            &cps,
+            &CurveSpec::new(algo, 32, m),
+            label,
+        )?);
+    }
+    println!("{}", format_probe_table(&results, &[0.5, 0.8, 0.9]));
+    Ok(())
+}

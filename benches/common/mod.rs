@@ -1,0 +1,69 @@
+//! Shared workload definitions for the paper-figure benches.
+//!
+//! The three corpora mirror the paper's datasets (DESIGN.md §3):
+//! netflix-sim (17,770 x 300, MF, mild norms), yahoo-sim (50K x 300, MF),
+//! imagenet-sim (200K x 128, long-tailed). `RANGELSH_BENCH_SCALE=small`
+//! shrinks everything ~10x for smoke runs.
+#![allow(dead_code)] // each bench target uses a different subset
+
+use rangelsh::data::{synthetic, Dataset};
+
+pub struct Workload {
+    pub name: &'static str,
+    pub items: Dataset,
+    pub queries: Dataset,
+}
+
+fn scale() -> f64 {
+    match std::env::var("RANGELSH_BENCH_SCALE").as_deref() {
+        Ok("small") => 0.1,
+        Ok("tiny") => 0.02,
+        _ => 1.0,
+    }
+}
+
+fn scaled(n: usize) -> usize {
+    ((n as f64 * scale()) as usize).max(500)
+}
+
+pub fn n_queries() -> usize {
+    if scale() < 1.0 {
+        100
+    } else {
+        1000
+    }
+}
+
+/// Netflix stand-in: the paper's exact Netflix cardinality and dim.
+pub fn netflix() -> Workload {
+    Workload {
+        name: "netflix-sim",
+        items: synthetic::mf_embeddings(scaled(17_770), 300, 32, 42),
+        queries: synthetic::mf_user_queries(n_queries(), 300, 32, 42),
+    }
+}
+
+/// Yahoo!Music stand-in (full corpus ~136K; scaled to 50K for time).
+pub fn yahoo() -> Workload {
+    Workload {
+        name: "yahoo-sim",
+        items: synthetic::mf_embeddings(scaled(50_000), 300, 32, 43),
+        queries: synthetic::mf_user_queries(n_queries(), 300, 32, 43),
+    }
+}
+
+/// ImageNet-SIFT stand-in (full corpus ~2M; scaled to 200K for time).
+pub fn imagenet() -> Workload {
+    Workload {
+        name: "imagenet-sim",
+        items: synthetic::longtail_sift(scaled(200_000), 128, 44),
+        queries: synthetic::gaussian_queries(n_queries(), 128, 1009),
+    }
+}
+
+pub fn all_workloads() -> Vec<Workload> {
+    vec![netflix(), yahoo(), imagenet()]
+}
+
+/// The paper's Fig. 2 grid: (code length, number of ranges).
+pub const FIG2_GRID: &[(usize, usize)] = &[(16, 32), (32, 64), (64, 128)];

@@ -1,0 +1,83 @@
+//! §5 regenerator: norm-range partitioning applied to L2-ALSH.
+//!
+//! Theory side: Eq. 13's per-range ρ_j < Eq. 7's ρ for every range with
+//! confined norms. Empirical side: ranged L2-ALSH beats vanilla L2-ALSH
+//! on the probed-items/recall curve (supplementary experiment).
+//!
+//! Run with: `cargo bench --bench ext_l2alsh`
+
+mod common;
+
+use rangelsh::bench::Table;
+use rangelsh::config::IndexAlgo;
+use rangelsh::eval::harness::{format_probe_table, ground_truth, run_curve, CurveSpec};
+use rangelsh::eval::recall::geometric_checkpoints;
+use rangelsh::index::{partition, PartitionScheme};
+use rangelsh::theory::rho::ranged_l2alsh_grid_search;
+use rangelsh::theory::rho_l2alsh;
+
+fn main() -> rangelsh::Result<()> {
+    // ---- Theory: Eq. 13 + per-range parameter freedom vs Eq. 7 ----------
+    // §5's two levers: (a) confined norms tighten both collision terms,
+    // (b) each range only needs U_j < 1/u_hi, freeing the grid search.
+    let (s0, c, m, r) = (0.5f64, 0.7f64, 3u32, 2.5f64);
+    let full_rho = rho_l2alsh(s0, c, m, 0.83, r);
+    println!(
+        "=== §5 theory: per-range Eq.13 grid search vs Eq.7 rho = {full_rho:.4} \
+         (S0=0.5, c=0.7, m=3, r=2.5) ==="
+    );
+    let mut t = Table::new(&["range (u_lo, u_hi]", "best U_j", "rho_j (Eq.13)", "vs Eq.7"]);
+    for (lo, hi) in [(0.0, 0.25), (0.25, 0.5), (0.5, 0.75), (0.75, 1.0)] {
+        let (u_j, rho_j) = ranged_l2alsh_grid_search(s0, c, m, r, lo * s0, hi * s0);
+        t.row(vec![
+            format!("({:.2}, {:.2}]", lo * s0, hi * s0),
+            format!("{u_j:.2}"),
+            format!("{rho_j:.4}"),
+            format!("{:+.4}", rho_j - full_rho),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // ---- Empirical: ranged L2-ALSH vs L2-ALSH ---------------------------
+    for wl in [common::netflix(), common::imagenet()] {
+        println!(
+            "=== {} ({} items): ranged L2-ALSH vs L2-ALSH, K=16 ===",
+            wl.name,
+            wl.items.len()
+        );
+        let gt = ground_truth(&wl.items, &wl.queries, 10);
+        let cps = geometric_checkpoints(10, wl.items.len(), 4);
+        let mut results = Vec::new();
+        for (algo, parts, label) in [
+            (IndexAlgo::RangedL2Alsh, 32, "ranged_l2_alsh K=16 m=32"),
+            (IndexAlgo::L2Alsh, 1, "l2_alsh        K=16"),
+        ] {
+            results.push(run_curve(
+                &wl.items,
+                &wl.queries,
+                &gt,
+                &cps,
+                &CurveSpec::new(algo, 16, parts),
+                label,
+            )?);
+        }
+        println!("{}", format_probe_table(&results, &[0.5, 0.8, 0.9]));
+    }
+
+    // ---- Per-range scaling factors (the "flexibility" §5 argues for) ----
+    let wl = common::imagenet();
+    let parts = partition(&wl.items, 8, PartitionScheme::Percentile);
+    println!("=== per-range norm bounds on {} (m=8) ===", wl.name);
+    let mut t = Table::new(&["range", "u_min", "u_max", "u_max/U"]);
+    let u = wl.items.max_norm();
+    for (j, p) in parts.iter().enumerate() {
+        t.row(vec![
+            j.to_string(),
+            format!("{:.3}", p.u_min),
+            format!("{:.3}", p.u_max),
+            format!("{:.3}", p.u_max / u),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}

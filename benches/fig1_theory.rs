@@ -1,0 +1,155 @@
+//! Fig. 1 + Theorem 1 regenerator.
+//!
+//! (a) ρ = G(c, S0) vs S0 — the theory curve behind the whole paper;
+//! (b) the 2-norm distribution of imagenet-sim (long tail);
+//! (c) max-inner-product distribution after SIMPLE-LSH normalisation;
+//! (d) same after RANGE-LSH's per-range normalisation (32 ranges);
+//! (e) Theorem 1 condition check + Eq. 11 predicted cost ratio, plus an
+//!     empirical probes-at-recall scaling in n.
+//!
+//! Run with: `cargo bench --bench fig1_theory`
+
+mod common;
+
+use rangelsh::config::IndexAlgo;
+use rangelsh::data::synthetic;
+use rangelsh::eval::harness::{ground_truth, run_curve, CurveSpec};
+use rangelsh::eval::max_inner_products;
+use rangelsh::eval::recall::geometric_checkpoints;
+use rangelsh::index::{partition, PartitionScheme};
+use rangelsh::theory::{g_rho, theorem1_check};
+
+fn histogram(values: &[f32], lo: f32, hi: f32, bins: usize) -> Vec<usize> {
+    let mut h = vec![0usize; bins];
+    for &v in values {
+        let t = ((v - lo) / (hi - lo) * bins as f32) as usize;
+        h[t.min(bins - 1)] += 1;
+    }
+    h
+}
+
+fn print_hist(h: &[usize], lo: f32, hi: f32) {
+    let max = *h.iter().max().unwrap_or(&1);
+    for (i, &c) in h.iter().enumerate() {
+        let l = lo + (hi - lo) * i as f32 / h.len() as f32;
+        let bar = "#".repeat((c * 48 / max.max(1)).max(usize::from(c > 0)));
+        println!("  {l:>5.2}  {c:>8}  {bar}");
+    }
+}
+
+fn main() -> rangelsh::Result<()> {
+    // ---- Fig 1(a): rho vs S0 ------------------------------------------
+    println!("=== Fig 1(a): rho = G(c, S0) (query time O(n^rho log n)) ===");
+    println!("{:>5}  {:>8}  {:>8}  {:>8}", "S0", "c=0.5", "c=0.7", "c=0.9");
+    for i in 1..=19 {
+        let s0 = 0.05 * i as f64;
+        println!(
+            "{s0:>5.2}  {:>8.4}  {:>8.4}  {:>8.4}",
+            g_rho(0.5, s0),
+            g_rho(0.7, s0),
+            g_rho(0.9, s0)
+        );
+    }
+
+    // ---- Fig 1(b): norm distribution -----------------------------------
+    let wl = common::imagenet();
+    let u = wl.items.max_norm();
+    println!(
+        "\n=== Fig 1(b): 2-norm distribution of {} (max scaled to 1) ===",
+        wl.name
+    );
+    let norms: Vec<f32> = wl.items.norms().iter().map(|&n| n / u).collect();
+    print_hist(&histogram(&norms, 0.0, 1.0, 12), 0.0, 1.0);
+    let stats = wl.items.norm_stats();
+    println!(
+        "  median/max = {:.3} — the long tail the paper identifies",
+        stats.median / stats.max
+    );
+
+    // ---- Fig 1(c): S0 after SIMPLE-LSH normalisation -------------------
+    println!("\n=== Fig 1(c): max inner product after SIMPLE-LSH normalisation ===");
+    let mips = max_inner_products(&wl.items, &wl.queries);
+    let qn: Vec<f32> = (0..wl.queries.len()).map(|i| wl.queries.norm(i)).collect();
+    let simple_s0: Vec<f32> = mips.iter().zip(&qn).map(|(&s, &q)| s / (u * q)).collect();
+    print_hist(&histogram(&simple_s0, 0.0, 1.0, 12), 0.0, 1.0);
+    let mean_simple = simple_s0.iter().sum::<f32>() / simple_s0.len() as f32;
+
+    // ---- Fig 1(d): S0 after RANGE-LSH normalisation --------------------
+    println!("\n=== Fig 1(d): max inner product after RANGE-LSH normalisation (32 ranges) ===");
+    let parts = partition(&wl.items, 32, PartitionScheme::Percentile);
+    let range_s0: Vec<f32> = (0..wl.queries.len())
+        .map(|qi| {
+            let q = wl.queries.row(qi);
+            parts
+                .iter()
+                .flat_map(|p| {
+                    p.ids
+                        .iter()
+                        .map(|&id| wl.items.dot(id as usize, q) / (p.u_max * qn[qi]))
+                })
+                .fold(f32::MIN, f32::max)
+        })
+        .collect();
+    print_hist(&histogram(&range_s0, 0.0, 1.0, 12), 0.0, 1.0);
+    let mean_range = range_s0.iter().sum::<f32>() / range_s0.len() as f32;
+    println!(
+        "  mean S0: SIMPLE {mean_simple:.3} -> RANGE {mean_range:.3} \
+         (rho at c=0.7: {:.3} -> {:.3})",
+        g_rho(0.7, (mean_simple as f64).clamp(1e-6, 1.0)),
+        g_rho(0.7, (mean_range as f64).clamp(1e-6, 1.0)),
+    );
+
+    // ---- Theorem 1 ------------------------------------------------------
+    println!("\n=== Theorem 1 check on {} ===", wl.name);
+    let us: Vec<f32> = parts.iter().map(|p| p.u_max).collect();
+    let s0 = (mips.iter().zip(&qn).map(|(&s, &q)| (s / q) as f64).sum::<f64>()
+        / mips.len() as f64)
+        .min(u as f64);
+    let rep = theorem1_check(wl.items.len(), &us, u, s0, 0.7);
+    println!(
+        "  rho = {:.4}, rho* = {:.4}, alpha = {:.4} (< {:.4}?), beta = {:.4} (< {:.4}?)",
+        rep.rho, rep.rho_star, rep.alpha, rep.alpha_limit, rep.beta, rep.beta_limit
+    );
+    println!(
+        "  conditions hold: {}, Eq.11 predicted RANGE/SIMPLE cost ratio: {:.4}",
+        rep.conditions_hold, rep.predicted_cost_ratio
+    );
+
+    // ---- Empirical complexity scaling in n ------------------------------
+    // Correlated queries (noisy copies of items — the recommendation
+    // regime) so a fixed high recall target is reachable at every n;
+    // the Theorem 1 story is the *ratio* of probes as n grows.
+    println!("\n=== Empirical probes@90% top-1 recall vs n (RANGE vs SIMPLE, L=32) ===");
+    println!(
+        "{:>8}  {:>14}  {:>14}  {:>8}",
+        "n", "range probes", "simple probes", "ratio"
+    );
+    for n in [10_000usize, 30_000, 100_000] {
+        let items = synthetic::longtail_sift(n, 64, 5);
+        let queries = synthetic::correlated_queries(&items, 200, 0.3, 6);
+        let gt = ground_truth(&items, &queries, 1); // top-1: the planted near-copy
+        let cps = geometric_checkpoints(10, n, 6);
+        let range = run_curve(
+            &items, &queries, &gt, &cps,
+            &CurveSpec::new(IndexAlgo::RangeLsh, 32, 32),
+            "range",
+        )?;
+        let simple = run_curve(
+            &items, &queries, &gt, &cps,
+            &CurveSpec::new(IndexAlgo::SimpleLsh, 32, 1),
+            "simple",
+        )?;
+        let (rp, sp) = (
+            range.curve.probes_to_reach(0.9),
+            simple.curve.probes_to_reach(0.9),
+        );
+        match (rp, sp) {
+            (Some(rp), Some(sp)) => println!(
+                "{n:>8}  {rp:>14}  {sp:>14}  {:>8.2}x",
+                sp as f64 / rp as f64
+            ),
+            _ => println!("{n:>8}  {rp:?} vs {sp:?}"),
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! Fig. 2 regenerator: probed-items vs recall@10 curves for RANGE-LSH,
+//! SIMPLE-LSH and L2-ALSH on the three corpora at L in {16, 32, 64}.
+//!
+//! The paper's qualitative claims to reproduce:
+//!   - RANGE-LSH probes far fewer items than SIMPLE-LSH at equal recall
+//!     (order of magnitude on the long-tailed corpus);
+//!   - SIMPLE-LSH beats or matches L2-ALSH;
+//!   - the gap persists across code lengths.
+//!
+//! Run with: `cargo bench --bench fig2_recall_curves`
+//! (set RANGELSH_BENCH_SCALE=small for a quick pass)
+
+mod common;
+
+use rangelsh::config::IndexAlgo;
+use rangelsh::eval::harness::{format_probe_table, ground_truth, run_curve, CurveSpec};
+use rangelsh::eval::recall::geometric_checkpoints;
+use rangelsh::util::json::Json;
+
+fn main() -> rangelsh::Result<()> {
+    let mut json_panels = Vec::new();
+    for wl in common::all_workloads() {
+        println!(
+            "\n=== {} ({} items x {}d, tail ratio {:.2}) ===",
+            wl.name,
+            wl.items.len(),
+            wl.items.dim(),
+            wl.items.norm_stats().tail_ratio()
+        );
+        let gt = ground_truth(&wl.items, &wl.queries, 10);
+        let max_probe = wl.items.len();
+        let cps = geometric_checkpoints(10, max_probe, 4);
+
+        for &(bits, m) in common::FIG2_GRID {
+            println!("\n--- code length L = {bits} (RANGE uses m = {m} ranges) ---");
+            let mut results = Vec::new();
+            for (algo, parts, label) in [
+                (IndexAlgo::RangeLsh, m, format!("range_lsh  L={bits} m={m}")),
+                (IndexAlgo::SimpleLsh, 1, format!("simple_lsh L={bits}")),
+                (IndexAlgo::L2Alsh, 1, format!("l2_alsh    K={bits}")),
+            ] {
+                let spec = CurveSpec::new(algo, bits, parts);
+                let res = run_curve(&wl.items, &wl.queries, &gt, &cps, &spec, label)?;
+                results.push(res);
+            }
+            println!("{}", format_probe_table(&results, &[0.5, 0.8, 0.9, 0.95]));
+            for r in &results {
+                json_panels.push(Json::obj(vec![
+                    ("dataset", Json::Str(wl.name.to_string())),
+                    ("code_bits", Json::Num(bits as f64)),
+                    ("label", Json::Str(r.label.clone())),
+                    ("checkpoints", Json::arr_usize(r.curve.checkpoints.iter().copied())),
+                    ("recalls", Json::arr_f64(r.curve.recalls.iter().copied())),
+                ]));
+            }
+        }
+    }
+    let out = "bench_results_fig2.json";
+    std::fs::write(out, Json::Arr(json_panels).to_string())?;
+    println!("\nwrote {out}");
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Fig. 3 regenerator (+ ε ablation).
+//!
+//! (a) percentile vs uniform partitioning at L=32, m=32 on yahoo-sim —
+//!     the paper finds them comparable (uniform slightly better);
+//! (b) the number of sub-datasets m in {32, 64, 128, 256} at L=32 —
+//!     improves then saturates;
+//! (c) [ablation beyond the paper] the Eq. 12 ε knob.
+//!
+//! Run with: `cargo bench --bench fig3_partitioning`
+
+mod common;
+
+use rangelsh::config::IndexAlgo;
+use rangelsh::eval::harness::{format_probe_table, ground_truth, run_curve, CurveSpec};
+use rangelsh::eval::recall::geometric_checkpoints;
+use rangelsh::index::PartitionScheme;
+
+fn main() -> rangelsh::Result<()> {
+    let wl = common::yahoo();
+    println!(
+        "=== Fig 3 on {} ({} items x {}d) ===",
+        wl.name,
+        wl.items.len(),
+        wl.items.dim()
+    );
+    let gt = ground_truth(&wl.items, &wl.queries, 10);
+    let cps = geometric_checkpoints(10, wl.items.len(), 4);
+
+    // ---- (a) percentile vs uniform --------------------------------------
+    println!("\n--- Fig 3(a): percentile (prc32) vs uniform (uni32), L=32 ---");
+    let mut results = Vec::new();
+    for (scheme, label) in [
+        (PartitionScheme::Percentile, "prc32"),
+        (PartitionScheme::UniformRange, "uni32"),
+    ] {
+        let mut spec = CurveSpec::new(IndexAlgo::RangeLsh, 32, 32);
+        spec.scheme = scheme;
+        results.push(run_curve(&wl.items, &wl.queries, &gt, &cps, &spec, label)?);
+    }
+    println!("{}", format_probe_table(&results, &[0.5, 0.8, 0.9, 0.95]));
+
+    // ---- (b) number of sub-datasets --------------------------------------
+    println!("--- Fig 3(b): m in {{32, 64, 128, 256}}, L=32 ---");
+    let mut results = Vec::new();
+    for m in [32usize, 64, 128, 256] {
+        let spec = CurveSpec::new(IndexAlgo::RangeLsh, 32, m);
+        results.push(run_curve(
+            &wl.items,
+            &wl.queries,
+            &gt,
+            &cps,
+            &spec,
+            format!("RH{m}"),
+        )?);
+    }
+    println!("{}", format_probe_table(&results, &[0.5, 0.8, 0.9, 0.95]));
+
+    // ---- (c) epsilon ablation (beyond the paper) -------------------------
+    println!("--- ablation: Eq. 12 epsilon in {{0, 0.05, 0.1, 0.2, 0.4}}, L=32 m=64 ---");
+    let mut results = Vec::new();
+    for eps in [0.0f32, 0.05, 0.1, 0.2, 0.4] {
+        let mut spec = CurveSpec::new(IndexAlgo::RangeLsh, 32, 64);
+        spec.epsilon = eps;
+        results.push(run_curve(
+            &wl.items,
+            &wl.queries,
+            &gt,
+            &cps,
+            &spec,
+            format!("eps={eps}"),
+        )?);
+    }
+    println!("{}", format_probe_table(&results, &[0.5, 0.8, 0.9, 0.95]));
+    Ok(())
+}

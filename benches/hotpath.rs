@@ -1,0 +1,162 @@
+//! §Perf hot-path microbenchmarks (criterion stand-in, offline build).
+//!
+//! Measures each stage of the serving path in isolation plus end-to-end:
+//!   1. bulk item hashing — native SIMD path vs AOT Pallas kernel via PJRT
+//!   2. query hashing (single + batched)
+//!   3. probe scheduling (counting sort + Eq. 12 schedule walk)
+//!   4. exact re-rank
+//!   5. engine end-to-end (batched)
+//!   6. exact ground-truth scan (the brute-force baseline RANGE beats)
+//!
+//! Run with: `cargo bench --bench hotpath`
+
+use std::sync::Arc;
+
+use rangelsh::bench::{bench, Table};
+use rangelsh::config::ServeConfig;
+use rangelsh::coordinator::SearchEngine;
+use rangelsh::data::synthetic;
+use rangelsh::eval::exact_topk;
+use rangelsh::hash::{ItemHasher, NativeHasher, Projection};
+use rangelsh::index::range::{RangeLshIndex, RangeLshParams};
+use rangelsh::index::CodeProbe;
+use rangelsh::runtime::{PjrtHasher, RuntimeHandle, DEFAULT_ARTIFACT_DIR};
+
+fn main() -> rangelsh::Result<()> {
+    let (n, dim) = (100_000usize, 128usize);
+    let items = Arc::new(synthetic::longtail_sift(n, dim, 42));
+    let queries = synthetic::gaussian_queries(1024, dim, 7);
+    let proj = Arc::new(Projection::gaussian(dim + 1, 64, 1));
+    let native = Arc::new(NativeHasher::with_projection(proj.clone()));
+    let u = items.max_norm();
+    let mut table = Table::new(&["stage", "median", "throughput"]);
+
+    // 1. bulk item hashing (native)
+    let hash_rows = 16_384usize;
+    let slice = &items.flat()[..hash_rows * dim];
+    let t = bench(1, 5, || {
+        std::hint::black_box(native.hash_items(slice, u).unwrap());
+    });
+    table.row(vec![
+        format!("item hash native ({hash_rows} rows)"),
+        format!("{:?}", t.median),
+        format!("{:.2} Mitems/s", t.throughput(hash_rows) / 1e6),
+    ]);
+
+    // 1b. bulk item hashing (PJRT Pallas kernel), when artifacts exist.
+    let pjrt_hasher: Option<Arc<dyn ItemHasher>> =
+        if std::path::Path::new(DEFAULT_ARTIFACT_DIR).join("manifest.json").exists() {
+            match RuntimeHandle::load(DEFAULT_ARTIFACT_DIR)
+                .and_then(|rt| PjrtHasher::new(rt, proj.clone()))
+            {
+                Ok(h) => Some(Arc::new(h)),
+                Err(e) => {
+                    eprintln!("(PJRT unavailable: {e:#})");
+                    None
+                }
+            }
+        } else {
+            None
+        };
+    if let Some(h) = &pjrt_hasher {
+        let t = bench(1, 5, || {
+            std::hint::black_box(h.hash_items(slice, u).unwrap());
+        });
+        table.row(vec![
+            format!("item hash pjrt   ({hash_rows} rows)"),
+            format!("{:?}", t.median),
+            format!("{:.2} Mitems/s", t.throughput(hash_rows) / 1e6),
+        ]);
+    }
+
+    // 2. query hashing
+    let qrows = queries.flat();
+    let t = bench(1, 10, || {
+        std::hint::black_box(native.hash_queries(&qrows[..dim]).unwrap());
+    });
+    table.row(vec![
+        "query hash native (single)".into(),
+        format!("{:?}", t.median),
+        format!("{:.0} q/s", t.throughput(1)),
+    ]);
+    let t = bench(1, 5, || {
+        std::hint::black_box(native.hash_queries(qrows).unwrap());
+    });
+    table.row(vec![
+        "query hash native (1024 batch)".into(),
+        format!("{:?}", t.median),
+        format!("{:.0} q/s", t.throughput(1024)),
+    ]);
+    if let Some(h) = &pjrt_hasher {
+        let t = bench(1, 5, || {
+            std::hint::black_box(h.hash_queries(qrows).unwrap());
+        });
+        table.row(vec![
+            "query hash pjrt   (1024 batch)".into(),
+            format!("{:?}", t.median),
+            format!("{:.0} q/s", t.throughput(1024)),
+        ]);
+    }
+
+    // 3. probe scheduling
+    let index = Arc::new(RangeLshIndex::build(
+        &items,
+        native.as_ref(),
+        RangeLshParams::new(32, 64),
+    )?);
+    let qcode = index.hash_query(queries.row(0));
+    for budget in [512usize, 4096] {
+        let t = bench(2, 20, || {
+            let mut out = Vec::with_capacity(budget);
+            index.probe_with_code(qcode, budget, &mut out);
+            std::hint::black_box(out);
+        });
+        table.row(vec![
+            format!("probe schedule (budget {budget})"),
+            format!("{:?}", t.median),
+            format!("{:.0} probes/s", t.throughput(1)),
+        ]);
+    }
+
+    // 4. exact re-rank of 4096 candidates
+    let mut cands: Vec<u32> = (0..4096u32).collect();
+    let q0: Vec<f32> = queries.row(0).to_vec();
+    let t = bench(2, 20, || {
+        let mut c = cands.clone();
+        rangelsh::runtime::PjrtScorer::rerank(&items, &q0, &mut c, 10);
+        std::hint::black_box(c);
+    });
+    cands.truncate(4096);
+    table.row(vec![
+        "re-rank 4096 candidates".into(),
+        format!("{:?}", t.median),
+        format!("{:.2} Mdots/s", t.throughput(4096) / 1e6),
+    ]);
+
+    // 5. engine end-to-end, batched
+    let cfg = ServeConfig { probe_budget: 4096, top_k: 10, ..Default::default() };
+    let engine = SearchEngine::new(index.clone(), items.clone(), native.clone(), cfg)?;
+    let batch = &qrows[..256 * dim];
+    let t = bench(1, 5, || {
+        std::hint::black_box(engine.search_batch(batch).unwrap());
+    });
+    table.row(vec![
+        "engine e2e (256-query batch)".into(),
+        format!("{:?}", t.median),
+        format!("{:.0} q/s", t.throughput(256)),
+    ]);
+
+    // 6. brute-force baseline
+    let sample = rangelsh::data::Dataset::from_flat(dim, qrows[..64 * dim].to_vec());
+    let t = bench(0, 3, || {
+        std::hint::black_box(exact_topk(&items, &sample, 10));
+    });
+    table.row(vec![
+        "exact scan (64 queries)".into(),
+        format!("{:?}", t.median),
+        format!("{:.0} q/s", t.throughput(64)),
+    ]);
+
+    println!("{}", table.render());
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Quickstart: build a NORM-RANGING LSH index over a small long-tailed
+//! corpus, run a few top-10 MIPS queries, and compare against exact
+//! search and SIMPLE-LSH.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use rangelsh::data::synthetic;
+use rangelsh::eval::exact_topk;
+use rangelsh::hash::NativeHasher;
+use rangelsh::index::range::{RangeLshIndex, RangeLshParams};
+use rangelsh::index::simple::{SimpleLshIndex, SimpleLshParams};
+use rangelsh::index::MipsIndex;
+
+fn main() -> rangelsh::Result<()> {
+    // 1. A long-tailed corpus (the regime the paper targets) + queries.
+    let items = synthetic::longtail_sift(20_000, 64, 42);
+    let queries = synthetic::gaussian_queries(5, 64, 7);
+    let stats = items.norm_stats();
+    println!(
+        "corpus: {} items, dim {}, norm median {:.3} / max {:.3} (tail ratio {:.1}x)",
+        items.len(),
+        items.dim(),
+        stats.median,
+        stats.max,
+        stats.tail_ratio()
+    );
+
+    // 2. Build RANGE-LSH (paper Alg. 1): 16-bit code budget, 32 norm
+    //    ranges (5 id bits + 11 hash bits).
+    let hasher = NativeHasher::new(items.dim(), 64, 1);
+    let range = RangeLshIndex::build(&items, &hasher, RangeLshParams::new(16, 32))?;
+    let simple = SimpleLshIndex::build(&items, &hasher, SimpleLshParams::new(16))?;
+    println!(
+        "RANGE-LSH : {} buckets, largest {}",
+        range.stats().n_buckets,
+        range.stats().largest_bucket
+    );
+    println!(
+        "SIMPLE-LSH: {} buckets, largest {}",
+        simple.stats().n_buckets,
+        simple.stats().largest_bucket
+    );
+
+    // 3. Query: probe 500 of 20,000 items (2.5%), check against exact.
+    let budget = 500;
+    let gt = exact_topk(&items, &queries, 10);
+    for qi in 0..queries.len() {
+        let q = queries.row(qi);
+        let mut cands = Vec::new();
+        range.probe(q, budget, &mut cands);
+        // Re-rank the probed candidates by exact inner product.
+        let mut scored: Vec<(f32, u32)> =
+            cands.iter().map(|&id| (items.dot(id as usize, q), id)).collect();
+        scored.sort_by(|a, b| b.0.total_cmp(&a.0));
+        scored.truncate(10);
+        let found = scored.iter().filter(|(_, id)| gt[qi].contains(id)).count();
+        println!(
+            "query {qi}: probed {budget}/{} items, recall@10 = {}/10, top hit ip={:.3} (exact {:.3})",
+            items.len(),
+            found,
+            scored[0].0,
+            items.dot(gt[qi][0] as usize, q),
+        );
+    }
+    Ok(())
+}

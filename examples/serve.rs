@@ -1,0 +1,115 @@
+//! END-TO-END VALIDATION DRIVER (EXPERIMENTS.md §E2E).
+//!
+//! Exercises the full three-layer stack on a real small workload:
+//!
+//! 1. Build a RANGE-LSH index over an ImageNet-scale corpus
+//!    (200K x 128-d, long-tailed norms), bulk-hashing the items through
+//!    the **AOT-compiled Pallas sign-hash kernel via PJRT** when
+//!    `artifacts/` exists (falls back to the native path otherwise —
+//!    codes are bit-identical either way).
+//! 2. Serve 10,000 batched top-10 queries through the coordinator:
+//!    concurrent clients → dynamic batcher (flush on size/deadline) →
+//!    PJRT-batched query hashing → Eq. 12 probe schedule → exact re-rank.
+//! 3. Report recall@10 vs exact ground truth, throughput, and latency
+//!    percentiles.
+//!
+//! Run with: `cargo run --release --example serve [-- --native]`
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use rangelsh::config::ServeConfig;
+use rangelsh::coordinator::server::drive_workload;
+use rangelsh::coordinator::{BatchPolicy, SearchEngine};
+use rangelsh::data::synthetic;
+use rangelsh::eval::exact_topk;
+use rangelsh::hash::{ItemHasher, NativeHasher, Projection};
+use rangelsh::index::range::{RangeLshIndex, RangeLshParams};
+use rangelsh::index::MipsIndex;
+use rangelsh::runtime::{PjrtHasher, RuntimeHandle, DEFAULT_ARTIFACT_DIR};
+
+fn main() -> rangelsh::Result<()> {
+    let native_only = std::env::args().any(|a| a == "--native");
+    let (n_items, dim, n_queries) = (200_000usize, 128usize, 10_000usize);
+
+    println!("=== E2E: RANGE-LSH serving on imagenet-sim ({n_items} x {dim}d) ===");
+    let items = Arc::new(synthetic::longtail_sift(n_items, dim, 42));
+    let queries = synthetic::gaussian_queries(n_queries, dim, 7);
+    println!("norm tail ratio: {:.2}", items.norm_stats().tail_ratio());
+
+    // Hashing path: AOT Pallas kernel via PJRT if artifacts exist.
+    let proj = Arc::new(Projection::gaussian(dim + 1, 64, 1));
+    let artifacts = std::path::Path::new(DEFAULT_ARTIFACT_DIR);
+    let hasher: Arc<dyn ItemHasher> = if !native_only && artifacts.join("manifest.json").exists() {
+        match RuntimeHandle::load(artifacts).and_then(|rt| PjrtHasher::new(rt, proj.clone())) {
+            Ok(h) => {
+                println!("hashing: PJRT (AOT Pallas sign-hash kernel)");
+                Arc::new(h)
+            }
+            Err(e) => {
+                println!("hashing: native (PJRT unavailable: {e:#})");
+                Arc::new(NativeHasher::with_projection(proj.clone()))
+            }
+        }
+    } else {
+        println!("hashing: native");
+        Arc::new(NativeHasher::with_projection(proj.clone()))
+    };
+
+    // Build the paper's index: 32-bit budget, 64 ranges.
+    let t0 = std::time::Instant::now();
+    let index = Arc::new(RangeLshIndex::build(
+        &items,
+        hasher.as_ref(),
+        RangeLshParams::new(32, 64),
+    )?);
+    let build_secs = t0.elapsed().as_secs_f64();
+    let stats = index.stats();
+    println!(
+        "index: built in {build_secs:.2}s — {} buckets over {} ranges, largest bucket {}",
+        stats.n_buckets, stats.n_partitions, stats.largest_bucket
+    );
+
+    // Serving engine + batched workload.
+    let cfg = ServeConfig {
+        max_batch: 256,
+        deadline_us: 500,
+        probe_budget: 4096, // ~2% of the corpus
+        top_k: 10,
+    };
+    let engine = Arc::new(SearchEngine::new(index, items.clone(), hasher, cfg)?);
+    let policy = BatchPolicy::new(256, Duration::from_micros(500));
+    let (results, wall) = drive_workload(engine.clone(), policy, &queries, 32)?;
+    let snap = engine.metrics().snapshot();
+    println!(
+        "served {} queries in {:.2}s — {:.0} qps | p50 {}us p95 {}us p99 {}us | \
+         mean probed {:.0} items ({:.2}% of corpus), mean batch {:.1}",
+        results.len(),
+        wall.as_secs_f64(),
+        results.len() as f64 / wall.as_secs_f64(),
+        snap.p50_us,
+        snap.p95_us,
+        snap.p99_us,
+        snap.mean_probed,
+        100.0 * snap.mean_probed / n_items as f64,
+        snap.mean_batch_rows,
+    );
+
+    // Recall vs exact ground truth on a sample (exact GT on all 10K
+    // queries x 200K items is the dominant cost, so sample 1,000).
+    let sample = 1000.min(n_queries);
+    let sample_queries = rangelsh::data::Dataset::from_flat(
+        dim,
+        queries.flat()[..sample * dim].to_vec(),
+    );
+    let gt = exact_topk(&items, &sample_queries, 10);
+    let mut hits = 0usize;
+    for (qi, gt_ids) in gt.iter().enumerate() {
+        let got: Vec<u32> = results[qi].iter().map(|r| r.id).collect();
+        hits += got.iter().filter(|id| gt_ids.contains(id)).count();
+    }
+    let recall = hits as f64 / (sample * 10) as f64;
+    println!("recall@10 (n={sample} sampled queries): {recall:.4}");
+    println!("=== E2E complete ===");
+    Ok(())
+}

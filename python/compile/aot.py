@@ -1,0 +1,166 @@
+"""AOT pipeline: lower every (entry, d) variant to HLO text + manifest.
+
+Interchange format is HLO **text**, not ``HloModuleProto.serialize()``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+bundled xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly. Lowered with
+``return_tuple=True`` — the Rust side unwraps with ``to_tuple1()``.
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (the Makefile's
+``make artifacts`` target). Python runs ONCE at build time; the Rust
+binary is self-contained afterwards.
+
+Every artifact is self-checked after lowering: the lowered computation is
+also executed through jax.jit and compared against the pure-jnp oracle in
+``kernels/ref.py`` on random inputs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+# Dataset dimensionalities compiled by default: 300 (Netflix/Yahoo-style MF
+# embeddings) and 128 (SIFT-style descriptors). Extend with --dims.
+DEFAULT_DIMS = (300, 128)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def variants(dims):
+    """Yield (name, fn, arg_specs) for every artifact to compile."""
+    f32, u32 = jnp.float32, jnp.uint32
+    for d in dims:
+        yield (
+            f"hash_items_d{d}",
+            model.hash_items,
+            [
+                _spec((model.ITEM_BLOCK, d), f32),
+                _spec((), f32),
+                _spec((d + 1, model.PROJ_WIDTH), f32),
+            ],
+        )
+        yield (
+            f"hash_queries_d{d}",
+            model.hash_queries,
+            [
+                _spec((model.ITEM_BLOCK, d), f32),
+                _spec((d + 1, model.PROJ_WIDTH), f32),
+            ],
+        )
+        # Small-batch query variant: serving batches are usually <= 256
+        # queries; hashing them through the 2048-row block wastes 8x the
+        # kernel work on padding (see EXPERIMENTS.md §Perf).
+        yield (
+            f"hash_queries_small_d{d}",
+            model.hash_queries,
+            [
+                _spec((model.QUERY_BLOCK, d), f32),
+                _spec((d + 1, model.PROJ_WIDTH), f32),
+            ],
+        )
+        yield (
+            f"score_d{d}",
+            model.score,
+            [
+                _spec((model.QUERY_BLOCK, d), f32),
+                _spec((model.ITEM_BLOCK, d), f32),
+            ],
+        )
+
+
+def _self_check(name: str, fn, specs) -> None:
+    """Execute the jitted entry on random inputs and compare to the oracle."""
+    rng = np.random.default_rng(0)
+    args = [
+        jnp.asarray(rng.standard_normal(s.shape, dtype=np.float32))
+        if s.shape
+        else jnp.float32(2.5)
+        for s in specs
+    ]
+    out = jax.jit(fn)(*args)[0]
+    if name.startswith("hash_items"):
+        want = ref.sign_hash_ref(ref.simple_transform_ref(args[0], args[1]), args[2])
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+    elif name.startswith("hash_queries"):  # covers the _small variant too
+        want = ref.sign_hash_ref(ref.query_transform_ref(args[0]), args[1])
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+    elif name.startswith("score"):
+        want = ref.score_ref(args[0], args[1])
+        # Accumulation order differs between the Pallas kernel and the
+        # oracle matmul; tolerance covers f32 reassociation only.
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4, atol=1e-4)
+    else:  # pragma: no cover - defensive
+        raise ValueError(f"no oracle for {name}")
+
+
+def build(out_dir: str, dims, self_check: bool = True) -> dict:
+    """Lower all variants into ``out_dir``; return the manifest dict."""
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "format": "hlo-text",
+        "item_block": model.ITEM_BLOCK,
+        "query_block": model.QUERY_BLOCK,
+        "proj_width": model.PROJ_WIDTH,
+        "entries": [],
+    }
+    for name, fn, specs in variants(dims):
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        if self_check:
+            _self_check(name, fn, specs)
+        manifest["entries"].append(
+            {
+                "name": name,
+                "file": fname,
+                "inputs": [
+                    {"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs
+                ],
+            }
+        )
+        print(f"  lowered {name}: {len(text)} chars")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--dims",
+        default=",".join(str(d) for d in DEFAULT_DIMS),
+        help="comma-separated dataset dimensionalities to compile",
+    )
+    ap.add_argument("--no-self-check", action="store_true")
+    args = ap.parse_args()
+    dims = [int(d) for d in args.dims.split(",") if d]
+    manifest = build(args.out_dir, dims, self_check=not args.no_self_check)
+    print(f"wrote {len(manifest['entries'])} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

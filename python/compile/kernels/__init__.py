@@ -1,0 +1,22 @@
+"""Layer-1 Pallas kernels for RANGE-LSH.
+
+Two kernels cover the paper's compute hot spots:
+
+- ``sign_hash``: fused ``[B, D] @ [D, L]`` matmul (MXU work) + sign +
+  integer bitpack — produces the binary hash codes used by every LSH
+  index in the paper (SIMPLE-LSH / RANGE-LSH share it; the projection
+  matrix is an argument).
+- ``score``: blocked exact inner-product matmul ``[Q, D] @ [D, N]`` —
+  ground-truth generation and candidate re-ranking.
+
+Both are lowered with ``interpret=True`` (mandatory on the CPU PJRT
+image; real-TPU lowering emits Mosaic custom-calls the CPU plugin
+cannot execute) and verified against the pure-jnp oracles in
+``ref.py`` by the pytest suite.
+"""
+
+from .sign_hash import sign_hash, PACK_LANES
+from .score import score
+from . import ref
+
+__all__ = ["sign_hash", "score", "ref", "PACK_LANES"]

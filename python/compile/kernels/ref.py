@@ -1,0 +1,46 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the pytest suite (and the AOT self-check in
+``aot.py``) compares against. They deliberately avoid Pallas so a bug in
+the kernel plumbing cannot hide in both implementations.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .sign_hash import PACK_LANES
+
+
+def sign_hash_ref(xt: jax.Array, proj: jax.Array) -> jax.Array:
+    """Oracle for :func:`kernels.sign_hash.sign_hash`.
+
+    Same strictly-positive sign convention and little-endian bit packing
+    (bit ``i`` of word ``w`` is hash function ``32*w + i``).
+    """
+    h = xt.astype(jnp.float32) @ proj.astype(jnp.float32)
+    b, width = h.shape
+    assert width % PACK_LANES == 0
+    bits = (h > 0.0).reshape(b, width // PACK_LANES, PACK_LANES)
+    lanes = jnp.arange(PACK_LANES, dtype=jnp.uint32)
+    return jnp.sum(bits.astype(jnp.uint32) << lanes, axis=-1, dtype=jnp.uint32)
+
+
+def score_ref(q: jax.Array, x: jax.Array) -> jax.Array:
+    """Oracle for :func:`kernels.score.score`: exact ``q @ x^T``."""
+    return q.astype(jnp.float32) @ x.astype(jnp.float32).T
+
+
+def simple_transform_ref(x: jax.Array, u: jax.Array) -> jax.Array:
+    """SIMPLE-LSH item transform (paper Eq. 8): ``P(x) = [x/U; sqrt(1-||x/U||^2)]``."""
+    y = x / u
+    tail = jnp.sqrt(jnp.maximum(0.0, 1.0 - jnp.sum(y * y, axis=-1, keepdims=True)))
+    return jnp.concatenate([y, tail], axis=-1)
+
+
+def query_transform_ref(q: jax.Array) -> jax.Array:
+    """SIMPLE-LSH query transform (paper Eq. 8): ``P(q) = [q/||q||; 0]``."""
+    norm = jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-30)
+    y = q / norm
+    return jnp.concatenate([y, jnp.zeros_like(y[..., :1])], axis=-1)

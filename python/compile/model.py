@@ -1,0 +1,72 @@
+"""Layer-2 JAX compute graphs for RANGE-LSH (build-time only).
+
+Three entry points, each calling the Layer-1 Pallas kernels, each lowered
+AOT to HLO text by ``aot.py`` and executed from the Rust coordinator via
+PJRT. Python never runs on the request path.
+
+Entry points (shapes fixed per dataset dimensionality ``d``):
+
+- ``hash_items(x [B, d], u [], proj [d+1, L])`` → ``uint32 [B, L/32]``
+  SIMPLE-LSH item pipeline: normalise by the (sub-)dataset max norm ``u``
+  (RANGE-LSH passes the *local* ``U_j`` — that is the paper's whole
+  point), apply the Eq. 8 transform ``[x/u; sqrt(1-||x/u||^2)]``, hash.
+- ``hash_queries(q [B, d], proj [d+1, L])`` → ``uint32 [B, L/32]``
+  Query pipeline: unit-normalise, append 0, hash. Shared by all ranges
+  (the query transform does not depend on ``U_j``).
+- ``score(q [Q, d], x [N, d])`` → ``f32 [Q, N]``
+  Exact inner products for ground truth / re-ranking.
+
+The Rust runtime pads the final partial block with zeros and discards the
+corresponding outputs; zero rows are harmless here (they hash to the sign
+pattern of ``proj``'s tail row and are never read back).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import sign_hash, score as score_kernel
+
+# Fixed AOT geometry, shared with the Rust runtime via artifacts/manifest.json.
+ITEM_BLOCK = 2048   # rows per hash_items / score item block
+QUERY_BLOCK = 256   # rows per score query block
+PROJ_WIDTH = 64     # hash functions compiled per artifact; Rust masks to L_eff
+
+
+def simple_transform(x: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 8 item transform with normalisation folded in.
+
+    ``u`` is a rank-0 scalar: the global max norm for SIMPLE-LSH, the
+    local range max ``U_j`` for RANGE-LSH. Items with ``||x|| <= u`` map
+    onto the unit sphere in d+1 dims; the ``max(0, .)`` guards float
+    round-off for items with ``||x|| == u`` exactly.
+    """
+    y = x / u
+    tail = jnp.sqrt(jnp.maximum(0.0, 1.0 - jnp.sum(y * y, axis=-1, keepdims=True)))
+    return jnp.concatenate([y, tail], axis=-1)
+
+
+def query_transform(q: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 8 query transform: unit-normalise, append a zero coordinate.
+
+    The epsilon floor guards all-zero (padding) rows; their codes are
+    discarded by the runtime.
+    """
+    norm = jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-30)
+    y = q / norm
+    return jnp.concatenate([y, jnp.zeros_like(y[..., :1])], axis=-1)
+
+
+def hash_items(x: jnp.ndarray, u: jnp.ndarray, proj: jnp.ndarray):
+    """AOT entry: transform + sign-RP hash one item block. Returns a 1-tuple."""
+    return (sign_hash(simple_transform(x, u), proj),)
+
+
+def hash_queries(q: jnp.ndarray, proj: jnp.ndarray):
+    """AOT entry: transform + sign-RP hash one query block. Returns a 1-tuple."""
+    return (sign_hash(query_transform(q), proj),)
+
+
+def score(q: jnp.ndarray, x: jnp.ndarray):
+    """AOT entry: exact inner products for one (query, item) block pair."""
+    return (score_kernel(q, x),)

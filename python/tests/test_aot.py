@@ -1,0 +1,72 @@
+"""AOT pipeline: manifest round-trip and HLO text sanity."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    # Small dim keeps the test fast; the default dims are exercised by
+    # `make artifacts` + the Rust integration tests.
+    manifest = aot.build(str(out), dims=[16], self_check=True)
+    return str(out), manifest
+
+
+def test_manifest_lists_all_entries(built):
+    out, manifest = built
+    names = {e["name"] for e in manifest["entries"]}
+    assert names == {
+        "hash_items_d16",
+        "hash_queries_d16",
+        "hash_queries_small_d16",
+        "score_d16",
+    }
+    assert manifest["format"] == "hlo-text"
+    assert manifest["item_block"] == model.ITEM_BLOCK
+    assert manifest["query_block"] == model.QUERY_BLOCK
+    assert manifest["proj_width"] == model.PROJ_WIDTH
+
+
+def test_manifest_json_round_trips(built):
+    out, manifest = built
+    with open(os.path.join(out, "manifest.json")) as f:
+        loaded = json.load(f)
+    assert loaded == manifest
+
+
+def test_hlo_files_exist_and_are_text(built):
+    out, manifest = built
+    for entry in manifest["entries"]:
+        path = os.path.join(out, entry["file"])
+        with open(path) as f:
+            text = f.read()
+        assert text.startswith("HloModule"), entry["name"]
+        assert "ENTRY" in text
+        # The whole point of the text interchange: no serialized protos.
+        assert "\x00" not in text
+
+
+def test_manifest_shapes_match_model_geometry(built):
+    out, manifest = built
+    by_name = {e["name"]: e for e in manifest["entries"]}
+    hi = by_name["hash_items_d16"]["inputs"]
+    assert hi[0]["shape"] == [model.ITEM_BLOCK, 16]
+    assert hi[1]["shape"] == []           # scalar U_j
+    assert hi[2]["shape"] == [17, model.PROJ_WIDTH]
+    sc = by_name["score_d16"]["inputs"]
+    assert sc[0]["shape"] == [model.QUERY_BLOCK, 16]
+    assert sc[1]["shape"] == [model.ITEM_BLOCK, 16]
+
+
+def test_hlo_entry_layout_mentions_u32_output(built):
+    out, manifest = built
+    path = os.path.join(out, "hash_items_d16.hlo.txt")
+    with open(path) as f:
+        head = f.readline()
+    # xla_extension 0.5.1 parses this header; codes must be u32-packed.
+    assert "u32[2048,2]" in head

@@ -1,0 +1,139 @@
+"""Kernel-vs-oracle correctness: the CORE signal for Layer 1.
+
+The Pallas kernels must agree with the pure-jnp oracles in
+``compile/kernels/ref.py`` bit-for-bit (hash codes) / to f32
+reassociation tolerance (scores) across a hypothesis sweep of shapes.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import sign_hash, score, ref
+from compile.kernels.sign_hash import PACK_LANES
+
+settings.register_profile("kernels", max_examples=25, deadline=None)
+settings.load_profile("kernels")
+
+
+def _randn(rng, shape):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+# ---------------------------------------------------------------------------
+# sign_hash
+# ---------------------------------------------------------------------------
+
+@given(
+    blocks=st.integers(1, 4),
+    block_b=st.sampled_from([1, 2, 8, 16]),
+    d=st.integers(2, 48),
+    words=st.integers(1, 2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sign_hash_matches_ref_across_shapes(blocks, block_b, d, words, seed):
+    rng = np.random.default_rng(seed)
+    b, width = blocks * block_b, words * PACK_LANES
+    xt = _randn(rng, (b, d))
+    proj = _randn(rng, (d, width))
+    got = sign_hash(xt, proj, block_b=block_b)
+    want = ref.sign_hash_ref(xt, proj)
+    assert got.dtype == jnp.uint32
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_sign_hash_bit_order_is_little_endian():
+    # One vector, hand-built projection: hash j is positive iff j is even.
+    d, width = 3, 64
+    xt = jnp.ones((1, d), jnp.float32)
+    cols = np.tile(np.where(np.arange(width) % 2 == 0, 1.0, -1.0), (d, 1))
+    proj = jnp.asarray(cols, jnp.float32)
+    got = np.asarray(sign_hash(xt, proj, block_b=1))
+    # bits 0,2,4,... set in each 32-bit word => 0x55555555.
+    assert got.tolist() == [[0x5555_5555, 0x5555_5555]]
+
+
+def test_sign_hash_zero_is_negative_convention():
+    # sign(0) must pack as 0 (strictly-positive convention, shared with
+    # ref.py and the Rust native path).
+    xt = jnp.zeros((1, 4), jnp.float32)
+    proj = jnp.zeros((4, PACK_LANES), jnp.float32)
+    got = np.asarray(sign_hash(xt, proj, block_b=1))
+    assert got.tolist() == [[0]]
+
+
+def test_sign_hash_rejects_bad_shapes():
+    xt = jnp.zeros((4, 3), jnp.float32)
+    with pytest.raises(ValueError, match="dim mismatch"):
+        sign_hash(xt, jnp.zeros((5, PACK_LANES), jnp.float32))
+    with pytest.raises(ValueError, match="multiple"):
+        sign_hash(xt, jnp.zeros((3, 17), jnp.float32))
+    with pytest.raises(ValueError, match="divisible"):
+        sign_hash(xt, jnp.zeros((3, PACK_LANES), jnp.float32), block_b=3)
+
+
+def test_sign_hash_default_block_divides_paper_shapes():
+    # The AOT geometry (2048-row blocks) must be divisible by the default tile.
+    rng = np.random.default_rng(0)
+    xt = _randn(rng, (2048, 31))
+    proj = _randn(rng, (31, 64))
+    got = sign_hash(xt, proj)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(ref.sign_hash_ref(xt, proj))
+    )
+
+
+def test_sign_hash_deterministic():
+    rng = np.random.default_rng(7)
+    xt, proj = _randn(rng, (32, 9)), _randn(rng, (9, 32))
+    a = np.asarray(sign_hash(xt, proj, block_b=8))
+    b = np.asarray(sign_hash(xt, proj, block_b=8))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_sign_hash_block_size_invariance():
+    # Tiling is an implementation detail: codes must not depend on block_b.
+    rng = np.random.default_rng(11)
+    xt, proj = _randn(rng, (64, 17)), _randn(rng, (17, 64))
+    a = np.asarray(sign_hash(xt, proj, block_b=8))
+    b = np.asarray(sign_hash(xt, proj, block_b=64))
+    np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# score
+# ---------------------------------------------------------------------------
+
+@given(
+    qn=st.integers(1, 16),
+    blocks=st.integers(1, 4),
+    block_n=st.sampled_from([1, 4, 16]),
+    d=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_score_matches_ref_across_shapes(qn, blocks, block_n, d, seed):
+    rng = np.random.default_rng(seed)
+    q = _randn(rng, (qn, d))
+    x = _randn(rng, (blocks * block_n, d))
+    got = score(q, x, block_n=block_n)
+    want = ref.score_ref(q, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_score_identity_blocks():
+    # q == x => scores are the Gram matrix; diagonal is squared norms.
+    rng = np.random.default_rng(3)
+    x = _randn(rng, (16, 8))
+    s = np.asarray(score(x, x, block_n=8))
+    norms2 = np.sum(np.asarray(x) ** 2, axis=1)
+    np.testing.assert_allclose(np.diag(s), norms2, rtol=1e-5)
+    np.testing.assert_allclose(s, s.T, rtol=1e-5, atol=1e-6)
+
+
+def test_score_rejects_bad_shapes():
+    q = jnp.zeros((4, 3), jnp.float32)
+    with pytest.raises(ValueError, match="dim mismatch"):
+        score(q, jnp.zeros((8, 5), jnp.float32))
+    with pytest.raises(ValueError, match="divisible"):
+        score(q, jnp.zeros((9, 3), jnp.float32), block_n=4)

@@ -1,0 +1,128 @@
+"""Layer-2 graph properties: transforms and AOT entry points."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+settings.register_profile("model", max_examples=25, deadline=None)
+settings.load_profile("model")
+
+
+def _randn(rng, shape):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+# ---------------------------------------------------------------------------
+# transforms (Eq. 8)
+# ---------------------------------------------------------------------------
+
+@given(
+    b=st.integers(1, 32),
+    d=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_simple_transform_lands_on_unit_sphere(b, d, seed):
+    # For ||x|| <= u, P(x) = [x/u; sqrt(1-||x/u||^2)] has unit norm.
+    rng = np.random.default_rng(seed)
+    x = _randn(rng, (b, d))
+    u = float(np.linalg.norm(np.asarray(x), axis=1).max()) + 1e-3
+    p = model.simple_transform(x, jnp.float32(u))
+    assert p.shape == (b, d + 1)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(p), axis=1), np.ones(b), rtol=1e-5
+    )
+
+
+@given(
+    b=st.integers(1, 32),
+    d=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_query_transform_is_unit_norm_with_zero_tail(b, d, seed):
+    rng = np.random.default_rng(seed)
+    q = _randn(rng, (b, d))
+    p = np.asarray(model.query_transform(q))
+    assert p.shape == (b, d + 1)
+    np.testing.assert_allclose(np.linalg.norm(p, axis=1), np.ones(b), rtol=1e-5)
+    np.testing.assert_array_equal(p[:, -1], np.zeros(b))
+
+
+def test_query_transform_survives_zero_rows():
+    # All-zero padding rows must not produce NaNs.
+    p = np.asarray(model.query_transform(jnp.zeros((4, 8), jnp.float32)))
+    assert np.isfinite(p).all()
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_transform_preserves_inner_product_order(seed):
+    # Core identity behind SIMPLE-LSH: P(q).P(x) = q.x / (u * ||q||),
+    # so inner-product *order* is preserved by the transform pair.
+    rng = np.random.default_rng(seed)
+    x = _randn(rng, (16, 12))
+    q = _randn(rng, (1, 12))
+    u = float(np.linalg.norm(np.asarray(x), axis=1).max())
+    px = np.asarray(model.simple_transform(x, jnp.float32(u)))
+    pq = np.asarray(model.query_transform(q))
+    transformed = (px @ pq.T).ravel()
+    raw = (np.asarray(x) @ np.asarray(q).T).ravel()
+    np.testing.assert_array_equal(np.argsort(transformed), np.argsort(raw))
+
+
+def test_transform_at_max_norm_has_zero_tail():
+    x = jnp.asarray([[3.0, 4.0]])  # ||x|| = 5
+    p = np.asarray(model.simple_transform(x, jnp.float32(5.0)))
+    np.testing.assert_allclose(p, [[0.6, 0.8, 0.0]], atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points vs oracles (full-pipeline, paper shapes scaled down)
+# ---------------------------------------------------------------------------
+
+def test_hash_items_entry_matches_oracle():
+    rng = np.random.default_rng(0)
+    x = _randn(rng, (model.ITEM_BLOCK, 19))
+    u = jnp.float32(float(np.linalg.norm(np.asarray(x), axis=1).max()))
+    proj = _randn(rng, (20, model.PROJ_WIDTH))
+    (got,) = jax.jit(model.hash_items)(x, u, proj)
+    want = ref.sign_hash_ref(ref.simple_transform_ref(x, u), proj)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_hash_queries_entry_matches_oracle():
+    rng = np.random.default_rng(1)
+    q = _randn(rng, (model.ITEM_BLOCK, 19))
+    proj = _randn(rng, (20, model.PROJ_WIDTH))
+    (got,) = jax.jit(model.hash_queries)(q, proj)
+    want = ref.sign_hash_ref(ref.query_transform_ref(q), proj)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_score_entry_matches_oracle():
+    rng = np.random.default_rng(2)
+    q = _randn(rng, (model.QUERY_BLOCK, 19))
+    x = _randn(rng, (model.ITEM_BLOCK, 19))
+    (got,) = jax.jit(model.score)(q, x)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.score_ref(q, x)), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_hash_items_padding_rows_are_harmless():
+    # Zero rows (runtime padding) must hash without NaN poisoning and not
+    # perturb the codes of real rows.
+    rng = np.random.default_rng(3)
+    d = 19
+    real = rng.standard_normal((8, d)).astype(np.float32)
+    padded = np.zeros((model.ITEM_BLOCK, d), np.float32)
+    padded[:8] = real
+    u = jnp.float32(float(np.linalg.norm(real, axis=1).max()))
+    proj = _randn(rng, (d + 1, model.PROJ_WIDTH))
+    (got,) = jax.jit(model.hash_items)(jnp.asarray(padded), u, proj)
+    want = ref.sign_hash_ref(
+        ref.simple_transform_ref(jnp.asarray(real), u), proj
+    )
+    np.testing.assert_array_equal(np.asarray(got)[:8], np.asarray(want))

@@ -1,0 +1,162 @@
+//! Tiny benchmark harness (criterion stand-in, offline build): warmup +
+//! repeated timing with median/mean/min reporting, and aligned table
+//! output for the paper-figure regenerators in `benches/`.
+
+use std::time::{Duration, Instant};
+
+/// Timing summary over repeats.
+#[derive(Debug, Clone, Copy)]
+pub struct Timing {
+    pub median: Duration,
+    pub mean: Duration,
+    pub min: Duration,
+    pub reps: usize,
+}
+
+impl Timing {
+    pub fn per_item(&self, items: usize) -> Duration {
+        if items == 0 {
+            Duration::ZERO
+        } else {
+            self.median / items as u32
+        }
+    }
+
+    /// items / second at the median.
+    pub fn throughput(&self, items: usize) -> f64 {
+        items as f64 / self.median.as_secs_f64().max(1e-12)
+    }
+}
+
+impl std::fmt::Display for Timing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "median {:.3?} (mean {:.3?}, min {:.3?}, n={})",
+            self.median, self.mean, self.min, self.reps
+        )
+    }
+}
+
+/// Time `f` with `warmup` discarded runs then `reps` measured runs.
+pub fn bench(warmup: usize, reps: usize, mut f: impl FnMut()) -> Timing {
+    assert!(reps >= 1);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<Duration> = (0..reps)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed()
+        })
+        .collect();
+    times.sort();
+    let mean = times.iter().sum::<Duration>() / reps as u32;
+    Timing {
+        median: times[reps / 2],
+        mean,
+        min: times[0],
+        reps,
+    }
+}
+
+/// Time one run of `f`, returning its value and the duration.
+pub fn time<R>(f: impl FnOnce() -> R) -> (R, Duration) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed())
+}
+
+/// Simple aligned table printer for bench output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize], out: &mut String| {
+            for (i, (c, w)) in cells.iter().zip(widths).enumerate() {
+                if i > 0 {
+                    out.push_str("  ");
+                }
+                out.push_str(&format!("{c:>w$}", w = w));
+            }
+            out.push('\n');
+        };
+        fmt_row(&self.headers, &widths, &mut out);
+        let total: usize = widths.iter().sum::<usize>() + 2 * (widths.len() - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            fmt_row(row, &widths, &mut out);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_ordered_stats() {
+        let t = bench(1, 9, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(t.reps, 9);
+        assert!(t.min <= t.median);
+        assert!(t.median > Duration::ZERO);
+    }
+
+    #[test]
+    fn throughput_scales() {
+        let t = Timing {
+            median: Duration::from_millis(100),
+            mean: Duration::from_millis(100),
+            min: Duration::from_millis(100),
+            reps: 1,
+        };
+        assert!((t.throughput(1000) - 10_000.0).abs() < 1.0);
+        assert_eq!(t.per_item(0), Duration::ZERO);
+    }
+
+    #[test]
+    fn table_aligns_columns() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(vec!["a".into(), "1".into()]);
+        t.row(vec!["longer-name".into(), "22".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[1].chars().all(|c| c == '-'), true);
+        assert!(lines[3].contains("longer-name"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

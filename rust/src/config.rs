@@ -1,0 +1,355 @@
+//! TOML config system: one file describes a full experiment or serving
+//! deployment (dataset, index, evaluation, serving). Parsed with the
+//! in-tree TOML-subset parser ([`crate::util::toml`]); see `configs/*.toml`
+//! for the three paper datasets.
+
+use std::path::Path;
+use std::str::FromStr;
+
+use anyhow::Context;
+
+use crate::data::{synthetic, Dataset};
+use crate::index::PartitionScheme;
+use crate::util::toml::{parse as parse_toml, Section};
+use crate::Result;
+
+/// Which MIPS algorithm to build.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IndexAlgo {
+    /// SIMPLE-LSH (paper §2.3 baseline).
+    SimpleLsh,
+    /// NORM-RANGING LSH (the paper's contribution).
+    RangeLsh,
+    /// L2-ALSH (paper §2.2 baseline).
+    L2Alsh,
+    /// Ranged L2-ALSH (paper §5 extension).
+    RangedL2Alsh,
+    /// SIGN-ALSH (Shrivastava & Li 2015, the paper's other ALSH baseline).
+    SignAlsh,
+}
+
+impl FromStr for IndexAlgo {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "simple_lsh" => Ok(Self::SimpleLsh),
+            "range_lsh" => Ok(Self::RangeLsh),
+            "l2_alsh" => Ok(Self::L2Alsh),
+            "ranged_l2_alsh" => Ok(Self::RangedL2Alsh),
+            "sign_alsh" => Ok(Self::SignAlsh),
+            other => anyhow::bail!(
+                "unknown algo {other:?} (simple_lsh | range_lsh | l2_alsh | ranged_l2_alsh | sign_alsh)"
+            ),
+        }
+    }
+}
+
+impl std::fmt::Display for IndexAlgo {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Self::SimpleLsh => "simple_lsh",
+            Self::RangeLsh => "range_lsh",
+            Self::L2Alsh => "l2_alsh",
+            Self::RangedL2Alsh => "ranged_l2_alsh",
+            Self::SignAlsh => "sign_alsh",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Synthetic dataset family (DESIGN.md §3 substitutions).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DatasetKind {
+    /// Netflix/Yahoo-style MF embeddings (mild norm spread).
+    MfEmbeddings,
+    /// ImageNet-SIFT-style long-tailed norms.
+    LongtailSift,
+    /// Unit-norm control (RANGE == SIMPLE).
+    UniformNorm,
+}
+
+impl FromStr for DatasetKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "mf_embeddings" => Ok(Self::MfEmbeddings),
+            "longtail_sift" => Ok(Self::LongtailSift),
+            "uniform_norm" => Ok(Self::UniformNorm),
+            other => anyhow::bail!(
+                "unknown dataset kind {other:?} (mf_embeddings | longtail_sift | uniform_norm)"
+            ),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct DatasetConfig {
+    pub kind: DatasetKind,
+    pub n_items: usize,
+    pub dim: usize,
+    pub n_queries: usize,
+    pub seed: u64,
+    /// MF rank (mf_embeddings only).
+    pub rank: usize,
+    /// Log-normal sigma (longtail_sift only).
+    pub sigma: f32,
+}
+
+impl DatasetConfig {
+    /// Materialise the item set.
+    pub fn build_items(&self) -> Dataset {
+        match self.kind {
+            DatasetKind::MfEmbeddings => {
+                synthetic::mf_embeddings(self.n_items, self.dim, self.rank, self.seed)
+            }
+            DatasetKind::LongtailSift => {
+                synthetic::longtail_with_sigma(self.n_items, self.dim, self.sigma, self.seed)
+            }
+            DatasetKind::UniformNorm => synthetic::uniform_norm(self.n_items, self.dim, self.seed),
+        }
+    }
+
+    /// Materialise the query set (held-out, seed-offset).
+    pub fn build_queries(&self) -> Dataset {
+        match self.kind {
+            // MF queries are user embeddings from the same factorisation
+            // (same latent basis as the items — the paper's setup).
+            DatasetKind::MfEmbeddings => {
+                synthetic::mf_user_queries(self.n_queries, self.dim, self.rank, self.seed)
+            }
+            _ => synthetic::gaussian_queries(self.n_queries, self.dim, self.seed ^ 0x5EED_0FF5),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct IndexConfig {
+    pub algo: IndexAlgo,
+    pub code_bits: usize,
+    pub n_partitions: usize,
+    pub scheme: PartitionScheme,
+    pub epsilon: f32,
+    pub seed: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct EvalConfig {
+    pub top_k: usize,
+    /// Probe-budget axis: smallest checkpoint; largest defaults to n.
+    pub min_probe: usize,
+    pub max_probe: Option<usize>,
+    pub checkpoints_per_decade: usize,
+    /// Recall targets for summary rows.
+    pub recall_targets: Vec<f64>,
+}
+
+impl Default for EvalConfig {
+    fn default() -> Self {
+        Self {
+            top_k: 10,
+            min_probe: 10,
+            max_probe: None,
+            checkpoints_per_decade: 4,
+            recall_targets: vec![0.5, 0.8, 0.9, 0.95],
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Max queries hashed per PJRT batch.
+    pub max_batch: usize,
+    /// Batch flush deadline in microseconds.
+    pub deadline_us: u64,
+    /// Per-query probe budget.
+    pub probe_budget: usize,
+    pub top_k: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 256,
+            deadline_us: 500,
+            probe_budget: 2048,
+            top_k: 10,
+        }
+    }
+}
+
+/// Top-level experiment config.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub dataset: DatasetConfig,
+    pub index: IndexConfig,
+    pub eval: EvalConfig,
+    pub serve: ServeConfig,
+}
+
+impl Config {
+    pub fn from_path(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing config {}", path.display()))
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let doc = parse_toml(text)?;
+
+        let ds = Section::of(&doc, "dataset");
+        anyhow::ensure!(ds.exists(), "config needs a [dataset] section");
+        let dataset = DatasetConfig {
+            kind: ds.str_req("kind")?.parse()?,
+            n_items: ds.usize_req("n_items")?,
+            dim: ds.usize_req("dim")?,
+            n_queries: ds.usize_or("n_queries", 1000)?,
+            seed: ds.u64_or("seed", 42)?,
+            rank: ds.usize_or("rank", 32)?,
+            sigma: ds.f64_or("sigma", 0.35)? as f32,
+        };
+
+        let ix = Section::of(&doc, "index");
+        anyhow::ensure!(ix.exists(), "config needs an [index] section");
+        let index = IndexConfig {
+            algo: ix.str_req("algo")?.parse()?,
+            code_bits: ix.usize_req("code_bits")?,
+            n_partitions: ix.usize_or("n_partitions", 32)?,
+            scheme: ix.str_or("scheme", "percentile")?.parse()?,
+            epsilon: ix.f64_or("epsilon", 0.1)? as f32,
+            seed: ix.u64_or("seed", 42)?,
+        };
+
+        let ev = Section::of(&doc, "eval");
+        let eval_default = EvalConfig::default();
+        let eval = EvalConfig {
+            top_k: ev.usize_or("top_k", eval_default.top_k)?,
+            min_probe: ev.usize_or("min_probe", eval_default.min_probe)?,
+            max_probe: match ev.get("max_probe") {
+                None => None,
+                Some(v) => Some(v.as_usize().context("[eval] max_probe must be an integer")?),
+            },
+            checkpoints_per_decade: ev
+                .usize_or("checkpoints_per_decade", eval_default.checkpoints_per_decade)?,
+            recall_targets: match ev.get("recall_targets") {
+                None => eval_default.recall_targets,
+                Some(v) => v
+                    .as_f64_array()
+                    .context("[eval] recall_targets must be an array of numbers")?,
+            },
+        };
+
+        let sv = Section::of(&doc, "serve");
+        let serve_default = ServeConfig::default();
+        let serve = ServeConfig {
+            max_batch: sv.usize_or("max_batch", serve_default.max_batch)?,
+            deadline_us: sv.u64_or("deadline_us", serve_default.deadline_us)?,
+            probe_budget: sv.usize_or("probe_budget", serve_default.probe_budget)?,
+            top_k: sv.usize_or("top_k", serve_default.top_k)?,
+        };
+
+        let cfg = Config { dataset, index, eval, serve };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.dataset.n_items >= 1, "n_items must be >= 1");
+        anyhow::ensure!(self.dataset.dim >= 1, "dim must be >= 1");
+        anyhow::ensure!(
+            (1..=64).contains(&self.index.code_bits),
+            "code_bits must be in 1..=64, got {}",
+            self.index.code_bits
+        );
+        anyhow::ensure!(self.index.n_partitions >= 1, "n_partitions must be >= 1");
+        anyhow::ensure!(
+            (0.0..1.0).contains(&self.index.epsilon),
+            "epsilon must be in [0,1)"
+        );
+        anyhow::ensure!(self.serve.max_batch >= 1, "max_batch must be >= 1");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const EXAMPLE: &str = r#"
+[dataset]
+kind = "longtail_sift"
+n_items = 1000
+dim = 16
+n_queries = 50
+
+[index]
+algo = "range_lsh"
+code_bits = 16
+n_partitions = 32
+
+[eval]
+top_k = 10
+recall_targets = [0.5, 0.9]
+"#;
+
+    #[test]
+    fn parses_example_toml() {
+        let cfg = Config::parse(EXAMPLE).unwrap();
+        assert_eq!(cfg.index.algo, IndexAlgo::RangeLsh);
+        assert_eq!(cfg.index.n_partitions, 32);
+        assert_eq!(cfg.index.epsilon, 0.1); // default
+        assert_eq!(cfg.serve.max_batch, 256); // default section
+        assert_eq!(cfg.eval.recall_targets, vec![0.5, 0.9]);
+    }
+
+    #[test]
+    fn builds_datasets_from_config() {
+        let cfg = Config::parse(EXAMPLE).unwrap();
+        let items = cfg.dataset.build_items();
+        let queries = cfg.dataset.build_queries();
+        assert_eq!((items.len(), items.dim()), (1000, 16));
+        assert_eq!((queries.len(), queries.dim()), (50, 16));
+    }
+
+    #[test]
+    fn validation_rejects_bad_code_bits() {
+        let bad = EXAMPLE.replace("code_bits = 16", "code_bits = 65");
+        assert!(Config::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_algo() {
+        let bad = EXAMPLE.replace("range_lsh", "quantum_lsh");
+        let err = Config::parse(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("quantum_lsh"));
+    }
+
+    #[test]
+    fn missing_sections_report_cleanly() {
+        let err = Config::parse("[dataset]\nkind = \"longtail_sift\"\n").unwrap_err();
+        assert!(format!("{err:#}").contains("n_items") || format!("{err:#}").contains("dataset"));
+        let err2 = Config::parse("").unwrap_err();
+        assert!(format!("{err2:#}").contains("[dataset]"));
+    }
+
+    #[test]
+    fn from_path_reports_missing_file() {
+        let err = Config::from_path("/no/such/config.toml").unwrap_err();
+        assert!(format!("{err:#}").contains("/no/such/config.toml"));
+    }
+
+    #[test]
+    fn algo_and_kind_round_trip_display() {
+        for a in [
+            IndexAlgo::SimpleLsh,
+            IndexAlgo::RangeLsh,
+            IndexAlgo::L2Alsh,
+            IndexAlgo::RangedL2Alsh,
+            IndexAlgo::SignAlsh,
+        ] {
+            assert_eq!(a.to_string().parse::<IndexAlgo>().unwrap(), a);
+        }
+    }
+}

@@ -1,0 +1,93 @@
+//! Dynamic batching policy: flush a pending batch when it is full or when
+//! the oldest request has waited past the deadline (vLLM-router style).
+//!
+//! The policy is pure (no IO) so it can be property-tested; the async
+//! plumbing lives in [`crate::coordinator::server`].
+
+use std::time::{Duration, Instant};
+
+/// Size/deadline flush policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub deadline: Duration,
+}
+
+impl BatchPolicy {
+    pub fn new(max_batch: usize, deadline: Duration) -> Self {
+        assert!(max_batch >= 1, "max_batch must be >= 1");
+        Self { max_batch, deadline }
+    }
+
+    /// Should a batch of `len` requests, whose oldest arrived at
+    /// `oldest`, be flushed at `now`?
+    pub fn should_flush(&self, len: usize, oldest: Option<Instant>, now: Instant) -> bool {
+        if len >= self.max_batch {
+            return true;
+        }
+        match oldest {
+            Some(t0) if len > 0 => now.duration_since(t0) >= self.deadline,
+            _ => false,
+        }
+    }
+
+    /// When must the pending batch flush at the latest? `None` if empty.
+    pub fn flush_at(&self, len: usize, oldest: Option<Instant>) -> Option<Instant> {
+        if len == 0 {
+            None
+        } else if len >= self.max_batch {
+            oldest.map(|_| Instant::now())
+        } else {
+            oldest.map(|t0| t0 + self.deadline)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> BatchPolicy {
+        BatchPolicy::new(4, Duration::from_millis(10))
+    }
+
+    #[test]
+    fn flushes_on_size() {
+        let p = policy();
+        let now = Instant::now();
+        assert!(p.should_flush(4, Some(now), now));
+        assert!(p.should_flush(5, Some(now), now));
+        assert!(!p.should_flush(3, Some(now), now));
+    }
+
+    #[test]
+    fn flushes_on_deadline() {
+        let p = policy();
+        let t0 = Instant::now();
+        let later = t0 + Duration::from_millis(11);
+        assert!(p.should_flush(1, Some(t0), later));
+        assert!(!p.should_flush(1, Some(t0), t0 + Duration::from_millis(5)));
+    }
+
+    #[test]
+    fn empty_batch_never_flushes() {
+        let p = policy();
+        let now = Instant::now();
+        assert!(!p.should_flush(0, None, now));
+        assert_eq!(p.flush_at(0, None), None);
+    }
+
+    #[test]
+    fn flush_at_is_oldest_plus_deadline() {
+        let p = policy();
+        let t0 = Instant::now();
+        let at = p.flush_at(2, Some(t0)).unwrap();
+        assert_eq!(at, t0 + Duration::from_millis(10));
+    }
+
+    #[test]
+    #[should_panic(expected = "max_batch")]
+    fn rejects_zero_batch() {
+        BatchPolicy::new(0, Duration::from_millis(1));
+    }
+}

@@ -1,0 +1,210 @@
+//! The synchronous search core: hash → probe → exact re-rank.
+
+use std::sync::Arc;
+
+use crate::config::ServeConfig;
+use crate::coordinator::metrics::Metrics;
+use crate::data::Dataset;
+use crate::hash::ItemHasher;
+use crate::index::CodeProbe;
+use crate::runtime::PjrtScorer;
+use crate::{ItemId, Result};
+
+/// One ranked answer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SearchResult {
+    pub id: ItemId,
+    /// Exact inner product with the query (post re-rank).
+    pub score: f32,
+}
+
+/// The query-path core. Thread-safe; clone the `Arc` and share.
+///
+/// The index must implement [`CodeProbe`] (SIMPLE-LSH or RANGE-LSH): the
+/// engine hashes queries *in batches* through `hasher` — the PJRT-backed
+/// Pallas kernel in production, the native panel in tests — and probes
+/// with the resulting codes, so the Python-free hot path is:
+/// `PJRT sign-hash kernel → bucket schedule walk → exact re-rank`.
+pub struct SearchEngine {
+    index: Arc<dyn CodeProbe>,
+    dataset: Arc<Dataset>,
+    hasher: Arc<dyn ItemHasher>,
+    cfg: ServeConfig,
+    metrics: Arc<Metrics>,
+}
+
+impl SearchEngine {
+    pub fn new(
+        index: Arc<dyn CodeProbe>,
+        dataset: Arc<Dataset>,
+        hasher: Arc<dyn ItemHasher>,
+        cfg: ServeConfig,
+    ) -> Result<Self> {
+        anyhow::ensure!(
+            hasher.dim() == dataset.dim(),
+            "hasher dim {} != dataset dim {}",
+            hasher.dim(),
+            dataset.dim()
+        );
+        anyhow::ensure!(cfg.top_k >= 1, "top_k must be >= 1");
+        anyhow::ensure!(cfg.probe_budget >= cfg.top_k, "budget below top_k");
+        Ok(Self {
+            index,
+            dataset,
+            hasher,
+            cfg,
+            metrics: Arc::new(Metrics::new()),
+        })
+    }
+
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    pub fn dataset(&self) -> &Arc<Dataset> {
+        &self.dataset
+    }
+
+    /// Search a single query (hashes natively; the batched path is the
+    /// production route).
+    pub fn search(&self, query: &[f32]) -> Result<Vec<SearchResult>> {
+        Ok(self.search_batch(query)?.pop().expect("one query in, one out"))
+    }
+
+    /// Search a batch of queries laid out row-major (`rows.len()` must be
+    /// a multiple of the dataset dim). Hashing is one bulk hasher call
+    /// (one or more PJRT blocks); probe + re-rank fan out on rayon.
+    pub fn search_batch(&self, rows: &[f32]) -> Result<Vec<Vec<SearchResult>>> {
+        let dim = self.dataset.dim();
+        anyhow::ensure!(
+            !rows.is_empty() && rows.len() % dim == 0,
+            "query buffer length {} not a positive multiple of dim {dim}",
+            rows.len()
+        );
+        let n = rows.len() / dim;
+        let t0 = std::time::Instant::now();
+        let codes = self.hasher.hash_queries(rows)?;
+        self.metrics.record_batch(n);
+
+        // Each probe costs milliseconds at paper scale: parallelise even
+        // small batches (cutoff 2, not the default 64).
+        let results: Vec<Vec<SearchResult>> = crate::util::par::par_map_cutoff(n, 2, |qi| {
+            let code = codes[qi];
+            let q = &rows[qi * dim..(qi + 1) * dim];
+            let budget = self.cfg.probe_budget.min(self.dataset.len());
+            let mut cands = Vec::with_capacity(budget);
+            self.index.probe_with_code(code, self.cfg.probe_budget, &mut cands);
+            let probed = cands.len();
+            PjrtScorer::rerank(&self.dataset, q, &mut cands, self.cfg.top_k);
+            let out: Vec<SearchResult> = cands
+                .into_iter()
+                .map(|id| SearchResult {
+                    id,
+                    score: self.dataset.dot(id as usize, q),
+                })
+                .collect();
+            self.metrics
+                .record_query(t0.elapsed().as_micros() as u64, probed);
+            out
+        });
+        Ok(results)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::hash::NativeHasher;
+    use crate::index::range::{RangeLshIndex, RangeLshParams};
+
+    fn engine(budget: usize) -> (Arc<Dataset>, SearchEngine) {
+        let d = Arc::new(synthetic::longtail_sift(2000, 16, 0));
+        let h = Arc::new(NativeHasher::new(16, 64, 1));
+        let idx = Arc::new(
+            RangeLshIndex::build(&d, h.as_ref(), RangeLshParams::new(16, 16)).unwrap(),
+        );
+        let cfg = ServeConfig { probe_budget: budget, top_k: 10, ..Default::default() };
+        let e = SearchEngine::new(idx, d.clone(), h, cfg).unwrap();
+        (d, e)
+    }
+
+    #[test]
+    fn search_returns_k_descending_results() {
+        let (_, e) = engine(500);
+        let q = synthetic::gaussian_queries(1, 16, 2);
+        let res = e.search(q.row(0)).unwrap();
+        assert_eq!(res.len(), 10);
+        for w in res.windows(2) {
+            assert!(w[0].score >= w[1].score);
+        }
+    }
+
+    #[test]
+    fn full_budget_recovers_exact_topk() {
+        let (d, e) = engine(usize::MAX);
+        let q = synthetic::gaussian_queries(3, 16, 3);
+        let gt = crate::eval::exact_topk(&d, &q, 10);
+        for qi in 0..q.len() {
+            let res = e.search(q.row(qi)).unwrap();
+            let ids: Vec<ItemId> = res.iter().map(|r| r.id).collect();
+            assert_eq!(ids, gt[qi], "query {qi}");
+        }
+    }
+
+    #[test]
+    fn batch_matches_single_queries() {
+        let (_, e) = engine(300);
+        let q = synthetic::gaussian_queries(8, 16, 4);
+        let batch = e.search_batch(q.flat()).unwrap();
+        assert_eq!(batch.len(), 8);
+        for qi in 0..8 {
+            let single = e.search(q.row(qi)).unwrap();
+            assert_eq!(batch[qi], single, "query {qi}");
+        }
+    }
+
+    #[test]
+    fn scores_are_exact_inner_products() {
+        let (d, e) = engine(400);
+        let q = synthetic::gaussian_queries(1, 16, 5);
+        for r in e.search(q.row(0)).unwrap() {
+            let want = d.dot(r.id as usize, q.row(0));
+            assert!((r.score - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn metrics_accumulate() {
+        let (_, e) = engine(100);
+        let q = synthetic::gaussian_queries(5, 16, 6);
+        e.search_batch(q.flat()).unwrap();
+        let s = e.metrics().snapshot();
+        assert_eq!(s.queries, 5);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.mean_batch_rows, 5.0);
+        assert!(s.mean_probed > 0.0);
+    }
+
+    #[test]
+    fn rejects_misaligned_batch() {
+        let (_, e) = engine(100);
+        assert!(e.search_batch(&[0.0; 17]).is_err());
+        assert!(e.search_batch(&[]).is_err());
+    }
+
+    #[test]
+    fn rejects_budget_below_top_k() {
+        let d = Arc::new(synthetic::longtail_sift(100, 8, 0));
+        let h = Arc::new(NativeHasher::new(8, 64, 1));
+        let idx = Arc::new(
+            RangeLshIndex::build(&d, h.as_ref(), RangeLshParams::new(16, 4)).unwrap(),
+        );
+        let cfg = ServeConfig { probe_budget: 5, top_k: 10, ..Default::default() };
+        assert!(SearchEngine::new(idx, d, h, cfg).is_err());
+    }
+}

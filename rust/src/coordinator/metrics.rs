@@ -1,0 +1,138 @@
+//! Serving metrics: lock-free counters + a log-bucketed latency histogram.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of power-of-two latency buckets (1µs .. ~17min).
+const BUCKETS: usize = 30;
+
+/// Cheap concurrent metrics sink.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    queries: AtomicU64,
+    probed_items: AtomicU64,
+    batches: AtomicU64,
+    batch_rows: AtomicU64,
+    /// histogram[i] counts latencies in [2^i, 2^{i+1}) microseconds.
+    histogram: [AtomicU64; BUCKETS],
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_query(&self, latency_us: u64, probed: usize) {
+        self.queries.fetch_add(1, Ordering::Relaxed);
+        self.probed_items.fetch_add(probed as u64, Ordering::Relaxed);
+        let bucket = (64 - latency_us.max(1).leading_zeros() - 1).min(BUCKETS as u32 - 1);
+        self.histogram[bucket as usize].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, rows: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_rows.fetch_add(rows as u64, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let hist: Vec<u64> = self
+            .histogram
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect();
+        let total: u64 = hist.iter().sum();
+        let pct = |p: f64| -> u64 {
+            if total == 0 {
+                return 0;
+            }
+            let target = (total as f64 * p).ceil() as u64;
+            let mut seen = 0u64;
+            for (i, &c) in hist.iter().enumerate() {
+                seen += c;
+                if seen >= target {
+                    // Upper edge of the bucket, conservative.
+                    return 1u64 << (i + 1);
+                }
+            }
+            1u64 << BUCKETS
+        };
+        let queries = self.queries.load(Ordering::Relaxed);
+        let batches = self.batches.load(Ordering::Relaxed);
+        MetricsSnapshot {
+            queries,
+            mean_probed: if queries == 0 {
+                0.0
+            } else {
+                self.probed_items.load(Ordering::Relaxed) as f64 / queries as f64
+            },
+            batches,
+            mean_batch_rows: if batches == 0 {
+                0.0
+            } else {
+                self.batch_rows.load(Ordering::Relaxed) as f64 / batches as f64
+            },
+            p50_us: pct(0.50),
+            p95_us: pct(0.95),
+            p99_us: pct(0.99),
+        }
+    }
+}
+
+/// Point-in-time view for reporting.
+#[derive(Debug, Clone, Copy)]
+pub struct MetricsSnapshot {
+    pub queries: u64,
+    pub mean_probed: f64,
+    pub batches: u64,
+    pub mean_batch_rows: f64,
+    /// Latency percentiles (bucket upper bounds, µs).
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_snapshot_is_zero() {
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!(s.queries, 0);
+        assert_eq!(s.p99_us, 0);
+        assert_eq!(s.mean_probed, 0.0);
+    }
+
+    #[test]
+    fn percentiles_bracket_recorded_latencies() {
+        let m = Metrics::new();
+        for _ in 0..95 {
+            m.record_query(100, 10); // bucket [64,128)
+        }
+        for _ in 0..5 {
+            m.record_query(10_000, 10); // bucket [8192,16384)
+        }
+        let s = m.snapshot();
+        assert_eq!(s.queries, 100);
+        assert!(s.p50_us >= 100 && s.p50_us <= 256, "p50 {}", s.p50_us);
+        assert!(s.p99_us >= 10_000, "p99 {}", s.p99_us);
+        assert_eq!(s.mean_probed, 10.0);
+    }
+
+    #[test]
+    fn batch_stats_average() {
+        let m = Metrics::new();
+        m.record_batch(10);
+        m.record_batch(30);
+        let s = m.snapshot();
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.mean_batch_rows, 20.0);
+    }
+
+    #[test]
+    fn zero_latency_does_not_panic() {
+        let m = Metrics::new();
+        m.record_query(0, 0);
+        assert_eq!(m.snapshot().queries, 1);
+    }
+}

@@ -1,0 +1,24 @@
+//! The serving coordinator: a production-shaped query path around the
+//! RANGE-LSH index.
+//!
+//! - [`engine::SearchEngine`] — the synchronous core: hash → probe →
+//!   exact re-rank. Query hashing goes through the AOT Pallas kernel
+//!   (PJRT) when batched, the native path for singles.
+//! - [`batcher`] / [`server`] — the async front: a tokio request loop with
+//!   a dynamic batcher (flush on size or deadline, vLLM-router style) that
+//!   amortises PJRT query hashing across concurrent requests.
+//! - [`metrics`] — latency histograms and counters (p50/p95/p99, QPS).
+//! - [`router`] — a shard router: fan out a query to per-shard engines and
+//!   merge top-k (the multi-node story, exercised single-process).
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod router;
+pub mod server;
+
+pub use batcher::BatchPolicy;
+pub use engine::{SearchEngine, SearchResult};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use router::ShardedRouter;
+pub use server::{QueryServer, ServerHandle};

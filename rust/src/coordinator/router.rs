@@ -1,0 +1,111 @@
+//! Shard router: fan a query out to per-shard engines and merge top-k.
+//!
+//! Single-process stand-in for the multi-node deployment story: each shard
+//! owns a horizontal slice of the corpus with its own RANGE-LSH index
+//! (norm ranges live *inside* each shard, as Alg. 1 prescribes per
+//! sub-dataset owner). Ids are translated back to the global space here.
+
+use std::sync::Arc;
+
+use crate::coordinator::engine::{SearchEngine, SearchResult};
+use crate::{ItemId, Result};
+
+/// One shard: a search engine plus its global id offset.
+pub struct Shard {
+    pub engine: Arc<SearchEngine>,
+    /// Global id of the shard's row 0.
+    pub id_offset: ItemId,
+}
+
+/// Fan-out/merge router over shards.
+pub struct ShardedRouter {
+    shards: Vec<Shard>,
+    top_k: usize,
+}
+
+impl ShardedRouter {
+    pub fn new(shards: Vec<Shard>, top_k: usize) -> Result<Self> {
+        anyhow::ensure!(!shards.is_empty(), "need at least one shard");
+        anyhow::ensure!(top_k >= 1, "top_k must be >= 1");
+        Ok(Self { shards, top_k })
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Query every shard, merge by exact score, return global-id top-k.
+    /// (Algorithm 2's "select the optimal one from the answers of all
+    /// sub-datasets", lifted to the shard level.)
+    pub fn query(&self, query: &[f32]) -> Result<Vec<SearchResult>> {
+        let mut merged: Vec<SearchResult> = Vec::with_capacity(self.top_k * self.shards.len());
+        for shard in &self.shards {
+            let local = shard.engine.search(query)?;
+            merged.extend(local.into_iter().map(|r| SearchResult {
+                id: r.id + shard.id_offset,
+                score: r.score,
+            }));
+        }
+        merged.sort_by(|a, b| b.score.total_cmp(&a.score).then(a.id.cmp(&b.id)));
+        merged.truncate(self.top_k);
+        Ok(merged)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServeConfig;
+    use crate::data::{synthetic, Dataset};
+    use crate::hash::NativeHasher;
+    use crate::index::range::{RangeLshIndex, RangeLshParams};
+
+    fn make_engine(d: Arc<Dataset>) -> Arc<SearchEngine> {
+        let h = Arc::new(NativeHasher::new(d.dim(), 64, 1));
+        let idx =
+            Arc::new(RangeLshIndex::build(&d, h.as_ref(), RangeLshParams::new(16, 4)).unwrap());
+        let cfg = ServeConfig { probe_budget: usize::MAX, top_k: 5, ..Default::default() };
+        Arc::new(SearchEngine::new(idx, d, h, cfg).unwrap())
+    }
+
+    #[test]
+    fn sharded_full_probe_matches_global_exact_topk() {
+        // Split a corpus in two shards; with unlimited budget the router
+        // must reproduce the global exact top-k.
+        let full = synthetic::longtail_sift(600, 8, 0);
+        let half = 300 * 8;
+        let d1 = Arc::new(Dataset::from_flat(8, full.flat()[..half].to_vec()));
+        let d2 = Arc::new(Dataset::from_flat(8, full.flat()[half..].to_vec()));
+        let router = ShardedRouter::new(
+            vec![
+                Shard { engine: make_engine(d1), id_offset: 0 },
+                Shard { engine: make_engine(d2), id_offset: 300 },
+            ],
+            5,
+        )
+        .unwrap();
+        let q = synthetic::gaussian_queries(5, 8, 2);
+        let gt = crate::eval::exact_topk(&full, &q, 5);
+        for qi in 0..q.len() {
+            let got: Vec<ItemId> = router.query(q.row(qi)).unwrap().iter().map(|r| r.id).collect();
+            assert_eq!(got, gt[qi], "query {qi}");
+        }
+    }
+
+    #[test]
+    fn merge_respects_top_k() {
+        let d = Arc::new(synthetic::longtail_sift(100, 8, 1));
+        let router = ShardedRouter::new(
+            vec![Shard { engine: make_engine(d), id_offset: 0 }],
+            3,
+        )
+        .unwrap();
+        let q = synthetic::gaussian_queries(1, 8, 3);
+        assert_eq!(router.query(q.row(0)).unwrap().len(), 3);
+    }
+
+    #[test]
+    fn rejects_empty_shard_list() {
+        assert!(ShardedRouter::new(vec![], 5).is_err());
+    }
+}

@@ -1,0 +1,263 @@
+//! The serving front: a dedicated batcher thread that dynamically batches
+//! concurrent queries (flush on size or deadline), runs the engine's
+//! batched hash+probe, and answers per-request reply channels.
+//!
+//! Offline build note: this is a plain-thread implementation of the same
+//! design a tokio front would have — the batcher is the only consumer of
+//! the request channel, request submitters block on a per-request reply
+//! channel, and the PJRT hash batch amortises across everything that
+//! arrived within the window.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::anyhow;
+
+use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::engine::{SearchEngine, SearchResult};
+use crate::coordinator::metrics::MetricsSnapshot;
+use crate::Result;
+
+struct Job {
+    query: Vec<f32>,
+    reply: mpsc::Sender<Result<Vec<SearchResult>>>,
+    enqueued: Instant,
+}
+
+/// Cloneable client handle to a running [`QueryServer`].
+///
+/// `query` blocks the calling thread until the batched answer arrives;
+/// spawn client threads (or use [`drive_workload`]) for concurrency.
+pub struct ServerHandle {
+    tx: Mutex<mpsc::Sender<Job>>,
+    engine: Arc<SearchEngine>,
+}
+
+impl Clone for ServerHandle {
+    fn clone(&self) -> Self {
+        Self {
+            tx: Mutex::new(self.tx.lock().unwrap().clone()),
+            engine: self.engine.clone(),
+        }
+    }
+}
+
+impl ServerHandle {
+    /// Submit one query and wait for its top-k.
+    pub fn query(&self, query: Vec<f32>) -> Result<Vec<SearchResult>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Job { query, reply: reply_tx, enqueued: Instant::now() })
+            .map_err(|_| anyhow!("server is shut down"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("server dropped the reply"))?
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.engine.metrics().snapshot()
+    }
+}
+
+/// The dynamic-batching query server.
+pub struct QueryServer;
+
+impl QueryServer {
+    /// Spawn the batcher thread; returns the client handle. The server
+    /// stops when every handle (hence the sender) is dropped.
+    pub fn spawn(engine: Arc<SearchEngine>, policy: BatchPolicy) -> ServerHandle {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let loop_engine = engine.clone();
+        std::thread::Builder::new()
+            .name("rangelsh-batcher".into())
+            .spawn(move || batch_loop(loop_engine, policy, rx))
+            .expect("spawning batcher thread");
+        ServerHandle { tx: Mutex::new(tx), engine }
+    }
+}
+
+fn batch_loop(engine: Arc<SearchEngine>, policy: BatchPolicy, rx: mpsc::Receiver<Job>) {
+    let mut pending: Vec<Job> = Vec::with_capacity(policy.max_batch);
+    loop {
+        // Wait (indefinitely) for the first job of the next batch.
+        if pending.is_empty() {
+            match rx.recv() {
+                Ok(job) => pending.push(job),
+                Err(_) => return, // all senders gone
+            }
+        }
+        let mut closed = false;
+        // Drain whatever queued up while the previous batch was running —
+        // these are "free" batch members, no waiting involved. (Anchoring
+        // the deadline at the oldest job's *enqueue* time would make every
+        // post-flush batch flush instantly with one member.)
+        while pending.len() < policy.max_batch {
+            match rx.try_recv() {
+                Ok(job) => pending.push(job),
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    closed = true;
+                    break;
+                }
+            }
+        }
+        // Then wait out the remainder of the oldest job's batching window
+        // (none left if it already waited through the previous flush).
+        let deadline = (pending[0].enqueued + policy.deadline).max(Instant::now());
+        while !closed && pending.len() < policy.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(job) => pending.push(job),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    closed = true;
+                    break;
+                }
+            }
+        }
+        // Flush.
+        let batch = std::mem::take(&mut pending);
+        let rows: Vec<f32> = batch.iter().flat_map(|j| j.query.iter().copied()).collect();
+        match engine.search_batch(&rows) {
+            Ok(per_query) => {
+                debug_assert_eq!(per_query.len(), batch.len());
+                for (job, res) in batch.into_iter().zip(per_query) {
+                    let _ = job.reply.send(Ok(res));
+                }
+            }
+            Err(e) => {
+                let msg = format!("batch failed: {e:#}");
+                for job in batch {
+                    let _ = job.reply.send(Err(anyhow!("{msg}")));
+                }
+            }
+        }
+        if closed {
+            return;
+        }
+    }
+}
+
+/// Drive `queries` through a fresh server with `clients` concurrent client
+/// threads; returns per-query results (in query order) and the wall time.
+pub fn drive_workload(
+    engine: Arc<SearchEngine>,
+    policy: BatchPolicy,
+    queries: &crate::data::Dataset,
+    clients: usize,
+) -> Result<(Vec<Vec<SearchResult>>, Duration)> {
+    let clients = clients.max(1);
+    let handle = QueryServer::spawn(engine, policy);
+    let n = queries.len();
+    let t0 = Instant::now();
+    let mut out: Vec<Option<Vec<SearchResult>>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    let chunk = n.div_ceil(clients);
+    let mut failure: Option<anyhow::Error> = None;
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for (t, block) in out.chunks_mut(chunk).enumerate() {
+            let h = handle.clone();
+            handles.push(scope.spawn(move || -> Result<()> {
+                let base = t * chunk;
+                for (i, slot) in block.iter_mut().enumerate() {
+                    let qi = base + i;
+                    *slot = Some(h.query(queries.row(qi).to_vec())?);
+                }
+                Ok(())
+            }));
+        }
+        for h in handles {
+            if let Err(e) = h.join().expect("client thread panicked") {
+                failure.get_or_insert(e);
+            }
+        }
+    });
+    if let Some(e) = failure {
+        return Err(e);
+    }
+    let wall = t0.elapsed();
+    Ok((
+        out.into_iter().map(|o| o.expect("client filled slot")).collect(),
+        wall,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServeConfig;
+    use crate::data::synthetic;
+    use crate::hash::NativeHasher;
+    use crate::index::range::{RangeLshIndex, RangeLshParams};
+
+    fn engine() -> Arc<SearchEngine> {
+        let d = Arc::new(synthetic::longtail_sift(1000, 8, 0));
+        let h = Arc::new(NativeHasher::new(8, 64, 1));
+        let idx =
+            Arc::new(RangeLshIndex::build(&d, h.as_ref(), RangeLshParams::new(16, 8)).unwrap());
+        let cfg = ServeConfig { probe_budget: 200, top_k: 5, ..Default::default() };
+        Arc::new(SearchEngine::new(idx, d, h, cfg).unwrap())
+    }
+
+    #[test]
+    fn serves_concurrent_queries_correctly() {
+        let eng = engine();
+        let policy = BatchPolicy::new(8, Duration::from_millis(2));
+        let q = synthetic::gaussian_queries(32, 8, 2);
+        let (results, _) = drive_workload(eng.clone(), policy, &q, 8).unwrap();
+        for qi in 0..q.len() {
+            // Must match the unbatched engine answer exactly.
+            let want = eng.search(q.row(qi)).unwrap();
+            assert_eq!(results[qi], want, "query {qi}");
+        }
+        let snap = eng.metrics().snapshot();
+        assert!(snap.batches >= 1);
+        assert!(snap.queries >= 32);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let eng = engine();
+        // Huge batch size: only the deadline can flush.
+        let policy = BatchPolicy::new(10_000, Duration::from_millis(5));
+        let handle = QueryServer::spawn(eng, policy);
+        let q = synthetic::gaussian_queries(1, 8, 3);
+        let t0 = Instant::now();
+        let res = handle.query(q.row(0).to_vec()).unwrap();
+        assert_eq!(res.len(), 5);
+        assert!(t0.elapsed() >= Duration::from_millis(5), "flushed too early");
+    }
+
+    #[test]
+    fn batching_actually_batches_under_concurrency() {
+        let eng = engine();
+        let policy = BatchPolicy::new(64, Duration::from_millis(20));
+        let q = synthetic::gaussian_queries(64, 8, 4);
+        let (results, _) = drive_workload(eng.clone(), policy, &q, 16).unwrap();
+        assert_eq!(results.len(), 64);
+        let snap = eng.metrics().snapshot();
+        assert!(
+            snap.mean_batch_rows > 1.5,
+            "expected real batching, got mean batch {}",
+            snap.mean_batch_rows
+        );
+    }
+
+    #[test]
+    fn server_survives_handle_drop_and_new_queries() {
+        let eng = engine();
+        let policy = BatchPolicy::new(4, Duration::from_millis(1));
+        let handle = QueryServer::spawn(eng, policy);
+        let h2 = handle.clone();
+        drop(handle);
+        let q = synthetic::gaussian_queries(1, 8, 5);
+        assert_eq!(h2.query(q.row(0).to_vec()).unwrap().len(), 5);
+    }
+}

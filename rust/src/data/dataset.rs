@@ -1,0 +1,211 @@
+//! Dense row-major dataset with cached 2-norms.
+
+use crate::util::par;
+use crate::ItemId;
+
+/// A dense `n x dim` f32 matrix, one item per row, with cached 2-norms.
+///
+/// The 2-norms are the central quantity in this paper: SIMPLE-LSH normalises
+/// by their global maximum, RANGE-LSH partitions by their percentiles.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Dataset {
+    dim: usize,
+    data: Vec<f32>,
+    norms: Vec<f32>,
+}
+
+impl Dataset {
+    /// Build from a flat row-major buffer. `data.len()` must be a multiple of `dim`.
+    pub fn from_flat(dim: usize, data: Vec<f32>) -> Self {
+        assert!(dim > 0, "dim must be positive");
+        assert_eq!(
+            data.len() % dim,
+            0,
+            "flat buffer length {} not a multiple of dim {}",
+            data.len(),
+            dim
+        );
+        let n = data.len() / dim;
+        let norms = par::par_map(n, |i| {
+            data[i * dim..(i + 1) * dim]
+                .iter()
+                .map(|v| v * v)
+                .sum::<f32>()
+                .sqrt()
+        });
+        Self { dim, data, norms }
+    }
+
+    /// Build from rows.
+    pub fn from_rows(rows: &[Vec<f32>]) -> Self {
+        assert!(!rows.is_empty(), "need at least one row");
+        let dim = rows[0].len();
+        let mut data = Vec::with_capacity(rows.len() * dim);
+        for r in rows {
+            assert_eq!(r.len(), dim, "ragged rows");
+            data.extend_from_slice(r);
+        }
+        Self::from_flat(dim, data)
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len() / self.dim
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// The whole row-major buffer.
+    pub fn flat(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Cached 2-norm of item `i`.
+    pub fn norm(&self, i: usize) -> f32 {
+        self.norms[i]
+    }
+
+    pub fn norms(&self) -> &[f32] {
+        &self.norms
+    }
+
+    /// Global maximum 2-norm `U = max_x ||x||` (SIMPLE-LSH's scaling factor).
+    pub fn max_norm(&self) -> f32 {
+        self.norms.iter().copied().fold(0.0, f32::max)
+    }
+
+    /// Exact inner product `q . row(i)`.
+    #[inline]
+    pub fn dot(&self, i: usize, q: &[f32]) -> f32 {
+        debug_assert_eq!(q.len(), self.dim);
+        dot_slices(self.row(i), q)
+    }
+
+    /// A sub-dataset view materialised from item ids (used by partitioners).
+    pub fn gather(&self, ids: &[ItemId]) -> Dataset {
+        let mut data = Vec::with_capacity(ids.len() * self.dim);
+        for &id in ids {
+            data.extend_from_slice(self.row(id as usize));
+        }
+        Dataset::from_flat(self.dim, data)
+    }
+
+    /// Summary statistics of the 2-norm distribution (Fig. 1(b) material).
+    pub fn norm_stats(&self) -> NormStats {
+        let mut sorted = self.norms.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let n = sorted.len();
+        let pct = |p: f64| sorted[((n - 1) as f64 * p) as usize];
+        NormStats {
+            min: sorted[0],
+            p25: pct(0.25),
+            median: pct(0.5),
+            p75: pct(0.75),
+            p95: pct(0.95),
+            max: sorted[n - 1],
+        }
+    }
+}
+
+/// Unrolled inner product (§Perf): eight independent accumulators break
+/// the f32 add dependency chain so the compiler can keep SIMD lanes busy —
+/// a naive `zip().map().sum()` serialises on add latency. This sits under
+/// every exact scan, ground-truth build and candidate re-rank.
+#[inline]
+pub fn dot_slices(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 8];
+    let chunks = a.len() / 8;
+    let (ah, at) = a.split_at(chunks * 8);
+    let (bh, bt) = b.split_at(chunks * 8);
+    for (ca, cb) in ah.chunks_exact(8).zip(bh.chunks_exact(8)) {
+        for k in 0..8 {
+            acc[k] += ca[k] * cb[k];
+        }
+    }
+    let mut s = (acc[0] + acc[4]) + (acc[1] + acc[5]) + (acc[2] + acc[6]) + (acc[3] + acc[7]);
+    for (x, y) in at.iter().zip(bt) {
+        s += x * y;
+    }
+    s
+}
+
+/// Percentile summary of a dataset's 2-norm distribution.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NormStats {
+    pub min: f32,
+    pub p25: f32,
+    pub median: f32,
+    pub p75: f32,
+    pub p95: f32,
+    pub max: f32,
+}
+
+impl NormStats {
+    /// Long-tail indicator: how far the max sits above the median.
+    /// SIMPLE-LSH degrades when this is large (paper §3.1).
+    pub fn tail_ratio(&self) -> f32 {
+        self.max / self.median.max(f32::MIN_POSITIVE)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_flat_computes_norms() {
+        let d = Dataset::from_flat(2, vec![3.0, 4.0, 0.0, 1.0]);
+        assert_eq!(d.len(), 2);
+        assert_eq!(d.norm(0), 5.0);
+        assert_eq!(d.norm(1), 1.0);
+        assert_eq!(d.max_norm(), 5.0);
+    }
+
+    #[test]
+    fn from_rows_round_trips() {
+        let rows = vec![vec![1.0, 2.0], vec![3.0, 4.0]];
+        let d = Dataset::from_rows(&rows);
+        assert_eq!(d.row(0), &[1.0, 2.0]);
+        assert_eq!(d.row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a multiple")]
+    fn from_flat_rejects_ragged() {
+        Dataset::from_flat(3, vec![1.0; 4]);
+    }
+
+    #[test]
+    fn dot_matches_manual() {
+        let d = Dataset::from_flat(3, vec![1.0, 2.0, 3.0]);
+        assert_eq!(d.dot(0, &[1.0, 0.5, 2.0]), 1.0 + 1.0 + 6.0);
+    }
+
+    #[test]
+    fn gather_selects_rows() {
+        let d = Dataset::from_flat(1, vec![10.0, 20.0, 30.0]);
+        let g = d.gather(&[2, 0]);
+        assert_eq!(g.flat(), &[30.0, 10.0]);
+    }
+
+    #[test]
+    fn norm_stats_ordering() {
+        let d = Dataset::from_flat(1, (1..=100).map(|i| i as f32).collect());
+        let s = d.norm_stats();
+        assert!(s.min <= s.p25 && s.p25 <= s.median && s.median <= s.p75);
+        assert!(s.p75 <= s.p95 && s.p95 <= s.max);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert!((s.tail_ratio() - 2.0).abs() < 0.05);
+    }
+}

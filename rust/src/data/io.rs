@@ -1,0 +1,89 @@
+//! Dataset binary IO: a minimal `.rdat` format (magic, dim, n, f32 LE rows).
+//!
+//! Used by the CLI (`rangelsh gen-data` → `rangelsh build/eval/serve`) so
+//! expensive dataset generation runs once per experiment campaign.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{ensure, Context};
+
+use super::Dataset;
+use crate::Result;
+
+const MAGIC: &[u8; 8] = b"RANGELSH";
+const VERSION: u32 = 1;
+
+/// Write `dataset` to `path` in `.rdat` format.
+pub fn save_dataset(dataset: &Dataset, path: impl AsRef<Path>) -> Result<()> {
+    let path = path.as_ref();
+    let mut w = BufWriter::new(
+        File::create(path).with_context(|| format!("creating {}", path.display()))?,
+    );
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(dataset.dim() as u64).to_le_bytes())?;
+    w.write_all(&(dataset.len() as u64).to_le_bytes())?;
+    for v in dataset.flat() {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a `.rdat` dataset from `path`.
+pub fn load_dataset(path: impl AsRef<Path>) -> Result<Dataset> {
+    let path = path.as_ref();
+    let mut r = BufReader::new(
+        File::open(path).with_context(|| format!("opening {}", path.display()))?,
+    );
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    ensure!(&magic == MAGIC, "{}: not a rangelsh dataset", path.display());
+    let mut word = [0u8; 4];
+    r.read_exact(&mut word)?;
+    let version = u32::from_le_bytes(word);
+    ensure!(version == VERSION, "unsupported dataset version {version}");
+    let mut qword = [0u8; 8];
+    r.read_exact(&mut qword)?;
+    let dim = u64::from_le_bytes(qword) as usize;
+    r.read_exact(&mut qword)?;
+    let n = u64::from_le_bytes(qword) as usize;
+    ensure!(dim > 0, "zero dim");
+    let mut bytes = vec![0u8; n * dim * 4];
+    r.read_exact(&mut bytes)?;
+    let data = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(Dataset::from_flat(dim, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn round_trip() {
+        let d = synthetic::longtail_sift(64, 7, 3);
+        let tmp = crate::util::tmp::TempPath::new("io-roundtrip");
+        save_dataset(&d, tmp.path()).unwrap();
+        let back = load_dataset(tmp.path()).unwrap();
+        assert_eq!(d, back);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let tmp = crate::util::tmp::TempPath::new("io-garbage");
+        std::fs::write(tmp.path(), b"not a dataset at all").unwrap();
+        assert!(load_dataset(tmp.path()).is_err());
+    }
+
+    #[test]
+    fn missing_file_errors_with_path() {
+        let err = load_dataset("/nonexistent/xyz.rdat").unwrap_err();
+        assert!(format!("{err:#}").contains("/nonexistent/xyz.rdat"));
+    }
+}

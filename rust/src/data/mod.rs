@@ -1,0 +1,15 @@
+//! Datasets: dense row-major f32 matrices, synthetic generators, binary IO.
+//!
+//! The paper evaluates on Netflix / Yahoo!Music ALS embeddings and ImageNet
+//! SIFT descriptors. Those exact corpora are not available here, so
+//! [`synthetic`] provides generators that reproduce the property the paper's
+//! claims actually depend on — the *shape of the 2-norm distribution*
+//! (long-tailed for ImageNet, mild spread for the MF embeddings). See
+//! DESIGN.md §3 for the substitution argument.
+
+mod dataset;
+mod io;
+pub mod synthetic;
+
+pub use dataset::{dot_slices, Dataset, NormStats};
+pub use io::{load_dataset, save_dataset};

@@ -1,0 +1,189 @@
+//! Synthetic dataset generators matching the paper's corpora (DESIGN.md §3).
+//!
+//! Three generators, one per 2-norm-distribution regime:
+//!
+//! - [`mf_embeddings`] — Netflix / Yahoo!Music stand-in: low-rank matrix
+//!   factorisation embeddings. Norms concentrate (chi-distribution-like),
+//!   **no long tail** — the regime where the paper shows RANGE-LSH is still
+//!   robust (max norm close to median, see paper §4).
+//! - [`longtail_sift`] — ImageNet-SIFT stand-in: uniform directions with
+//!   log-normally distributed norms, heavy upper tail — the regime where
+//!   SIMPLE-LSH's global normalisation collapses (Fig. 1(b)).
+//! - [`uniform_norm`] — control: all items on a sphere, the degenerate case
+//!   where RANGE-LSH and SIMPLE-LSH coincide (paper §3.2 discussion).
+
+use super::Dataset;
+use crate::util::rng::Rng;
+
+fn randn_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    let mut v = vec![0.0f32; n];
+    rng.fill_normal_f32(&mut v);
+    v
+}
+
+/// Matrix-factorisation style embeddings: `X = G1 @ G2` with Gaussian
+/// factors of rank `rank`, plus a small dense residual. Matches the ALS
+/// embeddings the paper uses for Netflix/Yahoo!Music (d = 300 there):
+/// norms are chi-like with mild spread and essentially no tail.
+pub fn mf_embeddings(n: usize, dim: usize, rank: usize, seed: u64) -> Dataset {
+    mf_vectors(n, dim, rank, seed, 0)
+}
+
+/// User-side embeddings from the *same* factorisation as
+/// [`mf_embeddings`]`(_, dim, rank, seed)`: identical item-factor basis
+/// `G2`, fresh user factors. This is the paper's query workload — user and
+/// item vectors share the ALS latent space, so queries have genuinely
+/// large inner products with their best items (unlike independent random
+/// directions, which make MIPS artificially hard).
+pub fn mf_user_queries(n: usize, dim: usize, rank: usize, seed: u64) -> Dataset {
+    mf_vectors(n, dim, rank, seed, 0x0A5E_55ED)
+}
+
+fn mf_vectors(n: usize, dim: usize, rank: usize, seed: u64, stream_salt: u64) -> Dataset {
+    assert!(rank > 0 && rank <= dim, "rank must be in 1..=dim");
+    let mut rng = Rng::seed_from_u64(seed);
+    let g2 = randn_vec(&mut rng, rank * dim);
+    // Users draw their factors from a separate stream so item/user sets
+    // differ, but share the g2 basis drawn above.
+    if stream_salt != 0 {
+        rng = Rng::seed_from_u64(seed ^ stream_salt);
+    }
+    let scale = 1.0 / (rank as f32).sqrt();
+    let mut data = vec![0.0f32; n * dim];
+    for i in 0..n {
+        let g1 = randn_vec(&mut rng, rank);
+        // Per-item popularity factor: MF embeddings of popular items have
+        // larger norms; a log-normal with small sigma gives the mild spread
+        // observed on Netflix (max/median ~ 2-3, no long tail).
+        let pop = rng.lognormal(0.0, 0.25) as f32;
+        let row = &mut data[i * dim..(i + 1) * dim];
+        for (j, r) in row.iter_mut().enumerate() {
+            let mut acc = 0.0f32;
+            for k in 0..rank {
+                acc += g1[k] * g2[k * dim + j];
+            }
+            *r = acc * scale * pop;
+        }
+    }
+    Dataset::from_flat(dim, data)
+}
+
+/// SIFT-descriptor style data with a long-tailed 2-norm distribution:
+/// directions uniform on the sphere, norms log-normal with `sigma` chosen
+/// so the global max is several times the median (Fig. 1(b) regime: after
+/// scaling max to 1, the bulk of the mass sits around 0.2–0.4).
+pub fn longtail_sift(n: usize, dim: usize, seed: u64) -> Dataset {
+    longtail_with_sigma(n, dim, 0.35, seed)
+}
+
+/// Long-tail generator with explicit log-normal sigma (ablation knob).
+pub fn longtail_with_sigma(n: usize, dim: usize, sigma: f32, seed: u64) -> Dataset {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut data = vec![0.0f32; n * dim];
+    for i in 0..n {
+        let dir = randn_vec(&mut rng, dim);
+        let len = dir.iter().map(|v| v * v).sum::<f32>().sqrt().max(1e-12);
+        let target = if sigma == 0.0 { 1.0 } else { rng.lognormal(0.0, sigma as f64) };
+        let s = target as f32 / len;
+        for (dst, v) in data[i * dim..(i + 1) * dim].iter_mut().zip(&dir) {
+            *dst = v * s;
+        }
+    }
+    Dataset::from_flat(dim, data)
+}
+
+/// Control dataset: every item has exactly unit norm. MIPS degenerates to
+/// angular search and RANGE-LSH == SIMPLE-LSH (paper §3.2).
+pub fn uniform_norm(n: usize, dim: usize, seed: u64) -> Dataset {
+    longtail_with_sigma(n, dim, 0.0, seed)
+}
+
+/// Query workload: i.i.d. Gaussian directions. SIMPLE-LSH normalises
+/// queries to unit norm anyway (Eq. 8), so only direction matters; this
+/// matches sampling held-out user embeddings' directions.
+pub fn gaussian_queries(n: usize, dim: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::seed_from_u64(seed);
+    Dataset::from_flat(dim, randn_vec(&mut rng, n * dim))
+}
+
+/// Query workload correlated with the dataset: each query is a noisy copy of
+/// a random item (recommendation-style, where user vectors align with item
+/// factors). `noise` is the relative perturbation magnitude.
+pub fn correlated_queries(dataset: &Dataset, n: usize, noise: f32, seed: u64) -> Dataset {
+    let mut rng = Rng::seed_from_u64(seed);
+    let dim = dataset.dim();
+    let mut data = vec![0.0f32; n * dim];
+    for i in 0..n {
+        let src = rng.gen_index(dataset.len());
+        let base = dataset.row(src);
+        let norm = dataset.norm(src).max(1e-12);
+        for (j, dst) in data[i * dim..(i + 1) * dim].iter_mut().enumerate() {
+            let eps = rng.normal_f32();
+            *dst = base[j] + noise * norm * eps / (dim as f32).sqrt();
+        }
+    }
+    Dataset::from_flat(dim, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_are_deterministic() {
+        assert_eq!(longtail_sift(50, 8, 1), longtail_sift(50, 8, 1));
+        assert_eq!(mf_embeddings(50, 8, 4, 1), mf_embeddings(50, 8, 4, 1));
+        assert_ne!(longtail_sift(50, 8, 1), longtail_sift(50, 8, 2));
+    }
+
+    #[test]
+    fn longtail_has_long_tail() {
+        let d = longtail_sift(20_000, 16, 0);
+        let s = d.norm_stats();
+        // max should be several times the median — the Fig 1(b) regime.
+        assert!(s.tail_ratio() > 2.5, "tail ratio {}", s.tail_ratio());
+    }
+
+    #[test]
+    fn mf_embeddings_have_mild_spread() {
+        let d = mf_embeddings(20_000, 32, 8, 0);
+        let s = d.norm_stats();
+        assert!(s.tail_ratio() < 8.0, "tail ratio {}", s.tail_ratio());
+        assert!(s.tail_ratio() > 1.2);
+    }
+
+    #[test]
+    fn uniform_norm_is_spherical() {
+        let d = uniform_norm(100, 8, 0);
+        for i in 0..d.len() {
+            assert!((d.norm(i) - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn longtail_norms_match_targets() {
+        // The generator scales directions to hit the sampled norms exactly.
+        let d = longtail_with_sigma(1000, 8, 0.5, 3);
+        let s = d.norm_stats();
+        // Log-normal(0, 0.5): median == 1.
+        assert!((s.median - 1.0).abs() < 0.1, "median {}", s.median);
+    }
+
+    #[test]
+    fn correlated_queries_align_with_items() {
+        let d = longtail_sift(200, 16, 0);
+        let q = correlated_queries(&d, 50, 0.1, 1);
+        assert_eq!(q.len(), 50);
+        assert_eq!(q.dim(), 16);
+        // A noisy copy of an item should have a large max inner product
+        // relative to a random direction's.
+        let best: f32 = (0..d.len()).map(|i| d.dot(i, q.row(0))).fold(f32::MIN, f32::max);
+        assert!(best > 0.0);
+    }
+
+    #[test]
+    fn shapes_are_requested() {
+        let d = mf_embeddings(17, 5, 2, 9);
+        assert_eq!((d.len(), d.dim()), (17, 5));
+    }
+}

@@ -1,0 +1,120 @@
+//! Exact MIPS ground truth via parallel linear scan.
+//!
+//! The recall metric in Fig. 2 needs the true top-k per query. The native
+//! path below is rayon-parallel over queries; the PJRT-scored path (same
+//! results, MXU-shaped matmuls) lives in [`crate::runtime::scorer`].
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::data::Dataset;
+use crate::util::par;
+use crate::ItemId;
+
+/// Min-heap entry so the heap evicts the smallest inner product.
+#[derive(PartialEq)]
+struct HeapItem(f32, ItemId);
+
+impl Eq for HeapItem {}
+
+impl PartialOrd for HeapItem {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for HeapItem {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse: BinaryHeap is a max-heap, we want min-at-top.
+        other.0.total_cmp(&self.0).then(other.1.cmp(&self.1))
+    }
+}
+
+/// Exact top-`k` MIPS for every query row, descending inner product.
+pub fn exact_topk(dataset: &Dataset, queries: &Dataset, k: usize) -> Vec<Vec<ItemId>> {
+    assert_eq!(dataset.dim(), queries.dim(), "dimension mismatch");
+    assert!(k >= 1);
+    par::par_map(queries.len(), |qi| {
+            let q = queries.row(qi);
+            let mut heap: BinaryHeap<HeapItem> = BinaryHeap::with_capacity(k + 1);
+            for i in 0..dataset.len() {
+                let s = dataset.dot(i, q);
+                if heap.len() < k {
+                    heap.push(HeapItem(s, i as ItemId));
+                } else if let Some(top) = heap.peek() {
+                    if s > top.0 {
+                        heap.pop();
+                        heap.push(HeapItem(s, i as ItemId));
+                    }
+                }
+            }
+            let mut v: Vec<HeapItem> = heap.into_vec();
+            v.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+            v.into_iter().map(|h| h.1).collect()
+    })
+}
+
+/// The maximum inner product per query — Fig. 1(c)/(d) plot these after
+/// the two normalisation schemes. Returns raw (unnormalised) values;
+/// divide by `U` or `U_j` per the scheme under study.
+pub fn max_inner_products(dataset: &Dataset, queries: &Dataset) -> Vec<f32> {
+    par::par_map(queries.len(), |qi| {
+        let q = queries.row(qi);
+        (0..dataset.len())
+            .map(|i| dataset.dot(i, q))
+            .fold(f32::MIN, f32::max)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn matches_naive_scan() {
+        let d = synthetic::longtail_sift(200, 8, 0);
+        let q = synthetic::gaussian_queries(10, 8, 1);
+        let got = exact_topk(&d, &q, 5);
+        for qi in 0..q.len() {
+            let mut scores: Vec<(f32, ItemId)> = (0..d.len())
+                .map(|i| (d.dot(i, q.row(qi)), i as ItemId))
+                .collect();
+            scores.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+            let want: Vec<ItemId> = scores[..5].iter().map(|&(_, id)| id).collect();
+            assert_eq!(got[qi], want, "query {qi}");
+        }
+    }
+
+    #[test]
+    fn k_larger_than_n_returns_all() {
+        let d = synthetic::longtail_sift(7, 4, 0);
+        let q = synthetic::gaussian_queries(2, 4, 1);
+        let got = exact_topk(&d, &q, 50);
+        assert!(got.iter().all(|g| g.len() == 7));
+    }
+
+    #[test]
+    fn results_are_descending_in_inner_product() {
+        let d = synthetic::mf_embeddings(100, 8, 4, 2);
+        let q = synthetic::gaussian_queries(5, 8, 3);
+        for (qi, ids) in exact_topk(&d, &q, 10).iter().enumerate() {
+            let scores: Vec<f32> = ids.iter().map(|&id| d.dot(id as usize, q.row(qi))).collect();
+            for w in scores.windows(2) {
+                assert!(w[0] >= w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn max_inner_products_agree_with_topk() {
+        let d = synthetic::longtail_sift(150, 8, 4);
+        let q = synthetic::gaussian_queries(8, 8, 5);
+        let tops = exact_topk(&d, &q, 1);
+        let mips = max_inner_products(&d, &q);
+        for qi in 0..q.len() {
+            let s = d.dot(tops[qi][0] as usize, q.row(qi));
+            assert!((s - mips[qi]).abs() < 1e-6);
+        }
+    }
+}

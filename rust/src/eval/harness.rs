@@ -1,0 +1,225 @@
+//! Experiment harness: build any of the paper's index types from a spec,
+//! measure its recall curve, and emit paper-style result rows (used by the
+//! `benches/` figure regenerators and the CLI `eval` subcommand).
+
+
+use crate::config::IndexAlgo;
+use crate::data::Dataset;
+use crate::eval::{exact_topk, recall_curve, RecallCurve};
+use crate::hash::{ItemHasher, NativeHasher};
+use crate::index::l2alsh::{L2AlshIndex, L2AlshParams};
+use crate::index::range::{RangeLshIndex, RangeLshParams};
+use crate::index::ranged_l2alsh::{RangedL2AlshIndex, RangedL2AlshParams};
+use crate::index::sign_alsh::{SignAlshIndex, SignAlshParams};
+use crate::index::simple::{SimpleLshIndex, SimpleLshParams};
+use crate::index::{IndexStats, MipsIndex, PartitionScheme};
+use crate::{ItemId, Result};
+
+/// What to run: one algorithm at one operating point.
+#[derive(Debug, Clone)]
+pub struct CurveSpec {
+    pub algo: IndexAlgo,
+    /// Total code budget L (bits).
+    pub code_bits: usize,
+    /// Ranges `m` (ignored for unpartitioned algos).
+    pub n_partitions: usize,
+    pub scheme: PartitionScheme,
+    pub epsilon: f32,
+    pub top_k: usize,
+    pub seed: u64,
+}
+
+impl CurveSpec {
+    pub fn new(algo: IndexAlgo, code_bits: usize, n_partitions: usize) -> Self {
+        Self {
+            algo,
+            code_bits,
+            n_partitions,
+            scheme: PartitionScheme::Percentile,
+            epsilon: 0.1,
+            top_k: 10,
+            seed: 7,
+        }
+    }
+}
+
+/// One measured experiment: the curve plus context for table printing.
+#[derive(Debug, Clone)]
+pub struct ExperimentResult {
+    pub label: String,
+    pub curve: RecallCurve,
+    pub stats: IndexStats,
+    pub build_secs: f64,
+    pub query_secs: f64,
+}
+
+impl ExperimentResult {
+    /// Paper-style row: probes needed for a set of recall targets.
+    pub fn probes_row(&self, targets: &[f64]) -> Vec<Option<usize>> {
+        targets.iter().map(|&t| self.curve.probes_to_reach(t)).collect()
+    }
+}
+
+/// Build the spec'd index over `dataset`.
+pub fn build_index(dataset: &Dataset, spec: &CurveSpec) -> Result<Box<dyn MipsIndex>> {
+    let hasher: Box<dyn ItemHasher> = Box::new(NativeHasher::new(dataset.dim(), 64, spec.seed));
+    Ok(match spec.algo {
+        IndexAlgo::SimpleLsh => Box::new(SimpleLshIndex::build(
+            dataset,
+            hasher.as_ref(),
+            SimpleLshParams::new(spec.code_bits),
+        )?),
+        IndexAlgo::RangeLsh => Box::new(RangeLshIndex::build(
+            dataset,
+            hasher.as_ref(),
+            RangeLshParams::new(spec.code_bits, spec.n_partitions)
+                .with_scheme(spec.scheme)
+                .with_epsilon(spec.epsilon),
+        )?),
+        IndexAlgo::L2Alsh => Box::new(L2AlshIndex::build(
+            dataset,
+            L2AlshParams::recommended(spec.code_bits),
+        )?),
+        IndexAlgo::RangedL2Alsh => Box::new(RangedL2AlshIndex::build(
+            dataset,
+            RangedL2AlshParams::recommended(spec.code_bits, spec.n_partitions),
+        )?),
+        IndexAlgo::SignAlsh => Box::new(SignAlshIndex::build(
+            dataset,
+            SignAlshParams::recommended(spec.code_bits),
+        )?),
+    })
+}
+
+/// Build + measure: the one-call entry used by every figure bench.
+/// `ground_truth` may be shared across specs (computed once per dataset).
+pub fn run_curve(
+    dataset: &Dataset,
+    queries: &Dataset,
+    ground_truth: &[Vec<ItemId>],
+    checkpoints: &[usize],
+    spec: &CurveSpec,
+    label: impl Into<String>,
+) -> Result<ExperimentResult> {
+    let t0 = std::time::Instant::now();
+    let index = build_index(dataset, spec)?;
+    let build_secs = t0.elapsed().as_secs_f64();
+    let t1 = std::time::Instant::now();
+    let curve = recall_curve(index.as_ref(), queries, ground_truth, checkpoints);
+    let query_secs = t1.elapsed().as_secs_f64();
+    Ok(ExperimentResult {
+        label: label.into(),
+        curve,
+        stats: index.stats(),
+        build_secs,
+        query_secs,
+    })
+}
+
+/// Convenience: exact ground truth for `top_k`.
+pub fn ground_truth(dataset: &Dataset, queries: &Dataset, top_k: usize) -> Vec<Vec<ItemId>> {
+    exact_topk(dataset, queries, top_k)
+}
+
+/// Render results as an aligned text table of probes-to-recall targets —
+/// the shape of the paper's Fig. 2 comparison, in rows.
+pub fn format_probe_table(results: &[ExperimentResult], targets: &[f64]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("{:<28}", "algorithm"));
+    for t in targets {
+        out.push_str(&format!("  probes@{:.0}%", t * 100.0));
+    }
+    out.push_str("  buckets  largest\n");
+    for r in results {
+        out.push_str(&format!("{:<28}", r.label));
+        for p in r.probes_row(targets) {
+            match p {
+                Some(p) => out.push_str(&format!("  {:>10}", p)),
+                None => out.push_str(&format!("  {:>10}", "-")),
+            }
+        }
+        out.push_str(&format!(
+            "  {:>7}  {:>7}\n",
+            r.stats.n_buckets, r.stats.largest_bucket
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::eval::recall::geometric_checkpoints;
+
+    #[test]
+    fn harness_runs_all_algorithms() {
+        let d = synthetic::longtail_sift(600, 8, 0);
+        let q = synthetic::gaussian_queries(10, 8, 1);
+        let gt = ground_truth(&d, &q, 5);
+        let cps = geometric_checkpoints(10, d.len(), 3);
+        for algo in [
+            IndexAlgo::SimpleLsh,
+            IndexAlgo::RangeLsh,
+            IndexAlgo::L2Alsh,
+            IndexAlgo::RangedL2Alsh,
+            IndexAlgo::SignAlsh,
+        ] {
+            let spec = CurveSpec::new(algo, 16, 8);
+            let res = run_curve(&d, &q, &gt, &cps, &spec, format!("{algo:?}")).unwrap();
+            assert!(
+                (res.curve.final_recall() - 1.0).abs() < 1e-9,
+                "{algo:?}: full probe must reach recall 1, got {}",
+                res.curve.final_recall()
+            );
+            assert!(res.build_secs >= 0.0 && res.query_secs >= 0.0);
+        }
+    }
+
+    #[test]
+    fn range_beats_simple_on_longtail() {
+        // The paper's headline, at test scale: RANGE-LSH needs fewer
+        // probes than SIMPLE-LSH at the same recall on long-tailed data.
+        let d = synthetic::longtail_sift(4000, 16, 0);
+        let q = synthetic::gaussian_queries(30, 16, 1);
+        let gt = ground_truth(&d, &q, 10);
+        let cps = geometric_checkpoints(10, d.len(), 6);
+        let range = run_curve(
+            &d, &q, &gt, &cps,
+            &CurveSpec::new(IndexAlgo::RangeLsh, 16, 32),
+            "range",
+        )
+        .unwrap();
+        let simple = run_curve(
+            &d, &q, &gt, &cps,
+            &CurveSpec::new(IndexAlgo::SimpleLsh, 16, 1),
+            "simple",
+        )
+        .unwrap();
+        let (rp, sp) = (
+            range.curve.probes_to_reach(0.8).unwrap_or(usize::MAX),
+            simple.curve.probes_to_reach(0.8).unwrap_or(usize::MAX),
+        );
+        assert!(
+            rp < sp,
+            "RANGE probes {rp} should be below SIMPLE probes {sp} at recall 0.8"
+        );
+    }
+
+    #[test]
+    fn probe_table_formats() {
+        let d = synthetic::longtail_sift(300, 8, 2);
+        let q = synthetic::gaussian_queries(5, 8, 3);
+        let gt = ground_truth(&d, &q, 5);
+        let cps = geometric_checkpoints(10, d.len(), 3);
+        let res = run_curve(
+            &d, &q, &gt, &cps,
+            &CurveSpec::new(IndexAlgo::RangeLsh, 16, 4),
+            "range-lsh L=16",
+        )
+        .unwrap();
+        let table = format_probe_table(&[res], &[0.5, 0.9]);
+        assert!(table.contains("range-lsh L=16"));
+        assert!(table.contains("probes@50%"));
+    }
+}

@@ -1,0 +1,11 @@
+//! Evaluation: exact ground truth, probed-items/recall curves (the paper's
+//! Fig. 2/3 metric), and the experiment harness that prints paper-style
+//! result rows.
+
+pub mod ground_truth;
+pub mod harness;
+pub mod recall;
+
+pub use ground_truth::{exact_topk, max_inner_products};
+pub use harness::{run_curve, CurveSpec, ExperimentResult};
+pub use recall::{recall_curve, RecallCurve};

@@ -1,0 +1,173 @@
+//! Probed-items vs recall curves — the paper's main empirical metric
+//! (Fig. 2: "probed item-recall curve for top 10 MIPS").
+//!
+//! Recall at probe depth `p` is the fraction of the true top-k found among
+//! the first `p` candidates emitted by the index's probing order,
+//! averaged over queries.
+
+use crate::data::Dataset;
+use crate::index::MipsIndex;
+use crate::util::par;
+use crate::ItemId;
+
+/// A measured probed-items → recall curve (mean over queries).
+#[derive(Debug, Clone)]
+pub struct RecallCurve {
+    /// Probe depths (number of probed items), ascending.
+    pub checkpoints: Vec<usize>,
+    /// Mean recall@k at each checkpoint.
+    pub recalls: Vec<f64>,
+}
+
+impl RecallCurve {
+    /// Smallest checkpoint reaching `target` recall, if any — the paper's
+    /// "probes much less items at the same recall" comparison.
+    pub fn probes_to_reach(&self, target: f64) -> Option<usize> {
+        self.checkpoints
+            .iter()
+            .zip(&self.recalls)
+            .find(|(_, &r)| r >= target)
+            .map(|(&c, _)| c)
+    }
+
+    pub fn final_recall(&self) -> f64 {
+        self.recalls.last().copied().unwrap_or(0.0)
+    }
+}
+
+/// Geometric checkpoint grid from `lo` to `hi` (inclusive-ish), the x-axis
+/// of Fig. 2.
+pub fn geometric_checkpoints(lo: usize, hi: usize, per_decade: usize) -> Vec<usize> {
+    assert!(lo >= 1 && hi >= lo && per_decade >= 1);
+    let mut out = Vec::new();
+    let ratio = 10f64.powf(1.0 / per_decade as f64);
+    let mut x = lo as f64;
+    while (x as usize) < hi {
+        let xi = x.round() as usize;
+        if out.last() != Some(&xi) {
+            out.push(xi);
+        }
+        x *= ratio;
+    }
+    if out.last() != Some(&hi) {
+        out.push(hi);
+    }
+    out
+}
+
+/// Measure the recall curve of `index` against exact `ground_truth`
+/// (each query's true top-k, any k >= 1). Parallel over queries.
+pub fn recall_curve(
+    index: &dyn MipsIndex,
+    queries: &Dataset,
+    ground_truth: &[Vec<ItemId>],
+    checkpoints: &[usize],
+) -> RecallCurve {
+    assert_eq!(queries.len(), ground_truth.len(), "gt/query count mismatch");
+    assert!(!checkpoints.is_empty());
+    assert!(checkpoints.windows(2).all(|w| w[0] < w[1]), "checkpoints must ascend");
+    let max_probe = *checkpoints.last().unwrap();
+
+    let sums: Vec<f64> = par::par_fold(
+        queries.len(),
+        || vec![0.0f64; checkpoints.len()],
+        |qi, acc| {
+            let gt = &ground_truth[qi];
+            let k = gt.len().max(1);
+            let gt_set: std::collections::HashSet<ItemId> = gt.iter().copied().collect();
+            let mut order = Vec::with_capacity(max_probe.min(index.len()));
+            index.probe(queries.row(qi), max_probe, &mut order);
+            // Cumulative hits at each checkpoint.
+            let mut hits = 0usize;
+            let mut pos = 0usize;
+            for (ci, &cp) in checkpoints.iter().enumerate() {
+                while pos < order.len() && pos < cp {
+                    if gt_set.contains(&order[pos]) {
+                        hits += 1;
+                    }
+                    pos += 1;
+                }
+                acc[ci] += hits as f64 / k as f64;
+            }
+        },
+        |mut a, b| {
+            for (x, y) in a.iter_mut().zip(b) {
+                *x += y;
+            }
+            a
+        },
+    );
+
+    RecallCurve {
+        checkpoints: checkpoints.to_vec(),
+        recalls: sums.iter().map(|s| s / queries.len() as f64).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::eval::exact_topk;
+    use crate::hash::NativeHasher;
+    use crate::index::range::{RangeLshIndex, RangeLshParams};
+
+    fn setup() -> (Dataset, Dataset, Vec<Vec<ItemId>>, RangeLshIndex) {
+        let d = synthetic::longtail_sift(800, 8, 0);
+        let q = synthetic::gaussian_queries(20, 8, 1);
+        let gt = exact_topk(&d, &q, 5);
+        let h = NativeHasher::new(8, 64, 2);
+        let idx = RangeLshIndex::build(&d, &h, RangeLshParams::new(16, 8)).unwrap();
+        (d, q, gt, idx)
+    }
+
+    #[test]
+    fn recall_is_monotone_and_reaches_one_at_full_probe() {
+        let (d, q, gt, idx) = setup();
+        let cps = geometric_checkpoints(10, d.len(), 4);
+        let curve = recall_curve(&idx, &q, &gt, &cps);
+        for w in curve.recalls.windows(2) {
+            assert!(w[1] >= w[0] - 1e-12, "recall not monotone");
+        }
+        assert!(
+            (curve.final_recall() - 1.0).abs() < 1e-9,
+            "probing everything must find everything, got {}",
+            curve.final_recall()
+        );
+    }
+
+    #[test]
+    fn recall_bounded_in_unit_interval() {
+        let (_, q, gt, idx) = setup();
+        let curve = recall_curve(&idx, &q, &gt, &[1, 10, 100]);
+        assert!(curve.recalls.iter().all(|&r| (0.0..=1.0).contains(&r)));
+    }
+
+    #[test]
+    fn probes_to_reach_finds_first_crossing() {
+        let c = RecallCurve {
+            checkpoints: vec![10, 100, 1000],
+            recalls: vec![0.2, 0.8, 1.0],
+        };
+        assert_eq!(c.probes_to_reach(0.5), Some(100));
+        assert_eq!(c.probes_to_reach(0.9), Some(1000));
+        assert_eq!(c.probes_to_reach(0.1), Some(10));
+        let c2 = RecallCurve { checkpoints: vec![10], recalls: vec![0.3] };
+        assert_eq!(c2.probes_to_reach(0.5), None);
+    }
+
+    #[test]
+    fn geometric_checkpoints_ascend_and_cover() {
+        let cps = geometric_checkpoints(10, 5000, 4);
+        assert_eq!(*cps.first().unwrap(), 10);
+        assert_eq!(*cps.last().unwrap(), 5000);
+        assert!(cps.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    #[should_panic(expected = "ascend")]
+    fn rejects_unsorted_checkpoints() {
+        let (_, q, gt, idx) = setup();
+        recall_curve(&idx, &q, &gt, &[100, 10]);
+    }
+}

@@ -1,0 +1,91 @@
+//! Bitpacked hash codes: one `u64` word per item (the paper's max code
+//! length is 64), Hamming distance via popcount, and masking to the
+//! effective code length.
+//!
+//! RANGE-LSH spends `ceil(log2 m)` bits of the total code budget on the
+//! range id (paper §4: "part of the bits ... encode the index of the
+//! sub-datasets"); we keep the range id structurally (items live in their
+//! range's bucket table) and mask hash codes to `L - ceil(log2 m)` bits —
+//! the same information budget, simpler arithmetic.
+
+/// Bitmask selecting the low `bits` hash bits of a code word.
+///
+/// `bits == 64` yields the identity mask; `bits == 0` is rejected (an
+/// index with zero hash bits cannot rank anything).
+pub fn mask_bits(bits: usize) -> u64 {
+    assert!(bits >= 1 && bits <= 64, "code length {bits} out of range 1..=64");
+    if bits == 64 {
+        u64::MAX
+    } else {
+        (1u64 << bits) - 1
+    }
+}
+
+/// Hamming distance between two (equal-length, pre-masked) codes.
+#[inline]
+pub fn hamming(a: u64, b: u64) -> u32 {
+    (a ^ b).count_ones()
+}
+
+/// Number of *matching* bits `l` out of `bits` — the quantity the Eq. 12
+/// similarity metric is built on (`l = L - hamming`).
+#[inline]
+pub fn matches(a: u64, b: u64, bits: usize) -> u32 {
+    bits as u32 - hamming(a, b)
+}
+
+/// Number of bits needed to address `m` partitions (0 for m == 1).
+pub fn partition_id_bits(m: usize) -> usize {
+    assert!(m >= 1);
+    (m as u64).next_power_of_two().trailing_zeros() as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mask_selects_low_bits() {
+        assert_eq!(mask_bits(1), 0b1);
+        assert_eq!(mask_bits(11), 0x7FF);
+        assert_eq!(mask_bits(32), 0xFFFF_FFFF);
+        assert_eq!(mask_bits(64), u64::MAX);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn mask_rejects_zero() {
+        mask_bits(0);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn mask_rejects_over_64() {
+        mask_bits(65);
+    }
+
+    #[test]
+    fn hamming_basics() {
+        assert_eq!(hamming(0, 0), 0);
+        assert_eq!(hamming(u64::MAX, 0), 64);
+        assert_eq!(hamming(0b1010, 0b0110), 2);
+    }
+
+    #[test]
+    fn matches_complements_hamming() {
+        let (a, b, bits) = (0b1010u64, 0b0110u64, 8);
+        assert_eq!(matches(a, b, bits), 8 - 2);
+        assert_eq!(matches(a, a, bits), 8);
+    }
+
+    #[test]
+    fn partition_id_bits_examples() {
+        // Paper §4: 32 sub-datasets cost 5 bits of a 16-bit budget.
+        assert_eq!(partition_id_bits(1), 0);
+        assert_eq!(partition_id_bits(2), 1);
+        assert_eq!(partition_id_bits(32), 5);
+        assert_eq!(partition_id_bits(64), 6);
+        assert_eq!(partition_id_bits(128), 7);
+        assert_eq!(partition_id_bits(33), 6); // round up for non-powers
+    }
+}

@@ -1,0 +1,109 @@
+//! L2 floor-hash family (paper Eq. 2): `h(x) = floor((a.x + b) / r)` with
+//! Gaussian `a` and `b ~ Uniform[0, r]` — the LSH that L2-ALSH reduces to.
+
+use crate::util::rng::Rng;
+
+/// `k` independent Eq. 2 hash functions over `dim_in`-dimensional inputs.
+#[derive(Debug, Clone)]
+pub struct L2Hash {
+    dim_in: usize,
+    k: usize,
+    r: f32,
+    /// Row-major `[k, dim_in]` Gaussian directions.
+    a: Vec<f32>,
+    /// Uniform offsets in `[0, r)`, one per function.
+    b: Vec<f32>,
+}
+
+impl L2Hash {
+    pub fn new(dim_in: usize, k: usize, r: f32, seed: u64) -> Self {
+        assert!(dim_in > 0 && k > 0);
+        assert!(r > 0.0, "bucket width r must be positive");
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut a = vec![0.0f32; k * dim_in];
+        rng.fill_normal_f32(&mut a);
+        let b = (0..k).map(|_| rng.uniform(0.0, r as f64) as f32).collect();
+        Self { dim_in, k, r, a, b }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn dim_in(&self) -> usize {
+        self.dim_in
+    }
+
+    /// Hash one (already L2-ALSH-transformed) vector into `k` bucket ids.
+    pub fn hash(&self, x: &[f32], out: &mut Vec<i32>) {
+        debug_assert_eq!(x.len(), self.dim_in);
+        out.clear();
+        for i in 0..self.k {
+            let row = &self.a[i * self.dim_in..(i + 1) * self.dim_in];
+            let dot: f32 = row.iter().zip(x).map(|(a, b)| a * b).sum();
+            out.push(((dot + self.b[i]) / self.r).floor() as i32);
+        }
+    }
+
+    /// Number of positions where two hash vectors agree — the ranking
+    /// signal for L2-ALSH multi-probing (analogous to `l` in Eq. 12).
+    pub fn matches(a: &[i32], b: &[i32]) -> usize {
+        a.iter().zip(b).filter(|(x, y)| x == y).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let h1 = L2Hash::new(4, 8, 2.5, 0);
+        let h2 = L2Hash::new(4, 8, 2.5, 0);
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        h1.hash(&[1.0, -0.5, 0.3, 2.0], &mut a);
+        h2.hash(&[1.0, -0.5, 0.3, 2.0], &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn identical_points_always_collide() {
+        let h = L2Hash::new(3, 16, 2.5, 1);
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        h.hash(&[0.4, 0.5, 0.6], &mut a);
+        h.hash(&[0.4, 0.5, 0.6], &mut b);
+        assert_eq!(L2Hash::matches(&a, &b), 16);
+    }
+
+    #[test]
+    fn near_points_collide_more_than_far_points() {
+        // Statistical check of the Eq. 3 monotonicity: collision probability
+        // decreases with L2 distance.
+        let trials = 300;
+        let (mut near, mut far) = (0usize, 0usize);
+        for seed in 0..trials {
+            let h = L2Hash::new(2, 8, 2.5, seed);
+            let (mut o, mut n, mut f) = (Vec::new(), Vec::new(), Vec::new());
+            h.hash(&[0.0, 0.0], &mut o);
+            h.hash(&[0.3, 0.0], &mut n);
+            h.hash(&[4.0, 0.0], &mut f);
+            near += L2Hash::matches(&o, &n);
+            far += L2Hash::matches(&o, &f);
+        }
+        assert!(near > far, "near {near} <= far {far}");
+        // Near pair (d=0.3, r=2.5) should collide most of the time.
+        assert!(near as f64 / (trials * 8) as f64 > 0.8);
+    }
+
+    #[test]
+    fn matches_counts_positions() {
+        assert_eq!(L2Hash::matches(&[1, 2, 3], &[1, 9, 3]), 2);
+        assert_eq!(L2Hash::matches(&[], &[]), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn rejects_nonpositive_r() {
+        L2Hash::new(2, 2, 0.0, 0);
+    }
+}

@@ -1,0 +1,95 @@
+//! Seeded Gaussian projection panels, shared between the native hasher and
+//! the PJRT-backed hasher so both produce identical codes.
+
+use crate::util::rng::Rng;
+
+/// A `[dim_in, width]` row-major panel of i.i.d. standard normal entries —
+/// the `a` vectors of sign random projection (paper Eq. 4), one column per
+/// hash function.
+///
+/// `dim_in` is the *transformed* dimensionality (`d + 1` for the Eq. 8
+/// transform). The panel layout matches the AOT artifact's `proj`
+/// argument exactly so the same struct feeds both hashing paths.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Projection {
+    dim_in: usize,
+    width: usize,
+    data: Vec<f32>,
+}
+
+impl Projection {
+    /// Sample a panel from a seeded RNG (deterministic per seed).
+    pub fn gaussian(dim_in: usize, width: usize, seed: u64) -> Self {
+        assert!(dim_in > 0 && width > 0);
+        assert!(width <= 64, "codes are packed into u64 words; width {width} > 64");
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut data = vec![0.0f32; dim_in * width];
+        rng.fill_normal_f32(&mut data);
+        Self { dim_in, width, data }
+    }
+
+    /// Rebuild from a stored flat panel (index persistence).
+    pub fn from_flat(dim_in: usize, width: usize, data: Vec<f32>) -> Self {
+        assert!(dim_in > 0 && width > 0 && width <= 64);
+        assert_eq!(data.len(), dim_in * width, "panel size mismatch");
+        Self { dim_in, width, data }
+    }
+
+    pub fn dim_in(&self) -> usize {
+        self.dim_in
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Row `k` of the panel: the `k`-th input coordinate's weights across
+    /// all hash functions.
+    pub fn row(&self, k: usize) -> &[f32] {
+        &self.data[k * self.width..(k + 1) * self.width]
+    }
+
+    /// Flat row-major `[dim_in, width]` buffer (PJRT argument layout).
+    pub fn flat(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = Projection::gaussian(5, 8, 1);
+        let b = Projection::gaussian(5, 8, 1);
+        let c = Projection::gaussian(5, 8, 2);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn shape_accessors() {
+        let p = Projection::gaussian(3, 4, 0);
+        assert_eq!(p.dim_in(), 3);
+        assert_eq!(p.width(), 4);
+        assert_eq!(p.flat().len(), 12);
+        assert_eq!(p.row(2).len(), 4);
+    }
+
+    #[test]
+    fn entries_look_standard_normal() {
+        let p = Projection::gaussian(100, 64, 7);
+        let n = p.flat().len() as f64;
+        let mean: f64 = p.flat().iter().map(|&v| v as f64).sum::<f64>() / n;
+        let var: f64 = p.flat().iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    #[should_panic(expected = "width")]
+    fn rejects_width_over_64() {
+        Projection::gaussian(4, 65, 0);
+    }
+}

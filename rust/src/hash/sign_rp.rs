@@ -1,0 +1,165 @@
+//! Native (CPU, rayon-parallel) sign-random-projection hasher.
+//!
+//! Mirrors the Layer-1 Pallas kernel exactly — same Eq. 8 transforms, same
+//! strictly-positive sign convention, same little-endian bit packing — so
+//! the two paths are interchangeable and cross-checkable. Used for tests,
+//! as the §Perf baseline, and wherever a compiled artifact for the shape
+//! does not exist.
+
+use std::sync::Arc;
+
+use super::{ItemHasher, Projection};
+use crate::transform::simple::{transform_item, transform_query};
+use crate::util::par;
+use crate::Result;
+
+/// CPU sign-RP hasher over a shared [`Projection`].
+pub struct NativeHasher {
+    proj: Arc<Projection>,
+}
+
+impl NativeHasher {
+    /// Convenience constructor: sample a fresh Gaussian panel for raw
+    /// dimensionality `dim` and `width` hash functions.
+    pub fn new(dim: usize, width: usize, seed: u64) -> Self {
+        Self::with_projection(Arc::new(Projection::gaussian(dim + 1, width, seed)))
+    }
+
+    /// Share an existing panel (e.g. with a [`crate::runtime::PjrtHasher`]).
+    pub fn with_projection(proj: Arc<Projection>) -> Self {
+        Self { proj }
+    }
+
+    /// Sign-project one already-transformed row into a packed code.
+    ///
+    /// Accumulates all `width` dot products in a single pass over the input
+    /// coordinates (row-major panel ⇒ unit-stride inner loop, auto-vectorised).
+    fn hash_transformed(&self, xt: &[f32]) -> u64 {
+        let width = self.proj.width();
+        debug_assert_eq!(xt.len(), self.proj.dim_in());
+        let mut acc = [0.0f32; 64];
+        let acc = &mut acc[..width];
+        for (k, &v) in xt.iter().enumerate() {
+            let row = self.proj.row(k);
+            for (a, &w) in acc.iter_mut().zip(row) {
+                *a += v * w;
+            }
+        }
+        let mut code = 0u64;
+        for (j, &a) in acc.iter().enumerate() {
+            // Strictly-positive convention, matching the Pallas kernel.
+            code |= ((a > 0.0) as u64) << j;
+        }
+        code
+    }
+}
+
+impl ItemHasher for NativeHasher {
+    fn projection(&self) -> &Arc<Projection> {
+        &self.proj
+    }
+
+    fn hash_items(&self, rows: &[f32], u: f32) -> Result<Vec<u64>> {
+        let dim = self.dim();
+        anyhow::ensure!(
+            rows.len() % dim == 0,
+            "row buffer length {} not a multiple of dim {dim}",
+            rows.len()
+        );
+        let n = rows.len() / dim;
+        Ok(par::par_map(n, |i| {
+            let mut buf = Vec::with_capacity(dim + 1);
+            transform_item(&rows[i * dim..(i + 1) * dim], u, &mut buf);
+            self.hash_transformed(&buf)
+        }))
+    }
+
+    fn hash_queries(&self, rows: &[f32]) -> Result<Vec<u64>> {
+        let dim = self.dim();
+        anyhow::ensure!(
+            rows.len() % dim == 0,
+            "row buffer length {} not a multiple of dim {dim}",
+            rows.len()
+        );
+        let n = rows.len() / dim;
+        Ok(par::par_map(n, |i| {
+            let mut buf = Vec::with_capacity(dim + 1);
+            transform_query(&rows[i * dim..(i + 1) * dim], &mut buf);
+            self.hash_transformed(&buf)
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let d = synthetic::longtail_sift(32, 8, 0);
+        let u = d.max_norm();
+        let h1 = NativeHasher::new(8, 64, 1);
+        let h2 = NativeHasher::new(8, 64, 1);
+        let h3 = NativeHasher::new(8, 64, 2);
+        assert_eq!(h1.hash_items(d.flat(), u).unwrap(), h2.hash_items(d.flat(), u).unwrap());
+        assert_ne!(h1.hash_items(d.flat(), u).unwrap(), h3.hash_items(d.flat(), u).unwrap());
+    }
+
+    #[test]
+    fn query_hash_is_scale_invariant() {
+        // Queries are unit-normalised first, so scaling cannot change codes.
+        let h = NativeHasher::new(4, 32, 0);
+        let q: Vec<f32> = vec![0.3, -0.7, 0.2, 0.9];
+        let q2: Vec<f32> = q.iter().map(|v| v * 42.0).collect();
+        assert_eq!(h.hash_queries(&q).unwrap(), h.hash_queries(&q2).unwrap());
+    }
+
+    #[test]
+    fn item_codes_depend_on_u() {
+        // The normalisation constant changes the transform tail, hence codes
+        // (this is the entire RANGE-LSH mechanism).
+        let d = synthetic::longtail_sift(64, 8, 1);
+        let h = NativeHasher::new(8, 64, 0);
+        let a = h.hash_items(d.flat(), d.max_norm()).unwrap();
+        let b = h.hash_items(d.flat(), d.max_norm() * 10.0).unwrap();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn collision_rate_tracks_angular_similarity() {
+        // Statistical check of Eq. 4: P[h(x)=h(y)] = 1 - theta/pi, per bit.
+        // Pick two unit vectors at 60 degrees: expected per-bit collision 2/3.
+        let h = NativeHasher::new(2, 64, 3);
+        // Transformed space: use queries (tail 0) so the angle is exact.
+        let a = vec![1.0f32, 0.0];
+        let b = vec![0.5f32, 3f32.sqrt() / 2.0];
+        let mut agree = 0u32;
+        // Average over many independent panels.
+        let trials = 200;
+        for seed in 0..trials {
+            let h = NativeHasher::new(2, 64, seed);
+            let ca = h.hash_queries(&a).unwrap()[0];
+            let cb = h.hash_queries(&b).unwrap()[0];
+            agree += 64 - crate::hash::hamming(ca, cb);
+        }
+        let _ = h;
+        let rate = agree as f64 / (trials as f64 * 64.0);
+        assert!((rate - 2.0 / 3.0).abs() < 0.02, "collision rate {rate}");
+    }
+
+    #[test]
+    fn rejects_ragged_buffer() {
+        let h = NativeHasher::new(4, 16, 0);
+        assert!(h.hash_items(&[0.0; 7], 1.0).is_err());
+        assert!(h.hash_queries(&[0.0; 9]).is_err());
+    }
+
+    #[test]
+    fn width_masks_unused_bits() {
+        // width < 64 must leave high bits zero.
+        let h = NativeHasher::new(4, 16, 5);
+        let codes = h.hash_queries(&[0.1, 0.2, 0.3, 0.4]).unwrap();
+        assert_eq!(codes[0] >> 16, 0);
+    }
+}

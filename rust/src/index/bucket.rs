@@ -1,0 +1,301 @@
+//! Hash bucket table: packed code → item ids, plus the per-query
+//! counting-sort that groups buckets by number of matching bits.
+//!
+//! The counting-sort is how both Hamming ranking (SIMPLE-LSH) and the
+//! Eq. 12 metric order (RANGE-LSH) are realised in O(#buckets) per query —
+//! "a complexity similar to Hamming distance" as §3.3 requires.
+//!
+//! Layout (§Perf): buckets are stored structure-of-arrays — a dense
+//! `codes` vector (one linear popcount scan per query, cache-friendly and
+//! auto-vectorisable) and a flat `items` arena with per-bucket offsets —
+//! rather than pointer-chasing a map of Vecs. The hash map only serves
+//! exact-bucket lookups (single-probe protocol).
+
+use crate::hash::{mask_bits, matches};
+use crate::util::fxhash::FxHashMap;
+use crate::ItemId;
+
+/// Reusable buffers for [`BucketTable::counting_sort_by_matches`].
+#[derive(Debug, Default, Clone)]
+pub struct SortScratch {
+    /// Bucket indices grouped by match count (the sort output).
+    pub order: Vec<u32>,
+    /// `levels[l]..levels[l+1]` bounds the match-count-`l` slice of `order`.
+    pub levels: Vec<u32>,
+    l_cache: Vec<u32>,
+    cursor: Vec<u32>,
+}
+
+/// A single hash table over packed codes masked to `bits` hash bits.
+#[derive(Debug, Clone)]
+pub struct BucketTable {
+    bits: usize,
+    /// code → dense bucket index (exact lookups only).
+    map: FxHashMap<u64, u32>,
+    /// Dense bucket codes (scan target of the per-query counting sort).
+    codes: Vec<u64>,
+    /// Bucket `b` owns `items[starts[b] as usize .. starts[b+1] as usize]`.
+    starts: Vec<u32>,
+    items: Vec<ItemId>,
+}
+
+impl BucketTable {
+    /// Build from per-item codes. `ids[i]` is the dataset-global id of the
+    /// item whose code is `codes[i]` (RANGE-LSH passes each range's ids).
+    /// Codes are masked to `bits` internally.
+    pub fn build(codes: &[u64], ids: Option<&[ItemId]>, bits: usize) -> Self {
+        if let Some(ids) = ids {
+            assert_eq!(codes.len(), ids.len(), "codes/ids length mismatch");
+        }
+        let mask = mask_bits(bits);
+        // Pass 1: assign dense bucket indices and count occupancy.
+        let mut map: FxHashMap<u64, u32> = FxHashMap::default();
+        let mut bucket_codes: Vec<u64> = Vec::new();
+        let mut counts: Vec<u32> = Vec::new();
+        let mut assignment: Vec<u32> = Vec::with_capacity(codes.len());
+        for &code in codes {
+            let code = code & mask;
+            let b = *map.entry(code).or_insert_with(|| {
+                bucket_codes.push(code);
+                counts.push(0);
+                (bucket_codes.len() - 1) as u32
+            });
+            counts[b as usize] += 1;
+            assignment.push(b);
+        }
+        // Pass 2: prefix offsets, then place items into the flat arena.
+        let mut starts: Vec<u32> = Vec::with_capacity(counts.len() + 1);
+        let mut acc = 0u32;
+        starts.push(0);
+        for &c in &counts {
+            acc += c;
+            starts.push(acc);
+        }
+        let mut cursor: Vec<u32> = starts[..counts.len()].to_vec();
+        let mut items = vec![0 as ItemId; codes.len()];
+        for (i, &b) in assignment.iter().enumerate() {
+            let id = ids.map_or(i as ItemId, |ids| ids[i]);
+            items[cursor[b as usize] as usize] = id;
+            cursor[b as usize] += 1;
+        }
+        Self { bits, map, codes: bucket_codes, starts, items }
+    }
+
+    pub fn bits(&self) -> usize {
+        self.bits
+    }
+
+    pub fn n_items(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn n_buckets(&self) -> usize {
+        self.codes.len()
+    }
+
+    pub fn largest_bucket(&self) -> usize {
+        (0..self.n_buckets())
+            .map(|b| (self.starts[b + 1] - self.starts[b]) as usize)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Items of dense bucket `b`.
+    #[inline]
+    pub fn bucket_items(&self, b: usize) -> &[ItemId] {
+        &self.items[self.starts[b] as usize..self.starts[b + 1] as usize]
+    }
+
+    /// Items whose code equals `qcode` exactly (single-probe protocol).
+    pub fn exact(&self, qcode: u64) -> Option<&[ItemId]> {
+        self.map
+            .get(&(qcode & mask_bits(self.bits)))
+            .map(|&b| self.bucket_items(b as usize))
+    }
+
+    /// Counting-sort all buckets by `l` = matching bits against `qcode`:
+    /// after the call, buckets with exactly `l` matching bits occupy
+    /// `scratch.order[scratch.levels[l] .. scratch.levels[l+1]]`
+    /// (`levels.len() == bits + 2`). All buffers live in `scratch` and are
+    /// reused — the probe hot path makes no allocations once warm (§Perf).
+    pub fn counting_sort_by_matches(&self, qcode: u64, scratch: &mut SortScratch) {
+        let q = qcode & mask_bits(self.bits);
+        let n = self.n_buckets();
+        let SortScratch { order, levels, l_cache, cursor } = scratch;
+        levels.clear();
+        levels.resize(self.bits + 2, 0);
+        // Pass 1: popcount every bucket exactly once (dense scan,
+        // vectorisable), caching `l` and histogramming.
+        l_cache.clear();
+        l_cache.reserve(n);
+        for &code in &self.codes {
+            let l = matches(code, q, self.bits);
+            l_cache.push(l);
+            levels[l as usize + 1] += 1;
+        }
+        // Prefix sum → slice starts per level.
+        for l in 0..=self.bits {
+            levels[l + 1] += levels[l];
+        }
+        // Pass 2: place bucket indices using the cached `l`s.
+        cursor.clear();
+        cursor.extend_from_slice(levels);
+        order.clear();
+        order.resize(n, 0);
+        for (b, &l) in l_cache.iter().enumerate() {
+            order[cursor[l as usize] as usize] = b as u32;
+            cursor[l as usize] += 1;
+        }
+    }
+
+    /// Group this table's buckets by `l` (compat shim over the counting
+    /// sort; prefer [`Self::counting_sort_by_matches`] on hot paths).
+    pub fn group_by_matches<'a>(&'a self, qcode: u64, groups: &mut Vec<Vec<&'a [ItemId]>>) {
+        let mut scratch = SortScratch::default();
+        self.counting_sort_by_matches(qcode, &mut scratch);
+        groups.clear();
+        groups.resize_with(self.bits + 1, Vec::new);
+        for l in 0..=self.bits {
+            let (lo, hi) = (scratch.levels[l] as usize, scratch.levels[l + 1] as usize);
+            for &b in &scratch.order[lo..hi] {
+                groups[l].push(self.bucket_items(b as usize));
+            }
+        }
+    }
+
+    /// Iterate all buckets (stats / diagnostics).
+    pub fn buckets(&self) -> impl Iterator<Item = (u64, &[ItemId])> {
+        (0..self.n_buckets()).map(|b| (self.codes[b], self.bucket_items(b)))
+    }
+
+    /// Bucket-size histogram: `hist[k]` = number of buckets holding
+    /// exactly `k` items (k capped at `hist.len()-1`). Fig-adjacent
+    /// diagnostic for the §3.1/§3.2 balance discussion.
+    pub fn occupancy_histogram(&self, max_size: usize) -> Vec<usize> {
+        let mut hist = vec![0usize; max_size + 1];
+        for b in 0..self.n_buckets() {
+            hist[self.bucket_items(b).len().min(max_size)] += 1;
+        }
+        hist
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_groups_equal_codes() {
+        let t = BucketTable::build(&[0b01, 0b01, 0b10], None, 2);
+        assert_eq!(t.n_buckets(), 2);
+        assert_eq!(t.largest_bucket(), 2);
+        assert_eq!(t.exact(0b01).unwrap(), &[0, 1]);
+        assert_eq!(t.exact(0b10).unwrap(), &[2]);
+        assert!(t.exact(0b11).is_none());
+    }
+
+    #[test]
+    fn masking_merges_high_bit_differences() {
+        // Codes differing only above `bits` collapse into one bucket.
+        let t = BucketTable::build(&[0b100_01, 0b000_01], None, 2);
+        assert_eq!(t.n_buckets(), 1);
+        assert_eq!(t.exact(0b01).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn custom_ids_are_preserved() {
+        let t = BucketTable::build(&[7, 7], Some(&[100, 200]), 4);
+        assert_eq!(t.exact(7).unwrap(), &[100, 200]);
+    }
+
+    #[test]
+    fn group_by_matches_counts_correctly() {
+        // bits=3, query 0b000: code 0b000 -> l=3, 0b001 -> l=2, 0b111 -> l=0.
+        let t = BucketTable::build(&[0b000, 0b001, 0b111], None, 3);
+        let mut groups = Vec::new();
+        t.group_by_matches(0b000, &mut groups);
+        assert_eq!(groups.len(), 4);
+        assert_eq!(groups[3].len(), 1);
+        assert_eq!(groups[2].len(), 1);
+        assert_eq!(groups[1].len(), 0);
+        assert_eq!(groups[0].len(), 1);
+        assert_eq!(groups[3][0], &[0]);
+        assert_eq!(groups[0][0], &[2]);
+    }
+
+    #[test]
+    fn group_by_matches_covers_all_buckets() {
+        let codes: Vec<u64> = (0..100).map(|i| i * 2654435761 % 1024).collect();
+        let t = BucketTable::build(&codes, None, 10);
+        let mut groups = Vec::new();
+        t.group_by_matches(0x3FF, &mut groups);
+        let total: usize = groups.iter().flat_map(|g| g.iter()).map(|s| s.len()).sum();
+        assert_eq!(total, 100);
+    }
+
+    #[test]
+    fn counting_sort_levels_are_consistent() {
+        let codes: Vec<u64> = (0..500).map(|i| i * 0x9E3779B9 % 4096).collect();
+        let t = BucketTable::build(&codes, None, 12);
+        let mut scratch = SortScratch::default();
+        let q = 0xABCu64;
+        t.counting_sort_by_matches(q, &mut scratch);
+        assert_eq!(scratch.order.len(), t.n_buckets());
+        assert_eq!(scratch.levels.len(), 14);
+        assert_eq!(scratch.levels[13] as usize, t.n_buckets());
+        // Every bucket appears exactly once, in its own level slice.
+        let mut seen = vec![false; t.n_buckets()];
+        for l in 0..=12 {
+            let (lo, hi) = (scratch.levels[l] as usize, scratch.levels[l + 1] as usize);
+            for &b in &scratch.order[lo..hi] {
+                assert!(!seen[b as usize]);
+                seen[b as usize] = true;
+                assert_eq!(matches(t.codes[b as usize], q, 12) as usize, l);
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn counting_sort_reuses_buffers() {
+        let t = BucketTable::build(&[1, 2, 3], None, 4);
+        let mut scratch = SortScratch::default();
+        scratch.order = vec![9u32; 100];
+        scratch.levels = vec![7u32; 100];
+        t.counting_sort_by_matches(0, &mut scratch);
+        assert_eq!(scratch.order.len(), 3);
+        assert_eq!(scratch.levels.len(), 6);
+        // Second query on the same scratch must be consistent too.
+        t.counting_sort_by_matches(u64::MAX, &mut scratch);
+        assert_eq!(scratch.order.len(), 3);
+    }
+
+    #[test]
+    fn occupancy_histogram_sums_to_bucket_count() {
+        let t = BucketTable::build(&[1, 1, 1, 2, 3], None, 4);
+        let hist = t.occupancy_histogram(8);
+        assert_eq!(hist.iter().sum::<usize>(), t.n_buckets());
+        assert_eq!(hist[3], 1); // the triple bucket
+        assert_eq!(hist[1], 2);
+    }
+
+    #[test]
+    fn empty_table() {
+        let t = BucketTable::build(&[], None, 8);
+        assert_eq!(t.n_buckets(), 0);
+        assert_eq!(t.largest_bucket(), 0);
+        let mut groups = Vec::new();
+        t.group_by_matches(0, &mut groups);
+        assert!(groups.iter().all(Vec::is_empty));
+    }
+
+    #[test]
+    fn bucket_items_match_build_input() {
+        let codes = [5u64, 9, 5, 9, 5];
+        let t = BucketTable::build(&codes, None, 8);
+        let five: Vec<_> = t.exact(5).unwrap().to_vec();
+        let nine: Vec<_> = t.exact(9).unwrap().to_vec();
+        assert_eq!(five, vec![0, 2, 4]);
+        assert_eq!(nine, vec![1, 3]);
+    }
+}

@@ -1,0 +1,252 @@
+//! L2-ALSH index (paper §2.2) — the asymmetric-transform baseline.
+//!
+//! Items are transformed with Eq. 5 and hashed with `K` Eq. 2 floor
+//! hashes; buckets are keyed by the integer hash vector. Multi-probing
+//! ranks buckets by the number of hash values matching the query's —
+//! the integer-hash analogue of Hamming ranking.
+//!
+//! Code-length accounting: following the paper's experiment code, the
+//! fairness convention is one floor-hash per bit of code budget
+//! (`K = L`). Each floor hash carries at least as much information as a
+//! sign bit, so this convention never *under*-equips the baseline.
+
+use crate::data::Dataset;
+use crate::hash::L2Hash;
+use crate::index::{IndexStats, MipsIndex, SingleProbe};
+use crate::transform::L2AlshTransform;
+use crate::{ItemId, Result};
+
+/// Parameters for [`L2AlshIndex`]. Paper-recommended: `m=3, U=0.83, r=2.5`.
+#[derive(Debug, Clone, Copy)]
+pub struct L2AlshParams {
+    /// Number of floor hashes `K` (= total code bits, see module docs).
+    pub k: usize,
+    /// Eq. 5 norm powers `m`.
+    pub m: usize,
+    /// Eq. 5 scaling target `U`.
+    pub u: f32,
+    /// Eq. 2 bucket width `r`.
+    pub r: f32,
+    pub seed: u64,
+}
+
+impl L2AlshParams {
+    /// Paper §4 configuration with code budget `k`.
+    pub fn recommended(k: usize) -> Self {
+        Self { k, m: 3, u: 0.83, r: 2.5, seed: 0xA15E }
+    }
+}
+
+struct Bucket {
+    key: Box<[i32]>,
+    items: Vec<ItemId>,
+}
+
+/// A built L2-ALSH index (one table).
+pub struct L2AlshIndex {
+    buckets: Vec<Bucket>,
+    hash: L2Hash,
+    transform: L2AlshTransform,
+    params: L2AlshParams,
+    n_items: usize,
+}
+
+impl L2AlshIndex {
+    pub fn build(dataset: &Dataset, params: L2AlshParams) -> Result<Self> {
+        Self::build_with_max_norm(dataset, None, params, dataset.max_norm())
+    }
+
+    /// Build over a subset (`ids = None` means all items) with an explicit
+    /// normalisation base — the hook the §5 ranged variant uses to pass
+    /// the *local* max norm.
+    pub fn build_with_max_norm(
+        dataset: &Dataset,
+        ids: Option<&[ItemId]>,
+        params: L2AlshParams,
+        max_norm: f32,
+    ) -> Result<Self> {
+        anyhow::ensure!(params.k >= 1, "need at least one hash");
+        anyhow::ensure!(max_norm > 0.0, "max norm must be positive");
+        let transform = L2AlshTransform::new(params.m, params.u);
+        let dim_in = transform.dim_out(dataset.dim());
+        let hash = L2Hash::new(dim_in, params.k, params.r, params.seed);
+
+        let owned_ids: Vec<ItemId> = match ids {
+            Some(ids) => ids.to_vec(),
+            None => (0..dataset.len() as ItemId).collect(),
+        };
+        let keys: Vec<Box<[i32]>> = crate::util::par::par_map(owned_ids.len(), |i| {
+            let id = owned_ids[i];
+            let (mut tbuf, mut hbuf) = (Vec::new(), Vec::new());
+            transform.transform_item(dataset.row(id as usize), max_norm, &mut tbuf);
+            hash.hash(&tbuf, &mut hbuf);
+            hbuf.into_boxed_slice()
+        });
+
+        let mut map: crate::util::fxhash::FxHashMap<Box<[i32]>, Vec<ItemId>> = Default::default();
+        for (key, &id) in keys.into_iter().zip(&owned_ids) {
+            map.entry(key).or_default().push(id);
+        }
+        let buckets = map
+            .into_iter()
+            .map(|(key, items)| Bucket { key, items })
+            .collect();
+        Ok(Self {
+            buckets,
+            hash,
+            transform,
+            params,
+            n_items: owned_ids.len(),
+        })
+    }
+
+    /// Query-side hash vector (Eq. 5 `Q(q)` + Eq. 2).
+    pub fn hash_query(&self, query: &[f32], out: &mut Vec<i32>) {
+        let mut t = Vec::new();
+        self.transform.transform_query(query, &mut t);
+        self.hash.hash(&t, out);
+    }
+
+    /// Group buckets by match count against `qhash`; `groups[l]` holds
+    /// bucket indexes with exactly `l` matching hash values.
+    fn group_by_matches(&self, qhash: &[i32]) -> Vec<Vec<usize>> {
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); self.params.k + 1];
+        for (bi, b) in self.buckets.iter().enumerate() {
+            groups[L2Hash::matches(&b.key, qhash)].push(bi);
+        }
+        groups
+    }
+
+    /// Probe with a precomputed query hash, best match count first.
+    pub fn probe_with_hash(&self, qhash: &[i32], budget: usize, out: &mut Vec<ItemId>) {
+        let groups = self.group_by_matches(qhash);
+        let mut remaining = budget;
+        for l in (0..groups.len()).rev() {
+            for &bi in &groups[l] {
+                if remaining == 0 {
+                    return;
+                }
+                let items = &self.buckets[bi].items;
+                let take = items.len().min(remaining);
+                out.extend_from_slice(&items[..take]);
+                remaining -= take;
+            }
+        }
+    }
+
+    pub fn params(&self) -> &L2AlshParams {
+        &self.params
+    }
+
+    /// Visit every bucket `(key, items)` — the §5 ranged variant regroups
+    /// buckets across ranges through this.
+    pub fn for_each_bucket(&self, mut f: impl FnMut(&[i32], &[ItemId])) {
+        for b in &self.buckets {
+            f(&b.key, &b.items);
+        }
+    }
+}
+
+impl MipsIndex for L2AlshIndex {
+    fn probe(&self, query: &[f32], budget: usize, out: &mut Vec<ItemId>) {
+        let mut qhash = Vec::new();
+        self.hash_query(query, &mut qhash);
+        self.probe_with_hash(&qhash, budget, out);
+    }
+
+    fn len(&self) -> usize {
+        self.n_items
+    }
+
+    fn stats(&self) -> IndexStats {
+        IndexStats {
+            n_items: self.n_items,
+            n_buckets: self.buckets.len(),
+            largest_bucket: self.buckets.iter().map(|b| b.items.len()).max().unwrap_or(0),
+            hash_bits: self.params.k,
+            n_partitions: 1,
+        }
+    }
+}
+
+impl SingleProbe for L2AlshIndex {
+    fn probe_exact(&self, query: &[f32], out: &mut Vec<ItemId>) {
+        let mut qhash = Vec::new();
+        self.hash_query(query, &mut qhash);
+        for b in &self.buckets {
+            if *b.key == *qhash.as_slice() {
+                out.extend_from_slice(&b.items);
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn probe_is_exhaustive_and_unique() {
+        let d = synthetic::mf_embeddings(300, 8, 4, 0);
+        let idx = L2AlshIndex::build(&d, L2AlshParams::recommended(16)).unwrap();
+        let q = synthetic::gaussian_queries(1, 8, 1);
+        let mut out = Vec::new();
+        idx.probe(q.row(0), usize::MAX, &mut out);
+        assert_eq!(out.len(), d.len());
+        let mut s = out.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), d.len());
+    }
+
+    #[test]
+    fn probe_order_is_nonincreasing_match_count() {
+        let d = synthetic::mf_embeddings(200, 8, 4, 1);
+        let idx = L2AlshIndex::build(&d, L2AlshParams::recommended(8)).unwrap();
+        let q = synthetic::gaussian_queries(1, 8, 2);
+        let mut qhash = Vec::new();
+        idx.hash_query(q.row(0), &mut qhash);
+        let mut out = Vec::new();
+        idx.probe_with_hash(&qhash, usize::MAX, &mut out);
+        // Recover per-item match counts.
+        let mut rank = std::collections::HashMap::new();
+        for b in &idx.buckets {
+            let l = L2Hash::matches(&b.key, &qhash);
+            for &id in &b.items {
+                rank.insert(id, l);
+            }
+        }
+        let mut prev = usize::MAX;
+        for id in out {
+            assert!(rank[&id] <= prev);
+            prev = rank[&id];
+        }
+    }
+
+    #[test]
+    fn budget_respected() {
+        let d = synthetic::mf_embeddings(100, 8, 4, 2);
+        let idx = L2AlshIndex::build(&d, L2AlshParams::recommended(8)).unwrap();
+        let q = synthetic::gaussian_queries(1, 8, 3);
+        let mut out = Vec::new();
+        idx.probe(q.row(0), 13, &mut out);
+        assert_eq!(out.len(), 13);
+    }
+
+    #[test]
+    fn subset_build_uses_given_ids() {
+        let d = synthetic::mf_embeddings(50, 8, 4, 3);
+        let ids: Vec<ItemId> = vec![5, 10, 15];
+        let idx =
+            L2AlshIndex::build_with_max_norm(&d, Some(&ids), L2AlshParams::recommended(8), 2.0)
+                .unwrap();
+        assert_eq!(idx.len(), 3);
+        let q = synthetic::gaussian_queries(1, 8, 4);
+        let mut out = Vec::new();
+        idx.probe(q.row(0), usize::MAX, &mut out);
+        out.sort_unstable();
+        assert_eq!(out, ids);
+    }
+}

@@ -1,0 +1,164 @@
+//! The paper's §3.3 similarity metric: the query-independent sorted
+//! `(U_j, l)` structure that defines a probing order over buckets from
+//! *different* sub-datasets.
+//!
+//! For a bucket in range `j` sharing `l` of `L` bits with the query, the
+//! estimated inner product is (Eq. 12, with the ε adjustment):
+//!
+//! `ŝ(j, l) = U_j * cos( π (1-ε) (1 - l/L) )`
+//!
+//! The ε > 0 term keeps `ŝ` positive down to `l ≈ L[1/2 - ε/(2(1-ε))]`,
+//! leaving "room to accommodate the randomness in hashing" — without it, a
+//! large-`U_j` bucket that drew an unlucky code (`l < L/2`) would be probed
+//! almost last. The structure has `m(L+1)` entries, is sorted once at index
+//! build, and is shared by all queries — §3.3's complexity argument.
+
+/// Estimated inner product for a bucket with `l` of `l_bits` matching bits
+/// in a range with local max norm `u_j` (Eq. 12 + ε adjustment).
+pub fn s_hat(u_j: f32, l: u32, l_bits: usize, epsilon: f32) -> f32 {
+    debug_assert!(l as usize <= l_bits);
+    let frac = 1.0 - l as f32 / l_bits as f32;
+    u_j * (std::f32::consts::PI * (1.0 - epsilon) * frac).cos()
+}
+
+/// The pre-sorted `(range, l)` probing schedule.
+#[derive(Debug, Clone)]
+pub struct MetricOrder {
+    /// `(range index j, matching-bit count l)`, best `ŝ` first.
+    entries: Vec<(u32, u32)>,
+    l_bits: usize,
+    epsilon: f32,
+}
+
+impl MetricOrder {
+    /// Build from the per-range local max norms. O(m L log(mL)) — done once
+    /// at index build (§3.3: "the sorted structure is common for all
+    /// queries").
+    pub fn build(u_maxes: &[f32], l_bits: usize, epsilon: f32) -> Self {
+        assert!(l_bits >= 1);
+        assert!((0.0..1.0).contains(&epsilon), "epsilon must be in [0,1)");
+        let mut entries: Vec<(u32, u32)> = (0..u_maxes.len() as u32)
+            .flat_map(|j| (0..=l_bits as u32).map(move |l| (j, l)))
+            .collect();
+        entries.sort_by(|&(ja, la), &(jb, lb)| {
+            let sa = s_hat(u_maxes[ja as usize], la, l_bits, epsilon);
+            let sb = s_hat(u_maxes[jb as usize], lb, l_bits, epsilon);
+            sb.total_cmp(&sa).then(ja.cmp(&jb)).then(lb.cmp(&la))
+        });
+        Self { entries, l_bits, epsilon }
+    }
+
+    /// The probing schedule, best estimated inner product first.
+    pub fn entries(&self) -> &[(u32, u32)] {
+        &self.entries
+    }
+
+    pub fn l_bits(&self) -> usize {
+        self.l_bits
+    }
+
+    pub fn epsilon(&self) -> f32 {
+        self.epsilon
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn s_hat_monotone_in_l() {
+        // More matching bits ⇒ higher estimate, for fixed U_j.
+        let mut prev = f32::MIN;
+        for l in 0..=16 {
+            let s = s_hat(1.0, l, 16, 0.1);
+            assert!(s > prev, "not monotone at l={l}");
+            prev = s;
+        }
+    }
+
+    #[test]
+    fn s_hat_scales_with_u_when_positive() {
+        // For l > L/2 the cos is positive, so bigger U_j ⇒ bigger ŝ (§3.3).
+        let (l, bits) = (14, 16);
+        assert!(s_hat(2.0, l, bits, 0.0) > s_hat(1.0, l, bits, 0.0));
+        // ... and for very small l the relation flips (cos < 0).
+        assert!(s_hat(2.0, 0, bits, 0.0) < s_hat(1.0, 0, bits, 0.0));
+    }
+
+    #[test]
+    fn epsilon_extends_the_positive_region() {
+        // Paper: with ε, cos(..) < 0 only when l < L[1/2 - ε/(2(1-ε))].
+        let bits = 64usize;
+        let eps = 0.2f32;
+        let threshold = bits as f32 * (0.5 - eps / (2.0 * (1.0 - eps)));
+        for l in 0..=bits as u32 {
+            let s = s_hat(1.0, l, bits, eps);
+            if (l as f32) > threshold + 0.5 {
+                assert!(s > 0.0, "l={l} should be positive");
+            }
+            if (l as f32) < threshold - 0.5 {
+                assert!(s < 0.0, "l={l} should be negative");
+            }
+        }
+    }
+
+    #[test]
+    fn order_is_sorted_by_s_hat() {
+        let us = [0.4f32, 1.0, 0.75];
+        let order = MetricOrder::build(&us, 16, 0.1);
+        assert_eq!(order.len(), 3 * 17);
+        let vals: Vec<f32> = order
+            .entries()
+            .iter()
+            .map(|&(j, l)| s_hat(us[j as usize], l, 16, 0.1))
+            .collect();
+        for w in vals.windows(2) {
+            assert!(w[0] >= w[1], "schedule not descending: {} < {}", w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn exact_match_in_largest_range_comes_first() {
+        let us = [0.3f32, 0.9, 0.6];
+        let order = MetricOrder::build(&us, 16, 0.1);
+        assert_eq!(order.entries()[0], (1, 16));
+    }
+
+    #[test]
+    fn interleaving_beats_per_range_exhaustion() {
+        // The whole point of Eq. 12: a strong partial match in a big-norm
+        // range outranks an exact match in a tiny-norm range.
+        let us = [0.05f32, 1.0];
+        let order = MetricOrder::build(&us, 16, 0.1);
+        let pos_exact_small = order.entries().iter().position(|&e| e == (0, 16)).unwrap();
+        let pos_partial_big = order.entries().iter().position(|&e| e == (1, 12)).unwrap();
+        assert!(
+            pos_partial_big < pos_exact_small,
+            "l=12 in U=1.0 range must precede exact match in U=0.05 range"
+        );
+    }
+
+    #[test]
+    fn single_range_degenerates_to_hamming_order() {
+        // With one range, the schedule must be l = L, L-1, ..., 0 — i.e.
+        // plain Hamming ranking (RANGE-LSH == SIMPLE-LSH when m=1).
+        let order = MetricOrder::build(&[1.0], 8, 0.1);
+        let ls: Vec<u32> = order.entries().iter().map(|&(_, l)| l).collect();
+        assert_eq!(ls, (0..=8).rev().collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic(expected = "epsilon")]
+    fn rejects_epsilon_one() {
+        MetricOrder::build(&[1.0], 8, 1.0);
+    }
+}

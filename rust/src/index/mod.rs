@@ -1,0 +1,33 @@
+//! MIPS indexes: the paper's RANGE-LSH plus every baseline it compares to.
+//!
+//! | Type | Paper section |
+//! |---|---|
+//! | [`simple::SimpleLshIndex`] | §2.3 (Neyshabur & Srebro's SIMPLE-LSH) |
+//! | [`range::RangeLshIndex`] | §3 (the contribution: Alg. 1–2 + Eq. 12) |
+//! | [`l2alsh::L2AlshIndex`] | §2.2 (Shrivastava & Li's L2-ALSH) |
+//! | [`sign_alsh::SignAlshIndex`] | §1/§2.3 lineage (Shrivastava & Li's SIGN-ALSH) |
+//! | [`ranged_l2alsh::RangedL2AlshIndex`] | §5 (partitioning applied to L2-ALSH) |
+//! | [`multitable::MultiTable`] | supplementary (multi-table single-probe) |
+//!
+//! All indexes expose the same [`MipsIndex`] probing interface: given a
+//! query and a probe budget, emit candidate item ids in the index's probing
+//! order. Recall curves (Fig. 2/3) are computed from that order by
+//! [`crate::eval`].
+
+pub mod bucket;
+pub mod l2alsh;
+pub mod metric;
+pub mod multitable;
+pub mod partition;
+pub mod persist;
+pub mod range;
+pub mod ranged_l2alsh;
+pub mod sign_alsh;
+pub mod simple;
+mod traits;
+
+pub use bucket::{BucketTable, SortScratch};
+pub use metric::MetricOrder;
+pub use partition::{partition, Partition, PartitionScheme};
+pub use persist::{load_range_index, save_range_index};
+pub use traits::{CodeProbe, IndexStats, MipsIndex, SingleProbe};

@@ -1,0 +1,218 @@
+//! Norm-based dataset partitioning (paper Algorithm 1, lines 3–4, plus the
+//! uniform-range alternative evaluated in Fig. 3(a)).
+
+use crate::data::Dataset;
+use crate::ItemId;
+
+/// How to split the 2-norm axis into ranges.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionScheme {
+    /// Algorithm 1: rank items by norm, cut at percentiles — every range
+    /// holds (almost) the same number of items. Ties broken by item id
+    /// (the "arbitrary" tie-break the paper calls for).
+    Percentile,
+    /// Fig. 3(a) alternative: split `[min_norm, max_norm]` into `m` equal
+    /// intervals; ranges may be unbalanced, empty ranges are dropped.
+    UniformRange,
+}
+
+impl std::str::FromStr for PartitionScheme {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "percentile" => Ok(Self::Percentile),
+            "uniform_range" | "uniform" => Ok(Self::UniformRange),
+            other => anyhow::bail!("unknown partition scheme {other:?} (percentile | uniform_range)"),
+        }
+    }
+}
+
+/// One norm range: its member ids and the local max norm `U_j` — the
+/// normalisation constant that replaces the global `U` (the paper's core
+/// mechanism).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Partition {
+    pub ids: Vec<ItemId>,
+    /// `U_j = max_{x in S_j} ||x||`.
+    pub u_max: f32,
+    /// Smallest norm in the range (the §5 extension's `u_{j-1}` bound).
+    pub u_min: f32,
+}
+
+/// Split `dataset` into at most `m` non-empty norm ranges, ordered by
+/// ascending norm. The last range always contains the global-max-norm item,
+/// so exactly one range has `U_j == U` (the Theorem 1 condition with
+/// `n^beta = 1`).
+pub fn partition(dataset: &Dataset, m: usize, scheme: PartitionScheme) -> Vec<Partition> {
+    assert!(m >= 1, "need at least one partition");
+    let n = dataset.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    match scheme {
+        PartitionScheme::Percentile => percentile(dataset, m),
+        PartitionScheme::UniformRange => uniform_range(dataset, m),
+    }
+}
+
+fn percentile(dataset: &Dataset, m: usize) -> Vec<Partition> {
+    let n = dataset.len();
+    // Rank by (norm, id): stable under ties, as Algorithm 1 requires.
+    let mut order: Vec<ItemId> = (0..n as ItemId).collect();
+    order.sort_unstable_by(|&a, &b| {
+        dataset
+            .norm(a as usize)
+            .total_cmp(&dataset.norm(b as usize))
+            .then(a.cmp(&b))
+    });
+    // Algorithm 1 line 4: S_j holds ranks [(j-1)n/m, jn/m).
+    let mut out = Vec::with_capacity(m);
+    for j in 0..m {
+        let lo = j * n / m;
+        let hi = (j + 1) * n / m;
+        if lo >= hi {
+            continue; // m > n leaves some ranges empty
+        }
+        let ids = order[lo..hi].to_vec();
+        out.push(make_partition(dataset, ids));
+    }
+    out
+}
+
+fn uniform_range(dataset: &Dataset, m: usize) -> Vec<Partition> {
+    let n = dataset.len();
+    let max = dataset.max_norm();
+    let min = dataset.norms().iter().copied().fold(f32::INFINITY, f32::min);
+    let span = (max - min).max(f32::MIN_POSITIVE);
+    let mut buckets: Vec<Vec<ItemId>> = vec![Vec::new(); m];
+    for i in 0..n {
+        let t = ((dataset.norm(i) - min) / span * m as f32) as usize;
+        buckets[t.min(m - 1)].push(i as ItemId);
+    }
+    buckets
+        .into_iter()
+        .filter(|b| !b.is_empty())
+        .map(|ids| make_partition(dataset, ids))
+        .collect()
+}
+
+fn make_partition(dataset: &Dataset, ids: Vec<ItemId>) -> Partition {
+    let mut u_max = 0.0f32;
+    let mut u_min = f32::INFINITY;
+    for &id in &ids {
+        let nrm = dataset.norm(id as usize);
+        u_max = u_max.max(nrm);
+        u_min = u_min.min(nrm);
+    }
+    Partition { ids, u_max, u_min }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    fn check_is_partition(parts: &[Partition], n: usize) {
+        let mut seen = vec![false; n];
+        for p in parts {
+            for &id in &p.ids {
+                assert!(!seen[id as usize], "item {id} assigned twice");
+                seen[id as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "some item unassigned");
+    }
+
+    #[test]
+    fn percentile_is_balanced_partition() {
+        let d = synthetic::longtail_sift(1000, 8, 0);
+        let parts = partition(&d, 32, PartitionScheme::Percentile);
+        assert_eq!(parts.len(), 32);
+        check_is_partition(&parts, 1000);
+        for p in &parts {
+            // 1000/32 = 31.25: sizes must be 31 or 32.
+            assert!(p.ids.len() == 31 || p.ids.len() == 32, "size {}", p.ids.len());
+        }
+    }
+
+    #[test]
+    fn ranges_are_norm_ordered() {
+        let d = synthetic::longtail_sift(500, 8, 1);
+        for scheme in [PartitionScheme::Percentile, PartitionScheme::UniformRange] {
+            let parts = partition(&d, 8, scheme);
+            for w in parts.windows(2) {
+                assert!(
+                    w[0].u_max <= w[1].u_min + 1e-6,
+                    "{scheme:?}: ranges overlap: {} vs {}",
+                    w[0].u_max,
+                    w[1].u_min
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn last_range_owns_global_max() {
+        let d = synthetic::longtail_sift(500, 8, 2);
+        for scheme in [PartitionScheme::Percentile, PartitionScheme::UniformRange] {
+            let parts = partition(&d, 16, scheme);
+            let last = parts.last().unwrap();
+            assert_eq!(last.u_max, d.max_norm(), "{scheme:?}");
+            // Exactly one range attains U (paper: "very often only the
+            // sub-dataset that contains the items with the largest 2-norms").
+            let attaining = parts.iter().filter(|p| p.u_max == d.max_norm()).count();
+            assert_eq!(attaining, 1, "{scheme:?}");
+        }
+    }
+
+    #[test]
+    fn uniform_range_covers_all_items() {
+        let d = synthetic::mf_embeddings(777, 8, 4, 3);
+        let parts = partition(&d, 32, PartitionScheme::UniformRange);
+        check_is_partition(&parts, 777);
+        assert!(parts.len() <= 32);
+    }
+
+    #[test]
+    fn handles_ties_in_norms() {
+        // All-equal norms: percentile partitioning must still split evenly
+        // ("ties are broken arbitrarily", Alg. 1).
+        let d = synthetic::uniform_norm(100, 8, 0);
+        let parts = partition(&d, 10, PartitionScheme::Percentile);
+        assert_eq!(parts.len(), 10);
+        check_is_partition(&parts, 100);
+        for p in &parts {
+            assert_eq!(p.ids.len(), 10);
+        }
+    }
+
+    #[test]
+    fn m_larger_than_n_drops_empty_ranges() {
+        let d = synthetic::longtail_sift(5, 4, 0);
+        let parts = partition(&d, 16, PartitionScheme::Percentile);
+        assert_eq!(parts.len(), 5); // one item each, empties dropped
+        check_is_partition(&parts, 5);
+    }
+
+    #[test]
+    fn single_partition_is_whole_dataset() {
+        let d = synthetic::longtail_sift(50, 4, 0);
+        let parts = partition(&d, 1, PartitionScheme::Percentile);
+        assert_eq!(parts.len(), 1);
+        assert_eq!(parts[0].ids.len(), 50);
+        assert_eq!(parts[0].u_max, d.max_norm());
+    }
+
+    #[test]
+    fn u_bounds_are_consistent() {
+        let d = synthetic::longtail_sift(200, 8, 4);
+        for p in partition(&d, 8, PartitionScheme::UniformRange) {
+            assert!(p.u_min <= p.u_max);
+            for &id in &p.ids {
+                let nrm = d.norm(id as usize);
+                assert!(nrm >= p.u_min && nrm <= p.u_max);
+            }
+        }
+    }
+}

@@ -1,0 +1,162 @@
+//! Index persistence: save a built [`RangeLshIndex`] to disk (`.rlsh`) and
+//! load it back without re-hashing the corpus — the build-once/serve-many
+//! deployment flow (`rangelsh build` → `rangelsh serve --load`).
+//!
+//! Format (all little-endian): magic, version, params, projection panel,
+//! then per range: `U_j`, `u_min`, and the `(code, id)` pairs of its
+//! bucket table. Codes are stored masked; the table is rebuilt on load
+//! (cheap — it is a single grouping pass).
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{ensure, Context};
+
+use crate::hash::Projection;
+use crate::index::partition::{Partition, PartitionScheme};
+use crate::index::range::{RangeLshIndex, RangeLshParams};
+use crate::index::MipsIndex;
+use crate::util::bytes::*;
+use crate::Result;
+
+const MAGIC: &[u8; 8] = b"RLSHIDX\x01";
+
+/// Write `index` to `path`.
+pub fn save_range_index(index: &RangeLshIndex, path: impl AsRef<Path>) -> Result<()> {
+    let path = path.as_ref();
+    let mut w = BufWriter::new(
+        File::create(path).with_context(|| format!("creating {}", path.display()))?,
+    );
+    w.write_all(MAGIC)?;
+    let p = index.params();
+    write_u32(&mut w, p.code_bits as u32)?;
+    write_u32(&mut w, p.n_partitions as u32)?;
+    write_u8(&mut w, match p.scheme {
+        PartitionScheme::Percentile => 0,
+        PartitionScheme::UniformRange => 1,
+    })?;
+    write_f32(&mut w, p.epsilon)?;
+    write_u64(&mut w, index.len() as u64)?;
+    // Projection panel.
+    let proj = index.projection();
+    write_u32(&mut w, proj.dim_in() as u32)?;
+    write_u32(&mut w, proj.width() as u32)?;
+    write_f32s(&mut w, proj.flat())?;
+    // Ranges.
+    write_u32(&mut w, index.n_ranges() as u32)?;
+    index.for_each_range(|part, table| -> Result<()> {
+        write_f32(&mut w, part.u_max)?;
+        write_f32(&mut w, part.u_min)?;
+        // (code, ids) per bucket, flattened as aligned arrays.
+        let mut codes = Vec::with_capacity(part.ids.len());
+        let mut ids = Vec::with_capacity(part.ids.len());
+        for (code, items) in table.buckets() {
+            for &id in items {
+                codes.push(code);
+                ids.push(id);
+            }
+        }
+        write_u64s(&mut w, &codes)?;
+        write_u32s(&mut w, &ids)?;
+        Ok(())
+    })?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Load an index previously written by [`save_range_index`].
+pub fn load_range_index(path: impl AsRef<Path>) -> Result<RangeLshIndex> {
+    let path = path.as_ref();
+    let mut r = BufReader::new(
+        File::open(path).with_context(|| format!("opening {}", path.display()))?,
+    );
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    ensure!(&magic == MAGIC, "{}: not a rangelsh index", path.display());
+    let code_bits = read_u32(&mut r)? as usize;
+    let n_partitions = read_u32(&mut r)? as usize;
+    let scheme = match read_u8(&mut r)? {
+        0 => PartitionScheme::Percentile,
+        1 => PartitionScheme::UniformRange,
+        other => anyhow::bail!("unknown partition scheme tag {other}"),
+    };
+    let epsilon = read_f32(&mut r)?;
+    let n_items = read_u64(&mut r)? as usize;
+    let dim_in = read_u32(&mut r)? as usize;
+    let width = read_u32(&mut r)? as usize;
+    let flat = read_f32s(&mut r)?;
+    ensure!(flat.len() == dim_in * width, "projection size mismatch");
+    let proj = Arc::new(Projection::from_flat(dim_in, width, flat));
+    let n_ranges = read_u32(&mut r)? as usize;
+    let params = RangeLshParams::new(code_bits, n_partitions)
+        .with_scheme(scheme)
+        .with_epsilon(epsilon);
+    let mut ranges = Vec::with_capacity(n_ranges);
+    for _ in 0..n_ranges {
+        let u_max = read_f32(&mut r)?;
+        let u_min = read_f32(&mut r)?;
+        let codes = read_u64s(&mut r)?;
+        let ids = read_u32s(&mut r)?;
+        ensure!(codes.len() == ids.len(), "codes/ids length mismatch");
+        ranges.push((Partition { ids, u_max, u_min }, codes));
+    }
+    RangeLshIndex::from_parts(params, proj, n_items, ranges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::hash::NativeHasher;
+    use crate::index::MipsIndex;
+    use crate::util::tmp::TempPath;
+
+    fn build_one() -> (crate::data::Dataset, RangeLshIndex) {
+        let d = synthetic::longtail_sift(600, 8, 0);
+        let h = NativeHasher::new(8, 64, 7);
+        let idx = RangeLshIndex::build(&d, &h, RangeLshParams::new(16, 8)).unwrap();
+        (d, idx)
+    }
+
+    #[test]
+    fn round_trip_preserves_probe_behaviour() {
+        let (_, idx) = build_one();
+        let tmp = TempPath::new("rlsh");
+        save_range_index(&idx, tmp.path()).unwrap();
+        let loaded = load_range_index(tmp.path()).unwrap();
+
+        assert_eq!(loaded.len(), idx.len());
+        assert_eq!(loaded.n_ranges(), idx.n_ranges());
+        assert_eq!(loaded.u_maxes(), idx.u_maxes());
+        let (sa, sb) = (idx.stats(), loaded.stats());
+        assert_eq!(sa.n_buckets, sb.n_buckets);
+        assert_eq!(sa.largest_bucket, sb.largest_bucket);
+
+        // Probe results must be identical (same codes, same schedule; the
+        // arena order is preserved by the (code, id) pair flattening).
+        let q = synthetic::gaussian_queries(5, 8, 1);
+        for qi in 0..q.len() {
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            idx.probe(q.row(qi), 100, &mut a);
+            loaded.probe(q.row(qi), 100, &mut b);
+            assert_eq!(a, b, "query {qi}");
+        }
+    }
+
+    #[test]
+    fn rejects_garbage_files() {
+        let tmp = TempPath::new("rlsh-garbage");
+        std::fs::write(tmp.path(), b"definitely not an index").unwrap();
+        assert!(load_range_index(tmp.path()).is_err());
+    }
+
+    #[test]
+    fn missing_file_reports_path() {
+        let err = load_range_index("/no/such/index.rlsh")
+            .err()
+            .expect("loading a missing file must fail");
+        assert!(format!("{err:#}").contains("/no/such/index.rlsh"));
+    }
+}

@@ -1,0 +1,454 @@
+//! NORM-RANGING LSH (paper §3, Algorithms 1–2) — the contribution.
+//!
+//! Index building (Alg. 1): rank items by 2-norm, cut into `m` ranges,
+//! normalise each range by its **local** max norm `U_j`, and build an
+//! independent SIMPLE-LSH table per range. Because `U_j ≪ U` for most
+//! ranges on long-tailed data, the transformed inner products stay large
+//! and the `sqrt(1-||x||²)` coordinate stays small — restoring both the
+//! theoretical ρ (Theorem 1) and bucket balance (§3.2).
+//!
+//! Query processing (Alg. 2 + §3.3): hash the query once (the Eq. 8 query
+//! transform does not depend on `U_j`, so one code serves all ranges),
+//! group each range's buckets by matching-bit count `l`, then walk the
+//! pre-sorted `(U_j, l)` schedule of [`MetricOrder`] — buckets from
+//! different ranges interleave by estimated inner product `ŝ` (Eq. 12),
+//! not raw Hamming distance.
+//!
+//! Code-length accounting: with `m` ranges, `ceil(log2 m)` bits of the
+//! total budget address the range (paper §4), so each range's table uses
+//! `L - ceil(log2 m)` hash bits. At equal total code length the comparison
+//! against SIMPLE-LSH is fair.
+
+use std::sync::Arc;
+
+use crate::data::Dataset;
+use crate::hash::codes::partition_id_bits;
+use crate::hash::{ItemHasher, NativeHasher, Projection};
+use crate::index::partition::{partition, Partition, PartitionScheme};
+use crate::index::{BucketTable, CodeProbe, IndexStats, MetricOrder, MipsIndex, SingleProbe};
+use crate::{ItemId, Result};
+
+/// Parameters for [`RangeLshIndex`].
+#[derive(Debug, Clone, Copy)]
+pub struct RangeLshParams {
+    /// Total code budget L in bits, *including* the range-id bits.
+    pub code_bits: usize,
+    /// Number of norm ranges `m`.
+    pub n_partitions: usize,
+    /// Partitioning scheme (Alg. 1 percentile, or Fig. 3(a) uniform).
+    pub scheme: PartitionScheme,
+    /// Eq. 12 adjustment ε ∈ [0, 1): probing-order slack for hash noise.
+    pub epsilon: f32,
+}
+
+impl RangeLshParams {
+    /// Paper defaults: percentile partitioning, ε = 0.1.
+    pub fn new(code_bits: usize, n_partitions: usize) -> Self {
+        Self {
+            code_bits,
+            n_partitions,
+            scheme: PartitionScheme::Percentile,
+            epsilon: 0.1,
+        }
+    }
+
+    pub fn with_scheme(mut self, scheme: PartitionScheme) -> Self {
+        self.scheme = scheme;
+        self
+    }
+
+    pub fn with_epsilon(mut self, epsilon: f32) -> Self {
+        self.epsilon = epsilon;
+        self
+    }
+
+    /// Hash bits left after paying for the range id:
+    /// `L_hash = code_bits - ceil(log2 m)` (e.g. 16-bit budget, 32 ranges
+    /// ⇒ 11 hash bits — the paper's §4 example).
+    pub fn hash_bits(&self) -> usize {
+        self.code_bits.saturating_sub(partition_id_bits(self.n_partitions))
+    }
+}
+
+/// One norm range's index: ids, local max norm, bucket table.
+struct SubIndex {
+    part: Partition,
+    table: BucketTable,
+}
+
+/// A built NORM-RANGING LSH index.
+pub struct RangeLshIndex {
+    subs: Vec<SubIndex>,
+    order: MetricOrder,
+    proj: Arc<Projection>,
+    params: RangeLshParams,
+    n_items: usize,
+}
+
+impl RangeLshIndex {
+    /// Build per Algorithm 1. `hasher` does the bulk hashing (native or
+    /// PJRT); each range is hashed with its own `U_j`.
+    pub fn build(
+        dataset: &Dataset,
+        hasher: &dyn ItemHasher,
+        params: RangeLshParams,
+    ) -> Result<Self> {
+        anyhow::ensure!(params.n_partitions >= 1, "need at least one partition");
+        let hash_bits = params.hash_bits();
+        anyhow::ensure!(
+            hash_bits >= 1,
+            "code budget {} too small for {} partitions ({} id bits)",
+            params.code_bits,
+            params.n_partitions,
+            partition_id_bits(params.n_partitions)
+        );
+        anyhow::ensure!(
+            hash_bits <= hasher.width(),
+            "hash bits {hash_bits} exceed hasher width {}",
+            hasher.width()
+        );
+        anyhow::ensure!(
+            hasher.dim() == dataset.dim(),
+            "hasher dim {} != dataset dim {}",
+            hasher.dim(),
+            dataset.dim()
+        );
+        anyhow::ensure!(dataset.max_norm() > 0.0, "dataset max norm must be positive");
+
+        let parts = partition(dataset, params.n_partitions, params.scheme);
+        let mut subs = Vec::with_capacity(parts.len());
+        for part in parts {
+            // Alg. 1 lines 6–7: normalise S_j by U_j, SIMPLE-LSH-index it.
+            let rows = dataset.gather(&part.ids);
+            let codes = hasher.hash_items(rows.flat(), part.u_max)?;
+            let table = BucketTable::build(&codes, Some(&part.ids), hash_bits);
+            subs.push(SubIndex { part, table });
+        }
+        let u_maxes: Vec<f32> = subs.iter().map(|s| s.part.u_max).collect();
+        let order = MetricOrder::build(&u_maxes, hash_bits, params.epsilon);
+        Ok(Self {
+            subs,
+            order,
+            proj: hasher.projection().clone(),
+            params,
+            n_items: dataset.len(),
+        })
+    }
+
+    pub fn hash_query(&self, query: &[f32]) -> u64 {
+        NativeHasher::with_projection(self.proj.clone())
+            .hash_queries(query)
+            .expect("query row length matches index dim")[0]
+    }
+
+    pub fn params(&self) -> &RangeLshParams {
+        &self.params
+    }
+
+    /// Number of non-empty ranges actually built.
+    pub fn n_ranges(&self) -> usize {
+        self.subs.len()
+    }
+
+    /// Local max norms `U_j`, ascending range order (Fig. 1(d) material).
+    pub fn u_maxes(&self) -> Vec<f32> {
+        self.subs.iter().map(|s| s.part.u_max).collect()
+    }
+
+    pub fn projection(&self) -> &Arc<Projection> {
+        &self.proj
+    }
+
+    /// The §3.3 probing schedule (exposed for tests/diagnostics).
+    pub fn metric_order(&self) -> &MetricOrder {
+        &self.order
+    }
+
+    /// Visit every range's partition + bucket table (index persistence).
+    pub fn for_each_range<E>(
+        &self,
+        mut f: impl FnMut(&Partition, &BucketTable) -> std::result::Result<(), E>,
+    ) -> std::result::Result<(), E> {
+        for sub in &self.subs {
+            f(&sub.part, &sub.table)?;
+        }
+        Ok(())
+    }
+
+    /// Reassemble an index from persisted parts: params, shared panel,
+    /// and per range its partition plus the *masked* per-item codes
+    /// aligned with `partition.ids`. Rebuilds tables and the metric
+    /// schedule; used by [`crate::index::persist::load_range_index`].
+    pub fn from_parts(
+        params: RangeLshParams,
+        proj: Arc<Projection>,
+        n_items: usize,
+        ranges: Vec<(Partition, Vec<u64>)>,
+    ) -> Result<Self> {
+        let hash_bits = params.hash_bits();
+        anyhow::ensure!(hash_bits >= 1, "bad params: zero hash bits");
+        let total: usize = ranges.iter().map(|(p, _)| p.ids.len()).sum();
+        anyhow::ensure!(total == n_items, "ranges hold {total} items, expected {n_items}");
+        let mut subs = Vec::with_capacity(ranges.len());
+        for (part, codes) in ranges {
+            anyhow::ensure!(codes.len() == part.ids.len(), "codes/ids mismatch");
+            let table = BucketTable::build(&codes, Some(&part.ids), hash_bits);
+            subs.push(SubIndex { part, table });
+        }
+        let u_maxes: Vec<f32> = subs.iter().map(|s| s.part.u_max).collect();
+        let order = MetricOrder::build(&u_maxes, hash_bits, params.epsilon);
+        Ok(Self { subs, order, proj, params, n_items })
+    }
+}
+
+impl MipsIndex for RangeLshIndex {
+    fn probe(&self, query: &[f32], budget: usize, out: &mut Vec<ItemId>) {
+        self.probe_with_code(self.hash_query(query), budget, out);
+    }
+
+    fn len(&self) -> usize {
+        self.n_items
+    }
+
+    fn stats(&self) -> IndexStats {
+        IndexStats {
+            n_items: self.n_items,
+            n_buckets: self.subs.iter().map(|s| s.table.n_buckets()).sum(),
+            largest_bucket: self
+                .subs
+                .iter()
+                .map(|s| s.table.largest_bucket())
+                .max()
+                .unwrap_or(0),
+            hash_bits: self.params.hash_bits(),
+            n_partitions: self.subs.len(),
+        }
+    }
+}
+
+thread_local! {
+    /// Reusable per-thread probe scratch, one sort buffer per range —
+    /// probing makes no allocations once a thread is warm (§Perf).
+    static SCRATCH: std::cell::RefCell<Vec<crate::index::bucket::SortScratch>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+impl CodeProbe for RangeLshIndex {
+    fn probe_with_code(&self, qcode: u64, budget: usize, out: &mut Vec<ItemId>) {
+        SCRATCH.with(|scratch| {
+            let per_sub = &mut *scratch.borrow_mut();
+            if per_sub.len() < self.subs.len() {
+                per_sub.resize_with(self.subs.len(), Default::default);
+            }
+            // Per-range counting sort: one O(total buckets) pass (§3.3).
+            for (sub, s) in self.subs.iter().zip(per_sub.iter_mut()) {
+                sub.table.counting_sort_by_matches(qcode, s);
+            }
+            // Walk the pre-sorted (U_j, l) schedule.
+            let mut remaining = budget;
+            for &(j, l) in self.order.entries() {
+                let sub = &self.subs[j as usize];
+                let s = &per_sub[j as usize];
+                let (lo, hi) = (s.levels[l as usize] as usize, s.levels[l as usize + 1] as usize);
+                for &b in &s.order[lo..hi] {
+                    let bucket = sub.table.bucket_items(b as usize);
+                    if remaining == 0 {
+                        return;
+                    }
+                    let take = bucket.len().min(remaining);
+                    out.extend_from_slice(&bucket[..take]);
+                    remaining -= take;
+                }
+            }
+        })
+    }
+}
+
+impl SingleProbe for RangeLshIndex {
+    /// Single-probe protocol: visit the query-code bucket in every range
+    /// (the multi-table supplementary experiment).
+    fn probe_exact(&self, query: &[f32], out: &mut Vec<ItemId>) {
+        let qcode = self.hash_query(query);
+        for sub in &self.subs {
+            if let Some(items) = sub.table.exact(qcode) {
+                out.extend_from_slice(items);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::index::simple::{SimpleLshIndex, SimpleLshParams};
+
+    fn build(
+        d: &Dataset,
+        bits: usize,
+        m: usize,
+    ) -> RangeLshIndex {
+        let h = NativeHasher::new(d.dim(), 64, 99);
+        RangeLshIndex::build(d, &h, RangeLshParams::new(bits, m)).unwrap()
+    }
+
+    #[test]
+    fn hash_bit_accounting_matches_paper_examples() {
+        // §4: 16-bit code + 32 ranges ⇒ 5 id bits + 11 hash bits.
+        assert_eq!(RangeLshParams::new(16, 32).hash_bits(), 11);
+        assert_eq!(RangeLshParams::new(32, 64).hash_bits(), 26);
+        assert_eq!(RangeLshParams::new(64, 128).hash_bits(), 57);
+        assert_eq!(RangeLshParams::new(16, 1).hash_bits(), 16);
+    }
+
+    #[test]
+    fn probe_covers_everything_and_is_unique() {
+        let d = synthetic::longtail_sift(500, 8, 0);
+        let idx = build(&d, 16, 8);
+        let q = synthetic::gaussian_queries(1, 8, 3);
+        let mut out = Vec::new();
+        idx.probe(q.row(0), usize::MAX, &mut out);
+        assert_eq!(out.len(), d.len());
+        let mut sorted = out.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), d.len());
+    }
+
+    #[test]
+    fn budget_is_respected() {
+        let d = synthetic::longtail_sift(500, 8, 1);
+        let idx = build(&d, 16, 8);
+        let q = synthetic::gaussian_queries(1, 8, 4);
+        let mut out = Vec::new();
+        idx.probe(q.row(0), 37, &mut out);
+        assert_eq!(out.len(), 37);
+    }
+
+    #[test]
+    fn probe_order_follows_metric_schedule() {
+        let d = synthetic::longtail_sift(400, 8, 2);
+        let idx = build(&d, 16, 4);
+        let q = synthetic::gaussian_queries(1, 8, 5);
+        let qcode = idx.hash_query(q.row(0));
+        let mut out = Vec::new();
+        idx.probe_with_code(qcode, usize::MAX, &mut out);
+        // Reconstruct each emitted item's (j, l) and check the schedule
+        // positions are non-decreasing.
+        let hash_bits = idx.params().hash_bits();
+        let mask = crate::hash::mask_bits(hash_bits);
+        let h = NativeHasher::with_projection(idx.projection().clone());
+        let mut schedule_pos = std::collections::HashMap::new();
+        for (pos, &(j, l)) in idx.metric_order().entries().iter().enumerate() {
+            schedule_pos.insert((j, l), pos);
+        }
+        // item -> (j, l)
+        let mut item_jl = std::collections::HashMap::new();
+        for (j, u_j) in idx.u_maxes().iter().enumerate() {
+            // recompute codes for the items of range j
+            for (code, ids) in idx.subs[j].table.buckets() {
+                let _ = code;
+                for &id in ids {
+                    let codes = h.hash_items(d.row(id as usize), *u_j).unwrap();
+                    let l = crate::hash::matches(codes[0] & mask, qcode & mask, hash_bits);
+                    item_jl.insert(id, (j as u32, l));
+                }
+            }
+        }
+        let mut prev = 0usize;
+        for id in out {
+            let pos = schedule_pos[&item_jl[&id]];
+            assert!(pos >= prev, "probe order violates metric schedule");
+            prev = pos;
+        }
+    }
+
+    #[test]
+    fn m1_percentile_equals_simple_lsh_order_grouping() {
+        // With one range, RANGE-LSH degenerates to SIMPLE-LSH: same U, same
+        // panel ⇒ identical buckets and Hamming probing order grouping.
+        let d = synthetic::longtail_sift(300, 8, 3);
+        let h = NativeHasher::new(8, 64, 42);
+        let r = RangeLshIndex::build(&d, &h, RangeLshParams::new(16, 1)).unwrap();
+        let s = SimpleLshIndex::build(&d, &h, SimpleLshParams::new(16)).unwrap();
+        let q = synthetic::gaussian_queries(1, 8, 6);
+        let (mut ro, mut so) = (Vec::new(), Vec::new());
+        r.probe(q.row(0), usize::MAX, &mut ro);
+        s.probe(q.row(0), usize::MAX, &mut so);
+        assert_eq!(ro.len(), so.len());
+        // Same multiset; order may differ within equal-l groups only.
+        let (mut rs, mut ss) = (ro.clone(), so.clone());
+        rs.sort_unstable();
+        ss.sort_unstable();
+        assert_eq!(rs, ss);
+        let rstats = r.stats();
+        let sstats = s.stats();
+        assert_eq!(rstats.n_buckets, sstats.n_buckets);
+        assert_eq!(rstats.largest_bucket, sstats.largest_bucket);
+    }
+
+    #[test]
+    fn bucket_balance_beats_simple_on_longtail_data() {
+        // The §3.2 claim: RANGE-LSH spreads items over far more buckets.
+        let d = synthetic::longtail_sift(5000, 16, 4);
+        let h = NativeHasher::new(16, 64, 7);
+        let r = RangeLshIndex::build(&d, &h, RangeLshParams::new(16, 32)).unwrap();
+        let s = SimpleLshIndex::build(&d, &h, SimpleLshParams::new(16)).unwrap();
+        let (rs, ss) = (r.stats(), s.stats());
+        assert!(
+            rs.largest_bucket * 2 < ss.largest_bucket,
+            "RANGE largest {} should be well under SIMPLE largest {}",
+            rs.largest_bucket,
+            ss.largest_bucket
+        );
+        assert!(rs.n_buckets > ss.n_buckets);
+    }
+
+    #[test]
+    fn rejects_budget_smaller_than_id_bits() {
+        let d = synthetic::longtail_sift(100, 8, 0);
+        let h = NativeHasher::new(8, 64, 0);
+        // 128 partitions need 7 id bits; a 7-bit budget leaves 0 hash bits.
+        assert!(RangeLshIndex::build(&d, &h, RangeLshParams::new(7, 128)).is_err());
+    }
+
+    #[test]
+    fn stats_count_partitions_and_buckets() {
+        let d = synthetic::longtail_sift(1000, 8, 5);
+        let idx = build(&d, 16, 16);
+        let s = idx.stats();
+        assert_eq!(s.n_partitions, 16);
+        assert_eq!(s.n_items, 1000);
+        assert_eq!(s.hash_bits, 12);
+        assert!(s.n_buckets >= 16);
+    }
+
+    #[test]
+    fn uniform_scheme_builds_and_probes() {
+        let d = synthetic::longtail_sift(800, 8, 6);
+        let h = NativeHasher::new(8, 64, 1);
+        let idx = RangeLshIndex::build(
+            &d,
+            &h,
+            RangeLshParams::new(16, 16).with_scheme(PartitionScheme::UniformRange),
+        )
+        .unwrap();
+        let q = synthetic::gaussian_queries(1, 8, 7);
+        let mut out = Vec::new();
+        idx.probe(q.row(0), usize::MAX, &mut out);
+        assert_eq!(out.len(), d.len());
+    }
+
+    #[test]
+    fn probe_exact_hits_every_range_at_most_once() {
+        let d = synthetic::longtail_sift(500, 8, 8);
+        let idx = build(&d, 16, 8);
+        let q = synthetic::gaussian_queries(1, 8, 9);
+        let mut out = Vec::new();
+        idx.probe_exact(q.row(0), &mut out);
+        let mut sorted = out.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), out.len(), "duplicates from single-probe");
+    }
+}

@@ -1,0 +1,194 @@
+//! SIGN-ALSH index (Shrivastava & Li 2015) — the second asymmetric
+//! baseline in the paper's lineage (§1/§2.3): Eq.-4 sign random projection
+//! over the SIGN-ALSH transform, Hamming-ranked multi-probing, same total
+//! code budget as the other algorithms.
+
+use crate::data::Dataset;
+use crate::hash::codes::mask_bits;
+use crate::hash::Projection;
+use crate::index::{BucketTable, IndexStats, MipsIndex, SingleProbe, SortScratch};
+use crate::transform::sign_alsh::SignAlshTransform;
+use crate::util::par;
+use crate::{ItemId, Result};
+
+/// Parameters for [`SignAlshIndex`]. Authors' recommendation: `m=2, U=0.75`.
+#[derive(Debug, Clone, Copy)]
+pub struct SignAlshParams {
+    pub code_bits: usize,
+    pub m: usize,
+    pub u: f32,
+    pub seed: u64,
+}
+
+impl SignAlshParams {
+    pub fn recommended(code_bits: usize) -> Self {
+        Self { code_bits, m: 2, u: 0.75, seed: 0x516A }
+    }
+}
+
+/// A built SIGN-ALSH index (single table, Hamming-ranked probing).
+pub struct SignAlshIndex {
+    table: BucketTable,
+    proj: Projection,
+    transform: SignAlshTransform,
+    params: SignAlshParams,
+    n_items: usize,
+}
+
+impl SignAlshIndex {
+    pub fn build(dataset: &Dataset, params: SignAlshParams) -> Result<Self> {
+        anyhow::ensure!(
+            (1..=64).contains(&params.code_bits),
+            "code_bits must be in 1..=64"
+        );
+        let transform = SignAlshTransform::new(params.m, params.u);
+        let dim_in = transform.dim_out(dataset.dim());
+        let proj = Projection::gaussian(dim_in, params.code_bits, params.seed);
+        let max_norm = dataset.max_norm();
+        anyhow::ensure!(max_norm > 0.0, "dataset max norm must be positive");
+
+        let codes: Vec<u64> = par::par_map(dataset.len(), |i| {
+            let mut buf = Vec::with_capacity(dim_in);
+            transform.transform_item(dataset.row(i), max_norm, &mut buf);
+            sign_project(&proj, &buf)
+        });
+        let table = BucketTable::build(&codes, None, params.code_bits);
+        Ok(Self {
+            table,
+            proj,
+            transform,
+            params,
+            n_items: dataset.len(),
+        })
+    }
+
+    pub fn hash_query(&self, query: &[f32]) -> u64 {
+        let mut buf = Vec::with_capacity(self.proj.dim_in());
+        self.transform.transform_query(query, &mut buf);
+        sign_project(&self.proj, &buf)
+    }
+
+    pub fn params(&self) -> &SignAlshParams {
+        &self.params
+    }
+}
+
+/// Sign-project a transformed row against the panel (strictly-positive
+/// convention, same as the SIMPLE-LSH paths).
+fn sign_project(proj: &Projection, xt: &[f32]) -> u64 {
+    debug_assert_eq!(xt.len(), proj.dim_in());
+    let width = proj.width();
+    let mut acc = [0.0f32; 64];
+    let acc = &mut acc[..width];
+    for (k, &v) in xt.iter().enumerate() {
+        for (a, &w) in acc.iter_mut().zip(proj.row(k)) {
+            *a += v * w;
+        }
+    }
+    let mut code = 0u64;
+    for (j, &a) in acc.iter().enumerate() {
+        code |= ((a > 0.0) as u64) << j;
+    }
+    code & mask_bits(width)
+}
+
+impl MipsIndex for SignAlshIndex {
+    fn probe(&self, query: &[f32], budget: usize, out: &mut Vec<ItemId>) {
+        let qcode = self.hash_query(query);
+        let mut scratch = SortScratch::default();
+        self.table.counting_sort_by_matches(qcode, &mut scratch);
+        let mut remaining = budget;
+        for l in (0..=self.params.code_bits).rev() {
+            let (lo, hi) = (scratch.levels[l] as usize, scratch.levels[l + 1] as usize);
+            for &b in &scratch.order[lo..hi] {
+                let bucket = self.table.bucket_items(b as usize);
+                if remaining == 0 {
+                    return;
+                }
+                let take = bucket.len().min(remaining);
+                out.extend_from_slice(&bucket[..take]);
+                remaining -= take;
+            }
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.n_items
+    }
+
+    fn stats(&self) -> IndexStats {
+        IndexStats {
+            n_items: self.n_items,
+            n_buckets: self.table.n_buckets(),
+            largest_bucket: self.table.largest_bucket(),
+            hash_bits: self.params.code_bits,
+            n_partitions: 1,
+        }
+    }
+}
+
+impl SingleProbe for SignAlshIndex {
+    fn probe_exact(&self, query: &[f32], out: &mut Vec<ItemId>) {
+        if let Some(items) = self.table.exact(self.hash_query(query)) {
+            out.extend_from_slice(items);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn probe_is_exhaustive_and_unique() {
+        let d = synthetic::longtail_sift(400, 8, 0);
+        let idx = SignAlshIndex::build(&d, SignAlshParams::recommended(16)).unwrap();
+        let q = synthetic::gaussian_queries(1, 8, 1);
+        let mut out = Vec::new();
+        idx.probe(q.row(0), usize::MAX, &mut out);
+        assert_eq!(out.len(), d.len());
+        let mut s = out.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), d.len());
+    }
+
+    #[test]
+    fn budget_respected() {
+        let d = synthetic::longtail_sift(200, 8, 1);
+        let idx = SignAlshIndex::build(&d, SignAlshParams::recommended(16)).unwrap();
+        let q = synthetic::gaussian_queries(1, 8, 2);
+        let mut out = Vec::new();
+        idx.probe(q.row(0), 17, &mut out);
+        assert_eq!(out.len(), 17);
+    }
+
+    #[test]
+    fn better_than_random_at_finding_top_items() {
+        // Probing 10% should capture the top-1 far more often than 10%.
+        let d = synthetic::mf_embeddings(2000, 16, 8, 2);
+        let q = synthetic::mf_user_queries(50, 16, 8, 2);
+        let gt = crate::eval::exact_topk(&d, &q, 1);
+        let idx = SignAlshIndex::build(&d, SignAlshParams::recommended(32)).unwrap();
+        let mut hits = 0;
+        for qi in 0..q.len() {
+            let mut out = Vec::new();
+            idx.probe(q.row(qi), 200, &mut out);
+            if out.contains(&gt[qi][0]) {
+                hits += 1;
+            }
+        }
+        assert!(hits > 20, "top-1 found in only {hits}/50 probes of 10%");
+    }
+
+    #[test]
+    fn stats_are_consistent() {
+        let d = synthetic::longtail_sift(300, 8, 3);
+        let idx = SignAlshIndex::build(&d, SignAlshParams::recommended(16)).unwrap();
+        let s = idx.stats();
+        assert_eq!(s.n_items, 300);
+        assert!(s.n_buckets >= 1 && s.n_buckets <= 300);
+        assert_eq!(s.n_partitions, 1);
+    }
+}

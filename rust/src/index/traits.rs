@@ -1,0 +1,62 @@
+//! Shared index interfaces.
+
+use crate::ItemId;
+
+/// A built MIPS index that can emit candidates in probing order.
+pub trait MipsIndex: Send + Sync {
+    /// Append up to `budget` candidate item ids to `out`, in this index's
+    /// probing order (best bucket first). Fewer than `budget` ids are
+    /// appended only when the index is exhausted. Ids are unique per call.
+    fn probe(&self, query: &[f32], budget: usize, out: &mut Vec<ItemId>);
+
+    /// Number of indexed items.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Structural statistics (bucket balance — paper §3.1/§3.2 tables).
+    fn stats(&self) -> IndexStats;
+}
+
+/// Indexes whose query hashing is a packed sign-RP code (SIMPLE / RANGE).
+///
+/// This is the hook the serving engine uses to batch query hashing through
+/// the AOT Pallas kernel: hash a whole query batch on PJRT, then call
+/// [`CodeProbe::probe_with_code`] per query — Python-free, matmul-batched.
+pub trait CodeProbe: MipsIndex {
+    /// Probe with a pre-computed (unmasked, full-width) query code.
+    fn probe_with_code(&self, qcode: u64, budget: usize, out: &mut Vec<ItemId>);
+}
+
+/// Indexes supporting the supplementary multi-table single-probe protocol:
+/// visit only the bucket(s) whose code equals the query's code exactly.
+pub trait SingleProbe: Send + Sync {
+    fn probe_exact(&self, query: &[f32], out: &mut Vec<ItemId>);
+}
+
+/// Bucket-balance statistics. The paper quotes these for ImageNet at 32
+/// bits: SIMPLE-LSH ≈ 60K buckets with a ≈ 200K-item largest bucket;
+/// RANGE-LSH ≈ 2M buckets, mostly singletons.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IndexStats {
+    pub n_items: usize,
+    pub n_buckets: usize,
+    pub largest_bucket: usize,
+    /// Effective hash bits per code (excludes partition-id bits).
+    pub hash_bits: usize,
+    /// Number of norm ranges (1 for unpartitioned indexes).
+    pub n_partitions: usize,
+}
+
+impl IndexStats {
+    /// Mean bucket occupancy — 1.0 is ideal balance.
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.n_buckets == 0 {
+            0.0
+        } else {
+            self.n_items as f64 / self.n_buckets as f64
+        }
+    }
+}

@@ -1,0 +1,53 @@
+//! # rangelsh — Norm-Ranging LSH for Maximum Inner Product Search
+//!
+//! A full-system reproduction of *Norm-Ranging LSH for Maximum Inner Product
+//! Search* (Yan, Li, Dai, Chen, Cheng — NeurIPS 2018), built as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! - **Layer 3 (this crate)** — the paper's coordination contribution: the
+//!   norm-ranging partitioner ([`index::partition`]), per-range SIMPLE-LSH
+//!   indexes ranked across ranges by the Eq. 12 similarity metric
+//!   ([`index::range`]), baselines (SIMPLE-LSH, L2-ALSH, ranged L2-ALSH,
+//!   multi-table), the evaluation harness that regenerates every figure and
+//!   table in the paper, and an async serving engine ([`coordinator`]).
+//! - **Layer 2/1 (python/, build-time only)** — the JAX hash/score graphs and
+//!   the Pallas sign-hash kernel, AOT-lowered to HLO text and executed from
+//!   Rust via the PJRT CPU client ([`runtime`]). Python never runs on the
+//!   request path.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use rangelsh::data::synthetic;
+//! use rangelsh::hash::NativeHasher;
+//! use rangelsh::index::{range::RangeLshIndex, range::RangeLshParams, MipsIndex};
+//!
+//! let dataset = synthetic::longtail_sift(10_000, 64, 42);
+//! let queries = synthetic::gaussian_queries(100, 64, 7);
+//! let hasher = NativeHasher::new(64, 64, 1);
+//! let index = RangeLshIndex::build(&dataset, &hasher, RangeLshParams::new(16, 16)).unwrap();
+//! let mut out = Vec::new();
+//! index.probe(queries.row(0), 100, &mut out);
+//! println!("first 100 candidates in probing order: {out:?}");
+//! ```
+//!
+//! See `examples/` for end-to-end drivers and `benches/` for the
+//! paper-figure regeneration harnesses.
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod hash;
+pub mod index;
+pub mod runtime;
+pub mod theory;
+pub mod transform;
+pub mod util;
+
+/// Item identifier within a dataset (row index).
+pub type ItemId = u32;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,412 @@
+//! `rangelsh` — the RANGE-LSH coordinator CLI.
+//!
+//! Subcommands:
+//! - `gen-data`   generate a synthetic dataset to a `.rdat` file
+//! - `eval`       run a probed-items/recall experiment from a TOML config
+//! - `theory`     print ρ curves and the Theorem 1 report for a config
+//! - `serve`      build an index and drive a batched serving workload
+//! - `artifacts`  check the AOT artifact directory and runtime
+//!
+//! The argument parser is in-tree (offline build, no clap): flags are
+//! `--key value` pairs (plus bare `--flag` booleans) after the subcommand.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Context};
+
+use rangelsh::config::{Config, DatasetKind, IndexAlgo};
+use rangelsh::coordinator::{BatchPolicy, SearchEngine};
+use rangelsh::data::{load_dataset, save_dataset, synthetic};
+use rangelsh::eval::harness::{format_probe_table, ground_truth, run_curve, CurveSpec};
+use rangelsh::eval::recall::geometric_checkpoints;
+use rangelsh::hash::{ItemHasher, NativeHasher, Projection};
+use rangelsh::index::range::{RangeLshIndex, RangeLshParams};
+use rangelsh::index::simple::{SimpleLshIndex, SimpleLshParams};
+use rangelsh::index::{load_range_index, partition, save_range_index, CodeProbe, MipsIndex};
+use rangelsh::runtime::{PjrtHasher, RuntimeHandle, DEFAULT_ARTIFACT_DIR};
+use rangelsh::theory::{g_rho, theorem1_check};
+use rangelsh::util::json::Json;
+use rangelsh::Result;
+
+const USAGE: &str = "\
+rangelsh — Norm-Ranging LSH for MIPS (NeurIPS 2018) full-system reproduction
+
+USAGE: rangelsh <SUBCOMMAND> [--key value ...]
+
+SUBCOMMANDS:
+  gen-data   --kind <mf_embeddings|longtail_sift|uniform_norm> --n N --dim D
+             [--seed S] --out FILE.rdat
+  build      --config FILE.toml --out-dir DIR   (writes items.rdat + index.rlsh)
+  eval       --config FILE.toml [--compare] [--json-out FILE.json]
+  theory     --config FILE.toml [--c 0.7]
+  serve      --config FILE.toml [--load DIR] [--n-queries 2000] [--native]
+             [--artifacts DIR] [--clients 16]
+  artifacts  [--dir DIR]
+";
+
+/// Tiny flag parser: `--key value` pairs and bare boolean `--flag`s.
+struct Args {
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String], boolean_flags: &[&str]) -> Result<Self> {
+        let mut flags = BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let arg = &argv[i];
+            let key = arg
+                .strip_prefix("--")
+                .with_context(|| format!("expected --flag, got {arg:?}"))?;
+            if boolean_flags.contains(&key) {
+                flags.insert(key.to_string(), "true".to_string());
+                i += 1;
+            } else {
+                let val = argv
+                    .get(i + 1)
+                    .with_context(|| format!("--{key} needs a value"))?;
+                flags.insert(key.to_string(), val.clone());
+                i += 2;
+            }
+        }
+        Ok(Self { flags })
+    }
+
+    fn req(&self, key: &str) -> Result<&str> {
+        self.flags
+            .get(key)
+            .map(String::as_str)
+            .with_context(|| format!("missing required flag --{key}"))
+    }
+
+    fn opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    fn opt_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{key} {v:?}: {e}")),
+        }
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "gen-data" => gen_data(&Args::parse(rest, &[])?),
+        "build" => build(&Args::parse(rest, &[])?),
+        "eval" => eval(&Args::parse(rest, &["compare"])?),
+        "theory" => theory(&Args::parse(rest, &[])?),
+        "serve" => serve(&Args::parse(rest, &["native"])?),
+        "artifacts" => artifacts_check(&Args::parse(rest, &[])?),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?}\n{USAGE}"),
+    }
+}
+
+fn gen_data(args: &Args) -> Result<()> {
+    let kind: DatasetKind = args.req("kind")?.parse()?;
+    let n: usize = args.req("n")?.parse().context("--n")?;
+    let dim: usize = args.req("dim")?.parse().context("--dim")?;
+    let seed: u64 = args.opt_parse("seed", 42)?;
+    let out = PathBuf::from(args.req("out")?);
+    let d = match kind {
+        DatasetKind::MfEmbeddings => synthetic::mf_embeddings(n, dim, 32.min(dim), seed),
+        DatasetKind::LongtailSift => synthetic::longtail_sift(n, dim, seed),
+        DatasetKind::UniformNorm => synthetic::uniform_norm(n, dim, seed),
+    };
+    let stats = d.norm_stats();
+    save_dataset(&d, &out)?;
+    println!(
+        "wrote {} items (dim {}) to {} — norm median {:.3}, max {:.3}, tail ratio {:.2}",
+        d.len(),
+        dim,
+        out.display(),
+        stats.median,
+        stats.max,
+        stats.tail_ratio()
+    );
+    Ok(())
+}
+
+fn build(args: &Args) -> Result<()> {
+    let cfg = Config::from_path(args.req("config")?)?;
+    let out_dir = PathBuf::from(args.req("out-dir")?);
+    std::fs::create_dir_all(&out_dir)
+        .with_context(|| format!("creating {}", out_dir.display()))?;
+    let items = cfg.dataset.build_items();
+    let proj = Arc::new(Projection::gaussian(items.dim() + 1, 64, cfg.index.seed));
+    let hasher = NativeHasher::with_projection(proj);
+    let t0 = std::time::Instant::now();
+    let index = RangeLshIndex::build(
+        &items,
+        &hasher,
+        RangeLshParams::new(cfg.index.code_bits, cfg.index.n_partitions)
+            .with_scheme(cfg.index.scheme)
+            .with_epsilon(cfg.index.epsilon),
+    )?;
+    println!("built index in {:.2}s: {:?}", t0.elapsed().as_secs_f64(), index.stats());
+    save_dataset(&items, out_dir.join("items.rdat"))?;
+    save_range_index(&index, out_dir.join("index.rlsh"))?;
+    println!("wrote {}/items.rdat and {}/index.rlsh", out_dir.display(), out_dir.display());
+    Ok(())
+}
+
+fn eval(args: &Args) -> Result<()> {
+    let cfg = Config::from_path(args.req("config")?)?;
+    let items = cfg.dataset.build_items();
+    let queries = cfg.dataset.build_queries();
+    println!(
+        "dataset: {} items, {} queries, dim {} (tail ratio {:.2})",
+        items.len(),
+        queries.len(),
+        items.dim(),
+        items.norm_stats().tail_ratio()
+    );
+    let gt = ground_truth(&items, &queries, cfg.eval.top_k);
+    let max_probe = cfg.eval.max_probe.unwrap_or(items.len()).min(items.len());
+    let cps =
+        geometric_checkpoints(cfg.eval.min_probe, max_probe, cfg.eval.checkpoints_per_decade);
+
+    let algos: Vec<IndexAlgo> = if args.has("compare") {
+        vec![
+            IndexAlgo::RangeLsh,
+            IndexAlgo::SimpleLsh,
+            IndexAlgo::L2Alsh,
+            IndexAlgo::RangedL2Alsh,
+        ]
+    } else {
+        vec![cfg.index.algo]
+    };
+    let mut results = Vec::new();
+    for algo in algos {
+        let mut spec = CurveSpec::new(algo, cfg.index.code_bits, cfg.index.n_partitions);
+        spec.scheme = cfg.index.scheme;
+        spec.epsilon = cfg.index.epsilon;
+        spec.top_k = cfg.eval.top_k;
+        spec.seed = cfg.index.seed;
+        let label = format!("{algo} L={}", cfg.index.code_bits);
+        let res = run_curve(&items, &queries, &gt, &cps, &spec, label)?;
+        println!(
+            "{}: build {:.2}s, query {:.2}s, final recall {:.3}",
+            res.label,
+            res.build_secs,
+            res.query_secs,
+            res.curve.final_recall()
+        );
+        results.push(res);
+    }
+    println!("\n{}", format_probe_table(&results, &cfg.eval.recall_targets));
+    if let Some(path) = args.opt("json-out") {
+        let json = Json::Arr(results.iter().map(result_to_json).collect()).to_string();
+        std::fs::write(path, json).with_context(|| format!("writing {path}"))?;
+        println!("wrote JSON results to {path}");
+    }
+    Ok(())
+}
+
+fn result_to_json(r: &rangelsh::eval::harness::ExperimentResult) -> Json {
+    Json::obj(vec![
+        ("label", Json::Str(r.label.clone())),
+        ("checkpoints", Json::arr_usize(r.curve.checkpoints.iter().copied())),
+        ("recalls", Json::arr_f64(r.curve.recalls.iter().copied())),
+        ("n_buckets", Json::Num(r.stats.n_buckets as f64)),
+        ("largest_bucket", Json::Num(r.stats.largest_bucket as f64)),
+        ("build_secs", Json::Num(r.build_secs)),
+        ("query_secs", Json::Num(r.query_secs)),
+    ])
+}
+
+fn theory(args: &Args) -> Result<()> {
+    let cfg = Config::from_path(args.req("config")?)?;
+    let c: f64 = args.opt_parse("c", 0.7)?;
+    let items = cfg.dataset.build_items();
+    println!("# Fig 1(a): rho = G(c, S0)");
+    println!("{:>6}  {:>8}  {:>8}  {:>8}", "S0", "c=0.5", "c=0.7", "c=0.9");
+    for i in 1..=19 {
+        let s0 = 0.05 * i as f64;
+        println!(
+            "{:>6.2}  {:>8.4}  {:>8.4}  {:>8.4}",
+            s0,
+            g_rho(0.5, s0),
+            g_rho(0.7, s0),
+            g_rho(0.9, s0)
+        );
+    }
+    let parts = partition(&items, cfg.index.n_partitions, cfg.index.scheme);
+    let us: Vec<f32> = parts.iter().map(|p| p.u_max).collect();
+    let queries = cfg.dataset.build_queries();
+    let mips = rangelsh::eval::max_inner_products(&items, &queries);
+    let mean_s0 = (mips.iter().map(|&v| v as f64).sum::<f64>() / mips.len() as f64)
+        .min(items.max_norm() as f64);
+    let rep = theorem1_check(items.len(), &us, items.max_norm(), mean_s0, c);
+    println!("\n# Theorem 1 report (S0 = mean max-IP = {mean_s0:.4}, c = {c})");
+    println!(
+        "rho = {:.4}, rho* = {:.4}, alpha = {:.4} (limit {:.4}), beta = {:.4} (limit {:.4})",
+        rep.rho, rep.rho_star, rep.alpha, rep.alpha_limit, rep.beta, rep.beta_limit
+    );
+    println!(
+        "conditions hold: {} — predicted RANGE/SIMPLE cost ratio: {:.4}",
+        rep.conditions_hold, rep.predicted_cost_ratio
+    );
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let cfg = Config::from_path(args.req("config")?)?;
+    let n_queries: usize = args.opt_parse("n-queries", 2000)?;
+    let clients: usize = args.opt_parse("clients", 16)?;
+    let artifacts = PathBuf::from(args.opt("artifacts").unwrap_or(DEFAULT_ARTIFACT_DIR));
+    // --load DIR: serve a pre-built index (from `rangelsh build`).
+    let loaded: Option<(Arc<rangelsh::data::Dataset>, RangeLshIndex)> = match args.opt("load") {
+        Some(dir) => {
+            let dir = PathBuf::from(dir);
+            let items = Arc::new(load_dataset(dir.join("items.rdat"))?);
+            let index = load_range_index(dir.join("index.rlsh"))?;
+            println!("loaded {} items + index from {}", items.len(), dir.display());
+            Some((items, index))
+        }
+        None => None,
+    };
+    let items = match &loaded {
+        Some((items, _)) => items.clone(),
+        None => Arc::new(cfg.dataset.build_items()),
+    };
+    let dim = items.dim();
+    let proj = match &loaded {
+        Some((_, index)) => index.projection().clone(),
+        None => Arc::new(Projection::gaussian(dim + 1, 64, cfg.index.seed)),
+    };
+
+    // Prefer the AOT Pallas kernel via PJRT; fall back to native.
+    let hasher: Arc<dyn ItemHasher> =
+        if !args.has("native") && artifacts.join("manifest.json").exists() {
+            match RuntimeHandle::load(&artifacts).and_then(|rt| PjrtHasher::new(rt, proj.clone()))
+            {
+                Ok(h) => {
+                    println!("query hashing: PJRT (AOT Pallas kernel)");
+                    Arc::new(h)
+                }
+                Err(e) => {
+                    println!("PJRT unavailable ({e:#}); falling back to native hashing");
+                    Arc::new(NativeHasher::with_projection(proj.clone()))
+                }
+            }
+        } else {
+            println!("query hashing: native");
+            Arc::new(NativeHasher::with_projection(proj.clone()))
+        };
+
+    let t0 = std::time::Instant::now();
+    let index: Arc<dyn CodeProbe> = match (loaded, cfg.index.algo) {
+        (Some((_, index)), _) => Arc::new(index),
+        (None, IndexAlgo::SimpleLsh) => Arc::new(SimpleLshIndex::build(
+            &items,
+            hasher.as_ref(),
+            SimpleLshParams::new(cfg.index.code_bits),
+        )?),
+        (None, _) => Arc::new(RangeLshIndex::build(
+            &items,
+            hasher.as_ref(),
+            RangeLshParams::new(cfg.index.code_bits, cfg.index.n_partitions)
+                .with_scheme(cfg.index.scheme)
+                .with_epsilon(cfg.index.epsilon),
+        )?),
+    };
+    println!(
+        "index built in {:.2}s: {:?}",
+        t0.elapsed().as_secs_f64(),
+        index.stats()
+    );
+
+    let engine = Arc::new(SearchEngine::new(
+        index,
+        items.clone(),
+        hasher,
+        cfg.serve.clone(),
+    )?);
+    let queries = synthetic::gaussian_queries(n_queries, dim, cfg.dataset.seed ^ 0xDEAD);
+    let policy = BatchPolicy::new(
+        cfg.serve.max_batch,
+        Duration::from_micros(cfg.serve.deadline_us),
+    );
+    let (results, wall) = rangelsh::coordinator::server::drive_workload(
+        engine.clone(),
+        policy,
+        &queries,
+        clients,
+    )?;
+    let snap = engine.metrics().snapshot();
+    println!(
+        "served {} queries in {:.2}s — {:.0} qps, p50 {}us, p95 {}us, p99 {}us, \
+         mean probed {:.0}, mean batch {:.1}",
+        results.len(),
+        wall.as_secs_f64(),
+        results.len() as f64 / wall.as_secs_f64(),
+        snap.p50_us,
+        snap.p95_us,
+        snap.p99_us,
+        snap.mean_probed,
+        snap.mean_batch_rows,
+    );
+    Ok(())
+}
+
+fn artifacts_check(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.opt("dir").unwrap_or(DEFAULT_ARTIFACT_DIR));
+    let rt = RuntimeHandle::load(&dir)?;
+    let m = rt.manifest();
+    println!(
+        "artifacts ok: format={}, item_block={}, query_block={}, proj_width={}",
+        m.format, m.item_block, m.query_block, m.proj_width
+    );
+    for e in &m.entries {
+        println!("  {} <- {}", e.name, e.file);
+    }
+    // Smoke-execute the first hash dim and cross-check against native.
+    if let Some(&dim) = m.hash_dims().first() {
+        let proj = Arc::new(Projection::gaussian(dim + 1, m.proj_width, 0));
+        let hasher = PjrtHasher::new(rt.clone(), proj.clone())?;
+        let rows = vec![0.5f32; 4 * dim];
+        let codes = hasher.hash_items(&rows, 2.0)?;
+        let native = NativeHasher::with_projection(proj).hash_items(&rows, 2.0)?;
+        println!(
+            "smoke hash (dim {dim}): pjrt {:016x} vs native {:016x} — {}",
+            codes[0],
+            native[0],
+            if codes == native { "MATCH" } else { "MISMATCH" }
+        );
+    }
+    rt.shutdown();
+    Ok(())
+}

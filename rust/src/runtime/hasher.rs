@@ -1,0 +1,105 @@
+//! [`PjrtHasher`]: the [`ItemHasher`] implementation backed by the AOT
+//! Pallas sign-hash kernel. Chunks arbitrary row counts into the fixed
+//! `item_block` geometry, pads the tail block with zeros, discards padded
+//! outputs, and packs the kernel's `[B, 2] u32` words into `u64` codes.
+
+use std::sync::Arc;
+
+use crate::hash::{ItemHasher, Projection};
+use crate::runtime::RuntimeHandle;
+use crate::Result;
+
+/// PJRT-backed bulk hasher sharing a [`Projection`] with the native path.
+pub struct PjrtHasher {
+    runtime: RuntimeHandle,
+    proj: Arc<Projection>,
+    /// Flat panel cached in the Arc<Vec> shape the worker wants.
+    proj_flat: Arc<Vec<f32>>,
+}
+
+impl PjrtHasher {
+    /// `proj.dim_in()` must equal `d + 1` for a compiled `hash_*_d{d}`
+    /// artifact, and `proj.width()` must equal the manifest's proj width.
+    pub fn new(runtime: RuntimeHandle, proj: Arc<Projection>) -> Result<Self> {
+        let dim = proj.dim_in() - 1;
+        anyhow::ensure!(
+            runtime.supports_dim(dim),
+            "no hash artifact for dim {dim}; compiled dims: {:?} — \
+             re-run `make artifacts` with --dims including {dim}",
+            runtime.manifest().hash_dims()
+        );
+        anyhow::ensure!(
+            proj.width() == runtime.manifest().proj_width,
+            "projection width {} != artifact width {}",
+            proj.width(),
+            runtime.manifest().proj_width
+        );
+        let proj_flat = Arc::new(proj.flat().to_vec());
+        Ok(Self { runtime, proj, proj_flat })
+    }
+
+    /// Words per item emitted by the kernel (width / 32).
+    fn words(&self) -> usize {
+        self.proj.width().div_ceil(32)
+    }
+
+    fn hash_blocks(&self, rows: &[f32], u: Option<f32>) -> Result<Vec<u64>> {
+        let dim = self.dim();
+        anyhow::ensure!(
+            rows.len() % dim == 0,
+            "row buffer length {} not a multiple of dim {dim}",
+            rows.len()
+        );
+        let n = rows.len() / dim;
+        let item_block = self.runtime.manifest().item_block;
+        let query_block = self.runtime.manifest().query_block;
+        let words = self.words();
+        let mut codes = Vec::with_capacity(n);
+        for chunk in rows.chunks(item_block * dim) {
+            let valid = chunk.len() / dim;
+            // Query chunks small enough for the small-batch artifact pad
+            // to query_block instead of item_block - 8x less kernel work
+            // for typical serving batches (see EXPERIMENTS.md §Perf).
+            let block_rows = if u.is_none() && valid <= query_block {
+                query_block
+            } else {
+                item_block
+            };
+            let mut block = Vec::with_capacity(block_rows * dim);
+            block.extend_from_slice(chunk);
+            block.resize(block_rows * dim, 0.0); // zero-pad the tail block
+            let packed = match u {
+                Some(u) => self
+                    .runtime
+                    .hash_items_block(dim, block, u, self.proj_flat.clone())?,
+                None => self
+                    .runtime
+                    .hash_queries_block(dim, block, self.proj_flat.clone())?,
+            };
+            anyhow::ensure!(packed.len() == block_rows * words, "kernel output size mismatch");
+            for i in 0..valid {
+                let mut code = 0u64;
+                for w in 0..words {
+                    code |= (packed[i * words + w] as u64) << (32 * w);
+                }
+                codes.push(code);
+            }
+        }
+        Ok(codes)
+    }
+}
+
+impl ItemHasher for PjrtHasher {
+    fn projection(&self) -> &Arc<Projection> {
+        &self.proj
+    }
+
+    fn hash_items(&self, rows: &[f32], u: f32) -> Result<Vec<u64>> {
+        anyhow::ensure!(u > 0.0, "normalisation constant must be positive");
+        self.hash_blocks(rows, Some(u))
+    }
+
+    fn hash_queries(&self, rows: &[f32]) -> Result<Vec<u64>> {
+        self.hash_blocks(rows, None)
+    }
+}

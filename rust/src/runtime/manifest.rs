@@ -1,0 +1,176 @@
+//! Artifact manifest: the shape contract between `python/compile/aot.py`
+//! and the Rust runtime (written once at build time, read at startup).
+//! Parsed with the in-tree JSON parser ([`crate::util::json`]).
+
+use std::path::Path;
+
+use anyhow::Context;
+
+use crate::util::json::Json;
+use crate::Result;
+
+/// One lowered entry point.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<ArtifactInput>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactInput {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub format: String,
+    /// Rows per hash/score item block (AOT-fixed; runtime pads).
+    pub item_block: usize,
+    /// Rows per score query block.
+    pub query_block: usize,
+    /// Hash functions per artifact (Rust masks down to the code length).
+    pub proj_width: usize,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let path = dir.as_ref().join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let m = Self::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        Ok(m)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text)?;
+        let str_field = |key: &str| -> Result<String> {
+            Ok(j.get(key)
+                .and_then(Json::as_str)
+                .with_context(|| format!("manifest missing string field {key:?}"))?
+                .to_string())
+        };
+        let usize_field = |key: &str| -> Result<usize> {
+            j.get(key)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("manifest missing integer field {key:?}"))
+        };
+        let format = str_field("format")?;
+        anyhow::ensure!(
+            format == "hlo-text",
+            "unsupported artifact format {format:?} (want hlo-text)"
+        );
+        let proj_width = usize_field("proj_width")?;
+        anyhow::ensure!((1..=64).contains(&proj_width), "bad proj_width {proj_width}");
+
+        let mut entries = Vec::new();
+        for e in j
+            .get("entries")
+            .and_then(Json::as_arr)
+            .context("manifest missing entries array")?
+        {
+            let name = e
+                .get("name")
+                .and_then(Json::as_str)
+                .context("entry missing name")?
+                .to_string();
+            let file = e
+                .get("file")
+                .and_then(Json::as_str)
+                .context("entry missing file")?
+                .to_string();
+            let mut inputs = Vec::new();
+            for inp in e.get("inputs").and_then(Json::as_arr).unwrap_or(&[]) {
+                let shape = inp
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .context("input missing shape")?
+                    .iter()
+                    .map(|d| d.as_usize().context("non-integer dim"))
+                    .collect::<Result<Vec<usize>>>()?;
+                let dtype = inp
+                    .get("dtype")
+                    .and_then(Json::as_str)
+                    .unwrap_or("float32")
+                    .to_string();
+                inputs.push(ArtifactInput { shape, dtype });
+            }
+            entries.push(ArtifactEntry { name, file, inputs });
+        }
+        Ok(Self {
+            format,
+            item_block: usize_field("item_block")?,
+            query_block: usize_field("query_block")?,
+            proj_width,
+            entries,
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Dimensionalities with a compiled `hash_items` variant.
+    pub fn hash_dims(&self) -> Vec<usize> {
+        self.entries
+            .iter()
+            .filter_map(|e| e.name.strip_prefix("hash_items_d").and_then(|d| d.parse().ok()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_shape() {
+        let json = r#"{
+            "format": "hlo-text", "item_block": 2048, "query_block": 256,
+            "proj_width": 64,
+            "entries": [
+                {"name": "hash_items_d16", "file": "hash_items_d16.hlo.txt",
+                 "inputs": [{"shape": [2048, 16], "dtype": "float32"},
+                            {"shape": [], "dtype": "float32"},
+                            {"shape": [17, 64], "dtype": "float32"}]}
+            ]
+        }"#;
+        let m = Manifest::parse(json).unwrap();
+        assert_eq!(m.item_block, 2048);
+        assert_eq!(m.query_block, 256);
+        let e = m.entry("hash_items_d16").unwrap();
+        assert_eq!(e.inputs.len(), 3);
+        assert_eq!(e.inputs[0].shape, vec![2048, 16]);
+        assert_eq!(e.inputs[1].shape, Vec::<usize>::new());
+        assert!(m.entry("nope").is_none());
+        assert_eq!(m.hash_dims(), vec![16]);
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let json = r#"{"format": "proto", "item_block": 1, "query_block": 1,
+                       "proj_width": 64, "entries": []}"#;
+        assert!(Manifest::parse(json).is_err());
+    }
+
+    #[test]
+    fn load_rejects_missing_dir() {
+        let err = Manifest::load("/no/such/dir").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn parses_real_generated_manifest_if_present() {
+        // Integration nicety: if `make artifacts` has run, the real file
+        // must parse and contain the default geometry.
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if path.join("manifest.json").exists() {
+            let m = Manifest::load(&path).unwrap();
+            assert!(!m.entries.is_empty());
+            assert_eq!(m.proj_width, 64);
+        }
+    }
+}

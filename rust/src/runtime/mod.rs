@@ -1,0 +1,31 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `manifest.json` produced by `make artifacts`) and executes them from the
+//! Rust hot path. Python is never involved at runtime.
+//!
+//! ## Threading model
+//!
+//! The `xla` crate's wrappers hold raw PJRT pointers and are not
+//! `Send`/`Sync`, so the runtime runs as an **actor**: one worker thread
+//! owns the client and the compiled executables; [`RuntimeHandle`] is a
+//! cheap, cloneable, `Send + Sync` front that routes requests over a
+//! channel. This matches the coordinator design anyway — the dynamic
+//! batcher serialises hash batches through one compiled executable.
+//!
+//! ## Interchange gotcha
+//!
+//! Artifacts are HLO **text** (not serialized `HloModuleProto`): jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md and DESIGN.md §6).
+
+mod hasher;
+mod manifest;
+mod scorer;
+mod worker;
+
+pub use hasher::PjrtHasher;
+pub use manifest::{ArtifactEntry, Manifest};
+pub use scorer::PjrtScorer;
+pub use worker::RuntimeHandle;
+
+/// Default artifact directory relative to the repo root.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";

@@ -1,0 +1,145 @@
+//! [`PjrtScorer`]: exact inner-product scoring through the AOT Pallas
+//! blocked-matmul kernel — ground truth generation and candidate
+//! re-ranking with MXU-shaped compute.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::data::Dataset;
+use crate::runtime::RuntimeHandle;
+use crate::{ItemId, Result};
+
+/// PJRT-backed exact scorer.
+pub struct PjrtScorer {
+    runtime: RuntimeHandle,
+}
+
+impl PjrtScorer {
+    pub fn new(runtime: RuntimeHandle) -> Self {
+        Self { runtime }
+    }
+
+    /// Exact scores `[n_queries, n_items]` (row-major), computed block by
+    /// block through the score artifact.
+    pub fn score_all(&self, queries: &Dataset, items: &Dataset) -> Result<Vec<f32>> {
+        anyhow::ensure!(queries.dim() == items.dim(), "dimension mismatch");
+        let dim = items.dim();
+        let qb = self.runtime.manifest().query_block;
+        let ib = self.runtime.manifest().item_block;
+        let (nq, ni) = (queries.len(), items.len());
+        let mut out = vec![0.0f32; nq * ni];
+        for (qci, qchunk) in queries.flat().chunks(qb * dim).enumerate() {
+            let vq = qchunk.len() / dim;
+            let mut q_block = Vec::with_capacity(qb * dim);
+            q_block.extend_from_slice(qchunk);
+            q_block.resize(qb * dim, 0.0);
+            for (xci, xchunk) in items.flat().chunks(ib * dim).enumerate() {
+                let vx = xchunk.len() / dim;
+                let mut x_block = Vec::with_capacity(ib * dim);
+                x_block.extend_from_slice(xchunk);
+                x_block.resize(ib * dim, 0.0);
+                let scores = self.runtime.score_block(dim, q_block.clone(), x_block)?;
+                anyhow::ensure!(scores.len() == qb * ib, "score output size mismatch");
+                for qi in 0..vq {
+                    let dst_row = (qci * qb + qi) * ni + xci * ib;
+                    out[dst_row..dst_row + vx]
+                        .copy_from_slice(&scores[qi * ib..qi * ib + vx]);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Exact top-`k` MIPS per query via the score artifact (same contract
+    /// as [`crate::eval::exact_topk`]; the integration tests assert they
+    /// agree).
+    pub fn exact_topk(
+        &self,
+        items: &Dataset,
+        queries: &Dataset,
+        k: usize,
+    ) -> Result<Vec<Vec<ItemId>>> {
+        let scores = self.score_all(queries, items)?;
+        let ni = items.len();
+        Ok((0..queries.len())
+            .map(|qi| topk_row(&scores[qi * ni..(qi + 1) * ni], k))
+            .collect())
+    }
+
+    /// Re-rank `candidates` for `query` by exact inner product (descending)
+    /// — the serving engine's final stage. Small candidate sets are scored
+    /// natively; this avoids paying a padded PJRT block per query.
+    ///
+    /// §Perf: select-then-sort — `select_nth_unstable` partitions the top
+    /// `k` in O(n), then only those `k` are sorted (vs sorting all
+    /// `n = probe_budget` candidates).
+    pub fn rerank(dataset: &Dataset, query: &[f32], candidates: &mut Vec<ItemId>, k: usize) {
+        let mut scored: Vec<(f32, ItemId)> = candidates
+            .iter()
+            .map(|&id| (dataset.dot(id as usize, query), id))
+            .collect();
+        let cmp = |a: &(f32, ItemId), b: &(f32, ItemId)| {
+            b.0.total_cmp(&a.0).then(a.1.cmp(&b.1))
+        };
+        if k < scored.len() {
+            scored.select_nth_unstable_by(k, cmp);
+            scored.truncate(k);
+        }
+        scored.sort_by(cmp);
+        candidates.clear();
+        candidates.extend(scored.into_iter().map(|(_, id)| id));
+    }
+}
+
+#[derive(PartialEq)]
+struct Entry(f32, ItemId);
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other.0.total_cmp(&self.0).then(other.1.cmp(&self.1))
+    }
+}
+
+fn topk_row(scores: &[f32], k: usize) -> Vec<ItemId> {
+    let mut heap: BinaryHeap<Entry> = BinaryHeap::with_capacity(k + 1);
+    for (i, &s) in scores.iter().enumerate() {
+        if heap.len() < k {
+            heap.push(Entry(s, i as ItemId));
+        } else if let Some(top) = heap.peek() {
+            if s > top.0 {
+                heap.pop();
+                heap.push(Entry(s, i as ItemId));
+            }
+        }
+    }
+    let mut v: Vec<Entry> = heap.into_vec();
+    v.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+    v.into_iter().map(|e| e.1).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topk_row_orders_descending() {
+        let ids = topk_row(&[0.1, 0.9, 0.5, 0.9, -1.0], 3);
+        assert_eq!(ids, vec![1, 3, 2]);
+    }
+
+    #[test]
+    fn rerank_keeps_best_k() {
+        let d = crate::data::synthetic::longtail_sift(50, 8, 0);
+        let q = crate::data::synthetic::gaussian_queries(1, 8, 1);
+        let mut cands: Vec<ItemId> = (0..50).collect();
+        PjrtScorer::rerank(&d, q.row(0), &mut cands, 5);
+        assert_eq!(cands.len(), 5);
+        let gt = crate::eval::exact_topk(&d, &q, 5);
+        assert_eq!(cands, gt[0]);
+    }
+}

@@ -1,0 +1,290 @@
+//! The runtime actor: one thread owns the PJRT client and compiled
+//! executables; [`RuntimeHandle`] routes requests to it over a channel.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context};
+
+use super::manifest::Manifest;
+use crate::Result;
+
+/// Request messages processed by the worker thread.
+enum Request {
+    /// Execute `hash_items_d{dim}` over one padded block.
+    HashItems {
+        dim: usize,
+        /// Padded row-major `[item_block, dim]`.
+        block: Vec<f32>,
+        u: f32,
+        /// Row-major `[dim+1, proj_width]`.
+        proj: Arc<Vec<f32>>,
+        reply: mpsc::Sender<Result<Vec<u32>>>,
+    },
+    /// Execute `hash_queries_d{dim}` over one padded block.
+    HashQueries {
+        dim: usize,
+        block: Vec<f32>,
+        proj: Arc<Vec<f32>>,
+        reply: mpsc::Sender<Result<Vec<u32>>>,
+    },
+    /// Execute `score_d{dim}`: `[query_block, dim] x [item_block, dim]`.
+    Score {
+        dim: usize,
+        q_block: Vec<f32>,
+        x_block: Vec<f32>,
+        reply: mpsc::Sender<Result<Vec<f32>>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, `Send + Sync` handle to the PJRT runtime actor.
+///
+/// All methods are synchronous (they block on the actor's reply); the
+/// coordinator calls them from `spawn_blocking` contexts.
+///
+/// `std::sync::mpsc::Sender` is `Send` but not `Sync`, so the sender sits
+/// behind a mutex (uncontended in practice: requests are coarse — one
+/// 2048-row block per send).
+pub struct RuntimeHandle {
+    tx: std::sync::Mutex<mpsc::Sender<Request>>,
+    manifest: Arc<Manifest>,
+}
+
+impl Clone for RuntimeHandle {
+    fn clone(&self) -> Self {
+        Self {
+            tx: std::sync::Mutex::new(self.tx.lock().unwrap().clone()),
+            manifest: self.manifest.clone(),
+        }
+    }
+}
+
+impl RuntimeHandle {
+    /// Load the manifest in `dir`, start the worker thread, and eagerly
+    /// compile every artifact (fail fast on missing/corrupt HLO).
+    pub fn load(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir: PathBuf = dir.into();
+        let manifest = Arc::new(Manifest::load(&dir)?);
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let worker_manifest = manifest.clone();
+        std::thread::Builder::new()
+            .name("pjrt-runtime".into())
+            .spawn(move || worker_main(dir, worker_manifest, rx, ready_tx))
+            .context("spawning pjrt runtime thread")?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("pjrt runtime thread died during startup"))??;
+        Ok(Self { tx: std::sync::Mutex::new(tx), manifest })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// True if a `hash_items` artifact exists for dimensionality `dim`.
+    pub fn supports_dim(&self, dim: usize) -> bool {
+        self.manifest.entry(&format!("hash_items_d{dim}")).is_some()
+    }
+
+    fn roundtrip<T>(&self, make: impl FnOnce(mpsc::Sender<Result<T>>) -> Request) -> Result<T> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(make(reply_tx))
+            .map_err(|_| anyhow!("pjrt runtime thread is gone"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("pjrt runtime dropped the reply"))?
+    }
+
+    /// Hash one padded item block (`block.len() == item_block * dim`).
+    /// Returns `item_block * words` packed u32s.
+    pub fn hash_items_block(
+        &self,
+        dim: usize,
+        block: Vec<f32>,
+        u: f32,
+        proj: Arc<Vec<f32>>,
+    ) -> Result<Vec<u32>> {
+        self.roundtrip(|reply| Request::HashItems { dim, block, u, proj, reply })
+    }
+
+    /// Hash one padded query block.
+    pub fn hash_queries_block(
+        &self,
+        dim: usize,
+        block: Vec<f32>,
+        proj: Arc<Vec<f32>>,
+    ) -> Result<Vec<u32>> {
+        self.roundtrip(|reply| Request::HashQueries { dim, block, proj, reply })
+    }
+
+    /// Score one `[query_block, dim] x [item_block, dim]` pair; returns
+    /// row-major `[query_block, item_block]`.
+    pub fn score_block(&self, dim: usize, q_block: Vec<f32>, x_block: Vec<f32>) -> Result<Vec<f32>> {
+        self.roundtrip(|reply| Request::Score { dim, q_block, x_block, reply })
+    }
+
+    /// Stop the worker (also happens when the last handle drops the sender).
+    pub fn shutdown(&self) {
+        let _ = self.tx.lock().unwrap().send(Request::Shutdown);
+    }
+}
+
+/// The worker: owns client + executables, loops on requests.
+fn worker_main(
+    dir: PathBuf,
+    manifest: Arc<Manifest>,
+    rx: mpsc::Receiver<Request>,
+    ready: mpsc::Sender<Result<()>>,
+) {
+    let state = match WorkerState::new(&dir, &manifest) {
+        Ok(s) => {
+            let _ = ready.send(Ok(()));
+            s
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::HashItems { dim, block, u, proj, reply } => {
+                let _ = reply.send(state.run_hash(
+                    &format!("hash_items_d{dim}"),
+                    dim,
+                    state.item_block,
+                    &block,
+                    Some(u),
+                    &proj,
+                ));
+            }
+            Request::HashQueries { dim, block, proj, reply } => {
+                // Dispatch to the small-batch variant when the block is
+                // query_block-sized (8x less padded kernel work, §Perf).
+                let rows = if dim > 0 { block.len() / dim } else { 0 };
+                let (entry, expect) = if rows == state.query_block
+                    && state.exes.contains_key(&format!("hash_queries_small_d{dim}"))
+                {
+                    (format!("hash_queries_small_d{dim}"), state.query_block)
+                } else {
+                    (format!("hash_queries_d{dim}"), state.item_block)
+                };
+                let _ = reply.send(state.run_hash(&entry, dim, expect, &block, None, &proj));
+            }
+            Request::Score { dim, q_block, x_block, reply } => {
+                let _ = reply.send(state.run_score(dim, &q_block, &x_block));
+            }
+            Request::Shutdown => break,
+        }
+    }
+}
+
+struct WorkerState {
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    item_block: usize,
+    query_block: usize,
+    proj_width: usize,
+}
+
+impl WorkerState {
+    fn new(dir: &PathBuf, manifest: &Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e}"))?;
+        eprintln!(
+            "[rangelsh] pjrt runtime up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        let mut exes = HashMap::new();
+        for entry in &manifest.entries {
+            let path = dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e}", entry.name))?;
+            exes.insert(entry.name.clone(), exe);
+        }
+        Ok(Self {
+            exes,
+            item_block: manifest.item_block,
+            query_block: manifest.query_block,
+            proj_width: manifest.proj_width,
+        })
+    }
+
+    fn exe(&self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        self.exes
+            .get(name)
+            .ok_or_else(|| anyhow!("no artifact named {name}; rebuild with `make artifacts`"))
+    }
+
+    fn run_hash(
+        &self,
+        entry: &str,
+        dim: usize,
+        rows: usize,
+        block: &[f32],
+        u: Option<f32>,
+        proj: &[f32],
+    ) -> Result<Vec<u32>> {
+        anyhow::ensure!(
+            block.len() == rows * dim,
+            "hash block must be padded to {rows} x {dim}, got {}",
+            block.len()
+        );
+        anyhow::ensure!(
+            proj.len() == (dim + 1) * self.proj_width,
+            "projection must be ({} + 1) x {}, got {}",
+            dim,
+            self.proj_width,
+            proj.len()
+        );
+        let exe = self.exe(entry)?;
+        let x = xla::Literal::vec1(block)
+            .reshape(&[rows as i64, dim as i64])
+            .map_err(|e| anyhow!("reshape x: {e}"))?;
+        let p = xla::Literal::vec1(proj)
+            .reshape(&[(dim + 1) as i64, self.proj_width as i64])
+            .map_err(|e| anyhow!("reshape proj: {e}"))?;
+        let result = match u {
+            Some(u) => exe.execute::<xla::Literal>(&[x, xla::Literal::scalar(u), p]),
+            None => exe.execute::<xla::Literal>(&[x, p]),
+        }
+        .map_err(|e| anyhow!("execute {entry}: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e}"))?;
+        let out = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e}"))?;
+        out.to_vec::<u32>().map_err(|e| anyhow!("to_vec<u32>: {e}"))
+    }
+
+    fn run_score(&self, dim: usize, q_block: &[f32], x_block: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(q_block.len() == self.query_block * dim, "bad query block");
+        anyhow::ensure!(x_block.len() == self.item_block * dim, "bad item block");
+        let exe = self.exe(&format!("score_d{dim}"))?;
+        let q = xla::Literal::vec1(q_block)
+            .reshape(&[self.query_block as i64, dim as i64])
+            .map_err(|e| anyhow!("reshape q: {e}"))?;
+        let x = xla::Literal::vec1(x_block)
+            .reshape(&[self.item_block as i64, dim as i64])
+            .map_err(|e| anyhow!("reshape x: {e}"))?;
+        let result = exe
+            .execute::<xla::Literal>(&[q, x])
+            .map_err(|e| anyhow!("execute score: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e}"))?;
+        let out = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec<f32>: {e}"))
+    }
+}

@@ -1,0 +1,8 @@
+//! Theory: the ρ query-exponent formulas the paper's Figures 1(a) and
+//! Theorem 1 are built on, plus the Theorem 1 condition checker.
+
+pub mod rho;
+pub mod theorem1;
+
+pub use rho::{erf, f_r, g_rho, l2alsh_grid_search, rho_l2alsh, rho_l2alsh_ranged};
+pub use theorem1::{theorem1_check, Theorem1Report};

@@ -1,0 +1,274 @@
+//! The ρ (query-time exponent) formulas.
+//!
+//! - [`g_rho`]: SIMPLE-LSH's `ρ = G(c, S0)` (paper Eq. 9) — the function
+//!   plotted in Fig. 1(a); query time is `O(n^ρ log n)`.
+//! - [`f_r`]: the Eq. 2 floor-hash collision probability (Eq. 3).
+//! - [`rho_l2alsh`]: L2-ALSH's ρ (Eq. 7).
+//! - [`rho_l2alsh_ranged`]: the §5 per-range ρ_j (Eq. 13).
+//! - [`l2alsh_grid_search`]: the (m, U, r) tuning the L2-ALSH authors call for.
+
+use std::f64::consts::PI;
+
+/// Error function, Abramowitz & Stegun 7.1.26 (|err| <= 1.5e-7) — enough
+/// for ρ values quoted to three decimals.
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Standard normal CDF Φ.
+fn phi(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+/// Eq. 3: collision probability of the Eq. 2 floor-hash at L2 distance `d`
+/// with bucket width `r`.
+pub fn f_r(r: f64, d: f64) -> f64 {
+    assert!(r > 0.0, "bucket width must be positive");
+    if d <= 0.0 {
+        return 1.0;
+    }
+    1.0 - 2.0 * phi(-r / d) - 2.0 * d / ((2.0 * PI).sqrt() * r) * (1.0 - (-(r / d).powi(2) / 2.0).exp())
+}
+
+/// Sign-random-projection collision probability (Eq. 4) at normalised
+/// inner product `s` (i.e. cosine similarity): `1 - acos(s)/π`.
+pub fn p_collision_srp(s: f64) -> f64 {
+    1.0 - s.clamp(-1.0, 1.0).acos() / PI
+}
+
+/// Eq. 9: SIMPLE-LSH's `ρ = G(c, S0)` — decreasing in `S0`, which is the
+/// Fig. 1(a) observation the whole paper builds on: excessive
+/// normalisation shrinks `S0`, inflating ρ.
+pub fn g_rho(c: f64, s0: f64) -> f64 {
+    assert!((0.0..1.0).contains(&c), "approximation ratio c must be in (0,1)");
+    assert!(s0 > 0.0 && s0 <= 1.0, "S0 must be in (0,1], got {s0}");
+    let p1 = p_collision_srp(s0);
+    let p2 = p_collision_srp(c * s0);
+    p1.ln() / p2.ln()
+}
+
+/// Eq. 7: L2-ALSH's ρ for parameters `(m, u, r)` at `(S0, c)`.
+pub fn rho_l2alsh(s0: f64, c: f64, m: u32, u: f64, r: f64) -> f64 {
+    let pow = 2f64.powi(m as i32 + 1);
+    let num_d = (1.0 + m as f64 / 4.0 - 2.0 * u * s0 + (u * s0).powf(pow)).sqrt();
+    let den_d = (1.0 + m as f64 / 4.0 - 2.0 * c * u * s0).sqrt();
+    f_r(r, num_d).ln() / f_r(r, den_d).ln()
+}
+
+/// Eq. 13: the §5 per-range ρ_j with norms confined to `(u_lo, u_hi]`
+/// (raw, before the per-range scaling `u_j`).
+pub fn rho_l2alsh_ranged(
+    s0: f64,
+    c: f64,
+    m: u32,
+    u_j: f64,
+    r: f64,
+    u_lo: f64,
+    u_hi: f64,
+) -> f64 {
+    assert!(u_lo >= 0.0 && u_hi >= u_lo);
+    let pow = 2f64.powi(m as i32 + 1);
+    let num_d = (1.0 + m as f64 / 4.0 - 2.0 * u_j * s0 + (u_j * u_hi).powf(pow)).sqrt();
+    let den_sq = 1.0 + m as f64 / 4.0 - 2.0 * c * u_j * s0 + (u_j * u_lo).powf(pow);
+    let den_d = den_sq.max(0.0).sqrt();
+    f_r(r, num_d).ln() / f_r(r, den_d).ln()
+}
+
+/// Grid search for L2-ALSH's `(m, U, r)` minimising ρ at `(S0, c)` —
+/// the tuning procedure §2.2 prescribes. Returns `(m, u, r, rho)`.
+pub fn l2alsh_grid_search(s0: f64, c: f64) -> (u32, f64, f64, f64) {
+    let mut best = (3u32, 0.83, 2.5, f64::INFINITY);
+    for m in 2..=4u32 {
+        for ui in 1..20 {
+            let u = 0.05 * ui as f64;
+            for ri in 1..=20 {
+                let r = 0.25 * ri as f64;
+                let rho = rho_l2alsh(s0, c, m, u, r);
+                if rho.is_finite() && rho > 0.0 && rho < best.3 {
+                    best = (m, u, r, rho);
+                }
+            }
+        }
+    }
+    best
+}
+
+/// §5's flexibility argument, made concrete: per-range grid search with the
+/// Eq. 13 formula under the *relaxed* constraint `U_j < 1/u_hi` (only the
+/// range's own max matters, not the dataset max). Returns `(u_j, rho_j)`.
+pub fn ranged_l2alsh_grid_search(
+    s0: f64,
+    c: f64,
+    m: u32,
+    r: f64,
+    u_lo: f64,
+    u_hi: f64,
+) -> (f64, f64) {
+    let mut best = (0.83, f64::INFINITY);
+    let cap = 1.0 / u_hi.max(1e-9);
+    for ui in 1..200 {
+        let u = 0.005 * ui as f64 * cap.min(20.0);
+        if u * u_hi >= 1.0 {
+            break;
+        }
+        let rho = rho_l2alsh_ranged(s0, c, m, u, r, u_lo, u_hi);
+        if rho.is_finite() && rho > 0.0 && rho < best.1 {
+            best = (u, rho);
+        }
+    }
+    best
+}
+
+/// Numerically invert Eq. 3: the L2 distance whose collision probability
+/// is `p` at bucket width `r` (bisection; `p` clamped to (0,1)).
+pub fn f_r_inverse(r: f64, p: f64) -> f64 {
+    let p = p.clamp(1e-9, 1.0 - 1e-9);
+    let (mut lo, mut hi) = (1e-9, 1e3 * r);
+    for _ in 0..80 {
+        let mid = 0.5 * (lo + hi);
+        if f_r(r, mid) > p {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erf_reference_values() {
+        // vs. tabulated erf.
+        assert!((erf(0.0) - 0.0).abs() < 1e-7);
+        assert!((erf(1.0) - 0.8427007929).abs() < 1e-6);
+        assert!((erf(2.0) - 0.9953222650).abs() < 1e-6);
+        assert!((erf(-1.0) + 0.8427007929).abs() < 1e-6);
+    }
+
+    #[test]
+    fn f_r_is_a_probability_decreasing_in_distance() {
+        let r = 2.5;
+        let mut prev = 1.0;
+        for i in 1..40 {
+            let d = 0.1 * i as f64;
+            let p = f_r(r, d);
+            assert!((0.0..=1.0).contains(&p), "F_r({d}) = {p}");
+            assert!(p < prev, "F_r not decreasing at d={d}");
+            prev = p;
+        }
+        assert_eq!(f_r(r, 0.0), 1.0);
+    }
+
+    #[test]
+    fn srp_collision_probability_endpoints() {
+        assert!((p_collision_srp(1.0) - 1.0).abs() < 1e-12);
+        assert!((p_collision_srp(0.0) - 0.5).abs() < 1e-12);
+        assert!(p_collision_srp(-1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn g_rho_is_decreasing_in_s0() {
+        // Fig. 1(a): larger max inner product ⇒ smaller ρ ⇒ faster queries.
+        for &c in &[0.5, 0.7, 0.9] {
+            let mut prev = 1.0;
+            for i in 1..=9 {
+                let s0 = 0.1 * i as f64;
+                let rho = g_rho(c, s0);
+                assert!(rho > 0.0 && rho < 1.0, "rho({c}, {s0}) = {rho}");
+                assert!(rho < prev, "not decreasing at s0={s0}");
+                prev = rho;
+            }
+        }
+    }
+
+    #[test]
+    fn g_rho_decreasing_in_c() {
+        // Looser approximation (smaller c) must be easier (smaller ρ).
+        assert!(g_rho(0.5, 0.5) < g_rho(0.9, 0.5));
+    }
+
+    #[test]
+    fn range_lsh_improves_rho_when_uj_smaller() {
+        // The Theorem 1 mechanism: ρ_j = G(c, S0/U_j) < G(c, S0/U) for
+        // U_j < U (and S0/U_j <= 1).
+        let (c, s0) = (0.7, 0.4);
+        let rho_global = g_rho(c, s0 / 1.0); // U = 1
+        let rho_local = g_rho(c, (s0 / 0.5f64).min(1.0)); // U_j = 0.5
+        assert!(rho_local < rho_global);
+    }
+
+    #[test]
+    fn l2alsh_rho_worse_than_simple_lsh() {
+        // The SIMPLE-LSH paper's headline: lower ρ than L2-ALSH at the
+        // recommended parameters across moderate S0.
+        for &s0 in &[0.3, 0.5, 0.7] {
+            let c = 0.7;
+            let simple = g_rho(c, s0);
+            let l2 = rho_l2alsh(s0, c, 3, 0.83, 2.5);
+            assert!(
+                simple < l2,
+                "S0={s0}: SIMPLE rho {simple} should beat L2-ALSH rho {l2}"
+            );
+        }
+    }
+
+    #[test]
+    fn eq13_improves_on_eq7() {
+        // §5: confining norms to a range strictly reduces ρ.
+        let (s0, c, m, r) = (0.5, 0.7, 3u32, 2.5);
+        let u = 0.83;
+        let full = rho_l2alsh(s0, c, m, u, r);
+        // A mid range: norms in (0.2, 0.5] (raw scale where S0 = 0.5 max).
+        let ranged = rho_l2alsh_ranged(s0, c, m, u, r, 0.2, 0.5);
+        assert!(
+            ranged < full,
+            "ranged rho {ranged} should be below full rho {full}"
+        );
+    }
+
+    #[test]
+    fn f_r_inverse_round_trips() {
+        let r = 2.5;
+        for &d in &[0.1, 0.5, 1.0, 2.0, 5.0] {
+            let p = f_r(r, d);
+            let back = f_r_inverse(r, p);
+            assert!((back - d).abs() < 1e-4, "d={d} -> p={p} -> {back}");
+        }
+    }
+
+    #[test]
+    fn ranged_grid_search_beats_global_params() {
+        // §5: the relaxed constraint U_j < 1/u_hi admits strictly better
+        // per-range parameters than the global-U optimum.
+        let (s0, c, m, r) = (0.5, 0.7, 3u32, 2.5);
+        let global = rho_l2alsh(s0, c, m, 0.83, r);
+        let (u_j, rho_j) = ranged_l2alsh_grid_search(s0, c, m, r, 0.1, 0.4);
+        assert!(rho_j < global, "rho_j {rho_j} !< global {global} (u_j={u_j})");
+    }
+
+    #[test]
+    fn grid_search_beats_recommended_or_ties() {
+        let (s0, c) = (0.5, 0.7);
+        let (_, _, _, best) = l2alsh_grid_search(s0, c);
+        let recommended = rho_l2alsh(s0, c, 3, 0.83, 2.5);
+        assert!(best <= recommended + 1e-12);
+        assert!(best > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "S0 must be in")]
+    fn g_rho_rejects_s0_above_one() {
+        g_rho(0.5, 1.5);
+    }
+}

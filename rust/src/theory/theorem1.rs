@@ -1,0 +1,143 @@
+//! Theorem 1 condition checker: given a concrete partitioning, verify the
+//! "mild conditions" under which RANGE-LSH's query-time bound beats
+//! SIMPLE-LSH's, and quantify the predicted advantage (the Eq. 11 ratio).
+
+
+use super::rho::g_rho;
+
+/// Outcome of checking Theorem 1 on a concrete instance.
+#[derive(Debug, Clone)]
+pub struct Theorem1Report {
+    /// SIMPLE-LSH exponent `ρ = G(c, S0/U)`.
+    pub rho: f64,
+    /// Per-range exponents `ρ_j = G(c, S0/U_j)` (clamped at S0/U_j <= 1).
+    pub rho_j: Vec<f64>,
+    /// `ρ* = max_{ρ_j < ρ} ρ_j`.
+    pub rho_star: f64,
+    /// `α = log_n m` for the instance's `m` and `n`.
+    pub alpha: f64,
+    /// `β = log_n (#ranges with U_j == U)`.
+    pub beta: f64,
+    /// Upper limit `min{ρ, (ρ-ρ*)/(1-ρ*)}` that α must stay below.
+    pub alpha_limit: f64,
+    /// Upper limit `αρ` that β must stay below.
+    pub beta_limit: f64,
+    /// Whether all Theorem 1 conditions hold.
+    pub conditions_hold: bool,
+    /// The Eq. 11 ratio `f(n) / (n^ρ log n)` — RANGE-LSH's predicted
+    /// fraction of SIMPLE-LSH's cost (→ 0 as n grows when conditions hold).
+    pub predicted_cost_ratio: f64,
+}
+
+/// Check Theorem 1 for a dataset of `n` items partitioned into ranges with
+/// local max norms `u_maxes` (ascending), global max `u`, at operating
+/// point `(s0, c)` where `s0` is the raw (unnormalised) inner-product
+/// threshold.
+pub fn theorem1_check(n: usize, u_maxes: &[f32], u: f32, s0: f64, c: f64) -> Theorem1Report {
+    assert!(n >= 2, "need n >= 2");
+    assert!(!u_maxes.is_empty());
+    assert!(u > 0.0 && s0 > 0.0);
+    let m = u_maxes.len() as f64;
+    let nf = n as f64;
+    let norm_s0 = |base: f64| (s0 / base).clamp(1e-9, 1.0);
+
+    let rho = g_rho(c, norm_s0(u as f64));
+    let rho_j: Vec<f64> = u_maxes
+        .iter()
+        .map(|&uj| g_rho(c, norm_s0(uj as f64)))
+        .collect();
+    let rho_star = rho_j
+        .iter()
+        .copied()
+        .filter(|&r| r < rho)
+        .fold(0.0f64, f64::max);
+    let n_at_u = u_maxes.iter().filter(|&&uj| uj >= u).count().max(1);
+
+    let alpha = m.ln() / nf.ln();
+    let beta = (n_at_u as f64).ln() / nf.ln();
+    let alpha_limit = rho.min((rho - rho_star) / (1.0 - rho_star));
+    let beta_limit = alpha * rho;
+    let conditions_hold = alpha < alpha_limit && beta < beta_limit;
+
+    // Eq. 10/11: f(n) = n^α + Σ_j n^{(1-α)ρ_j} log n^{1-α}, vs n^ρ log n.
+    let log_n = nf.ln();
+    let f_n: f64 = nf.powf(alpha)
+        + rho_j
+            .iter()
+            .map(|&rj| nf.powf((1.0 - alpha) * rj) * (1.0 - alpha) * log_n)
+            .sum::<f64>();
+    let simple_cost = nf.powf(rho) * log_n;
+    Theorem1Report {
+        rho,
+        rho_j,
+        rho_star,
+        alpha,
+        beta,
+        alpha_limit,
+        beta_limit,
+        conditions_hold,
+        predicted_cost_ratio: f_n / simple_cost,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::index::{partition, PartitionScheme};
+
+    #[test]
+    fn longtail_instance_satisfies_conditions() {
+        // A realistic long-tail instance: the paper's "mild conditions"
+        // should hold with a modest number of ranges.
+        let d = synthetic::longtail_sift(50_000, 16, 0);
+        let parts = partition(&d, 32, PartitionScheme::Percentile);
+        let us: Vec<f32> = parts.iter().map(|p| p.u_max).collect();
+        let s0 = 0.3 * d.max_norm() as f64;
+        let rep = theorem1_check(d.len(), &us, d.max_norm(), s0, 0.7);
+        assert!(rep.conditions_hold, "{rep:?}");
+        assert!(rep.predicted_cost_ratio < 1.0, "{rep:?}");
+        // Exactly one range attains U (percentile partitioning).
+        assert!((rep.beta - 0.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rho_j_increase_with_u_j() {
+        let us = [0.3f32, 0.5, 0.8, 1.0];
+        let rep = theorem1_check(10_000, &us, 1.0, 0.25, 0.7);
+        for w in rep.rho_j.windows(2) {
+            assert!(w[0] <= w[1] + 1e-12, "rho_j not monotone: {:?}", rep.rho_j);
+        }
+        // The last range (U_j == U) matches the SIMPLE-LSH rho.
+        assert!((rep.rho_j.last().unwrap() - rep.rho).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_all_ranges_at_u_fails_conditions() {
+        // If every U_j == U (uniform norms), partitioning cannot help:
+        // beta == alpha > alpha*rho.
+        let us = [1.0f32; 16];
+        let rep = theorem1_check(10_000, &us, 1.0, 0.5, 0.7);
+        assert!(!rep.conditions_hold);
+    }
+
+    #[test]
+    fn too_many_partitions_violate_alpha_bound() {
+        // α = log_n m must stay under min{ρ, (ρ-ρ*)/(1-ρ*)}; for tiny n and
+        // huge m it cannot.
+        let us: Vec<f32> = (1..=64).map(|i| i as f32 / 64.0).collect();
+        let rep = theorem1_check(128, &us, 1.0, 0.5, 0.7);
+        assert!(rep.alpha > rep.alpha_limit);
+        assert!(!rep.conditions_hold);
+    }
+
+    #[test]
+    fn cost_ratio_shrinks_with_n() {
+        // Eq. 11 → 0 with sufficiently large n: the ratio at n=10^6 must be
+        // below the ratio at n=10^4 for the same norm profile.
+        let us = [0.3f32, 0.45, 0.6, 1.0];
+        let small = theorem1_check(10_000, &us, 1.0, 0.25, 0.7);
+        let large = theorem1_check(1_000_000, &us, 1.0, 0.25, 0.7);
+        assert!(large.predicted_cost_ratio < small.predicted_cost_ratio);
+    }
+}

@@ -1,0 +1,131 @@
+//! L2-ALSH transform pair (Shrivastava & Li 2014; paper Eq. 5).
+//!
+//! Items are first scaled by `scale = U / max_norm` so that `||Ux|| <= U < 1`,
+//! then lifted with `m` norm powers:
+//!
+//! `P(x) = [Ux ; ||Ux||^2 ; ||Ux||^4 ; ... ; ||Ux||^{2^m}]`
+//! `Q(q) = [q/||q|| ; 1/2 ; ... ; 1/2]`
+//!
+//! so `||P(x) - Q(q)||^2 = 1 + m/4 - 2 U x.q + ||Ux||^{2^{m+1}}` (Eq. 6) and
+//! MIPS becomes L2 nearest-neighbour search, solved with the Eq. 2
+//! floor-hash. Recommended parameters (paper §4): `m = 3, U = 0.83, r = 2.5`.
+
+/// L2-ALSH transform with fixed `(m, U)`; `r` lives in the hash, not here.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct L2AlshTransform {
+    /// Number of appended norm powers (paper's `m`).
+    pub m: usize,
+    /// Target max norm after scaling (paper's `U`), must be in (0, 1).
+    pub u: f32,
+}
+
+impl L2AlshTransform {
+    pub fn new(m: usize, u: f32) -> Self {
+        assert!(m >= 1, "need at least one norm power");
+        assert!(u > 0.0 && u < 1.0, "U must be in (0,1), got {u}");
+        Self { m, u }
+    }
+
+    /// Paper-recommended configuration `m=3, U=0.83` (used with `r=2.5`).
+    pub fn recommended() -> Self {
+        Self::new(3, 0.83)
+    }
+
+    /// Transformed dimensionality for raw dimensionality `d`.
+    pub fn dim_out(&self, d: usize) -> usize {
+        d + self.m
+    }
+
+    /// Transform an item. `max_norm` is the normalisation base: the dataset
+    /// max for vanilla L2-ALSH, the *range-local* max for the §5 ranged
+    /// variant (that locality is exactly what sharpens Eq. 13's ρ_j).
+    pub fn transform_item(&self, x: &[f32], max_norm: f32, out: &mut Vec<f32>) {
+        assert!(max_norm > 0.0, "max_norm must be positive");
+        out.clear();
+        let scale = self.u / max_norm;
+        let mut sq = 0.0f32;
+        for &v in x {
+            let y = v * scale;
+            sq += y * y;
+            out.push(y);
+        }
+        // Append ||Ux||^2, ||Ux||^4, ..., ||Ux||^{2^m} by repeated squaring.
+        let mut p = sq;
+        for _ in 0..self.m {
+            out.push(p);
+            p = p * p;
+        }
+    }
+
+    /// Transform a query: unit-normalise, append `m` halves.
+    pub fn transform_query(&self, q: &[f32], out: &mut Vec<f32>) {
+        out.clear();
+        let norm = q.iter().map(|v| v * v).sum::<f32>().sqrt().max(1e-30);
+        let inv = 1.0 / norm;
+        out.extend(q.iter().map(|&v| v * inv));
+        out.extend(std::iter::repeat(0.5).take(self.m));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dims_and_tail_powers() {
+        let t = L2AlshTransform::new(3, 0.8);
+        let mut out = Vec::new();
+        t.transform_item(&[1.0, 0.0], 1.0, &mut out);
+        assert_eq!(out.len(), t.dim_out(2));
+        // ||Ux||^2 = 0.64, then 0.64^2, 0.64^4.
+        assert!((out[2] - 0.64).abs() < 1e-6);
+        assert!((out[3] - 0.64f32.powi(2)).abs() < 1e-6);
+        assert!((out[4] - 0.64f32.powi(4)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn query_tail_is_halves() {
+        let t = L2AlshTransform::recommended();
+        let mut out = Vec::new();
+        t.transform_query(&[3.0, 4.0], &mut out);
+        assert_eq!(&out[..2], &[0.6, 0.8]);
+        assert_eq!(&out[2..], &[0.5, 0.5, 0.5]);
+    }
+
+    #[test]
+    fn eq6_distance_identity() {
+        // ||P(x)-Q(q)||^2 == 1 + m/4 - 2*Ux.q + ||Ux||^{2^{m+1}}
+        let t = L2AlshTransform::new(2, 0.7);
+        let x = [0.4f32, -0.2, 0.5];
+        let q = [0.1f32, 0.9, -0.3];
+        let max_norm = 1.3f32;
+        let (mut px, mut pq) = (Vec::new(), Vec::new());
+        t.transform_item(&x, max_norm, &mut px);
+        t.transform_query(&q, &mut pq);
+        let d2: f32 = px.iter().zip(&pq).map(|(a, b)| (a - b) * (a - b)).sum();
+
+        let qn = q.iter().map(|v| v * v).sum::<f32>().sqrt();
+        let scale = t.u / max_norm;
+        let ux: Vec<f32> = x.iter().map(|v| v * scale).collect();
+        let ux_norm2: f32 = ux.iter().map(|v| v * v).sum();
+        let ip: f32 = ux.iter().zip(&q).map(|(a, b)| a * b / qn).sum();
+        let want = 1.0 + t.m as f32 / 4.0 - 2.0 * ip + ux_norm2.powi(2i32.pow(t.m as u32));
+        assert!((d2 - want).abs() < 1e-5, "{d2} vs {want}");
+    }
+
+    #[test]
+    fn scaling_bounds_norm_by_u() {
+        let t = L2AlshTransform::recommended();
+        let mut out = Vec::new();
+        let x = [5.0f32, 12.0]; // norm 13 == dataset max
+        t.transform_item(&x, 13.0, &mut out);
+        let scaled_norm = (out[0] * out[0] + out[1] * out[1]).sqrt();
+        assert!((scaled_norm - t.u).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "U must be in")]
+    fn rejects_u_of_one() {
+        L2AlshTransform::new(3, 1.0);
+    }
+}

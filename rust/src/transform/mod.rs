@@ -1,0 +1,13 @@
+//! The MIPS→similarity-search reductions compared in the paper.
+//!
+//! - [`simple`]: SIMPLE-LSH's symmetric transform (Eq. 8) — used by both
+//!   SIMPLE-LSH (global `U`) and RANGE-LSH (per-range `U_j`).
+//! - [`l2alsh`]: L2-ALSH's asymmetric transform pair (Eq. 5).
+
+pub mod l2alsh;
+pub mod sign_alsh;
+pub mod simple;
+
+pub use l2alsh::L2AlshTransform;
+pub use sign_alsh::SignAlshTransform;
+pub use simple::{transform_item, transform_query};

@@ -1,0 +1,127 @@
+//! SIGN-ALSH transform pair (Shrivastava & Li, UAI 2015) — the asymmetric
+//! MIPS→angular reduction the paper's §1 cites as L2-ALSH's successor and
+//! SIMPLE-LSH's immediate predecessor:
+//!
+//! `P(x) = [Ux ; 1/2 − ||Ux||^2 ; 1/2 − ||Ux||^4 ; ... ; 1/2 − ||Ux||^{2^m}]`
+//! `Q(q) = [q/||q|| ; 0 ; ... ; 0]`
+//!
+//! so `P(x)·Q(q) = U·(x·q)/||q||`: inner products map to (unnormalised)
+//! cosines and sign random projection applies. Unlike SIMPLE-LSH the
+//! transformed items do **not** have unit norm — `||P(x)||` varies with
+//! `||x||`, which is exactly why Neyshabur & Srebro could prove SIMPLE-LSH
+//! universal and SIGN-ALSH not. Recommended parameters m = 2, U = 0.75.
+
+/// SIGN-ALSH transform with fixed `(m, U)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SignAlshTransform {
+    /// Number of appended norm terms.
+    pub m: usize,
+    /// Scaling target, in (0, 1).
+    pub u: f32,
+}
+
+impl SignAlshTransform {
+    pub fn new(m: usize, u: f32) -> Self {
+        assert!(m >= 1, "need at least one norm term");
+        assert!(u > 0.0 && u < 1.0, "U must be in (0,1), got {u}");
+        Self { m, u }
+    }
+
+    /// The authors' recommended configuration `m = 2, U = 0.75`.
+    pub fn recommended() -> Self {
+        Self::new(2, 0.75)
+    }
+
+    pub fn dim_out(&self, d: usize) -> usize {
+        d + self.m
+    }
+
+    /// Transform an item scaled against `max_norm` (global for vanilla
+    /// SIGN-ALSH; a range-local max would give the §5-style variant).
+    pub fn transform_item(&self, x: &[f32], max_norm: f32, out: &mut Vec<f32>) {
+        assert!(max_norm > 0.0, "max_norm must be positive");
+        out.clear();
+        let scale = self.u / max_norm;
+        let mut sq = 0.0f32;
+        for &v in x {
+            let y = v * scale;
+            sq += y * y;
+            out.push(y);
+        }
+        let mut p = sq;
+        for _ in 0..self.m {
+            out.push(0.5 - p);
+            p = p * p;
+        }
+    }
+
+    /// Transform a query: unit-normalise, zero-pad the `m` tail slots.
+    pub fn transform_query(&self, q: &[f32], out: &mut Vec<f32>) {
+        out.clear();
+        let norm = q.iter().map(|v| v * v).sum::<f32>().sqrt().max(1e-30);
+        let inv = 1.0 / norm;
+        out.extend(q.iter().map(|&v| v * inv));
+        out.extend(std::iter::repeat(0.0).take(self.m));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inner_product_identity() {
+        // P(x).Q(q) == U * (x.q) / (max_norm * ||q||).
+        let t = SignAlshTransform::recommended();
+        let x = [0.3f32, -0.8, 0.5];
+        let q = [1.0f32, 0.2, -0.4];
+        let max_norm = 1.5f32;
+        let (mut px, mut pq) = (Vec::new(), Vec::new());
+        t.transform_item(&x, max_norm, &mut px);
+        t.transform_query(&q, &mut pq);
+        let lhs: f32 = px.iter().zip(&pq).map(|(a, b)| a * b).sum();
+        let qn = q.iter().map(|v| v * v).sum::<f32>().sqrt();
+        let rhs = t.u * x.iter().zip(&q).map(|(a, b)| a * b).sum::<f32>() / (max_norm * qn);
+        assert!((lhs - rhs).abs() < 1e-6, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn tail_terms_are_half_minus_norm_powers() {
+        let t = SignAlshTransform::new(3, 0.8);
+        let mut out = Vec::new();
+        t.transform_item(&[1.0, 0.0], 1.0, &mut out); // ||Ux||^2 = 0.64
+        assert_eq!(out.len(), 5);
+        assert!((out[2] - (0.5 - 0.64)).abs() < 1e-6);
+        assert!((out[3] - (0.5 - 0.64f32.powi(2))).abs() < 1e-6);
+        assert!((out[4] - (0.5 - 0.64f32.powi(4))).abs() < 1e-6);
+    }
+
+    #[test]
+    fn query_tail_is_zero() {
+        let t = SignAlshTransform::recommended();
+        let mut out = Vec::new();
+        t.transform_query(&[3.0, 4.0], &mut out);
+        assert_eq!(&out[..2], &[0.6, 0.8]);
+        assert_eq!(&out[2..], &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn transformed_norm_is_bounded() {
+        // ||P(x)||^2 = ||Ux||^2 + sum (1/2 - ||Ux||^{2^i})^2 <= m/4 + something
+        // finite; just check boundedness across norms in [0, max].
+        let t = SignAlshTransform::recommended();
+        let mut out = Vec::new();
+        for i in 0..=10 {
+            let v = i as f32 / 10.0;
+            t.transform_item(&[v, 0.0], 1.0, &mut out);
+            let n2: f32 = out.iter().map(|x| x * x).sum();
+            assert!(n2 <= 1.0 + t.m as f32 / 4.0 + 1e-5, "||P||^2 = {n2} at v={v}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "U must be in")]
+    fn rejects_bad_u() {
+        SignAlshTransform::new(2, 1.5);
+    }
+}

@@ -1,0 +1,110 @@
+//! SIMPLE-LSH transform (paper Eq. 8), the symmetric MIPS→angular reduction.
+//!
+//! Item: `P(x) = [x/u ; sqrt(1 - ||x/u||^2)]` — on the unit sphere whenever
+//! `||x|| <= u`. Query: `P(q) = [q/||q|| ; 0]`. Then
+//! `P(q).P(x) = q.x / (u ||q||)`: inner-product order is preserved and MIPS
+//! reduces to angular search, solvable with sign random projection.
+//!
+//! The whole paper hangs on the scalar `u`: SIMPLE-LSH must use the global
+//! max norm, so a long-tailed norm distribution drives `||x||/u → 0` and the
+//! appended `sqrt(1-..)` coordinate dominates (paper §3.1). RANGE-LSH calls
+//! this same function with the *local* `U_j`.
+
+/// Transform one item row into `out` (length `x.len() + 1`).
+///
+/// Round-off guard: for `||x|| == u` exactly the radicand can go slightly
+/// negative in f32; clamp to 0 (matches the L2 graph's `max(0, .)`).
+pub fn transform_item(x: &[f32], u: f32, out: &mut Vec<f32>) {
+    assert!(u > 0.0, "normalisation constant must be positive, got {u}");
+    out.clear();
+    let inv = 1.0 / u;
+    let mut sq = 0.0f32;
+    for &v in x {
+        let y = v * inv;
+        sq += y * y;
+        out.push(y);
+    }
+    out.push((1.0 - sq).max(0.0).sqrt());
+}
+
+/// Transform one query row into `out` (length `q.len() + 1`).
+///
+/// Zero queries (norm 0) are mapped to the zero vector with zero tail —
+/// they hash arbitrarily, matching the L2 graph's epsilon-floor behaviour.
+pub fn transform_query(q: &[f32], out: &mut Vec<f32>) {
+    out.clear();
+    let norm = q.iter().map(|v| v * v).sum::<f32>().sqrt().max(1e-30);
+    let inv = 1.0 / norm;
+    out.extend(q.iter().map(|&v| v * inv));
+    out.push(0.0);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn norm(v: &[f32]) -> f32 {
+        v.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    #[test]
+    fn item_lands_on_unit_sphere() {
+        let mut out = Vec::new();
+        transform_item(&[3.0, 4.0], 10.0, &mut out);
+        assert_eq!(out.len(), 3);
+        assert!((norm(&out) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn item_at_max_norm_has_zero_tail() {
+        let mut out = Vec::new();
+        transform_item(&[3.0, 4.0], 5.0, &mut out);
+        assert!((out[2]).abs() < 1e-3);
+        assert!((out[0] - 0.6).abs() < 1e-6);
+        assert!((out[1] - 0.8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn small_item_is_tail_dominated() {
+        // The paper's §3.1 pathology: ||x|| << u makes the appended
+        // coordinate carry almost all of the transformed vector's mass.
+        let mut out = Vec::new();
+        transform_item(&[0.1, 0.0], 10.0, &mut out);
+        assert!(out[2] > 0.99, "tail {} should dominate", out[2]);
+    }
+
+    #[test]
+    fn query_is_unit_with_zero_tail() {
+        let mut out = Vec::new();
+        transform_query(&[1.0, 2.0, 2.0], &mut out);
+        assert_eq!(out.len(), 4);
+        assert!((norm(&out) - 1.0).abs() < 1e-6);
+        assert_eq!(out[3], 0.0);
+    }
+
+    #[test]
+    fn zero_query_is_finite() {
+        let mut out = Vec::new();
+        transform_query(&[0.0, 0.0], &mut out);
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn transform_pair_preserves_inner_product_up_to_scale() {
+        // P(q).P(x) == q.x / (u ||q||) — the Eq. 8 identity.
+        let (x, q, u) = ([0.5f32, -1.0, 2.0], [1.0f32, 0.3, -0.7], 4.0);
+        let (mut px, mut pq) = (Vec::new(), Vec::new());
+        transform_item(&x, u, &mut px);
+        transform_query(&q, &mut pq);
+        let lhs: f32 = px.iter().zip(&pq).map(|(a, b)| a * b).sum();
+        let qn = norm(&q);
+        let rhs: f32 = x.iter().zip(&q).map(|(a, b)| a * b).sum::<f32>() / (u * qn);
+        assert!((lhs - rhs).abs() < 1e-6, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn rejects_nonpositive_u() {
+        transform_item(&[1.0], 0.0, &mut Vec::new());
+    }
+}

@@ -1,0 +1,129 @@
+//! Little-endian binary IO helpers for the on-disk formats
+//! (`.rdat` datasets, `.rlsh` indexes).
+
+use std::io::{Read, Write};
+
+use anyhow::Result;
+
+pub fn write_u8(w: &mut impl Write, v: u8) -> Result<()> {
+    w.write_all(&[v])?;
+    Ok(())
+}
+
+pub fn write_u32(w: &mut impl Write, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+pub fn write_u64(w: &mut impl Write, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+pub fn write_f32(w: &mut impl Write, v: f32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+pub fn write_u32s(w: &mut impl Write, vs: &[u32]) -> Result<()> {
+    write_u64(w, vs.len() as u64)?;
+    for &v in vs {
+        write_u32(w, v)?;
+    }
+    Ok(())
+}
+
+pub fn write_u64s(w: &mut impl Write, vs: &[u64]) -> Result<()> {
+    write_u64(w, vs.len() as u64)?;
+    for &v in vs {
+        write_u64(w, v)?;
+    }
+    Ok(())
+}
+
+pub fn write_f32s(w: &mut impl Write, vs: &[f32]) -> Result<()> {
+    write_u64(w, vs.len() as u64)?;
+    for &v in vs {
+        write_f32(w, v)?;
+    }
+    Ok(())
+}
+
+pub fn read_u8(r: &mut impl Read) -> Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
+pub fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+pub fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+pub fn read_f32(r: &mut impl Read) -> Result<f32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(f32::from_le_bytes(b))
+}
+
+/// Bounded length read: fails fast on corrupt headers instead of OOMing.
+fn read_len(r: &mut impl Read) -> Result<usize> {
+    let len = read_u64(r)?;
+    anyhow::ensure!(len <= (1 << 34), "implausible length {len} (corrupt file?)");
+    Ok(len as usize)
+}
+
+pub fn read_u32s(r: &mut impl Read) -> Result<Vec<u32>> {
+    let len = read_len(r)?;
+    (0..len).map(|_| read_u32(r)).collect()
+}
+
+pub fn read_u64s(r: &mut impl Read) -> Result<Vec<u64>> {
+    let len = read_len(r)?;
+    (0..len).map(|_| read_u64(r)).collect()
+}
+
+pub fn read_f32s(r: &mut impl Read) -> Result<Vec<f32>> {
+    let len = read_len(r)?;
+    (0..len).map(|_| read_f32(r)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips_scalars_and_vectors() {
+        let mut buf = Vec::new();
+        write_u8(&mut buf, 7).unwrap();
+        write_u32(&mut buf, 0xDEAD_BEEF).unwrap();
+        write_u64(&mut buf, u64::MAX - 1).unwrap();
+        write_f32(&mut buf, -0.5).unwrap();
+        write_u32s(&mut buf, &[1, 2, 3]).unwrap();
+        write_u64s(&mut buf, &[9, 8]).unwrap();
+        write_f32s(&mut buf, &[0.25, -1.0]).unwrap();
+        let mut r = buf.as_slice();
+        assert_eq!(read_u8(&mut r).unwrap(), 7);
+        assert_eq!(read_u32(&mut r).unwrap(), 0xDEAD_BEEF);
+        assert_eq!(read_u64(&mut r).unwrap(), u64::MAX - 1);
+        assert_eq!(read_f32(&mut r).unwrap(), -0.5);
+        assert_eq!(read_u32s(&mut r).unwrap(), vec![1, 2, 3]);
+        assert_eq!(read_u64s(&mut r).unwrap(), vec![9, 8]);
+        assert_eq!(read_f32s(&mut r).unwrap(), vec![0.25, -1.0]);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn rejects_implausible_lengths() {
+        let mut buf = Vec::new();
+        write_u64(&mut buf, u64::MAX).unwrap();
+        assert!(read_u32s(&mut buf.as_slice()).is_err());
+    }
+}

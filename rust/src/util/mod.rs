@@ -1,0 +1,20 @@
+//! In-tree substrates. The build is fully offline (only the `xla` PJRT
+//! bindings and `anyhow` are vendored), so the infrastructure a crates.io
+//! project would pull in is implemented here from scratch:
+//!
+//! - [`rng`] — seeded xoshiro256++ PRNG with normal / log-normal / uniform
+//!   sampling (replaces `rand` + `rand_distr`).
+//! - [`par`] — scoped data-parallel helpers over `std::thread` (replaces
+//!   `rayon` for this crate's embarrassingly parallel loops).
+//! - [`json`] — minimal JSON parser/writer (replaces `serde_json`; parses
+//!   the AOT `manifest.json`, writes experiment results).
+//! - [`toml`] — minimal TOML-subset parser (replaces `toml` for the
+//!   config system).
+
+pub mod bytes;
+pub mod fxhash;
+pub mod json;
+pub mod par;
+pub mod rng;
+pub mod tmp;
+pub mod toml;

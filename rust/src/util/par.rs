@@ -1,0 +1,211 @@
+//! Scoped data-parallel helpers over `std::thread` — the crate's rayon
+//! replacement. All loops here are embarrassingly parallel over contiguous
+//! index blocks, so static block partitioning is within a few percent of a
+//! work-stealing pool at far less machinery.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Worker count: `RANGELSH_THREADS` override, else available parallelism.
+pub fn n_threads() -> usize {
+    if let Ok(v) = std::env::var("RANGELSH_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map_or(4, |n| n.get())
+}
+
+/// Parallel map over `0..n`: returns `vec![f(0), f(1), ..., f(n-1)]`.
+/// Falls back to serial for `n < 64` (cheap-per-item default).
+pub fn par_map<R, F>(n: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    par_map_cutoff(n, 64, f)
+}
+
+/// [`par_map`] with an explicit serial cutoff — use a small cutoff when
+/// each item is expensive (e.g. a multi-ms index probe).
+pub fn par_map_cutoff<R, F>(n: usize, cutoff: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let threads = n_threads().min(n.max(1));
+    if threads <= 1 || n < cutoff {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    let chunk = n.div_ceil(threads);
+    let slots = out.as_mut_slice();
+    std::thread::scope(|scope| {
+        for (t, block) in slots.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            scope.spawn(move || {
+                let base = t * chunk;
+                for (i, slot) in block.iter_mut().enumerate() {
+                    *slot = Some(f(base + i));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("worker filled every slot")).collect()
+}
+
+/// Parallel fold: map each index then combine with `merge` (associative).
+pub fn par_fold<A, F, M>(n: usize, identity: impl Fn() -> A + Sync, f: F, merge: M) -> A
+where
+    A: Send,
+    F: Fn(usize, &mut A) + Sync,
+    M: Fn(A, A) -> A,
+{
+    let threads = n_threads().min(n.max(1));
+    if threads <= 1 || n < 64 {
+        let mut acc = identity();
+        for i in 0..n {
+            f(i, &mut acc);
+        }
+        return acc;
+    }
+    let chunk = n.div_ceil(threads);
+    let mut partials: Vec<A> = Vec::with_capacity(threads);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for t in 0..threads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let f = &f;
+            let identity = &identity;
+            handles.push(scope.spawn(move || {
+                let mut acc = identity();
+                for i in lo..hi {
+                    f(i, &mut acc);
+                }
+                acc
+            }));
+        }
+        for h in handles {
+            partials.push(h.join().expect("par_fold worker panicked"));
+        }
+    });
+    let mut it = partials.into_iter();
+    let first = it.next().expect("at least one partial");
+    it.fold(first, merge)
+}
+
+/// Parallel for-each over mutable, disjoint row chunks of `data`
+/// (`rows_per_item` elements each): `f(item_index, row_slice)`.
+pub fn par_rows_mut<T, F>(data: &mut [T], rows_per_item: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(rows_per_item > 0);
+    assert_eq!(data.len() % rows_per_item, 0);
+    let n = data.len() / rows_per_item;
+    let threads = n_threads().min(n.max(1));
+    if threads <= 1 || n < 64 {
+        for (i, row) in data.chunks_mut(rows_per_item).enumerate() {
+            f(i, row);
+        }
+        return;
+    }
+    let chunk_items = n.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (t, block) in data.chunks_mut(chunk_items * rows_per_item).enumerate() {
+            let f = &f;
+            scope.spawn(move || {
+                let base = t * chunk_items;
+                for (i, row) in block.chunks_mut(rows_per_item).enumerate() {
+                    f(base + i, row);
+                }
+            });
+        }
+    });
+}
+
+/// Progress-friendly atomic counter (used by long benches).
+#[derive(Default)]
+pub struct Counter(AtomicUsize);
+
+impl Counter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    pub fn add(&self, v: usize) -> usize {
+        self.0.fetch_add(v, Ordering::Relaxed) + v
+    }
+    pub fn get(&self) -> usize {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_matches_serial() {
+        let got = par_map(1000, |i| i * i);
+        let want: Vec<usize> = (0..1000).map(|i| i * i).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn par_map_small_n() {
+        assert_eq!(par_map(3, |i| i + 1), vec![1, 2, 3]);
+        assert_eq!(par_map(0, |i| i), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn par_fold_sums() {
+        let total = par_fold(
+            10_000,
+            || 0u64,
+            |i, acc| *acc += i as u64,
+            |a, b| a + b,
+        );
+        assert_eq!(total, (0..10_000u64).sum());
+    }
+
+    #[test]
+    fn par_rows_mut_touches_every_row_once() {
+        let mut data = vec![0u32; 500 * 4];
+        par_rows_mut(&mut data, 4, |i, row| {
+            for v in row.iter_mut() {
+                *v += i as u32 + 1;
+            }
+        });
+        for (i, row) in data.chunks(4).enumerate() {
+            assert!(row.iter().all(|&v| v == i as u32 + 1), "row {i}");
+        }
+    }
+
+    #[test]
+    fn counter_accumulates() {
+        let c = Counter::new();
+        let total = par_fold(
+            100,
+            || 0usize,
+            |_, acc| {
+                c.add(1);
+                *acc += 1;
+            },
+            |a, b| a + b,
+        );
+        assert_eq!(total, 100);
+        assert_eq!(c.get(), 100);
+    }
+
+    #[test]
+    fn n_threads_is_positive() {
+        assert!(n_threads() >= 1);
+    }
+}

@@ -1,0 +1,59 @@
+//! Unique temp-file paths with drop cleanup (tempfile stand-in, offline
+//! build). Used by IO tests and the CLI's scratch outputs.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// A unique path under the system temp dir, removed (best-effort) on drop.
+pub struct TempPath(PathBuf);
+
+impl TempPath {
+    pub fn new(tag: &str) -> Self {
+        let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir().join(format!(
+            "rangelsh-{}-{}-{}-{}",
+            tag,
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map_or(0, |d| d.as_nanos() as u64),
+            n
+        ));
+        Self(path)
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.0
+    }
+}
+
+impl Drop for TempPath {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.0);
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paths_are_unique() {
+        let a = TempPath::new("t");
+        let b = TempPath::new("t");
+        assert_ne!(a.path(), b.path());
+    }
+
+    #[test]
+    fn drop_removes_file() {
+        let p = TempPath::new("drop");
+        let path = p.path().to_path_buf();
+        std::fs::write(&path, b"x").unwrap();
+        assert!(path.exists());
+        drop(p);
+        assert!(!path.exists());
+    }
+}

@@ -1,0 +1,303 @@
+//! Minimal TOML-subset parser for the config system. Supports:
+//! `[section]` headers, `key = value` with string / integer / float /
+//! boolean / homogeneous scalar arrays, `#` comments, and blank lines.
+//! That covers every config this repo ships (`configs/*.toml`).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed scalar or scalar array.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Some(*i as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64_array(&self) -> Option<Vec<f64>> {
+        match self {
+            TomlValue::Arr(v) => v.iter().map(|x| x.as_f64()).collect(),
+            _ => None,
+        }
+    }
+}
+
+/// section name → key → value. Keys before any section land in `""`.
+pub type TomlDoc = BTreeMap<String, BTreeMap<String, TomlValue>>;
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> Result<TomlDoc> {
+    let mut doc: TomlDoc = BTreeMap::new();
+    let mut section = String::new();
+    doc.entry(section.clone()).or_default();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .with_context(|| format!("line {}: unterminated section header", lineno + 1))?
+                .trim();
+            if name.is_empty() || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') {
+                bail!("line {}: bad section name {:?}", lineno + 1, name);
+            }
+            section = name.to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = key.trim();
+        if key.is_empty() {
+            bail!("line {}: empty key", lineno + 1);
+        }
+        let value = parse_value(value.trim())
+            .with_context(|| format!("line {}: bad value", lineno + 1))?;
+        doc.get_mut(&section)
+            .expect("section entry exists")
+            .insert(key.to_string(), value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .context("unterminated string")?;
+        if inner.contains('"') {
+            bail!("embedded quote in string value");
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').context("unterminated array")?;
+        let mut out = Vec::new();
+        for part in inner.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            out.push(parse_value(part)?);
+        }
+        return Ok(TomlValue::Arr(out));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+/// Typed accessor helper with good error messages.
+pub struct Section<'a> {
+    pub name: &'a str,
+    map: Option<&'a BTreeMap<String, TomlValue>>,
+}
+
+impl<'a> Section<'a> {
+    pub fn of(doc: &'a TomlDoc, name: &'a str) -> Self {
+        Self { name, map: doc.get(name) }
+    }
+
+    pub fn exists(&self) -> bool {
+        self.map.is_some()
+    }
+
+    pub fn get(&self, key: &str) -> Option<&'a TomlValue> {
+        self.map.and_then(|m| m.get(key))
+    }
+
+    pub fn require(&self, key: &str) -> Result<&'a TomlValue> {
+        self.get(key)
+            .with_context(|| format!("missing key {:?} in section [{}]", key, self.name))
+    }
+
+    pub fn str_req(&self, key: &str) -> Result<&'a str> {
+        self.require(key)?
+            .as_str()
+            .with_context(|| format!("[{}] {key} must be a string", self.name))
+    }
+
+    pub fn usize_req(&self, key: &str) -> Result<usize> {
+        self.require(key)?
+            .as_usize()
+            .with_context(|| format!("[{}] {key} must be a non-negative integer", self.name))
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_usize()
+                .with_context(|| format!("[{}] {key} must be a non-negative integer", self.name)),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_u64()
+                .with_context(|| format!("[{}] {key} must be a non-negative integer", self.name)),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_f64()
+                .with_context(|| format!("[{}] {key} must be a number", self.name)),
+        }
+    }
+
+    pub fn str_or(&self, key: &str, default: &'a str) -> Result<&'a str> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_str()
+                .with_context(|| format!("[{}] {key} must be a string", self.name)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"
+# experiment config
+[dataset]
+kind = "longtail_sift"   # like ImageNet SIFT
+n_items = 200000
+sigma = 0.35
+correlated = true
+
+[eval]
+recall_targets = [0.5, 0.8, 0.9]
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse(DOC).unwrap();
+        let ds = Section::of(&doc, "dataset");
+        assert_eq!(ds.str_req("kind").unwrap(), "longtail_sift");
+        assert_eq!(ds.usize_req("n_items").unwrap(), 200_000);
+        assert_eq!(ds.f64_or("sigma", 0.0).unwrap(), 0.35);
+        assert_eq!(ds.get("correlated").unwrap().as_bool(), Some(true));
+        let ev = Section::of(&doc, "eval");
+        assert_eq!(
+            ev.get("recall_targets").unwrap().as_f64_array().unwrap(),
+            vec![0.5, 0.8, 0.9]
+        );
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let doc = parse("# only a comment\n\nx = 1\n").unwrap();
+        assert_eq!(doc[""]["x"], TomlValue::Int(1));
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = parse(r##"name = "a#b""##).unwrap();
+        assert_eq!(doc[""]["name"].as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn defaults_apply_for_missing_keys() {
+        let doc = parse("[s]\n").unwrap();
+        let s = Section::of(&doc, "s");
+        assert_eq!(s.usize_or("absent", 7).unwrap(), 7);
+        assert!(s.usize_req("absent").is_err());
+    }
+
+    #[test]
+    fn missing_section_reports_cleanly() {
+        let doc = parse("").unwrap();
+        let s = Section::of(&doc, "nope");
+        assert!(!s.exists());
+        let err = s.str_req("k").unwrap_err();
+        assert!(format!("{err:#}").contains("[nope]"));
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(parse("[unclosed\n").is_err());
+        assert!(parse("just a token\n").is_err());
+        assert!(parse("k = \"open\n").is_err());
+        assert!(parse("k = [1, 2\n").is_err());
+    }
+
+    #[test]
+    fn negative_and_float_values() {
+        let doc = parse("a = -5\nb = -0.25\n").unwrap();
+        assert_eq!(doc[""]["a"], TomlValue::Int(-5));
+        assert_eq!(doc[""]["b"].as_f64(), Some(-0.25));
+        assert_eq!(doc[""]["a"].as_usize(), None);
+    }
+}

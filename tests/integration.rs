@@ -1,0 +1,157 @@
+//! Cross-module integration tests over the native path: dataset → index →
+//! probe → recall → serving engine, plus CLI-level config parsing.
+
+use std::sync::Arc;
+
+use rangelsh::config::{Config, IndexAlgo, ServeConfig};
+use rangelsh::coordinator::{BatchPolicy, SearchEngine};
+use rangelsh::data::{load_dataset, save_dataset, synthetic};
+use rangelsh::eval::harness::{ground_truth, run_curve, CurveSpec};
+use rangelsh::eval::recall::geometric_checkpoints;
+use rangelsh::hash::NativeHasher;
+use rangelsh::index::range::{RangeLshIndex, RangeLshParams};
+use rangelsh::index::MipsIndex;
+
+#[test]
+fn end_to_end_native_pipeline_reaches_high_recall() {
+    // Long-tail corpus, RANGE-LSH at the paper's L=32/m=32 point, probing
+    // 5% of the corpus. At this deliberately small scale (20K items,
+    // d=32, uncorrelated queries) the deterministic measurement is ~0.74
+    // recall@10 — demand 0.7 as the floor; the Fig-2 bench exercises the
+    // paper-scale operating points.
+    let items = synthetic::longtail_sift(20_000, 32, 0);
+    let queries = synthetic::gaussian_queries(100, 32, 1);
+    let gt = ground_truth(&items, &queries, 10);
+    let budget = items.len() / 20;
+    let cps = geometric_checkpoints(10, budget, 4);
+    let res = run_curve(
+        &items,
+        &queries,
+        &gt,
+        &cps,
+        &CurveSpec::new(IndexAlgo::RangeLsh, 32, 32),
+        "range",
+    )
+    .unwrap();
+    assert!(
+        res.curve.final_recall() >= 0.7,
+        "recall at 5% probe budget: {}",
+        res.curve.final_recall()
+    );
+}
+
+#[test]
+fn paper_headline_order_holds_on_longtail() {
+    // Fig. 2 qualitative shape at test scale: RANGE > SIMPLE >= L2-ALSH
+    // in probes-to-recall on long-tailed data.
+    let items = synthetic::longtail_sift(8_000, 24, 2);
+    let queries = synthetic::gaussian_queries(50, 24, 3);
+    let gt = ground_truth(&items, &queries, 10);
+    let cps = geometric_checkpoints(10, items.len(), 5);
+    let probes = |algo, m| {
+        run_curve(&items, &queries, &gt, &cps, &CurveSpec::new(algo, 16, m), "x")
+            .unwrap()
+            .curve
+            .probes_to_reach(0.8)
+            .unwrap_or(usize::MAX)
+    };
+    let range = probes(IndexAlgo::RangeLsh, 32);
+    let simple = probes(IndexAlgo::SimpleLsh, 1);
+    assert!(range < simple, "RANGE {range} !< SIMPLE {simple}");
+}
+
+#[test]
+fn uniform_norm_control_range_equals_simple() {
+    // §3.2: when all norms are equal RANGE-LSH degenerates gracefully —
+    // percentile ranges share U_j == U, so recall curves must be close.
+    let items = synthetic::uniform_norm(5_000, 16, 4);
+    let queries = synthetic::gaussian_queries(50, 16, 5);
+    let gt = ground_truth(&items, &queries, 10);
+    let cps = geometric_checkpoints(50, items.len(), 3);
+    let range = run_curve(
+        &items, &queries, &gt, &cps,
+        &CurveSpec::new(IndexAlgo::RangeLsh, 16, 16),
+        "r",
+    )
+    .unwrap();
+    let simple = run_curve(
+        &items, &queries, &gt, &cps,
+        &CurveSpec::new(IndexAlgo::SimpleLsh, 16, 1),
+        "s",
+    )
+    .unwrap();
+    // Same asymptote; mid-curve within a tolerance (different bit budgets:
+    // RANGE pays 4 id bits).
+    assert!((range.curve.final_recall() - simple.curve.final_recall()).abs() < 1e-9);
+    let mid = cps.len() / 2;
+    assert!(
+        (range.curve.recalls[mid] - simple.curve.recalls[mid]).abs() < 0.25,
+        "uniform-norm curves diverged: {} vs {}",
+        range.curve.recalls[mid],
+        simple.curve.recalls[mid]
+    );
+}
+
+#[test]
+fn dataset_io_round_trips_through_engine() {
+    let tmp = rangelsh::util::tmp::TempPath::new("integration-rdat");
+    let items = synthetic::longtail_sift(2_000, 16, 6);
+    save_dataset(&items, tmp.path()).unwrap();
+    let loaded = Arc::new(load_dataset(tmp.path()).unwrap());
+    assert_eq!(loaded.len(), 2_000);
+
+    let hasher = Arc::new(NativeHasher::new(16, 64, 7));
+    let index = Arc::new(
+        RangeLshIndex::build(&loaded, hasher.as_ref(), RangeLshParams::new(16, 8)).unwrap(),
+    );
+    let cfg = ServeConfig { probe_budget: 500, top_k: 5, ..Default::default() };
+    let engine = SearchEngine::new(index, loaded, hasher, cfg).unwrap();
+    let q = synthetic::gaussian_queries(1, 16, 8);
+    let res = engine.search(q.row(0)).unwrap();
+    assert_eq!(res.len(), 5);
+}
+
+#[test]
+fn server_workload_preserves_per_query_results() {
+    let items = Arc::new(synthetic::longtail_sift(3_000, 16, 9));
+    let hasher = Arc::new(NativeHasher::new(16, 64, 10));
+    let index = Arc::new(
+        RangeLshIndex::build(&items, hasher.as_ref(), RangeLshParams::new(16, 8)).unwrap(),
+    );
+    let cfg = ServeConfig { probe_budget: 300, top_k: 5, ..Default::default() };
+    let engine = Arc::new(SearchEngine::new(index, items, hasher, cfg).unwrap());
+    let queries = synthetic::gaussian_queries(40, 16, 11);
+    let policy = BatchPolicy::new(16, std::time::Duration::from_millis(2));
+    let (results, _) =
+        rangelsh::coordinator::server::drive_workload(engine.clone(), policy, &queries, 8)
+            .unwrap();
+    for qi in 0..queries.len() {
+        assert_eq!(results[qi], engine.search(queries.row(qi)).unwrap(), "query {qi}");
+    }
+}
+
+#[test]
+fn config_files_in_repo_parse() {
+    for f in ["configs/netflix_sim.toml", "configs/yahoo_sim.toml", "configs/imagenet_sim.toml"] {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(f);
+        let cfg = Config::from_path(&path).unwrap_or_else(|e| panic!("{f}: {e:#}"));
+        assert!(cfg.dataset.n_items > 0);
+    }
+}
+
+#[test]
+fn index_survives_pathological_datasets() {
+    let hasher = NativeHasher::new(4, 64, 0);
+    // Single item.
+    let one = synthetic::longtail_sift(1, 4, 0);
+    let idx = RangeLshIndex::build(&one, &hasher, RangeLshParams::new(16, 8)).unwrap();
+    let mut out = Vec::new();
+    idx.probe(&[1.0, 0.0, 0.0, 0.0], usize::MAX, &mut out);
+    assert_eq!(out, vec![0]);
+    // All-identical items (ties everywhere).
+    let same = rangelsh::data::Dataset::from_flat(4, [1.0f32, 2.0, 3.0, 4.0].repeat(100));
+    let idx = RangeLshIndex::build(&same, &hasher, RangeLshParams::new(16, 8)).unwrap();
+    let mut out = Vec::new();
+    idx.probe(&[1.0, 0.0, 0.0, 0.0], usize::MAX, &mut out);
+    assert_eq!(out.len(), 100);
+}

@@ -1,0 +1,132 @@
+//! PJRT integration: the AOT Pallas artifacts executed from Rust must
+//! agree with the native path. These tests require `make artifacts` to
+//! have run; they are skipped (with a notice) when `artifacts/` is absent
+//! so `cargo test` works on a fresh checkout.
+
+use std::sync::Arc;
+
+use rangelsh::data::synthetic;
+use rangelsh::eval::exact_topk;
+use rangelsh::hash::{ItemHasher, NativeHasher, Projection};
+use rangelsh::runtime::{PjrtHasher, PjrtScorer, RuntimeHandle};
+
+fn runtime() -> Option<RuntimeHandle> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts/ — run `make artifacts` first");
+        return None;
+    }
+    Some(RuntimeHandle::load(dir).expect("artifacts exist but failed to load"))
+}
+
+/// Fraction of differing code bits between two code vectors.
+fn bit_disagreement(a: &[u64], b: &[u64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let diff: u32 = a.iter().zip(b).map(|(x, y)| (x ^ y).count_ones()).sum();
+    diff as f64 / (a.len() as f64 * 64.0)
+}
+
+#[test]
+fn pjrt_item_codes_match_native() {
+    let Some(rt) = runtime() else { return };
+    for dim in rt.manifest().hash_dims() {
+        let proj = Arc::new(Projection::gaussian(dim + 1, 64, 7));
+        let pjrt = PjrtHasher::new(rt.clone(), proj.clone()).unwrap();
+        let native = NativeHasher::with_projection(proj);
+        // 3000 rows: one full block + a padded tail block.
+        let items = synthetic::longtail_sift(3000, dim, 1);
+        let u = items.max_norm();
+        let a = pjrt.hash_items(items.flat(), u).unwrap();
+        let b = native.hash_items(items.flat(), u).unwrap();
+        assert_eq!(a.len(), 3000);
+        // f32 reassociation can flip a bit when a dot product sits within
+        // an ulp of zero; bound the rate rather than demand exactness.
+        let rate = bit_disagreement(&a, &b);
+        assert!(rate < 1e-4, "dim {dim}: bit disagreement rate {rate}");
+    }
+}
+
+#[test]
+fn pjrt_query_codes_match_native() {
+    let Some(rt) = runtime() else { return };
+    for dim in rt.manifest().hash_dims() {
+        let proj = Arc::new(Projection::gaussian(dim + 1, 64, 8));
+        let pjrt = PjrtHasher::new(rt.clone(), proj.clone()).unwrap();
+        let native = NativeHasher::with_projection(proj);
+        let queries = synthetic::gaussian_queries(500, dim, 2);
+        let a = pjrt.hash_queries(queries.flat()).unwrap();
+        let b = native.hash_queries(queries.flat()).unwrap();
+        let rate = bit_disagreement(&a, &b);
+        assert!(rate < 1e-4, "dim {dim}: bit disagreement rate {rate}");
+    }
+}
+
+#[test]
+fn pjrt_scorer_matches_native_ground_truth() {
+    let Some(rt) = runtime() else { return };
+    let dim = rt.manifest().hash_dims()[0];
+    let items = synthetic::longtail_sift(2500, dim, 3);
+    let queries = synthetic::gaussian_queries(50, dim, 4);
+    let scorer = PjrtScorer::new(rt);
+    let pjrt_gt = scorer.exact_topk(&items, &queries, 10).unwrap();
+    let native_gt = exact_topk(&items, &queries, 10);
+    let mut agree = 0usize;
+    for (a, b) in pjrt_gt.iter().zip(&native_gt) {
+        agree += a.iter().filter(|id| b.contains(id)).count();
+    }
+    // Different summation orders can swap near-tied neighbours; demand
+    // near-total agreement rather than exact id-order equality.
+    let rate = agree as f64 / (queries.len() * 10) as f64;
+    assert!(rate > 0.995, "top-k agreement {rate}");
+}
+
+#[test]
+fn pjrt_index_build_equals_native_index_build() {
+    use rangelsh::index::range::{RangeLshIndex, RangeLshParams};
+    use rangelsh::index::MipsIndex;
+    let Some(rt) = runtime() else { return };
+    let dim = rt.manifest().hash_dims()[0];
+    let items = synthetic::longtail_sift(4000, dim, 5);
+    let proj = Arc::new(Projection::gaussian(dim + 1, 64, 9));
+    let pjrt = PjrtHasher::new(rt, proj.clone()).unwrap();
+    let native = NativeHasher::with_projection(proj);
+    let a = RangeLshIndex::build(&items, &pjrt, RangeLshParams::new(32, 16)).unwrap();
+    let b = RangeLshIndex::build(&items, &native, RangeLshParams::new(32, 16)).unwrap();
+    // Same partitioning, same panel ⇒ (near-)identical bucket structure.
+    let (sa, sb) = (a.stats(), b.stats());
+    assert_eq!(sa.n_partitions, sb.n_partitions);
+    let bucket_drift =
+        (sa.n_buckets as f64 - sb.n_buckets as f64).abs() / sb.n_buckets as f64;
+    assert!(bucket_drift < 0.01, "bucket count drift {bucket_drift}");
+    // Probe results for a query should be near-identical too.
+    let q = synthetic::gaussian_queries(1, dim, 6);
+    let (mut oa, mut ob) = (Vec::new(), Vec::new());
+    a.probe(q.row(0), 500, &mut oa);
+    b.probe(q.row(0), 500, &mut ob);
+    // Rare borderline-bit flips move items between buckets, and the
+    // budget cutoff then truncates different tails; 96% overlap is the
+    // deterministic measurement with ample slack for either effect.
+    let overlap = oa.iter().filter(|id| ob.contains(id)).count();
+    assert!(overlap >= 480, "probe overlap {overlap}/500");
+}
+
+#[test]
+fn runtime_rejects_wrong_shapes() {
+    let Some(rt) = runtime() else { return };
+    let dim = rt.manifest().hash_dims()[0];
+    // Bad block size must error, not crash.
+    let err = rt.hash_items_block(dim, vec![0.0; 17], 1.0, Arc::new(vec![0.0; (dim + 1) * 64]));
+    assert!(err.is_err());
+    // Bad projection size must error.
+    let block = vec![0.0f32; rt.manifest().item_block * dim];
+    let err = rt.hash_items_block(dim, block, 1.0, Arc::new(vec![0.0; 3]));
+    assert!(err.is_err());
+}
+
+#[test]
+fn pjrt_hasher_rejects_uncompiled_dim() {
+    let Some(rt) = runtime() else { return };
+    // dim 999 has no artifact.
+    let proj = Arc::new(Projection::gaussian(1000, 64, 0));
+    assert!(PjrtHasher::new(rt, proj).is_err());
+}

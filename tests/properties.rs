@@ -1,0 +1,237 @@
+//! Property-based tests (in-tree harness, offline build): randomised
+//! invariants over the coordinator's core data structures — the proptest
+//! role, driven by the seeded xoshiro RNG in `rangelsh::util::rng`.
+
+use rangelsh::data::{synthetic, Dataset};
+use rangelsh::hash::{hamming, mask_bits, matches, ItemHasher, NativeHasher};
+use rangelsh::index::metric::{s_hat, MetricOrder};
+use rangelsh::index::range::{RangeLshIndex, RangeLshParams};
+use rangelsh::index::simple::{SimpleLshIndex, SimpleLshParams};
+use rangelsh::index::{partition, BucketTable, MipsIndex, PartitionScheme};
+use rangelsh::theory::g_rho;
+use rangelsh::util::rng::Rng;
+
+/// Run `body` over `cases` seeded cases; report the failing seed.
+fn forall(cases: u64, body: impl Fn(&mut Rng, u64)) {
+    for seed in 0..cases {
+        let mut rng = Rng::seed_from_u64(0xBEEF ^ seed.wrapping_mul(0x9E3779B97F4A7C15));
+        body(&mut rng, seed);
+    }
+}
+
+#[test]
+fn prop_hamming_is_a_metric() {
+    forall(200, |rng, seed| {
+        let (a, b, c) = (rng.next_u64(), rng.next_u64(), rng.next_u64());
+        assert_eq!(hamming(a, a), 0, "seed {seed}");
+        assert_eq!(hamming(a, b), hamming(b, a), "seed {seed}");
+        assert!(
+            hamming(a, c) <= hamming(a, b) + hamming(b, c),
+            "triangle inequality, seed {seed}"
+        );
+    });
+}
+
+#[test]
+fn prop_matches_plus_hamming_is_bits() {
+    forall(200, |rng, seed| {
+        let bits = 1 + rng.gen_index(64);
+        let mask = mask_bits(bits);
+        let (a, b) = (rng.next_u64() & mask, rng.next_u64() & mask);
+        assert_eq!(
+            matches(a, b, bits) + hamming(a, b),
+            bits as u32,
+            "seed {seed} bits {bits}"
+        );
+    });
+}
+
+#[test]
+fn prop_partition_is_exact_cover() {
+    forall(30, |rng, seed| {
+        let n = 1 + rng.gen_index(400);
+        let m = 1 + rng.gen_index(40);
+        let dim = 2 + rng.gen_index(10);
+        let d = synthetic::longtail_sift(n, dim, seed);
+        for scheme in [PartitionScheme::Percentile, PartitionScheme::UniformRange] {
+            let parts = partition(&d, m, scheme);
+            let mut seen = vec![false; n];
+            for p in &parts {
+                assert!(!p.ids.is_empty(), "empty partition, seed {seed}");
+                for &id in &p.ids {
+                    assert!(!seen[id as usize], "duplicate, seed {seed} {scheme:?}");
+                    seen[id as usize] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "missing item, seed {seed} {scheme:?}");
+        }
+    });
+}
+
+#[test]
+fn prop_partition_ranges_are_norm_sorted() {
+    forall(30, |rng, seed| {
+        let n = 10 + rng.gen_index(300);
+        let m = 1 + rng.gen_index(16);
+        let d = synthetic::longtail_sift(n, 4, seed);
+        for scheme in [PartitionScheme::Percentile, PartitionScheme::UniformRange] {
+            let parts = partition(&d, m, scheme);
+            for w in parts.windows(2) {
+                assert!(
+                    w[0].u_max <= w[1].u_min + 1e-6,
+                    "ranges out of order, seed {seed} {scheme:?}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_metric_order_is_total_and_descending() {
+    forall(50, |rng, seed| {
+        let m = 1 + rng.gen_index(20);
+        let bits = 1 + rng.gen_index(40);
+        let eps = (rng.uniform01() * 0.9) as f32;
+        let us: Vec<f32> = (0..m).map(|_| rng.uniform(0.01, 2.0) as f32).collect();
+        let order = MetricOrder::build(&us, bits, eps);
+        assert_eq!(order.len(), m * (bits + 1), "seed {seed}");
+        let vals: Vec<f32> = order
+            .entries()
+            .iter()
+            .map(|&(j, l)| s_hat(us[j as usize], l, bits, eps))
+            .collect();
+        for w in vals.windows(2) {
+            assert!(w[0] >= w[1], "not descending, seed {seed}");
+        }
+    });
+}
+
+#[test]
+fn prop_probe_emits_each_item_exactly_once() {
+    forall(15, |rng, seed| {
+        let n = 50 + rng.gen_index(500);
+        let dim = 4 + rng.gen_index(12);
+        let bits = 8 + rng.gen_index(24);
+        let m = 1 + rng.gen_index(8);
+        let d = synthetic::longtail_sift(n, dim, seed);
+        let h = NativeHasher::new(dim, 64, seed ^ 0xFACE);
+        let idx = RangeLshIndex::build(&d, &h, RangeLshParams::new(bits.max(8), m)).unwrap();
+        let q = synthetic::gaussian_queries(1, dim, seed ^ 0xBEE);
+        let mut out = Vec::new();
+        idx.probe(q.row(0), usize::MAX, &mut out);
+        let mut sorted = out.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), n, "seed {seed}: dup or missing items");
+        assert_eq!(out.len(), n, "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_probe_budget_is_exact_when_feasible() {
+    forall(15, |rng, seed| {
+        let n = 100 + rng.gen_index(400);
+        let budget = 1 + rng.gen_index(n);
+        let d = synthetic::longtail_sift(n, 8, seed);
+        let h = NativeHasher::new(8, 64, seed);
+        let idx = SimpleLshIndex::build(&d, &h, SimpleLshParams::new(16)).unwrap();
+        let q = synthetic::gaussian_queries(1, 8, seed ^ 1);
+        let mut out = Vec::new();
+        idx.probe(q.row(0), budget, &mut out);
+        assert_eq!(out.len(), budget, "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_bucket_table_partitions_items_by_masked_code() {
+    forall(50, |rng, seed| {
+        let n = 1 + rng.gen_index(300);
+        let bits = 1 + rng.gen_index(30);
+        let codes: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+        let t = BucketTable::build(&codes, None, bits);
+        assert_eq!(t.n_items(), n);
+        let total: usize = t.buckets().map(|(_, items)| items.len()).sum();
+        assert_eq!(total, n, "seed {seed}");
+        let mask = mask_bits(bits);
+        for (code, items) in t.buckets() {
+            for &id in items {
+                assert_eq!(codes[id as usize] & mask, code, "seed {seed}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_recall_curves_are_monotone() {
+    forall(8, |rng, seed| {
+        let n = 300 + rng.gen_index(700);
+        let d = synthetic::longtail_sift(n, 8, seed);
+        let q = synthetic::gaussian_queries(10, 8, seed ^ 2);
+        let gt = rangelsh::eval::exact_topk(&d, &q, 5);
+        let h = NativeHasher::new(8, 64, seed ^ 3);
+        let m = 1 + rng.gen_index(8);
+        let idx = RangeLshIndex::build(&d, &h, RangeLshParams::new(16, m)).unwrap();
+        let cps = rangelsh::eval::recall::geometric_checkpoints(5, n, 4);
+        let curve = rangelsh::eval::recall_curve(&idx, &q, &gt, &cps);
+        for w in curve.recalls.windows(2) {
+            assert!(w[1] >= w[0] - 1e-12, "seed {seed}: recall decreased");
+        }
+        assert!((curve.final_recall() - 1.0).abs() < 1e-9, "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_g_rho_monotonicity() {
+    forall(100, |rng, seed| {
+        let c = rng.uniform(0.05, 0.95);
+        let s0 = rng.uniform(0.05, 0.95);
+        let s0_bigger = (s0 + rng.uniform(0.001, 1.0 - s0 - 1e-9)).min(1.0);
+        let r1 = g_rho(c, s0);
+        let r2 = g_rho(c, s0_bigger);
+        assert!((0.0..=1.0).contains(&r1), "seed {seed}");
+        assert!(r2 <= r1 + 1e-12, "seed {seed}: rho must decrease in S0");
+    });
+}
+
+#[test]
+fn prop_query_hash_scale_invariance() {
+    forall(50, |rng, seed| {
+        let dim = 2 + rng.gen_index(20);
+        let h = NativeHasher::new(dim, 64, seed);
+        let q: Vec<f32> = (0..dim).map(|_| rng.normal_f32()).collect();
+        let scale = rng.uniform(0.001, 1000.0) as f32;
+        let q2: Vec<f32> = q.iter().map(|v| v * scale).collect();
+        assert_eq!(
+            h.hash_queries(&q).unwrap(),
+            h.hash_queries(&q2).unwrap(),
+            "seed {seed}: query hash must be scale-invariant"
+        );
+    });
+}
+
+#[test]
+fn prop_engine_results_sorted_and_exact() {
+    use rangelsh::config::ServeConfig;
+    use rangelsh::coordinator::SearchEngine;
+    use std::sync::Arc;
+    forall(8, |rng, seed| {
+        let n = 200 + rng.gen_index(800);
+        let d: Arc<Dataset> = Arc::new(synthetic::longtail_sift(n, 8, seed));
+        let h = Arc::new(NativeHasher::new(8, 64, seed));
+        let idx =
+            Arc::new(RangeLshIndex::build(&d, h.as_ref(), RangeLshParams::new(16, 4)).unwrap());
+        let k = 1 + rng.gen_index(10);
+        let cfg = ServeConfig { probe_budget: n, top_k: k, ..Default::default() };
+        let engine = SearchEngine::new(idx, d.clone(), h, cfg).unwrap();
+        let q = synthetic::gaussian_queries(1, 8, seed ^ 4);
+        let res = engine.search(q.row(0)).unwrap();
+        assert_eq!(res.len(), k.min(n), "seed {seed}");
+        for w in res.windows(2) {
+            assert!(w[0].score >= w[1].score, "seed {seed}: unsorted results");
+        }
+        // Full-budget engine == exact top-k.
+        let gt = rangelsh::eval::exact_topk(&d, &q, k);
+        let ids: Vec<u32> = res.iter().map(|r| r.id).collect();
+        assert_eq!(ids, gt[0], "seed {seed}");
+    });
+}
