@@ -3,31 +3,76 @@
 //! Measures each stage of the serving path in isolation plus end-to-end:
 //!   1. bulk item hashing — native SIMD path vs AOT Pallas kernel via PJRT
 //!   2. query hashing (single + batched)
-//!   3. probe scheduling (counting sort + Eq. 12 schedule walk)
+//!   3. probe scheduling at each code width (64 / 128 / 256-bit codes) —
+//!      the counting sort + Eq. 12 schedule walk, i.e. the surface the
+//!      `CodeWord` genericization must not regress at width 64
 //!   4. exact re-rank
 //!   5. engine end-to-end (batched)
 //!   6. exact ground-truth scan (the brute-force baseline RANGE beats)
+//!
+//! Results are printed as a table and written to `BENCH_hotpath.json`
+//! (schema: see the repo-root file) so width-64 probe throughput can be
+//! diffed against the pre-refactor baseline across commits.
 //!
 //! Run with: `cargo bench --bench hotpath`
 
 use std::sync::Arc;
 
-use rangelsh::bench::{bench, Table};
+use rangelsh::bench::{bench, Table, Timing};
 use rangelsh::config::ServeConfig;
 use rangelsh::coordinator::SearchEngine;
 use rangelsh::data::synthetic;
 use rangelsh::eval::exact_topk;
-use rangelsh::hash::{ItemHasher, NativeHasher, Projection};
+use rangelsh::hash::{Code128, Code256, CodeWord, ItemHasher, NativeHasher, Projection};
 use rangelsh::index::range::{RangeLshIndex, RangeLshParams};
 use rangelsh::index::CodeProbe;
 use rangelsh::runtime::{PjrtHasher, RuntimeHandle, DEFAULT_ARTIFACT_DIR};
+use rangelsh::util::json::Json;
+
+/// One probe-throughput measurement at a given code width and budget.
+struct ProbeRow {
+    code_bits: usize,
+    budget: usize,
+    timing: Timing,
+}
+
+/// Build a RANGE-LSH index at width `C` over `items` and measure
+/// `probe_with_code` throughput at each budget.
+fn bench_probe_width<C: CodeWord>(
+    items: &rangelsh::data::Dataset,
+    query: &[f32],
+    code_bits: usize,
+    budgets: &[usize],
+    rows: &mut Vec<ProbeRow>,
+    table: &mut Table,
+) -> rangelsh::Result<()> {
+    let params = RangeLshParams::new(code_bits, 64);
+    let width = params.hash_bits().min(C::MAX_BITS);
+    let hasher: NativeHasher<C> = NativeHasher::new(items.dim(), width, 1);
+    let index: RangeLshIndex<C> = RangeLshIndex::build(items, &hasher, params)?;
+    let qcode = index.hash_query(query);
+    for &budget in budgets {
+        let t = bench(2, 20, || {
+            let mut out = Vec::with_capacity(budget);
+            index.probe_with_code(qcode, budget, &mut out);
+            std::hint::black_box(out);
+        });
+        table.row(vec![
+            format!("probe schedule L={code_bits} (budget {budget})"),
+            format!("{:?}", t.median),
+            format!("{:.0} probes/s", t.throughput(1)),
+        ]);
+        rows.push(ProbeRow { code_bits, budget, timing: t });
+    }
+    Ok(())
+}
 
 fn main() -> rangelsh::Result<()> {
     let (n, dim) = (100_000usize, 128usize);
     let items = Arc::new(synthetic::longtail_sift(n, dim, 42));
     let queries = synthetic::gaussian_queries(1024, dim, 7);
     let proj = Arc::new(Projection::gaussian(dim + 1, 64, 1));
-    let native = Arc::new(NativeHasher::with_projection(proj.clone()));
+    let native: Arc<NativeHasher> = Arc::new(NativeHasher::with_projection(proj.clone()));
     let u = items.max_norm();
     let mut table = Table::new(&["stage", "median", "throughput"]);
 
@@ -98,44 +143,52 @@ fn main() -> rangelsh::Result<()> {
         ]);
     }
 
-    // 3. probe scheduling
-    let index = Arc::new(RangeLshIndex::build(
+    // 3. probe scheduling across the code-width axis. L=32 is the paper's
+    // historical operating point (pre-refactor baseline row); 128/256 are
+    // the regimes the CodeWord refactor opens. Budgets as before.
+    let budgets = [512usize, 4096];
+    let mut probe_rows: Vec<ProbeRow> = Vec::new();
+    bench_probe_width::<u64>(&items, queries.row(0), 32, &budgets, &mut probe_rows, &mut table)?;
+    bench_probe_width::<u64>(&items, queries.row(0), 64, &budgets, &mut probe_rows, &mut table)?;
+    bench_probe_width::<Code128>(
         &items,
-        native.as_ref(),
-        RangeLshParams::new(32, 64),
-    )?);
-    let qcode = index.hash_query(queries.row(0));
-    for budget in [512usize, 4096] {
-        let t = bench(2, 20, || {
-            let mut out = Vec::with_capacity(budget);
-            index.probe_with_code(qcode, budget, &mut out);
-            std::hint::black_box(out);
-        });
-        table.row(vec![
-            format!("probe schedule (budget {budget})"),
-            format!("{:?}", t.median),
-            format!("{:.0} probes/s", t.throughput(1)),
-        ]);
-    }
+        queries.row(0),
+        128,
+        &budgets,
+        &mut probe_rows,
+        &mut table,
+    )?;
+    bench_probe_width::<Code256>(
+        &items,
+        queries.row(0),
+        256,
+        &budgets,
+        &mut probe_rows,
+        &mut table,
+    )?;
 
     // 4. exact re-rank of 4096 candidates
-    let mut cands: Vec<u32> = (0..4096u32).collect();
+    let cands: Vec<u32> = (0..4096u32).collect();
     let q0: Vec<f32> = queries.row(0).to_vec();
     let t = bench(2, 20, || {
         let mut c = cands.clone();
         rangelsh::runtime::PjrtScorer::rerank(&items, &q0, &mut c, 10);
         std::hint::black_box(c);
     });
-    cands.truncate(4096);
     table.row(vec![
         "re-rank 4096 candidates".into(),
         format!("{:?}", t.median),
         format!("{:.2} Mdots/s", t.throughput(4096) / 1e6),
     ]);
 
-    // 5. engine end-to-end, batched
+    // 5. engine end-to-end, batched (the original u64 serving path)
+    let index: Arc<RangeLshIndex> = Arc::new(RangeLshIndex::build(
+        &items,
+        native.as_ref(),
+        RangeLshParams::new(32, 64),
+    )?);
     let cfg = ServeConfig { probe_budget: 4096, top_k: 10, ..Default::default() };
-    let engine = SearchEngine::new(index.clone(), items.clone(), native.clone(), cfg)?;
+    let engine = SearchEngine::new(index, items.clone(), native.clone(), cfg)?;
     let batch = &qrows[..256 * dim];
     let t = bench(1, 5, || {
         std::hint::black_box(engine.search_batch(batch).unwrap());
@@ -158,5 +211,32 @@ fn main() -> rangelsh::Result<()> {
     ]);
 
     println!("{}", table.render());
+
+    // Machine-readable record for cross-commit regression diffs
+    // (acceptance: width-64 probe throughput within noise of baseline).
+    let json = Json::obj(vec![
+        ("bench", Json::Str("hotpath".into())),
+        ("n_items", Json::Num(n as f64)),
+        ("dim", Json::Num(dim as f64)),
+        (
+            "probe_schedule",
+            Json::Arr(
+                probe_rows
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("code_bits", Json::Num(r.code_bits as f64)),
+                            ("budget", Json::Num(r.budget as f64)),
+                            ("median_us", Json::Num(r.timing.median.as_secs_f64() * 1e6)),
+                            ("min_us", Json::Num(r.timing.min.as_secs_f64() * 1e6)),
+                            ("probes_per_sec", Json::Num(r.timing.throughput(1))),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    std::fs::write("BENCH_hotpath.json", json.to_string())?;
+    println!("wrote BENCH_hotpath.json");
     Ok(())
 }

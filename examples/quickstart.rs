@@ -27,9 +27,9 @@ fn main() -> rangelsh::Result<()> {
 
     // 2. Build RANGE-LSH (paper Alg. 1): 16-bit code budget, 32 norm
     //    ranges (5 id bits + 11 hash bits).
-    let hasher = NativeHasher::new(items.dim(), 64, 1);
-    let range = RangeLshIndex::build(&items, &hasher, RangeLshParams::new(16, 32))?;
-    let simple = SimpleLshIndex::build(&items, &hasher, SimpleLshParams::new(16))?;
+    let hasher: NativeHasher = NativeHasher::new(items.dim(), 64, 1);
+    let range: RangeLshIndex = RangeLshIndex::build(&items, &hasher, RangeLshParams::new(16, 32))?;
+    let simple: SimpleLshIndex = SimpleLshIndex::build(&items, &hasher, SimpleLshParams::new(16))?;
     println!(
         "RANGE-LSH : {} buckets, largest {}",
         range.stats().n_buckets,

@@ -76,6 +76,7 @@ fn main() -> rangelsh::Result<()> {
         deadline_us: 500,
         probe_budget: 4096, // ~2% of the corpus
         top_k: 10,
+        code_bits: 32,
     };
     let engine = Arc::new(SearchEngine::new(index, items.clone(), hasher, cfg)?);
     let policy = BatchPolicy::new(256, Duration::from_micros(500));

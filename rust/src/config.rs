@@ -9,6 +9,7 @@ use std::str::FromStr;
 use anyhow::Context;
 
 use crate::data::{synthetic, Dataset};
+use crate::hash::MAX_CODE_BITS;
 use crate::index::PartitionScheme;
 use crate::util::toml::{parse as parse_toml, Section};
 use crate::Result;
@@ -166,6 +167,14 @@ pub struct ServeConfig {
     /// Per-query probe budget.
     pub probe_budget: usize,
     pub top_k: usize,
+    /// Total code budget L served by the engine (1..=256). Selects the
+    /// monomorphized code-word width at index-build time: L <= 64 runs
+    /// the original `u64` hot path (PJRT-batchable), wider L runs the
+    /// `[u64; 2]` / `[u64; 4]` engines with native hashing. Defaults to
+    /// the `[index]` section's `code_bits` when parsed from TOML; when
+    /// `rangelsh serve` builds its own index (no `--load`), an explicit
+    /// override replaces the index budget at serve time.
+    pub code_bits: usize,
 }
 
 impl Default for ServeConfig {
@@ -175,6 +184,7 @@ impl Default for ServeConfig {
             deadline_us: 500,
             probe_budget: 2048,
             top_k: 10,
+            code_bits: 64,
         }
     }
 }
@@ -248,6 +258,8 @@ impl Config {
             deadline_us: sv.u64_or("deadline_us", serve_default.deadline_us)?,
             probe_budget: sv.usize_or("probe_budget", serve_default.probe_budget)?,
             top_k: sv.usize_or("top_k", serve_default.top_k)?,
+            // Serving width follows the index budget unless overridden.
+            code_bits: sv.usize_or("code_bits", index.code_bits)?,
         };
 
         let cfg = Config { dataset, index, eval, serve };
@@ -259,8 +271,8 @@ impl Config {
         anyhow::ensure!(self.dataset.n_items >= 1, "n_items must be >= 1");
         anyhow::ensure!(self.dataset.dim >= 1, "dim must be >= 1");
         anyhow::ensure!(
-            (1..=64).contains(&self.index.code_bits),
-            "code_bits must be in 1..=64, got {}",
+            (1..=MAX_CODE_BITS).contains(&self.index.code_bits),
+            "code_bits must be in 1..={MAX_CODE_BITS}, got {}",
             self.index.code_bits
         );
         anyhow::ensure!(self.index.n_partitions >= 1, "n_partitions must be >= 1");
@@ -269,6 +281,11 @@ impl Config {
             "epsilon must be in [0,1)"
         );
         anyhow::ensure!(self.serve.max_batch >= 1, "max_batch must be >= 1");
+        anyhow::ensure!(
+            (1..=MAX_CODE_BITS).contains(&self.serve.code_bits),
+            "serve code_bits must be in 1..={MAX_CODE_BITS}, got {}",
+            self.serve.code_bits
+        );
         Ok(())
     }
 }
@@ -315,7 +332,23 @@ recall_targets = [0.5, 0.9]
 
     #[test]
     fn validation_rejects_bad_code_bits() {
-        let bad = EXAMPLE.replace("code_bits = 16", "code_bits = 65");
+        // 65 was the old (u64) ceiling; the wide code words lift it to 256.
+        let bad = EXAMPLE.replace("code_bits = 16", "code_bits = 257");
+        assert!(Config::parse(&bad).is_err());
+        let wide = EXAMPLE.replace("code_bits = 16", "code_bits = 128");
+        let cfg = Config::parse(&wide).unwrap();
+        assert_eq!(cfg.index.code_bits, 128);
+        // Serving width follows the index budget by default.
+        assert_eq!(cfg.serve.code_bits, 128);
+    }
+
+    #[test]
+    fn serve_code_bits_can_be_overridden() {
+        let text = format!("{EXAMPLE}\n[serve]\ncode_bits = 64\n");
+        let cfg = Config::parse(&text).unwrap();
+        assert_eq!(cfg.index.code_bits, 16);
+        assert_eq!(cfg.serve.code_bits, 64);
+        let bad = format!("{EXAMPLE}\n[serve]\ncode_bits = 300\n");
         assert!(Config::parse(&bad).is_err());
     }
 

@@ -1,12 +1,18 @@
-//! The synchronous search core: hash → probe → exact re-rank.
+//! The synchronous search core: hash → probe → exact re-rank. Generic
+//! over the code word `C` ([`CodeWord`]): `SearchEngine` is the original
+//! `u64` engine (PJRT-batchable); `SearchEngine<Code128>` / `<Code256>`
+//! serve wide-code indexes through the same path. [`AnyEngine`] picks the
+//! narrowest monomorphization for a requested `code_bits` at build time,
+//! so the `u64` hot path keeps its exact original codegen.
 
 use std::sync::Arc;
 
 use crate::config::ServeConfig;
 use crate::coordinator::metrics::Metrics;
 use crate::data::Dataset;
-use crate::hash::ItemHasher;
-use crate::index::CodeProbe;
+use crate::hash::{Code128, Code256, CodeWord, ItemHasher, NativeHasher, MAX_CODE_BITS};
+use crate::index::range::{RangeLshIndex, RangeLshParams};
+use crate::index::{AnyRangeLshIndex, CodeProbe};
 use crate::runtime::PjrtScorer;
 use crate::{ItemId, Result};
 
@@ -22,22 +28,31 @@ pub struct SearchResult {
 ///
 /// The index must implement [`CodeProbe`] (SIMPLE-LSH or RANGE-LSH): the
 /// engine hashes queries *in batches* through `hasher` — the PJRT-backed
-/// Pallas kernel in production, the native panel in tests — and probes
-/// with the resulting codes, so the Python-free hot path is:
-/// `PJRT sign-hash kernel → bucket schedule walk → exact re-rank`.
-pub struct SearchEngine {
-    index: Arc<dyn CodeProbe>,
+/// Pallas kernel in production (`u64` codes), the native panel for tests
+/// and for multi-word codes — and probes with the resulting codes, so the
+/// Python-free hot path is:
+/// `sign-hash kernel → bucket schedule walk → exact re-rank`.
+pub struct SearchEngine<C: CodeWord = u64> {
+    index: Arc<dyn CodeProbe<C>>,
     dataset: Arc<Dataset>,
-    hasher: Arc<dyn ItemHasher>,
+    hasher: Arc<dyn ItemHasher<C>>,
     cfg: ServeConfig,
     metrics: Arc<Metrics>,
 }
 
-impl SearchEngine {
+thread_local! {
+    /// Per-worker candidate scratch: the probe path reuses one buffer per
+    /// thread instead of allocating a fresh `Vec` per query (§Perf; pairs
+    /// with the `SortScratch` reuse inside the bucket tables).
+    static CAND_SCRATCH: std::cell::RefCell<Vec<ItemId>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+impl<C: CodeWord> SearchEngine<C> {
     pub fn new(
-        index: Arc<dyn CodeProbe>,
+        index: Arc<dyn CodeProbe<C>>,
         dataset: Arc<Dataset>,
-        hasher: Arc<dyn ItemHasher>,
+        hasher: Arc<dyn ItemHasher<C>>,
         cfg: ServeConfig,
     ) -> Result<Self> {
         anyhow::ensure!(
@@ -77,7 +92,8 @@ impl SearchEngine {
 
     /// Search a batch of queries laid out row-major (`rows.len()` must be
     /// a multiple of the dataset dim). Hashing is one bulk hasher call
-    /// (one or more PJRT blocks); probe + re-rank fan out on rayon.
+    /// (one or more PJRT blocks); probe + re-rank fan out on the scoped
+    /// thread pool, each worker reusing its thread-local candidate buffer.
     pub fn search_batch(&self, rows: &[f32]) -> Result<Vec<Vec<SearchResult>>> {
         let dim = self.dataset.dim();
         anyhow::ensure!(
@@ -96,23 +112,143 @@ impl SearchEngine {
             let code = codes[qi];
             let q = &rows[qi * dim..(qi + 1) * dim];
             let budget = self.cfg.probe_budget.min(self.dataset.len());
-            let mut cands = Vec::with_capacity(budget);
-            self.index.probe_with_code(code, self.cfg.probe_budget, &mut cands);
-            let probed = cands.len();
-            PjrtScorer::rerank(&self.dataset, q, &mut cands, self.cfg.top_k);
-            let out: Vec<SearchResult> = cands
-                .into_iter()
-                .map(|id| SearchResult {
-                    id,
-                    score: self.dataset.dot(id as usize, q),
-                })
-                .collect();
-            self.metrics
-                .record_query(t0.elapsed().as_micros() as u64, probed);
+            let out: Vec<SearchResult> = CAND_SCRATCH.with(|scratch| {
+                let cands = &mut *scratch.borrow_mut();
+                cands.clear();
+                cands.reserve(budget);
+                self.index.probe_with_code(code, self.cfg.probe_budget, cands);
+                let probed = cands.len();
+                PjrtScorer::rerank(&self.dataset, q, cands, self.cfg.top_k);
+                self.metrics
+                    .record_query(t0.elapsed().as_micros() as u64, probed);
+                cands
+                    .iter()
+                    .map(|&id| SearchResult {
+                        id,
+                        score: self.dataset.dot(id as usize, q),
+                    })
+                    .collect()
+            });
             out
         });
         Ok(results)
     }
+}
+
+/// A [`SearchEngine`] monomorphized to the narrowest code word that fits
+/// the configured `code_bits` — the dispatch point between the config
+/// layer (`ServeConfig::code_bits`, 1..=256) and the typed engines. The
+/// match happens once at build time; every query thereafter runs fully
+/// monomorphized code.
+pub enum AnyEngine {
+    W64(Arc<SearchEngine<u64>>),
+    W128(Arc<SearchEngine<Code128>>),
+    W256(Arc<SearchEngine<Code256>>),
+}
+
+impl AnyEngine {
+    /// Build a native-hashed RANGE-LSH engine at the width selected by
+    /// `cfg.code_bits`. `u64` keeps its historical 64-wide panel; wider
+    /// engines use a panel exactly as wide as the per-range hash bits.
+    pub fn build_native_range(
+        items: Arc<Dataset>,
+        params: RangeLshParams,
+        seed: u64,
+        cfg: ServeConfig,
+    ) -> Result<AnyEngine> {
+        anyhow::ensure!(
+            cfg.code_bits >= 1 && cfg.code_bits <= MAX_CODE_BITS,
+            "code_bits {} out of range 1..={MAX_CODE_BITS}",
+            cfg.code_bits
+        );
+        anyhow::ensure!(
+            params.code_bits == cfg.code_bits,
+            "index code_bits {} != serve code_bits {}",
+            params.code_bits,
+            cfg.code_bits
+        );
+        if cfg.code_bits <= 64 {
+            Ok(AnyEngine::W64(Arc::new(build_arm::<u64>(items, params, seed, cfg, 64)?)))
+        } else if cfg.code_bits <= 128 {
+            let width = params.hash_bits();
+            Ok(AnyEngine::W128(Arc::new(build_arm::<Code128>(items, params, seed, cfg, width)?)))
+        } else {
+            let width = params.hash_bits();
+            Ok(AnyEngine::W256(Arc::new(build_arm::<Code256>(items, params, seed, cfg, width)?)))
+        }
+    }
+
+    /// Wrap a loaded index of whatever width the file declared, hashing
+    /// queries natively with the index's own panel.
+    pub fn from_loaded(
+        index: AnyRangeLshIndex,
+        items: Arc<Dataset>,
+        cfg: ServeConfig,
+    ) -> Result<AnyEngine> {
+        match index {
+            AnyRangeLshIndex::W64(i) => {
+                let hasher: Arc<NativeHasher<u64>> =
+                    Arc::new(NativeHasher::with_projection(i.projection().clone()));
+                Ok(AnyEngine::W64(Arc::new(SearchEngine::new(Arc::new(i), items, hasher, cfg)?)))
+            }
+            AnyRangeLshIndex::W128(i) => {
+                let hasher: Arc<NativeHasher<Code128>> =
+                    Arc::new(NativeHasher::with_projection(i.projection().clone()));
+                Ok(AnyEngine::W128(Arc::new(SearchEngine::new(Arc::new(i), items, hasher, cfg)?)))
+            }
+            AnyRangeLshIndex::W256(i) => {
+                let hasher: Arc<NativeHasher<Code256>> =
+                    Arc::new(NativeHasher::with_projection(i.projection().clone()));
+                Ok(AnyEngine::W256(Arc::new(SearchEngine::new(Arc::new(i), items, hasher, cfg)?)))
+            }
+        }
+    }
+
+    /// Words per code (1, 2 or 4).
+    pub fn code_words(&self) -> usize {
+        match self {
+            Self::W64(_) => 1,
+            Self::W128(_) => 2,
+            Self::W256(_) => 4,
+        }
+    }
+
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        match self {
+            Self::W64(e) => e.metrics(),
+            Self::W128(e) => e.metrics(),
+            Self::W256(e) => e.metrics(),
+        }
+    }
+
+    pub fn search(&self, query: &[f32]) -> Result<Vec<SearchResult>> {
+        match self {
+            Self::W64(e) => e.search(query),
+            Self::W128(e) => e.search(query),
+            Self::W256(e) => e.search(query),
+        }
+    }
+
+    pub fn search_batch(&self, rows: &[f32]) -> Result<Vec<Vec<SearchResult>>> {
+        match self {
+            Self::W64(e) => e.search_batch(rows),
+            Self::W128(e) => e.search_batch(rows),
+            Self::W256(e) => e.search_batch(rows),
+        }
+    }
+}
+
+fn build_arm<C: CodeWord>(
+    items: Arc<Dataset>,
+    params: RangeLshParams,
+    seed: u64,
+    cfg: ServeConfig,
+    width: usize,
+) -> Result<SearchEngine<C>> {
+    let hasher: Arc<NativeHasher<C>> = Arc::new(NativeHasher::new(items.dim(), width, seed));
+    let index: Arc<RangeLshIndex<C>> =
+        Arc::new(RangeLshIndex::build(&items, hasher.as_ref(), params)?);
+    SearchEngine::new(index, items, hasher, cfg)
 }
 
 #[cfg(test)]
@@ -124,7 +260,7 @@ mod tests {
 
     fn engine(budget: usize) -> (Arc<Dataset>, SearchEngine) {
         let d = Arc::new(synthetic::longtail_sift(2000, 16, 0));
-        let h = Arc::new(NativeHasher::new(16, 64, 1));
+        let h = Arc::new(NativeHasher::<u64>::new(16, 64, 1));
         let idx = Arc::new(
             RangeLshIndex::build(&d, h.as_ref(), RangeLshParams::new(16, 16)).unwrap(),
         );
@@ -200,11 +336,66 @@ mod tests {
     #[test]
     fn rejects_budget_below_top_k() {
         let d = Arc::new(synthetic::longtail_sift(100, 8, 0));
-        let h = Arc::new(NativeHasher::new(8, 64, 1));
+        let h = Arc::new(NativeHasher::<u64>::new(8, 64, 1));
         let idx = Arc::new(
             RangeLshIndex::build(&d, h.as_ref(), RangeLshParams::new(16, 4)).unwrap(),
         );
         let cfg = ServeConfig { probe_budget: 5, top_k: 10, ..Default::default() };
         assert!(SearchEngine::new(idx, d, h, cfg).is_err());
+    }
+
+    #[test]
+    fn wide_engine_serves_end_to_end() {
+        // code_bits = 128 through the whole path: build → probe → re-rank.
+        let d = Arc::new(synthetic::longtail_sift(1500, 16, 7));
+        let params = RangeLshParams::new(128, 16);
+        let h = Arc::new(NativeHasher::<Code128>::new(16, params.hash_bits(), 8));
+        let idx = Arc::new(RangeLshIndex::build(&d, h.as_ref(), params).unwrap());
+        let cfg = ServeConfig {
+            probe_budget: usize::MAX,
+            top_k: 10,
+            code_bits: 128,
+            ..Default::default()
+        };
+        let e: SearchEngine<Code128> = SearchEngine::new(idx, d.clone(), h, cfg).unwrap();
+        let q = synthetic::gaussian_queries(4, 16, 9);
+        let gt = crate::eval::exact_topk(&d, &q, 10);
+        for qi in 0..q.len() {
+            let res = e.search(q.row(qi)).unwrap();
+            let ids: Vec<ItemId> = res.iter().map(|r| r.id).collect();
+            assert_eq!(ids, gt[qi], "query {qi}: wide engine must recover exact top-k");
+        }
+    }
+
+    #[test]
+    fn any_engine_dispatches_on_code_bits() {
+        let d = Arc::new(synthetic::longtail_sift(800, 8, 10));
+        for (bits, words) in [(32usize, 1usize), (128, 2), (256, 4)] {
+            let cfg = ServeConfig {
+                probe_budget: 200,
+                top_k: 5,
+                code_bits: bits,
+                ..Default::default()
+            };
+            let engine = AnyEngine::build_native_range(
+                d.clone(),
+                RangeLshParams::new(bits, 8),
+                11,
+                cfg,
+            )
+            .unwrap();
+            assert_eq!(engine.code_words(), words, "bits {bits}");
+            let q = synthetic::gaussian_queries(2, 8, 12);
+            let res = engine.search_batch(q.flat()).unwrap();
+            assert_eq!(res.len(), 2);
+            assert!(res.iter().all(|r| r.len() == 5));
+        }
+    }
+
+    #[test]
+    fn any_engine_rejects_mismatched_bits() {
+        let d = Arc::new(synthetic::longtail_sift(100, 8, 13));
+        let cfg = ServeConfig { code_bits: 64, ..Default::default() };
+        assert!(AnyEngine::build_native_range(d, RangeLshParams::new(128, 8), 1, cfg).is_err());
     }
 }

@@ -18,7 +18,7 @@ pub mod router;
 pub mod server;
 
 pub use batcher::BatchPolicy;
-pub use engine::{SearchEngine, SearchResult};
+pub use engine::{AnyEngine, SearchEngine, SearchResult};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use router::ShardedRouter;
 pub use server::{QueryServer, ServerHandle};

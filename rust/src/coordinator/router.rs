@@ -8,23 +8,26 @@
 use std::sync::Arc;
 
 use crate::coordinator::engine::{SearchEngine, SearchResult};
+use crate::hash::CodeWord;
 use crate::{ItemId, Result};
 
-/// One shard: a search engine plus its global id offset.
-pub struct Shard {
-    pub engine: Arc<SearchEngine>,
+/// One shard: a search engine plus its global id offset. Generic over the
+/// shard engines' code word (default `u64`); all shards of one router
+/// share a width, chosen at build time like everything else.
+pub struct Shard<C: CodeWord = u64> {
+    pub engine: Arc<SearchEngine<C>>,
     /// Global id of the shard's row 0.
     pub id_offset: ItemId,
 }
 
 /// Fan-out/merge router over shards.
-pub struct ShardedRouter {
-    shards: Vec<Shard>,
+pub struct ShardedRouter<C: CodeWord = u64> {
+    shards: Vec<Shard<C>>,
     top_k: usize,
 }
 
-impl ShardedRouter {
-    pub fn new(shards: Vec<Shard>, top_k: usize) -> Result<Self> {
+impl<C: CodeWord> ShardedRouter<C> {
+    pub fn new(shards: Vec<Shard<C>>, top_k: usize) -> Result<Self> {
         anyhow::ensure!(!shards.is_empty(), "need at least one shard");
         anyhow::ensure!(top_k >= 1, "top_k must be >= 1");
         Ok(Self { shards, top_k })
@@ -61,7 +64,7 @@ mod tests {
     use crate::index::range::{RangeLshIndex, RangeLshParams};
 
     fn make_engine(d: Arc<Dataset>) -> Arc<SearchEngine> {
-        let h = Arc::new(NativeHasher::new(d.dim(), 64, 1));
+        let h: Arc<NativeHasher> = Arc::new(NativeHasher::new(d.dim(), 64, 1));
         let idx =
             Arc::new(RangeLshIndex::build(&d, h.as_ref(), RangeLshParams::new(16, 4)).unwrap());
         let cfg = ServeConfig { probe_budget: usize::MAX, top_k: 5, ..Default::default() };
@@ -106,6 +109,6 @@ mod tests {
 
     #[test]
     fn rejects_empty_shard_list() {
-        assert!(ShardedRouter::new(vec![], 5).is_err());
+        assert!(ShardedRouter::<u64>::new(vec![], 5).is_err());
     }
 }

@@ -15,8 +15,9 @@ use std::time::{Duration, Instant};
 use anyhow::anyhow;
 
 use crate::coordinator::batcher::BatchPolicy;
-use crate::coordinator::engine::{SearchEngine, SearchResult};
+use crate::coordinator::engine::{AnyEngine, SearchEngine, SearchResult};
 use crate::coordinator::metrics::MetricsSnapshot;
+use crate::hash::CodeWord;
 use crate::Result;
 
 struct Job {
@@ -25,16 +26,18 @@ struct Job {
     enqueued: Instant,
 }
 
-/// Cloneable client handle to a running [`QueryServer`].
+/// Cloneable client handle to a running [`QueryServer`]. Generic over the
+/// engine's code word (default `u64`); the request/answer types are
+/// width-independent.
 ///
 /// `query` blocks the calling thread until the batched answer arrives;
 /// spawn client threads (or use [`drive_workload`]) for concurrency.
-pub struct ServerHandle {
+pub struct ServerHandle<C: CodeWord = u64> {
     tx: Mutex<mpsc::Sender<Job>>,
-    engine: Arc<SearchEngine>,
+    engine: Arc<SearchEngine<C>>,
 }
 
-impl Clone for ServerHandle {
+impl<C: CodeWord> Clone for ServerHandle<C> {
     fn clone(&self) -> Self {
         Self {
             tx: Mutex::new(self.tx.lock().unwrap().clone()),
@@ -43,7 +46,7 @@ impl Clone for ServerHandle {
     }
 }
 
-impl ServerHandle {
+impl<C: CodeWord> ServerHandle<C> {
     /// Submit one query and wait for its top-k.
     pub fn query(&self, query: Vec<f32>) -> Result<Vec<SearchResult>> {
         let (reply_tx, reply_rx) = mpsc::channel();
@@ -68,7 +71,10 @@ pub struct QueryServer;
 impl QueryServer {
     /// Spawn the batcher thread; returns the client handle. The server
     /// stops when every handle (hence the sender) is dropped.
-    pub fn spawn(engine: Arc<SearchEngine>, policy: BatchPolicy) -> ServerHandle {
+    pub fn spawn<C: CodeWord>(
+        engine: Arc<SearchEngine<C>>,
+        policy: BatchPolicy,
+    ) -> ServerHandle<C> {
         let (tx, rx) = mpsc::channel::<Job>();
         let loop_engine = engine.clone();
         std::thread::Builder::new()
@@ -79,7 +85,11 @@ impl QueryServer {
     }
 }
 
-fn batch_loop(engine: Arc<SearchEngine>, policy: BatchPolicy, rx: mpsc::Receiver<Job>) {
+fn batch_loop<C: CodeWord>(
+    engine: Arc<SearchEngine<C>>,
+    policy: BatchPolicy,
+    rx: mpsc::Receiver<Job>,
+) {
     let mut pending: Vec<Job> = Vec::with_capacity(policy.max_batch);
     loop {
         // Wait (indefinitely) for the first job of the next batch.
@@ -144,10 +154,25 @@ fn batch_loop(engine: Arc<SearchEngine>, policy: BatchPolicy, rx: mpsc::Receiver
     }
 }
 
+/// Drive a width-erased [`AnyEngine`] through [`drive_workload`] — the
+/// CLI entry point after the monomorphized dispatch.
+pub fn drive_any(
+    engine: &AnyEngine,
+    policy: BatchPolicy,
+    queries: &crate::data::Dataset,
+    clients: usize,
+) -> Result<(Vec<Vec<SearchResult>>, Duration)> {
+    match engine {
+        AnyEngine::W64(e) => drive_workload(e.clone(), policy, queries, clients),
+        AnyEngine::W128(e) => drive_workload(e.clone(), policy, queries, clients),
+        AnyEngine::W256(e) => drive_workload(e.clone(), policy, queries, clients),
+    }
+}
+
 /// Drive `queries` through a fresh server with `clients` concurrent client
 /// threads; returns per-query results (in query order) and the wall time.
-pub fn drive_workload(
-    engine: Arc<SearchEngine>,
+pub fn drive_workload<C: CodeWord>(
+    engine: Arc<SearchEngine<C>>,
     policy: BatchPolicy,
     queries: &crate::data::Dataset,
     clients: usize,
@@ -199,7 +224,7 @@ mod tests {
 
     fn engine() -> Arc<SearchEngine> {
         let d = Arc::new(synthetic::longtail_sift(1000, 8, 0));
-        let h = Arc::new(NativeHasher::new(8, 64, 1));
+        let h: Arc<NativeHasher> = Arc::new(NativeHasher::new(8, 64, 1));
         let idx =
             Arc::new(RangeLshIndex::build(&d, h.as_ref(), RangeLshParams::new(16, 8)).unwrap());
         let cfg = ServeConfig { probe_budget: 200, top_k: 5, ..Default::default() };
@@ -248,6 +273,29 @@ mod tests {
             "expected real batching, got mean batch {}",
             snap.mean_batch_rows
         );
+    }
+
+    #[test]
+    fn wide_engine_serves_through_batcher() {
+        // The dynamic batcher is width-generic: a 128-bit engine serves
+        // the same protocol.
+        use crate::coordinator::engine::AnyEngine;
+        use crate::coordinator::server::drive_any;
+        let d = Arc::new(synthetic::longtail_sift(800, 8, 6));
+        let cfg = ServeConfig {
+            probe_budget: 200,
+            top_k: 5,
+            code_bits: 128,
+            ..Default::default()
+        };
+        let engine =
+            AnyEngine::build_native_range(d, RangeLshParams::new(128, 8), 3, cfg).unwrap();
+        let q = synthetic::gaussian_queries(16, 8, 7);
+        let policy = BatchPolicy::new(8, Duration::from_millis(2));
+        let (results, _) = drive_any(&engine, policy, &q, 4).unwrap();
+        for qi in 0..q.len() {
+            assert_eq!(results[qi], engine.search(q.row(qi)).unwrap(), "query {qi}");
+        }
     }
 
     #[test]

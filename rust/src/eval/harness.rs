@@ -6,7 +6,7 @@
 use crate::config::IndexAlgo;
 use crate::data::Dataset;
 use crate::eval::{exact_topk, recall_curve, RecallCurve};
-use crate::hash::{ItemHasher, NativeHasher};
+use crate::hash::{Code128, Code256, CodeWord, NativeHasher, MAX_CODE_BITS};
 use crate::index::l2alsh::{L2AlshIndex, L2AlshParams};
 use crate::index::range::{RangeLshIndex, RangeLshParams};
 use crate::index::ranged_l2alsh::{RangedL2AlshIndex, RangedL2AlshParams};
@@ -60,22 +60,43 @@ impl ExperimentResult {
     }
 }
 
-/// Build the spec'd index over `dataset`.
+/// Build the spec'd index over `dataset`, monomorphized to the narrowest
+/// [`CodeWord`] that fits `spec.code_bits` (u64 up to 64 bits — the
+/// original codegen — then `Code128` / `Code256`). The floor-hash
+/// baselines (L2-ALSH family) key buckets by integer vectors, not packed
+/// codes, so any `K` within range works unchanged.
 pub fn build_index(dataset: &Dataset, spec: &CurveSpec) -> Result<Box<dyn MipsIndex>> {
-    let hasher: Box<dyn ItemHasher> = Box::new(NativeHasher::new(dataset.dim(), 64, spec.seed));
+    anyhow::ensure!(
+        spec.code_bits >= 1 && spec.code_bits <= MAX_CODE_BITS,
+        "code_bits {} out of range 1..={MAX_CODE_BITS}",
+        spec.code_bits
+    );
     Ok(match spec.algo {
-        IndexAlgo::SimpleLsh => Box::new(SimpleLshIndex::build(
-            dataset,
-            hasher.as_ref(),
-            SimpleLshParams::new(spec.code_bits),
-        )?),
-        IndexAlgo::RangeLsh => Box::new(RangeLshIndex::build(
-            dataset,
-            hasher.as_ref(),
-            RangeLshParams::new(spec.code_bits, spec.n_partitions)
-                .with_scheme(spec.scheme)
-                .with_epsilon(spec.epsilon),
-        )?),
+        IndexAlgo::SimpleLsh => {
+            if spec.code_bits <= 64 {
+                // The scalar path keeps its historical 64-wide panel.
+                Box::new(build_simple::<u64>(dataset, spec, 64)?)
+            } else if spec.code_bits <= 128 {
+                Box::new(build_simple::<Code128>(dataset, spec, spec.code_bits)?)
+            } else {
+                Box::new(build_simple::<Code256>(dataset, spec, spec.code_bits)?)
+            }
+        }
+        IndexAlgo::RangeLsh => {
+            if spec.code_bits <= 64 {
+                Box::new(build_range::<u64>(dataset, spec, 64)?)
+            } else {
+                // Match the serving stack (AnyEngine / `rangelsh build`):
+                // wide RANGE-LSH panels are exactly hash_bits wide, so the
+                // harness measures the same index the engine serves.
+                let width = RangeLshParams::new(spec.code_bits, spec.n_partitions).hash_bits();
+                if spec.code_bits <= 128 {
+                    Box::new(build_range::<Code128>(dataset, spec, width)?)
+                } else {
+                    Box::new(build_range::<Code256>(dataset, spec, width)?)
+                }
+            }
+        }
         IndexAlgo::L2Alsh => Box::new(L2AlshIndex::build(
             dataset,
             L2AlshParams::recommended(spec.code_bits),
@@ -84,11 +105,49 @@ pub fn build_index(dataset: &Dataset, spec: &CurveSpec) -> Result<Box<dyn MipsIn
             dataset,
             RangedL2AlshParams::recommended(spec.code_bits, spec.n_partitions),
         )?),
-        IndexAlgo::SignAlsh => Box::new(SignAlshIndex::build(
-            dataset,
-            SignAlshParams::recommended(spec.code_bits),
-        )?),
+        IndexAlgo::SignAlsh => {
+            if spec.code_bits <= 64 {
+                Box::new(SignAlshIndex::<u64>::build(
+                    dataset,
+                    SignAlshParams::recommended(spec.code_bits),
+                )?)
+            } else if spec.code_bits <= 128 {
+                Box::new(SignAlshIndex::<Code128>::build(
+                    dataset,
+                    SignAlshParams::recommended(spec.code_bits),
+                )?)
+            } else {
+                Box::new(SignAlshIndex::<Code256>::build(
+                    dataset,
+                    SignAlshParams::recommended(spec.code_bits),
+                )?)
+            }
+        }
     })
+}
+
+fn build_simple<C: CodeWord>(
+    dataset: &Dataset,
+    spec: &CurveSpec,
+    width: usize,
+) -> Result<SimpleLshIndex<C>> {
+    let hasher: NativeHasher<C> = NativeHasher::new(dataset.dim(), width, spec.seed);
+    SimpleLshIndex::build(dataset, &hasher, SimpleLshParams::new(spec.code_bits))
+}
+
+fn build_range<C: CodeWord>(
+    dataset: &Dataset,
+    spec: &CurveSpec,
+    width: usize,
+) -> Result<RangeLshIndex<C>> {
+    let hasher: NativeHasher<C> = NativeHasher::new(dataset.dim(), width, spec.seed);
+    RangeLshIndex::build(
+        dataset,
+        &hasher,
+        RangeLshParams::new(spec.code_bits, spec.n_partitions)
+            .with_scheme(spec.scheme)
+            .with_epsilon(spec.epsilon),
+    )
 }
 
 /// Build + measure: the one-call entry used by every figure bench.
@@ -173,6 +232,29 @@ mod tests {
                 res.curve.final_recall()
             );
             assert!(res.build_secs >= 0.0 && res.query_secs >= 0.0);
+        }
+    }
+
+    #[test]
+    fn harness_runs_wide_code_specs() {
+        // The dispatcher must route L > 64 to the multi-word indexes.
+        let d = synthetic::longtail_sift(400, 8, 5);
+        let q = synthetic::gaussian_queries(8, 8, 6);
+        let gt = ground_truth(&d, &q, 5);
+        let cps = geometric_checkpoints(10, d.len(), 3);
+        for (algo, bits, m) in [
+            (IndexAlgo::RangeLsh, 128, 8),
+            (IndexAlgo::SimpleLsh, 128, 1),
+            (IndexAlgo::RangeLsh, 256, 8),
+            (IndexAlgo::SignAlsh, 128, 1),
+        ] {
+            let spec = CurveSpec::new(algo, bits, m);
+            let res = run_curve(&d, &q, &gt, &cps, &spec, format!("{algo} L={bits}")).unwrap();
+            assert!(
+                (res.curve.final_recall() - 1.0).abs() < 1e-9,
+                "{algo} L={bits}: full probe must reach recall 1, got {}",
+                res.curve.final_recall()
+            );
         }
     }
 

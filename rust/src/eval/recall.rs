@@ -116,7 +116,7 @@ mod tests {
         let d = synthetic::longtail_sift(800, 8, 0);
         let q = synthetic::gaussian_queries(20, 8, 1);
         let gt = exact_topk(&d, &q, 5);
-        let h = NativeHasher::new(8, 64, 2);
+        let h: NativeHasher = NativeHasher::new(8, 64, 2);
         let idx = RangeLshIndex::build(&d, &h, RangeLshParams::new(16, 8)).unwrap();
         (d, q, gt, idx)
     }

@@ -1,14 +1,238 @@
-//! Bitpacked hash codes: one `u64` word per item (the paper's max code
-//! length is 64), Hamming distance via popcount, and masking to the
-//! effective code length.
+//! Bitpacked hash codes, generic over code width: the [`CodeWord`] trait
+//! abstracts one *code word* — `u64` for the paper's original L ≤ 64
+//! regime, `[u64; 2]` / `[u64; 4]` for 128/256-bit codes — with Hamming
+//! distance via popcount and masking to the effective code length. The
+//! whole hash → index → serving stack is generic over `C: CodeWord` and
+//! monomorphized at index-build time, so the single-word `u64` hot path
+//! keeps its original codegen (one XOR + one POPCNT per bucket).
 //!
 //! RANGE-LSH spends `ceil(log2 m)` bits of the total code budget on the
 //! range id (paper §4: "part of the bits ... encode the index of the
 //! sub-datasets"); we keep the range id structurally (items live in their
 //! range's bucket table) and mask hash codes to `L - ceil(log2 m)` bits —
-//! the same information budget, simpler arithmetic.
+//! the same information budget, simpler arithmetic. That accounting is
+//! width-independent: [`partition_id_bits`] depends only on `m`.
 
-/// Bitmask selecting the low `bits` hash bits of a code word.
+/// Maximum supported code length in bits (the widest [`CodeWord`] impl).
+pub const MAX_CODE_BITS: usize = 256;
+
+/// 128-bit code word: two little-endian `u64` words (bit `j` lives in
+/// word `j / 64`, position `j % 64`).
+pub type Code128 = [u64; 2];
+
+/// 256-bit code word: four little-endian `u64` words.
+pub type Code256 = [u64; 4];
+
+/// One fixed-width hash code word.
+///
+/// Implementations must be cheap `Copy` values: the bucket tables store
+/// them in a dense structure-of-arrays scan vector and popcount every one
+/// per query, so `hamming` compiles down to word-wise XOR + POPCNT.
+/// Bit order is little-endian across words: hash function `j` sets bit
+/// `j % 64` of word `j / 64`, matching the `u64` path exactly when the
+/// high words are zero.
+pub trait CodeWord:
+    Copy + Clone + Eq + std::hash::Hash + Send + Sync + std::fmt::Debug + 'static
+{
+    /// Number of 64-bit words backing the code.
+    const WORDS: usize;
+    /// Maximum representable code length in bits (`64 * WORDS`).
+    const MAX_BITS: usize;
+
+    /// The all-zero code.
+    fn zero() -> Self;
+
+    /// Bitmask selecting the low `bits` bits; `bits` must be in
+    /// `1..=MAX_BITS`.
+    fn mask(bits: usize) -> Self;
+
+    /// Bitwise AND.
+    fn and(self, other: Self) -> Self;
+
+    /// Bitwise XOR.
+    fn xor(self, other: Self) -> Self;
+
+    /// Total number of set bits.
+    fn count_ones(self) -> u32;
+
+    /// Set bit `j` (little-endian across words).
+    fn set_bit(&mut self, j: usize);
+
+    /// Read bit `j`.
+    fn get_bit(self, j: usize) -> bool;
+
+    /// The backing words, low word first (persistence layout).
+    fn as_words(&self) -> &[u64];
+
+    /// Rebuild from backing words (inverse of [`Self::as_words`]).
+    fn from_words(words: &[u64]) -> Self;
+
+    /// Hamming distance between two (equal-length, pre-masked) codes.
+    #[inline]
+    fn hamming(self, other: Self) -> u32 {
+        self.xor(other).count_ones()
+    }
+
+    /// Number of *matching* bits `l` out of `bits` — the quantity the
+    /// Eq. 12 similarity metric is built on (`l = L - hamming`).
+    #[inline]
+    fn matches(self, other: Self, bits: usize) -> u32 {
+        bits as u32 - self.hamming(other)
+    }
+
+    /// Mask to the low `bits` bits.
+    #[inline]
+    fn masked(self, bits: usize) -> Self {
+        self.and(Self::mask(bits))
+    }
+
+    /// Pack a sign-projection accumulator: bit `j` is set iff
+    /// `acc[j] > 0` (the strictly-positive convention shared with the
+    /// Pallas kernel). `acc.len()` is the code length and must fit.
+    fn pack_from_signs(acc: &[f32]) -> Self {
+        assert!(acc.len() <= Self::MAX_BITS, "{} signs > {} bits", acc.len(), Self::MAX_BITS);
+        let mut code = Self::zero();
+        for (j, &a) in acc.iter().enumerate() {
+            if a > 0.0 {
+                code.set_bit(j);
+            }
+        }
+        code
+    }
+}
+
+impl CodeWord for u64 {
+    const WORDS: usize = 1;
+    const MAX_BITS: usize = 64;
+
+    #[inline]
+    fn zero() -> Self {
+        0
+    }
+
+    #[inline]
+    fn mask(bits: usize) -> Self {
+        mask_bits(bits)
+    }
+
+    #[inline]
+    fn and(self, other: Self) -> Self {
+        self & other
+    }
+
+    #[inline]
+    fn xor(self, other: Self) -> Self {
+        self ^ other
+    }
+
+    #[inline]
+    fn count_ones(self) -> u32 {
+        u64::count_ones(self)
+    }
+
+    #[inline]
+    fn set_bit(&mut self, j: usize) {
+        debug_assert!(j < 64);
+        *self |= 1u64 << j;
+    }
+
+    #[inline]
+    fn get_bit(self, j: usize) -> bool {
+        debug_assert!(j < 64);
+        (self >> j) & 1 == 1
+    }
+
+    fn as_words(&self) -> &[u64] {
+        std::slice::from_ref(self)
+    }
+
+    fn from_words(words: &[u64]) -> Self {
+        assert_eq!(words.len(), 1, "u64 code needs exactly one word");
+        words[0]
+    }
+}
+
+impl<const W: usize> CodeWord for [u64; W] {
+    const WORDS: usize = W;
+    const MAX_BITS: usize = 64 * W;
+
+    #[inline]
+    fn zero() -> Self {
+        [0u64; W]
+    }
+
+    fn mask(bits: usize) -> Self {
+        assert!(
+            bits >= 1 && bits <= 64 * W,
+            "code length {bits} out of range 1..={}",
+            64 * W
+        );
+        let mut m = [0u64; W];
+        let full = bits / 64;
+        let rem = bits % 64;
+        for word in m.iter_mut().take(full) {
+            *word = u64::MAX;
+        }
+        if rem > 0 {
+            m[full] = (1u64 << rem) - 1;
+        }
+        m
+    }
+
+    #[inline]
+    fn and(mut self, other: Self) -> Self {
+        for (a, b) in self.iter_mut().zip(other.iter()) {
+            *a &= b;
+        }
+        self
+    }
+
+    #[inline]
+    fn xor(mut self, other: Self) -> Self {
+        for (a, b) in self.iter_mut().zip(other.iter()) {
+            *a ^= b;
+        }
+        self
+    }
+
+    #[inline]
+    fn count_ones(self) -> u32 {
+        self.iter().map(|w| w.count_ones()).sum()
+    }
+
+    #[inline]
+    fn set_bit(&mut self, j: usize) {
+        debug_assert!(j < 64 * W);
+        self[j / 64] |= 1u64 << (j % 64);
+    }
+
+    #[inline]
+    fn get_bit(self, j: usize) -> bool {
+        debug_assert!(j < 64 * W);
+        (self[j / 64] >> (j % 64)) & 1 == 1
+    }
+
+    fn as_words(&self) -> &[u64] {
+        &self[..]
+    }
+
+    fn from_words(words: &[u64]) -> Self {
+        words
+            .try_into()
+            .unwrap_or_else(|_| panic!("{}-word code from {} words", W, words.len()))
+    }
+}
+
+/// Zero-extend a scalar `u64` code into any wider (or equal) code word —
+/// the embedding under which the wide path must agree bit-for-bit with
+/// the scalar path (checked by `tests/properties.rs`).
+pub fn widen<C: CodeWord>(code: u64) -> C {
+    let mut words = vec![0u64; C::WORDS];
+    words[0] = code;
+    C::from_words(&words)
+}
+
+/// Bitmask selecting the low `bits` hash bits of a scalar code word.
 ///
 /// `bits == 64` yields the identity mask; `bits == 0` is rejected (an
 /// index with zero hash bits cannot rank anything).
@@ -21,7 +245,7 @@ pub fn mask_bits(bits: usize) -> u64 {
     }
 }
 
-/// Hamming distance between two (equal-length, pre-masked) codes.
+/// Hamming distance between two (equal-length, pre-masked) scalar codes.
 #[inline]
 pub fn hamming(a: u64, b: u64) -> u32 {
     (a ^ b).count_ones()
@@ -35,6 +259,7 @@ pub fn matches(a: u64, b: u64, bits: usize) -> u32 {
 }
 
 /// Number of bits needed to address `m` partitions (0 for m == 1).
+/// Width-independent: the same accounting applies at L = 16 and L = 256.
 pub fn partition_id_bits(m: usize) -> usize {
     assert!(m >= 1);
     (m as u64).next_power_of_two().trailing_zeros() as usize
@@ -87,5 +312,87 @@ mod tests {
         assert_eq!(partition_id_bits(64), 6);
         assert_eq!(partition_id_bits(128), 7);
         assert_eq!(partition_id_bits(33), 6); // round up for non-powers
+    }
+
+    #[test]
+    fn u64_codeword_matches_free_functions() {
+        let (a, b) = (0xDEAD_BEEF_u64, 0x1234_5678_u64);
+        assert_eq!(CodeWord::hamming(a, b), hamming(a, b));
+        assert_eq!(CodeWord::matches(a, b, 64), matches(a, b, 64));
+        assert_eq!(<u64 as CodeWord>::mask(11), mask_bits(11));
+        assert_eq!(a.masked(16), a & mask_bits(16));
+    }
+
+    #[test]
+    fn wide_mask_spans_words() {
+        let m = Code128::mask(64);
+        assert_eq!(m, [u64::MAX, 0]);
+        let m = Code128::mask(65);
+        assert_eq!(m, [u64::MAX, 1]);
+        let m = Code128::mask(128);
+        assert_eq!(m, [u64::MAX, u64::MAX]);
+        let m = Code256::mask(130);
+        assert_eq!(m, [u64::MAX, u64::MAX, 0b11, 0]);
+        assert_eq!(Code256::mask(256), [u64::MAX; 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn wide_mask_rejects_over_width() {
+        Code128::mask(129);
+    }
+
+    #[test]
+    fn wide_bit_layout_is_little_endian() {
+        let mut c = Code128::zero();
+        c.set_bit(0);
+        c.set_bit(63);
+        c.set_bit(64);
+        c.set_bit(127);
+        assert_eq!(c, [(1u64 << 63) | 1, (1u64 << 63) | 1]);
+        assert!(c.get_bit(64) && !c.get_bit(65));
+        assert_eq!(c.count_ones(), 4);
+    }
+
+    #[test]
+    fn wide_hamming_sums_word_popcounts() {
+        let a: Code256 = [u64::MAX, 0, 0b1010, 0];
+        let b: Code256 = [0, 0, 0b0110, 0];
+        assert_eq!(a.hamming(b), 64 + 2);
+        assert_eq!(a.matches(b, 256), 256 - 66);
+    }
+
+    #[test]
+    fn widen_preserves_low_word() {
+        let c = 0xABCD_EF01_2345_6789_u64;
+        let w: Code128 = widen(c);
+        assert_eq!(w, [c, 0]);
+        let w: Code256 = widen(c);
+        assert_eq!(w.as_words(), &[c, 0, 0, 0]);
+        let s: u64 = widen(c);
+        assert_eq!(s, c);
+    }
+
+    #[test]
+    fn words_round_trip() {
+        let w: Code128 = [3, 7];
+        assert_eq!(Code128::from_words(w.as_words()), w);
+        let s = 42u64;
+        assert_eq!(u64::from_words(s.as_words()), s);
+    }
+
+    #[test]
+    fn pack_from_signs_matches_scalar_convention() {
+        // Strictly positive ⇒ bit set; zero and negative ⇒ clear.
+        let acc = [1.0f32, -1.0, 0.0, 0.5];
+        let s: u64 = CodeWord::pack_from_signs(&acc);
+        assert_eq!(s, 0b1001);
+        let w: Code128 = CodeWord::pack_from_signs(&acc);
+        assert_eq!(w, [0b1001, 0]);
+        // A sign past bit 63 lands in the second word.
+        let mut acc = vec![-1.0f32; 70];
+        acc[69] = 2.0;
+        let w: Code128 = CodeWord::pack_from_signs(&acc);
+        assert_eq!(w, [0, 1u64 << 5]);
     }
 }

@@ -1,32 +1,38 @@
-//! Hashing: bitpacked codes, Gaussian projections, sign random projection
-//! (native path) and the L2 floor-hash used by L2-ALSH.
+//! Hashing: bitpacked codes (generic over word count via [`CodeWord`]),
+//! Gaussian projections, sign random projection (native path) and the L2
+//! floor-hash used by L2-ALSH.
 //!
 //! The *bit convention* is shared with the Layer-1 Pallas kernel
 //! (`python/compile/kernels/sign_hash.py`) and checked bit-for-bit by the
 //! runtime integration tests: hash function `j` is the strictly-positive
-//! sign of `P(x) . proj[:, j]`, packed little-endian (bit `j` of the `u64`
-//! code word).
+//! sign of `P(x) . proj[:, j]`, packed little-endian — bit `j % 64` of
+//! word `j / 64` of the code (for `u64` codes, simply bit `j`).
 
 pub mod codes;
 pub mod l2hash;
 pub mod projection;
 pub mod sign_rp;
 
-pub use codes::{hamming, mask_bits, matches};
+pub use codes::{hamming, mask_bits, matches, Code128, Code256, CodeWord, MAX_CODE_BITS};
 pub use l2hash::L2Hash;
 pub use projection::Projection;
 pub use sign_rp::NativeHasher;
 
 use crate::Result;
 
-/// A bulk hasher over raw item/query rows: the abstraction that lets the
-/// index layer run on either the Rust-native path ([`NativeHasher`]) or the
-/// AOT-compiled Pallas kernel via PJRT ([`crate::runtime::PjrtHasher`]).
+/// A bulk hasher over raw item/query rows emitting `C`-wide codes: the
+/// abstraction that lets the index layer run on either the Rust-native
+/// path ([`NativeHasher`]) or the AOT-compiled Pallas kernel via PJRT
+/// ([`crate::runtime::PjrtHasher`], `u64` codes only — the kernel packs
+/// two u32 words).
+///
+/// The parameter defaults to `u64`, so `dyn ItemHasher` keeps meaning the
+/// original single-word interface.
 ///
 /// Both implementations share one [`Projection`], so their codes agree
 /// bit-for-bit (modulo f32 reassociation on near-zero dot products; the
 /// integration suite bounds the disagreement rate).
-pub trait ItemHasher: Send + Sync {
+pub trait ItemHasher<C: CodeWord = u64>: Send + Sync {
     /// The Gaussian panel this hasher projects with. Indexes keep a clone
     /// for query-time hashing, so item codes and query codes always come
     /// from the same panel.
@@ -37,7 +43,7 @@ pub trait ItemHasher: Send + Sync {
         self.projection().dim_in() - 1
     }
 
-    /// Number of hash bits produced per item (<= 64).
+    /// Number of hash bits produced per item (<= `C::MAX_BITS`).
     fn width(&self) -> usize {
         self.projection().width()
     }
@@ -46,8 +52,8 @@ pub trait ItemHasher: Send + Sync {
     /// SIMPLE-LSH, the local `U_j` for RANGE-LSH — the paper's key knob),
     /// apply the Eq. 8 transform, sign-project. `rows.len()` must be a
     /// multiple of `dim()`.
-    fn hash_items(&self, rows: &[f32], u: f32) -> Result<Vec<u64>>;
+    fn hash_items(&self, rows: &[f32], u: f32) -> Result<Vec<C>>;
 
     /// Hash queries: unit-normalise, append 0, sign-project (Eq. 8).
-    fn hash_queries(&self, rows: &[f32]) -> Result<Vec<u64>>;
+    fn hash_queries(&self, rows: &[f32]) -> Result<Vec<C>>;
 }

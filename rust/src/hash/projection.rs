@@ -1,6 +1,7 @@
 //! Seeded Gaussian projection panels, shared between the native hasher and
 //! the PJRT-backed hasher so both produce identical codes.
 
+use crate::hash::codes::MAX_CODE_BITS;
 use crate::util::rng::Rng;
 
 /// A `[dim_in, width]` row-major panel of i.i.d. standard normal entries —
@@ -21,7 +22,10 @@ impl Projection {
     /// Sample a panel from a seeded RNG (deterministic per seed).
     pub fn gaussian(dim_in: usize, width: usize, seed: u64) -> Self {
         assert!(dim_in > 0 && width > 0);
-        assert!(width <= 64, "codes are packed into u64 words; width {width} > 64");
+        assert!(
+            width <= MAX_CODE_BITS,
+            "codes are packed into at most {MAX_CODE_BITS} bits; width {width} too wide"
+        );
         let mut rng = Rng::seed_from_u64(seed);
         let mut data = vec![0.0f32; dim_in * width];
         rng.fill_normal_f32(&mut data);
@@ -30,7 +34,7 @@ impl Projection {
 
     /// Rebuild from a stored flat panel (index persistence).
     pub fn from_flat(dim_in: usize, width: usize, data: Vec<f32>) -> Self {
-        assert!(dim_in > 0 && width > 0 && width <= 64);
+        assert!(dim_in > 0 && width > 0 && width <= MAX_CODE_BITS);
         assert_eq!(data.len(), dim_in * width, "panel size mismatch");
         Self { dim_in, width, data }
     }
@@ -88,8 +92,17 @@ mod tests {
     }
 
     #[test]
+    fn accepts_multiword_widths() {
+        // 128/256-bit panels back the wide CodeWord paths.
+        let p = Projection::gaussian(4, 128, 0);
+        assert_eq!(p.width(), 128);
+        let p = Projection::gaussian(4, 256, 0);
+        assert_eq!(p.width(), 256);
+    }
+
+    #[test]
     #[should_panic(expected = "width")]
-    fn rejects_width_over_64() {
-        Projection::gaussian(4, 65, 0);
+    fn rejects_width_over_max() {
+        Projection::gaussian(4, MAX_CODE_BITS + 1, 0);
     }
 }

@@ -1,43 +1,60 @@
-//! Native (CPU, rayon-parallel) sign-random-projection hasher.
+//! Native (CPU, parallel) sign-random-projection hasher, generic over the
+//! code word width.
 //!
-//! Mirrors the Layer-1 Pallas kernel exactly — same Eq. 8 transforms, same
-//! strictly-positive sign convention, same little-endian bit packing — so
-//! the two paths are interchangeable and cross-checkable. Used for tests,
-//! as the §Perf baseline, and wherever a compiled artifact for the shape
-//! does not exist.
+//! For `u64` codes it mirrors the Layer-1 Pallas kernel exactly — same
+//! Eq. 8 transforms, same strictly-positive sign convention, same
+//! little-endian bit packing — so the two paths are interchangeable and
+//! cross-checkable. The wide instantiations ([`Code128`]/[`Code256`])
+//! extend the identical convention across words: hash function `j` sets
+//! bit `j % 64` of word `j / 64`, so a wide code whose high words are
+//! zero agrees bit-for-bit with the scalar path (property-tested).
 
+use std::marker::PhantomData;
 use std::sync::Arc;
 
+use super::codes::{CodeWord, MAX_CODE_BITS};
 use super::{ItemHasher, Projection};
 use crate::transform::simple::{transform_item, transform_query};
 use crate::util::par;
 use crate::Result;
 
-/// CPU sign-RP hasher over a shared [`Projection`].
-pub struct NativeHasher {
+#[cfg(doc)]
+use super::codes::{Code128, Code256};
+
+/// CPU sign-RP hasher over a shared [`Projection`], emitting `C`-wide
+/// codes. Defaults to the original `u64` single-word path.
+pub struct NativeHasher<C: CodeWord = u64> {
     proj: Arc<Projection>,
+    _code: PhantomData<fn() -> C>,
 }
 
-impl NativeHasher {
+impl<C: CodeWord> NativeHasher<C> {
     /// Convenience constructor: sample a fresh Gaussian panel for raw
-    /// dimensionality `dim` and `width` hash functions.
+    /// dimensionality `dim` and `width` hash functions
+    /// (`width <= C::MAX_BITS`).
     pub fn new(dim: usize, width: usize, seed: u64) -> Self {
         Self::with_projection(Arc::new(Projection::gaussian(dim + 1, width, seed)))
     }
 
     /// Share an existing panel (e.g. with a [`crate::runtime::PjrtHasher`]).
     pub fn with_projection(proj: Arc<Projection>) -> Self {
-        Self { proj }
+        assert!(
+            proj.width() <= C::MAX_BITS,
+            "panel width {} exceeds code word capacity {}",
+            proj.width(),
+            C::MAX_BITS
+        );
+        Self { proj, _code: PhantomData }
     }
 
     /// Sign-project one already-transformed row into a packed code.
     ///
     /// Accumulates all `width` dot products in a single pass over the input
     /// coordinates (row-major panel ⇒ unit-stride inner loop, auto-vectorised).
-    fn hash_transformed(&self, xt: &[f32]) -> u64 {
+    fn hash_transformed(&self, xt: &[f32]) -> C {
         let width = self.proj.width();
         debug_assert_eq!(xt.len(), self.proj.dim_in());
-        let mut acc = [0.0f32; 64];
+        let mut acc = [0.0f32; MAX_CODE_BITS];
         let acc = &mut acc[..width];
         for (k, &v) in xt.iter().enumerate() {
             let row = self.proj.row(k);
@@ -45,22 +62,18 @@ impl NativeHasher {
                 *a += v * w;
             }
         }
-        let mut code = 0u64;
-        for (j, &a) in acc.iter().enumerate() {
-            // Strictly-positive convention, matching the Pallas kernel.
-            code |= ((a > 0.0) as u64) << j;
-        }
-        code
+        // Strictly-positive convention, matching the Pallas kernel.
+        C::pack_from_signs(acc)
     }
 }
 
-impl ItemHasher for NativeHasher {
+impl<C: CodeWord> ItemHasher<C> for NativeHasher<C> {
     fn projection(&self) -> &Arc<Projection> {
         &self.proj
     }
 
-    fn hash_items(&self, rows: &[f32], u: f32) -> Result<Vec<u64>> {
-        let dim = self.dim();
+    fn hash_items(&self, rows: &[f32], u: f32) -> Result<Vec<C>> {
+        let dim = self.proj.dim_in() - 1;
         anyhow::ensure!(
             rows.len() % dim == 0,
             "row buffer length {} not a multiple of dim {dim}",
@@ -74,8 +87,8 @@ impl ItemHasher for NativeHasher {
         }))
     }
 
-    fn hash_queries(&self, rows: &[f32]) -> Result<Vec<u64>> {
-        let dim = self.dim();
+    fn hash_queries(&self, rows: &[f32]) -> Result<Vec<C>> {
+        let dim = self.proj.dim_in() - 1;
         anyhow::ensure!(
             rows.len() % dim == 0,
             "row buffer length {} not a multiple of dim {dim}",
@@ -94,14 +107,15 @@ impl ItemHasher for NativeHasher {
 mod tests {
     use super::*;
     use crate::data::synthetic;
+    use crate::hash::codes::Code128;
 
     #[test]
     fn deterministic_and_seed_sensitive() {
         let d = synthetic::longtail_sift(32, 8, 0);
         let u = d.max_norm();
-        let h1 = NativeHasher::new(8, 64, 1);
-        let h2 = NativeHasher::new(8, 64, 1);
-        let h3 = NativeHasher::new(8, 64, 2);
+        let h1: NativeHasher = NativeHasher::new(8, 64, 1);
+        let h2: NativeHasher = NativeHasher::new(8, 64, 1);
+        let h3: NativeHasher = NativeHasher::new(8, 64, 2);
         assert_eq!(h1.hash_items(d.flat(), u).unwrap(), h2.hash_items(d.flat(), u).unwrap());
         assert_ne!(h1.hash_items(d.flat(), u).unwrap(), h3.hash_items(d.flat(), u).unwrap());
     }
@@ -109,7 +123,7 @@ mod tests {
     #[test]
     fn query_hash_is_scale_invariant() {
         // Queries are unit-normalised first, so scaling cannot change codes.
-        let h = NativeHasher::new(4, 32, 0);
+        let h: NativeHasher = NativeHasher::new(4, 32, 0);
         let q: Vec<f32> = vec![0.3, -0.7, 0.2, 0.9];
         let q2: Vec<f32> = q.iter().map(|v| v * 42.0).collect();
         assert_eq!(h.hash_queries(&q).unwrap(), h.hash_queries(&q2).unwrap());
@@ -120,7 +134,7 @@ mod tests {
         // The normalisation constant changes the transform tail, hence codes
         // (this is the entire RANGE-LSH mechanism).
         let d = synthetic::longtail_sift(64, 8, 1);
-        let h = NativeHasher::new(8, 64, 0);
+        let h: NativeHasher = NativeHasher::new(8, 64, 0);
         let a = h.hash_items(d.flat(), d.max_norm()).unwrap();
         let b = h.hash_items(d.flat(), d.max_norm() * 10.0).unwrap();
         assert_ne!(a, b);
@@ -130,7 +144,6 @@ mod tests {
     fn collision_rate_tracks_angular_similarity() {
         // Statistical check of Eq. 4: P[h(x)=h(y)] = 1 - theta/pi, per bit.
         // Pick two unit vectors at 60 degrees: expected per-bit collision 2/3.
-        let h = NativeHasher::new(2, 64, 3);
         // Transformed space: use queries (tail 0) so the angle is exact.
         let a = vec![1.0f32, 0.0];
         let b = vec![0.5f32, 3f32.sqrt() / 2.0];
@@ -138,19 +151,18 @@ mod tests {
         // Average over many independent panels.
         let trials = 200;
         for seed in 0..trials {
-            let h = NativeHasher::new(2, 64, seed);
+            let h: NativeHasher = NativeHasher::new(2, 64, seed);
             let ca = h.hash_queries(&a).unwrap()[0];
             let cb = h.hash_queries(&b).unwrap()[0];
             agree += 64 - crate::hash::hamming(ca, cb);
         }
-        let _ = h;
         let rate = agree as f64 / (trials as f64 * 64.0);
         assert!((rate - 2.0 / 3.0).abs() < 0.02, "collision rate {rate}");
     }
 
     #[test]
     fn rejects_ragged_buffer() {
-        let h = NativeHasher::new(4, 16, 0);
+        let h: NativeHasher = NativeHasher::new(4, 16, 0);
         assert!(h.hash_items(&[0.0; 7], 1.0).is_err());
         assert!(h.hash_queries(&[0.0; 9]).is_err());
     }
@@ -158,8 +170,41 @@ mod tests {
     #[test]
     fn width_masks_unused_bits() {
         // width < 64 must leave high bits zero.
-        let h = NativeHasher::new(4, 16, 5);
+        let h: NativeHasher = NativeHasher::new(4, 16, 5);
         let codes = h.hash_queries(&[0.1, 0.2, 0.3, 0.4]).unwrap();
         assert_eq!(codes[0] >> 16, 0);
+    }
+
+    #[test]
+    fn wide_low_words_agree_with_scalar_path() {
+        // A 64-wide panel hashed into Code128 must equal the u64 path in
+        // word 0 and leave word 1 zero (shared bit convention).
+        let d = synthetic::longtail_sift(50, 8, 3);
+        let u = d.max_norm();
+        let proj = Arc::new(Projection::gaussian(9, 64, 7));
+        let scalar: NativeHasher = NativeHasher::with_projection(proj.clone());
+        let wide: NativeHasher<Code128> = NativeHasher::with_projection(proj);
+        let a = scalar.hash_items(d.flat(), u).unwrap();
+        let b = wide.hash_items(d.flat(), u).unwrap();
+        for (s, w) in a.iter().zip(&b) {
+            assert_eq!(w, &[*s, 0]);
+        }
+    }
+
+    #[test]
+    fn wide_panel_uses_high_words() {
+        // A 128-wide panel must populate bits past 63 for generic inputs.
+        let h: NativeHasher<Code128> = NativeHasher::new(8, 128, 11);
+        let q: Vec<f32> = (0..8).map(|i| (i as f32 * 0.37).sin()).collect();
+        let code = h.hash_queries(&q).unwrap()[0];
+        // With 64 fair sign bits in the high word, all-zero is 2^-64.
+        assert_ne!(code[1], 0, "high word never set by 128-bit panel");
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity")]
+    fn rejects_panel_wider_than_code_word() {
+        let proj = Arc::new(Projection::gaussian(4, 128, 0));
+        let _h: NativeHasher<u64> = NativeHasher::with_projection(proj);
     }
 }

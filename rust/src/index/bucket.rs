@@ -1,5 +1,8 @@
 //! Hash bucket table: packed code → item ids, plus the per-query
-//! counting-sort that groups buckets by number of matching bits.
+//! counting-sort that groups buckets by number of matching bits. Generic
+//! over the code word `C` ([`CodeWord`]): `BucketTable` (= `BucketTable<u64>`)
+//! is the original single-word table; `BucketTable<Code128>` /
+//! `BucketTable<Code256>` lift the 64-bit code ceiling.
 //!
 //! The counting-sort is how both Hamming ranking (SIMPLE-LSH) and the
 //! Eq. 12 metric order (RANGE-LSH) are realised in O(#buckets) per query —
@@ -9,13 +12,16 @@
 //! `codes` vector (one linear popcount scan per query, cache-friendly and
 //! auto-vectorisable) and a flat `items` arena with per-bucket offsets —
 //! rather than pointer-chasing a map of Vecs. The hash map only serves
-//! exact-bucket lookups (single-probe protocol).
+//! exact-bucket lookups (single-probe protocol). Monomorphization keeps
+//! the `u64` scan's codegen: `C::matches` inlines to one XOR + POPCNT per
+//! word, with the word count a compile-time constant.
 
-use crate::hash::{mask_bits, matches};
+use crate::hash::CodeWord;
 use crate::util::fxhash::FxHashMap;
 use crate::ItemId;
 
 /// Reusable buffers for [`BucketTable::counting_sort_by_matches`].
+/// Width-independent: the same scratch serves tables of any code width.
 #[derive(Debug, Default, Clone)]
 pub struct SortScratch {
     /// Bucket indices grouped by match count (the sort output).
@@ -28,33 +34,33 @@ pub struct SortScratch {
 
 /// A single hash table over packed codes masked to `bits` hash bits.
 #[derive(Debug, Clone)]
-pub struct BucketTable {
+pub struct BucketTable<C: CodeWord = u64> {
     bits: usize,
     /// code → dense bucket index (exact lookups only).
-    map: FxHashMap<u64, u32>,
+    map: FxHashMap<C, u32>,
     /// Dense bucket codes (scan target of the per-query counting sort).
-    codes: Vec<u64>,
+    codes: Vec<C>,
     /// Bucket `b` owns `items[starts[b] as usize .. starts[b+1] as usize]`.
     starts: Vec<u32>,
     items: Vec<ItemId>,
 }
 
-impl BucketTable {
+impl<C: CodeWord> BucketTable<C> {
     /// Build from per-item codes. `ids[i]` is the dataset-global id of the
     /// item whose code is `codes[i]` (RANGE-LSH passes each range's ids).
-    /// Codes are masked to `bits` internally.
-    pub fn build(codes: &[u64], ids: Option<&[ItemId]>, bits: usize) -> Self {
+    /// Codes are masked to `bits` internally (`1 <= bits <= C::MAX_BITS`).
+    pub fn build(codes: &[C], ids: Option<&[ItemId]>, bits: usize) -> Self {
         if let Some(ids) = ids {
             assert_eq!(codes.len(), ids.len(), "codes/ids length mismatch");
         }
-        let mask = mask_bits(bits);
+        let mask = C::mask(bits);
         // Pass 1: assign dense bucket indices and count occupancy.
-        let mut map: FxHashMap<u64, u32> = FxHashMap::default();
-        let mut bucket_codes: Vec<u64> = Vec::new();
+        let mut map: FxHashMap<C, u32> = FxHashMap::default();
+        let mut bucket_codes: Vec<C> = Vec::new();
         let mut counts: Vec<u32> = Vec::new();
         let mut assignment: Vec<u32> = Vec::with_capacity(codes.len());
         for &code in codes {
-            let code = code & mask;
+            let code = code.and(mask);
             let b = *map.entry(code).or_insert_with(|| {
                 bucket_codes.push(code);
                 counts.push(0);
@@ -107,9 +113,9 @@ impl BucketTable {
     }
 
     /// Items whose code equals `qcode` exactly (single-probe protocol).
-    pub fn exact(&self, qcode: u64) -> Option<&[ItemId]> {
+    pub fn exact(&self, qcode: C) -> Option<&[ItemId]> {
         self.map
-            .get(&(qcode & mask_bits(self.bits)))
+            .get(&qcode.and(C::mask(self.bits)))
             .map(|&b| self.bucket_items(b as usize))
     }
 
@@ -118,8 +124,8 @@ impl BucketTable {
     /// `scratch.order[scratch.levels[l] .. scratch.levels[l+1]]`
     /// (`levels.len() == bits + 2`). All buffers live in `scratch` and are
     /// reused — the probe hot path makes no allocations once warm (§Perf).
-    pub fn counting_sort_by_matches(&self, qcode: u64, scratch: &mut SortScratch) {
-        let q = qcode & mask_bits(self.bits);
+    pub fn counting_sort_by_matches(&self, qcode: C, scratch: &mut SortScratch) {
+        let q = qcode.and(C::mask(self.bits));
         let n = self.n_buckets();
         let SortScratch { order, levels, l_cache, cursor } = scratch;
         levels.clear();
@@ -129,7 +135,7 @@ impl BucketTable {
         l_cache.clear();
         l_cache.reserve(n);
         for &code in &self.codes {
-            let l = matches(code, q, self.bits);
+            let l = code.matches(q, self.bits);
             l_cache.push(l);
             levels[l as usize + 1] += 1;
         }
@@ -150,7 +156,7 @@ impl BucketTable {
 
     /// Group this table's buckets by `l` (compat shim over the counting
     /// sort; prefer [`Self::counting_sort_by_matches`] on hot paths).
-    pub fn group_by_matches<'a>(&'a self, qcode: u64, groups: &mut Vec<Vec<&'a [ItemId]>>) {
+    pub fn group_by_matches<'a>(&'a self, qcode: C, groups: &mut Vec<Vec<&'a [ItemId]>>) {
         let mut scratch = SortScratch::default();
         self.counting_sort_by_matches(qcode, &mut scratch);
         groups.clear();
@@ -163,8 +169,8 @@ impl BucketTable {
         }
     }
 
-    /// Iterate all buckets (stats / diagnostics).
-    pub fn buckets(&self) -> impl Iterator<Item = (u64, &[ItemId])> {
+    /// Iterate all buckets (stats / diagnostics / persistence).
+    pub fn buckets(&self) -> impl Iterator<Item = (C, &[ItemId])> {
         (0..self.n_buckets()).map(|b| (self.codes[b], self.bucket_items(b)))
     }
 
@@ -183,10 +189,12 @@ impl BucketTable {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::hash::codes::{widen, Code128, Code256};
+    use crate::hash::{mask_bits, matches};
 
     #[test]
     fn build_groups_equal_codes() {
-        let t = BucketTable::build(&[0b01, 0b01, 0b10], None, 2);
+        let t = BucketTable::build(&[0b01u64, 0b01, 0b10], None, 2);
         assert_eq!(t.n_buckets(), 2);
         assert_eq!(t.largest_bucket(), 2);
         assert_eq!(t.exact(0b01).unwrap(), &[0, 1]);
@@ -197,21 +205,21 @@ mod tests {
     #[test]
     fn masking_merges_high_bit_differences() {
         // Codes differing only above `bits` collapse into one bucket.
-        let t = BucketTable::build(&[0b100_01, 0b000_01], None, 2);
+        let t = BucketTable::build(&[0b100_01u64, 0b000_01], None, 2);
         assert_eq!(t.n_buckets(), 1);
         assert_eq!(t.exact(0b01).unwrap().len(), 2);
     }
 
     #[test]
     fn custom_ids_are_preserved() {
-        let t = BucketTable::build(&[7, 7], Some(&[100, 200]), 4);
+        let t = BucketTable::build(&[7u64, 7], Some(&[100, 200]), 4);
         assert_eq!(t.exact(7).unwrap(), &[100, 200]);
     }
 
     #[test]
     fn group_by_matches_counts_correctly() {
         // bits=3, query 0b000: code 0b000 -> l=3, 0b001 -> l=2, 0b111 -> l=0.
-        let t = BucketTable::build(&[0b000, 0b001, 0b111], None, 3);
+        let t = BucketTable::build(&[0b000u64, 0b001, 0b111], None, 3);
         let mut groups = Vec::new();
         t.group_by_matches(0b000, &mut groups);
         assert_eq!(groups.len(), 4);
@@ -258,7 +266,7 @@ mod tests {
 
     #[test]
     fn counting_sort_reuses_buffers() {
-        let t = BucketTable::build(&[1, 2, 3], None, 4);
+        let t = BucketTable::build(&[1u64, 2, 3], None, 4);
         let mut scratch = SortScratch::default();
         scratch.order = vec![9u32; 100];
         scratch.levels = vec![7u32; 100];
@@ -272,7 +280,7 @@ mod tests {
 
     #[test]
     fn occupancy_histogram_sums_to_bucket_count() {
-        let t = BucketTable::build(&[1, 1, 1, 2, 3], None, 4);
+        let t = BucketTable::build(&[1u64, 1, 1, 2, 3], None, 4);
         let hist = t.occupancy_histogram(8);
         assert_eq!(hist.iter().sum::<usize>(), t.n_buckets());
         assert_eq!(hist[3], 1); // the triple bucket
@@ -281,7 +289,7 @@ mod tests {
 
     #[test]
     fn empty_table() {
-        let t = BucketTable::build(&[], None, 8);
+        let t = BucketTable::build(&[] as &[u64], None, 8);
         assert_eq!(t.n_buckets(), 0);
         assert_eq!(t.largest_bucket(), 0);
         let mut groups = Vec::new();
@@ -297,5 +305,70 @@ mod tests {
         let nine: Vec<_> = t.exact(9).unwrap().to_vec();
         assert_eq!(five, vec![0, 2, 4]);
         assert_eq!(nine, vec![1, 3]);
+    }
+
+    #[test]
+    fn wide_table_with_zero_high_words_mirrors_scalar() {
+        // Identical codes zero-extended into Code128 must produce the same
+        // bucket structure, scan order, and counting-sort levels.
+        let scalar_codes: Vec<u64> = (0..200).map(|i| i * 0x9E3779B9 % 4096).collect();
+        let wide_codes: Vec<Code128> = scalar_codes.iter().map(|&c| widen(c)).collect();
+        let ts = BucketTable::build(&scalar_codes, None, 12);
+        let tw = BucketTable::build(&wide_codes, None, 12);
+        assert_eq!(ts.n_buckets(), tw.n_buckets());
+        assert_eq!(ts.largest_bucket(), tw.largest_bucket());
+        let q = 0xABCu64;
+        let (mut ss, mut sw) = (SortScratch::default(), SortScratch::default());
+        ts.counting_sort_by_matches(q, &mut ss);
+        tw.counting_sort_by_matches(widen(q), &mut sw);
+        assert_eq!(ss.levels, sw.levels);
+        assert_eq!(ss.order, sw.order);
+    }
+
+    #[test]
+    fn wide_table_distinguishes_high_word_bits() {
+        // Two codes equal in the low word but different past bit 64 must
+        // land in different buckets once bits > 64.
+        let lo: Code128 = [42, 0];
+        let hi: Code128 = [42, 1];
+        let t = BucketTable::build(&[lo, hi, lo], None, 70);
+        assert_eq!(t.n_buckets(), 2);
+        assert_eq!(t.exact(lo).unwrap(), &[0, 2]);
+        assert_eq!(t.exact(hi).unwrap(), &[1]);
+        // ... and with bits <= 64 they merge (the mask cuts the high word).
+        let t = BucketTable::build(&[lo, hi, lo], None, 64);
+        assert_eq!(t.n_buckets(), 1);
+    }
+
+    #[test]
+    fn wide_counting_sort_levels_span_wide_bits() {
+        let bits = 200usize;
+        let q: Code256 = [1, 2, 3, 4];
+        let codes: Vec<Code256> =
+            (0..50u64).map(|i| [i, i.wrapping_mul(31), i ^ 7, i.rotate_left(9)]).collect();
+        let t = BucketTable::build(&codes, None, bits);
+        let mut scratch = SortScratch::default();
+        t.counting_sort_by_matches(q, &mut scratch);
+        assert_eq!(scratch.levels.len(), bits + 2);
+        assert_eq!(*scratch.levels.last().unwrap() as usize, t.n_buckets());
+        // Every bucket sits in the level slice of its true match count.
+        let mut seen = vec![false; t.n_buckets()];
+        for l in 0..=bits {
+            let (lo, hi) = (scratch.levels[l] as usize, scratch.levels[l + 1] as usize);
+            for &b in &scratch.order[lo..hi] {
+                assert!(!seen[b as usize]);
+                seen[b as usize] = true;
+                let code = codes[t.bucket_items(b as usize)[0] as usize];
+                assert_eq!(code.masked(bits).matches(q.masked(bits), bits) as usize, l);
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn scalar_mask_agrees_with_codeword_mask() {
+        for bits in [1usize, 7, 32, 63, 64] {
+            assert_eq!(<u64 as CodeWord>::mask(bits), mask_bits(bits));
+        }
     }
 }

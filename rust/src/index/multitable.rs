@@ -10,7 +10,9 @@ use crate::index::simple::{SimpleLshIndex, SimpleLshParams};
 use crate::index::{IndexStats, MipsIndex, SingleProbe};
 use crate::{ItemId, Result};
 
-/// `T` independent single-probe tables of any [`SingleProbe`] index type.
+/// `T` independent single-probe tables of any [`SingleProbe`] index type
+/// — including the wide-code instantiations (`SimpleLshIndex<Code128>`
+/// etc.); see the `wide_tables_compose` test.
 pub struct MultiTable<T: SingleProbe> {
     tables: Vec<T>,
     n_items: usize,
@@ -66,7 +68,7 @@ pub fn simple_multitable(
     t: usize,
 ) -> Result<MultiTable<SimpleLshIndex>> {
     MultiTable::build_with(dataset.len(), t, |seed| {
-        let hasher = NativeHasher::new(dataset.dim(), code_bits.max(1), seed);
+        let hasher: NativeHasher = NativeHasher::new(dataset.dim(), code_bits.max(1), seed);
         SimpleLshIndex::build(dataset, &hasher, SimpleLshParams::new(code_bits))
     })
 }
@@ -79,7 +81,8 @@ pub fn range_multitable(
     t: usize,
 ) -> Result<MultiTable<RangeLshIndex>> {
     MultiTable::build_with(dataset.len(), t, |seed| {
-        let hasher = NativeHasher::new(dataset.dim(), params.hash_bits().max(1), seed);
+        let width = params.hash_bits().max(1);
+        let hasher: NativeHasher = NativeHasher::new(dataset.dim(), width, seed);
         RangeLshIndex::build(dataset, &hasher, params)
     })
 }
@@ -159,6 +162,30 @@ mod tests {
         let mut out = Vec::new();
         mt.probe_union(q.row(0), &mut out);
         // sanity: ids in range
+        assert!(out.iter().all(|&id| (id as usize) < d.len()));
+    }
+
+    #[test]
+    fn wide_tables_compose() {
+        // MultiTable is generic over the index type, so 128-bit tables
+        // plug in through the same build_with hook.
+        use crate::hash::{Code128, NativeHasher};
+        use crate::index::simple::{SimpleLshIndex, SimpleLshParams};
+        let d = synthetic::longtail_sift(300, 8, 9);
+        let mt: MultiTable<SimpleLshIndex<Code128>> =
+            MultiTable::build_with(d.len(), 3, |seed| {
+                let h: NativeHasher<Code128> = NativeHasher::new(d.dim(), 96, seed);
+                SimpleLshIndex::build(&d, &h, SimpleLshParams::new(96))
+            })
+            .unwrap();
+        assert_eq!(mt.n_tables(), 3);
+        let q = synthetic::gaussian_queries(1, 8, 10);
+        let mut out = Vec::new();
+        mt.probe_union(q.row(0), &mut out);
+        let mut s = out.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), out.len());
         assert!(out.iter().all(|&id| (id as usize) < d.len()));
     }
 

@@ -2,7 +2,21 @@
 //! load it back without re-hashing the corpus — the build-once/serve-many
 //! deployment flow (`rangelsh build` → `rangelsh serve --load`).
 //!
-//! Format (all little-endian): magic, version, params, projection panel,
+//! ## Format versions
+//!
+//! - **v1** (`RLSHIDX\x01`, legacy): single-word `u64` codes, no width
+//!   header. Still readable; always loads as a `RangeLshIndex<u64>`.
+//! - **v2** (`RLSHIDX\x02`): adds a `code_words` header (u32: 1, 2 or 4)
+//!   right after the magic; per-range codes are stored as a flat little-
+//!   endian `u64` word array, `code_words` words per item. Written by
+//!   [`save_range_index`] for every width.
+//!
+//! Loading a wide (v2, `code_words > 1`) file through the scalar
+//! [`load_range_index`] fails with a clear error naming the stored width;
+//! [`load_any_range_index`] dispatches on the header and returns the
+//! matching monomorphized index wrapped in [`AnyRangeLshIndex`].
+//!
+//! Layout after the header (all little-endian): params, projection panel,
 //! then per range: `U_j`, `u_min`, and the `(code, id)` pairs of its
 //! bucket table. Codes are stored masked; the table is rebuilt on load
 //! (cheap — it is a single grouping pass).
@@ -14,92 +28,193 @@ use std::sync::Arc;
 
 use anyhow::{ensure, Context};
 
-use crate::hash::Projection;
+use crate::hash::{Code128, Code256, CodeWord, Projection, MAX_CODE_BITS};
 use crate::index::partition::{Partition, PartitionScheme};
 use crate::index::range::{RangeLshIndex, RangeLshParams};
 use crate::index::MipsIndex;
 use crate::util::bytes::*;
 use crate::Result;
 
-const MAGIC: &[u8; 8] = b"RLSHIDX\x01";
+const MAGIC_V1: &[u8; 8] = b"RLSHIDX\x01";
+const MAGIC_V2: &[u8; 8] = b"RLSHIDX\x02";
 
-/// Write `index` to `path`.
-pub fn save_range_index(index: &RangeLshIndex, path: impl AsRef<Path>) -> Result<()> {
+/// A loaded RANGE-LSH index of whatever code width the file declares.
+pub enum AnyRangeLshIndex {
+    W64(RangeLshIndex<u64>),
+    W128(RangeLshIndex<Code128>),
+    W256(RangeLshIndex<Code256>),
+}
+
+impl AnyRangeLshIndex {
+    /// Words per code (1, 2 or 4).
+    pub fn code_words(&self) -> usize {
+        match self {
+            Self::W64(_) => 1,
+            Self::W128(_) => 2,
+            Self::W256(_) => 4,
+        }
+    }
+
+    /// The underlying index as a probing trait object (any width).
+    pub fn as_mips(&self) -> &dyn MipsIndex {
+        match self {
+            Self::W64(i) => i,
+            Self::W128(i) => i,
+            Self::W256(i) => i,
+        }
+    }
+}
+
+/// Write `index` to `path` (always the v2 format, with the width header).
+pub fn save_range_index<C: CodeWord>(
+    index: &RangeLshIndex<C>,
+    path: impl AsRef<Path>,
+) -> Result<()> {
     let path = path.as_ref();
     let mut w = BufWriter::new(
         File::create(path).with_context(|| format!("creating {}", path.display()))?,
     );
-    w.write_all(MAGIC)?;
-    let p = index.params();
-    write_u32(&mut w, p.code_bits as u32)?;
-    write_u32(&mut w, p.n_partitions as u32)?;
-    write_u8(&mut w, match p.scheme {
-        PartitionScheme::Percentile => 0,
-        PartitionScheme::UniformRange => 1,
-    })?;
-    write_f32(&mut w, p.epsilon)?;
-    write_u64(&mut w, index.len() as u64)?;
-    // Projection panel.
-    let proj = index.projection();
-    write_u32(&mut w, proj.dim_in() as u32)?;
-    write_u32(&mut w, proj.width() as u32)?;
-    write_f32s(&mut w, proj.flat())?;
-    // Ranges.
-    write_u32(&mut w, index.n_ranges() as u32)?;
-    index.for_each_range(|part, table| -> Result<()> {
-        write_f32(&mut w, part.u_max)?;
-        write_f32(&mut w, part.u_min)?;
-        // (code, ids) per bucket, flattened as aligned arrays.
-        let mut codes = Vec::with_capacity(part.ids.len());
-        let mut ids = Vec::with_capacity(part.ids.len());
-        for (code, items) in table.buckets() {
-            for &id in items {
-                codes.push(code);
-                ids.push(id);
-            }
-        }
-        write_u64s(&mut w, &codes)?;
-        write_u32s(&mut w, &ids)?;
-        Ok(())
-    })?;
+    w.write_all(MAGIC_V2)?;
+    write_u32(&mut w, C::WORDS as u32)?;
+    write_params_and_ranges(index, &mut w)?;
     w.flush()?;
     Ok(())
 }
 
-/// Load an index previously written by [`save_range_index`].
-pub fn load_range_index(path: impl AsRef<Path>) -> Result<RangeLshIndex> {
+fn write_params_and_ranges<C: CodeWord>(
+    index: &RangeLshIndex<C>,
+    w: &mut impl Write,
+) -> Result<()> {
+    let p = index.params();
+    write_u32(w, p.code_bits as u32)?;
+    write_u32(w, p.n_partitions as u32)?;
+    write_u8(w, match p.scheme {
+        PartitionScheme::Percentile => 0,
+        PartitionScheme::UniformRange => 1,
+    })?;
+    write_f32(w, p.epsilon)?;
+    write_u64(w, index.len() as u64)?;
+    // Projection panel.
+    let proj = index.projection();
+    write_u32(w, proj.dim_in() as u32)?;
+    write_u32(w, proj.width() as u32)?;
+    write_f32s(w, proj.flat())?;
+    // Ranges.
+    write_u32(w, index.n_ranges() as u32)?;
+    index.for_each_range(|part, table| -> Result<()> {
+        write_f32(w, part.u_max)?;
+        write_f32(w, part.u_min)?;
+        // (code, ids) per bucket, flattened as aligned arrays; codes as
+        // C::WORDS little-endian u64 words each.
+        let mut words = Vec::with_capacity(part.ids.len() * C::WORDS);
+        let mut ids = Vec::with_capacity(part.ids.len());
+        for (code, items) in table.buckets() {
+            for &id in items {
+                words.extend_from_slice(code.as_words());
+                ids.push(id);
+            }
+        }
+        write_u64s(w, &words)?;
+        write_u32s(w, &ids)?;
+        Ok(())
+    })?;
+    Ok(())
+}
+
+/// Load an index previously written by [`save_range_index`] with `u64`
+/// codes (v1 or single-word v2). Wide files fail with an error naming the
+/// stored width — use [`load_any_range_index`] for those.
+pub fn load_range_index(path: impl AsRef<Path>) -> Result<RangeLshIndex<u64>> {
+    match load_any_range_index(&path)? {
+        AnyRangeLshIndex::W64(index) => Ok(index),
+        other => anyhow::bail!(
+            "{}: index stores {}-bit codes ({} words per code); \
+             load it with load_any_range_index / a matching code_bits config",
+            path.as_ref().display(),
+            other.code_words() * 64,
+            other.code_words()
+        ),
+    }
+}
+
+/// Load an index of any code width, dispatching on the file header.
+pub fn load_any_range_index(path: impl AsRef<Path>) -> Result<AnyRangeLshIndex> {
     let path = path.as_ref();
     let mut r = BufReader::new(
         File::open(path).with_context(|| format!("opening {}", path.display()))?,
     );
     let mut magic = [0u8; 8];
-    r.read_exact(&mut magic)?;
-    ensure!(&magic == MAGIC, "{}: not a rangelsh index", path.display());
-    let code_bits = read_u32(&mut r)? as usize;
-    let n_partitions = read_u32(&mut r)? as usize;
-    let scheme = match read_u8(&mut r)? {
+    r.read_exact(&mut magic)
+        .with_context(|| format!("{}: truncated header", path.display()))?;
+    let code_words = if &magic == MAGIC_V1 {
+        1 // legacy single-word format, no width header
+    } else if &magic == MAGIC_V2 {
+        read_u32(&mut r)? as usize
+    } else {
+        anyhow::bail!("{}: not a rangelsh index", path.display());
+    };
+    match code_words {
+        1 => Ok(AnyRangeLshIndex::W64(read_body::<u64>(&mut r, path)?)),
+        2 => Ok(AnyRangeLshIndex::W128(read_body::<Code128>(&mut r, path)?)),
+        4 => Ok(AnyRangeLshIndex::W256(read_body::<Code256>(&mut r, path)?)),
+        other => anyhow::bail!(
+            "{}: unsupported code width {} words (supported: 1, 2, 4)",
+            path.display(),
+            other
+        ),
+    }
+}
+
+fn read_body<C: CodeWord>(r: &mut impl Read, path: &Path) -> Result<RangeLshIndex<C>> {
+    let code_bits = read_u32(r)? as usize;
+    let n_partitions = read_u32(r)? as usize;
+    let scheme = match read_u8(r)? {
         0 => PartitionScheme::Percentile,
         1 => PartitionScheme::UniformRange,
         other => anyhow::bail!("unknown partition scheme tag {other}"),
     };
-    let epsilon = read_f32(&mut r)?;
-    let n_items = read_u64(&mut r)? as usize;
-    let dim_in = read_u32(&mut r)? as usize;
-    let width = read_u32(&mut r)? as usize;
-    let flat = read_f32s(&mut r)?;
+    let epsilon = read_f32(r)?;
+    let n_items = read_u64(r)? as usize;
+    let dim_in = read_u32(r)? as usize;
+    let width = read_u32(r)? as usize;
+    // Validate header fields here so corrupt files fail with a Result
+    // error instead of tripping downstream asserts (Projection::from_flat,
+    // MetricOrder::build, partition_id_bits) and aborting the process.
+    ensure!(
+        n_partitions >= 1,
+        "{}: implausible partition count 0 (corrupt header?)",
+        path.display()
+    );
+    ensure!(
+        (0.0..1.0).contains(&epsilon),
+        "{}: implausible epsilon {epsilon} (corrupt header?)",
+        path.display()
+    );
+    ensure!(
+        dim_in >= 1 && width >= 1 && width <= MAX_CODE_BITS,
+        "{}: implausible projection shape {dim_in} x {width} (corrupt header?)",
+        path.display()
+    );
+    let flat = read_f32s(r)?;
     ensure!(flat.len() == dim_in * width, "projection size mismatch");
     let proj = Arc::new(Projection::from_flat(dim_in, width, flat));
-    let n_ranges = read_u32(&mut r)? as usize;
+    let n_ranges = read_u32(r)? as usize;
     let params = RangeLshParams::new(code_bits, n_partitions)
         .with_scheme(scheme)
         .with_epsilon(epsilon);
     let mut ranges = Vec::with_capacity(n_ranges);
     for _ in 0..n_ranges {
-        let u_max = read_f32(&mut r)?;
-        let u_min = read_f32(&mut r)?;
-        let codes = read_u64s(&mut r)?;
-        let ids = read_u32s(&mut r)?;
-        ensure!(codes.len() == ids.len(), "codes/ids length mismatch");
+        let u_max = read_f32(r)?;
+        let u_min = read_f32(r)?;
+        let words = read_u64s(r)?;
+        let ids = read_u32s(r)?;
+        ensure!(
+            words.len() == ids.len() * C::WORDS,
+            "{}: code words not a multiple of {} per id",
+            path.display(),
+            C::WORDS
+        );
+        let codes: Vec<C> = words.chunks_exact(C::WORDS).map(C::from_words).collect();
         ranges.push((Partition { ids, u_max, u_min }, codes));
     }
     RangeLshIndex::from_parts(params, proj, n_items, ranges)
@@ -113,11 +228,29 @@ mod tests {
     use crate::index::MipsIndex;
     use crate::util::tmp::TempPath;
 
-    fn build_one() -> (crate::data::Dataset, RangeLshIndex) {
+    fn build_one() -> (crate::data::Dataset, RangeLshIndex<u64>) {
         let d = synthetic::longtail_sift(600, 8, 0);
-        let h = NativeHasher::new(8, 64, 7);
+        let h: NativeHasher = NativeHasher::new(8, 64, 7);
         let idx = RangeLshIndex::build(&d, &h, RangeLshParams::new(16, 8)).unwrap();
         (d, idx)
+    }
+
+    fn build_wide() -> (crate::data::Dataset, RangeLshIndex<Code128>) {
+        let d = synthetic::longtail_sift(400, 8, 1);
+        let params = RangeLshParams::new(128, 8);
+        let h: NativeHasher<Code128> = NativeHasher::new(8, params.hash_bits(), 7);
+        let idx = RangeLshIndex::build(&d, &h, params).unwrap();
+        (d, idx)
+    }
+
+    /// Write `index` in the legacy v1 layout (no width header, plain u64
+    /// codes) — what pre-refactor builds produced.
+    fn save_v1(index: &RangeLshIndex<u64>, path: &Path) -> Result<()> {
+        let mut w = BufWriter::new(File::create(path)?);
+        w.write_all(MAGIC_V1)?;
+        write_params_and_ranges(index, &mut w)?;
+        w.flush()?;
+        Ok(())
     }
 
     #[test]
@@ -146,10 +279,99 @@ mod tests {
     }
 
     #[test]
+    fn legacy_v1_files_still_load() {
+        // Existing single-word index files round-trip through the new
+        // reader (satellite: back-compat path).
+        let (_, idx) = build_one();
+        let tmp = TempPath::new("rlsh-v1");
+        save_v1(&idx, tmp.path()).unwrap();
+        let loaded = load_range_index(tmp.path()).unwrap();
+        assert_eq!(loaded.len(), idx.len());
+        assert_eq!(loaded.u_maxes(), idx.u_maxes());
+        let q = synthetic::gaussian_queries(3, 8, 2);
+        for qi in 0..q.len() {
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            idx.probe(q.row(qi), 50, &mut a);
+            loaded.probe(q.row(qi), 50, &mut b);
+            assert_eq!(a, b, "query {qi}");
+        }
+    }
+
+    #[test]
+    fn wide_round_trip_preserves_probe_behaviour() {
+        let (_, idx) = build_wide();
+        let tmp = TempPath::new("rlsh-wide");
+        save_range_index(&idx, tmp.path()).unwrap();
+        let loaded = match load_any_range_index(tmp.path()).unwrap() {
+            AnyRangeLshIndex::W128(i) => i,
+            other => panic!("expected 128-bit index, got {} words", other.code_words()),
+        };
+        assert_eq!(loaded.len(), idx.len());
+        assert_eq!(loaded.u_maxes(), idx.u_maxes());
+        let (sa, sb) = (idx.stats(), loaded.stats());
+        assert_eq!(sa.n_buckets, sb.n_buckets);
+        // L = 128, m = 8 ⇒ 3 id bits ⇒ 125 hash bits per range.
+        assert_eq!(sa.hash_bits, 125);
+        assert_eq!(sb.hash_bits, 125);
+        let q = synthetic::gaussian_queries(5, 8, 3);
+        for qi in 0..q.len() {
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            idx.probe(q.row(qi), 100, &mut a);
+            loaded.probe(q.row(qi), 100, &mut b);
+            assert_eq!(a, b, "query {qi}");
+        }
+    }
+
+    #[test]
+    fn scalar_loader_rejects_wide_files_with_clear_error() {
+        // Satellite: the failure path must name the stored width instead
+        // of corrupting or panicking.
+        let (_, idx) = build_wide();
+        let tmp = TempPath::new("rlsh-wide-err");
+        save_range_index(&idx, tmp.path()).unwrap();
+        let err = load_range_index(tmp.path()).expect_err("u64 loader must refuse a wide file");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("128-bit"), "unhelpful error: {msg}");
+    }
+
+    #[test]
     fn rejects_garbage_files() {
         let tmp = TempPath::new("rlsh-garbage");
         std::fs::write(tmp.path(), b"definitely not an index").unwrap();
         assert!(load_range_index(tmp.path()).is_err());
+        assert!(load_any_range_index(tmp.path()).is_err());
+    }
+
+    #[test]
+    fn rejects_unsupported_word_count() {
+        // A v2 header claiming 3 words per code is invalid.
+        let tmp = TempPath::new("rlsh-badwidth");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC_V2);
+        bytes.extend_from_slice(&3u32.to_le_bytes());
+        std::fs::write(tmp.path(), &bytes).unwrap();
+        let err = load_any_range_index(tmp.path()).unwrap_err();
+        assert!(format!("{err:#}").contains("unsupported code width"));
+    }
+
+    #[test]
+    fn rejects_corrupt_projection_header() {
+        // A plausible-looking v2 file whose projection width is zero must
+        // fail with a Result error, not trip an assert.
+        let tmp = TempPath::new("rlsh-badproj");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC_V2);
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // code_words
+        bytes.extend_from_slice(&16u32.to_le_bytes()); // code_bits
+        bytes.extend_from_slice(&8u32.to_le_bytes()); // n_partitions
+        bytes.push(0); // scheme tag
+        bytes.extend_from_slice(&0.1f32.to_le_bytes()); // epsilon
+        bytes.extend_from_slice(&100u64.to_le_bytes()); // n_items
+        bytes.extend_from_slice(&9u32.to_le_bytes()); // dim_in
+        bytes.extend_from_slice(&0u32.to_le_bytes()); // width 0: implausible
+        std::fs::write(tmp.path(), &bytes).unwrap();
+        let err = load_any_range_index(tmp.path()).unwrap_err();
+        assert!(format!("{err:#}").contains("projection shape"), "{err:#}");
     }
 
     #[test]

@@ -1,4 +1,7 @@
 //! NORM-RANGING LSH (paper §3, Algorithms 1–2) — the contribution.
+//! Generic over the code word `C` ([`CodeWord`]): `RangeLshIndex` is the
+//! original `u64` (L ≤ 64) index; `RangeLshIndex<Code128>` / `<Code256>`
+//! serve the high-recall regimes the 64-bit ceiling used to rule out.
 //!
 //! Index building (Alg. 1): rank items by 2-norm, cut into `m` ranges,
 //! normalise each range by its **local** max norm `U_j`, and build an
@@ -17,16 +20,21 @@
 //! Code-length accounting: with `m` ranges, `ceil(log2 m)` bits of the
 //! total budget address the range (paper §4), so each range's table uses
 //! `L - ceil(log2 m)` hash bits. At equal total code length the comparison
-//! against SIMPLE-LSH is fair.
+//! against SIMPLE-LSH is fair. The arithmetic is width-independent; at
+//! L > 64 the per-range budget stays large (e.g. L=128, m=64 ⇒ 122 hash
+//! bits) instead of being squeezed toward zero.
 
 use std::sync::Arc;
 
 use crate::data::Dataset;
 use crate::hash::codes::partition_id_bits;
-use crate::hash::{ItemHasher, NativeHasher, Projection};
+use crate::hash::{CodeWord, ItemHasher, NativeHasher, Projection};
 use crate::index::partition::{partition, Partition, PartitionScheme};
 use crate::index::{BucketTable, CodeProbe, IndexStats, MetricOrder, MipsIndex, SingleProbe};
 use crate::{ItemId, Result};
+
+#[cfg(doc)]
+use crate::hash::{Code128, Code256};
 
 /// Parameters for [`RangeLshIndex`].
 #[derive(Debug, Clone, Copy)]
@@ -64,33 +72,34 @@ impl RangeLshParams {
 
     /// Hash bits left after paying for the range id:
     /// `L_hash = code_bits - ceil(log2 m)` (e.g. 16-bit budget, 32 ranges
-    /// ⇒ 11 hash bits — the paper's §4 example).
+    /// ⇒ 11 hash bits — the paper's §4 example; 128-bit budget, 32 ranges
+    /// ⇒ 123 hash bits). Width-independent arithmetic.
     pub fn hash_bits(&self) -> usize {
         self.code_bits.saturating_sub(partition_id_bits(self.n_partitions))
     }
 }
 
 /// One norm range's index: ids, local max norm, bucket table.
-struct SubIndex {
+struct SubIndex<C: CodeWord> {
     part: Partition,
-    table: BucketTable,
+    table: BucketTable<C>,
 }
 
-/// A built NORM-RANGING LSH index.
-pub struct RangeLshIndex {
-    subs: Vec<SubIndex>,
+/// A built NORM-RANGING LSH index over `C`-wide codes.
+pub struct RangeLshIndex<C: CodeWord = u64> {
+    subs: Vec<SubIndex<C>>,
     order: MetricOrder,
     proj: Arc<Projection>,
     params: RangeLshParams,
     n_items: usize,
 }
 
-impl RangeLshIndex {
+impl<C: CodeWord> RangeLshIndex<C> {
     /// Build per Algorithm 1. `hasher` does the bulk hashing (native or
     /// PJRT); each range is hashed with its own `U_j`.
     pub fn build(
         dataset: &Dataset,
-        hasher: &dyn ItemHasher,
+        hasher: &dyn ItemHasher<C>,
         params: RangeLshParams,
     ) -> Result<Self> {
         anyhow::ensure!(params.n_partitions >= 1, "need at least one partition");
@@ -106,6 +115,11 @@ impl RangeLshIndex {
             hash_bits <= hasher.width(),
             "hash bits {hash_bits} exceed hasher width {}",
             hasher.width()
+        );
+        anyhow::ensure!(
+            hash_bits <= C::MAX_BITS,
+            "hash bits {hash_bits} exceed the {}-bit code word",
+            C::MAX_BITS
         );
         anyhow::ensure!(
             hasher.dim() == dataset.dim(),
@@ -135,8 +149,8 @@ impl RangeLshIndex {
         })
     }
 
-    pub fn hash_query(&self, query: &[f32]) -> u64 {
-        NativeHasher::with_projection(self.proj.clone())
+    pub fn hash_query(&self, query: &[f32]) -> C {
+        NativeHasher::<C>::with_projection(self.proj.clone())
             .hash_queries(query)
             .expect("query row length matches index dim")[0]
     }
@@ -167,7 +181,7 @@ impl RangeLshIndex {
     /// Visit every range's partition + bucket table (index persistence).
     pub fn for_each_range<E>(
         &self,
-        mut f: impl FnMut(&Partition, &BucketTable) -> std::result::Result<(), E>,
+        mut f: impl FnMut(&Partition, &BucketTable<C>) -> std::result::Result<(), E>,
     ) -> std::result::Result<(), E> {
         for sub in &self.subs {
             f(&sub.part, &sub.table)?;
@@ -183,10 +197,11 @@ impl RangeLshIndex {
         params: RangeLshParams,
         proj: Arc<Projection>,
         n_items: usize,
-        ranges: Vec<(Partition, Vec<u64>)>,
+        ranges: Vec<(Partition, Vec<C>)>,
     ) -> Result<Self> {
         let hash_bits = params.hash_bits();
         anyhow::ensure!(hash_bits >= 1, "bad params: zero hash bits");
+        anyhow::ensure!(hash_bits <= C::MAX_BITS, "bad params: hash bits exceed code word");
         let total: usize = ranges.iter().map(|(p, _)| p.ids.len()).sum();
         anyhow::ensure!(total == n_items, "ranges hold {total} items, expected {n_items}");
         let mut subs = Vec::with_capacity(ranges.len());
@@ -199,9 +214,15 @@ impl RangeLshIndex {
         let order = MetricOrder::build(&u_maxes, hash_bits, params.epsilon);
         Ok(Self { subs, order, proj, params, n_items })
     }
+
+    /// One range's bucket table (tests/diagnostics).
+    #[cfg(test)]
+    pub(crate) fn sub_table(&self, j: usize) -> &BucketTable<C> {
+        &self.subs[j].table
+    }
 }
 
-impl MipsIndex for RangeLshIndex {
+impl<C: CodeWord> MipsIndex for RangeLshIndex<C> {
     fn probe(&self, query: &[f32], budget: usize, out: &mut Vec<ItemId>) {
         self.probe_with_code(self.hash_query(query), budget, out);
     }
@@ -228,13 +249,14 @@ impl MipsIndex for RangeLshIndex {
 
 thread_local! {
     /// Reusable per-thread probe scratch, one sort buffer per range —
-    /// probing makes no allocations once a thread is warm (§Perf).
+    /// probing makes no allocations once a thread is warm (§Perf). The
+    /// scratch is width-independent, so every `C` instantiation shares it.
     static SCRATCH: std::cell::RefCell<Vec<crate::index::bucket::SortScratch>> =
         const { std::cell::RefCell::new(Vec::new()) };
 }
 
-impl CodeProbe for RangeLshIndex {
-    fn probe_with_code(&self, qcode: u64, budget: usize, out: &mut Vec<ItemId>) {
+impl<C: CodeWord> CodeProbe<C> for RangeLshIndex<C> {
+    fn probe_with_code(&self, qcode: C, budget: usize, out: &mut Vec<ItemId>) {
         SCRATCH.with(|scratch| {
             let per_sub = &mut *scratch.borrow_mut();
             if per_sub.len() < self.subs.len() {
@@ -264,7 +286,7 @@ impl CodeProbe for RangeLshIndex {
     }
 }
 
-impl SingleProbe for RangeLshIndex {
+impl<C: CodeWord> SingleProbe for RangeLshIndex<C> {
     /// Single-probe protocol: visit the query-code bucket in every range
     /// (the multi-table supplementary experiment).
     fn probe_exact(&self, query: &[f32], out: &mut Vec<ItemId>) {
@@ -281,14 +303,11 @@ impl SingleProbe for RangeLshIndex {
 mod tests {
     use super::*;
     use crate::data::synthetic;
+    use crate::hash::{Code128, Code256};
     use crate::index::simple::{SimpleLshIndex, SimpleLshParams};
 
-    fn build(
-        d: &Dataset,
-        bits: usize,
-        m: usize,
-    ) -> RangeLshIndex {
-        let h = NativeHasher::new(d.dim(), 64, 99);
+    fn build(d: &Dataset, bits: usize, m: usize) -> RangeLshIndex {
+        let h: NativeHasher = NativeHasher::new(d.dim(), 64, 99);
         RangeLshIndex::build(d, &h, RangeLshParams::new(bits, m)).unwrap()
     }
 
@@ -299,6 +318,11 @@ mod tests {
         assert_eq!(RangeLshParams::new(32, 64).hash_bits(), 26);
         assert_eq!(RangeLshParams::new(64, 128).hash_bits(), 57);
         assert_eq!(RangeLshParams::new(16, 1).hash_bits(), 16);
+        // The wide regimes this refactor opens up: the per-range budget
+        // stays large instead of being squeezed toward zero.
+        assert_eq!(RangeLshParams::new(128, 32).hash_bits(), 123);
+        assert_eq!(RangeLshParams::new(128, 64).hash_bits(), 122);
+        assert_eq!(RangeLshParams::new(256, 128).hash_bits(), 249);
     }
 
     #[test]
@@ -337,7 +361,7 @@ mod tests {
         // positions are non-decreasing.
         let hash_bits = idx.params().hash_bits();
         let mask = crate::hash::mask_bits(hash_bits);
-        let h = NativeHasher::with_projection(idx.projection().clone());
+        let h: NativeHasher = NativeHasher::with_projection(idx.projection().clone());
         let mut schedule_pos = std::collections::HashMap::new();
         for (pos, &(j, l)) in idx.metric_order().entries().iter().enumerate() {
             schedule_pos.insert((j, l), pos);
@@ -346,7 +370,7 @@ mod tests {
         let mut item_jl = std::collections::HashMap::new();
         for (j, u_j) in idx.u_maxes().iter().enumerate() {
             // recompute codes for the items of range j
-            for (code, ids) in idx.subs[j].table.buckets() {
+            for (code, ids) in idx.sub_table(j).buckets() {
                 let _ = code;
                 for &id in ids {
                     let codes = h.hash_items(d.row(id as usize), *u_j).unwrap();
@@ -368,7 +392,7 @@ mod tests {
         // With one range, RANGE-LSH degenerates to SIMPLE-LSH: same U, same
         // panel ⇒ identical buckets and Hamming probing order grouping.
         let d = synthetic::longtail_sift(300, 8, 3);
-        let h = NativeHasher::new(8, 64, 42);
+        let h: NativeHasher = NativeHasher::new(8, 64, 42);
         let r = RangeLshIndex::build(&d, &h, RangeLshParams::new(16, 1)).unwrap();
         let s = SimpleLshIndex::build(&d, &h, SimpleLshParams::new(16)).unwrap();
         let q = synthetic::gaussian_queries(1, 8, 6);
@@ -391,7 +415,7 @@ mod tests {
     fn bucket_balance_beats_simple_on_longtail_data() {
         // The §3.2 claim: RANGE-LSH spreads items over far more buckets.
         let d = synthetic::longtail_sift(5000, 16, 4);
-        let h = NativeHasher::new(16, 64, 7);
+        let h: NativeHasher = NativeHasher::new(16, 64, 7);
         let r = RangeLshIndex::build(&d, &h, RangeLshParams::new(16, 32)).unwrap();
         let s = SimpleLshIndex::build(&d, &h, SimpleLshParams::new(16)).unwrap();
         let (rs, ss) = (r.stats(), s.stats());
@@ -407,7 +431,7 @@ mod tests {
     #[test]
     fn rejects_budget_smaller_than_id_bits() {
         let d = synthetic::longtail_sift(100, 8, 0);
-        let h = NativeHasher::new(8, 64, 0);
+        let h: NativeHasher = NativeHasher::new(8, 64, 0);
         // 128 partitions need 7 id bits; a 7-bit budget leaves 0 hash bits.
         assert!(RangeLshIndex::build(&d, &h, RangeLshParams::new(7, 128)).is_err());
     }
@@ -426,7 +450,7 @@ mod tests {
     #[test]
     fn uniform_scheme_builds_and_probes() {
         let d = synthetic::longtail_sift(800, 8, 6);
-        let h = NativeHasher::new(8, 64, 1);
+        let h: NativeHasher = NativeHasher::new(8, 64, 1);
         let idx = RangeLshIndex::build(
             &d,
             &h,
@@ -450,5 +474,43 @@ mod tests {
         sorted.sort_unstable();
         sorted.dedup();
         assert_eq!(sorted.len(), out.len(), "duplicates from single-probe");
+    }
+
+    #[test]
+    fn wide_range_index_builds_and_probes_at_l128() {
+        // The regime the refactor exists for: L = 128 total bits, 16
+        // ranges ⇒ 124 hash bits per range — impossible with u64 codes.
+        let d = synthetic::longtail_sift(600, 8, 10);
+        let params = RangeLshParams::new(128, 16);
+        let h: NativeHasher<Code128> = NativeHasher::new(8, params.hash_bits(), 17);
+        let idx = RangeLshIndex::build(&d, &h, params).unwrap();
+        assert_eq!(idx.stats().hash_bits, 124);
+        assert_eq!(idx.stats().n_partitions, 16);
+        let q = synthetic::gaussian_queries(2, 8, 11);
+        for qi in 0..q.len() {
+            let mut out = Vec::new();
+            idx.probe(q.row(qi), usize::MAX, &mut out);
+            assert_eq!(out.len(), d.len());
+            let mut s = out.clone();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), d.len());
+            let mut capped = Vec::new();
+            idx.probe(q.row(qi), 33, &mut capped);
+            assert_eq!(capped.len(), 33);
+        }
+    }
+
+    #[test]
+    fn wide_256_bit_range_index_round_trips_probing() {
+        let d = synthetic::longtail_sift(300, 8, 12);
+        let params = RangeLshParams::new(256, 8);
+        let h: NativeHasher<Code256> = NativeHasher::new(8, params.hash_bits(), 19);
+        let idx = RangeLshIndex::build(&d, &h, params).unwrap();
+        assert_eq!(idx.stats().hash_bits, 253);
+        let q = synthetic::gaussian_queries(1, 8, 13);
+        let mut out = Vec::new();
+        idx.probe(q.row(0), usize::MAX, &mut out);
+        assert_eq!(out.len(), d.len());
     }
 }

@@ -1,11 +1,13 @@
 //! SIGN-ALSH index (Shrivastava & Li 2015) — the second asymmetric
 //! baseline in the paper's lineage (§1/§2.3): Eq.-4 sign random projection
 //! over the SIGN-ALSH transform, Hamming-ranked multi-probing, same total
-//! code budget as the other algorithms.
+//! code budget as the other algorithms. Generic over the code word `C`
+//! ([`CodeWord`]) like the SIMPLE/RANGE indexes, so the baseline stays
+//! comparable in the wide-code regimes.
 
 use crate::data::Dataset;
-use crate::hash::codes::mask_bits;
-use crate::hash::Projection;
+use crate::hash::codes::MAX_CODE_BITS;
+use crate::hash::{CodeWord, Projection};
 use crate::index::{BucketTable, IndexStats, MipsIndex, SingleProbe, SortScratch};
 use crate::transform::sign_alsh::SignAlshTransform;
 use crate::util::par;
@@ -27,19 +29,20 @@ impl SignAlshParams {
 }
 
 /// A built SIGN-ALSH index (single table, Hamming-ranked probing).
-pub struct SignAlshIndex {
-    table: BucketTable,
+pub struct SignAlshIndex<C: CodeWord = u64> {
+    table: BucketTable<C>,
     proj: Projection,
     transform: SignAlshTransform,
     params: SignAlshParams,
     n_items: usize,
 }
 
-impl SignAlshIndex {
+impl<C: CodeWord> SignAlshIndex<C> {
     pub fn build(dataset: &Dataset, params: SignAlshParams) -> Result<Self> {
         anyhow::ensure!(
-            (1..=64).contains(&params.code_bits),
-            "code_bits must be in 1..=64"
+            params.code_bits >= 1 && params.code_bits <= C::MAX_BITS,
+            "code_bits must be in 1..={}",
+            C::MAX_BITS
         );
         let transform = SignAlshTransform::new(params.m, params.u);
         let dim_in = transform.dim_out(dataset.dim());
@@ -47,7 +50,7 @@ impl SignAlshIndex {
         let max_norm = dataset.max_norm();
         anyhow::ensure!(max_norm > 0.0, "dataset max norm must be positive");
 
-        let codes: Vec<u64> = par::par_map(dataset.len(), |i| {
+        let codes: Vec<C> = par::par_map(dataset.len(), |i| {
             let mut buf = Vec::with_capacity(dim_in);
             transform.transform_item(dataset.row(i), max_norm, &mut buf);
             sign_project(&proj, &buf)
@@ -62,7 +65,7 @@ impl SignAlshIndex {
         })
     }
 
-    pub fn hash_query(&self, query: &[f32]) -> u64 {
+    pub fn hash_query(&self, query: &[f32]) -> C {
         let mut buf = Vec::with_capacity(self.proj.dim_in());
         self.transform.transform_query(query, &mut buf);
         sign_project(&self.proj, &buf)
@@ -75,24 +78,20 @@ impl SignAlshIndex {
 
 /// Sign-project a transformed row against the panel (strictly-positive
 /// convention, same as the SIMPLE-LSH paths).
-fn sign_project(proj: &Projection, xt: &[f32]) -> u64 {
+fn sign_project<C: CodeWord>(proj: &Projection, xt: &[f32]) -> C {
     debug_assert_eq!(xt.len(), proj.dim_in());
     let width = proj.width();
-    let mut acc = [0.0f32; 64];
+    let mut acc = [0.0f32; MAX_CODE_BITS];
     let acc = &mut acc[..width];
     for (k, &v) in xt.iter().enumerate() {
         for (a, &w) in acc.iter_mut().zip(proj.row(k)) {
             *a += v * w;
         }
     }
-    let mut code = 0u64;
-    for (j, &a) in acc.iter().enumerate() {
-        code |= ((a > 0.0) as u64) << j;
-    }
-    code & mask_bits(width)
+    C::pack_from_signs(acc)
 }
 
-impl MipsIndex for SignAlshIndex {
+impl<C: CodeWord> MipsIndex for SignAlshIndex<C> {
     fn probe(&self, query: &[f32], budget: usize, out: &mut Vec<ItemId>) {
         let qcode = self.hash_query(query);
         let mut scratch = SortScratch::default();
@@ -127,7 +126,7 @@ impl MipsIndex for SignAlshIndex {
     }
 }
 
-impl SingleProbe for SignAlshIndex {
+impl<C: CodeWord> SingleProbe for SignAlshIndex<C> {
     fn probe_exact(&self, query: &[f32], out: &mut Vec<ItemId>) {
         if let Some(items) = self.table.exact(self.hash_query(query)) {
             out.extend_from_slice(items);
@@ -139,11 +138,12 @@ impl SingleProbe for SignAlshIndex {
 mod tests {
     use super::*;
     use crate::data::synthetic;
+    use crate::hash::Code128;
 
     #[test]
     fn probe_is_exhaustive_and_unique() {
         let d = synthetic::longtail_sift(400, 8, 0);
-        let idx = SignAlshIndex::build(&d, SignAlshParams::recommended(16)).unwrap();
+        let idx: SignAlshIndex = SignAlshIndex::build(&d, SignAlshParams::recommended(16)).unwrap();
         let q = synthetic::gaussian_queries(1, 8, 1);
         let mut out = Vec::new();
         idx.probe(q.row(0), usize::MAX, &mut out);
@@ -157,7 +157,7 @@ mod tests {
     #[test]
     fn budget_respected() {
         let d = synthetic::longtail_sift(200, 8, 1);
-        let idx = SignAlshIndex::build(&d, SignAlshParams::recommended(16)).unwrap();
+        let idx: SignAlshIndex = SignAlshIndex::build(&d, SignAlshParams::recommended(16)).unwrap();
         let q = synthetic::gaussian_queries(1, 8, 2);
         let mut out = Vec::new();
         idx.probe(q.row(0), 17, &mut out);
@@ -170,7 +170,7 @@ mod tests {
         let d = synthetic::mf_embeddings(2000, 16, 8, 2);
         let q = synthetic::mf_user_queries(50, 16, 8, 2);
         let gt = crate::eval::exact_topk(&d, &q, 1);
-        let idx = SignAlshIndex::build(&d, SignAlshParams::recommended(32)).unwrap();
+        let idx: SignAlshIndex = SignAlshIndex::build(&d, SignAlshParams::recommended(32)).unwrap();
         let mut hits = 0;
         for qi in 0..q.len() {
             let mut out = Vec::new();
@@ -185,10 +185,24 @@ mod tests {
     #[test]
     fn stats_are_consistent() {
         let d = synthetic::longtail_sift(300, 8, 3);
-        let idx = SignAlshIndex::build(&d, SignAlshParams::recommended(16)).unwrap();
+        let idx: SignAlshIndex = SignAlshIndex::build(&d, SignAlshParams::recommended(16)).unwrap();
         let s = idx.stats();
         assert_eq!(s.n_items, 300);
         assert!(s.n_buckets >= 1 && s.n_buckets <= 300);
         assert_eq!(s.n_partitions, 1);
+    }
+
+    #[test]
+    fn wide_sign_alsh_probes_128_bit_codes() {
+        let d = synthetic::longtail_sift(200, 8, 4);
+        let idx: SignAlshIndex<Code128> =
+            SignAlshIndex::build(&d, SignAlshParams::recommended(128)).unwrap();
+        assert_eq!(idx.stats().hash_bits, 128);
+        let q = synthetic::gaussian_queries(1, 8, 5);
+        let mut out = Vec::new();
+        idx.probe(q.row(0), usize::MAX, &mut out);
+        assert_eq!(out.len(), d.len());
+        // Scalar words reject the same budget.
+        assert!(SignAlshIndex::<u64>::build(&d, SignAlshParams::recommended(128)).is_err());
     }
 }

@@ -1,5 +1,7 @@
 //! SIMPLE-LSH index (paper §2.3) — the state-of-the-art baseline whose
-//! long-tail pathology motivates the paper.
+//! long-tail pathology motivates the paper. Generic over the code word
+//! `C` ([`CodeWord`]): `SimpleLshIndex` is the original `u64` (L ≤ 64)
+//! index; `SimpleLshIndex<Code128>` / `<Code256>` lift the code ceiling.
 //!
 //! Single table: items normalised by the *global* max norm `U`, transformed
 //! (Eq. 8), sign-projected, bucketed by code. Multi-probing ranks buckets
@@ -9,14 +11,17 @@
 use std::sync::Arc;
 
 use crate::data::Dataset;
-use crate::hash::{ItemHasher, NativeHasher, Projection};
+use crate::hash::{CodeWord, ItemHasher, NativeHasher, Projection};
 use crate::index::{BucketTable, CodeProbe, IndexStats, MipsIndex, SingleProbe};
 use crate::{ItemId, Result};
+
+#[cfg(doc)]
+use crate::hash::{Code128, Code256};
 
 /// Parameters for [`SimpleLshIndex`].
 #[derive(Debug, Clone, Copy)]
 pub struct SimpleLshParams {
-    /// Total code length L in bits (1..=64).
+    /// Total code length L in bits (1..=C::MAX_BITS).
     pub code_bits: usize,
 }
 
@@ -26,9 +31,9 @@ impl SimpleLshParams {
     }
 }
 
-/// A built SIMPLE-LSH index.
-pub struct SimpleLshIndex {
-    table: BucketTable,
+/// A built SIMPLE-LSH index over `C`-wide codes.
+pub struct SimpleLshIndex<C: CodeWord = u64> {
+    table: BucketTable<C>,
     proj: Arc<Projection>,
     code_bits: usize,
     n_items: usize,
@@ -36,13 +41,13 @@ pub struct SimpleLshIndex {
     pub u: f32,
 }
 
-impl SimpleLshIndex {
+impl<C: CodeWord> SimpleLshIndex<C> {
     /// Build over `dataset` using `hasher` for the bulk hashing work.
     /// The hasher's projection must have been created for `dataset.dim()`;
     /// codes are masked to `params.code_bits`.
     pub fn build(
         dataset: &Dataset,
-        hasher: &dyn ItemHasher,
+        hasher: &dyn ItemHasher<C>,
         params: SimpleLshParams,
     ) -> Result<Self> {
         anyhow::ensure!(
@@ -50,6 +55,12 @@ impl SimpleLshIndex {
             "code_bits {} out of range 1..={}",
             params.code_bits,
             hasher.width()
+        );
+        anyhow::ensure!(
+            params.code_bits <= C::MAX_BITS,
+            "code_bits {} exceed the {}-bit code word",
+            params.code_bits,
+            C::MAX_BITS
         );
         anyhow::ensure!(
             hasher.dim() == dataset.dim(),
@@ -74,8 +85,8 @@ impl SimpleLshIndex {
 
     /// Hash one query natively (the engine batches via PJRT instead and
     /// calls [`CodeProbe::probe_with_code`]).
-    pub fn hash_query(&self, query: &[f32]) -> u64 {
-        NativeHasher::with_projection(self.proj.clone())
+    pub fn hash_query(&self, query: &[f32]) -> C {
+        NativeHasher::<C>::with_projection(self.proj.clone())
             .hash_queries(query)
             .expect("query row length matches index dim")[0]
     }
@@ -84,7 +95,7 @@ impl SimpleLshIndex {
         self.code_bits
     }
 
-    pub fn table(&self) -> &BucketTable {
+    pub fn table(&self) -> &BucketTable<C> {
         &self.table
     }
 
@@ -93,7 +104,7 @@ impl SimpleLshIndex {
     }
 }
 
-impl MipsIndex for SimpleLshIndex {
+impl<C: CodeWord> MipsIndex for SimpleLshIndex<C> {
     fn probe(&self, query: &[f32], budget: usize, out: &mut Vec<ItemId>) {
         self.probe_with_code(self.hash_query(query), budget, out);
     }
@@ -118,8 +129,8 @@ thread_local! {
         std::cell::RefCell::new(Default::default());
 }
 
-impl CodeProbe for SimpleLshIndex {
-    fn probe_with_code(&self, qcode: u64, budget: usize, out: &mut Vec<ItemId>) {
+impl<C: CodeWord> CodeProbe<C> for SimpleLshIndex<C> {
+    fn probe_with_code(&self, qcode: C, budget: usize, out: &mut Vec<ItemId>) {
         SCRATCH.with(|scratch| {
             let s = &mut *scratch.borrow_mut();
             self.table.counting_sort_by_matches(qcode, s);
@@ -141,7 +152,7 @@ impl CodeProbe for SimpleLshIndex {
     }
 }
 
-impl SingleProbe for SimpleLshIndex {
+impl<C: CodeWord> SingleProbe for SimpleLshIndex<C> {
     fn probe_exact(&self, query: &[f32], out: &mut Vec<ItemId>) {
         if let Some(items) = self.table.exact(self.hash_query(query)) {
             out.extend_from_slice(items);
@@ -153,10 +164,11 @@ impl SingleProbe for SimpleLshIndex {
 mod tests {
     use super::*;
     use crate::data::synthetic;
+    use crate::hash::Code128;
 
     fn small_index(bits: usize) -> (Dataset, SimpleLshIndex) {
         let d = synthetic::longtail_sift(300, 8, 0);
-        let h = NativeHasher::new(8, 64, 0x51_3E_CA_FE);
+        let h: NativeHasher = NativeHasher::new(8, 64, 0x51_3E_CA_FE);
         let idx = SimpleLshIndex::build(&d, &h, SimpleLshParams::new(bits)).unwrap();
         (d, idx)
     }
@@ -223,14 +235,14 @@ mod tests {
     #[test]
     fn rejects_code_bits_beyond_width() {
         let d = synthetic::longtail_sift(10, 4, 0);
-        let h = NativeHasher::new(4, 32, 0);
+        let h: NativeHasher = NativeHasher::new(4, 32, 0);
         assert!(SimpleLshIndex::build(&d, &h, SimpleLshParams::new(33)).is_err());
     }
 
     #[test]
     fn rejects_dim_mismatch() {
         let d = synthetic::longtail_sift(10, 4, 0);
-        let h = NativeHasher::new(5, 32, 0);
+        let h: NativeHasher = NativeHasher::new(5, 32, 0);
         assert!(SimpleLshIndex::build(&d, &h, SimpleLshParams::new(16)).is_err());
     }
 
@@ -248,5 +260,38 @@ mod tests {
         for id in &exact {
             assert!(full.contains(id));
         }
+    }
+
+    #[test]
+    fn wide_index_probes_with_128_bit_codes() {
+        // The wide instantiation must behave like any SIMPLE-LSH index:
+        // unique exhaustive probing, budget respected, wide query codes.
+        let d = synthetic::longtail_sift(300, 8, 7);
+        let h: NativeHasher<Code128> = NativeHasher::new(8, 128, 9);
+        let idx = SimpleLshIndex::build(&d, &h, SimpleLshParams::new(128)).unwrap();
+        assert_eq!(idx.code_bits(), 128);
+        let q = synthetic::gaussian_queries(1, 8, 10);
+        let qcode: Code128 = idx.hash_query(q.row(0));
+        let mut out = Vec::new();
+        idx.probe_with_code(qcode, usize::MAX, &mut out);
+        assert_eq!(out.len(), d.len());
+        let mut s = out.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), d.len());
+        let mut capped = Vec::new();
+        idx.probe(q.row(0), 40, &mut capped);
+        assert_eq!(capped.len(), 40);
+    }
+
+    #[test]
+    fn wide_bits_fit_wide_words_but_not_scalar() {
+        let d = synthetic::longtail_sift(10, 4, 0);
+        // 100 code bits fit a Code128 word...
+        let wide_h: NativeHasher<Code128> = NativeHasher::new(4, 128, 0);
+        assert!(SimpleLshIndex::build(&d, &wide_h, SimpleLshParams::new(100)).is_ok());
+        // ... but exceed any u64 hasher's width (the scalar ceiling).
+        let scalar_h: NativeHasher = NativeHasher::new(4, 64, 0);
+        assert!(SimpleLshIndex::build(&d, &scalar_h, SimpleLshParams::new(100)).is_err());
     }
 }

@@ -1,5 +1,6 @@
 //! Shared index interfaces.
 
+use crate::hash::CodeWord;
 use crate::ItemId;
 
 /// A built MIPS index that can emit candidates in probing order.
@@ -20,14 +21,17 @@ pub trait MipsIndex: Send + Sync {
     fn stats(&self) -> IndexStats;
 }
 
-/// Indexes whose query hashing is a packed sign-RP code (SIMPLE / RANGE).
+/// Indexes whose query hashing is a packed sign-RP code of word type `C`
+/// (SIMPLE / RANGE). Defaults to `u64`, so `dyn CodeProbe` keeps meaning
+/// the original single-word interface.
 ///
 /// This is the hook the serving engine uses to batch query hashing through
-/// the AOT Pallas kernel: hash a whole query batch on PJRT, then call
-/// [`CodeProbe::probe_with_code`] per query — Python-free, matmul-batched.
-pub trait CodeProbe: MipsIndex {
+/// the AOT Pallas kernel: hash a whole query batch on PJRT (or natively
+/// for multi-word codes), then call [`CodeProbe::probe_with_code`] per
+/// query — Python-free, matmul-batched.
+pub trait CodeProbe<C: CodeWord = u64>: MipsIndex {
     /// Probe with a pre-computed (unmasked, full-width) query code.
-    fn probe_with_code(&self, qcode: u64, budget: usize, out: &mut Vec<ItemId>);
+    fn probe_with_code(&self, qcode: C, budget: usize, out: &mut Vec<ItemId>);
 }
 
 /// Indexes supporting the supplementary multi-table single-probe protocol:

@@ -10,6 +10,9 @@
 //!   ([`index::range`]), baselines (SIMPLE-LSH, L2-ALSH, ranged L2-ALSH,
 //!   multi-table), the evaluation harness that regenerates every figure and
 //!   table in the paper, and an async serving engine ([`coordinator`]).
+//!   The whole stack is generic over the code word ([`hash::CodeWord`]:
+//!   `u64`, `[u64; 2]`, `[u64; 4]`), lifting the paper's 64-bit code
+//!   ceiling to 256 bits — see README "Code-width architecture".
 //! - **Layer 2/1 (python/, build-time only)** — the JAX hash/score graphs and
 //!   the Pallas sign-hash kernel, AOT-lowered to HLO text and executed from
 //!   Rust via the PJRT CPU client ([`runtime`]). Python never runs on the
@@ -19,16 +22,22 @@
 //!
 //! ```no_run
 //! use rangelsh::data::synthetic;
-//! use rangelsh::hash::NativeHasher;
+//! use rangelsh::hash::{Code128, NativeHasher};
 //! use rangelsh::index::{range::RangeLshIndex, range::RangeLshParams, MipsIndex};
 //!
 //! let dataset = synthetic::longtail_sift(10_000, 64, 42);
 //! let queries = synthetic::gaussian_queries(100, 64, 7);
-//! let hasher = NativeHasher::new(64, 64, 1);
+//! // The original u64 path (L <= 64) ...
+//! let hasher: NativeHasher = NativeHasher::new(64, 64, 1);
 //! let index = RangeLshIndex::build(&dataset, &hasher, RangeLshParams::new(16, 16)).unwrap();
 //! let mut out = Vec::new();
 //! index.probe(queries.row(0), 100, &mut out);
 //! println!("first 100 candidates in probing order: {out:?}");
+//! // ... and the wide-code regime the CodeWord refactor opens up (L = 128):
+//! let params = RangeLshParams::new(128, 16);
+//! let wide_hasher: NativeHasher<Code128> = NativeHasher::new(64, params.hash_bits(), 1);
+//! let wide = RangeLshIndex::build(&dataset, &wide_hasher, params).unwrap();
+//! assert_eq!(wide.stats().hash_bits, 124);
 //! ```
 //!
 //! See `examples/` for end-to-end drivers and `benches/` for the

@@ -18,14 +18,18 @@ use std::time::Duration;
 use anyhow::{bail, Context};
 
 use rangelsh::config::{Config, DatasetKind, IndexAlgo};
-use rangelsh::coordinator::{BatchPolicy, SearchEngine};
-use rangelsh::data::{load_dataset, save_dataset, synthetic};
+use rangelsh::coordinator::server::drive_any;
+use rangelsh::coordinator::{AnyEngine, BatchPolicy, SearchEngine};
+use rangelsh::data::{load_dataset, save_dataset, synthetic, Dataset};
 use rangelsh::eval::harness::{format_probe_table, ground_truth, run_curve, CurveSpec};
 use rangelsh::eval::recall::geometric_checkpoints;
-use rangelsh::hash::{ItemHasher, NativeHasher, Projection};
+use rangelsh::hash::{Code128, Code256, CodeWord, ItemHasher, NativeHasher, Projection};
 use rangelsh::index::range::{RangeLshIndex, RangeLshParams};
 use rangelsh::index::simple::{SimpleLshIndex, SimpleLshParams};
-use rangelsh::index::{load_range_index, partition, save_range_index, CodeProbe, MipsIndex};
+use rangelsh::index::{
+    load_any_range_index, partition, save_range_index, AnyRangeLshIndex, CodeProbe, IndexStats,
+    MipsIndex,
+};
 use rangelsh::runtime::{PjrtHasher, RuntimeHandle, DEFAULT_ARTIFACT_DIR};
 use rangelsh::theory::{g_rho, theorem1_check};
 use rangelsh::util::json::Json;
@@ -165,21 +169,39 @@ fn build(args: &Args) -> Result<()> {
     std::fs::create_dir_all(&out_dir)
         .with_context(|| format!("creating {}", out_dir.display()))?;
     let items = cfg.dataset.build_items();
-    let proj = Arc::new(Projection::gaussian(items.dim() + 1, 64, cfg.index.seed));
-    let hasher = NativeHasher::with_projection(proj);
+    let params = RangeLshParams::new(cfg.index.code_bits, cfg.index.n_partitions)
+        .with_scheme(cfg.index.scheme)
+        .with_epsilon(cfg.index.epsilon);
     let t0 = std::time::Instant::now();
-    let index = RangeLshIndex::build(
-        &items,
-        &hasher,
-        RangeLshParams::new(cfg.index.code_bits, cfg.index.n_partitions)
-            .with_scheme(cfg.index.scheme)
-            .with_epsilon(cfg.index.epsilon),
-    )?;
-    println!("built index in {:.2}s: {:?}", t0.elapsed().as_secs_f64(), index.stats());
+    // Monomorphized dispatch on the code budget: u64 keeps its historical
+    // 64-wide panel; wider budgets hash with a hash_bits-wide panel.
+    let out_path = out_dir.join("index.rlsh");
+    let stats = if cfg.index.code_bits <= 64 {
+        build_and_save::<u64>(&items, params, cfg.index.seed, 64, &out_path)?
+    } else if cfg.index.code_bits <= 128 {
+        build_and_save::<Code128>(&items, params, cfg.index.seed, params.hash_bits(), &out_path)?
+    } else {
+        build_and_save::<Code256>(&items, params, cfg.index.seed, params.hash_bits(), &out_path)?
+    };
+    println!("built index in {:.2}s: {stats:?}", t0.elapsed().as_secs_f64());
     save_dataset(&items, out_dir.join("items.rdat"))?;
-    save_range_index(&index, out_dir.join("index.rlsh"))?;
     println!("wrote {}/items.rdat and {}/index.rlsh", out_dir.display(), out_dir.display());
     Ok(())
+}
+
+/// Build a RANGE-LSH index at one code width and persist it (v2 format,
+/// width header included).
+fn build_and_save<C: CodeWord>(
+    items: &Dataset,
+    params: RangeLshParams,
+    seed: u64,
+    width: usize,
+    out_path: &std::path::Path,
+) -> Result<IndexStats> {
+    let hasher: NativeHasher<C> = NativeHasher::new(items.dim(), width, seed);
+    let index = RangeLshIndex::build(items, &hasher, params)?;
+    save_range_index(&index, out_path)?;
+    Ok(index.stats())
 }
 
 fn eval(args: &Args) -> Result<()> {
@@ -282,18 +304,46 @@ fn theory(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Prefer the AOT Pallas kernel via PJRT; fall back to native (u64 path).
+fn pick_u64_hasher(
+    native_only: bool,
+    artifacts: &std::path::Path,
+    proj: Arc<Projection>,
+) -> Arc<dyn ItemHasher> {
+    if !native_only && artifacts.join("manifest.json").exists() {
+        match RuntimeHandle::load(artifacts).and_then(|rt| PjrtHasher::new(rt, proj.clone())) {
+            Ok(h) => {
+                println!("query hashing: PJRT (AOT Pallas kernel)");
+                return Arc::new(h);
+            }
+            Err(e) => {
+                println!("PJRT unavailable ({e:#}); falling back to native hashing");
+            }
+        }
+    } else {
+        println!("query hashing: native");
+    }
+    Arc::new(NativeHasher::with_projection(proj))
+}
+
 fn serve(args: &Args) -> Result<()> {
     let cfg = Config::from_path(args.req("config")?)?;
     let n_queries: usize = args.opt_parse("n-queries", 2000)?;
     let clients: usize = args.opt_parse("clients", 16)?;
     let artifacts = PathBuf::from(args.opt("artifacts").unwrap_or(DEFAULT_ARTIFACT_DIR));
-    // --load DIR: serve a pre-built index (from `rangelsh build`).
-    let loaded: Option<(Arc<rangelsh::data::Dataset>, RangeLshIndex)> = match args.opt("load") {
+    // --load DIR: serve a pre-built index (from `rangelsh build`); the
+    // file's width header selects the monomorphized engine.
+    let loaded: Option<(Arc<Dataset>, AnyRangeLshIndex)> = match args.opt("load") {
         Some(dir) => {
             let dir = PathBuf::from(dir);
             let items = Arc::new(load_dataset(dir.join("items.rdat"))?);
-            let index = load_range_index(dir.join("index.rlsh"))?;
-            println!("loaded {} items + index from {}", items.len(), dir.display());
+            let index = load_any_range_index(dir.join("index.rlsh"))?;
+            println!(
+                "loaded {} items + {}-bit-code index from {}",
+                items.len(),
+                index.code_words() * 64,
+                dir.display()
+            );
             Some((items, index))
         }
         None => None,
@@ -303,69 +353,89 @@ fn serve(args: &Args) -> Result<()> {
         None => Arc::new(cfg.dataset.build_items()),
     };
     let dim = items.dim();
-    let proj = match &loaded {
-        Some((_, index)) => index.projection().clone(),
-        None => Arc::new(Projection::gaussian(dim + 1, 64, cfg.index.seed)),
-    };
-
-    // Prefer the AOT Pallas kernel via PJRT; fall back to native.
-    let hasher: Arc<dyn ItemHasher> =
-        if !args.has("native") && artifacts.join("manifest.json").exists() {
-            match RuntimeHandle::load(&artifacts).and_then(|rt| PjrtHasher::new(rt, proj.clone()))
-            {
-                Ok(h) => {
-                    println!("query hashing: PJRT (AOT Pallas kernel)");
-                    Arc::new(h)
-                }
-                Err(e) => {
-                    println!("PJRT unavailable ({e:#}); falling back to native hashing");
-                    Arc::new(NativeHasher::with_projection(proj.clone()))
-                }
-            }
-        } else {
-            println!("query hashing: native");
-            Arc::new(NativeHasher::with_projection(proj.clone()))
-        };
 
     let t0 = std::time::Instant::now();
-    let index: Arc<dyn CodeProbe> = match (loaded, cfg.index.algo) {
-        (Some((_, index)), _) => Arc::new(index),
-        (None, IndexAlgo::SimpleLsh) => Arc::new(SimpleLshIndex::build(
-            &items,
-            hasher.as_ref(),
-            SimpleLshParams::new(cfg.index.code_bits),
-        )?),
-        (None, _) => Arc::new(RangeLshIndex::build(
-            &items,
-            hasher.as_ref(),
-            RangeLshParams::new(cfg.index.code_bits, cfg.index.n_partitions)
-                .with_scheme(cfg.index.scheme)
-                .with_epsilon(cfg.index.epsilon),
-        )?),
+    let engine: AnyEngine = match loaded {
+        // Loaded single-word index: keep the PJRT-preferring query path.
+        Some((_, AnyRangeLshIndex::W64(index))) => {
+            let hasher =
+                pick_u64_hasher(args.has("native"), &artifacts, index.projection().clone());
+            let index: Arc<dyn CodeProbe> = Arc::new(index);
+            AnyEngine::W64(Arc::new(SearchEngine::new(
+                index,
+                items.clone(),
+                hasher,
+                cfg.serve.clone(),
+            )?))
+        }
+        // Loaded wide index: native hashing with the stored panel.
+        Some((_, wide)) => {
+            println!("query hashing: native ({}-bit codes)", wide.code_words() * 64);
+            AnyEngine::from_loaded(wide, items.clone(), cfg.serve.clone())?
+        }
+        // Fresh build, single-word budget: the original u64 path. The
+        // serve-time budget (`[serve] code_bits`, defaulting to the index
+        // budget) drives both the width dispatch and the index build, so
+        // an override is honoured instead of producing a mismatch.
+        None if cfg.serve.code_bits <= 64 => {
+            let proj = Arc::new(Projection::gaussian(dim + 1, 64, cfg.index.seed));
+            let hasher = pick_u64_hasher(args.has("native"), &artifacts, proj);
+            let index: Arc<dyn CodeProbe> = match cfg.index.algo {
+                IndexAlgo::SimpleLsh => Arc::new(SimpleLshIndex::build(
+                    &items,
+                    hasher.as_ref(),
+                    SimpleLshParams::new(cfg.serve.code_bits),
+                )?),
+                _ => Arc::new(RangeLshIndex::build(
+                    &items,
+                    hasher.as_ref(),
+                    RangeLshParams::new(cfg.serve.code_bits, cfg.index.n_partitions)
+                        .with_scheme(cfg.index.scheme)
+                        .with_epsilon(cfg.index.epsilon),
+                )?),
+            };
+            AnyEngine::W64(Arc::new(SearchEngine::new(
+                index,
+                items.clone(),
+                hasher,
+                cfg.serve.clone(),
+            )?))
+        }
+        // Fresh build, wide budget: monomorphized dispatch, native hashing
+        // (the Pallas kernel packs 64 bits; wider kernels are future work).
+        None => {
+            anyhow::ensure!(
+                matches!(cfg.index.algo, IndexAlgo::RangeLsh),
+                "code_bits {} > 64 currently serves algo range_lsh only (got {})",
+                cfg.serve.code_bits,
+                cfg.index.algo
+            );
+            println!(
+                "query hashing: native ({} x u64 code words)",
+                cfg.serve.code_bits.div_ceil(64)
+            );
+            AnyEngine::build_native_range(
+                items.clone(),
+                RangeLshParams::new(cfg.serve.code_bits, cfg.index.n_partitions)
+                    .with_scheme(cfg.index.scheme)
+                    .with_epsilon(cfg.index.epsilon),
+                cfg.index.seed,
+                cfg.serve.clone(),
+            )?
+        }
     };
     println!(
-        "index built in {:.2}s: {:?}",
+        "engine ready in {:.2}s ({} x u64 code words)",
         t0.elapsed().as_secs_f64(),
-        index.stats()
+        engine.code_words()
     );
 
-    let engine = Arc::new(SearchEngine::new(
-        index,
-        items.clone(),
-        hasher,
-        cfg.serve.clone(),
-    )?);
     let queries = synthetic::gaussian_queries(n_queries, dim, cfg.dataset.seed ^ 0xDEAD);
     let policy = BatchPolicy::new(
         cfg.serve.max_batch,
         Duration::from_micros(cfg.serve.deadline_us),
     );
-    let (results, wall) = rangelsh::coordinator::server::drive_workload(
-        engine.clone(),
-        policy,
-        &queries,
-        clients,
-    )?;
+    let (results, wall) = drive_any(&engine, policy, &queries, clients)?;
     let snap = engine.metrics().snapshot();
     println!(
         "served {} queries in {:.2}s — {:.0} qps, p50 {}us, p95 {}us, p99 {}us, \
@@ -399,7 +469,8 @@ fn artifacts_check(args: &Args) -> Result<()> {
         let hasher = PjrtHasher::new(rt.clone(), proj.clone())?;
         let rows = vec![0.5f32; 4 * dim];
         let codes = hasher.hash_items(&rows, 2.0)?;
-        let native = NativeHasher::with_projection(proj).hash_items(&rows, 2.0)?;
+        let native_hasher: NativeHasher = NativeHasher::with_projection(proj);
+        let native = native_hasher.hash_items(&rows, 2.0)?;
         println!(
             "smoke hash (dim {dim}): pjrt {:016x} vs native {:016x} — {}",
             codes[0],

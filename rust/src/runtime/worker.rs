@@ -1,7 +1,11 @@
 //! The runtime actor: one thread owns the PJRT client and compiled
 //! executables; [`RuntimeHandle`] routes requests to it over a channel.
+//!
+//! The PJRT backend (the `xla` bindings) is only compiled with the `pjrt`
+//! cargo feature; the default offline build ships a stub whose
+//! [`RuntimeHandle::load`] fails with a clear error, and every call site
+//! falls back to the native hashing/scoring path.
 
-use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -143,7 +147,7 @@ fn worker_main(
     rx: mpsc::Receiver<Request>,
     ready: mpsc::Sender<Result<()>>,
 ) {
-    let state = match WorkerState::new(&dir, &manifest) {
+    let state = match backend::WorkerState::new(&dir, &manifest) {
         Ok(s) => {
             let _ = ready.send(Ok(()));
             s
@@ -159,7 +163,7 @@ fn worker_main(
                 let _ = reply.send(state.run_hash(
                     &format!("hash_items_d{dim}"),
                     dim,
-                    state.item_block,
+                    state.item_block(),
                     &block,
                     Some(u),
                     &proj,
@@ -169,12 +173,12 @@ fn worker_main(
                 // Dispatch to the small-batch variant when the block is
                 // query_block-sized (8x less padded kernel work, §Perf).
                 let rows = if dim > 0 { block.len() / dim } else { 0 };
-                let (entry, expect) = if rows == state.query_block
-                    && state.exes.contains_key(&format!("hash_queries_small_d{dim}"))
+                let (entry, expect) = if rows == state.query_block()
+                    && state.has_entry(&format!("hash_queries_small_d{dim}"))
                 {
-                    (format!("hash_queries_small_d{dim}"), state.query_block)
+                    (format!("hash_queries_small_d{dim}"), state.query_block())
                 } else {
-                    (format!("hash_queries_d{dim}"), state.item_block)
+                    (format!("hash_queries_d{dim}"), state.item_block())
                 };
                 let _ = reply.send(state.run_hash(&entry, dim, expect, &block, None, &proj));
             }
@@ -186,105 +190,180 @@ fn worker_main(
     }
 }
 
-struct WorkerState {
-    exes: HashMap<String, xla::PjRtLoadedExecutable>,
-    item_block: usize,
-    query_block: usize,
-    proj_width: usize,
+/// Real PJRT backend: compiled only with the `pjrt` feature (needs the
+/// `xla` bindings, which the offline build does not ship).
+#[cfg(feature = "pjrt")]
+mod backend {
+    use std::collections::HashMap;
+    use std::path::Path;
+
+    use anyhow::anyhow;
+
+    use super::Manifest;
+    use crate::Result;
+
+    pub struct WorkerState {
+        exes: HashMap<String, xla::PjRtLoadedExecutable>,
+        item_block: usize,
+        query_block: usize,
+        proj_width: usize,
+    }
+
+    impl WorkerState {
+        pub fn new(dir: &Path, manifest: &Manifest) -> Result<Self> {
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e}"))?;
+            eprintln!(
+                "[rangelsh] pjrt runtime up: platform={} devices={}",
+                client.platform_name(),
+                client.device_count()
+            );
+            let mut exes = HashMap::new();
+            for entry in &manifest.entries {
+                let path = dir.join(&entry.file);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+                )
+                .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .map_err(|e| anyhow!("compiling {}: {e}", entry.name))?;
+                exes.insert(entry.name.clone(), exe);
+            }
+            Ok(Self {
+                exes,
+                item_block: manifest.item_block,
+                query_block: manifest.query_block,
+                proj_width: manifest.proj_width,
+            })
+        }
+
+        pub fn item_block(&self) -> usize {
+            self.item_block
+        }
+
+        pub fn query_block(&self) -> usize {
+            self.query_block
+        }
+
+        pub fn has_entry(&self, name: &str) -> bool {
+            self.exes.contains_key(name)
+        }
+
+        fn exe(&self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+            self.exes
+                .get(name)
+                .ok_or_else(|| anyhow!("no artifact named {name}; rebuild with `make artifacts`"))
+        }
+
+        pub fn run_hash(
+            &self,
+            entry: &str,
+            dim: usize,
+            rows: usize,
+            block: &[f32],
+            u: Option<f32>,
+            proj: &[f32],
+        ) -> Result<Vec<u32>> {
+            anyhow::ensure!(
+                block.len() == rows * dim,
+                "hash block must be padded to {rows} x {dim}, got {}",
+                block.len()
+            );
+            anyhow::ensure!(
+                proj.len() == (dim + 1) * self.proj_width,
+                "projection must be ({} + 1) x {}, got {}",
+                dim,
+                self.proj_width,
+                proj.len()
+            );
+            let exe = self.exe(entry)?;
+            let x = xla::Literal::vec1(block)
+                .reshape(&[rows as i64, dim as i64])
+                .map_err(|e| anyhow!("reshape x: {e}"))?;
+            let p = xla::Literal::vec1(proj)
+                .reshape(&[(dim + 1) as i64, self.proj_width as i64])
+                .map_err(|e| anyhow!("reshape proj: {e}"))?;
+            let result = match u {
+                Some(u) => exe.execute::<xla::Literal>(&[x, xla::Literal::scalar(u), p]),
+                None => exe.execute::<xla::Literal>(&[x, p]),
+            }
+            .map_err(|e| anyhow!("execute {entry}: {e}"))?;
+            let lit = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch result: {e}"))?;
+            let out = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e}"))?;
+            out.to_vec::<u32>().map_err(|e| anyhow!("to_vec<u32>: {e}"))
+        }
+
+        pub fn run_score(&self, dim: usize, q_block: &[f32], x_block: &[f32]) -> Result<Vec<f32>> {
+            anyhow::ensure!(q_block.len() == self.query_block * dim, "bad query block");
+            anyhow::ensure!(x_block.len() == self.item_block * dim, "bad item block");
+            let exe = self.exe(&format!("score_d{dim}"))?;
+            let q = xla::Literal::vec1(q_block)
+                .reshape(&[self.query_block as i64, dim as i64])
+                .map_err(|e| anyhow!("reshape q: {e}"))?;
+            let x = xla::Literal::vec1(x_block)
+                .reshape(&[self.item_block as i64, dim as i64])
+                .map_err(|e| anyhow!("reshape x: {e}"))?;
+            let result = exe
+                .execute::<xla::Literal>(&[q, x])
+                .map_err(|e| anyhow!("execute score: {e}"))?;
+            let lit = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch result: {e}"))?;
+            let out = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e}"))?;
+            out.to_vec::<f32>().map_err(|e| anyhow!("to_vec<f32>: {e}"))
+        }
+    }
 }
 
-impl WorkerState {
-    fn new(dir: &PathBuf, manifest: &Manifest) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e}"))?;
-        eprintln!(
-            "[rangelsh] pjrt runtime up: platform={} devices={}",
-            client.platform_name(),
-            client.device_count()
-        );
-        let mut exes = HashMap::new();
-        for entry in &manifest.entries {
-            let path = dir.join(&entry.file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+/// Stub backend for the offline build: startup fails with a clear error,
+/// so `RuntimeHandle::load` returns `Err` and callers fall back to native.
+#[cfg(not(feature = "pjrt"))]
+mod backend {
+    use std::path::Path;
+
+    use super::Manifest;
+    use crate::Result;
+
+    pub struct WorkerState;
+
+    impl WorkerState {
+        pub fn new(_dir: &Path, _manifest: &Manifest) -> Result<Self> {
+            anyhow::bail!(
+                "PJRT runtime unavailable: built without the `pjrt` cargo feature \
+                 (the xla bindings are not part of the offline build); \
+                 query hashing falls back to the native path"
             )
-            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compiling {}: {e}", entry.name))?;
-            exes.insert(entry.name.clone(), exe);
         }
-        Ok(Self {
-            exes,
-            item_block: manifest.item_block,
-            query_block: manifest.query_block,
-            proj_width: manifest.proj_width,
-        })
-    }
 
-    fn exe(&self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
-        self.exes
-            .get(name)
-            .ok_or_else(|| anyhow!("no artifact named {name}; rebuild with `make artifacts`"))
-    }
-
-    fn run_hash(
-        &self,
-        entry: &str,
-        dim: usize,
-        rows: usize,
-        block: &[f32],
-        u: Option<f32>,
-        proj: &[f32],
-    ) -> Result<Vec<u32>> {
-        anyhow::ensure!(
-            block.len() == rows * dim,
-            "hash block must be padded to {rows} x {dim}, got {}",
-            block.len()
-        );
-        anyhow::ensure!(
-            proj.len() == (dim + 1) * self.proj_width,
-            "projection must be ({} + 1) x {}, got {}",
-            dim,
-            self.proj_width,
-            proj.len()
-        );
-        let exe = self.exe(entry)?;
-        let x = xla::Literal::vec1(block)
-            .reshape(&[rows as i64, dim as i64])
-            .map_err(|e| anyhow!("reshape x: {e}"))?;
-        let p = xla::Literal::vec1(proj)
-            .reshape(&[(dim + 1) as i64, self.proj_width as i64])
-            .map_err(|e| anyhow!("reshape proj: {e}"))?;
-        let result = match u {
-            Some(u) => exe.execute::<xla::Literal>(&[x, xla::Literal::scalar(u), p]),
-            None => exe.execute::<xla::Literal>(&[x, p]),
+        pub fn item_block(&self) -> usize {
+            unreachable!("stub backend never constructs")
         }
-        .map_err(|e| anyhow!("execute {entry}: {e}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e}"))?;
-        let out = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e}"))?;
-        out.to_vec::<u32>().map_err(|e| anyhow!("to_vec<u32>: {e}"))
-    }
 
-    fn run_score(&self, dim: usize, q_block: &[f32], x_block: &[f32]) -> Result<Vec<f32>> {
-        anyhow::ensure!(q_block.len() == self.query_block * dim, "bad query block");
-        anyhow::ensure!(x_block.len() == self.item_block * dim, "bad item block");
-        let exe = self.exe(&format!("score_d{dim}"))?;
-        let q = xla::Literal::vec1(q_block)
-            .reshape(&[self.query_block as i64, dim as i64])
-            .map_err(|e| anyhow!("reshape q: {e}"))?;
-        let x = xla::Literal::vec1(x_block)
-            .reshape(&[self.item_block as i64, dim as i64])
-            .map_err(|e| anyhow!("reshape x: {e}"))?;
-        let result = exe
-            .execute::<xla::Literal>(&[q, x])
-            .map_err(|e| anyhow!("execute score: {e}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e}"))?;
-        let out = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e}"))?;
-        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec<f32>: {e}"))
+        pub fn query_block(&self) -> usize {
+            unreachable!("stub backend never constructs")
+        }
+
+        pub fn has_entry(&self, _name: &str) -> bool {
+            unreachable!("stub backend never constructs")
+        }
+
+        pub fn run_hash(
+            &self,
+            _entry: &str,
+            _dim: usize,
+            _rows: usize,
+            _block: &[f32],
+            _u: Option<f32>,
+            _proj: &[f32],
+        ) -> Result<Vec<u32>> {
+            unreachable!("stub backend never constructs")
+        }
+
+        pub fn run_score(&self, _dim: usize, _q: &[f32], _x: &[f32]) -> Result<Vec<f32>> {
+            unreachable!("stub backend never constructs")
+        }
     }
 }

@@ -4,7 +4,7 @@
 use std::sync::Arc;
 
 use rangelsh::config::{Config, IndexAlgo, ServeConfig};
-use rangelsh::coordinator::{BatchPolicy, SearchEngine};
+use rangelsh::coordinator::{AnyEngine, BatchPolicy, SearchEngine};
 use rangelsh::data::{load_dataset, save_dataset, synthetic};
 use rangelsh::eval::harness::{ground_truth, run_curve, CurveSpec};
 use rangelsh::eval::recall::geometric_checkpoints;
@@ -100,7 +100,7 @@ fn dataset_io_round_trips_through_engine() {
     let loaded = Arc::new(load_dataset(tmp.path()).unwrap());
     assert_eq!(loaded.len(), 2_000);
 
-    let hasher = Arc::new(NativeHasher::new(16, 64, 7));
+    let hasher: Arc<NativeHasher> = Arc::new(NativeHasher::new(16, 64, 7));
     let index = Arc::new(
         RangeLshIndex::build(&loaded, hasher.as_ref(), RangeLshParams::new(16, 8)).unwrap(),
     );
@@ -114,7 +114,7 @@ fn dataset_io_round_trips_through_engine() {
 #[test]
 fn server_workload_preserves_per_query_results() {
     let items = Arc::new(synthetic::longtail_sift(3_000, 16, 9));
-    let hasher = Arc::new(NativeHasher::new(16, 64, 10));
+    let hasher: Arc<NativeHasher> = Arc::new(NativeHasher::new(16, 64, 10));
     let index = Arc::new(
         RangeLshIndex::build(&items, hasher.as_ref(), RangeLshParams::new(16, 8)).unwrap(),
     );
@@ -131,6 +131,70 @@ fn server_workload_preserves_per_query_results() {
 }
 
 #[test]
+fn range_lsh_serves_end_to_end_at_code_bits_128() {
+    // Acceptance: a RANGE-LSH index with code_bits = 128 builds and
+    // serves through the Engine (build → probe → exact re-rank), fully
+    // monomorphized at engine-build time.
+    let items = Arc::new(synthetic::longtail_sift(3_000, 16, 20));
+    let cfg = ServeConfig {
+        probe_budget: usize::MAX,
+        top_k: 10,
+        code_bits: 128,
+        ..Default::default()
+    };
+    let engine =
+        AnyEngine::build_native_range(items.clone(), RangeLshParams::new(128, 16), 21, cfg)
+            .unwrap();
+    assert_eq!(engine.code_words(), 2, "128-bit budget must pick the 2-word engine");
+    let queries = synthetic::gaussian_queries(10, 16, 22);
+    let gt = rangelsh::eval::exact_topk(&items, &queries, 10);
+    for qi in 0..queries.len() {
+        let res = engine.search(queries.row(qi)).unwrap();
+        let ids: Vec<u32> = res.iter().map(|r| r.id).collect();
+        assert_eq!(ids, gt[qi], "query {qi}: full-budget wide engine must be exact");
+        for w in res.windows(2) {
+            assert!(w[0].score >= w[1].score, "query {qi}: scores not descending");
+        }
+    }
+}
+
+#[test]
+fn recall_at_l128_dominates_l64_on_longtail() {
+    // Acceptance: on a synthetic long-tailed-norm dataset, doubling the
+    // code budget from L=64 to L=128 (same m, same probe budgets) must
+    // not lose recall — more hash bits = finer bucket ranking. Compare
+    // mean recall across the checkpoint grid (stabler than any single
+    // operating point) and spot-check the asymptote.
+    let items = synthetic::longtail_sift(6_000, 24, 30);
+    let queries = synthetic::gaussian_queries(60, 24, 31);
+    let gt = ground_truth(&items, &queries, 10);
+    let cps = geometric_checkpoints(20, items.len(), 4);
+    let run = |bits: usize| {
+        run_curve(
+            &items,
+            &queries,
+            &gt,
+            &cps,
+            &CurveSpec::new(IndexAlgo::RangeLsh, bits, 16),
+            format!("range L={bits}"),
+        )
+        .unwrap()
+    };
+    let l64 = run(64);
+    let l128 = run(128);
+    assert!((l64.curve.final_recall() - 1.0).abs() < 1e-9);
+    assert!((l128.curve.final_recall() - 1.0).abs() < 1e-9);
+    let mean = |r: &rangelsh::eval::ExperimentResult| {
+        r.curve.recalls.iter().sum::<f64>() / r.curve.recalls.len() as f64
+    };
+    let (m64, m128) = (mean(&l64), mean(&l128));
+    assert!(
+        m128 >= m64 - 1e-9,
+        "L=128 mean recall {m128:.4} fell below L=64 mean recall {m64:.4}"
+    );
+}
+
+#[test]
 fn config_files_in_repo_parse() {
     for f in ["configs/netflix_sim.toml", "configs/yahoo_sim.toml", "configs/imagenet_sim.toml"] {
         let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(f);
@@ -141,7 +205,7 @@ fn config_files_in_repo_parse() {
 
 #[test]
 fn index_survives_pathological_datasets() {
-    let hasher = NativeHasher::new(4, 64, 0);
+    let hasher: NativeHasher = NativeHasher::new(4, 64, 0);
     // Single item.
     let one = synthetic::longtail_sift(1, 4, 0);
     let idx = RangeLshIndex::build(&one, &hasher, RangeLshParams::new(16, 8)).unwrap();

@@ -11,6 +11,10 @@ use rangelsh::hash::{ItemHasher, NativeHasher, Projection};
 use rangelsh::runtime::{PjrtHasher, PjrtScorer, RuntimeHandle};
 
 fn runtime() -> Option<RuntimeHandle> {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("SKIP: built without the `pjrt` feature — PJRT backend is a stub");
+        return None;
+    }
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("manifest.json").exists() {
         eprintln!("SKIP: no artifacts/ — run `make artifacts` first");
@@ -32,7 +36,7 @@ fn pjrt_item_codes_match_native() {
     for dim in rt.manifest().hash_dims() {
         let proj = Arc::new(Projection::gaussian(dim + 1, 64, 7));
         let pjrt = PjrtHasher::new(rt.clone(), proj.clone()).unwrap();
-        let native = NativeHasher::with_projection(proj);
+        let native: NativeHasher = NativeHasher::with_projection(proj);
         // 3000 rows: one full block + a padded tail block.
         let items = synthetic::longtail_sift(3000, dim, 1);
         let u = items.max_norm();
@@ -52,7 +56,7 @@ fn pjrt_query_codes_match_native() {
     for dim in rt.manifest().hash_dims() {
         let proj = Arc::new(Projection::gaussian(dim + 1, 64, 8));
         let pjrt = PjrtHasher::new(rt.clone(), proj.clone()).unwrap();
-        let native = NativeHasher::with_projection(proj);
+        let native: NativeHasher = NativeHasher::with_projection(proj);
         let queries = synthetic::gaussian_queries(500, dim, 2);
         let a = pjrt.hash_queries(queries.flat()).unwrap();
         let b = native.hash_queries(queries.flat()).unwrap();
@@ -89,7 +93,7 @@ fn pjrt_index_build_equals_native_index_build() {
     let items = synthetic::longtail_sift(4000, dim, 5);
     let proj = Arc::new(Projection::gaussian(dim + 1, 64, 9));
     let pjrt = PjrtHasher::new(rt, proj.clone()).unwrap();
-    let native = NativeHasher::with_projection(proj);
+    let native: NativeHasher = NativeHasher::with_projection(proj);
     let a = RangeLshIndex::build(&items, &pjrt, RangeLshParams::new(32, 16)).unwrap();
     let b = RangeLshIndex::build(&items, &native, RangeLshParams::new(32, 16)).unwrap();
     // Same partitioning, same panel ⇒ (near-)identical bucket structure.

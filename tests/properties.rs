@@ -3,7 +3,10 @@
 //! role, driven by the seeded xoshiro RNG in `rangelsh::util::rng`.
 
 use rangelsh::data::{synthetic, Dataset};
-use rangelsh::hash::{hamming, mask_bits, matches, ItemHasher, NativeHasher};
+use rangelsh::hash::codes::{partition_id_bits, widen};
+use rangelsh::hash::{
+    hamming, mask_bits, matches, Code128, Code256, CodeWord, ItemHasher, NativeHasher,
+};
 use rangelsh::index::metric::{s_hat, MetricOrder};
 use rangelsh::index::range::{RangeLshIndex, RangeLshParams};
 use rangelsh::index::simple::{SimpleLshIndex, SimpleLshParams};
@@ -114,7 +117,7 @@ fn prop_probe_emits_each_item_exactly_once() {
         let bits = 8 + rng.gen_index(24);
         let m = 1 + rng.gen_index(8);
         let d = synthetic::longtail_sift(n, dim, seed);
-        let h = NativeHasher::new(dim, 64, seed ^ 0xFACE);
+        let h: NativeHasher = NativeHasher::new(dim, 64, seed ^ 0xFACE);
         let idx = RangeLshIndex::build(&d, &h, RangeLshParams::new(bits.max(8), m)).unwrap();
         let q = synthetic::gaussian_queries(1, dim, seed ^ 0xBEE);
         let mut out = Vec::new();
@@ -133,7 +136,7 @@ fn prop_probe_budget_is_exact_when_feasible() {
         let n = 100 + rng.gen_index(400);
         let budget = 1 + rng.gen_index(n);
         let d = synthetic::longtail_sift(n, 8, seed);
-        let h = NativeHasher::new(8, 64, seed);
+        let h: NativeHasher = NativeHasher::new(8, 64, seed);
         let idx = SimpleLshIndex::build(&d, &h, SimpleLshParams::new(16)).unwrap();
         let q = synthetic::gaussian_queries(1, 8, seed ^ 1);
         let mut out = Vec::new();
@@ -168,7 +171,7 @@ fn prop_recall_curves_are_monotone() {
         let d = synthetic::longtail_sift(n, 8, seed);
         let q = synthetic::gaussian_queries(10, 8, seed ^ 2);
         let gt = rangelsh::eval::exact_topk(&d, &q, 5);
-        let h = NativeHasher::new(8, 64, seed ^ 3);
+        let h: NativeHasher = NativeHasher::new(8, 64, seed ^ 3);
         let m = 1 + rng.gen_index(8);
         let idx = RangeLshIndex::build(&d, &h, RangeLshParams::new(16, m)).unwrap();
         let cps = rangelsh::eval::recall::geometric_checkpoints(5, n, 4);
@@ -197,7 +200,7 @@ fn prop_g_rho_monotonicity() {
 fn prop_query_hash_scale_invariance() {
     forall(50, |rng, seed| {
         let dim = 2 + rng.gen_index(20);
-        let h = NativeHasher::new(dim, 64, seed);
+        let h: NativeHasher = NativeHasher::new(dim, 64, seed);
         let q: Vec<f32> = (0..dim).map(|_| rng.normal_f32()).collect();
         let scale = rng.uniform(0.001, 1000.0) as f32;
         let q2: Vec<f32> = q.iter().map(|v| v * scale).collect();
@@ -209,6 +212,113 @@ fn prop_query_hash_scale_invariance() {
     });
 }
 
+/// Wide/scalar agreement: zero-extending random `u64` codes into
+/// `[u64; W]` must leave `hamming`, `matches`, and masking unchanged.
+fn check_widened_agrees<C: CodeWord>(rng: &mut Rng, seed: u64) {
+    let bits = 1 + rng.gen_index(64);
+    let m = mask_bits(bits);
+    let (a, b) = (rng.next_u64() & m, rng.next_u64() & m);
+    let (wa, wb): (C, C) = (widen(a), widen(b));
+    assert_eq!(wa.hamming(wb), hamming(a, b), "seed {seed} bits {bits}");
+    assert_eq!(wa.matches(wb, bits), matches(a, b, bits), "seed {seed} bits {bits}");
+    assert_eq!(
+        wa.masked(bits),
+        widen::<C>(a & mask_bits(bits)),
+        "seed {seed} bits {bits}: masking disagrees with scalar path"
+    );
+    // The mask itself carries exactly `bits` ones, scalar or wide.
+    assert_eq!(C::mask(bits).count_ones() as usize, bits, "seed {seed}");
+}
+
+#[test]
+fn prop_wide_codes_agree_with_scalar_when_high_words_zero() {
+    forall(300, |rng, seed| {
+        check_widened_agrees::<Code128>(rng, seed);
+        check_widened_agrees::<Code256>(rng, seed);
+    });
+}
+
+#[test]
+fn prop_wide_hamming_is_a_metric() {
+    forall(200, |rng, seed| {
+        let rand_code = |rng: &mut Rng| -> Code256 {
+            [rng.next_u64(), rng.next_u64(), rng.next_u64(), rng.next_u64()]
+        };
+        let (a, b, c) = (rand_code(rng), rand_code(rng), rand_code(rng));
+        assert_eq!(a.hamming(a), 0, "seed {seed}");
+        assert_eq!(a.hamming(b), b.hamming(a), "seed {seed}");
+        assert!(
+            a.hamming(c) <= a.hamming(b) + b.hamming(c),
+            "triangle inequality, seed {seed}"
+        );
+        // matches + hamming == bits holds across the whole wide range.
+        let bits = 1 + rng.gen_index(256);
+        let (am, bm) = (a.masked(bits), b.masked(bits));
+        assert_eq!(am.matches(bm, bits) + am.hamming(bm), bits as u32, "seed {seed} bits {bits}");
+    });
+}
+
+#[test]
+fn prop_partition_id_bits_accounting_is_width_independent() {
+    use rangelsh::index::range::RangeLshParams;
+    forall(200, |rng, seed| {
+        let m = 1 + rng.gen_index(300);
+        let id_bits = partition_id_bits(m);
+        // Enough bits to address m partitions, minimally so.
+        assert!(1usize << id_bits >= m, "seed {seed}: 2^{id_bits} < {m}");
+        assert!(id_bits == 0 || (1usize << (id_bits - 1)) < m, "seed {seed}: not minimal");
+        // The per-range budget L - ceil(log2 m) is the same arithmetic at
+        // every code width; only the ceiling moves.
+        for total_bits in [64usize, 128, 256] {
+            let params = RangeLshParams::new(total_bits, m);
+            assert_eq!(
+                params.hash_bits(),
+                total_bits.saturating_sub(id_bits),
+                "seed {seed} L={total_bits} m={m}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_wide_bucket_tables_mirror_scalar_tables() {
+    use rangelsh::index::{BucketTable, SortScratch};
+    forall(30, |rng, seed| {
+        let n = 1 + rng.gen_index(300);
+        let bits = 1 + rng.gen_index(30);
+        let codes: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+        let wide: Vec<Code128> = codes.iter().map(|&c| widen(c)).collect();
+        let ts = BucketTable::build(&codes, None, bits);
+        let tw = BucketTable::build(&wide, None, bits);
+        assert_eq!(ts.n_buckets(), tw.n_buckets(), "seed {seed}");
+        assert_eq!(ts.largest_bucket(), tw.largest_bucket(), "seed {seed}");
+        let q = rng.next_u64();
+        let (mut ss, mut sw) = (SortScratch::default(), SortScratch::default());
+        ts.counting_sort_by_matches(q, &mut ss);
+        tw.counting_sort_by_matches(widen(q), &mut sw);
+        assert_eq!(ss.levels, sw.levels, "seed {seed}");
+        assert_eq!(ss.order, sw.order, "seed {seed}");
+        // Exact lookups agree too.
+        let probe = codes[rng.gen_index(n)];
+        assert_eq!(ts.exact(probe), tw.exact(widen(probe)), "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_wide_native_hasher_extends_scalar_bit_convention() {
+    use std::sync::Arc;
+    forall(20, |rng, seed| {
+        let dim = 2 + rng.gen_index(12);
+        let proj = Arc::new(rangelsh::hash::Projection::gaussian(dim + 1, 64, seed));
+        let scalar: NativeHasher = NativeHasher::with_projection(proj.clone());
+        let wide: NativeHasher<Code256> = NativeHasher::with_projection(proj);
+        let q: Vec<f32> = (0..dim).map(|_| rng.normal_f32()).collect();
+        let s = scalar.hash_queries(&q).unwrap()[0];
+        let w = wide.hash_queries(&q).unwrap()[0];
+        assert_eq!(w, widen::<Code256>(s), "seed {seed}: wide code must zero-extend scalar");
+    });
+}
+
 #[test]
 fn prop_engine_results_sorted_and_exact() {
     use rangelsh::config::ServeConfig;
@@ -217,7 +327,7 @@ fn prop_engine_results_sorted_and_exact() {
     forall(8, |rng, seed| {
         let n = 200 + rng.gen_index(800);
         let d: Arc<Dataset> = Arc::new(synthetic::longtail_sift(n, 8, seed));
-        let h = Arc::new(NativeHasher::new(8, 64, seed));
+        let h: Arc<NativeHasher> = Arc::new(NativeHasher::new(8, 64, seed));
         let idx =
             Arc::new(RangeLshIndex::build(&d, h.as_ref(), RangeLshParams::new(16, 4)).unwrap());
         let k = 1 + rng.gen_index(10);
