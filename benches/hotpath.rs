@@ -6,6 +6,9 @@
 //!   3. probe scheduling at each code width (64 / 128 / 256-bit codes) —
 //!      the counting sort + Eq. 12 schedule walk, i.e. the surface the
 //!      `CodeWord` genericization must not regress at width 64
+//!   3b. probe-budget axis (10 / 100 / 1k / 10k) on the m=32 config,
+//!      eager (sort every range up front) vs lazy (budget-adaptive) —
+//!      the auditable record of the lazy-probing speedup
 //!   4. exact re-rank
 //!   5. engine end-to-end (batched)
 //!   6. exact ground-truth scan (the brute-force baseline RANGE beats)
@@ -14,7 +17,8 @@
 //! (schema: see the repo-root file) so width-64 probe throughput can be
 //! diffed against the pre-refactor baseline across commits.
 //!
-//! Run with: `cargo bench --bench hotpath`
+//! Run with: `cargo bench --bench hotpath`. Set `HOTPATH_SMOKE=1` for a
+//! fast CI smoke run (smaller dataset, fewer reps, no JSON written).
 
 use std::sync::Arc;
 
@@ -68,7 +72,11 @@ fn bench_probe_width<C: CodeWord>(
 }
 
 fn main() -> rangelsh::Result<()> {
-    let (n, dim) = (100_000usize, 128usize);
+    // Smoke mode (CI): shrink the dataset and rep counts so the whole
+    // bench is a build-and-run sanity check, and leave the committed
+    // BENCH_hotpath.json (real-hardware numbers) untouched.
+    let smoke = std::env::var_os("HOTPATH_SMOKE").is_some();
+    let (n, dim) = if smoke { (20_000usize, 32usize) } else { (100_000usize, 128usize) };
     let items = Arc::new(synthetic::longtail_sift(n, dim, 42));
     let queries = synthetic::gaussian_queries(1024, dim, 7);
     let proj = Arc::new(Projection::gaussian(dim + 1, 64, 1));
@@ -167,6 +175,48 @@ fn main() -> rangelsh::Result<()> {
         &mut table,
     )?;
 
+    // 3b. probe-budget axis: eager vs lazy on the m=32 config (the
+    // paper's §4 shape: 32-bit budget, 32 ranges). Small budgets are
+    // where lazy probing earns its keep — the acceptance bar is >= 5x at
+    // budgets <= 100 on the same machine.
+    struct BudgetRow {
+        budget: usize,
+        mode: &'static str,
+        timing: Timing,
+    }
+    let mut budget_rows: Vec<BudgetRow> = Vec::new();
+    {
+        let params = RangeLshParams::new(32, 32);
+        let index: RangeLshIndex = RangeLshIndex::build(&items, native.as_ref(), params)?;
+        let qcode = index.hash_query(queries.row(0));
+        let reps = if smoke { 5 } else { 30 };
+        for &budget in &[10usize, 100, 1_000, 10_000] {
+            let t_eager = bench(2, reps, || {
+                let mut out = Vec::with_capacity(budget);
+                index.probe_with_code_eager(qcode, budget, &mut out);
+                std::hint::black_box(out);
+            });
+            let t_lazy = bench(2, reps, || {
+                let mut out = Vec::with_capacity(budget);
+                index.probe_with_code(qcode, budget, &mut out);
+                std::hint::black_box(out);
+            });
+            let speedup = t_eager.median.as_secs_f64() / t_lazy.median.as_secs_f64().max(1e-12);
+            table.row(vec![
+                format!("probe m=32 budget {budget} (eager)"),
+                format!("{:?}", t_eager.median),
+                format!("{:.0} probes/s", t_eager.throughput(1)),
+            ]);
+            table.row(vec![
+                format!("probe m=32 budget {budget} (lazy)"),
+                format!("{:?}", t_lazy.median),
+                format!("{speedup:.1}x vs eager"),
+            ]);
+            budget_rows.push(BudgetRow { budget, mode: "eager", timing: t_eager });
+            budget_rows.push(BudgetRow { budget, mode: "lazy", timing: t_lazy });
+        }
+    }
+
     // 4. exact re-rank of 4096 candidates
     let cands: Vec<u32> = (0..4096u32).collect();
     let q0: Vec<f32> = queries.row(0).to_vec();
@@ -212,8 +262,14 @@ fn main() -> rangelsh::Result<()> {
 
     println!("{}", table.render());
 
+    if smoke {
+        println!("(smoke mode: skipping BENCH_hotpath.json)");
+        return Ok(());
+    }
+
     // Machine-readable record for cross-commit regression diffs
-    // (acceptance: width-64 probe throughput within noise of baseline).
+    // (acceptance: width-64 probe throughput within noise of baseline;
+    // lazy small-budget rows >= 5x faster than their eager twins).
     let json = Json::obj(vec![
         ("bench", Json::Str("hotpath".into())),
         ("n_items", Json::Num(n as f64)),
@@ -230,6 +286,24 @@ fn main() -> rangelsh::Result<()> {
                             ("median_us", Json::Num(r.timing.median.as_secs_f64() * 1e6)),
                             ("min_us", Json::Num(r.timing.min.as_secs_f64() * 1e6)),
                             ("probes_per_sec", Json::Num(r.timing.throughput(1))),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "probe_budget_axis",
+            Json::Arr(
+                budget_rows
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("code_bits", Json::Num(32.0)),
+                            ("m", Json::Num(32.0)),
+                            ("budget", Json::Num(r.budget as f64)),
+                            ("mode", Json::Str(r.mode.into())),
+                            ("median_us", Json::Num(r.timing.median.as_secs_f64() * 1e6)),
+                            ("min_us", Json::Num(r.timing.min.as_secs_f64() * 1e6)),
                         ])
                     })
                     .collect(),

@@ -32,11 +32,18 @@ impl BatchPolicy {
     }
 
     /// When must the pending batch flush at the latest? `None` if empty.
+    ///
+    /// Pure (no IO, no clock): a full batch is due as of its oldest
+    /// request's arrival — a time already in the past — rather than "now",
+    /// which would make the answer depend on when the question is asked.
+    /// Consistency with [`Self::should_flush`]: whenever
+    /// `flush_at(len, oldest) <= now`, `should_flush(len, oldest, now)`
+    /// is true (property-tested below).
     pub fn flush_at(&self, len: usize, oldest: Option<Instant>) -> Option<Instant> {
         if len == 0 {
             None
         } else if len >= self.max_batch {
-            oldest.map(|_| Instant::now())
+            oldest
         } else {
             oldest.map(|t0| t0 + self.deadline)
         }
@@ -83,6 +90,46 @@ mod tests {
         let t0 = Instant::now();
         let at = p.flush_at(2, Some(t0)).unwrap();
         assert_eq!(at, t0 + Duration::from_millis(10));
+    }
+
+    #[test]
+    fn full_batch_flush_at_is_the_oldest_arrival() {
+        // No clock call on the full-batch branch: the due time is the
+        // oldest request's own arrival instant, verbatim.
+        let p = policy();
+        let t0 = Instant::now() - Duration::from_millis(3);
+        assert_eq!(p.flush_at(4, Some(t0)), Some(t0));
+        assert_eq!(p.flush_at(9, Some(t0)), Some(t0));
+    }
+
+    #[test]
+    fn flush_at_is_pure() {
+        // Same inputs, same answer, regardless of when (or how often) the
+        // question is asked — the property the module header promises.
+        let p = policy();
+        let t0 = Instant::now();
+        for len in 0..8 {
+            let first = p.flush_at(len, Some(t0));
+            std::thread::sleep(Duration::from_millis(2));
+            assert_eq!(p.flush_at(len, Some(t0)), first, "len {len}");
+            assert_eq!(p.flush_at(len, None), None, "len {len}: no oldest, nothing due");
+        }
+    }
+
+    #[test]
+    fn flush_at_due_implies_should_flush() {
+        let p = policy();
+        let t0 = Instant::now();
+        for len in 1..8 {
+            let due = p.flush_at(len, Some(t0)).unwrap();
+            for dt in [Duration::ZERO, Duration::from_millis(1), Duration::from_millis(30)] {
+                let now = due + dt;
+                assert!(
+                    p.should_flush(len, Some(t0), now),
+                    "len {len}: due at {due:?} but not flushing at {now:?}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -41,10 +41,15 @@ pub struct SearchEngine<C: CodeWord = u64> {
 }
 
 thread_local! {
-    /// Per-worker candidate scratch: the probe path reuses one buffer per
-    /// thread instead of allocating a fresh `Vec` per query (§Perf; pairs
-    /// with the `SortScratch` reuse inside the bucket tables).
-    static CAND_SCRATCH: std::cell::RefCell<Vec<ItemId>> =
+    /// Per-worker candidate scratch pool, one buffer per query of the
+    /// worker's current chunk: buffers are reused across the chunk's
+    /// queries rather than allocated per query (§Perf; pairs with the
+    /// `SortScratch` reuse inside the bucket tables). Note the scope:
+    /// [`crate::util::par::par_map_cutoff`] spawns fresh scoped threads
+    /// per batch, so worker thread-locals live for one `search_batch`
+    /// call; only the serial (single-chunk) path reuses them across
+    /// calls.
+    static CAND_SCRATCH: std::cell::RefCell<Vec<Vec<ItemId>>> =
         const { std::cell::RefCell::new(Vec::new()) };
 }
 
@@ -106,32 +111,55 @@ impl<C: CodeWord> SearchEngine<C> {
         let codes = self.hasher.hash_queries(rows)?;
         self.metrics.record_batch(n);
 
-        // Each probe costs milliseconds at paper scale: parallelise even
-        // small batches (cutoff 2, not the default 64).
-        let results: Vec<Vec<SearchResult>> = crate::util::par::par_map_cutoff(n, 2, |qi| {
-            let code = codes[qi];
-            let q = &rows[qi * dim..(qi + 1) * dim];
-            let budget = self.cfg.probe_budget.min(self.dataset.len());
-            let out: Vec<SearchResult> = CAND_SCRATCH.with(|scratch| {
-                let cands = &mut *scratch.borrow_mut();
-                cands.clear();
-                cands.reserve(budget);
-                self.index.probe_with_code(code, self.cfg.probe_budget, cands);
-                let probed = cands.len();
-                PjrtScorer::rerank(&self.dataset, q, cands, self.cfg.top_k);
-                self.metrics
-                    .record_query(t0.elapsed().as_micros() as u64, probed);
-                cands
-                    .iter()
-                    .map(|&id| SearchResult {
-                        id,
-                        score: self.dataset.dot(id as usize, q),
-                    })
-                    .collect()
+        // Fan the batch out in worker-sized chunks: each worker probes
+        // its whole chunk through one [`CodeProbe::probe_batch_with_codes`]
+        // call — the single-table indexes stream their dense codes vector
+        // once per chunk instead of once per query — then re-ranks each
+        // query. Each probe costs milliseconds at paper scale, so even
+        // tiny batches fan out (chunks of at most 16 queries, cutoff 1).
+        let budget = self.cfg.probe_budget;
+        let chunk = n.div_ceil(crate::util::par::n_threads()).clamp(1, 16);
+        let n_chunks = n.div_ceil(chunk);
+        let per_chunk: Vec<Vec<Vec<SearchResult>>> =
+            crate::util::par::par_map_cutoff(n_chunks, 1, |ci| {
+                let (lo, hi) = (ci * chunk, ((ci + 1) * chunk).min(n));
+                CAND_SCRATCH.with(|scratch| {
+                    let bufs = &mut *scratch.borrow_mut();
+                    if bufs.len() < hi - lo {
+                        bufs.resize_with(hi - lo, Vec::new);
+                    }
+                    for buf in bufs[..hi - lo].iter_mut() {
+                        buf.clear();
+                    }
+                    self.index.probe_batch_with_codes(&codes[lo..hi], budget, &mut bufs[..hi - lo]);
+                    let mut scores: Vec<f32> = Vec::with_capacity(self.cfg.top_k);
+                    (lo..hi)
+                        .map(|qi| {
+                            let q = &rows[qi * dim..(qi + 1) * dim];
+                            let cands = &mut bufs[qi - lo];
+                            let probed = cands.len();
+                            // The re-rank already computes every winner's
+                            // exact score; reuse them instead of paying
+                            // top_k more full-dimension dots per query.
+                            PjrtScorer::rerank_scored(
+                                &self.dataset,
+                                q,
+                                cands,
+                                self.cfg.top_k,
+                                &mut scores,
+                            );
+                            self.metrics
+                                .record_query(t0.elapsed().as_micros() as u64, probed);
+                            cands
+                                .iter()
+                                .zip(scores.iter())
+                                .map(|(&id, &score)| SearchResult { id, score })
+                                .collect()
+                        })
+                        .collect()
+                })
             });
-            out
-        });
-        Ok(results)
+        Ok(per_chunk.into_iter().flatten().collect())
     }
 }
 
@@ -301,6 +329,25 @@ mod tests {
         for qi in 0..8 {
             let single = e.search(q.row(qi)).unwrap();
             assert_eq!(batch[qi], single, "query {qi}");
+        }
+    }
+
+    #[test]
+    fn batch_over_simple_index_uses_batched_scan_and_matches_single() {
+        // SIMPLE-LSH overrides probe_batch_with_codes with the shared
+        // codes-vector scan; the engine's chunked batch path must still
+        // agree with per-query searches exactly.
+        use crate::index::simple::{SimpleLshIndex, SimpleLshParams};
+        let d = Arc::new(synthetic::longtail_sift(1500, 16, 20));
+        let h = Arc::new(NativeHasher::<u64>::new(16, 64, 21));
+        let idx = Arc::new(SimpleLshIndex::build(&d, h.as_ref(), SimpleLshParams::new(16)).unwrap());
+        let cfg = ServeConfig { probe_budget: 200, top_k: 10, ..Default::default() };
+        let e = SearchEngine::new(idx, d, h, cfg).unwrap();
+        let q = synthetic::gaussian_queries(9, 16, 22);
+        let batch = e.search_batch(q.flat()).unwrap();
+        assert_eq!(batch.len(), 9);
+        for qi in 0..9 {
+            assert_eq!(batch[qi], e.search(q.row(qi)).unwrap(), "query {qi}");
         }
     }
 

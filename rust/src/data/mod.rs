@@ -11,5 +11,5 @@ mod dataset;
 mod io;
 pub mod synthetic;
 
-pub use dataset::{dot_slices, Dataset, NormStats};
+pub use dataset::{dot4_slices, dot_slices, Dataset, NormStats};
 pub use io::{load_dataset, save_dataset};

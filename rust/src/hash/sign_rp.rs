@@ -47,6 +47,29 @@ impl<C: CodeWord> NativeHasher<C> {
         Self { proj, _code: PhantomData }
     }
 
+    /// Hash a single query without allocating (§Perf): the per-query hot
+    /// path in the indexes — the Eq. 8 transform writes into a reusable
+    /// thread-local buffer and the code is returned by value, vs
+    /// [`ItemHasher::hash_queries`] which allocates a `Vec` per call.
+    /// Same panel, same bit convention, identical codes.
+    pub fn hash_query_one(&self, query: &[f32]) -> Result<C> {
+        let dim = self.proj.dim_in() - 1;
+        anyhow::ensure!(
+            query.len() == dim,
+            "query length {} != dim {dim}",
+            query.len()
+        );
+        thread_local! {
+            static QBUF: std::cell::RefCell<Vec<f32>> =
+                const { std::cell::RefCell::new(Vec::new()) };
+        }
+        Ok(QBUF.with(|b| {
+            let buf = &mut *b.borrow_mut();
+            transform_query(query, buf);
+            self.hash_transformed(buf)
+        }))
+    }
+
     /// Sign-project one already-transformed row into a packed code.
     ///
     /// Accumulates all `width` dot products in a single pass over the input
@@ -165,6 +188,26 @@ mod tests {
         let h: NativeHasher = NativeHasher::new(4, 16, 0);
         assert!(h.hash_items(&[0.0; 7], 1.0).is_err());
         assert!(h.hash_queries(&[0.0; 9]).is_err());
+    }
+
+    #[test]
+    fn hash_query_one_matches_bulk_path() {
+        let h: NativeHasher = NativeHasher::new(6, 64, 13);
+        let q = synthetic::gaussian_queries(5, 6, 14);
+        for i in 0..q.len() {
+            assert_eq!(
+                h.hash_query_one(q.row(i)).unwrap(),
+                h.hash_queries(q.row(i)).unwrap()[0],
+                "query {i}"
+            );
+        }
+        assert!(h.hash_query_one(&[0.0; 5]).is_err(), "wrong dim must be rejected");
+        // Wide codes share the path.
+        let hw: NativeHasher<Code128> = NativeHasher::new(6, 128, 15);
+        assert_eq!(
+            hw.hash_query_one(q.row(0)).unwrap(),
+            hw.hash_queries(q.row(0)).unwrap()[0]
+        );
     }
 
     #[test]

@@ -20,16 +20,49 @@ use crate::hash::CodeWord;
 use crate::util::fxhash::FxHashMap;
 use crate::ItemId;
 
-/// Reusable buffers for [`BucketTable::counting_sort_by_matches`].
+/// Reusable buffers for [`BucketTable::counting_sort_by_matches`] /
+/// [`BucketTable::counting_sort_partial`].
 /// Width-independent: the same scratch serves tables of any code width.
 #[derive(Debug, Default, Clone)]
 pub struct SortScratch {
-    /// Bucket indices grouped by match count (the sort output).
+    /// Bucket indices grouped by match count (the sort output). Only the
+    /// slices for levels `floor..` are materialized; lower slots — and
+    /// slots past the current table's bucket count (the buffer only ever
+    /// grows) — hold stale data from earlier queries.
     pub order: Vec<u32>,
     /// `levels[l]..levels[l+1]` bounds the match-count-`l` slice of `order`.
+    /// Always full-length (`bits + 2` entries), so the bounds of every
+    /// level stay valid even below the materialization floor.
     pub levels: Vec<u32>,
+    /// Lowest match count whose `order` slice was materialized by the
+    /// last sort (0 = everything). Levels `floor..=bits` jointly cover at
+    /// least the budget the sort was run with, so a budget-respecting
+    /// walk never needs to read below it.
+    pub floor: u32,
     l_cache: Vec<u32>,
     cursor: Vec<u32>,
+    /// `item_hist[l]` = total items (not buckets) at match count `l` —
+    /// the histogram that decides the materialization floor.
+    item_hist: Vec<u32>,
+    /// The budget the last sort materialized for — lets
+    /// [`BucketTable::emit_ranked`] check its precondition in debug
+    /// builds.
+    sorted_budget: usize,
+}
+
+impl SortScratch {
+    /// Empty scratch, usable in `const` thread-local initialisers.
+    pub const fn new() -> Self {
+        Self {
+            order: Vec::new(),
+            levels: Vec::new(),
+            floor: 0,
+            l_cache: Vec::new(),
+            cursor: Vec::new(),
+            item_hist: Vec::new(),
+            sorted_budget: 0,
+        }
+    }
 }
 
 /// A single hash table over packed codes masked to `bits` hash bits.
@@ -125,32 +158,161 @@ impl<C: CodeWord> BucketTable<C> {
     /// (`levels.len() == bits + 2`). All buffers live in `scratch` and are
     /// reused — the probe hot path makes no allocations once warm (§Perf).
     pub fn counting_sort_by_matches(&self, qcode: C, scratch: &mut SortScratch) {
+        self.counting_sort_partial(qcode, usize::MAX, scratch);
+    }
+
+    /// Budget-adaptive counting sort: popcount every bucket once (that
+    /// pass is unavoidable — it *is* the histogram), but materialize
+    /// `order` only down to the level where the cumulative *item* count
+    /// covers `budget`. A budget-100 query on a table holding 100k items
+    /// pays the histogram pass plus placement of a handful of buckets,
+    /// not placement of every bucket.
+    ///
+    /// Postcondition: `scratch.floor` is the lowest materialized level;
+    /// levels `floor..=bits` jointly hold >= `budget` items (or `floor`
+    /// is 0 and everything is materialized). Slices at or above the floor
+    /// are identical to what [`Self::counting_sort_by_matches`] produces.
+    pub fn counting_sort_partial(&self, qcode: C, budget: usize, scratch: &mut SortScratch) {
         let q = qcode.and(C::mask(self.bits));
         let n = self.n_buckets();
-        let SortScratch { order, levels, l_cache, cursor } = scratch;
+        let SortScratch { levels, l_cache, item_hist, .. } = scratch;
         levels.clear();
         levels.resize(self.bits + 2, 0);
+        item_hist.clear();
+        item_hist.resize(self.bits + 1, 0);
         // Pass 1: popcount every bucket exactly once (dense scan,
-        // vectorisable), caching `l` and histogramming.
+        // vectorisable), caching `l` and histogramming both buckets and
+        // items per level.
         l_cache.clear();
         l_cache.reserve(n);
-        for &code in &self.codes {
+        for (b, &code) in self.codes.iter().enumerate() {
             let l = code.matches(q, self.bits);
             l_cache.push(l);
             levels[l as usize + 1] += 1;
+            item_hist[l as usize] += self.starts[b + 1] - self.starts[b];
         }
-        // Prefix sum → slice starts per level.
+        self.finish_sort(budget, scratch);
+    }
+
+    /// Shared tail of the single-query and batched sorts: prefix-sum the
+    /// level histogram into slice bounds, derive the materialization
+    /// floor from the item histogram, and place bucket indices at or
+    /// above the floor.
+    fn finish_sort(&self, budget: usize, scratch: &mut SortScratch) {
+        let n = self.n_buckets();
+        let SortScratch { order, levels, floor, l_cache, cursor, item_hist, sorted_budget } =
+            scratch;
+        *sorted_budget = budget;
+        // Prefix sum → slice starts per level (full-length: bounds of
+        // unmaterialized levels stay valid, their contents stay stale).
         for l in 0..=self.bits {
             levels[l + 1] += levels[l];
         }
-        // Pass 2: place bucket indices using the cached `l`s.
+        // The histogram alone tells us how deep placement must go: walk
+        // levels best-first until the cumulative item count covers the
+        // budget. `floor` stays 0 (full sort) when the budget exceeds
+        // the table.
+        let mut cut = 0u32;
+        if budget < self.n_items() {
+            let mut covered = 0usize;
+            for l in (0..=self.bits).rev() {
+                covered += item_hist[l] as usize;
+                if covered >= budget {
+                    cut = l as u32;
+                    break;
+                }
+            }
+        }
+        *floor = cut;
+        // Pass 2: place bucket indices at or above the floor using the
+        // cached `l`s. Grow-only buffer: every slot at or above the floor
+        // is overwritten through the cursors and slots below the floor
+        // (or beyond this table's bucket count) are never read, so a
+        // small-budget sort does not pay an O(n_buckets) memset.
+        if order.len() < n {
+            order.resize(n, 0);
+        }
         cursor.clear();
         cursor.extend_from_slice(levels);
-        order.clear();
-        order.resize(n, 0);
         for (b, &l) in l_cache.iter().enumerate() {
-            order[cursor[l as usize] as usize] = b as u32;
-            cursor[l as usize] += 1;
+            if l >= cut {
+                order[cursor[l as usize] as usize] = b as u32;
+                cursor[l as usize] += 1;
+            }
+        }
+    }
+
+    /// Batched counting sort: score `B` query codes in one streaming pass
+    /// over the dense `codes` vector — each cache-line-sized block of
+    /// bucket codes is XOR+popcounted against every query before moving
+    /// on, so the codes vector moves through the memory hierarchy once
+    /// per *batch* instead of once per query. Per query, the result in
+    /// `scratches[i]` is identical to
+    /// `counting_sort_partial(qcodes[i], budget, &mut scratches[i])`.
+    pub fn counting_sort_batch(&self, qcodes: &[C], budget: usize, scratches: &mut [SortScratch]) {
+        assert_eq!(qcodes.len(), scratches.len(), "one scratch per query");
+        let n = self.n_buckets();
+        let mask = C::mask(self.bits);
+        for s in scratches.iter_mut() {
+            s.l_cache.clear();
+            s.l_cache.reserve(n);
+            s.levels.clear();
+            s.levels.resize(self.bits + 2, 0);
+            s.item_hist.clear();
+            s.item_hist.resize(self.bits + 1, 0);
+        }
+        // Shared pass 1: one block of codes (8 u64 words = one cache
+        // line at width 64) against every query before the next block.
+        // Blocks ascend and each query visits b0..b1 in order, so every
+        // scratch's `l_cache` is pushed in bucket order — no zero-fill.
+        const BLOCK: usize = 8;
+        let mut b0 = 0usize;
+        while b0 < n {
+            let b1 = (b0 + BLOCK).min(n);
+            for (&qraw, s) in qcodes.iter().zip(scratches.iter_mut()) {
+                let q = qraw.and(mask);
+                for b in b0..b1 {
+                    let l = self.codes[b].matches(q, self.bits);
+                    s.l_cache.push(l);
+                    s.levels[l as usize + 1] += 1;
+                    s.item_hist[l as usize] += self.starts[b + 1] - self.starts[b];
+                }
+            }
+            b0 = b1;
+        }
+        // Per-query tail: prefix sums, floor, placement.
+        for s in scratches.iter_mut() {
+            self.finish_sort(budget, s);
+        }
+    }
+
+    /// Emit bucket items Hamming-ranked (most matching bits first) from a
+    /// prepared scratch, up to `budget` ids — the walk shared by the
+    /// single-table indexes (SIMPLE-LSH, SIGN-ALSH). Stops at the
+    /// scratch's materialization floor, which by the
+    /// [`Self::counting_sort_partial`] postcondition covers any budget no
+    /// larger than the one the sort ran with.
+    pub fn emit_ranked(&self, scratch: &SortScratch, budget: usize, out: &mut Vec<ItemId>) {
+        debug_assert!(
+            budget <= scratch.sorted_budget,
+            "emit budget {budget} exceeds the sort's materialized budget {}",
+            scratch.sorted_budget
+        );
+        let mut remaining = budget;
+        if remaining == 0 {
+            return;
+        }
+        for l in (scratch.floor as usize..=self.bits).rev() {
+            let (lo, hi) = (scratch.levels[l] as usize, scratch.levels[l + 1] as usize);
+            for &b in &scratch.order[lo..hi] {
+                let bucket = self.bucket_items(b as usize);
+                let take = bucket.len().min(remaining);
+                out.extend_from_slice(&bucket[..take]);
+                remaining -= take;
+                if remaining == 0 {
+                    return;
+                }
+            }
         }
     }
 
@@ -271,11 +433,20 @@ mod tests {
         scratch.order = vec![9u32; 100];
         scratch.levels = vec![7u32; 100];
         t.counting_sort_by_matches(0, &mut scratch);
-        assert_eq!(scratch.order.len(), 3);
+        // `order` is grow-only (stale slots past the bucket count are
+        // never read); `levels` is exact per table.
+        assert!(scratch.order.len() >= 3);
         assert_eq!(scratch.levels.len(), 6);
+        assert_eq!(scratch.levels[5] as usize, t.n_buckets());
+        // Every bucket placed exactly once in the materialized region.
+        let mut seen = [false; 3];
+        for &b in &scratch.order[..3] {
+            assert!(!seen[b as usize]);
+            seen[b as usize] = true;
+        }
         // Second query on the same scratch must be consistent too.
         t.counting_sort_by_matches(u64::MAX, &mut scratch);
-        assert_eq!(scratch.order.len(), 3);
+        assert_eq!(scratch.levels[5] as usize, t.n_buckets());
     }
 
     #[test]
@@ -363,6 +534,93 @@ mod tests {
             }
         }
         assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn partial_sort_floor_covers_budget() {
+        let codes: Vec<u64> = (0..400).map(|i| i * 0x9E3779B9 % 4096).collect();
+        let t = BucketTable::build(&codes, None, 12);
+        let q = 0x5A5u64;
+        let mut full = SortScratch::default();
+        t.counting_sort_by_matches(q, &mut full);
+        assert_eq!(full.floor, 0);
+        for budget in [1usize, 5, 50, 399] {
+            let mut part = SortScratch::default();
+            t.counting_sort_partial(q, budget, &mut part);
+            assert_eq!(part.levels, full.levels, "budget {budget}");
+            // Materialized levels jointly cover the budget...
+            let covered: usize = (part.floor as usize..=12)
+                .flat_map(|l| {
+                    let (lo, hi) = (part.levels[l] as usize, part.levels[l + 1] as usize);
+                    part.order[lo..hi].iter().map(|&b| t.bucket_items(b as usize).len())
+                })
+                .sum();
+            assert!(covered >= budget, "budget {budget}: covered only {covered}");
+            // ... and materialized slices equal the full sort's.
+            for l in part.floor as usize..=12 {
+                let (lo, hi) = (part.levels[l] as usize, part.levels[l + 1] as usize);
+                assert_eq!(part.order[lo..hi], full.order[lo..hi], "budget {budget} level {l}");
+            }
+        }
+        // Budget beyond the table degenerates to the full sort.
+        let mut part = SortScratch::default();
+        t.counting_sort_partial(q, t.n_items(), &mut part);
+        assert_eq!(part.floor, 0);
+        assert_eq!(part.order, full.order);
+    }
+
+    #[test]
+    fn partial_sort_emits_eager_prefix() {
+        // emit_ranked over a budget-b partial sort == first b ids of the
+        // full-sort emission, element for element.
+        let codes: Vec<u64> = (0..300).map(|i| i.wrapping_mul(0x2545F491) % 2048).collect();
+        let t = BucketTable::build(&codes, None, 11);
+        let q = 0x3C7u64;
+        let mut full = SortScratch::default();
+        t.counting_sort_by_matches(q, &mut full);
+        let mut all = Vec::new();
+        t.emit_ranked(&full, usize::MAX, &mut all);
+        assert_eq!(all.len(), t.n_items());
+        for budget in [0usize, 1, 7, 150, 300, 1000] {
+            let mut part = SortScratch::default();
+            t.counting_sort_partial(q, budget, &mut part);
+            let mut out = Vec::new();
+            t.emit_ranked(&part, budget, &mut out);
+            assert_eq!(out[..], all[..budget.min(all.len())], "budget {budget}");
+        }
+    }
+
+    #[test]
+    fn batch_sort_matches_single_query_sorts() {
+        let codes: Vec<u64> = (0..250).map(|i| i * 0x9E3779B9 % 1024).collect();
+        let t = BucketTable::build(&codes, None, 10);
+        let qs = [0u64, 0x3FF, 0x155, 0x2AA, 0x123];
+        for budget in [3usize, 40, usize::MAX] {
+            let mut batch: Vec<SortScratch> = vec![SortScratch::default(); qs.len()];
+            t.counting_sort_batch(&qs, budget, &mut batch);
+            for (q, b) in qs.iter().zip(&batch) {
+                let mut single = SortScratch::default();
+                t.counting_sort_partial(*q, budget, &mut single);
+                assert_eq!(b.levels, single.levels, "q {q:#x}");
+                assert_eq!(b.floor, single.floor, "q {q:#x}");
+                for l in single.floor as usize..=10 {
+                    let (lo, hi) = (single.levels[l] as usize, single.levels[l + 1] as usize);
+                    assert_eq!(b.order[lo..hi], single.order[lo..hi], "q {q:#x} level {l}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batch_sort_on_empty_table_and_empty_batch() {
+        let t = BucketTable::build(&[] as &[u64], None, 8);
+        let mut scratches = vec![SortScratch::default()];
+        t.counting_sort_batch(&[0u64], 10, &mut scratches);
+        let mut out = Vec::new();
+        t.emit_ranked(&scratches[0], 10, &mut out);
+        assert!(out.is_empty());
+        let t = BucketTable::build(&[1u64, 2, 3], None, 8);
+        t.counting_sort_batch(&[] as &[u64], 10, &mut []);
     }
 
     #[test]

@@ -31,20 +31,25 @@ pub struct MetricOrder {
 }
 
 impl MetricOrder {
-    /// Build from the per-range local max norms. O(m L log(mL)) — done once
-    /// at index build (§3.3: "the sorted structure is common for all
-    /// queries").
+    /// Build from the per-range local max norms. Done once at index build
+    /// (§3.3: "the sorted structure is common for all queries"). The
+    /// `ŝ` sort keys are computed once per entry — m(L+1) cosines — and
+    /// the sort compares cached floats, instead of re-evaluating Eq. 12
+    /// inside the comparator (O(mL log(mL)) cosine calls).
     pub fn build(u_maxes: &[f32], l_bits: usize, epsilon: f32) -> Self {
         assert!(l_bits >= 1);
         assert!((0.0..1.0).contains(&epsilon), "epsilon must be in [0,1)");
-        let mut entries: Vec<(u32, u32)> = (0..u_maxes.len() as u32)
-            .flat_map(|j| (0..=l_bits as u32).map(move |l| (j, l)))
+        let mut keyed: Vec<(f32, u32, u32)> = (0..u_maxes.len() as u32)
+            .flat_map(|j| {
+                (0..=l_bits as u32).map(move |l| (s_hat(u_maxes[j as usize], l, l_bits, epsilon), j, l))
+            })
             .collect();
-        entries.sort_by(|&(ja, la), &(jb, lb)| {
-            let sa = s_hat(u_maxes[ja as usize], la, l_bits, epsilon);
-            let sb = s_hat(u_maxes[jb as usize], lb, l_bits, epsilon);
+        // Same total order as comparing s_hat directly: key desc, then
+        // range asc, then match count desc.
+        keyed.sort_by(|&(sa, ja, la), &(sb, jb, lb)| {
             sb.total_cmp(&sa).then(ja.cmp(&jb)).then(lb.cmp(&la))
         });
+        let entries = keyed.into_iter().map(|(_, j, l)| (j, l)).collect();
         Self { entries, l_bits, epsilon }
     }
 

@@ -30,4 +30,4 @@ pub use bucket::{BucketTable, SortScratch};
 pub use metric::MetricOrder;
 pub use partition::{partition, Partition, PartitionScheme};
 pub use persist::{load_any_range_index, load_range_index, save_range_index, AnyRangeLshIndex};
-pub use traits::{CodeProbe, IndexStats, MipsIndex, SingleProbe};
+pub use traits::{CodeProbe, IndexStats, MipsIndex, ProbeStats, SingleProbe};

@@ -17,6 +17,14 @@
 //! different ranges interleave by estimated inner product `ŝ` (Eq. 12),
 //! not raw Hamming distance.
 //!
+//! §Perf — budget-adaptive lazy probing: a range's buckets are counting-
+//! sorted only when the schedule first touches that range, with the
+//! budget still remaining at that moment, so a small-budget query never
+//! scans the low-`U_j` ranges the schedule would not reach. The paper's
+//! §3.3 complexity argument prices a query by the candidates actually
+//! probed; the eager all-ranges sort ([`RangeLshIndex::probe_with_code_eager`],
+//! kept as the equivalence oracle) paid O(total buckets) regardless.
+//!
 //! Code-length accounting: with `m` ranges, `ceil(log2 m)` bits of the
 //! total budget address the range (paper §4), so each range's table uses
 //! `L - ceil(log2 m)` hash bits. At equal total code length the comparison
@@ -30,7 +38,9 @@ use crate::data::Dataset;
 use crate::hash::codes::partition_id_bits;
 use crate::hash::{CodeWord, ItemHasher, NativeHasher, Projection};
 use crate::index::partition::{partition, Partition, PartitionScheme};
-use crate::index::{BucketTable, CodeProbe, IndexStats, MetricOrder, MipsIndex, SingleProbe};
+use crate::index::{
+    BucketTable, CodeProbe, IndexStats, MetricOrder, MipsIndex, ProbeStats, SingleProbe,
+};
 use crate::{ItemId, Result};
 
 #[cfg(doc)]
@@ -90,6 +100,9 @@ pub struct RangeLshIndex<C: CodeWord = u64> {
     subs: Vec<SubIndex<C>>,
     order: MetricOrder,
     proj: Arc<Projection>,
+    /// Query hasher over the shared panel, built once at index build —
+    /// the query path allocates neither a hasher nor a code vector.
+    qhasher: NativeHasher<C>,
     params: RangeLshParams,
     n_items: usize,
 }
@@ -140,19 +153,21 @@ impl<C: CodeWord> RangeLshIndex<C> {
         }
         let u_maxes: Vec<f32> = subs.iter().map(|s| s.part.u_max).collect();
         let order = MetricOrder::build(&u_maxes, hash_bits, params.epsilon);
+        let proj = hasher.projection().clone();
         Ok(Self {
             subs,
             order,
-            proj: hasher.projection().clone(),
+            qhasher: NativeHasher::with_projection(proj.clone()),
+            proj,
             params,
             n_items: dataset.len(),
         })
     }
 
+    /// Hash one query through the cached hasher (alloc-free: the Eq. 8
+    /// transform reuses a thread-local buffer).
     pub fn hash_query(&self, query: &[f32]) -> C {
-        NativeHasher::<C>::with_projection(self.proj.clone())
-            .hash_queries(query)
-            .expect("query row length matches index dim")[0]
+        self.qhasher.hash_query_one(query).expect("query row length matches index dim")
     }
 
     pub fn params(&self) -> &RangeLshParams {
@@ -212,7 +227,8 @@ impl<C: CodeWord> RangeLshIndex<C> {
         }
         let u_maxes: Vec<f32> = subs.iter().map(|s| s.part.u_max).collect();
         let order = MetricOrder::build(&u_maxes, hash_bits, params.epsilon);
-        Ok(Self { subs, order, proj, params, n_items })
+        let qhasher = NativeHasher::with_projection(proj.clone());
+        Ok(Self { subs, order, proj, qhasher, params, n_items })
     }
 
     /// One range's bucket table (tests/diagnostics).
@@ -247,30 +263,122 @@ impl<C: CodeWord> MipsIndex for RangeLshIndex<C> {
     }
 }
 
-thread_local! {
-    /// Reusable per-thread probe scratch, one sort buffer per range —
-    /// probing makes no allocations once a thread is warm (§Perf). The
-    /// scratch is width-independent, so every `C` instantiation shares it.
-    static SCRATCH: std::cell::RefCell<Vec<crate::index::bucket::SortScratch>> =
-        const { std::cell::RefCell::new(Vec::new()) };
+/// Per-thread probe scratch: one sort buffer per range plus the lazy
+/// probing state (which ranges have been sorted for the current query).
+#[derive(Default)]
+struct ProbeScratch {
+    per_sub: Vec<crate::index::bucket::SortScratch>,
+    sorted: Vec<bool>,
 }
 
-impl<C: CodeWord> CodeProbe<C> for RangeLshIndex<C> {
-    fn probe_with_code(&self, qcode: C, budget: usize, out: &mut Vec<ItemId>) {
+impl ProbeScratch {
+    /// Size for `m` ranges and mark every range unsorted (one memset of
+    /// `m` bytes per query — negligible next to even a single bucket scan).
+    fn reset(&mut self, m: usize) {
+        if self.per_sub.len() < m {
+            self.per_sub.resize_with(m, Default::default);
+        }
+        self.sorted.clear();
+        self.sorted.resize(m, false);
+    }
+}
+
+thread_local! {
+    /// Reusable per-thread probe scratch — probing makes no allocations
+    /// once a thread is warm (§Perf). The scratch is width-independent,
+    /// so every `C` instantiation shares it.
+    static SCRATCH: std::cell::RefCell<ProbeScratch> =
+        const { std::cell::RefCell::new(ProbeScratch { per_sub: Vec::new(), sorted: Vec::new() }) };
+}
+
+impl<C: CodeWord> RangeLshIndex<C> {
+    /// Budget-adaptive lazy probe (§3.3 + §Perf), with instrumentation.
+    ///
+    /// Walks the pre-sorted `(U_j, l)` schedule and counting-sorts range
+    /// `j` only when the schedule *first* touches it, passing the budget
+    /// still remaining at that moment — so a small-budget query sorts one
+    /// or two ranges instead of all `m`, and each sort materializes only
+    /// the levels its remaining budget can reach
+    /// ([`BucketTable::counting_sort_partial`]). The emitted candidate
+    /// stream is element-for-element identical to
+    /// [`Self::probe_with_code_eager`] at every budget (property-tested):
+    /// sorting is pure, so *when* a range is sorted cannot change what
+    /// its level slices contain.
+    ///
+    /// Safety of the partial sort: within a fixed range the schedule
+    /// visits levels in strictly descending order (`ŝ` is strictly
+    /// increasing in `l` for fixed `U_j`), so by the time the walk could
+    /// reach a level below a range's materialization floor, the >= budget
+    /// items materialized above it have all been emitted and the walk has
+    /// already returned.
+    pub fn probe_with_code_stats(
+        &self,
+        qcode: C,
+        budget: usize,
+        out: &mut Vec<ItemId>,
+    ) -> ProbeStats {
+        let mut stats = ProbeStats::default();
+        if budget == 0 {
+            return stats;
+        }
         SCRATCH.with(|scratch| {
-            let per_sub = &mut *scratch.borrow_mut();
-            if per_sub.len() < self.subs.len() {
-                per_sub.resize_with(self.subs.len(), Default::default);
+            let sc = &mut *scratch.borrow_mut();
+            sc.reset(self.subs.len());
+            let mut remaining = budget;
+            for &(j, l) in self.order.entries() {
+                let j = j as usize;
+                let sub = &self.subs[j];
+                if !sc.sorted[j] {
+                    sub.table.counting_sort_partial(qcode, remaining, &mut sc.per_sub[j]);
+                    sc.sorted[j] = true;
+                    stats.ranges_sorted += 1;
+                    stats.buckets_scanned += sub.table.n_buckets();
+                }
+                if l < sc.per_sub[j].floor {
+                    // Unreachable per the invariant above; fully sort
+                    // rather than read unmaterialized slices if it ever
+                    // breaks.
+                    debug_assert!(false, "materialization floor underrun (range {j}, level {l})");
+                    sub.table.counting_sort_by_matches(qcode, &mut sc.per_sub[j]);
+                    stats.buckets_scanned += sub.table.n_buckets();
+                }
+                let s = &sc.per_sub[j];
+                let (lo, hi) = (s.levels[l as usize] as usize, s.levels[l as usize + 1] as usize);
+                for &b in &s.order[lo..hi] {
+                    let bucket = sub.table.bucket_items(b as usize);
+                    let take = bucket.len().min(remaining);
+                    out.extend_from_slice(&bucket[..take]);
+                    remaining -= take;
+                    stats.buckets_probed += 1;
+                    if remaining == 0 {
+                        stats.items_emitted = budget;
+                        return;
+                    }
+                }
             }
+            stats.items_emitted = budget - remaining;
+        });
+        stats
+    }
+
+    /// The pre-lazy-refactor eager probe: counting-sort **every** range up
+    /// front, then walk the schedule. Kept as the equivalence oracle for
+    /// [`CodeProbe::probe_with_code`] (property tests assert the streams
+    /// are identical at every budget) and as the baseline the hotpath
+    /// bench's eager-vs-lazy probe-budget rows measure against.
+    pub fn probe_with_code_eager(&self, qcode: C, budget: usize, out: &mut Vec<ItemId>) {
+        SCRATCH.with(|scratch| {
+            let sc = &mut *scratch.borrow_mut();
+            sc.reset(self.subs.len());
             // Per-range counting sort: one O(total buckets) pass (§3.3).
-            for (sub, s) in self.subs.iter().zip(per_sub.iter_mut()) {
+            for (sub, s) in self.subs.iter().zip(sc.per_sub.iter_mut()) {
                 sub.table.counting_sort_by_matches(qcode, s);
             }
             // Walk the pre-sorted (U_j, l) schedule.
             let mut remaining = budget;
             for &(j, l) in self.order.entries() {
                 let sub = &self.subs[j as usize];
-                let s = &per_sub[j as usize];
+                let s = &sc.per_sub[j as usize];
                 let (lo, hi) = (s.levels[l as usize] as usize, s.levels[l as usize + 1] as usize);
                 for &b in &s.order[lo..hi] {
                     let bucket = sub.table.bucket_items(b as usize);
@@ -283,6 +391,12 @@ impl<C: CodeWord> CodeProbe<C> for RangeLshIndex<C> {
                 }
             }
         })
+    }
+}
+
+impl<C: CodeWord> CodeProbe<C> for RangeLshIndex<C> {
+    fn probe_with_code(&self, qcode: C, budget: usize, out: &mut Vec<ItemId>) {
+        self.probe_with_code_stats(qcode, budget, out);
     }
 }
 
@@ -499,6 +613,71 @@ mod tests {
             idx.probe(q.row(qi), 33, &mut capped);
             assert_eq!(capped.len(), 33);
         }
+    }
+
+    #[test]
+    fn budget_one_query_sorts_exactly_one_range() {
+        // The lazy-probing contract: a budget-1 query whose code lands in
+        // a bucket of the top-norm range (the schedule's first entries)
+        // counting-sorts that one range and leaves the other 31 untouched.
+        let d = synthetic::longtail_sift(3000, 8, 21);
+        let idx = build(&d, 16, 32);
+        assert_eq!(idx.n_ranges(), 32);
+        let top = idx.n_ranges() - 1; // partitions ascend in norm
+        let (qcode, first_item) = {
+            let (code, items) = idx.sub_table(top).buckets().next().expect("non-empty range");
+            (code, items[0])
+        };
+        let mut out = Vec::new();
+        let stats = idx.probe_with_code_stats(qcode, 1, &mut out);
+        assert_eq!(out, vec![first_item]);
+        assert_eq!(stats.ranges_sorted, 1, "lazy probe must sort only the touched range");
+        assert_eq!(stats.buckets_scanned, idx.sub_table(top).n_buckets());
+        assert_eq!(stats.items_emitted, 1);
+        // An exhaustive probe sorts every range exactly once.
+        let mut all = Vec::new();
+        let stats = idx.probe_with_code_stats(qcode, usize::MAX, &mut all);
+        assert_eq!(stats.ranges_sorted, 32);
+        assert_eq!(stats.items_emitted, d.len());
+    }
+
+    #[test]
+    fn lazy_probe_matches_eager_oracle() {
+        let d = synthetic::longtail_sift(1200, 8, 22);
+        for m in [1usize, 8, 32] {
+            let idx = build(&d, 16, m);
+            let q = synthetic::gaussian_queries(3, 8, 23);
+            for qi in 0..q.len() {
+                let qcode = idx.hash_query(q.row(qi));
+                for budget in [0usize, 1, 7, 600, usize::MAX] {
+                    let (mut lazy, mut eager) = (Vec::new(), Vec::new());
+                    idx.probe_with_code(qcode, budget, &mut lazy);
+                    idx.probe_with_code_eager(qcode, budget, &mut eager);
+                    assert_eq!(lazy, eager, "m={m} q={qi} budget={budget}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn probe_stats_report_fewer_sorts_at_small_budgets() {
+        let d = synthetic::longtail_sift(4000, 8, 24);
+        let idx = build(&d, 16, 32);
+        let q = synthetic::gaussian_queries(1, 8, 25);
+        let qcode = idx.hash_query(q.row(0));
+        let mut prev = 0usize;
+        for budget in [1usize, 100, 1000, usize::MAX] {
+            let mut out = Vec::new();
+            let stats = idx.probe_with_code_stats(qcode, budget, &mut out);
+            assert!(
+                stats.ranges_sorted >= prev,
+                "sorted ranges must grow with budget ({} < {prev})",
+                stats.ranges_sorted
+            );
+            prev = stats.ranges_sorted;
+            assert_eq!(stats.items_emitted, out.len());
+        }
+        assert_eq!(prev, 32, "exhaustive probe sorts all ranges");
     }
 
     #[test]

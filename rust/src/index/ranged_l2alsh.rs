@@ -94,22 +94,22 @@ impl RangedL2AlshIndex {
             t += p;
             p = p * p;
         }
-        let mut schedule: Vec<(u32, u32)> = (0..subs.len() as u32)
-            .flat_map(|j| (0..=k as u32).map(move |l| (j, l)))
-            .collect();
         let s_hat = |j: u32, l: u32| -> f64 {
             let u_j = subs[j as usize].0 as f64;
             let d2 = d_hat[l as usize] * d_hat[l as usize];
             // Eq. 6 inverted: 2·U_param·(x·q)/(U_j·|q|) = 1 + m/4 + t − d̂².
             (1.0 + m as f64 / 4.0 + t - d2) * u_j / (2.0 * u_param)
         };
-        schedule.sort_by(|&(ja, la), &(jb, lb)| {
-            s_hat(jb, lb)
-                .total_cmp(&s_hat(ja, la))
-                .then(ja.cmp(&jb))
-                .then(lb.cmp(&la))
+        // Keys once per entry, not per comparison (same precompute-then-
+        // sort shape as [`crate::index::MetricOrder::build`]).
+        let mut keyed: Vec<(f64, u32, u32)> = (0..subs.len() as u32)
+            .flat_map(|j| (0..=k as u32).map(move |l| (j, l)))
+            .map(|(j, l)| (s_hat(j, l), j, l))
+            .collect();
+        keyed.sort_by(|&(sa, ja, la), &(sb, jb, lb)| {
+            sb.total_cmp(&sa).then(ja.cmp(&jb)).then(lb.cmp(&la))
         });
-        schedule
+        keyed.into_iter().map(|(_, j, l)| (j, l)).collect()
     }
 
     pub fn n_ranges(&self) -> usize {

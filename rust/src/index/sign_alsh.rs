@@ -91,24 +91,23 @@ fn sign_project<C: CodeWord>(proj: &Projection, xt: &[f32]) -> C {
     C::pack_from_signs(acc)
 }
 
+thread_local! {
+    /// Reusable probe scratch (shared across widths) — probing allocates
+    /// nothing once a thread is warm, matching the SIMPLE/RANGE paths.
+    static SCRATCH: std::cell::RefCell<SortScratch> =
+        const { std::cell::RefCell::new(SortScratch::new()) };
+}
+
 impl<C: CodeWord> MipsIndex for SignAlshIndex<C> {
     fn probe(&self, query: &[f32], budget: usize, out: &mut Vec<ItemId>) {
         let qcode = self.hash_query(query);
-        let mut scratch = SortScratch::default();
-        self.table.counting_sort_by_matches(qcode, &mut scratch);
-        let mut remaining = budget;
-        for l in (0..=self.params.code_bits).rev() {
-            let (lo, hi) = (scratch.levels[l] as usize, scratch.levels[l + 1] as usize);
-            for &b in &scratch.order[lo..hi] {
-                let bucket = self.table.bucket_items(b as usize);
-                if remaining == 0 {
-                    return;
-                }
-                let take = bucket.len().min(remaining);
-                out.extend_from_slice(&bucket[..take]);
-                remaining -= take;
-            }
-        }
+        SCRATCH.with(|scratch| {
+            let s = &mut *scratch.borrow_mut();
+            // Budget-adaptive counting sort + Hamming-ranked emission,
+            // same machinery as the SIMPLE-LSH probe.
+            self.table.counting_sort_partial(qcode, budget, s);
+            self.table.emit_ranked(s, budget, out);
+        })
     }
 
     fn len(&self) -> usize {

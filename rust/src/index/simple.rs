@@ -35,6 +35,8 @@ impl SimpleLshParams {
 pub struct SimpleLshIndex<C: CodeWord = u64> {
     table: BucketTable<C>,
     proj: Arc<Projection>,
+    /// Query hasher over the shared panel, built once at index build.
+    qhasher: NativeHasher<C>,
     code_bits: usize,
     n_items: usize,
     /// Global normalisation constant `U` (kept for diagnostics/Fig 1(c)).
@@ -72,23 +74,24 @@ impl<C: CodeWord> SimpleLshIndex<C> {
         anyhow::ensure!(u > 0.0, "dataset max norm must be positive");
         let codes = hasher.hash_items(dataset.flat(), u)?;
         let table = BucketTable::build(&codes, None, params.code_bits);
+        // Query hashing at probe time uses the same panel the item
+        // codes were built with.
+        let proj = hasher.projection().clone();
         Ok(Self {
             table,
-            // Query hashing at probe time uses the same panel the item
-            // codes were built with.
-            proj: hasher.projection().clone(),
+            qhasher: NativeHasher::with_projection(proj.clone()),
+            proj,
             code_bits: params.code_bits,
             n_items: dataset.len(),
             u,
         })
     }
 
-    /// Hash one query natively (the engine batches via PJRT instead and
-    /// calls [`CodeProbe::probe_with_code`]).
+    /// Hash one query natively through the cached hasher, alloc-free (the
+    /// engine batches via PJRT instead and calls
+    /// [`CodeProbe::probe_with_code`]).
     pub fn hash_query(&self, query: &[f32]) -> C {
-        NativeHasher::<C>::with_projection(self.proj.clone())
-            .hash_queries(query)
-            .expect("query row length matches index dim")[0]
+        self.qhasher.hash_query_one(query).expect("query row length matches index dim")
     }
 
     pub fn code_bits(&self) -> usize {
@@ -125,28 +128,40 @@ impl<C: CodeWord> MipsIndex for SimpleLshIndex<C> {
 }
 
 thread_local! {
-    static SCRATCH: std::cell::RefCell<crate::index::bucket::SortScratch> =
-        std::cell::RefCell::new(Default::default());
+    /// Per-thread sort scratch pool: slot 0 serves the single-query path,
+    /// the batched path grows the pool to one slot per in-flight query.
+    static SCRATCH: std::cell::RefCell<Vec<crate::index::bucket::SortScratch>> =
+        const { std::cell::RefCell::new(Vec::new()) };
 }
 
 impl<C: CodeWord> CodeProbe<C> for SimpleLshIndex<C> {
     fn probe_with_code(&self, qcode: C, budget: usize, out: &mut Vec<ItemId>) {
         SCRATCH.with(|scratch| {
-            let s = &mut *scratch.borrow_mut();
-            self.table.counting_sort_by_matches(qcode, s);
-            let mut remaining = budget;
-            // Hamming ranking: most matching bits (distance 0) first.
-            for l in (0..=self.code_bits).rev() {
-                let (lo, hi) = (s.levels[l] as usize, s.levels[l + 1] as usize);
-                for &b in &s.order[lo..hi] {
-                    let bucket = self.table.bucket_items(b as usize);
-                    if remaining == 0 {
-                        return;
-                    }
-                    let take = bucket.len().min(remaining);
-                    out.extend_from_slice(&bucket[..take]);
-                    remaining -= take;
-                }
+            let pool = &mut *scratch.borrow_mut();
+            if pool.is_empty() {
+                pool.push(Default::default());
+            }
+            let s = &mut pool[0];
+            // Budget-adaptive: the counting sort materializes only the
+            // levels this budget can reach; Hamming ranking (most
+            // matching bits first) is the emit order.
+            self.table.counting_sort_partial(qcode, budget, s);
+            self.table.emit_ranked(s, budget, out);
+        })
+    }
+
+    fn probe_batch_with_codes(&self, qcodes: &[C], budget: usize, outs: &mut [Vec<ItemId>]) {
+        assert_eq!(qcodes.len(), outs.len(), "one output buffer per query code");
+        SCRATCH.with(|scratch| {
+            let pool = &mut *scratch.borrow_mut();
+            if pool.len() < qcodes.len() {
+                pool.resize_with(qcodes.len(), Default::default);
+            }
+            // One streaming pass over the dense codes vector for the
+            // whole batch, then per-query Hamming-ranked emission.
+            self.table.counting_sort_batch(qcodes, budget, &mut pool[..qcodes.len()]);
+            for (s, out) in pool.iter().zip(outs.iter_mut()) {
+                self.table.emit_ranked(s, budget, out);
             }
         })
     }
@@ -259,6 +274,22 @@ mod tests {
         assert!(exact.len() <= full.len());
         for id in &exact {
             assert!(full.contains(id));
+        }
+    }
+
+    #[test]
+    fn batched_probe_matches_single_query_probes() {
+        let (_, idx) = small_index(16);
+        let q = synthetic::gaussian_queries(6, 8, 11);
+        let qcodes: Vec<u64> = (0..q.len()).map(|i| idx.hash_query(q.row(i))).collect();
+        for budget in [1usize, 23, 300, usize::MAX] {
+            let mut batched: Vec<Vec<crate::ItemId>> = vec![Vec::new(); qcodes.len()];
+            idx.probe_batch_with_codes(&qcodes, budget, &mut batched);
+            for (qi, qcode) in qcodes.iter().enumerate() {
+                let mut single = Vec::new();
+                idx.probe_with_code(*qcode, budget, &mut single);
+                assert_eq!(batched[qi], single, "query {qi} budget {budget}");
+            }
         }
     }
 

@@ -32,6 +32,38 @@ pub trait MipsIndex: Send + Sync {
 pub trait CodeProbe<C: CodeWord = u64>: MipsIndex {
     /// Probe with a pre-computed (unmasked, full-width) query code.
     fn probe_with_code(&self, qcode: C, budget: usize, out: &mut Vec<ItemId>);
+
+    /// Probe a batch of pre-computed query codes, appending candidates
+    /// into the matching `outs` entry. Per query the candidate stream is
+    /// identical to [`Self::probe_with_code`]; implementations override
+    /// this when they can amortize memory traffic across the batch (the
+    /// single-table indexes stream their dense codes vector once per
+    /// batch via [`crate::index::BucketTable::counting_sort_batch`]).
+    /// RANGE-LSH keeps this default: its budget-adaptive lazy probing
+    /// skips whole ranges per query, which a shared eager scan would
+    /// forfeit.
+    fn probe_batch_with_codes(&self, qcodes: &[C], budget: usize, outs: &mut [Vec<ItemId>]) {
+        assert_eq!(qcodes.len(), outs.len(), "one output buffer per query code");
+        for (&qcode, out) in qcodes.iter().zip(outs.iter_mut()) {
+            self.probe_with_code(qcode, budget, out);
+        }
+    }
+}
+
+/// Instrumentation from one probe call — the §Perf hook behind the
+/// budget-adaptive lazy probing tests and the hotpath bench: a budget-1
+/// query on an m-range index must counting-sort one range, not m.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct ProbeStats {
+    /// Ranges whose bucket table was counting-sorted (lazy probing sorts
+    /// a range only when the schedule first touches it).
+    pub ranges_sorted: usize,
+    /// Buckets popcounted across those sorts (the histogram pass).
+    pub buckets_scanned: usize,
+    /// Buckets whose items were emitted (schedule walk).
+    pub buckets_probed: usize,
+    /// Candidate ids appended to the output.
+    pub items_emitted: usize,
 }
 
 /// Indexes supporting the supplementary multi-table single-probe protocol:

@@ -10,9 +10,10 @@ use rangelsh::hash::{
 use rangelsh::index::metric::{s_hat, MetricOrder};
 use rangelsh::index::range::{RangeLshIndex, RangeLshParams};
 use rangelsh::index::simple::{SimpleLshIndex, SimpleLshParams};
-use rangelsh::index::{partition, BucketTable, MipsIndex, PartitionScheme};
+use rangelsh::index::{partition, BucketTable, CodeProbe, MipsIndex, PartitionScheme};
 use rangelsh::theory::g_rho;
 use rangelsh::util::rng::Rng;
+use rangelsh::ItemId;
 
 /// Run `body` over `cases` seeded cases; report the failing seed.
 fn forall(cases: u64, body: impl Fn(&mut Rng, u64)) {
@@ -316,6 +317,103 @@ fn prop_wide_native_hasher_extends_scalar_bit_convention() {
         let s = scalar.hash_queries(&q).unwrap()[0];
         let w = wide.hash_queries(&q).unwrap()[0];
         assert_eq!(w, widen::<Code256>(s), "seed {seed}: wide code must zero-extend scalar");
+    });
+}
+
+/// Lazy/partial probing must emit the *identical* candidate sequence the
+/// eager all-ranges sort emits, element for element, at every budget —
+/// the equivalence contract of the budget-adaptive probe refactor.
+fn check_lazy_stream_equals_eager<C: CodeWord>(
+    idx: &RangeLshIndex<C>,
+    q: &Dataset,
+    n: usize,
+    seed: u64,
+    m: usize,
+) {
+    for qi in 0..q.len() {
+        let qcode = idx.hash_query(q.row(qi));
+        for budget in [1usize, 7, n / 2, usize::MAX] {
+            let (mut lazy, mut eager) = (Vec::new(), Vec::new());
+            idx.probe_with_code(qcode, budget, &mut lazy);
+            idx.probe_with_code_eager(qcode, budget, &mut eager);
+            assert_eq!(
+                lazy, eager,
+                "seed {seed} m {m} q {qi} budget {budget}: lazy/eager streams diverge"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_lazy_probe_stream_equals_eager_stream() {
+    forall(5, |rng, seed| {
+        for &m in &[1usize, 8, 32] {
+            let n = 300 + rng.gen_index(500);
+            let d = synthetic::longtail_sift(n, 8, seed ^ (m as u64) << 32);
+            let q = synthetic::gaussian_queries(2, 8, seed ^ 0xABC);
+            // u64 at the paper's L=16 operating point...
+            let p64 = RangeLshParams::new(16, m);
+            let h64: NativeHasher = NativeHasher::new(8, p64.hash_bits(), seed);
+            let idx64 = RangeLshIndex::build(&d, &h64, p64).unwrap();
+            check_lazy_stream_equals_eager(&idx64, &q, n, seed, m);
+            // ... and the wide regime the CodeWord refactor opened.
+            let p128 = RangeLshParams::new(128, m);
+            let h128: NativeHasher<Code128> = NativeHasher::new(8, p128.hash_bits(), seed);
+            let idx128 = RangeLshIndex::build(&d, &h128, p128).unwrap();
+            check_lazy_stream_equals_eager(&idx128, &q, n, seed, m);
+        }
+    });
+}
+
+#[test]
+fn prop_simple_partial_probe_matches_full_sort_reference() {
+    forall(10, |rng, seed| {
+        let n = 100 + rng.gen_index(400);
+        let d = synthetic::longtail_sift(n, 8, seed);
+        let h: NativeHasher = NativeHasher::new(8, 64, seed ^ 5);
+        let idx = SimpleLshIndex::build(&d, &h, SimpleLshParams::new(16)).unwrap();
+        let q = synthetic::gaussian_queries(1, 8, seed ^ 6);
+        let qcode = idx.hash_query(q.row(0));
+        // Eager reference: full grouping, Hamming-ranked walk.
+        let mut groups = Vec::new();
+        idx.table().group_by_matches(qcode, &mut groups);
+        let mut reference: Vec<ItemId> = Vec::new();
+        for l in (0..groups.len()).rev() {
+            for bucket in &groups[l] {
+                reference.extend_from_slice(bucket);
+            }
+        }
+        assert_eq!(reference.len(), n, "seed {seed}");
+        for budget in [1usize, 7, n / 2, usize::MAX] {
+            let mut out = Vec::new();
+            idx.probe_with_code(qcode, budget, &mut out);
+            assert_eq!(
+                out[..],
+                reference[..budget.min(n)],
+                "seed {seed} budget {budget}: partial probe diverges from full sort"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_batched_probe_equals_per_query_probes() {
+    forall(8, |rng, seed| {
+        let n = 200 + rng.gen_index(400);
+        let b = 1 + rng.gen_index(7);
+        let budget = 1 + rng.gen_index(n);
+        let d = synthetic::longtail_sift(n, 8, seed);
+        let h: NativeHasher = NativeHasher::new(8, 64, seed ^ 9);
+        let idx = SimpleLshIndex::build(&d, &h, SimpleLshParams::new(20)).unwrap();
+        let q = synthetic::gaussian_queries(b, 8, seed ^ 10);
+        let qcodes: Vec<u64> = (0..b).map(|i| idx.hash_query(q.row(i))).collect();
+        let mut batched: Vec<Vec<ItemId>> = vec![Vec::new(); b];
+        idx.probe_batch_with_codes(&qcodes, budget, &mut batched);
+        for (qi, &qcode) in qcodes.iter().enumerate() {
+            let mut single = Vec::new();
+            idx.probe_with_code(qcode, budget, &mut single);
+            assert_eq!(batched[qi], single, "seed {seed} q {qi} budget {budget}");
+        }
     });
 }
 
