@@ -9,6 +9,10 @@
 //!   3b. probe-budget axis (10 / 100 / 1k / 10k) on the m=32 config,
 //!      eager (sort every range up front) vs lazy (budget-adaptive) —
 //!      the auditable record of the lazy-probing speedup
+//!   3c. probe-session axis (cumulative 10 → 100 → 1k → 10k): one
+//!      resumable session extended to each target vs the pre-session
+//!      client pattern of a fresh one-shot re-probe per target — the
+//!      auditable record of the Prober cursor's resume payoff
 //!   4. exact re-rank
 //!   5. engine end-to-end (batched)
 //!   6. exact ground-truth scan (the brute-force baseline RANGE beats)
@@ -185,6 +189,7 @@ fn main() -> rangelsh::Result<()> {
         timing: Timing,
     }
     let mut budget_rows: Vec<BudgetRow> = Vec::new();
+    let mut session_rows: Vec<BudgetRow> = Vec::new();
     {
         let params = RangeLshParams::new(32, 32);
         let index: RangeLshIndex = RangeLshIndex::build(&items, native.as_ref(), params)?;
@@ -214,6 +219,48 @@ fn main() -> rangelsh::Result<()> {
             ]);
             budget_rows.push(BudgetRow { budget, mode: "eager", timing: t_eager });
             budget_rows.push(BudgetRow { budget, mode: "lazy", timing: t_lazy });
+        }
+
+        // 3c. probe-session axis: a client that wants more candidates
+        // after inspecting the first batch. "session" opens one resumable
+        // Prober and extends it through every cumulative target up to
+        // `cum`; "reprobe" is the pre-session pattern — a fresh one-shot
+        // probe per target, rescanning the shared prefix each time.
+        use rangelsh::index::Prober;
+        let steps = [10usize, 100, 1_000, 10_000];
+        for (i, &cum) in steps.iter().enumerate() {
+            let t_session = bench(1, reps, || {
+                let mut out = Vec::with_capacity(cum);
+                let mut session = index.session(qcode);
+                let mut have = 0usize;
+                for &b in &steps[..=i] {
+                    session.extend(b - have, &mut out);
+                    have = b;
+                }
+                std::hint::black_box(&out);
+            });
+            let t_reprobe = bench(1, reps, || {
+                let mut out = Vec::with_capacity(cum);
+                for &b in &steps[..=i] {
+                    out.clear();
+                    index.probe_with_code(qcode, b, &mut out);
+                }
+                std::hint::black_box(&out);
+            });
+            let speedup =
+                t_reprobe.median.as_secs_f64() / t_session.median.as_secs_f64().max(1e-12);
+            table.row(vec![
+                format!("probe m=32 to {cum} via {} steps (reprobe)", i + 1),
+                format!("{:?}", t_reprobe.median),
+                format!("{:.0} probes/s", t_reprobe.throughput(1)),
+            ]);
+            table.row(vec![
+                format!("probe m=32 to {cum} via {} steps (session)", i + 1),
+                format!("{:?}", t_session.median),
+                format!("{speedup:.1}x vs reprobe"),
+            ]);
+            session_rows.push(BudgetRow { budget: cum, mode: "reprobe", timing: t_reprobe });
+            session_rows.push(BudgetRow { budget: cum, mode: "session", timing: t_session });
         }
     }
 
@@ -301,6 +348,24 @@ fn main() -> rangelsh::Result<()> {
                             ("code_bits", Json::Num(32.0)),
                             ("m", Json::Num(32.0)),
                             ("budget", Json::Num(r.budget as f64)),
+                            ("mode", Json::Str(r.mode.into())),
+                            ("median_us", Json::Num(r.timing.median.as_secs_f64() * 1e6)),
+                            ("min_us", Json::Num(r.timing.min.as_secs_f64() * 1e6)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "probe_session_axis",
+            Json::Arr(
+                session_rows
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("code_bits", Json::Num(32.0)),
+                            ("m", Json::Num(32.0)),
+                            ("cumulative_budget", Json::Num(r.budget as f64)),
                             ("mode", Json::Str(r.mode.into())),
                             ("median_us", Json::Num(r.timing.median.as_secs_f64() * 1e6)),
                             ("min_us", Json::Num(r.timing.min.as_secs_f64() * 1e6)),

@@ -9,7 +9,7 @@ use rangelsh::eval::exact_topk;
 use rangelsh::hash::NativeHasher;
 use rangelsh::index::range::{RangeLshIndex, RangeLshParams};
 use rangelsh::index::simple::{SimpleLshIndex, SimpleLshParams};
-use rangelsh::index::MipsIndex;
+use rangelsh::index::{MipsIndex, Prober};
 
 fn main() -> rangelsh::Result<()> {
     // 1. A long-tailed corpus (the regime the paper targets) + queries.
@@ -41,23 +41,38 @@ fn main() -> rangelsh::Result<()> {
         simple.stats().largest_bucket
     );
 
-    // 3. Query: probe 500 of 20,000 items (2.5%), check against exact.
+    // 3. Query through a resumable session: probe 500 of 20,000 items
+    //    (2.5%) first; if the answer looks weak, ask the *same* session
+    //    for 1,500 more — the schedule walk continues where it stopped
+    //    instead of rescanning (Alg. 2 is incremental by design).
     let budget = 500;
     let gt = exact_topk(&items, &queries, 10);
     for qi in 0..queries.len() {
         let q = queries.row(qi);
+        let mut session = range.prober(q);
         let mut cands = Vec::new();
-        range.probe(q, budget, &mut cands);
+        session.extend(budget, &mut cands);
         // Re-rank the probed candidates by exact inner product.
-        let mut scored: Vec<(f32, u32)> =
-            cands.iter().map(|&id| (items.dot(id as usize, q), id)).collect();
-        scored.sort_by(|a, b| b.0.total_cmp(&a.0));
-        scored.truncate(10);
-        let found = scored.iter().filter(|(_, id)| gt[qi].contains(id)).count();
+        let rerank = |cands: &[u32]| {
+            let mut scored: Vec<(f32, u32)> =
+                cands.iter().map(|&id| (items.dot(id as usize, q), id)).collect();
+            scored.sort_by(|a, b| b.0.total_cmp(&a.0));
+            scored.truncate(10);
+            scored
+        };
+        let mut scored = rerank(&cands);
+        let mut probed = budget;
+        let mut found = scored.iter().filter(|(_, id)| gt[qi].contains(id)).count();
+        if found < 10 {
+            // Not satisfied: resume the session for the next 1,500.
+            session.extend(1500, &mut cands);
+            probed += 1500;
+            scored = rerank(&cands);
+            found = scored.iter().filter(|(_, id)| gt[qi].contains(id)).count();
+        }
         println!(
-            "query {qi}: probed {budget}/{} items, recall@10 = {}/10, top hit ip={:.3} (exact {:.3})",
+            "query {qi}: probed {probed}/{} items, recall@10 = {found}/10, top hit ip={:.3} (exact {:.3})",
             items.len(),
-            found,
             scored[0].0,
             items.dot(gt[qi][0] as usize, q),
         );

@@ -20,7 +20,7 @@ use std::time::Duration;
 
 use rangelsh::config::ServeConfig;
 use rangelsh::coordinator::server::drive_workload;
-use rangelsh::coordinator::{BatchPolicy, SearchEngine};
+use rangelsh::coordinator::{BatchPolicy, QueryParams, SearchEngine};
 use rangelsh::data::synthetic;
 use rangelsh::eval::exact_topk;
 use rangelsh::hash::{ItemHasher, NativeHasher, Projection};
@@ -111,6 +111,19 @@ fn main() -> rangelsh::Result<()> {
     }
     let recall = hits as f64 / (sample * 10) as f64;
     println!("recall@10 (n={sample} sampled queries): {recall:.4}");
+
+    // Per-request overrides: the same engine serves a high-recall request
+    // (exhaustive budget) and a latency-bound one (early-stop at 512
+    // candidates) side by side, no rebuild, no second ServeConfig.
+    let heavy = QueryParams::new().with_probe_budget(usize::MAX).with_top_k(10);
+    let light = QueryParams::new().with_min_candidates(512).with_extend_step(256);
+    let q0 = queries.row(0);
+    let exact = engine.search_with(q0, &heavy)?;
+    let fast = engine.search_with(q0, &light)?;
+    println!(
+        "per-request params: exhaustive top hit ip={:.3}, early-stop top hit ip={:.3}",
+        exact[0].score, fast[0].score
+    );
     println!("=== E2E complete ===");
     Ok(())
 }

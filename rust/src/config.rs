@@ -189,6 +189,91 @@ impl Default for ServeConfig {
     }
 }
 
+/// Per-request overrides of the serving defaults in [`ServeConfig`],
+/// threaded from `ServerHandle::query_with` / `SearchEngine::search_with`
+/// down to the probe session — one engine serves recall-targeted eval,
+/// adaptive clients, and filtered search side by side instead of
+/// hard-freezing k/budget at engine build. `None` fields defer to the
+/// engine's [`ServeConfig`]; see [`QueryParams::resolve`] for the
+/// clamping rules.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct QueryParams {
+    /// Results to return (overrides [`ServeConfig::top_k`]).
+    pub top_k: Option<usize>,
+    /// Hard probe ceiling (overrides [`ServeConfig::probe_budget`]).
+    pub probe_budget: Option<usize>,
+    /// Early-stop target: stop extending the probe session once this many
+    /// candidates are gathered, even though the budget would allow more.
+    /// Defaults to the resolved budget (probe all the way).
+    pub min_candidates: Option<usize>,
+    /// Session chunk size: candidates requested per `Prober::extend` call
+    /// between `min_candidates` checks — the timeout-ish knob bounding
+    /// how far past the target one chunk can overshoot. Defaults to the
+    /// resolved budget (a single one-shot extend).
+    pub extend_step: Option<usize>,
+}
+
+impl QueryParams {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_top_k(mut self, k: usize) -> Self {
+        self.top_k = Some(k);
+        self
+    }
+
+    pub fn with_probe_budget(mut self, budget: usize) -> Self {
+        self.probe_budget = Some(budget);
+        self
+    }
+
+    pub fn with_min_candidates(mut self, min: usize) -> Self {
+        self.min_candidates = Some(min);
+        self
+    }
+
+    pub fn with_extend_step(mut self, step: usize) -> Self {
+        self.extend_step = Some(step);
+        self
+    }
+
+    /// True when every field defers to the serving defaults.
+    pub fn is_default(&self) -> bool {
+        *self == Self::default()
+    }
+
+    /// Apply `cfg` defaults and clamp into a consistent operating point:
+    /// `top_k >= 1`, `probe_budget >= top_k`, `top_k <= min_candidates <=
+    /// probe_budget`, `extend_step >= 1`.
+    pub fn resolve(&self, cfg: &ServeConfig) -> ResolvedQueryParams {
+        let top_k = self.top_k.unwrap_or(cfg.top_k).max(1);
+        let probe_budget = self.probe_budget.unwrap_or(cfg.probe_budget).max(top_k);
+        let min_candidates =
+            self.min_candidates.unwrap_or(probe_budget).clamp(top_k, probe_budget);
+        let extend_step = self.extend_step.unwrap_or(probe_budget).max(1);
+        ResolvedQueryParams { top_k, probe_budget, min_candidates, extend_step }
+    }
+}
+
+/// [`QueryParams`] with the [`ServeConfig`] defaults applied and bounds
+/// clamped — what the engine's probe/re-rank path actually runs with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ResolvedQueryParams {
+    pub top_k: usize,
+    pub probe_budget: usize,
+    pub min_candidates: usize,
+    pub extend_step: usize,
+}
+
+impl ResolvedQueryParams {
+    /// A single `extend` covers the whole budget — the classic one-shot
+    /// probe, eligible for the batched codes-vector scan.
+    pub fn one_shot(&self) -> bool {
+        self.min_candidates >= self.probe_budget && self.extend_step >= self.probe_budget
+    }
+}
+
 /// Top-level experiment config.
 #[derive(Debug, Clone)]
 pub struct Config {
@@ -371,6 +456,30 @@ recall_targets = [0.5, 0.9]
     fn from_path_reports_missing_file() {
         let err = Config::from_path("/no/such/config.toml").unwrap_err();
         assert!(format!("{err:#}").contains("/no/such/config.toml"));
+    }
+
+    #[test]
+    fn query_params_resolve_defaults_and_clamps() {
+        let cfg = ServeConfig { probe_budget: 2000, top_k: 10, ..Default::default() };
+        let rp = QueryParams::default().resolve(&cfg);
+        assert_eq!((rp.top_k, rp.probe_budget), (10, 2000));
+        assert_eq!((rp.min_candidates, rp.extend_step), (2000, 2000));
+        assert!(rp.one_shot());
+        assert!(QueryParams::default().is_default());
+        assert!(!QueryParams::new().with_top_k(10).is_default());
+        // Per-request overrides win over the serving defaults...
+        let rp = QueryParams::new().with_top_k(3).with_probe_budget(50).resolve(&cfg);
+        assert_eq!((rp.top_k, rp.probe_budget), (3, 50));
+        // ... and inconsistent combinations are clamped, not rejected.
+        let rp = QueryParams::new().with_top_k(100).with_probe_budget(5).resolve(&cfg);
+        assert_eq!(rp.probe_budget, 100);
+        let rp = QueryParams::new().with_min_candidates(0).with_extend_step(0).resolve(&cfg);
+        assert_eq!(rp.min_candidates, 10); // floor: at least top_k
+        assert_eq!(rp.extend_step, 1);
+        // An early-stop target below the budget leaves one-shot mode.
+        let rp = QueryParams::new().with_min_candidates(64).with_extend_step(16).resolve(&cfg);
+        assert!(!rp.one_shot());
+        assert_eq!((rp.min_candidates, rp.extend_step), (64, 16));
     }
 
     #[test]

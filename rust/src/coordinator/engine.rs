@@ -7,12 +7,12 @@
 
 use std::sync::Arc;
 
-use crate::config::ServeConfig;
+use crate::config::{QueryParams, ResolvedQueryParams, ServeConfig};
 use crate::coordinator::metrics::Metrics;
 use crate::data::Dataset;
 use crate::hash::{Code128, Code256, CodeWord, ItemHasher, NativeHasher, MAX_CODE_BITS};
 use crate::index::range::{RangeLshIndex, RangeLshParams};
-use crate::index::{AnyRangeLshIndex, CodeProbe};
+use crate::index::{AnyRangeLshIndex, CodeProbe, Prober};
 use crate::runtime::PjrtScorer;
 use crate::{ItemId, Result};
 
@@ -89,17 +89,50 @@ impl<C: CodeWord> SearchEngine<C> {
         &self.dataset
     }
 
-    /// Search a single query (hashes natively; the batched path is the
-    /// production route).
+    /// Search a single query with the serving defaults (hashes natively;
+    /// the batched path is the production route).
     pub fn search(&self, query: &[f32]) -> Result<Vec<SearchResult>> {
-        Ok(self.search_batch(query)?.pop().expect("one query in, one out"))
+        self.search_with(query, &QueryParams::default())
     }
 
-    /// Search a batch of queries laid out row-major (`rows.len()` must be
-    /// a multiple of the dataset dim). Hashing is one bulk hasher call
-    /// (one or more PJRT blocks); probe + re-rank fan out on the scoped
-    /// thread pool, each worker reusing its thread-local candidate buffer.
+    /// Search a single query with per-request overrides of the serving
+    /// defaults (k, probe budget, early-stop target, extend step).
+    pub fn search_with(&self, query: &[f32], params: &QueryParams) -> Result<Vec<SearchResult>> {
+        Ok(self
+            .search_batch_params(query, std::slice::from_ref(params))?
+            .pop()
+            .expect("one query in, one out"))
+    }
+
+    /// Search a batch of queries laid out row-major with the serving
+    /// defaults (`rows.len()` must be a multiple of the dataset dim).
     pub fn search_batch(&self, rows: &[f32]) -> Result<Vec<Vec<SearchResult>>> {
+        self.search_batch_params(rows, &[])
+    }
+
+    /// [`Self::search_batch`] with one [`QueryParams`] override applied
+    /// to every query of the batch.
+    pub fn search_batch_with(
+        &self,
+        rows: &[f32],
+        params: &QueryParams,
+    ) -> Result<Vec<Vec<SearchResult>>> {
+        self.search_batch_params(rows, std::slice::from_ref(params))
+    }
+
+    /// Batched search with per-query parameter overrides. `params` may be
+    /// empty (serving defaults for every query), length 1 (one override
+    /// for the whole batch), or one entry per query. Hashing is one bulk
+    /// hasher call (one or more PJRT blocks); probe + re-rank fan out on
+    /// the scoped thread pool, each worker reusing its thread-local
+    /// candidate buffers. Uniform one-shot parameterizations keep the
+    /// batched codes-vector scan; per-query overrides and early-stop
+    /// targets probe through resumable sessions instead.
+    pub fn search_batch_params(
+        &self,
+        rows: &[f32],
+        params: &[QueryParams],
+    ) -> Result<Vec<Vec<SearchResult>>> {
         let dim = self.dataset.dim();
         anyhow::ensure!(
             !rows.is_empty() && rows.len() % dim == 0,
@@ -107,9 +140,29 @@ impl<C: CodeWord> SearchEngine<C> {
             rows.len()
         );
         let n = rows.len() / dim;
+        anyhow::ensure!(
+            params.len() <= 1 || params.len() == n,
+            "params length {} is neither 0/1 nor the query count {n}",
+            params.len()
+        );
         let t0 = std::time::Instant::now();
         let codes = self.hasher.hash_queries(rows)?;
         self.metrics.record_batch(n);
+
+        // One resolved parameter set for the whole batch when possible —
+        // this is what keeps the batched probe fast path.
+        let uniform: Option<ResolvedQueryParams> = match params {
+            [] => Some(QueryParams::default().resolve(&self.cfg)),
+            [p] => Some(p.resolve(&self.cfg)),
+            [first, rest @ ..] if rest.iter().all(|p| p == first) => Some(first.resolve(&self.cfg)),
+            _ => None,
+        };
+        let resolve_at = |qi: usize| -> ResolvedQueryParams {
+            match uniform {
+                Some(rp) => rp,
+                None => params[qi].resolve(&self.cfg),
+            }
+        };
 
         // Fan the batch out in worker-sized chunks: each worker probes
         // its whole chunk through one [`CodeProbe::probe_batch_with_codes`]
@@ -117,7 +170,6 @@ impl<C: CodeWord> SearchEngine<C> {
         // once per chunk instead of once per query — then re-ranks each
         // query. Each probe costs milliseconds at paper scale, so even
         // tiny batches fan out (chunks of at most 16 queries, cutoff 1).
-        let budget = self.cfg.probe_budget;
         let chunk = n.div_ceil(crate::util::par::n_threads()).clamp(1, 16);
         let n_chunks = n.div_ceil(chunk);
         let per_chunk: Vec<Vec<Vec<SearchResult>>> =
@@ -131,10 +183,25 @@ impl<C: CodeWord> SearchEngine<C> {
                     for buf in bufs[..hi - lo].iter_mut() {
                         buf.clear();
                     }
-                    self.index.probe_batch_with_codes(&codes[lo..hi], budget, &mut bufs[..hi - lo]);
-                    let mut scores: Vec<f32> = Vec::with_capacity(self.cfg.top_k);
+                    match uniform {
+                        Some(rp) if rp.one_shot() => {
+                            self.index.probe_batch_with_codes(
+                                &codes[lo..hi],
+                                rp.probe_budget,
+                                &mut bufs[..hi - lo],
+                            );
+                        }
+                        _ => {
+                            for qi in lo..hi {
+                                let rp = resolve_at(qi);
+                                self.probe_one(codes[qi], &rp, &mut bufs[qi - lo]);
+                            }
+                        }
+                    }
+                    let mut scores: Vec<f32> = Vec::new();
                     (lo..hi)
                         .map(|qi| {
+                            let rp = resolve_at(qi);
                             let q = &rows[qi * dim..(qi + 1) * dim];
                             let cands = &mut bufs[qi - lo];
                             let probed = cands.len();
@@ -145,7 +212,7 @@ impl<C: CodeWord> SearchEngine<C> {
                                 &self.dataset,
                                 q,
                                 cands,
-                                self.cfg.top_k,
+                                rp.top_k,
                                 &mut scores,
                             );
                             self.metrics
@@ -160,6 +227,30 @@ impl<C: CodeWord> SearchEngine<C> {
                 })
             });
         Ok(per_chunk.into_iter().flatten().collect())
+    }
+
+    /// Probe one query under resolved per-request params. One-shot
+    /// parameterizations take the classic probe; early-stop/chunked ones
+    /// open a resumable session and extend it in `extend_step` slices
+    /// until `min_candidates` are gathered, the budget is spent, or the
+    /// index runs dry.
+    fn probe_one(&self, qcode: C, rp: &ResolvedQueryParams, out: &mut Vec<ItemId>) {
+        if rp.one_shot() {
+            self.index.probe_with_code(qcode, rp.probe_budget, out);
+            return;
+        }
+        let mut session = self.index.prober_with_code(qcode);
+        let mut emitted = 0usize;
+        let mut spent = 0usize;
+        while spent < rp.probe_budget && emitted < rp.min_candidates {
+            let step = rp.extend_step.min(rp.probe_budget - spent);
+            let got = session.extend(step, out);
+            emitted += got;
+            spent += step;
+            if got < step {
+                break; // index exhausted
+            }
+        }
     }
 }
 
@@ -250,10 +341,16 @@ impl AnyEngine {
     }
 
     pub fn search(&self, query: &[f32]) -> Result<Vec<SearchResult>> {
+        self.search_with(query, &QueryParams::default())
+    }
+
+    /// Width-erased [`SearchEngine::search_with`]: per-request overrides
+    /// of the serving defaults.
+    pub fn search_with(&self, query: &[f32], params: &QueryParams) -> Result<Vec<SearchResult>> {
         match self {
-            Self::W64(e) => e.search(query),
-            Self::W128(e) => e.search(query),
-            Self::W256(e) => e.search(query),
+            Self::W64(e) => e.search_with(query, params),
+            Self::W128(e) => e.search_with(query, params),
+            Self::W256(e) => e.search_with(query, params),
         }
     }
 
@@ -262,6 +359,19 @@ impl AnyEngine {
             Self::W64(e) => e.search_batch(rows),
             Self::W128(e) => e.search_batch(rows),
             Self::W256(e) => e.search_batch(rows),
+        }
+    }
+
+    /// Width-erased [`SearchEngine::search_batch_with`].
+    pub fn search_batch_with(
+        &self,
+        rows: &[f32],
+        params: &QueryParams,
+    ) -> Result<Vec<Vec<SearchResult>>> {
+        match self {
+            Self::W64(e) => e.search_batch_with(rows, params),
+            Self::W128(e) => e.search_batch_with(rows, params),
+            Self::W256(e) => e.search_batch_with(rows, params),
         }
     }
 }
@@ -340,7 +450,8 @@ mod tests {
         use crate::index::simple::{SimpleLshIndex, SimpleLshParams};
         let d = Arc::new(synthetic::longtail_sift(1500, 16, 20));
         let h = Arc::new(NativeHasher::<u64>::new(16, 64, 21));
-        let idx = Arc::new(SimpleLshIndex::build(&d, h.as_ref(), SimpleLshParams::new(16)).unwrap());
+        let idx =
+            Arc::new(SimpleLshIndex::build(&d, h.as_ref(), SimpleLshParams::new(16)).unwrap());
         let cfg = ServeConfig { probe_budget: 200, top_k: 10, ..Default::default() };
         let e = SearchEngine::new(idx, d, h, cfg).unwrap();
         let q = synthetic::gaussian_queries(9, 16, 22);
@@ -349,6 +460,80 @@ mod tests {
         for qi in 0..9 {
             assert_eq!(batch[qi], e.search(q.row(qi)).unwrap(), "query {qi}");
         }
+    }
+
+    #[test]
+    fn per_request_params_override_serving_defaults() {
+        let (d, e) = engine(500);
+        let q = synthetic::gaussian_queries(1, 16, 30);
+        // k override: fewer results than the engine default of 10.
+        let res = e.search_with(q.row(0), &QueryParams::new().with_top_k(3)).unwrap();
+        assert_eq!(res.len(), 3);
+        // Budget override to exhaustive recovers the exact top-k even
+        // though the engine default budget is 500.
+        let gt = crate::eval::exact_topk(&d, &q, 10);
+        let res = e
+            .search_with(q.row(0), &QueryParams::new().with_probe_budget(usize::MAX))
+            .unwrap();
+        let ids: Vec<ItemId> = res.iter().map(|r| r.id).collect();
+        assert_eq!(ids, gt[0]);
+    }
+
+    #[test]
+    fn session_probing_matches_one_shot_results() {
+        // extend_step 1 with min_candidates == budget walks the whole
+        // budget through a session one candidate at a time; the answers
+        // must be identical to the classic one-shot probe.
+        let (_, e) = engine(300);
+        let q = synthetic::gaussian_queries(4, 16, 31);
+        let chunked = QueryParams::new().with_extend_step(1).with_min_candidates(300);
+        for qi in 0..q.len() {
+            let want = e.search(q.row(qi)).unwrap();
+            let got = e.search_with(q.row(qi), &chunked).unwrap();
+            assert_eq!(got, want, "query {qi}");
+        }
+    }
+
+    #[test]
+    fn min_candidates_early_stop_is_a_prefix_of_the_stream() {
+        // Early stop probes fewer items but the candidates it re-ranks
+        // are a prefix of the one-shot probe stream, so every returned id
+        // must also be in the full-budget answer's candidate set.
+        let (_, e) = engine(400);
+        let q = synthetic::gaussian_queries(1, 16, 32);
+        let adaptive = QueryParams::new().with_min_candidates(50).with_extend_step(16);
+        let res = e.search_with(q.row(0), &adaptive).unwrap();
+        assert_eq!(res.len(), 10);
+        for w in res.windows(2) {
+            assert!(w[0].score >= w[1].score);
+        }
+        // Determinism: the same request twice gives the same answer.
+        assert_eq!(res, e.search_with(q.row(0), &adaptive).unwrap());
+    }
+
+    #[test]
+    fn heterogeneous_batch_params_match_single_queries() {
+        let (_, e) = engine(300);
+        let q = synthetic::gaussian_queries(6, 16, 33);
+        let params: Vec<QueryParams> = (0..6)
+            .map(|i| match i % 3 {
+                0 => QueryParams::default(),
+                1 => QueryParams::new().with_top_k(1 + i),
+                _ => QueryParams::new().with_probe_budget(100 + i),
+            })
+            .collect();
+        let batch = e.search_batch_params(q.flat(), &params).unwrap();
+        assert_eq!(batch.len(), 6);
+        for (qi, p) in params.iter().enumerate() {
+            let single = e.search_with(q.row(qi), p).unwrap();
+            assert_eq!(batch[qi], single, "query {qi}");
+        }
+        // Length-1 params slice applies to the whole batch.
+        let uniform = QueryParams::new().with_top_k(2);
+        let batch = e.search_batch_with(q.flat(), &uniform).unwrap();
+        assert!(batch.iter().all(|r| r.len() == 2));
+        // Wrong params length is rejected.
+        assert!(e.search_batch_params(q.flat(), &params[..3]).is_err());
     }
 
     #[test]

@@ -3,7 +3,9 @@
 //!
 //! - [`engine::SearchEngine`] — the synchronous core: hash → probe →
 //!   exact re-rank. Query hashing goes through the AOT Pallas kernel
-//!   (PJRT) when batched, the native path for singles.
+//!   (PJRT) when batched, the native path for singles. Every entry point
+//!   takes optional per-request [`QueryParams`] overriding the engine's
+//!   `ServeConfig` defaults (k, probe budget, early-stop target).
 //! - [`batcher`] / [`server`] — the async front: a tokio request loop with
 //!   a dynamic batcher (flush on size or deadline, vLLM-router style) that
 //!   amortises PJRT query hashing across concurrent requests.
@@ -17,6 +19,7 @@ pub mod metrics;
 pub mod router;
 pub mod server;
 
+pub use crate::config::{QueryParams, ResolvedQueryParams};
 pub use batcher::BatchPolicy;
 pub use engine::{AnyEngine, SearchEngine, SearchResult};
 pub use metrics::{Metrics, MetricsSnapshot};

@@ -7,6 +7,7 @@
 
 use std::sync::Arc;
 
+use crate::config::QueryParams;
 use crate::coordinator::engine::{SearchEngine, SearchResult};
 use crate::hash::CodeWord;
 use crate::{ItemId, Result};
@@ -41,16 +42,25 @@ impl<C: CodeWord> ShardedRouter<C> {
     /// (Algorithm 2's "select the optimal one from the answers of all
     /// sub-datasets", lifted to the shard level.)
     pub fn query(&self, query: &[f32]) -> Result<Vec<SearchResult>> {
-        let mut merged: Vec<SearchResult> = Vec::with_capacity(self.top_k * self.shards.len());
+        self.query_with(query, &QueryParams::default())
+    }
+
+    /// [`Self::query`] with per-request overrides: each shard probes and
+    /// re-ranks under `params` (its own engine defaults filling the
+    /// `None` fields), and the merge keeps `params.top_k` results (the
+    /// router's construction-time `top_k` when unset).
+    pub fn query_with(&self, query: &[f32], params: &QueryParams) -> Result<Vec<SearchResult>> {
+        let top_k = params.top_k.unwrap_or(self.top_k).max(1);
+        let mut merged: Vec<SearchResult> = Vec::with_capacity(top_k * self.shards.len());
         for shard in &self.shards {
-            let local = shard.engine.search(query)?;
+            let local = shard.engine.search_with(query, params)?;
             merged.extend(local.into_iter().map(|r| SearchResult {
                 id: r.id + shard.id_offset,
                 score: r.score,
             }));
         }
         merged.sort_by(|a, b| b.score.total_cmp(&a.score).then(a.id.cmp(&b.id)));
-        merged.truncate(self.top_k);
+        merged.truncate(top_k);
         Ok(merged)
     }
 }
@@ -105,6 +115,30 @@ mod tests {
         .unwrap();
         let q = synthetic::gaussian_queries(1, 8, 3);
         assert_eq!(router.query(q.row(0)).unwrap().len(), 3);
+    }
+
+    #[test]
+    fn per_request_top_k_overrides_router_default() {
+        let full = synthetic::longtail_sift(400, 8, 4);
+        let half = 200 * 8;
+        let d1 = Arc::new(Dataset::from_flat(8, full.flat()[..half].to_vec()));
+        let d2 = Arc::new(Dataset::from_flat(8, full.flat()[half..].to_vec()));
+        let router = ShardedRouter::new(
+            vec![
+                Shard { engine: make_engine(d1), id_offset: 0 },
+                Shard { engine: make_engine(d2), id_offset: 200 },
+            ],
+            5,
+        )
+        .unwrap();
+        let q = synthetic::gaussian_queries(3, 8, 5);
+        let gt = crate::eval::exact_topk(&full, &q, 3);
+        let params = QueryParams::new().with_top_k(3);
+        for qi in 0..q.len() {
+            let got: Vec<ItemId> =
+                router.query_with(q.row(qi), &params).unwrap().iter().map(|r| r.id).collect();
+            assert_eq!(got, gt[qi], "query {qi}");
+        }
     }
 
     #[test]

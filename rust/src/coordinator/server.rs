@@ -14,6 +14,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::anyhow;
 
+use crate::config::QueryParams;
 use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::engine::{AnyEngine, SearchEngine, SearchResult};
 use crate::coordinator::metrics::MetricsSnapshot;
@@ -22,6 +23,9 @@ use crate::Result;
 
 struct Job {
     query: Vec<f32>,
+    /// Per-request overrides of the engine's serving defaults; requests
+    /// with different parameters still share the batch's hash pass.
+    params: QueryParams,
     reply: mpsc::Sender<Result<Vec<SearchResult>>>,
     enqueued: Instant,
 }
@@ -47,13 +51,21 @@ impl<C: CodeWord> Clone for ServerHandle<C> {
 }
 
 impl<C: CodeWord> ServerHandle<C> {
-    /// Submit one query and wait for its top-k.
+    /// Submit one query and wait for its top-k (serving defaults).
     pub fn query(&self, query: Vec<f32>) -> Result<Vec<SearchResult>> {
+        self.query_with(query, QueryParams::default())
+    }
+
+    /// Submit one query with per-request overrides (k, probe budget,
+    /// early-stop target) and wait for its answer. Requests with
+    /// different parameters batch together — hashing is shared, probe and
+    /// re-rank honour each request's own resolved parameters.
+    pub fn query_with(&self, query: Vec<f32>, params: QueryParams) -> Result<Vec<SearchResult>> {
         let (reply_tx, reply_rx) = mpsc::channel();
         self.tx
             .lock()
             .unwrap()
-            .send(Job { query, reply: reply_tx, enqueued: Instant::now() })
+            .send(Job { query, params, reply: reply_tx, enqueued: Instant::now() })
             .map_err(|_| anyhow!("server is shut down"))?;
         reply_rx
             .recv()
@@ -134,7 +146,8 @@ fn batch_loop<C: CodeWord>(
         // Flush.
         let batch = std::mem::take(&mut pending);
         let rows: Vec<f32> = batch.iter().flat_map(|j| j.query.iter().copied()).collect();
-        match engine.search_batch(&rows) {
+        let params: Vec<QueryParams> = batch.iter().map(|j| j.params).collect();
+        match engine.search_batch_params(&rows, &params) {
             Ok(per_query) => {
                 debug_assert_eq!(per_query.len(), batch.len());
                 for (job, res) in batch.into_iter().zip(per_query) {
@@ -162,10 +175,23 @@ pub fn drive_any(
     queries: &crate::data::Dataset,
     clients: usize,
 ) -> Result<(Vec<Vec<SearchResult>>, Duration)> {
+    drive_any_with(engine, policy, queries, clients, QueryParams::default())
+}
+
+/// [`drive_any`] with one [`QueryParams`] override applied to every
+/// request (the CLI's `--k` / `--budget` / `--min-candidates` /
+/// `--extend-step` flags).
+pub fn drive_any_with(
+    engine: &AnyEngine,
+    policy: BatchPolicy,
+    queries: &crate::data::Dataset,
+    clients: usize,
+    params: QueryParams,
+) -> Result<(Vec<Vec<SearchResult>>, Duration)> {
     match engine {
-        AnyEngine::W64(e) => drive_workload(e.clone(), policy, queries, clients),
-        AnyEngine::W128(e) => drive_workload(e.clone(), policy, queries, clients),
-        AnyEngine::W256(e) => drive_workload(e.clone(), policy, queries, clients),
+        AnyEngine::W64(e) => drive_workload_with(e.clone(), policy, queries, clients, params),
+        AnyEngine::W128(e) => drive_workload_with(e.clone(), policy, queries, clients, params),
+        AnyEngine::W256(e) => drive_workload_with(e.clone(), policy, queries, clients, params),
     }
 }
 
@@ -176,6 +202,17 @@ pub fn drive_workload<C: CodeWord>(
     policy: BatchPolicy,
     queries: &crate::data::Dataset,
     clients: usize,
+) -> Result<(Vec<Vec<SearchResult>>, Duration)> {
+    drive_workload_with(engine, policy, queries, clients, QueryParams::default())
+}
+
+/// [`drive_workload`] with one [`QueryParams`] override on every request.
+pub fn drive_workload_with<C: CodeWord>(
+    engine: Arc<SearchEngine<C>>,
+    policy: BatchPolicy,
+    queries: &crate::data::Dataset,
+    clients: usize,
+    params: QueryParams,
 ) -> Result<(Vec<Vec<SearchResult>>, Duration)> {
     let clients = clients.max(1);
     let handle = QueryServer::spawn(engine, policy);
@@ -193,7 +230,7 @@ pub fn drive_workload<C: CodeWord>(
                 let base = t * chunk;
                 for (i, slot) in block.iter_mut().enumerate() {
                     let qi = base + i;
-                    *slot = Some(h.query(queries.row(qi).to_vec())?);
+                    *slot = Some(h.query_with(queries.row(qi).to_vec(), params)?);
                 }
                 Ok(())
             }));
@@ -296,6 +333,37 @@ mod tests {
         for qi in 0..q.len() {
             assert_eq!(results[qi], engine.search(q.row(qi)).unwrap(), "query {qi}");
         }
+    }
+
+    #[test]
+    fn per_request_params_batch_together() {
+        // Requests with different k/budget share the batcher; each reply
+        // honours its own parameters and matches the direct engine call.
+        let eng = engine();
+        let policy = BatchPolicy::new(16, Duration::from_millis(10));
+        let handle = QueryServer::spawn(eng.clone(), policy);
+        let q = synthetic::gaussian_queries(12, 8, 8);
+        let param_for = |qi: usize| match qi % 3 {
+            0 => QueryParams::default(),
+            1 => QueryParams::new().with_top_k(1 + qi % 4),
+            _ => QueryParams::new().with_probe_budget(150 + qi),
+        };
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..q.len())
+                .map(|qi| {
+                    let h = handle.clone();
+                    let row = q.row(qi).to_vec();
+                    scope.spawn(move || h.query_with(row, param_for(qi)).unwrap())
+                })
+                .collect();
+            for (qi, th) in handles.into_iter().enumerate() {
+                let got = th.join().unwrap();
+                let want = eng.search_with(q.row(qi), &param_for(qi)).unwrap();
+                assert_eq!(got, want, "query {qi}");
+            }
+        });
+        let snap = eng.metrics().snapshot();
+        assert!(snap.queries >= 12);
     }
 
     #[test]

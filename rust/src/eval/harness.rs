@@ -65,6 +65,16 @@ impl ExperimentResult {
 /// original codegen — then `Code128` / `Code256`). The floor-hash
 /// baselines (L2-ALSH family) key buckets by integer vectors, not packed
 /// codes, so any `K` within range works unchanged.
+///
+/// Wide-code fairness convention (`eval --compare` at L > 64): the
+/// floor-hash baselines always get **K = L hashes** — `code_bits` floor
+/// hashes against `code_bits` sign bits, at every width (the paper's
+/// experiment-code convention, now explicit for Code128/Code256). Each
+/// floor hash carries at least as much information as one sign bit
+/// (its integer value subsumes the sign), so K = L never *under*-equips
+/// the baseline; at wide L it if anything over-equips it, which is the
+/// conservative direction for the paper's claim. The
+/// `floor_hash_baselines_use_k_equals_l_at_wide_codes` test pins this.
 pub fn build_index(dataset: &Dataset, spec: &CurveSpec) -> Result<Box<dyn MipsIndex>> {
     anyhow::ensure!(
         spec.code_bits >= 1 && spec.code_bits <= MAX_CODE_BITS,
@@ -255,6 +265,24 @@ mod tests {
                 "{algo} L={bits}: full probe must reach recall 1, got {}",
                 res.curve.final_recall()
             );
+        }
+    }
+
+    #[test]
+    fn floor_hash_baselines_use_k_equals_l_at_wide_codes() {
+        // The wide-code fairness convention: at L > 64 the L2-ALSH family
+        // gets exactly K = L floor hashes, mirroring L sign bits.
+        let d = synthetic::longtail_sift(200, 8, 9);
+        for bits in [128usize, 256] {
+            for algo in [IndexAlgo::L2Alsh, IndexAlgo::RangedL2Alsh] {
+                let spec = CurveSpec::new(algo, bits, 4);
+                let idx = build_index(&d, &spec).unwrap();
+                assert_eq!(
+                    idx.stats().hash_bits,
+                    bits,
+                    "{algo:?} at L={bits} must get K = L floor hashes"
+                );
+            }
         }
     }
 

@@ -6,7 +6,7 @@
 //! averaged over queries.
 
 use crate::data::Dataset;
-use crate::index::MipsIndex;
+use crate::index::{MipsIndex, Prober};
 use crate::util::par;
 use crate::ItemId;
 
@@ -57,6 +57,15 @@ pub fn geometric_checkpoints(lo: usize, hi: usize, per_decade: usize) -> Vec<usi
 
 /// Measure the recall curve of `index` against exact `ground_truth`
 /// (each query's true top-k, any k >= 1). Parallel over queries.
+///
+/// The budget sweep opens **one probe session per query**
+/// ([`MipsIndex::prober`]) and extends it straight to the deepest
+/// checkpoint — the whole checkpoint grid is then read off that single
+/// candidate stream. (Extending checkpoint-by-checkpoint would work too,
+/// but each small-budget extend sorts ranges to a shallow materialization
+/// floor that the next checkpoint undercuts, forcing re-sorts; since the
+/// sweep always needs the deepest budget anyway, one extend is both the
+/// simplest and the cheapest use of the session.)
 pub fn recall_curve(
     index: &dyn MipsIndex,
     queries: &Dataset,
@@ -75,9 +84,10 @@ pub fn recall_curve(
             let gt = &ground_truth[qi];
             let k = gt.len().max(1);
             let gt_set: std::collections::HashSet<ItemId> = gt.iter().copied().collect();
+            let mut prober = index.prober(queries.row(qi));
             let mut order = Vec::with_capacity(max_probe.min(index.len()));
-            index.probe(queries.row(qi), max_probe, &mut order);
-            // Cumulative hits at each checkpoint.
+            prober.extend(max_probe, &mut order);
+            // Cumulative hits at each checkpoint of the one stream.
             let mut hits = 0usize;
             let mut pos = 0usize;
             for (ci, &cp) in checkpoints.iter().enumerate() {

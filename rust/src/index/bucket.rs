@@ -17,8 +17,28 @@
 //! word, with the word count a compile-time constant.
 
 use crate::hash::CodeWord;
+use crate::index::traits::{drain_bucket, ProbeStats, Prober};
 use crate::util::fxhash::FxHashMap;
 use crate::ItemId;
+
+thread_local! {
+    /// Shared per-thread [`SortScratch`] pool. Probe sessions take a
+    /// scratch here at open and return it on drop, so the one-shot
+    /// `probe(...)` wrappers — which open and drop a session within one
+    /// call — stay alloc-free once a thread is warm, while long-lived
+    /// sessions keep their scratch across `extend` calls as the cursor
+    /// state requires.
+    static SCRATCH_POOL: std::cell::RefCell<Vec<SortScratch>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+pub(crate) fn take_scratch() -> SortScratch {
+    SCRATCH_POOL.with(|p| p.borrow_mut().pop()).unwrap_or_default()
+}
+
+pub(crate) fn return_scratch(s: SortScratch) {
+    SCRATCH_POOL.with(|p| p.borrow_mut().push(s));
+}
 
 /// Reusable buffers for [`BucketTable::counting_sort_by_matches`] /
 /// [`BucketTable::counting_sort_partial`].
@@ -346,6 +366,120 @@ impl<C: CodeWord> BucketTable<C> {
         }
         hist
     }
+
+    /// Open a resumable Hamming-ranked probe session for `qcode` — the
+    /// cursor shared by the single-table indexes (SIMPLE-LSH, SIGN-ALSH).
+    pub fn prober(&self, qcode: C) -> TableProber<'_, C> {
+        TableProber::new(self, qcode)
+    }
+}
+
+/// Resumable Hamming-ranked probe session over one [`BucketTable`]: the
+/// budget-adaptive counting sort plus a `(level, bucket, item)` cursor,
+/// so [`Prober::extend`] continues the best-match-first walk where the
+/// previous call stopped instead of rescanning. The [`SortScratch`] is
+/// taken from the per-thread pool at open and returned on drop.
+pub struct TableProber<'a, C: CodeWord> {
+    table: &'a BucketTable<C>,
+    qcode: C,
+    scratch: SortScratch,
+    /// Sort runs lazily at the first nonzero `extend`, so `extend(0)` on
+    /// a fresh session is a true no-op.
+    sorted: bool,
+    /// Current match-count level, walking from `bits` down to 0.
+    level: usize,
+    /// Offset into the current level's `order` slice.
+    bucket: usize,
+    /// Offset into the current bucket's items.
+    item: usize,
+    stats: ProbeStats,
+    done: bool,
+}
+
+impl<'a, C: CodeWord> TableProber<'a, C> {
+    fn new(table: &'a BucketTable<C>, qcode: C) -> Self {
+        Self {
+            table,
+            qcode,
+            scratch: take_scratch(),
+            sorted: false,
+            level: 0,
+            bucket: 0,
+            item: 0,
+            stats: ProbeStats::default(),
+            done: false,
+        }
+    }
+}
+
+impl<C: CodeWord> Drop for TableProber<'_, C> {
+    fn drop(&mut self) {
+        return_scratch(std::mem::take(&mut self.scratch));
+    }
+}
+
+impl<C: CodeWord> Prober for TableProber<'_, C> {
+    fn extend(&mut self, additional_budget: usize, out: &mut Vec<ItemId>) -> usize {
+        if additional_budget == 0 || self.done {
+            return 0;
+        }
+        let table = self.table;
+        if !self.sorted {
+            table.counting_sort_partial(self.qcode, additional_budget, &mut self.scratch);
+            self.sorted = true;
+            self.level = table.bits;
+            self.stats.ranges_sorted += 1;
+            self.stats.buckets_scanned += table.n_buckets();
+        }
+        let mut remaining = additional_budget;
+        loop {
+            if self.level < self.scratch.floor as usize {
+                // Resumed below the materialization floor: re-sort to
+                // full depth. Sorting is pure, so the slices already
+                // walked are reproduced bit-for-bit, and the floor drops
+                // to zero — at most one re-materialization per session.
+                table.counting_sort_by_matches(self.qcode, &mut self.scratch);
+                self.stats.ranges_resorted += 1;
+                self.stats.buckets_scanned += table.n_buckets();
+            }
+            let lo = self.scratch.levels[self.level] as usize;
+            let hi = self.scratch.levels[self.level + 1] as usize;
+            while self.bucket < hi - lo {
+                let b = self.scratch.order[lo + self.bucket] as usize;
+                let finished = drain_bucket(
+                    table.bucket_items(b),
+                    &mut self.item,
+                    &mut remaining,
+                    out,
+                    &mut self.stats,
+                );
+                if finished {
+                    self.bucket += 1;
+                }
+                if remaining == 0 {
+                    self.stats.items_emitted += additional_budget;
+                    return additional_budget;
+                }
+            }
+            self.bucket = 0;
+            if self.level == 0 {
+                self.done = true;
+                break;
+            }
+            self.level -= 1;
+        }
+        let emitted = additional_budget - remaining;
+        self.stats.items_emitted += emitted;
+        emitted
+    }
+
+    fn is_exhausted(&self) -> bool {
+        self.done
+    }
+
+    fn stats(&self) -> ProbeStats {
+        self.stats
+    }
 }
 
 #[cfg(test)]
@@ -621,6 +755,38 @@ mod tests {
         assert!(out.is_empty());
         let t = BucketTable::build(&[1u64, 2, 3], None, 8);
         t.counting_sort_batch(&[] as &[u64], 10, &mut []);
+    }
+
+    #[test]
+    fn table_prober_resumes_the_ranked_stream() {
+        let codes: Vec<u64> = (0..300).map(|i| i.wrapping_mul(0x2545F491) % 2048).collect();
+        let t = BucketTable::build(&codes, None, 11);
+        let q = 0x3C7u64;
+        let mut full = SortScratch::default();
+        t.counting_sort_by_matches(q, &mut full);
+        let mut all = Vec::new();
+        t.emit_ranked(&full, usize::MAX, &mut all);
+        assert_eq!(all.len(), 300);
+        for (b1, b2) in [(0usize, 5usize), (1, 1), (1, 299), (7, 300), (150, 150), (300, 10)] {
+            let mut out = Vec::new();
+            let mut p = t.prober(q);
+            assert_eq!(p.extend(b1, &mut out), b1.min(all.len()));
+            p.extend(b2, &mut out);
+            assert_eq!(out[..], all[..(b1 + b2).min(all.len())], "b1={b1} b2={b2}");
+        }
+        // Exhaustion: one short emission, then zeros forever.
+        let mut p = t.prober(q);
+        let mut out = Vec::new();
+        assert_eq!(p.extend(295, &mut out), 295);
+        assert!(!p.is_exhausted());
+        assert_eq!(p.extend(100, &mut out), 5);
+        assert!(p.is_exhausted());
+        assert_eq!(p.extend(100, &mut out), 0);
+        assert_eq!(out, all);
+        // extend(0) on a fresh session does no sorting work at all.
+        let mut p = t.prober(q);
+        assert_eq!(p.extend(0, &mut out), 0);
+        assert_eq!(p.stats(), ProbeStats::default());
     }
 
     #[test]

@@ -12,7 +12,8 @@
 
 use crate::data::Dataset;
 use crate::hash::L2Hash;
-use crate::index::{IndexStats, MipsIndex, SingleProbe};
+use crate::index::traits::drain_bucket;
+use crate::index::{IndexStats, MipsIndex, ProbeStats, Prober, SingleProbe};
 use crate::transform::L2AlshTransform;
 use crate::{ItemId, Result};
 
@@ -147,11 +148,86 @@ impl L2AlshIndex {
     }
 }
 
+/// Resumable L2-ALSH probe session: the query hash vector and the
+/// per-match-count bucket grouping are computed once at open; `extend`
+/// walks the ranked groups (best match count first) from a
+/// `(level, bucket, item)` cursor.
+struct L2Prober<'a> {
+    index: &'a L2AlshIndex,
+    groups: Vec<Vec<usize>>,
+    /// Current match count, walking from `k` down to 0.
+    level: usize,
+    bucket: usize,
+    item: usize,
+    stats: ProbeStats,
+    done: bool,
+}
+
+impl Prober for L2Prober<'_> {
+    fn extend(&mut self, additional_budget: usize, out: &mut Vec<ItemId>) -> usize {
+        if additional_budget == 0 || self.done {
+            return 0;
+        }
+        let index = self.index;
+        let mut remaining = additional_budget;
+        loop {
+            while self.bucket < self.groups[self.level].len() {
+                let bi = self.groups[self.level][self.bucket];
+                let finished = drain_bucket(
+                    &index.buckets[bi].items,
+                    &mut self.item,
+                    &mut remaining,
+                    out,
+                    &mut self.stats,
+                );
+                if finished {
+                    self.bucket += 1;
+                }
+                if remaining == 0 {
+                    self.stats.items_emitted += additional_budget;
+                    return additional_budget;
+                }
+            }
+            self.bucket = 0;
+            if self.level == 0 {
+                self.done = true;
+                break;
+            }
+            self.level -= 1;
+        }
+        let emitted = additional_budget - remaining;
+        self.stats.items_emitted += emitted;
+        emitted
+    }
+
+    fn is_exhausted(&self) -> bool {
+        self.done
+    }
+
+    fn stats(&self) -> ProbeStats {
+        self.stats
+    }
+}
+
 impl MipsIndex for L2AlshIndex {
     fn probe(&self, query: &[f32], budget: usize, out: &mut Vec<ItemId>) {
         let mut qhash = Vec::new();
         self.hash_query(query, &mut qhash);
         self.probe_with_hash(&qhash, budget, out);
+    }
+
+    fn prober(&self, query: &[f32]) -> Box<dyn Prober + '_> {
+        let mut qhash = Vec::new();
+        self.hash_query(query, &mut qhash);
+        Box::new(L2Prober {
+            index: self,
+            groups: self.group_by_matches(&qhash),
+            level: self.params.k,
+            bucket: 0,
+            item: 0,
+            stats: ProbeStats::default(),
+            done: false,
+        })
     }
 
     fn len(&self) -> usize {

@@ -11,7 +11,9 @@
 //!
 //! All indexes expose the same [`MipsIndex`] probing interface: given a
 //! query and a probe budget, emit candidate item ids in the index's probing
-//! order. Recall curves (Fig. 2/3) are computed from that order by
+//! order — one-shot via [`MipsIndex::probe`], or as a resumable session via
+//! [`MipsIndex::prober`] ([`Prober::extend`] continues the walk without
+//! rescanning). Recall curves (Fig. 2/3) are computed from that order by
 //! [`crate::eval`].
 
 pub mod bucket;
@@ -26,8 +28,11 @@ pub mod sign_alsh;
 pub mod simple;
 mod traits;
 
-pub use bucket::{BucketTable, SortScratch};
+pub use bucket::{BucketTable, SortScratch, TableProber};
 pub use metric::MetricOrder;
 pub use partition::{partition, Partition, PartitionScheme};
 pub use persist::{load_any_range_index, load_range_index, save_range_index, AnyRangeLshIndex};
-pub use traits::{CodeProbe, IndexStats, MipsIndex, ProbeStats, SingleProbe};
+pub use range::RangeProber;
+pub use traits::{
+    BufferedProber, CodeProbe, IndexStats, MipsIndex, ProbeStats, Prober, SingleProbe,
+};

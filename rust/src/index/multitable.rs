@@ -7,7 +7,7 @@ use crate::data::Dataset;
 use crate::hash::NativeHasher;
 use crate::index::range::{RangeLshIndex, RangeLshParams};
 use crate::index::simple::{SimpleLshIndex, SimpleLshParams};
-use crate::index::{IndexStats, MipsIndex, SingleProbe};
+use crate::index::{BufferedProber, IndexStats, MipsIndex, Prober, SingleProbe};
 use crate::{ItemId, Result};
 
 /// `T` independent single-probe tables of any [`SingleProbe`] index type
@@ -93,10 +93,16 @@ pub struct MultiTableIndex<T: SingleProbe>(pub MultiTable<T>);
 
 impl<T: SingleProbe> MipsIndex for MultiTableIndex<T> {
     fn probe(&self, query: &[f32], budget: usize, out: &mut Vec<ItemId>) {
+        self.prober(query).extend(budget, out);
+    }
+
+    fn prober(&self, query: &[f32]) -> Box<dyn Prober + '_> {
+        // The union is not incremental (dedup needs every table's exact
+        // bucket), so the session buffers it once and streams from the
+        // cursor — the rank order is first-table-that-surfaced-it.
         let mut all = Vec::new();
         self.0.probe_union(query, &mut all);
-        all.truncate(budget);
-        out.extend_from_slice(&all);
+        Box::new(BufferedProber::new(all))
     }
 
     fn len(&self) -> usize {

@@ -38,8 +38,9 @@ use crate::data::Dataset;
 use crate::hash::codes::partition_id_bits;
 use crate::hash::{CodeWord, ItemHasher, NativeHasher, Projection};
 use crate::index::partition::{partition, Partition, PartitionScheme};
+use crate::index::traits::drain_bucket;
 use crate::index::{
-    BucketTable, CodeProbe, IndexStats, MetricOrder, MipsIndex, ProbeStats, SingleProbe,
+    BucketTable, CodeProbe, IndexStats, MetricOrder, MipsIndex, ProbeStats, Prober, SingleProbe,
 };
 use crate::{ItemId, Result};
 
@@ -243,6 +244,10 @@ impl<C: CodeWord> MipsIndex for RangeLshIndex<C> {
         self.probe_with_code(self.hash_query(query), budget, out);
     }
 
+    fn prober(&self, query: &[f32]) -> Box<dyn Prober + '_> {
+        Box::new(self.session(self.hash_query(query)))
+    }
+
     fn len(&self) -> usize {
         self.n_items
     }
@@ -263,8 +268,8 @@ impl<C: CodeWord> MipsIndex for RangeLshIndex<C> {
     }
 }
 
-/// Per-thread probe scratch: one sort buffer per range plus the lazy
-/// probing state (which ranges have been sorted for the current query).
+/// Probe session scratch: one sort buffer per range plus the lazy
+/// probing state (which ranges have been sorted for the session's query).
 #[derive(Default)]
 struct ProbeScratch {
     per_sub: Vec<crate::index::bucket::SortScratch>,
@@ -284,119 +289,218 @@ impl ProbeScratch {
 }
 
 thread_local! {
-    /// Reusable per-thread probe scratch — probing makes no allocations
-    /// once a thread is warm (§Perf). The scratch is width-independent,
-    /// so every `C` instantiation shares it.
-    static SCRATCH: std::cell::RefCell<ProbeScratch> =
-        const { std::cell::RefCell::new(ProbeScratch { per_sub: Vec::new(), sorted: Vec::new() }) };
+    /// Per-thread [`ProbeScratch`] pool: a session takes a scratch at
+    /// open and returns it on drop, so the one-shot probe wrappers —
+    /// which open and drop a session within one call — make no
+    /// allocations once a thread is warm (§Perf), while long-lived
+    /// sessions keep their scratch alive across `extend` calls. The
+    /// scratch is width-independent, so every `C` instantiation shares
+    /// the pool.
+    static SCRATCH_POOL: std::cell::RefCell<Vec<ProbeScratch>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+fn take_probe_scratch(m: usize) -> ProbeScratch {
+    let mut sc = SCRATCH_POOL.with(|p| p.borrow_mut().pop()).unwrap_or_default();
+    sc.reset(m);
+    sc
+}
+
+fn return_probe_scratch(sc: ProbeScratch) {
+    SCRATCH_POOL.with(|p| p.borrow_mut().push(sc));
+}
+
+/// Resumable RANGE-LSH probe session (§3.3 + §Perf): keeps the lazy
+/// `(U_j, l)` schedule cursor and every range's budget-adaptive
+/// [`crate::index::SortScratch`] alive across [`Prober::extend`] calls,
+/// so asking for the *next* batch of candidates continues the walk where
+/// the previous call stopped — no range is rescanned, and ranges the
+/// schedule has not reached stay untouched. Created by
+/// [`RangeLshIndex::session`] (or the boxed trait forms
+/// [`MipsIndex::prober`] / [`CodeProbe::prober_with_code`]).
+pub struct RangeProber<'a, C: CodeWord = u64> {
+    index: &'a RangeLshIndex<C>,
+    qcode: C,
+    scratch: ProbeScratch,
+    /// Position in the pre-sorted `(U_j, l)` schedule.
+    sched_pos: usize,
+    /// Offset into the current schedule entry's `order` slice.
+    bucket: usize,
+    /// Offset into the current bucket's items.
+    item: usize,
+    stats: ProbeStats,
+    done: bool,
+}
+
+impl<'a, C: CodeWord> RangeProber<'a, C> {
+    fn new(index: &'a RangeLshIndex<C>, qcode: C) -> Self {
+        Self {
+            index,
+            qcode,
+            scratch: take_probe_scratch(index.subs.len()),
+            sched_pos: 0,
+            bucket: 0,
+            item: 0,
+            stats: ProbeStats::default(),
+            done: false,
+        }
+    }
+}
+
+impl<C: CodeWord> Drop for RangeProber<'_, C> {
+    fn drop(&mut self) {
+        return_probe_scratch(std::mem::take(&mut self.scratch));
+    }
+}
+
+impl<C: CodeWord> Prober for RangeProber<'_, C> {
+    /// Budget-adaptive lazy walk. Range `j` is counting-sorted only when
+    /// the schedule *first* touches it, with the budget still remaining
+    /// at that moment, and each sort materializes only the levels that
+    /// budget can reach ([`BucketTable::counting_sort_partial`]) — so a
+    /// small request sorts one or two ranges instead of all `m`.
+    ///
+    /// Within one `extend`, the walk never reads below a range's
+    /// materialization floor: the schedule visits a fixed range's levels
+    /// in strictly descending order (`ŝ` is strictly increasing in `l`
+    /// for fixed `U_j`), so reaching a level below the floor would mean
+    /// the >= budget items above it were all emitted and the call already
+    /// returned. Across `extend` calls the floor *can* be undercut — a
+    /// resumed session carries more budget than the range was sorted for
+    /// — and the walk then re-sorts that range to full depth, dropping
+    /// its floor to zero, so each range re-materializes at most once per
+    /// session. Sorting is pure, so the re-materialized slices agree
+    /// bit-for-bit with the earlier walk, and the candidate stream
+    /// remains element-for-element the eager oracle's
+    /// ([`RangeLshIndex::probe_with_code_eager`], property-tested).
+    fn extend(&mut self, additional_budget: usize, out: &mut Vec<ItemId>) -> usize {
+        if additional_budget == 0 || self.done {
+            return 0;
+        }
+        let index = self.index;
+        let entries = index.order.entries();
+        let mut remaining = additional_budget;
+        while self.sched_pos < entries.len() {
+            let (j, l) = entries[self.sched_pos];
+            let (j, l) = (j as usize, l as usize);
+            let sub = &index.subs[j];
+            if !self.scratch.sorted[j] {
+                sub.table.counting_sort_partial(
+                    self.qcode,
+                    remaining,
+                    &mut self.scratch.per_sub[j],
+                );
+                self.scratch.sorted[j] = true;
+                self.stats.ranges_sorted += 1;
+                self.stats.buckets_scanned += sub.table.n_buckets();
+            }
+            if l < self.scratch.per_sub[j].floor as usize {
+                // Session resumed below this range's floor: re-sort to
+                // full depth (floor drops to zero, so this happens at
+                // most once per range per session — see the method docs).
+                sub.table.counting_sort_by_matches(self.qcode, &mut self.scratch.per_sub[j]);
+                self.stats.ranges_resorted += 1;
+                self.stats.buckets_scanned += sub.table.n_buckets();
+            }
+            let s = &self.scratch.per_sub[j];
+            let lo = s.levels[l] as usize;
+            let hi = s.levels[l + 1] as usize;
+            while self.bucket < hi - lo {
+                let b = self.scratch.per_sub[j].order[lo + self.bucket] as usize;
+                let finished = drain_bucket(
+                    sub.table.bucket_items(b),
+                    &mut self.item,
+                    &mut remaining,
+                    out,
+                    &mut self.stats,
+                );
+                if finished {
+                    self.bucket += 1;
+                }
+                if remaining == 0 {
+                    self.stats.items_emitted += additional_budget;
+                    return additional_budget;
+                }
+            }
+            self.bucket = 0;
+            self.sched_pos += 1;
+        }
+        self.done = true;
+        let emitted = additional_budget - remaining;
+        self.stats.items_emitted += emitted;
+        emitted
+    }
+
+    fn is_exhausted(&self) -> bool {
+        self.done
+    }
+
+    fn stats(&self) -> ProbeStats {
+        self.stats
+    }
 }
 
 impl<C: CodeWord> RangeLshIndex<C> {
-    /// Budget-adaptive lazy probe (§3.3 + §Perf), with instrumentation.
-    ///
-    /// Walks the pre-sorted `(U_j, l)` schedule and counting-sorts range
-    /// `j` only when the schedule *first* touches it, passing the budget
-    /// still remaining at that moment — so a small-budget query sorts one
-    /// or two ranges instead of all `m`, and each sort materializes only
-    /// the levels its remaining budget can reach
-    /// ([`BucketTable::counting_sort_partial`]). The emitted candidate
-    /// stream is element-for-element identical to
-    /// [`Self::probe_with_code_eager`] at every budget (property-tested):
-    /// sorting is pure, so *when* a range is sorted cannot change what
-    /// its level slices contain.
-    ///
-    /// Safety of the partial sort: within a fixed range the schedule
-    /// visits levels in strictly descending order (`ŝ` is strictly
-    /// increasing in `l` for fixed `U_j`), so by the time the walk could
-    /// reach a level below a range's materialization floor, the >= budget
-    /// items materialized above it have all been emitted and the walk has
-    /// already returned.
+    /// Open a resumable probe session over a precomputed code — the
+    /// concrete-type form of [`CodeProbe::prober_with_code`] (no box),
+    /// used by the one-shot wrappers and the hotpath bench.
+    pub fn session(&self, qcode: C) -> RangeProber<'_, C> {
+        RangeProber::new(self, qcode)
+    }
+
+    /// One-shot probe with instrumentation: a fresh session extended once
+    /// by `budget` (the session *is* the probe implementation; this
+    /// wrapper exists for callers that want the final [`ProbeStats`]).
     pub fn probe_with_code_stats(
         &self,
         qcode: C,
         budget: usize,
         out: &mut Vec<ItemId>,
     ) -> ProbeStats {
-        let mut stats = ProbeStats::default();
-        if budget == 0 {
-            return stats;
-        }
-        SCRATCH.with(|scratch| {
-            let sc = &mut *scratch.borrow_mut();
-            sc.reset(self.subs.len());
-            let mut remaining = budget;
-            for &(j, l) in self.order.entries() {
-                let j = j as usize;
-                let sub = &self.subs[j];
-                if !sc.sorted[j] {
-                    sub.table.counting_sort_partial(qcode, remaining, &mut sc.per_sub[j]);
-                    sc.sorted[j] = true;
-                    stats.ranges_sorted += 1;
-                    stats.buckets_scanned += sub.table.n_buckets();
-                }
-                if l < sc.per_sub[j].floor {
-                    // Unreachable per the invariant above; fully sort
-                    // rather than read unmaterialized slices if it ever
-                    // breaks.
-                    debug_assert!(false, "materialization floor underrun (range {j}, level {l})");
-                    sub.table.counting_sort_by_matches(qcode, &mut sc.per_sub[j]);
-                    stats.buckets_scanned += sub.table.n_buckets();
-                }
-                let s = &sc.per_sub[j];
-                let (lo, hi) = (s.levels[l as usize] as usize, s.levels[l as usize + 1] as usize);
-                for &b in &s.order[lo..hi] {
-                    let bucket = sub.table.bucket_items(b as usize);
-                    let take = bucket.len().min(remaining);
-                    out.extend_from_slice(&bucket[..take]);
-                    remaining -= take;
-                    stats.buckets_probed += 1;
-                    if remaining == 0 {
-                        stats.items_emitted = budget;
-                        return;
-                    }
-                }
-            }
-            stats.items_emitted = budget - remaining;
-        });
-        stats
+        let mut session = self.session(qcode);
+        session.extend(budget, out);
+        session.stats()
     }
 
     /// The pre-lazy-refactor eager probe: counting-sort **every** range up
     /// front, then walk the schedule. Kept as the equivalence oracle for
     /// [`CodeProbe::probe_with_code`] (property tests assert the streams
-    /// are identical at every budget) and as the baseline the hotpath
-    /// bench's eager-vs-lazy probe-budget rows measure against.
+    /// are identical at every budget, one-shot or resumed) and as the
+    /// baseline the hotpath bench's eager-vs-lazy probe-budget rows
+    /// measure against.
     pub fn probe_with_code_eager(&self, qcode: C, budget: usize, out: &mut Vec<ItemId>) {
-        SCRATCH.with(|scratch| {
-            let sc = &mut *scratch.borrow_mut();
-            sc.reset(self.subs.len());
-            // Per-range counting sort: one O(total buckets) pass (§3.3).
-            for (sub, s) in self.subs.iter().zip(sc.per_sub.iter_mut()) {
-                sub.table.counting_sort_by_matches(qcode, s);
-            }
-            // Walk the pre-sorted (U_j, l) schedule.
-            let mut remaining = budget;
-            for &(j, l) in self.order.entries() {
-                let sub = &self.subs[j as usize];
-                let s = &sc.per_sub[j as usize];
-                let (lo, hi) = (s.levels[l as usize] as usize, s.levels[l as usize + 1] as usize);
-                for &b in &s.order[lo..hi] {
-                    let bucket = sub.table.bucket_items(b as usize);
-                    if remaining == 0 {
-                        return;
-                    }
-                    let take = bucket.len().min(remaining);
-                    out.extend_from_slice(&bucket[..take]);
-                    remaining -= take;
+        let mut sc = take_probe_scratch(self.subs.len());
+        // Per-range counting sort: one O(total buckets) pass (§3.3).
+        for (sub, s) in self.subs.iter().zip(sc.per_sub.iter_mut()) {
+            sub.table.counting_sort_by_matches(qcode, s);
+        }
+        // Walk the pre-sorted (U_j, l) schedule.
+        let mut remaining = budget;
+        'walk: for &(j, l) in self.order.entries() {
+            let sub = &self.subs[j as usize];
+            let s = &sc.per_sub[j as usize];
+            let (lo, hi) = (s.levels[l as usize] as usize, s.levels[l as usize + 1] as usize);
+            for &b in &s.order[lo..hi] {
+                let bucket = sub.table.bucket_items(b as usize);
+                if remaining == 0 {
+                    break 'walk;
                 }
+                let take = bucket.len().min(remaining);
+                out.extend_from_slice(&bucket[..take]);
+                remaining -= take;
             }
-        })
+        }
+        return_probe_scratch(sc);
     }
 }
 
 impl<C: CodeWord> CodeProbe<C> for RangeLshIndex<C> {
     fn probe_with_code(&self, qcode: C, budget: usize, out: &mut Vec<ItemId>) {
-        self.probe_with_code_stats(qcode, budget, out);
+        self.session(qcode).extend(budget, out);
+    }
+
+    fn prober_with_code(&self, qcode: C) -> Box<dyn Prober + '_> {
+        Box::new(self.session(qcode))
     }
 }
 
@@ -639,6 +743,51 @@ mod tests {
         let stats = idx.probe_with_code_stats(qcode, usize::MAX, &mut all);
         assert_eq!(stats.ranges_sorted, 32);
         assert_eq!(stats.items_emitted, d.len());
+    }
+
+    #[test]
+    fn session_resume_sorts_no_new_range_within_sorted_schedule() {
+        // The resumable-session contract from the API redesign: when the
+        // remaining schedule stays within ranges already sorted by an
+        // earlier extend, resuming sorts nothing new. L=8 with 32 ranges
+        // leaves 3 hash bits, so the ~94-item top range packs multi-item
+        // buckets; probing that bucket's own code keeps the schedule head
+        // inside the top range.
+        let d = synthetic::longtail_sift(3000, 8, 31);
+        let idx = build(&d, 8, 32);
+        let top = idx.n_ranges() - 1; // partitions ascend in norm
+        let (qcode, bucket_len) = idx
+            .sub_table(top)
+            .buckets()
+            .map(|(code, items)| (code, items.len()))
+            .max_by_key(|&(_, len)| len)
+            .expect("non-empty range");
+        assert!(bucket_len >= 2, "need a multi-item bucket for the resume check");
+        let mut session = idx.session(qcode);
+        let mut out = Vec::new();
+        session.extend(1, &mut out);
+        let first = session.stats();
+        assert_eq!(first.ranges_sorted, 1, "first extend sorts only the touched range");
+        assert_eq!(first.items_emitted, 1);
+        // Resume within the same exact-match bucket: no new range sort,
+        // no re-materialization, not even a new bucket scan.
+        session.extend(1, &mut out);
+        let second = session.stats();
+        assert_eq!(second.ranges_sorted, 1, "resume must not sort a new range");
+        assert_eq!(second.ranges_resorted, 0, "resume stayed above the floor");
+        assert_eq!(second.buckets_scanned, first.buckets_scanned);
+        assert_eq!(second.items_emitted, 2);
+        assert_eq!(out.len(), 2);
+        // Both candidates came from the one exact-match bucket, in bucket
+        // order — the same prefix the one-shot probe emits.
+        let mut oneshot = Vec::new();
+        idx.probe_with_code(qcode, 2, &mut oneshot);
+        assert_eq!(out, oneshot);
+        // Draining the session eventually touches every range exactly once.
+        session.extend(usize::MAX, &mut out);
+        let drained = session.stats();
+        assert_eq!(drained.ranges_sorted, 32);
+        assert_eq!(drained.items_emitted, d.len());
     }
 
     #[test]

@@ -21,7 +21,8 @@
 use crate::data::Dataset;
 use crate::index::l2alsh::{L2AlshIndex, L2AlshParams};
 use crate::index::partition::{partition, PartitionScheme};
-use crate::index::{IndexStats, MipsIndex};
+use crate::index::traits::drain_bucket;
+use crate::index::{IndexStats, MipsIndex, ProbeStats, Prober};
 use crate::theory::rho::f_r_inverse;
 use crate::{ItemId, Result};
 
@@ -120,12 +121,10 @@ impl RangedL2AlshIndex {
     pub fn schedule(&self) -> &[(u32, u32)] {
         &self.schedule
     }
-}
 
-impl MipsIndex for RangedL2AlshIndex {
-    fn probe(&self, query: &[f32], budget: usize, out: &mut Vec<ItemId>) {
-        // Group each range's buckets by match count once, then walk the
-        // pre-sorted estimated-IP schedule.
+    /// Group each range's buckets by match count against `query` — the
+    /// per-query half of probing, computed once per session.
+    fn group_query(&self, query: &[f32]) -> Vec<Vec<Vec<ItemId>>> {
         let k = self.params.inner.k;
         let mut per_range: Vec<Vec<Vec<ItemId>>> = Vec::with_capacity(self.subs.len());
         for (_, idx) in &self.subs {
@@ -138,16 +137,78 @@ impl MipsIndex for RangedL2AlshIndex {
             });
             per_range.push(groups);
         }
-        let mut remaining = budget;
-        for &(j, l) in &self.schedule {
-            let items = &per_range[j as usize][l as usize];
-            if remaining == 0 {
-                return;
-            }
-            let take = items.len().min(remaining);
-            out.extend_from_slice(&items[..take]);
-            remaining -= take;
+        per_range
+    }
+}
+
+/// Resumable ranged L2-ALSH probe session: per-range match-count groups
+/// are computed once at open; `extend` walks the pre-sorted estimated-IP
+/// `(j, l)` schedule from a cursor.
+struct RangedL2Prober<'a> {
+    index: &'a RangedL2AlshIndex,
+    per_range: Vec<Vec<Vec<ItemId>>>,
+    sched_pos: usize,
+    /// Offset into the current schedule entry's item list.
+    item: usize,
+    stats: ProbeStats,
+    done: bool,
+}
+
+impl Prober for RangedL2Prober<'_> {
+    fn extend(&mut self, additional_budget: usize, out: &mut Vec<ItemId>) -> usize {
+        if additional_budget == 0 || self.done {
+            return 0;
         }
+        let schedule = &self.index.schedule;
+        let mut remaining = additional_budget;
+        while self.sched_pos < schedule.len() {
+            let (j, l) = schedule[self.sched_pos];
+            let finished = drain_bucket(
+                &self.per_range[j as usize][l as usize],
+                &mut self.item,
+                &mut remaining,
+                out,
+                &mut self.stats,
+            );
+            if finished {
+                self.sched_pos += 1;
+            }
+            if remaining == 0 {
+                self.stats.items_emitted += additional_budget;
+                return additional_budget;
+            }
+        }
+        self.done = true;
+        let emitted = additional_budget - remaining;
+        self.stats.items_emitted += emitted;
+        emitted
+    }
+
+    fn is_exhausted(&self) -> bool {
+        self.done
+    }
+
+    fn stats(&self) -> ProbeStats {
+        self.stats
+    }
+}
+
+impl MipsIndex for RangedL2AlshIndex {
+    fn probe(&self, query: &[f32], budget: usize, out: &mut Vec<ItemId>) {
+        // Thin wrapper: a fresh session extended once (the grouping was
+        // per-probe work before the session refactor too).
+        self.prober(query).extend(budget, out);
+    }
+
+    fn prober(&self, query: &[f32]) -> Box<dyn Prober + '_> {
+        Box::new(RangedL2Prober {
+            index: self,
+            per_range: self.group_query(query),
+            sched_pos: 0,
+            item: 0,
+            stats: ProbeStats::default(),
+            done: false,
+        })
     }
 
     fn len(&self) -> usize {

@@ -8,7 +8,7 @@
 use crate::data::Dataset;
 use crate::hash::codes::MAX_CODE_BITS;
 use crate::hash::{CodeWord, Projection};
-use crate::index::{BucketTable, IndexStats, MipsIndex, SingleProbe, SortScratch};
+use crate::index::{BucketTable, IndexStats, MipsIndex, Prober, SingleProbe};
 use crate::transform::sign_alsh::SignAlshTransform;
 use crate::util::par;
 use crate::{ItemId, Result};
@@ -91,23 +91,16 @@ fn sign_project<C: CodeWord>(proj: &Projection, xt: &[f32]) -> C {
     C::pack_from_signs(acc)
 }
 
-thread_local! {
-    /// Reusable probe scratch (shared across widths) — probing allocates
-    /// nothing once a thread is warm, matching the SIMPLE/RANGE paths.
-    static SCRATCH: std::cell::RefCell<SortScratch> =
-        const { std::cell::RefCell::new(SortScratch::new()) };
-}
-
 impl<C: CodeWord> MipsIndex for SignAlshIndex<C> {
     fn probe(&self, query: &[f32], budget: usize, out: &mut Vec<ItemId>) {
-        let qcode = self.hash_query(query);
-        SCRATCH.with(|scratch| {
-            let s = &mut *scratch.borrow_mut();
-            // Budget-adaptive counting sort + Hamming-ranked emission,
-            // same machinery as the SIMPLE-LSH probe.
-            self.table.counting_sort_partial(qcode, budget, s);
-            self.table.emit_ranked(s, budget, out);
-        })
+        // Thin wrapper over a fresh session — budget-adaptive counting
+        // sort + Hamming-ranked emission, same machinery as SIMPLE-LSH,
+        // alloc-free once a thread is warm (pooled scratch).
+        self.table.prober(self.hash_query(query)).extend(budget, out);
+    }
+
+    fn prober(&self, query: &[f32]) -> Box<dyn Prober + '_> {
+        Box::new(self.table.prober(self.hash_query(query)))
     }
 
     fn len(&self) -> usize {

@@ -12,7 +12,7 @@ use std::sync::Arc;
 
 use crate::data::Dataset;
 use crate::hash::{CodeWord, ItemHasher, NativeHasher, Projection};
-use crate::index::{BucketTable, CodeProbe, IndexStats, MipsIndex, SingleProbe};
+use crate::index::{BucketTable, CodeProbe, IndexStats, MipsIndex, Prober, SingleProbe};
 use crate::{ItemId, Result};
 
 #[cfg(doc)]
@@ -112,6 +112,10 @@ impl<C: CodeWord> MipsIndex for SimpleLshIndex<C> {
         self.probe_with_code(self.hash_query(query), budget, out);
     }
 
+    fn prober(&self, query: &[f32]) -> Box<dyn Prober + '_> {
+        Box::new(self.table.prober(self.hash_query(query)))
+    }
+
     fn len(&self) -> usize {
         self.n_items
     }
@@ -128,26 +132,24 @@ impl<C: CodeWord> MipsIndex for SimpleLshIndex<C> {
 }
 
 thread_local! {
-    /// Per-thread sort scratch pool: slot 0 serves the single-query path,
-    /// the batched path grows the pool to one slot per in-flight query.
+    /// Per-thread sort scratch pool for the batched path: one slot per
+    /// in-flight query of the worker's current chunk. (The single-query
+    /// path runs through a [`crate::index::bucket::TableProber`] session,
+    /// whose scratch comes from the bucket module's shared pool.)
     static SCRATCH: std::cell::RefCell<Vec<crate::index::bucket::SortScratch>> =
         const { std::cell::RefCell::new(Vec::new()) };
 }
 
 impl<C: CodeWord> CodeProbe<C> for SimpleLshIndex<C> {
     fn probe_with_code(&self, qcode: C, budget: usize, out: &mut Vec<ItemId>) {
-        SCRATCH.with(|scratch| {
-            let pool = &mut *scratch.borrow_mut();
-            if pool.is_empty() {
-                pool.push(Default::default());
-            }
-            let s = &mut pool[0];
-            // Budget-adaptive: the counting sort materializes only the
-            // levels this budget can reach; Hamming ranking (most
-            // matching bits first) is the emit order.
-            self.table.counting_sort_partial(qcode, budget, s);
-            self.table.emit_ranked(s, budget, out);
-        })
+        // Thin wrapper over a fresh session: budget-adaptive counting
+        // sort + Hamming-ranked (most matching bits first) emission,
+        // alloc-free once a thread is warm (pooled scratch).
+        self.table.prober(qcode).extend(budget, out);
+    }
+
+    fn prober_with_code(&self, qcode: C) -> Box<dyn Prober + '_> {
+        Box::new(self.table.prober(qcode))
     }
 
     fn probe_batch_with_codes(&self, qcodes: &[C], budget: usize, outs: &mut [Vec<ItemId>]) {

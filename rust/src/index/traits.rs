@@ -3,12 +3,117 @@
 use crate::hash::CodeWord;
 use crate::ItemId;
 
+/// A resumable probing session over one query — the paper's query
+/// procedure is inherently incremental (Alg. 2 walks the ranked schedule
+/// and stops once enough candidates are gathered), and this is the API
+/// shape of that walk: ask for some candidates, look at them, ask for
+/// more without rescanning.
+///
+/// Obtained from [`MipsIndex::prober`] (raw query) or
+/// [`CodeProbe::prober_with_code`] (precomputed code). The session
+/// borrows the index; candidates across consecutive `extend` calls form
+/// the exact stream a single one-shot [`MipsIndex::probe`] with the
+/// summed budget would emit, element for element (property-tested in
+/// `tests/properties.rs`).
+pub trait Prober {
+    /// Append up to `additional_budget` *next* candidates in probing
+    /// order, continuing from where the previous call stopped. Returns
+    /// the number appended: fewer than requested exactly when the index
+    /// ran out of items during this call, `0` for every call thereafter
+    /// (and for `additional_budget == 0`, which is a true no-op — a fresh
+    /// session does no sorting work until the first nonzero request).
+    fn extend(&mut self, additional_budget: usize, out: &mut Vec<ItemId>) -> usize;
+
+    /// True once every indexed item has been emitted.
+    fn is_exhausted(&self) -> bool;
+
+    /// Cumulative instrumentation over every `extend` call so far.
+    fn stats(&self) -> ProbeStats;
+}
+
+/// Shared inner step of every session's walk: emit as much of `items` as
+/// `*remaining` allows, continuing from and advancing the within-bucket
+/// cursor, and keep the stats current (a bucket counts as probed when its
+/// first item is taken). Returns true when the bucket is fully consumed —
+/// the cursor is then reset to 0 and the caller advances to the next
+/// bucket. Must be called with `*remaining > 0` between checks.
+pub(crate) fn drain_bucket(
+    items: &[ItemId],
+    cursor: &mut usize,
+    remaining: &mut usize,
+    out: &mut Vec<ItemId>,
+    stats: &mut ProbeStats,
+) -> bool {
+    if *cursor == 0 && !items.is_empty() {
+        stats.buckets_probed += 1;
+    }
+    let take = (items.len() - *cursor).min(*remaining);
+    out.extend_from_slice(&items[*cursor..*cursor + take]);
+    *cursor += take;
+    *remaining -= take;
+    if *cursor == items.len() {
+        *cursor = 0;
+        true
+    } else {
+        false
+    }
+}
+
+/// [`Prober`] over a fully materialized candidate list — the fallback
+/// behind the default [`MipsIndex::prober`] (one eager full probe, then
+/// stream from the buffer) and the natural session for indexes whose
+/// probe is not incremental (the multi-table union).
+pub struct BufferedProber {
+    items: Vec<ItemId>,
+    pos: usize,
+}
+
+impl BufferedProber {
+    /// Wrap an already-ordered candidate list.
+    pub fn new(items: Vec<ItemId>) -> Self {
+        Self { items, pos: 0 }
+    }
+}
+
+impl Prober for BufferedProber {
+    fn extend(&mut self, additional_budget: usize, out: &mut Vec<ItemId>) -> usize {
+        let take = additional_budget.min(self.items.len() - self.pos);
+        out.extend_from_slice(&self.items[self.pos..self.pos + take]);
+        self.pos += take;
+        take
+    }
+
+    fn is_exhausted(&self) -> bool {
+        self.pos == self.items.len()
+    }
+
+    fn stats(&self) -> ProbeStats {
+        ProbeStats { items_emitted: self.pos, ..ProbeStats::default() }
+    }
+}
+
 /// A built MIPS index that can emit candidates in probing order.
 pub trait MipsIndex: Send + Sync {
     /// Append up to `budget` candidate item ids to `out`, in this index's
     /// probing order (best bucket first). Fewer than `budget` ids are
     /// appended only when the index is exhausted. Ids are unique per call.
+    ///
+    /// Thin one-shot wrapper: equivalent to opening a fresh
+    /// [`Self::prober`] session and extending it once by `budget`. Prefer
+    /// a session when the caller may come back for more candidates.
     fn probe(&self, query: &[f32], budget: usize, out: &mut Vec<ItemId>);
+
+    /// Open a resumable probing session for `query`.
+    ///
+    /// The default buffers one eager full probe (correct for any index);
+    /// every in-tree index overrides it with a true lazy cursor that
+    /// keeps its schedule position and sort scratch alive across
+    /// [`Prober::extend`] calls.
+    fn prober(&self, query: &[f32]) -> Box<dyn Prober + '_> {
+        let mut all = Vec::new();
+        self.probe(query, usize::MAX, &mut all);
+        Box::new(BufferedProber::new(all))
+    }
 
     /// Number of indexed items.
     fn len(&self) -> usize;
@@ -31,7 +136,20 @@ pub trait MipsIndex: Send + Sync {
 /// query — Python-free, matmul-batched.
 pub trait CodeProbe<C: CodeWord = u64>: MipsIndex {
     /// Probe with a pre-computed (unmasked, full-width) query code.
+    ///
+    /// Thin one-shot wrapper over [`Self::prober_with_code`]: a fresh
+    /// session extended once by `budget`.
     fn probe_with_code(&self, qcode: C, budget: usize, out: &mut Vec<ItemId>);
+
+    /// Open a resumable probing session over a pre-computed query code —
+    /// the engine-facing twin of [`MipsIndex::prober`]. The default
+    /// buffers one eager full probe; SIMPLE/RANGE override it with lazy
+    /// cursors.
+    fn prober_with_code(&self, qcode: C) -> Box<dyn Prober + '_> {
+        let mut all = Vec::new();
+        self.probe_with_code(qcode, usize::MAX, &mut all);
+        Box::new(BufferedProber::new(all))
+    }
 
     /// Probe a batch of pre-computed query codes, appending candidates
     /// into the matching `outs` entry. Per query the candidate stream is
@@ -58,6 +176,13 @@ pub struct ProbeStats {
     /// Ranges whose bucket table was counting-sorted (lazy probing sorts
     /// a range only when the schedule first touches it).
     pub ranges_sorted: usize,
+    /// Ranges re-sorted on session resume because the walk reached a
+    /// level below a previously materialized floor. Pure
+    /// re-materialization — the sort is deterministic, so already-walked
+    /// slices are reproduced identically — and never a *new* range:
+    /// [`ProbeStats::ranges_sorted`] does not grow when the remaining
+    /// schedule stays within already-sorted ranges.
+    pub ranges_resorted: usize,
     /// Buckets popcounted across those sorts (the histogram pass).
     pub buckets_scanned: usize,
     /// Buckets whose items were emitted (schedule walk).

@@ -10,6 +10,10 @@
 //!   ([`index::range`]), baselines (SIMPLE-LSH, L2-ALSH, ranged L2-ALSH,
 //!   multi-table), the evaluation harness that regenerates every figure and
 //!   table in the paper, and an async serving engine ([`coordinator`]).
+//!   Probing is a resumable session ([`index::Prober`]): every index keeps
+//!   its schedule cursor alive across `extend` calls, and the serving
+//!   layer threads per-request [`config::QueryParams`] (k, budget,
+//!   early-stop) over the engine defaults — see README "Query sessions".
 //!   The whole stack is generic over the code word ([`hash::CodeWord`]:
 //!   `u64`, `[u64; 2]`, `[u64; 4]`), lifting the paper's 64-bit code
 //!   ceiling to 256 bits — see README "Code-width architecture".
@@ -23,16 +27,21 @@
 //! ```no_run
 //! use rangelsh::data::synthetic;
 //! use rangelsh::hash::{Code128, NativeHasher};
-//! use rangelsh::index::{range::RangeLshIndex, range::RangeLshParams, MipsIndex};
+//! use rangelsh::index::{range::RangeLshIndex, range::RangeLshParams, MipsIndex, Prober};
 //!
 //! let dataset = synthetic::longtail_sift(10_000, 64, 42);
 //! let queries = synthetic::gaussian_queries(100, 64, 7);
 //! // The original u64 path (L <= 64) ...
 //! let hasher: NativeHasher = NativeHasher::new(64, 64, 1);
 //! let index = RangeLshIndex::build(&dataset, &hasher, RangeLshParams::new(16, 16)).unwrap();
+//! // Query through a resumable session: ask for candidates, look at
+//! // them, ask for more — the schedule walk continues where it stopped.
+//! let mut session = index.prober(queries.row(0));
 //! let mut out = Vec::new();
-//! index.probe(queries.row(0), 100, &mut out);
-//! println!("first 100 candidates in probing order: {out:?}");
+//! session.extend(100, &mut out); // first 100 candidates in probing order
+//! session.extend(400, &mut out); // the *next* 400 — no rescan
+//! println!("first 500 candidates in probing order: {out:?}");
+//! // (One-shot `index.probe(q, 500, &mut out)` is the same stream.)
 //! // ... and the wide-code regime the CodeWord refactor opens up (L = 128):
 //! let params = RangeLshParams::new(128, 16);
 //! let wide_hasher: NativeHasher<Code128> = NativeHasher::new(64, params.hash_bits(), 1);

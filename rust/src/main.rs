@@ -18,8 +18,8 @@ use std::time::Duration;
 use anyhow::{bail, Context};
 
 use rangelsh::config::{Config, DatasetKind, IndexAlgo};
-use rangelsh::coordinator::server::drive_any;
-use rangelsh::coordinator::{AnyEngine, BatchPolicy, SearchEngine};
+use rangelsh::coordinator::server::drive_any_with;
+use rangelsh::coordinator::{AnyEngine, BatchPolicy, QueryParams, SearchEngine};
 use rangelsh::data::{load_dataset, save_dataset, synthetic, Dataset};
 use rangelsh::eval::harness::{format_probe_table, ground_truth, run_curve, CurveSpec};
 use rangelsh::eval::recall::geometric_checkpoints;
@@ -48,6 +48,8 @@ SUBCOMMANDS:
   theory     --config FILE.toml [--c 0.7]
   serve      --config FILE.toml [--load DIR] [--n-queries 2000] [--native]
              [--artifacts DIR] [--clients 16]
+             [--k K] [--budget B] [--min-candidates M] [--extend-step S]
+             (per-request QueryParams overriding the [serve] defaults)
   artifacts  [--dir DIR]
 ";
 
@@ -102,6 +104,20 @@ impl Args {
 
     fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
+    }
+
+    /// Optional flag parsed to `Some(T)` when present, `None` otherwise.
+    fn opt_some<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("--{key} {v:?}: {e}")),
+        }
     }
 }
 
@@ -430,12 +446,24 @@ fn serve(args: &Args) -> Result<()> {
         engine.code_words()
     );
 
+    // Per-request overrides of the [serve] defaults — the knobs every
+    // request could set individually through `ServerHandle::query_with`;
+    // the CLI applies one override to the whole workload.
+    let qp = QueryParams {
+        top_k: args.opt_some("k")?,
+        probe_budget: args.opt_some("budget")?,
+        min_candidates: args.opt_some("min-candidates")?,
+        extend_step: args.opt_some("extend-step")?,
+    };
+    if !qp.is_default() {
+        println!("per-request params: {qp:?}");
+    }
     let queries = synthetic::gaussian_queries(n_queries, dim, cfg.dataset.seed ^ 0xDEAD);
     let policy = BatchPolicy::new(
         cfg.serve.max_batch,
         Duration::from_micros(cfg.serve.deadline_us),
     );
-    let (results, wall) = drive_any(&engine, policy, &queries, clients)?;
+    let (results, wall) = drive_any_with(&engine, policy, &queries, clients, qp)?;
     let snap = engine.metrics().snapshot();
     println!(
         "served {} queries in {:.2}s — {:.0} qps, p50 {}us, p95 {}us, p99 {}us, \

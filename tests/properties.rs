@@ -10,7 +10,7 @@ use rangelsh::hash::{
 use rangelsh::index::metric::{s_hat, MetricOrder};
 use rangelsh::index::range::{RangeLshIndex, RangeLshParams};
 use rangelsh::index::simple::{SimpleLshIndex, SimpleLshParams};
-use rangelsh::index::{partition, BucketTable, CodeProbe, MipsIndex, PartitionScheme};
+use rangelsh::index::{partition, BucketTable, CodeProbe, MipsIndex, PartitionScheme, Prober};
 use rangelsh::theory::g_rho;
 use rangelsh::util::rng::Rng;
 use rangelsh::ItemId;
@@ -361,6 +361,133 @@ fn prop_lazy_probe_stream_equals_eager_stream() {
             let h128: NativeHasher<Code128> = NativeHasher::new(8, p128.hash_bits(), seed);
             let idx128 = RangeLshIndex::build(&d, &h128, p128).unwrap();
             check_lazy_stream_equals_eager(&idx128, &q, n, seed, m);
+        }
+    });
+}
+
+/// Session/stream equivalence — the resumable-probing contract: for any
+/// split of a budget into two `extend` calls, the concatenated stream is
+/// identical, element for element, to one one-shot `probe` with the
+/// summed budget.
+fn check_session_stream_equals_oneshot(
+    index: &dyn MipsIndex,
+    query: &[f32],
+    n: usize,
+    ctx: &str,
+) {
+    let budgets = [1usize, 7, n / 2, usize::MAX];
+    for &b1 in &budgets {
+        for &b2 in &budgets {
+            let mut oneshot = Vec::new();
+            index.probe(query, b1.saturating_add(b2), &mut oneshot);
+            let mut streamed = Vec::new();
+            let mut session = index.prober(query);
+            let got1 = session.extend(b1, &mut streamed);
+            assert_eq!(got1, b1.min(n), "{ctx} b1={b1}: first extend length");
+            let got2 = session.extend(b2, &mut streamed);
+            assert_eq!(got1 + got2, streamed.len(), "{ctx} b1={b1} b2={b2}");
+            assert_eq!(streamed, oneshot, "{ctx} b1={b1} b2={b2}: streams diverge");
+            if session.is_exhausted() {
+                assert_eq!(streamed.len(), n, "{ctx} b1={b1} b2={b2}: exhausted early");
+            } else if streamed.len() == n {
+                // Exact-fit budget: exhaustion is discovered by the next
+                // extend, which must return zero ids.
+                let mut extra = Vec::new();
+                assert_eq!(session.extend(1, &mut extra), 0, "{ctx} b1={b1} b2={b2}");
+                assert!(session.is_exhausted(), "{ctx} b1={b1} b2={b2}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_session_stream_equals_oneshot_for_every_index_type() {
+    use rangelsh::index::l2alsh::{L2AlshIndex, L2AlshParams};
+    use rangelsh::index::multitable::{simple_multitable, MultiTableIndex};
+    use rangelsh::index::ranged_l2alsh::{RangedL2AlshIndex, RangedL2AlshParams};
+    use rangelsh::index::sign_alsh::{SignAlshIndex, SignAlshParams};
+    forall(3, |rng, seed| {
+        let n = 300 + rng.gen_index(300);
+        let d = synthetic::longtail_sift(n, 8, seed);
+        let q = synthetic::gaussian_queries(2, 8, seed ^ 0xC0DE);
+        // Builds are query-independent: construct every index once per
+        // seed, then sweep the budget-split matrix per query.
+        // RANGE-LSH at u64 and Code128, m in {1, 8, 32}.
+        let mut ranges: Vec<(String, Box<dyn MipsIndex>)> = Vec::new();
+        for &m in &[1usize, 8, 32] {
+            let p64 = RangeLshParams::new(16, m);
+            let h64: NativeHasher = NativeHasher::new(8, p64.hash_bits(), seed);
+            ranges.push((
+                format!("range64 m={m}"),
+                Box::new(RangeLshIndex::build(&d, &h64, p64).unwrap()),
+            ));
+            let p128 = RangeLshParams::new(128, m);
+            let h128: NativeHasher<Code128> = NativeHasher::new(8, p128.hash_bits(), seed);
+            ranges.push((
+                format!("range128 m={m}"),
+                Box::new(RangeLshIndex::build(&d, &h128, p128).unwrap()),
+            ));
+        }
+        let hs: NativeHasher = NativeHasher::new(8, 64, seed ^ 1);
+        let simple = SimpleLshIndex::build(&d, &hs, SimpleLshParams::new(16)).unwrap();
+        let hw: NativeHasher<Code128> = NativeHasher::new(8, 128, seed ^ 2);
+        let simple_w = SimpleLshIndex::build(&d, &hw, SimpleLshParams::new(96)).unwrap();
+        let sign: SignAlshIndex =
+            SignAlshIndex::build(&d, SignAlshParams::recommended(16)).unwrap();
+        let l2 = L2AlshIndex::build(&d, L2AlshParams::recommended(8)).unwrap();
+        let rl2 = RangedL2AlshIndex::build(&d, RangedL2AlshParams::recommended(8, 4)).unwrap();
+        let mt = MultiTableIndex(simple_multitable(&d, 10, 3).unwrap());
+        for qi in 0..q.len() {
+            let query = q.row(qi);
+            for (ctx, idx) in &ranges {
+                check_session_stream_equals_oneshot(idx.as_ref(), query, n, ctx);
+            }
+            check_session_stream_equals_oneshot(&simple, query, n, "simple64");
+            check_session_stream_equals_oneshot(&simple_w, query, n, "simple128");
+            check_session_stream_equals_oneshot(&sign, query, n, "sign_alsh");
+            check_session_stream_equals_oneshot(&l2, query, n, "l2_alsh");
+            check_session_stream_equals_oneshot(&rl2, query, n, "ranged_l2_alsh");
+            let mut union = Vec::new();
+            mt.probe(query, usize::MAX, &mut union);
+            check_session_stream_equals_oneshot(&mt, query, union.len(), "multitable");
+        }
+    });
+}
+
+#[test]
+fn prop_code_session_stream_equals_code_oneshot() {
+    // The precomputed-code twin: CodeProbe::prober_with_code against
+    // probe_with_code, RANGE + SIMPLE, u64 + Code128.
+    forall(4, |rng, seed| {
+        let n = 200 + rng.gen_index(300);
+        let d = synthetic::longtail_sift(n, 8, seed);
+        let q = synthetic::gaussian_queries(1, 8, seed ^ 0xFACE);
+        let p = RangeLshParams::new(16, 8);
+        let h: NativeHasher = NativeHasher::new(8, p.hash_bits(), seed);
+        let range = RangeLshIndex::build(&d, &h, p).unwrap();
+        let hs: NativeHasher<Code128> = NativeHasher::new(8, 128, seed ^ 3);
+        let simple = SimpleLshIndex::build(&d, &hs, SimpleLshParams::new(128)).unwrap();
+        let budgets = [1usize, 7, n / 2, usize::MAX];
+        for &b1 in &budgets {
+            for &b2 in &budgets {
+                let qc = range.hash_query(q.row(0));
+                let mut oneshot = Vec::new();
+                range.probe_with_code(qc, b1.saturating_add(b2), &mut oneshot);
+                let mut streamed = Vec::new();
+                let mut session = range.prober_with_code(qc);
+                session.extend(b1, &mut streamed);
+                session.extend(b2, &mut streamed);
+                assert_eq!(streamed, oneshot, "seed {seed} range b1={b1} b2={b2}");
+
+                let qc = simple.hash_query(q.row(0));
+                let mut oneshot = Vec::new();
+                simple.probe_with_code(qc, b1.saturating_add(b2), &mut oneshot);
+                let mut streamed = Vec::new();
+                let mut session = simple.prober_with_code(qc);
+                session.extend(b1, &mut streamed);
+                session.extend(b2, &mut streamed);
+                assert_eq!(streamed, oneshot, "seed {seed} simple b1={b1} b2={b2}");
+            }
         }
     });
 }

@@ -1,0 +1,141 @@
+//! Resumable query-session edge cases (in-tree harness, offline build):
+//! the `Prober` contract around zero-budget extends, index exhaustion,
+//! and `ProbeStats` accumulation across `extend` calls — the behaviors a
+//! serving layer leans on when it streams candidates adaptively.
+
+use rangelsh::config::{QueryParams, ServeConfig};
+use rangelsh::coordinator::SearchEngine;
+use rangelsh::data::synthetic;
+use rangelsh::hash::NativeHasher;
+use rangelsh::index::range::{RangeLshIndex, RangeLshParams};
+use rangelsh::index::simple::{SimpleLshIndex, SimpleLshParams};
+use rangelsh::index::{CodeProbe, MipsIndex, Prober};
+use rangelsh::ItemId;
+use std::sync::Arc;
+
+fn range_index(n: usize, bits: usize, m: usize, seed: u64) -> RangeLshIndex {
+    let d = synthetic::longtail_sift(n, 8, seed);
+    let h: NativeHasher = NativeHasher::new(8, 64, seed ^ 0xAB);
+    RangeLshIndex::build(&d, &h, RangeLshParams::new(bits, m)).unwrap()
+}
+
+#[test]
+fn extend_zero_is_a_true_noop() {
+    let idx = range_index(500, 16, 8, 1);
+    let d_queries = synthetic::gaussian_queries(1, 8, 2);
+    let qcode = idx.hash_query(d_queries.row(0));
+    let mut session = idx.session(qcode);
+    let mut out = Vec::new();
+    // Zero-budget extends emit nothing and do no sorting work at all.
+    for _ in 0..3 {
+        assert_eq!(session.extend(0, &mut out), 0);
+    }
+    assert!(out.is_empty());
+    assert_eq!(session.stats().ranges_sorted, 0, "extend(0) must not sort");
+    assert_eq!(session.stats().items_emitted, 0);
+    assert!(!session.is_exhausted());
+    // ... and the session still works normally afterwards.
+    assert_eq!(session.extend(10, &mut out), 10);
+    assert_eq!(out.len(), 10);
+}
+
+#[test]
+fn exhaustion_returns_fewer_exactly_once_then_zero() {
+    let n = 400;
+    let idx = range_index(n, 16, 8, 3);
+    let q = synthetic::gaussian_queries(1, 8, 4);
+    let mut session = idx.prober(q.row(0));
+    let mut out = Vec::new();
+    assert_eq!(session.extend(n - 3, &mut out), n - 3);
+    assert!(!session.is_exhausted());
+    // The overshooting extend returns the 3 leftovers — fewer than asked,
+    // exactly once...
+    assert_eq!(session.extend(100, &mut out), 3);
+    assert!(session.is_exhausted());
+    assert_eq!(out.len(), n);
+    // ... and every later extend returns zero without touching `out`.
+    for _ in 0..3 {
+        assert_eq!(session.extend(100, &mut out), 0);
+    }
+    assert_eq!(out.len(), n);
+    // The emitted set is the full corpus, each id once.
+    let mut sorted = out.clone();
+    sorted.sort_unstable();
+    sorted.dedup();
+    assert_eq!(sorted.len(), n);
+}
+
+#[test]
+fn probe_stats_accumulate_across_extends() {
+    let n = 2000;
+    let idx = range_index(n, 16, 32, 5);
+    let q = synthetic::gaussian_queries(1, 8, 6);
+    let qcode = idx.hash_query(q.row(0));
+    let mut session = idx.session(qcode);
+    let mut out = Vec::new();
+    let mut prev_sorted = 0usize;
+    let mut emitted = 0usize;
+    for step in [1usize, 9, 40, 450, 1500, 100] {
+        emitted += session.extend(step, &mut out);
+        let stats = session.stats();
+        assert_eq!(stats.items_emitted, emitted, "after step {step}");
+        assert_eq!(stats.items_emitted, out.len(), "after step {step}");
+        assert!(
+            stats.ranges_sorted >= prev_sorted,
+            "ranges_sorted must be monotone across extends"
+        );
+        prev_sorted = stats.ranges_sorted;
+    }
+    assert!(session.is_exhausted() || emitted == out.len());
+    // Fully drained: every range was sorted exactly once (never twice —
+    // re-materialization is counted separately in ranges_resorted).
+    session.extend(usize::MAX, &mut out);
+    let stats = session.stats();
+    assert_eq!(stats.items_emitted, n);
+    assert_eq!(stats.ranges_sorted, 32);
+    // One-shot comparison: same stream as a fresh exhaustive probe.
+    let mut oneshot = Vec::new();
+    idx.probe_with_code(qcode, usize::MAX, &mut oneshot);
+    assert_eq!(out, oneshot);
+}
+
+#[test]
+fn simple_lsh_session_stats_accumulate() {
+    let d = synthetic::longtail_sift(300, 8, 7);
+    let h: NativeHasher = NativeHasher::new(8, 64, 8);
+    let idx = SimpleLshIndex::build(&d, &h, SimpleLshParams::new(16)).unwrap();
+    let q = synthetic::gaussian_queries(1, 8, 9);
+    let mut session = idx.prober(q.row(0));
+    let mut out = Vec::new();
+    session.extend(5, &mut out);
+    assert_eq!(session.stats().items_emitted, 5);
+    assert_eq!(session.stats().ranges_sorted, 1, "one table, one sort");
+    session.extend(295, &mut out);
+    let stats = session.stats();
+    assert_eq!(stats.items_emitted, 300);
+    assert_eq!(stats.ranges_sorted, 1, "resume must not count a new sort");
+    assert!(session.is_exhausted() || out.len() == 300);
+}
+
+#[test]
+fn engine_sessions_respect_per_request_params_end_to_end() {
+    // The full stack: QueryParams resolved against ServeConfig, probing
+    // through sessions, exact re-rank — chunked extends with an
+    // exhaustive target must reproduce the exact top-k.
+    let d = Arc::new(synthetic::longtail_sift(1000, 8, 10));
+    let h: Arc<NativeHasher> = Arc::new(NativeHasher::new(8, 64, 11));
+    let idx = Arc::new(RangeLshIndex::build(&d, h.as_ref(), RangeLshParams::new(16, 8)).unwrap());
+    let cfg = ServeConfig { probe_budget: 100, top_k: 5, ..Default::default() };
+    let engine = SearchEngine::new(idx, d.clone(), h, cfg).unwrap();
+    let q = synthetic::gaussian_queries(4, 8, 12);
+    let gt = rangelsh::eval::exact_topk(&d, &q, 5);
+    let exhaustive = QueryParams::new()
+        .with_probe_budget(usize::MAX)
+        .with_min_candidates(usize::MAX)
+        .with_extend_step(64);
+    for qi in 0..q.len() {
+        let res = engine.search_with(q.row(qi), &exhaustive).unwrap();
+        let ids: Vec<ItemId> = res.iter().map(|r| r.id).collect();
+        assert_eq!(ids, gt[qi], "query {qi}");
+    }
+}
