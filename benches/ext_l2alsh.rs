@@ -66,7 +66,7 @@ fn main() -> rangelsh::Result<()> {
 
     // ---- Per-range scaling factors (the "flexibility" §5 argues for) ----
     let wl = common::imagenet();
-    let parts = partition(&wl.items, 8, PartitionScheme::Percentile);
+    let parts = partition(&wl.items, 8, PartitionScheme::Percentile)?;
     println!("=== per-range norm bounds on {} (m=8) ===", wl.name);
     let mut t = Table::new(&["range", "u_min", "u_max", "u_max/U"]);
     let u = wl.items.max_norm();

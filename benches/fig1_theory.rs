@@ -76,7 +76,7 @@ fn main() -> rangelsh::Result<()> {
 
     // ---- Fig 1(d): S0 after RANGE-LSH normalisation --------------------
     println!("\n=== Fig 1(d): max inner product after RANGE-LSH normalisation (32 ranges) ===");
-    let parts = partition(&wl.items, 32, PartitionScheme::Percentile);
+    let parts = partition(&wl.items, 32, PartitionScheme::Percentile)?;
     let range_s0: Vec<f32> = (0..wl.queries.len())
         .map(|qi| {
             let q = wl.queries.row(qi);

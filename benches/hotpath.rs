@@ -44,6 +44,47 @@ struct ProbeRow {
     timing: Timing,
 }
 
+/// One bulk-hashing measurement at a given code width and path.
+struct HashRow {
+    code_bits: usize,
+    mode: &'static str,
+    timing: Timing,
+}
+
+/// Measure blocked vs per-item bulk hashing at one code width — the
+/// wide-code batched backend's native rows (PJRT joins via section 1b
+/// when artifacts exist).
+fn bench_hash_width<C: CodeWord>(
+    items: &rangelsh::data::Dataset,
+    slice: &[f32],
+    u: f32,
+    code_bits: usize,
+    rows: &mut Vec<HashRow>,
+    table: &mut Table,
+) {
+    let hasher: NativeHasher<C> = NativeHasher::new(items.dim(), code_bits, 5);
+    let n = slice.len() / items.dim();
+    let t_blocked = bench(1, 5, || {
+        std::hint::black_box(hasher.hash_items_blocked(slice, u).unwrap());
+    });
+    let t_item = bench(1, 5, || {
+        std::hint::black_box(hasher.hash_items_unblocked(slice, u).unwrap());
+    });
+    let speedup = t_item.median.as_secs_f64() / t_blocked.median.as_secs_f64().max(1e-12);
+    table.row(vec![
+        format!("item hash L={code_bits} per-item ({n} rows)"),
+        format!("{:?}", t_item.median),
+        format!("{:.2} Mitems/s", t_item.throughput(n) / 1e6),
+    ]);
+    table.row(vec![
+        format!("item hash L={code_bits} blocked  ({n} rows)"),
+        format!("{:?}", t_blocked.median),
+        format!("{speedup:.2}x vs per-item"),
+    ]);
+    rows.push(HashRow { code_bits, mode: "per_item", timing: t_item });
+    rows.push(HashRow { code_bits, mode: "blocked", timing: t_blocked });
+}
+
 /// Build a RANGE-LSH index at width `C` over `items` and measure
 /// `probe_with_code` throughput at each budget.
 fn bench_probe_width<C: CodeWord>(
@@ -104,7 +145,7 @@ fn main() -> rangelsh::Result<()> {
     let pjrt_hasher: Option<Arc<dyn ItemHasher>> =
         if std::path::Path::new(DEFAULT_ARTIFACT_DIR).join("manifest.json").exists() {
             match RuntimeHandle::load(DEFAULT_ARTIFACT_DIR)
-                .and_then(|rt| PjrtHasher::new(rt, proj.clone()))
+                .and_then(|rt| PjrtHasher::<u64>::new(rt, proj.clone()))
             {
                 Ok(h) => Some(Arc::new(h)),
                 Err(e) => {
@@ -124,6 +165,18 @@ fn main() -> rangelsh::Result<()> {
             format!("{:?}", t.median),
             format!("{:.2} Mitems/s", t.throughput(hash_rows) / 1e6),
         ]);
+    }
+
+    // 1c. bulk hashing across the code-width axis: blocked (the default
+    // batch path since the wide-code backend) vs the per-item oracle at
+    // L = 64 / 128 / 256.
+    let mut hash_width_rows: Vec<HashRow> = Vec::new();
+    let axis_rows = if smoke { 2048usize } else { hash_rows };
+    {
+        let axis_slice = &items.flat()[..axis_rows * dim];
+        bench_hash_width::<u64>(&items, axis_slice, u, 64, &mut hash_width_rows, &mut table);
+        bench_hash_width::<Code128>(&items, axis_slice, u, 128, &mut hash_width_rows, &mut table);
+        bench_hash_width::<Code256>(&items, axis_slice, u, 256, &mut hash_width_rows, &mut table);
     }
 
     // 2. query hashing
@@ -321,6 +374,27 @@ fn main() -> rangelsh::Result<()> {
         ("bench", Json::Str("hotpath".into())),
         ("n_items", Json::Num(n as f64)),
         ("dim", Json::Num(dim as f64)),
+        (
+            "hash_width_axis",
+            Json::Arr(
+                hash_width_rows
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("code_bits", Json::Num(r.code_bits as f64)),
+                            ("mode", Json::Str(r.mode.into())),
+                            ("rows", Json::Num(axis_rows as f64)),
+                            ("median_us", Json::Num(r.timing.median.as_secs_f64() * 1e6)),
+                            ("min_us", Json::Num(r.timing.min.as_secs_f64() * 1e6)),
+                            (
+                                "items_per_sec",
+                                Json::Num(r.timing.throughput(axis_rows)),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
         (
             "probe_schedule",
             Json::Arr(

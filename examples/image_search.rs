@@ -69,7 +69,7 @@ fn main() -> rangelsh::Result<()> {
 
     // Fig 1(d): with RANGE-LSH (32 ranges), each query's best item is
     // normalised by its range's U_j instead of the global U.
-    let parts = partition(&items, 32, PartitionScheme::Percentile);
+    let parts = partition(&items, 32, PartitionScheme::Percentile)?;
     let range_s0: Vec<f32> = (0..queries.len())
         .map(|qi| {
             let q = queries.row(qi);

@@ -41,7 +41,8 @@ fn main() -> rangelsh::Result<()> {
     let proj = Arc::new(Projection::gaussian(dim + 1, 64, 1));
     let artifacts = std::path::Path::new(DEFAULT_ARTIFACT_DIR);
     let hasher: Arc<dyn ItemHasher> = if !native_only && artifacts.join("manifest.json").exists() {
-        match RuntimeHandle::load(artifacts).and_then(|rt| PjrtHasher::new(rt, proj.clone())) {
+        match RuntimeHandle::load(artifacts).and_then(|rt| PjrtHasher::<u64>::new(rt, proj.clone()))
+        {
             Ok(h) => {
                 println!("hashing: PJRT (AOT Pallas sign-hash kernel)");
                 Arc::new(h)

@@ -47,8 +47,14 @@ def _spec(shape, dtype):
     return jax.ShapeDtypeStruct(shape, dtype)
 
 
-def variants(dims):
-    """Yield (name, fn, arg_specs) for every artifact to compile."""
+def variants(dims, width=model.PROJ_WIDTH):
+    """Yield (name, fn, arg_specs) for every artifact to compile.
+
+    ``width`` is the projection-panel width (hash functions per item):
+    64 for the paper's original regime, 128/256 for the wide-code
+    serving widths. Each artifact directory is compiled at exactly one
+    width; the kernel packs ``width / 32`` u32 words per item.
+    """
     f32, u32 = jnp.float32, jnp.uint32
     for d in dims:
         yield (
@@ -57,7 +63,7 @@ def variants(dims):
             [
                 _spec((model.ITEM_BLOCK, d), f32),
                 _spec((), f32),
-                _spec((d + 1, model.PROJ_WIDTH), f32),
+                _spec((d + 1, width), f32),
             ],
         )
         yield (
@@ -65,7 +71,7 @@ def variants(dims):
             model.hash_queries,
             [
                 _spec((model.ITEM_BLOCK, d), f32),
-                _spec((d + 1, model.PROJ_WIDTH), f32),
+                _spec((d + 1, width), f32),
             ],
         )
         # Small-batch query variant: serving batches are usually <= 256
@@ -76,7 +82,7 @@ def variants(dims):
             model.hash_queries,
             [
                 _spec((model.QUERY_BLOCK, d), f32),
-                _spec((d + 1, model.PROJ_WIDTH), f32),
+                _spec((d + 1, width), f32),
             ],
         )
         yield (
@@ -114,17 +120,28 @@ def _self_check(name: str, fn, specs) -> None:
         raise ValueError(f"no oracle for {name}")
 
 
-def build(out_dir: str, dims, self_check: bool = True) -> dict:
-    """Lower all variants into ``out_dir``; return the manifest dict."""
+def build(
+    out_dir: str, dims, width: int = model.PROJ_WIDTH, self_check: bool = True
+) -> dict:
+    """Lower all variants into ``out_dir``; return the manifest dict.
+
+    ``width`` selects the panel width (and therefore the code width) the
+    whole directory is compiled at; the manifest records it as
+    ``proj_width`` plus the derived ``code_words`` (u64 words per code,
+    1/2/4) the Rust runtime keys its `CodeWord` dispatch off.
+    """
+    if width not in model.SUPPORTED_WIDTHS:
+        raise ValueError(f"width {width} not in {model.SUPPORTED_WIDTHS}")
     os.makedirs(out_dir, exist_ok=True)
     manifest = {
         "format": "hlo-text",
         "item_block": model.ITEM_BLOCK,
         "query_block": model.QUERY_BLOCK,
-        "proj_width": model.PROJ_WIDTH,
+        "proj_width": width,
+        "code_words": width // 64,
         "entries": [],
     }
-    for name, fn, specs in variants(dims):
+    for name, fn, specs in variants(dims, width):
         lowered = jax.jit(fn).lower(*specs)
         text = to_hlo_text(lowered)
         fname = f"{name}.hlo.txt"
@@ -155,11 +172,23 @@ def main() -> None:
         default=",".join(str(d) for d in DEFAULT_DIMS),
         help="comma-separated dataset dimensionalities to compile",
     )
+    ap.add_argument(
+        "--width",
+        type=int,
+        default=model.PROJ_WIDTH,
+        choices=model.SUPPORTED_WIDTHS,
+        help="panel width (hash functions per item); one width per artifact dir",
+    )
     ap.add_argument("--no-self-check", action="store_true")
     args = ap.parse_args()
     dims = [int(d) for d in args.dims.split(",") if d]
-    manifest = build(args.out_dir, dims, self_check=not args.no_self_check)
-    print(f"wrote {len(manifest['entries'])} artifacts to {args.out_dir}")
+    manifest = build(
+        args.out_dir, dims, width=args.width, self_check=not args.no_self_check
+    )
+    print(
+        f"wrote {len(manifest['entries'])} artifacts to {args.out_dir} "
+        f"(width {args.width}, {manifest['code_words']} code words)"
+    )
 
 
 if __name__ == "__main__":

@@ -28,14 +28,31 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-# Bits packed per output word. Fixed at 32 (uint32 words): the paper's
-# largest code length is 64 = 2 words.
+# Bits packed per output word. Fixed at 32 (uint32 words). The word
+# count scales with the code length: L = 64 packs 2 words, the wide
+# serving widths pack 4 (L = 128) and 8 (L = 256) words per item.
 PACK_LANES = 32
 
-# Default item-tile height. 512 rows x (300+1) dims x 4 B = 623 KB in VMEM
-# alongside the 304x64x4 = 78 KB projection panel — comfortable within a
-# ~16 MB VMEM budget with room for double buffering.
+# Largest panel width a single kernel call will hash (matches the Rust
+# side's MAX_CODE_BITS: four u64 = eight u32 words per item).
+MAX_WIDTH = 256
+
+# Default item-tile height at L <= 64. 512 rows x (300+1) dims x 4 B =
+# 623 KB in VMEM alongside the 304x64x4 = 78 KB projection panel —
+# comfortable within a ~16 MB VMEM budget with room for double buffering.
 DEFAULT_BLOCK_B = 512
+
+
+def default_block_b(width: int) -> int:
+    """Default tile height for a panel of ``width`` hash functions.
+
+    Halved per doubling of the panel width past 64 so the ``[B, D]``
+    tile, the ``[D, L]`` panel, and the ``[B, L]`` matmul accumulator
+    stay inside the same VMEM envelope at the wide code widths:
+    512 rows at L <= 64, 256 at L = 128, 128 at L = 256. Every value
+    divides the 2048-row AOT item block.
+    """
+    return DEFAULT_BLOCK_B // max(width // 64, 1)
 
 
 def _pack_bits(bits: jax.Array) -> jax.Array:
@@ -71,8 +88,10 @@ def sign_hash(xt: jax.Array, proj: jax.Array, *, block_b: int | None = None) -> 
         raise ValueError(f"dim mismatch: xt has D={d}, proj has D={d2}")
     if width % PACK_LANES != 0:
         raise ValueError(f"L={width} must be a multiple of {PACK_LANES}")
+    if width > MAX_WIDTH:
+        raise ValueError(f"L={width} exceeds the {MAX_WIDTH}-bit code ceiling")
     if block_b is None:
-        block_b = min(b, DEFAULT_BLOCK_B)
+        block_b = min(b, default_block_b(width))
     if b % block_b != 0:
         raise ValueError(f"B={b} not divisible by block_b={block_b}")
     words = width // PACK_LANES

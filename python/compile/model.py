@@ -30,7 +30,13 @@ from .kernels import sign_hash, score as score_kernel
 # Fixed AOT geometry, shared with the Rust runtime via artifacts/manifest.json.
 ITEM_BLOCK = 2048   # rows per hash_items / score item block
 QUERY_BLOCK = 256   # rows per score query block
-PROJ_WIDTH = 64     # hash functions compiled per artifact; Rust masks to L_eff
+PROJ_WIDTH = 64     # default hash functions per artifact; Rust masks to L_eff
+
+# Panel widths the AOT pipeline will compile (``aot.py --width``). One
+# artifact directory holds exactly one width; the manifest's
+# ``code_words`` field (width / 64 u64 words) tells the Rust side which
+# CodeWord monomorphization the packed u32 outputs feed.
+SUPPORTED_WIDTHS = (64, 128, 256)
 
 
 def simple_transform(x: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:

@@ -1,0 +1,75 @@
+"""``hypothesis``, or a seeded-random fallback when it is not installed.
+
+The CI image has hypothesis and gets the real shrinking property runner.
+Offline images (no network, no pip) still need the kernel-vs-oracle
+signal, so this shim replays each ``@given`` test over a fixed number of
+deterministic draws from the declared strategies — no shrinking, but the
+same search space and a reproducible failure message naming the draw.
+
+Usage (drop-in)::
+
+    from hypo_compat import given, settings, strategies as st
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # offline image: deterministic fallback sweep
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class strategies:  # noqa: N801 - mimics the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            choices = list(elements)
+            return _Strategy(lambda rng: rng.choice(choices))
+
+    def given(**params):
+        def deco(fn):
+            def wrapper():
+                for case in range(_FALLBACK_EXAMPLES):
+                    rng = random.Random(0xC0FFEE + case)
+                    kwargs = {k: s.draw(rng) for k, s in params.items()}
+                    try:
+                        fn(**kwargs)
+                    except Exception as e:  # re-raise naming the draw
+                        raise AssertionError(
+                            f"fallback case {case} failed with draw {kwargs}: {e}"
+                        ) from e
+
+            # No functools.wraps: copying __wrapped__ would make pytest
+            # introspect the original signature and demand fixtures for
+            # the strategy parameters. Name and doc are enough.
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco
+
+    class settings:  # noqa: N801 - API-compatible no-op
+        def __init__(self, *args, **kwargs):
+            pass
+
+        @staticmethod
+        def register_profile(name, **kwargs):
+            pass
+
+        @staticmethod
+        def load_profile(name):
+            pass

@@ -30,6 +30,7 @@ def test_manifest_lists_all_entries(built):
     assert manifest["item_block"] == model.ITEM_BLOCK
     assert manifest["query_block"] == model.QUERY_BLOCK
     assert manifest["proj_width"] == model.PROJ_WIDTH
+    assert manifest["code_words"] == 1
 
 
 def test_manifest_json_round_trips(built):
@@ -70,3 +71,23 @@ def test_hlo_entry_layout_mentions_u32_output(built):
         head = f.readline()
     # xla_extension 0.5.1 parses this header; codes must be u32-packed.
     assert "u32[2048,2]" in head
+
+
+def test_wide_width_build_emits_code_words(tmp_path):
+    # The multi-word backend: a width-128 artifact dir carries
+    # code_words = 2 and 4-u32-word hash outputs, self-checked against
+    # the oracle during the build.
+    out = str(tmp_path / "wide")
+    manifest = aot.build(out, dims=[8], width=128, self_check=True)
+    assert manifest["proj_width"] == 128
+    assert manifest["code_words"] == 2
+    hi = {e["name"]: e for e in manifest["entries"]}["hash_items_d8"]["inputs"]
+    assert hi[2]["shape"] == [9, 128]
+    with open(os.path.join(out, "hash_items_d8.hlo.txt")) as f:
+        head = f.readline()
+    assert "u32[2048,4]" in head
+
+
+def test_build_rejects_unsupported_width():
+    with pytest.raises(ValueError, match="width"):
+        aot.build("/tmp/unused-artifacts", dims=[8], width=96)

@@ -8,10 +8,10 @@ reassociation tolerance (scores) across a hypothesis sweep of shapes.
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypo_compat import given, settings, strategies as st
 
 from compile.kernels import sign_hash, score, ref
-from compile.kernels.sign_hash import PACK_LANES
+from compile.kernels.sign_hash import MAX_WIDTH, PACK_LANES, default_block_b
 
 settings.register_profile("kernels", max_examples=25, deadline=None)
 settings.load_profile("kernels")
@@ -29,7 +29,7 @@ def _randn(rng, shape):
     blocks=st.integers(1, 4),
     block_b=st.sampled_from([1, 2, 8, 16]),
     d=st.integers(2, 48),
-    words=st.integers(1, 2),
+    words=st.sampled_from([1, 2, 4, 8]),
     seed=st.integers(0, 2**31 - 1),
 )
 def test_sign_hash_matches_ref_across_shapes(blocks, block_b, d, words, seed):
@@ -99,6 +99,74 @@ def test_sign_hash_block_size_invariance():
     a = np.asarray(sign_hash(xt, proj, block_b=8))
     b = np.asarray(sign_hash(xt, proj, block_b=64))
     np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# multi-word (wide-code) sign_hash
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("width", [128, 256])
+def test_sign_hash_multiword_matches_ref(width):
+    # The wide serving widths: 4 (L=128) / 8 (L=256) u32 words per item.
+    rng = np.random.default_rng(width)
+    xt = _randn(rng, (64, 24))
+    proj = _randn(rng, (24, width))
+    got = sign_hash(xt, proj, block_b=16)
+    assert got.shape == (64, width // PACK_LANES)
+    assert got.dtype == jnp.uint32
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(ref.sign_hash_ref(xt, proj))
+    )
+
+
+def test_sign_hash_multiword_bit_order_spans_words():
+    # Hash function j lands in bit j % 32 of u32 word j // 32, across all
+    # eight words of an L=256 panel — the little-endian convention the
+    # Rust CodeWord packing relies on.
+    d, width = 3, 256
+    xt = jnp.ones((1, d), jnp.float32)
+    cols = np.tile(np.where(np.arange(width) % 2 == 0, 1.0, -1.0), (d, 1))
+    got = np.asarray(sign_hash(xt, jnp.asarray(cols, jnp.float32), block_b=1))
+    assert got.tolist() == [[0x5555_5555] * (width // PACK_LANES)]
+    # A single positive hash function at j = 200 sets exactly word 6 bit 8.
+    cols = -np.ones((d, width), np.float32)
+    cols[:, 200] = 1.0
+    got = np.asarray(sign_hash(xt, jnp.asarray(cols), block_b=1))
+    want = np.zeros((1, width // PACK_LANES), np.uint32)
+    want[0, 200 // PACK_LANES] = np.uint32(1) << (200 % PACK_LANES)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_sign_hash_wide_low_words_agree_with_narrow_panel():
+    # A 256-wide panel whose first 64 columns equal a 64-wide panel must
+    # reproduce the narrow panel's words exactly in words 0..1.
+    rng = np.random.default_rng(21)
+    xt = _randn(rng, (32, 12))
+    wide = _randn(rng, (12, 256))
+    narrow = wide[:, :64]
+    a = np.asarray(sign_hash(xt, wide, block_b=8))
+    b = np.asarray(sign_hash(xt, narrow, block_b=8))
+    np.testing.assert_array_equal(a[:, :2], b)
+
+
+def test_sign_hash_default_tile_shrinks_with_width():
+    # VMEM envelope: the default tile halves per width doubling past 64
+    # and always divides the 2048-row AOT item block.
+    assert [default_block_b(w) for w in (32, 64, 128, 256)] == [512, 512, 256, 128]
+    for w in (64, 128, 256):
+        assert 2048 % default_block_b(w) == 0
+        rng = np.random.default_rng(w + 1)
+        xt, proj = _randn(rng, (2048, 9)), _randn(rng, (9, w))
+        got = sign_hash(xt, proj)  # default tile must accept the AOT block
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(ref.sign_hash_ref(xt, proj))
+        )
+
+
+def test_sign_hash_rejects_over_wide_panel():
+    xt = jnp.zeros((4, 3), jnp.float32)
+    with pytest.raises(ValueError, match="ceiling"):
+        sign_hash(xt, jnp.zeros((3, MAX_WIDTH + PACK_LANES), jnp.float32))
 
 
 # ---------------------------------------------------------------------------

@@ -3,7 +3,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypo_compat import given, settings, strategies as st
 
 from compile import model
 from compile.kernels import ref
@@ -109,6 +109,23 @@ def test_score_entry_matches_oracle():
     np.testing.assert_allclose(
         np.asarray(got), np.asarray(ref.score_ref(q, x)), rtol=1e-4, atol=1e-4
     )
+
+
+def test_hash_entries_match_oracle_at_wide_widths():
+    # The multi-word backend: the same entry points at panel widths 128
+    # and 256 must agree with the oracle word-for-word (4 / 8 u32 words).
+    rng = np.random.default_rng(4)
+    for width in (128, 256):
+        x = _randn(rng, (64, 19))
+        u = jnp.float32(float(np.linalg.norm(np.asarray(x), axis=1).max()))
+        proj = _randn(rng, (20, width))
+        (got,) = jax.jit(model.hash_items)(x, u, proj)
+        assert got.shape == (64, width // 32)
+        want = ref.sign_hash_ref(ref.simple_transform_ref(x, u), proj)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        (got_q,) = jax.jit(model.hash_queries)(x, proj)
+        want_q = ref.sign_hash_ref(ref.query_transform_ref(x), proj)
+        np.testing.assert_array_equal(np.asarray(got_q), np.asarray(want_q))
 
 
 def test_hash_items_padding_rows_are_harmless():

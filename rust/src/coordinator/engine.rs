@@ -10,10 +10,12 @@ use std::sync::Arc;
 use crate::config::{QueryParams, ResolvedQueryParams, ServeConfig};
 use crate::coordinator::metrics::Metrics;
 use crate::data::Dataset;
-use crate::hash::{Code128, Code256, CodeWord, ItemHasher, NativeHasher, MAX_CODE_BITS};
+use crate::hash::{
+    Code128, Code256, CodeWord, ItemHasher, NativeHasher, Projection, MAX_CODE_BITS,
+};
 use crate::index::range::{RangeLshIndex, RangeLshParams};
 use crate::index::{AnyRangeLshIndex, CodeProbe, Prober};
-use crate::runtime::PjrtScorer;
+use crate::runtime::{PjrtHasher, PjrtScorer, RuntimeHandle};
 use crate::{ItemId, Result};
 
 /// One ranked answer.
@@ -28,8 +30,9 @@ pub struct SearchResult {
 ///
 /// The index must implement [`CodeProbe`] (SIMPLE-LSH or RANGE-LSH): the
 /// engine hashes queries *in batches* through `hasher` — the PJRT-backed
-/// Pallas kernel in production (`u64` codes), the native panel for tests
-/// and for multi-word codes — and probes with the resulting codes, so the
+/// Pallas kernel in production at any code width (the multi-word kernel
+/// packs `width / 32` u32 words per item), the blocked native path when
+/// artifacts are absent — and probes with the resulting codes, so the
 /// Python-free hot path is:
 /// `sign-hash kernel → bucket schedule walk → exact re-rank`.
 pub struct SearchEngine<C: CodeWord = u64> {
@@ -87,6 +90,11 @@ impl<C: CodeWord> SearchEngine<C> {
 
     pub fn dataset(&self) -> &Arc<Dataset> {
         &self.dataset
+    }
+
+    /// Which bulk-hashing backend serves this engine ("native" / "pjrt").
+    pub fn hasher_backend(&self) -> &'static str {
+        self.hasher.backend()
     }
 
     /// Search a single query with the serving defaults (hashes natively;
@@ -275,6 +283,30 @@ impl AnyEngine {
         seed: u64,
         cfg: ServeConfig,
     ) -> Result<AnyEngine> {
+        Self::build_range_auto(items, params, seed, cfg, None)
+    }
+
+    /// [`AnyEngine::build_native_range`] with backend selection: prefer
+    /// the AOT Pallas kernel (PJRT) for bulk hashing when `runtime`
+    /// holds a loaded artifact directory whose geometry matches the
+    /// selected width arm — same dataset dim, manifest `code_words`
+    /// equal to the arm's word count, and a panel at least as wide as
+    /// the per-range hash bits. Any mismatch (or `runtime == None`)
+    /// degrades to the blocked native path, byte-for-byte the engine
+    /// `build_native_range` produces.
+    ///
+    /// When PJRT is selected the engine's panel is the artifact's full
+    /// `proj_width` (shared by the native query hasher fallback inside
+    /// the index), and the index masks codes down to `hash_bits` —
+    /// exactly the convention the `u64` path has always used with its
+    /// 64-wide panel.
+    pub fn build_range_auto(
+        items: Arc<Dataset>,
+        params: RangeLshParams,
+        seed: u64,
+        cfg: ServeConfig,
+        runtime: Option<&RuntimeHandle>,
+    ) -> Result<AnyEngine> {
         anyhow::ensure!(
             cfg.code_bits >= 1 && cfg.code_bits <= MAX_CODE_BITS,
             "code_bits {} out of range 1..={MAX_CODE_BITS}",
@@ -287,13 +319,17 @@ impl AnyEngine {
             cfg.code_bits
         );
         if cfg.code_bits <= 64 {
-            Ok(AnyEngine::W64(Arc::new(build_arm::<u64>(items, params, seed, cfg, 64)?)))
+            Ok(AnyEngine::W64(Arc::new(build_arm::<u64>(items, params, seed, cfg, 64, runtime)?)))
         } else if cfg.code_bits <= 128 {
             let width = params.hash_bits();
-            Ok(AnyEngine::W128(Arc::new(build_arm::<Code128>(items, params, seed, cfg, width)?)))
+            Ok(AnyEngine::W128(Arc::new(build_arm::<Code128>(
+                items, params, seed, cfg, width, runtime,
+            )?)))
         } else {
             let width = params.hash_bits();
-            Ok(AnyEngine::W256(Arc::new(build_arm::<Code256>(items, params, seed, cfg, width)?)))
+            Ok(AnyEngine::W256(Arc::new(build_arm::<Code256>(
+                items, params, seed, cfg, width, runtime,
+            )?)))
         }
     }
 
@@ -304,22 +340,43 @@ impl AnyEngine {
         items: Arc<Dataset>,
         cfg: ServeConfig,
     ) -> Result<AnyEngine> {
+        Self::from_loaded_with(index, items, cfg, None)
+    }
+
+    /// [`AnyEngine::from_loaded`] with backend selection: when `runtime`
+    /// can hash with the index's stored panel at the file's width (an
+    /// index originally built through the PJRT path stores the
+    /// artifact-width panel, so geometry matches), queries batch through
+    /// the kernel; otherwise native hashing with the same panel —
+    /// identical codes either way.
+    pub fn from_loaded_with(
+        index: AnyRangeLshIndex,
+        items: Arc<Dataset>,
+        cfg: ServeConfig,
+        runtime: Option<&RuntimeHandle>,
+    ) -> Result<AnyEngine> {
         match index {
             AnyRangeLshIndex::W64(i) => {
-                let hasher: Arc<NativeHasher<u64>> =
-                    Arc::new(NativeHasher::with_projection(i.projection().clone()));
+                let hasher = pick_hasher::<u64>(runtime, i.projection().clone());
                 Ok(AnyEngine::W64(Arc::new(SearchEngine::new(Arc::new(i), items, hasher, cfg)?)))
             }
             AnyRangeLshIndex::W128(i) => {
-                let hasher: Arc<NativeHasher<Code128>> =
-                    Arc::new(NativeHasher::with_projection(i.projection().clone()));
+                let hasher = pick_hasher::<Code128>(runtime, i.projection().clone());
                 Ok(AnyEngine::W128(Arc::new(SearchEngine::new(Arc::new(i), items, hasher, cfg)?)))
             }
             AnyRangeLshIndex::W256(i) => {
-                let hasher: Arc<NativeHasher<Code256>> =
-                    Arc::new(NativeHasher::with_projection(i.projection().clone()));
+                let hasher = pick_hasher::<Code256>(runtime, i.projection().clone());
                 Ok(AnyEngine::W256(Arc::new(SearchEngine::new(Arc::new(i), items, hasher, cfg)?)))
             }
+        }
+    }
+
+    /// Which bulk-hashing backend the selected arm runs ("native"/"pjrt").
+    pub fn hasher_backend(&self) -> &'static str {
+        match self {
+            Self::W64(e) => e.hasher_backend(),
+            Self::W128(e) => e.hasher_backend(),
+            Self::W256(e) => e.hasher_backend(),
         }
     }
 
@@ -376,17 +433,64 @@ impl AnyEngine {
     }
 }
 
+/// Build one width arm. `native_width` is the panel width of the native
+/// path (64 for the `u64` arm, `hash_bits` for the wide arms); a
+/// matching PJRT runtime overrides it with the artifact's `proj_width`
+/// so kernel and panel geometry agree.
 fn build_arm<C: CodeWord>(
     items: Arc<Dataset>,
     params: RangeLshParams,
     seed: u64,
     cfg: ServeConfig,
-    width: usize,
+    native_width: usize,
+    runtime: Option<&RuntimeHandle>,
 ) -> Result<SearchEngine<C>> {
-    let hasher: Arc<NativeHasher<C>> = Arc::new(NativeHasher::new(items.dim(), width, seed));
+    if let Some(rt) = runtime {
+        let m = rt.manifest();
+        if m.code_words == C::WORDS
+            && rt.supports_dim(items.dim())
+            && m.proj_width >= params.hash_bits()
+        {
+            let proj = Arc::new(Projection::gaussian(items.dim() + 1, m.proj_width, seed));
+            // `new` re-checks the geometry; a residual mismatch (or the
+            // stub backend) falls through to native rather than failing
+            // the build — with the reason on stderr so "why not PJRT?"
+            // is answerable from the log.
+            match PjrtHasher::<C>::new(rt.clone(), proj) {
+                Ok(h) => {
+                    let hasher: Arc<dyn ItemHasher<C>> = Arc::new(h);
+                    let index: Arc<RangeLshIndex<C>> =
+                        Arc::new(RangeLshIndex::build(&items, hasher.as_ref(), params)?);
+                    return SearchEngine::new(index, items, hasher, cfg);
+                }
+                Err(e) => {
+                    eprintln!("[rangelsh] pjrt hasher unavailable, using native: {e:#}");
+                }
+            }
+        }
+    }
+    let hasher: Arc<NativeHasher<C>> =
+        Arc::new(NativeHasher::new(items.dim(), native_width, seed));
     let index: Arc<RangeLshIndex<C>> =
         Arc::new(RangeLshIndex::build(&items, hasher.as_ref(), params)?);
     SearchEngine::new(index, items, hasher, cfg)
+}
+
+/// The query-hashing backend for a loaded index's stored panel: PJRT
+/// when the runtime accepts the panel's geometry, native otherwise.
+fn pick_hasher<C: CodeWord>(
+    runtime: Option<&RuntimeHandle>,
+    proj: Arc<Projection>,
+) -> Arc<dyn ItemHasher<C>> {
+    if let Some(rt) = runtime {
+        match PjrtHasher::<C>::new(rt.clone(), proj.clone()) {
+            Ok(h) => return Arc::new(h),
+            Err(e) => {
+                eprintln!("[rangelsh] pjrt hasher unavailable, using native: {e:#}");
+            }
+        }
+    }
+    Arc::new(NativeHasher::<C>::with_projection(proj))
 }
 
 #[cfg(test)]
@@ -629,5 +733,67 @@ mod tests {
         let d = Arc::new(synthetic::longtail_sift(100, 8, 13));
         let cfg = ServeConfig { code_bits: 64, ..Default::default() };
         assert!(AnyEngine::build_native_range(d, RangeLshParams::new(128, 8), 1, cfg).is_err());
+    }
+
+    #[test]
+    fn wide_any_engine_batch_recovers_exact_topk() {
+        // code_bits 128/256 through the full batched path: blocked item
+        // hashing at build, bulk query hashing, chunked probe + re-rank.
+        // Full budget must recover the exact top-k at every width, and
+        // the batch must agree with per-query searches exactly.
+        let d = Arc::new(synthetic::longtail_sift(1200, 12, 50));
+        let q = synthetic::gaussian_queries(6, 12, 51);
+        let gt = crate::eval::exact_topk(&d, &q, 5);
+        for bits in [128usize, 256] {
+            let cfg = ServeConfig {
+                probe_budget: usize::MAX,
+                top_k: 5,
+                code_bits: bits,
+                ..Default::default()
+            };
+            let engine = AnyEngine::build_native_range(
+                d.clone(),
+                RangeLshParams::new(bits, 8),
+                52,
+                cfg,
+            )
+            .unwrap();
+            assert_eq!(engine.hasher_backend(), "native", "no artifacts in unit tests");
+            let batch = engine.search_batch(q.flat()).unwrap();
+            assert_eq!(batch.len(), q.len());
+            for qi in 0..q.len() {
+                let ids: Vec<ItemId> = batch[qi].iter().map(|r| r.id).collect();
+                assert_eq!(ids, gt[qi], "bits {bits} query {qi}");
+                assert_eq!(batch[qi], engine.search(q.row(qi)).unwrap(), "bits {bits} q {qi}");
+            }
+        }
+    }
+
+    #[test]
+    fn build_range_auto_without_runtime_equals_native_build() {
+        // The selection hook's degrade contract: runtime == None must
+        // produce an engine whose answers are identical to the plain
+        // native build at every width arm.
+        let d = Arc::new(synthetic::longtail_sift(600, 8, 60));
+        let q = synthetic::gaussian_queries(3, 8, 61);
+        for bits in [32usize, 128] {
+            let cfg = ServeConfig {
+                probe_budget: 150,
+                top_k: 5,
+                code_bits: bits,
+                ..Default::default()
+            };
+            let params = RangeLshParams::new(bits, 8);
+            let auto =
+                AnyEngine::build_range_auto(d.clone(), params, 62, cfg.clone(), None).unwrap();
+            let native = AnyEngine::build_native_range(d.clone(), params, 62, cfg).unwrap();
+            for qi in 0..q.len() {
+                assert_eq!(
+                    auto.search(q.row(qi)).unwrap(),
+                    native.search(q.row(qi)).unwrap(),
+                    "bits {bits} query {qi}"
+                );
+            }
+        }
     }
 }

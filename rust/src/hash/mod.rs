@@ -22,9 +22,10 @@ use crate::Result;
 
 /// A bulk hasher over raw item/query rows emitting `C`-wide codes: the
 /// abstraction that lets the index layer run on either the Rust-native
-/// path ([`NativeHasher`]) or the AOT-compiled Pallas kernel via PJRT
-/// ([`crate::runtime::PjrtHasher`], `u64` codes only — the kernel packs
-/// two u32 words).
+/// path ([`NativeHasher`], blocked tile sweep) or the AOT-compiled
+/// Pallas kernel via PJRT ([`crate::runtime::PjrtHasher`], generic over
+/// the code word — the kernel packs `width / 32` u32 words per item,
+/// 2/4/8 at L = 64/128/256).
 ///
 /// The parameter defaults to `u64`, so `dyn ItemHasher` keeps meaning the
 /// original single-word interface.
@@ -56,4 +57,9 @@ pub trait ItemHasher<C: CodeWord = u64>: Send + Sync {
 
     /// Hash queries: unit-normalise, append 0, sign-project (Eq. 8).
     fn hash_queries(&self, rows: &[f32]) -> Result<Vec<C>>;
+
+    /// Short backend tag for serving logs.
+    fn backend(&self) -> &'static str {
+        "native"
+    }
 }

@@ -8,6 +8,12 @@
 //! extend the identical convention across words: hash function `j` sets
 //! bit `j % 64` of word `j / 64`, so a wide code whose high words are
 //! zero agrees bit-for-bit with the scalar path (property-tested).
+//!
+//! Bulk item hashing is *blocked* (`hash_items_blocked`): tiles of
+//! `BLOCK_ROWS` transformed rows are swept against the projection
+//! panel per pass — the native analogue of the Pallas kernel's
+//! `[BLOCK_B, D] @ [D, L]` tiling — with the original per-item path kept
+//! as the bit-for-bit oracle (`hash_items_unblocked`).
 
 use std::marker::PhantomData;
 use std::sync::Arc;
@@ -21,8 +27,33 @@ use crate::Result;
 #[cfg(doc)]
 use super::codes::{Code128, Code256};
 
+/// Tile height for the blocked bulk paths ([`NativeHasher::hash_items_blocked`]):
+/// per thread, one `[BLOCK_ROWS, dim+1]` transformed tile plus one
+/// `[BLOCK_ROWS, width]` f32 accumulator (32 x 256 x 4 B = 32 KB at the
+/// widest code — L2-resident), amortising each panel-row load across the
+/// whole tile instead of reloading the panel per item.
+const BLOCK_ROWS: usize = 32;
+
+thread_local! {
+    /// Per-thread Eq. 8 transform buffer shared by the per-item paths
+    /// (`hash_query_one`, `hash_queries`, the `*_unblocked` oracles) —
+    /// no per-item allocation anywhere on the hashing paths (§Perf).
+    static ROW_SCRATCH: std::cell::RefCell<Vec<f32>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+    /// Per-thread blocked-path scratch: (per-row transform buffer,
+    /// transformed tile, sign accumulator).
+    static TILE_SCRATCH: std::cell::RefCell<(Vec<f32>, Vec<f32>, Vec<f32>)> =
+        const { std::cell::RefCell::new((Vec::new(), Vec::new(), Vec::new())) };
+}
+
 /// CPU sign-RP hasher over a shared [`Projection`], emitting `C`-wide
 /// codes. Defaults to the original `u64` single-word path.
+///
+/// Bulk item hashing runs *blocked* ([`Self::hash_items_blocked`]): the
+/// default [`ItemHasher::hash_items`] processes `BLOCK_ROWS`-row tiles
+/// against the panel per pass with multi-word sign packing, and the
+/// original per-item path is kept as the bit-for-bit cross-check oracle
+/// ([`Self::hash_items_unblocked`], property-tested at every width).
 pub struct NativeHasher<C: CodeWord = u64> {
     proj: Arc<Projection>,
     _code: PhantomData<fn() -> C>,
@@ -59,11 +90,7 @@ impl<C: CodeWord> NativeHasher<C> {
             "query length {} != dim {dim}",
             query.len()
         );
-        thread_local! {
-            static QBUF: std::cell::RefCell<Vec<f32>> =
-                const { std::cell::RefCell::new(Vec::new()) };
-        }
-        Ok(QBUF.with(|b| {
+        Ok(ROW_SCRATCH.with(|b| {
             let buf = &mut *b.borrow_mut();
             transform_query(query, buf);
             self.hash_transformed(buf)
@@ -88,6 +115,113 @@ impl<C: CodeWord> NativeHasher<C> {
         // Strictly-positive convention, matching the Pallas kernel.
         C::pack_from_signs(acc)
     }
+
+    /// Validate a bulk row buffer; returns the row count.
+    fn check_rows(&self, rows: &[f32]) -> Result<usize> {
+        let dim = self.proj.dim_in() - 1;
+        anyhow::ensure!(
+            rows.len() % dim == 0,
+            "row buffer length {} not a multiple of dim {dim}",
+            rows.len()
+        );
+        Ok(rows.len() / dim)
+    }
+
+    /// Blocked bulk item hashing (§Perf) — the default wide-code batch
+    /// path and the native twin of the Pallas kernel's tiling: each
+    /// worker transforms a `BLOCK_ROWS`-row tile into a per-thread
+    /// buffer, then accumulates the whole tile against each panel row in
+    /// one pass (the panel row is loaded once per *tile* instead of once
+    /// per item) before multi-word sign packing.
+    ///
+    /// Bit-for-bit identical to [`Self::hash_items_unblocked`] at every
+    /// width: per (row, hash function) the f32 additions happen in the
+    /// same coordinate order, so no reassociation can flip a sign.
+    pub fn hash_items_blocked(&self, rows: &[f32], u: f32) -> Result<Vec<C>> {
+        self.hash_rows_blocked(rows, Some(u))
+    }
+
+    /// Blocked query hashing: same tiling with the Eq. 8 query transform
+    /// (unit-normalise, zero tail). Identical codes to
+    /// [`ItemHasher::hash_queries`].
+    pub fn hash_queries_blocked(&self, rows: &[f32]) -> Result<Vec<C>> {
+        self.hash_rows_blocked(rows, None)
+    }
+
+    fn hash_rows_blocked(&self, rows: &[f32], u: Option<f32>) -> Result<Vec<C>> {
+        let n = self.check_rows(rows)?;
+        let dim = self.proj.dim_in() - 1;
+        let din = dim + 1;
+        let width = self.proj.width();
+        let n_tiles = n.div_ceil(BLOCK_ROWS);
+        // One tile is a substantial unit of work (a [32, width] panel
+        // sweep), so fan out even small batches.
+        let tiles: Vec<Vec<C>> = par::par_map_cutoff(n_tiles, 2, |t| {
+            let lo = t * BLOCK_ROWS;
+            let hi = ((t + 1) * BLOCK_ROWS).min(n);
+            let b_rows = hi - lo;
+            TILE_SCRATCH.with(|s| {
+                let (rbuf, xt, acc) = &mut *s.borrow_mut();
+                // Transform the tile into the per-thread buffer.
+                xt.clear();
+                xt.reserve(b_rows * din);
+                for i in lo..hi {
+                    let row = &rows[i * dim..(i + 1) * dim];
+                    match u {
+                        Some(u) => transform_item(row, u, rbuf),
+                        None => transform_query(row, rbuf),
+                    }
+                    xt.extend_from_slice(rbuf);
+                }
+                // Panel sweep: one pass over the dim+1 coordinates,
+                // each panel row applied to every tile row while hot.
+                acc.clear();
+                acc.resize(b_rows * width, 0.0);
+                for k in 0..din {
+                    let prow = self.proj.row(k);
+                    for b in 0..b_rows {
+                        let v = xt[b * din + k];
+                        let dst = &mut acc[b * width..(b + 1) * width];
+                        for (a, &w) in dst.iter_mut().zip(prow) {
+                            *a += v * w;
+                        }
+                    }
+                }
+                (0..b_rows)
+                    .map(|b| C::pack_from_signs(&acc[b * width..(b + 1) * width]))
+                    .collect()
+            })
+        });
+        Ok(tiles.into_iter().flatten().collect())
+    }
+
+    /// The original per-item bulk path, kept as the cross-check oracle
+    /// for the blocked path (and for the PJRT kernel, transitively).
+    /// Same codes as [`Self::hash_items_blocked`], bit for bit.
+    pub fn hash_items_unblocked(&self, rows: &[f32], u: f32) -> Result<Vec<C>> {
+        let n = self.check_rows(rows)?;
+        let dim = self.proj.dim_in() - 1;
+        Ok(par::par_map(n, |i| {
+            ROW_SCRATCH.with(|b| {
+                let buf = &mut *b.borrow_mut();
+                transform_item(&rows[i * dim..(i + 1) * dim], u, buf);
+                self.hash_transformed(buf)
+            })
+        }))
+    }
+
+    /// Per-item query oracle, the [`Self::hash_items_unblocked`] twin.
+    pub fn hash_queries_unblocked(&self, rows: &[f32]) -> Result<Vec<C>> {
+        let n = self.check_rows(rows)?;
+        let dim = self.proj.dim_in() - 1;
+        Ok(par::par_map(n, |i| {
+            ROW_SCRATCH.with(|b| {
+                let buf = &mut *b.borrow_mut();
+                transform_query(&rows[i * dim..(i + 1) * dim], buf);
+                self.hash_transformed(buf)
+            })
+        }))
+    }
 }
 
 impl<C: CodeWord> ItemHasher<C> for NativeHasher<C> {
@@ -95,34 +229,18 @@ impl<C: CodeWord> ItemHasher<C> for NativeHasher<C> {
         &self.proj
     }
 
+    /// Bulk item hashing — the blocked tile path (see
+    /// [`NativeHasher::hash_items_blocked`]).
     fn hash_items(&self, rows: &[f32], u: f32) -> Result<Vec<C>> {
-        let dim = self.proj.dim_in() - 1;
-        anyhow::ensure!(
-            rows.len() % dim == 0,
-            "row buffer length {} not a multiple of dim {dim}",
-            rows.len()
-        );
-        let n = rows.len() / dim;
-        Ok(par::par_map(n, |i| {
-            let mut buf = Vec::with_capacity(dim + 1);
-            transform_item(&rows[i * dim..(i + 1) * dim], u, &mut buf);
-            self.hash_transformed(&buf)
-        }))
+        self.hash_items_blocked(rows, u)
     }
 
+    /// Per-item with per-thread transform scratch: serving batches are
+    /// small enough that the tile sweep's setup does not pay for itself
+    /// on the query side, but the former per-item `Vec` allocation is
+    /// gone (the thread-local row buffer is reused across a worker's rows).
     fn hash_queries(&self, rows: &[f32]) -> Result<Vec<C>> {
-        let dim = self.proj.dim_in() - 1;
-        anyhow::ensure!(
-            rows.len() % dim == 0,
-            "row buffer length {} not a multiple of dim {dim}",
-            rows.len()
-        );
-        let n = rows.len() / dim;
-        Ok(par::par_map(n, |i| {
-            let mut buf = Vec::with_capacity(dim + 1);
-            transform_query(&rows[i * dim..(i + 1) * dim], &mut buf);
-            self.hash_transformed(&buf)
-        }))
+        self.hash_queries_unblocked(rows)
     }
 }
 
@@ -249,5 +367,60 @@ mod tests {
     fn rejects_panel_wider_than_code_word() {
         let proj = Arc::new(Projection::gaussian(4, 128, 0));
         let _h: NativeHasher<u64> = NativeHasher::with_projection(proj);
+    }
+
+    /// Blocked == per-item, bit for bit, at one width. Row counts cover
+    /// sub-tile, exact-tile, and ragged multi-tile shapes.
+    fn check_blocked_matches_unblocked<C: CodeWord>(width: usize, seed: u64) {
+        let dim = 10;
+        let h: NativeHasher<C> = NativeHasher::new(dim, width, seed);
+        for n in [1usize, 7, BLOCK_ROWS, BLOCK_ROWS + 1, 3 * BLOCK_ROWS + 5] {
+            let d = synthetic::longtail_sift(n, dim, seed ^ n as u64);
+            let u = d.max_norm();
+            assert_eq!(
+                h.hash_items_blocked(d.flat(), u).unwrap(),
+                h.hash_items_unblocked(d.flat(), u).unwrap(),
+                "items width {width} n {n}"
+            );
+            let q = synthetic::gaussian_queries(n, dim, seed ^ ((n as u64) << 8));
+            assert_eq!(
+                h.hash_queries_blocked(q.flat()).unwrap(),
+                h.hash_queries_unblocked(q.flat()).unwrap(),
+                "queries width {width} n {n}"
+            );
+        }
+    }
+
+    #[test]
+    fn blocked_path_matches_per_item_oracle_at_every_width() {
+        check_blocked_matches_unblocked::<u64>(64, 41);
+        check_blocked_matches_unblocked::<Code128>(128, 42);
+        check_blocked_matches_unblocked::<crate::hash::Code256>(256, 43);
+        // Panels narrower than the word also go through the same tiling.
+        check_blocked_matches_unblocked::<u64>(16, 44);
+        check_blocked_matches_unblocked::<Code128>(123, 45);
+    }
+
+    #[test]
+    fn trait_hash_items_is_the_blocked_path() {
+        // The ItemHasher entry point must be the blocked path (codes are
+        // identical either way; this pins the routing via an empty-buffer
+        // sanity call plus value equality on a real batch).
+        let h: NativeHasher = NativeHasher::new(6, 64, 3);
+        let d = synthetic::longtail_sift(70, 6, 4);
+        let u = d.max_norm();
+        assert_eq!(
+            h.hash_items(d.flat(), u).unwrap(),
+            h.hash_items_blocked(d.flat(), u).unwrap()
+        );
+        assert!(h.hash_items(&[], u).unwrap().is_empty());
+        assert!(h.hash_queries(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn blocked_rejects_ragged_buffer() {
+        let h: NativeHasher = NativeHasher::new(4, 16, 0);
+        assert!(h.hash_items_blocked(&[0.0; 7], 1.0).is_err());
+        assert!(h.hash_queries_blocked(&[0.0; 9]).is_err());
     }
 }

@@ -2,7 +2,7 @@
 //! uniform-range alternative evaluated in Fig. 3(a)).
 
 use crate::data::Dataset;
-use crate::ItemId;
+use crate::{ItemId, Result};
 
 /// How to split the 2-norm axis into ranges.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -19,7 +19,7 @@ pub enum PartitionScheme {
 impl std::str::FromStr for PartitionScheme {
     type Err = anyhow::Error;
 
-    fn from_str(s: &str) -> Result<Self, Self::Err> {
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
         match s {
             "percentile" => Ok(Self::Percentile),
             "uniform_range" | "uniform" => Ok(Self::UniformRange),
@@ -44,16 +44,29 @@ pub struct Partition {
 /// ascending norm. The last range always contains the global-max-norm item,
 /// so exactly one range has `U_j == U` (the Theorem 1 condition with
 /// `n^beta = 1`).
-pub fn partition(dataset: &Dataset, m: usize, scheme: PartitionScheme) -> Vec<Partition> {
+///
+/// Every norm must be finite: a NaN norm would silently fall into range 0
+/// through `uniform_range`'s saturating `as usize` cast and then corrupt
+/// the `u_max`/`u_min` invariants (`f32::max`/`min` ignore NaN), and an
+/// infinite norm breaks the interval arithmetic — both are rejected here
+/// with an error naming the first offending item.
+pub fn partition(dataset: &Dataset, m: usize, scheme: PartitionScheme) -> Result<Vec<Partition>> {
     assert!(m >= 1, "need at least one partition");
     let n = dataset.len();
-    if n == 0 {
-        return Vec::new();
+    if let Some(bad) = dataset.norms().iter().position(|nrm| !nrm.is_finite()) {
+        anyhow::bail!(
+            "item {bad} has non-finite 2-norm {}: partitioning requires finite norms \
+             (check the dataset for NaN/inf coordinates)",
+            dataset.norm(bad)
+        );
     }
-    match scheme {
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    Ok(match scheme {
         PartitionScheme::Percentile => percentile(dataset, m),
         PartitionScheme::UniformRange => uniform_range(dataset, m),
-    }
+    })
 }
 
 fn percentile(dataset: &Dataset, m: usize) -> Vec<Partition> {
@@ -127,7 +140,7 @@ mod tests {
     #[test]
     fn percentile_is_balanced_partition() {
         let d = synthetic::longtail_sift(1000, 8, 0);
-        let parts = partition(&d, 32, PartitionScheme::Percentile);
+        let parts = partition(&d, 32, PartitionScheme::Percentile).unwrap();
         assert_eq!(parts.len(), 32);
         check_is_partition(&parts, 1000);
         for p in &parts {
@@ -140,7 +153,7 @@ mod tests {
     fn ranges_are_norm_ordered() {
         let d = synthetic::longtail_sift(500, 8, 1);
         for scheme in [PartitionScheme::Percentile, PartitionScheme::UniformRange] {
-            let parts = partition(&d, 8, scheme);
+            let parts = partition(&d, 8, scheme).unwrap();
             for w in parts.windows(2) {
                 assert!(
                     w[0].u_max <= w[1].u_min + 1e-6,
@@ -156,7 +169,7 @@ mod tests {
     fn last_range_owns_global_max() {
         let d = synthetic::longtail_sift(500, 8, 2);
         for scheme in [PartitionScheme::Percentile, PartitionScheme::UniformRange] {
-            let parts = partition(&d, 16, scheme);
+            let parts = partition(&d, 16, scheme).unwrap();
             let last = parts.last().unwrap();
             assert_eq!(last.u_max, d.max_norm(), "{scheme:?}");
             // Exactly one range attains U (paper: "very often only the
@@ -169,7 +182,7 @@ mod tests {
     #[test]
     fn uniform_range_covers_all_items() {
         let d = synthetic::mf_embeddings(777, 8, 4, 3);
-        let parts = partition(&d, 32, PartitionScheme::UniformRange);
+        let parts = partition(&d, 32, PartitionScheme::UniformRange).unwrap();
         check_is_partition(&parts, 777);
         assert!(parts.len() <= 32);
     }
@@ -179,7 +192,7 @@ mod tests {
         // All-equal norms: percentile partitioning must still split evenly
         // ("ties are broken arbitrarily", Alg. 1).
         let d = synthetic::uniform_norm(100, 8, 0);
-        let parts = partition(&d, 10, PartitionScheme::Percentile);
+        let parts = partition(&d, 10, PartitionScheme::Percentile).unwrap();
         assert_eq!(parts.len(), 10);
         check_is_partition(&parts, 100);
         for p in &parts {
@@ -190,7 +203,7 @@ mod tests {
     #[test]
     fn m_larger_than_n_drops_empty_ranges() {
         let d = synthetic::longtail_sift(5, 4, 0);
-        let parts = partition(&d, 16, PartitionScheme::Percentile);
+        let parts = partition(&d, 16, PartitionScheme::Percentile).unwrap();
         assert_eq!(parts.len(), 5); // one item each, empties dropped
         check_is_partition(&parts, 5);
     }
@@ -198,16 +211,41 @@ mod tests {
     #[test]
     fn single_partition_is_whole_dataset() {
         let d = synthetic::longtail_sift(50, 4, 0);
-        let parts = partition(&d, 1, PartitionScheme::Percentile);
+        let parts = partition(&d, 1, PartitionScheme::Percentile).unwrap();
         assert_eq!(parts.len(), 1);
         assert_eq!(parts[0].ids.len(), 50);
         assert_eq!(parts[0].u_max, d.max_norm());
     }
 
     #[test]
+    fn rejects_non_finite_norms() {
+        // Regression: a NaN-norm item used to fall silently into range 0
+        // through uniform_range's saturating `as usize` cast, and
+        // make_partition's f32::max/min then ignored the NaN — leaving
+        // corrupt u_max/u_min invariants instead of an error.
+        let mut flat = vec![1.0f32; 4 * 6];
+        flat[9] = f32::NAN; // item 2
+        let d = Dataset::from_flat(4, flat);
+        for scheme in [PartitionScheme::Percentile, PartitionScheme::UniformRange] {
+            let err = partition(&d, 4, scheme).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("non-finite"), "{scheme:?}: {msg}");
+            assert!(msg.contains("item 2"), "{scheme:?} must name the item: {msg}");
+        }
+        // Infinite coordinates are rejected the same way.
+        let mut flat = vec![1.0f32; 4 * 3];
+        flat[0] = f32::INFINITY;
+        let d = Dataset::from_flat(4, flat);
+        assert!(partition(&d, 2, PartitionScheme::UniformRange).is_err());
+        // All-finite data still partitions fine (m = 1 fast path too).
+        let d = Dataset::from_flat(4, vec![1.0; 4 * 3]);
+        assert_eq!(partition(&d, 1, PartitionScheme::Percentile).unwrap().len(), 1);
+    }
+
+    #[test]
     fn u_bounds_are_consistent() {
         let d = synthetic::longtail_sift(200, 8, 4);
-        for p in partition(&d, 8, PartitionScheme::UniformRange) {
+        for p in partition(&d, 8, PartitionScheme::UniformRange).unwrap() {
             assert!(p.u_min <= p.u_max);
             for &id in &p.ids {
                 let nrm = d.norm(id as usize);

@@ -143,7 +143,7 @@ impl<C: CodeWord> RangeLshIndex<C> {
         );
         anyhow::ensure!(dataset.max_norm() > 0.0, "dataset max norm must be positive");
 
-        let parts = partition(dataset, params.n_partitions, params.scheme);
+        let parts = partition(dataset, params.n_partitions, params.scheme)?;
         let mut subs = Vec::with_capacity(parts.len());
         for part in parts {
             // Alg. 1 lines 6–7: normalise S_j by U_j, SIMPLE-LSH-index it.

@@ -57,7 +57,7 @@ pub struct RangedL2AlshIndex {
 impl RangedL2AlshIndex {
     pub fn build(dataset: &Dataset, params: RangedL2AlshParams) -> Result<Self> {
         anyhow::ensure!(params.n_partitions >= 1, "need at least one partition");
-        let parts = partition(dataset, params.n_partitions, params.scheme);
+        let parts = partition(dataset, params.n_partitions, params.scheme)?;
         let mut subs = Vec::with_capacity(parts.len());
         for part in parts {
             let idx = L2AlshIndex::build_with_max_norm(

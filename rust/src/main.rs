@@ -96,10 +96,7 @@ impl Args {
     where
         T::Err: std::fmt::Display,
     {
-        match self.opt(key) {
-            None => Ok(default),
-            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{key} {v:?}: {e}")),
-        }
+        Ok(self.opt_some(key)?.unwrap_or(default))
     }
 
     fn has(&self, key: &str) -> bool {
@@ -301,7 +298,7 @@ fn theory(args: &Args) -> Result<()> {
             g_rho(0.9, s0)
         );
     }
-    let parts = partition(&items, cfg.index.n_partitions, cfg.index.scheme);
+    let parts = partition(&items, cfg.index.n_partitions, cfg.index.scheme)?;
     let us: Vec<f32> = parts.iter().map(|p| p.u_max).collect();
     let queries = cfg.dataset.build_queries();
     let mips = rangelsh::eval::max_inner_products(&items, &queries);
@@ -320,24 +317,31 @@ fn theory(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Load the PJRT runtime when artifacts exist (unless `--native`); every
+/// serve arm then selects PJRT-vs-native per width through `AnyEngine`.
+fn load_runtime(native_only: bool, artifacts: &std::path::Path) -> Option<RuntimeHandle> {
+    if native_only || !artifacts.join("manifest.json").exists() {
+        return None;
+    }
+    match RuntimeHandle::load(artifacts) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            println!("PJRT unavailable ({e:#}); falling back to native hashing");
+            None
+        }
+    }
+}
+
 /// Prefer the AOT Pallas kernel via PJRT; fall back to native (u64 path).
 fn pick_u64_hasher(
-    native_only: bool,
-    artifacts: &std::path::Path,
+    runtime: Option<&RuntimeHandle>,
     proj: Arc<Projection>,
 ) -> Arc<dyn ItemHasher> {
-    if !native_only && artifacts.join("manifest.json").exists() {
-        match RuntimeHandle::load(artifacts).and_then(|rt| PjrtHasher::new(rt, proj.clone())) {
-            Ok(h) => {
-                println!("query hashing: PJRT (AOT Pallas kernel)");
-                return Arc::new(h);
-            }
-            Err(e) => {
-                println!("PJRT unavailable ({e:#}); falling back to native hashing");
-            }
+    if let Some(rt) = runtime {
+        match PjrtHasher::<u64>::new(rt.clone(), proj.clone()) {
+            Ok(h) => return Arc::new(h),
+            Err(e) => println!("PJRT hasher unavailable ({e:#}); native hashing"),
         }
-    } else {
-        println!("query hashing: native");
     }
     Arc::new(NativeHasher::with_projection(proj))
 }
@@ -371,45 +375,33 @@ fn serve(args: &Args) -> Result<()> {
     let dim = items.dim();
 
     let t0 = std::time::Instant::now();
+    // One runtime serves every arm: `AnyEngine` picks PJRT per width when
+    // the artifact geometry matches, blocked-native otherwise.
+    let runtime = load_runtime(args.has("native"), &artifacts);
     let engine: AnyEngine = match loaded {
-        // Loaded single-word index: keep the PJRT-preferring query path.
-        Some((_, AnyRangeLshIndex::W64(index))) => {
-            let hasher =
-                pick_u64_hasher(args.has("native"), &artifacts, index.projection().clone());
-            let index: Arc<dyn CodeProbe> = Arc::new(index);
-            AnyEngine::W64(Arc::new(SearchEngine::new(
-                index,
-                items.clone(),
-                hasher,
-                cfg.serve.clone(),
-            )?))
+        // Loaded index of whatever width the file declared: batch
+        // queries through the kernel when the stored panel matches the
+        // artifact geometry, else native with the same panel.
+        Some((_, index)) => {
+            AnyEngine::from_loaded_with(index, items.clone(), cfg.serve.clone(), runtime.as_ref())?
         }
-        // Loaded wide index: native hashing with the stored panel.
-        Some((_, wide)) => {
-            println!("query hashing: native ({}-bit codes)", wide.code_words() * 64);
-            AnyEngine::from_loaded(wide, items.clone(), cfg.serve.clone())?
-        }
-        // Fresh build, single-word budget: the original u64 path. The
+        // Fresh SIMPLE-LSH build: the historical u64-only arm. The
         // serve-time budget (`[serve] code_bits`, defaulting to the index
         // budget) drives both the width dispatch and the index build, so
         // an override is honoured instead of producing a mismatch.
-        None if cfg.serve.code_bits <= 64 => {
+        None if matches!(cfg.index.algo, IndexAlgo::SimpleLsh) => {
+            anyhow::ensure!(
+                cfg.serve.code_bits <= 64,
+                "algo simple_lsh serves code_bits <= 64 (got {})",
+                cfg.serve.code_bits
+            );
             let proj = Arc::new(Projection::gaussian(dim + 1, 64, cfg.index.seed));
-            let hasher = pick_u64_hasher(args.has("native"), &artifacts, proj);
-            let index: Arc<dyn CodeProbe> = match cfg.index.algo {
-                IndexAlgo::SimpleLsh => Arc::new(SimpleLshIndex::build(
-                    &items,
-                    hasher.as_ref(),
-                    SimpleLshParams::new(cfg.serve.code_bits),
-                )?),
-                _ => Arc::new(RangeLshIndex::build(
-                    &items,
-                    hasher.as_ref(),
-                    RangeLshParams::new(cfg.serve.code_bits, cfg.index.n_partitions)
-                        .with_scheme(cfg.index.scheme)
-                        .with_epsilon(cfg.index.epsilon),
-                )?),
-            };
+            let hasher = pick_u64_hasher(runtime.as_ref(), proj);
+            let index: Arc<dyn CodeProbe> = Arc::new(SimpleLshIndex::build(
+                &items,
+                hasher.as_ref(),
+                SimpleLshParams::new(cfg.serve.code_bits),
+            )?);
             AnyEngine::W64(Arc::new(SearchEngine::new(
                 index,
                 items.clone(),
@@ -417,33 +409,33 @@ fn serve(args: &Args) -> Result<()> {
                 cfg.serve.clone(),
             )?))
         }
-        // Fresh build, wide budget: monomorphized dispatch, native hashing
-        // (the Pallas kernel packs 64 bits; wider kernels are future work).
+        // Fresh RANGE-LSH build at any width: monomorphized dispatch with
+        // per-arm backend selection (the multi-word kernel restores PJRT
+        // batching at L > 64). Non-range algos keep the historical
+        // behavior: range serving at L <= 64, an explicit error wider.
         None => {
             anyhow::ensure!(
-                matches!(cfg.index.algo, IndexAlgo::RangeLsh),
+                cfg.serve.code_bits <= 64 || matches!(cfg.index.algo, IndexAlgo::RangeLsh),
                 "code_bits {} > 64 currently serves algo range_lsh only (got {})",
                 cfg.serve.code_bits,
                 cfg.index.algo
             );
-            println!(
-                "query hashing: native ({} x u64 code words)",
-                cfg.serve.code_bits.div_ceil(64)
-            );
-            AnyEngine::build_native_range(
+            AnyEngine::build_range_auto(
                 items.clone(),
                 RangeLshParams::new(cfg.serve.code_bits, cfg.index.n_partitions)
                     .with_scheme(cfg.index.scheme)
                     .with_epsilon(cfg.index.epsilon),
                 cfg.index.seed,
                 cfg.serve.clone(),
+                runtime.as_ref(),
             )?
         }
     };
     println!(
-        "engine ready in {:.2}s ({} x u64 code words)",
+        "engine ready in {:.2}s ({} x u64 code words, {} hashing)",
         t0.elapsed().as_secs_f64(),
-        engine.code_words()
+        engine.code_words(),
+        engine.hasher_backend()
     );
 
     // Per-request overrides of the [serve] defaults — the knobs every
@@ -480,31 +472,41 @@ fn serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Smoke-execute one hash dim at the artifact's code width and
+/// cross-check against the blocked native path.
+fn smoke_hash<C: CodeWord>(rt: &RuntimeHandle, dim: usize) -> Result<()> {
+    let proj = Arc::new(Projection::gaussian(dim + 1, rt.manifest().proj_width, 0));
+    let hasher: PjrtHasher<C> = PjrtHasher::new(rt.clone(), proj.clone())?;
+    let rows = vec![0.5f32; 4 * dim];
+    let codes = hasher.hash_items(&rows, 2.0)?;
+    let native_hasher: NativeHasher<C> = NativeHasher::with_projection(proj);
+    let native = native_hasher.hash_items(&rows, 2.0)?;
+    println!(
+        "smoke hash (dim {dim}): pjrt {:016x?} vs native {:016x?} — {}",
+        codes[0].as_words(),
+        native[0].as_words(),
+        if codes == native { "MATCH" } else { "MISMATCH" }
+    );
+    Ok(())
+}
+
 fn artifacts_check(args: &Args) -> Result<()> {
     let dir = PathBuf::from(args.opt("dir").unwrap_or(DEFAULT_ARTIFACT_DIR));
     let rt = RuntimeHandle::load(&dir)?;
     let m = rt.manifest();
     println!(
-        "artifacts ok: format={}, item_block={}, query_block={}, proj_width={}",
-        m.format, m.item_block, m.query_block, m.proj_width
+        "artifacts ok: format={}, item_block={}, query_block={}, proj_width={}, code_words={}",
+        m.format, m.item_block, m.query_block, m.proj_width, m.code_words
     );
     for e in &m.entries {
         println!("  {} <- {}", e.name, e.file);
     }
-    // Smoke-execute the first hash dim and cross-check against native.
     if let Some(&dim) = m.hash_dims().first() {
-        let proj = Arc::new(Projection::gaussian(dim + 1, m.proj_width, 0));
-        let hasher = PjrtHasher::new(rt.clone(), proj.clone())?;
-        let rows = vec![0.5f32; 4 * dim];
-        let codes = hasher.hash_items(&rows, 2.0)?;
-        let native_hasher: NativeHasher = NativeHasher::with_projection(proj);
-        let native = native_hasher.hash_items(&rows, 2.0)?;
-        println!(
-            "smoke hash (dim {dim}): pjrt {:016x} vs native {:016x} — {}",
-            codes[0],
-            native[0],
-            if codes == native { "MATCH" } else { "MISMATCH" }
-        );
+        match rt.code_words() {
+            1 => smoke_hash::<u64>(&rt, dim)?,
+            2 => smoke_hash::<Code128>(&rt, dim)?,
+            _ => smoke_hash::<Code256>(&rt, dim)?,
+        }
     }
     rt.shutdown();
     Ok(())

@@ -1,25 +1,38 @@
 //! [`PjrtHasher`]: the [`ItemHasher`] implementation backed by the AOT
-//! Pallas sign-hash kernel. Chunks arbitrary row counts into the fixed
-//! `item_block` geometry, pads the tail block with zeros, discards padded
-//! outputs, and packs the kernel's `[B, 2] u32` words into `u64` codes.
+//! Pallas sign-hash kernel, generic over the code word width. Chunks
+//! arbitrary row counts into the fixed `item_block` geometry, pads the
+//! tail block with zeros, discards padded outputs, and packs the
+//! kernel's `[B, width/32] u32` words into `C`-wide codes — 2 u32 words
+//! per `u64` code, 4 per [`Code128`], 8 per [`Code256`], matching the
+//! manifest's `code_words` key (`C::WORDS` must equal it, checked at
+//! construction so a width-128 artifact directory can never feed a
+//! `u64` engine and vice versa).
 
+use std::marker::PhantomData;
 use std::sync::Arc;
 
-use crate::hash::{ItemHasher, Projection};
+use crate::hash::{CodeWord, ItemHasher, Projection};
 use crate::runtime::RuntimeHandle;
 use crate::Result;
 
+#[cfg(doc)]
+use crate::hash::{Code128, Code256};
+
 /// PJRT-backed bulk hasher sharing a [`Projection`] with the native path.
-pub struct PjrtHasher {
+/// Defaults to the original `u64` single-word codes.
+pub struct PjrtHasher<C: CodeWord = u64> {
     runtime: RuntimeHandle,
     proj: Arc<Projection>,
     /// Flat panel cached in the Arc<Vec> shape the worker wants.
     proj_flat: Arc<Vec<f32>>,
+    _code: PhantomData<fn() -> C>,
 }
 
-impl PjrtHasher {
+impl<C: CodeWord> PjrtHasher<C> {
     /// `proj.dim_in()` must equal `d + 1` for a compiled `hash_*_d{d}`
-    /// artifact, and `proj.width()` must equal the manifest's proj width.
+    /// artifact, `proj.width()` must equal the manifest's proj width,
+    /// and the manifest's `code_words` must equal `C::WORDS` (one
+    /// artifact directory serves exactly one code width).
     pub fn new(runtime: RuntimeHandle, proj: Arc<Projection>) -> Result<Self> {
         let dim = proj.dim_in() - 1;
         anyhow::ensure!(
@@ -34,16 +47,24 @@ impl PjrtHasher {
             proj.width(),
             runtime.manifest().proj_width
         );
+        anyhow::ensure!(
+            runtime.manifest().code_words == C::WORDS,
+            "artifact packs {} code word(s) but the engine runs {}-word codes — \
+             re-run `make artifacts` with --width {}",
+            runtime.manifest().code_words,
+            C::WORDS,
+            C::MAX_BITS
+        );
         let proj_flat = Arc::new(proj.flat().to_vec());
-        Ok(Self { runtime, proj, proj_flat })
+        Ok(Self { runtime, proj, proj_flat, _code: PhantomData })
     }
 
-    /// Words per item emitted by the kernel (width / 32).
-    fn words(&self) -> usize {
+    /// u32 words per item emitted by the kernel (width / 32).
+    fn kernel_words(&self) -> usize {
         self.proj.width().div_ceil(32)
     }
 
-    fn hash_blocks(&self, rows: &[f32], u: Option<f32>) -> Result<Vec<u64>> {
+    fn hash_blocks(&self, rows: &[f32], u: Option<f32>) -> Result<Vec<C>> {
         let dim = self.dim();
         anyhow::ensure!(
             rows.len() % dim == 0,
@@ -53,7 +74,7 @@ impl PjrtHasher {
         let n = rows.len() / dim;
         let item_block = self.runtime.manifest().item_block;
         let query_block = self.runtime.manifest().query_block;
-        let words = self.words();
+        let words = self.kernel_words();
         let mut codes = Vec::with_capacity(n);
         for chunk in rows.chunks(item_block * dim) {
             let valid = chunk.len() / dim;
@@ -78,28 +99,35 @@ impl PjrtHasher {
             };
             anyhow::ensure!(packed.len() == block_rows * words, "kernel output size mismatch");
             for i in 0..valid {
-                let mut code = 0u64;
+                // Little-endian across u32 words: kernel word w holds
+                // hash functions 32w..32w+31, i.e. bits 32(w%2).. of u64
+                // word w/2 — the CodeWord bit convention exactly.
+                let mut w64 = [0u64; 4];
                 for w in 0..words {
-                    code |= (packed[i * words + w] as u64) << (32 * w);
+                    w64[w / 2] |= (packed[i * words + w] as u64) << (32 * (w % 2));
                 }
-                codes.push(code);
+                codes.push(C::from_words(&w64[..C::WORDS]));
             }
         }
         Ok(codes)
     }
 }
 
-impl ItemHasher for PjrtHasher {
+impl<C: CodeWord> ItemHasher<C> for PjrtHasher<C> {
     fn projection(&self) -> &Arc<Projection> {
         &self.proj
     }
 
-    fn hash_items(&self, rows: &[f32], u: f32) -> Result<Vec<u64>> {
+    fn hash_items(&self, rows: &[f32], u: f32) -> Result<Vec<C>> {
         anyhow::ensure!(u > 0.0, "normalisation constant must be positive");
         self.hash_blocks(rows, Some(u))
     }
 
-    fn hash_queries(&self, rows: &[f32]) -> Result<Vec<u64>> {
+    fn hash_queries(&self, rows: &[f32]) -> Result<Vec<C>> {
         self.hash_blocks(rows, None)
+    }
+
+    fn backend(&self) -> &'static str {
+        "pjrt"
     }
 }

@@ -32,7 +32,15 @@ pub struct Manifest {
     /// Rows per score query block.
     pub query_block: usize,
     /// Hash functions per artifact (Rust masks down to the code length).
+    /// One directory is compiled at exactly one width (64/128/256 via
+    /// `aot.py --width`).
     pub proj_width: usize,
+    /// `u64` words per packed code (1/2/4) — the key the hashing layer
+    /// uses to select the matching [`crate::hash::CodeWord`]
+    /// monomorphization (`PjrtHasher<C>` requires `C::WORDS` equal to
+    /// this). Always `ceil(proj_width / 64)`; older width-64 manifests
+    /// omit the field and default to 1.
+    pub code_words: usize,
     pub entries: Vec<ArtifactEntry>,
 }
 
@@ -64,7 +72,27 @@ impl Manifest {
             "unsupported artifact format {format:?} (want hlo-text)"
         );
         let proj_width = usize_field("proj_width")?;
-        anyhow::ensure!((1..=64).contains(&proj_width), "bad proj_width {proj_width}");
+        anyhow::ensure!((1..=256).contains(&proj_width), "bad proj_width {proj_width}");
+        // Wide manifests (aot.py --width) record the u64 word count the
+        // packed codes fill; legacy width-64 manifests omit it. Absent
+        // is fine (derive from the width); present-but-unparseable is a
+        // corrupt manifest, not a default.
+        let derived_words = proj_width.div_ceil(64);
+        let code_words = match j.get("code_words") {
+            None => derived_words,
+            Some(v) => v
+                .as_usize()
+                .context("manifest code_words must be a non-negative integer")?,
+        };
+        anyhow::ensure!(
+            code_words == derived_words,
+            "manifest code_words {code_words} inconsistent with proj_width \
+             {proj_width} (expect {derived_words})"
+        );
+        anyhow::ensure!(
+            matches!(code_words, 1 | 2 | 4),
+            "code_words {code_words} has no CodeWord impl (want 1, 2 or 4)"
+        );
 
         let mut entries = Vec::new();
         for e in j
@@ -105,6 +133,7 @@ impl Manifest {
             item_block: usize_field("item_block")?,
             query_block: usize_field("query_block")?,
             proj_width,
+            code_words,
             entries,
         })
     }
@@ -141,12 +170,44 @@ mod tests {
         let m = Manifest::parse(json).unwrap();
         assert_eq!(m.item_block, 2048);
         assert_eq!(m.query_block, 256);
+        // Legacy manifest without code_words: defaults from proj_width.
+        assert_eq!(m.code_words, 1);
         let e = m.entry("hash_items_d16").unwrap();
         assert_eq!(e.inputs.len(), 3);
         assert_eq!(e.inputs[0].shape, vec![2048, 16]);
         assert_eq!(e.inputs[1].shape, Vec::<usize>::new());
         assert!(m.entry("nope").is_none());
         assert_eq!(m.hash_dims(), vec![16]);
+    }
+
+    #[test]
+    fn parses_wide_manifest_code_words() {
+        let json = r#"{"format": "hlo-text", "item_block": 2048,
+                       "query_block": 256, "proj_width": 128,
+                       "code_words": 2, "entries": []}"#;
+        let m = Manifest::parse(json).unwrap();
+        assert_eq!(m.proj_width, 128);
+        assert_eq!(m.code_words, 2);
+        // Omitted code_words derives from the width at any width.
+        let json = r#"{"format": "hlo-text", "item_block": 2048,
+                       "query_block": 256, "proj_width": 256, "entries": []}"#;
+        assert_eq!(Manifest::parse(json).unwrap().code_words, 4);
+    }
+
+    #[test]
+    fn rejects_inconsistent_or_unsupported_code_words() {
+        // code_words contradicting proj_width.
+        let json = r#"{"format": "hlo-text", "item_block": 1, "query_block": 1,
+                       "proj_width": 128, "code_words": 1, "entries": []}"#;
+        assert!(Manifest::parse(json).is_err());
+        // A width needing 3 words has no CodeWord impl.
+        let json = r#"{"format": "hlo-text", "item_block": 1, "query_block": 1,
+                       "proj_width": 192, "entries": []}"#;
+        assert!(Manifest::parse(json).is_err());
+        // Width past the 256-bit ceiling.
+        let json = r#"{"format": "hlo-text", "item_block": 1, "query_block": 1,
+                       "proj_width": 320, "entries": []}"#;
+        assert!(Manifest::parse(json).is_err());
     }
 
     #[test]
@@ -170,7 +231,8 @@ mod tests {
         if path.join("manifest.json").exists() {
             let m = Manifest::load(&path).unwrap();
             assert!(!m.entries.is_empty());
-            assert_eq!(m.proj_width, 64);
+            // One width per directory, whichever `aot.py --width` built.
+            assert_eq!(m.code_words, m.proj_width.div_ceil(64));
         }
     }
 }

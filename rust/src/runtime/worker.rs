@@ -5,6 +5,14 @@
 //! cargo feature; the default offline build ships a stub whose
 //! [`RuntimeHandle::load`] fails with a clear error, and every call site
 //! falls back to the native hashing/scoring path.
+//!
+//! Code-width note: the actor protocol is width-agnostic — hash requests
+//! carry padded f32 blocks and replies carry `proj_width / 32` packed
+//! u32 words per row, whatever width the artifact directory was compiled
+//! at (`aot.py --width`, recorded as the manifest's `proj_width` +
+//! `code_words`). The `CodeWord`-typed packing lives entirely in
+//! [`crate::runtime::PjrtHasher`], so wide codes add no new request
+//! variants here.
 
 use std::path::PathBuf;
 use std::sync::mpsc;
@@ -92,6 +100,14 @@ impl RuntimeHandle {
     /// True if a `hash_items` artifact exists for dimensionality `dim`.
     pub fn supports_dim(&self, dim: usize) -> bool {
         self.manifest.entry(&format!("hash_items_d{dim}")).is_some()
+    }
+
+    /// `u64` words per packed code for this artifact directory (1/2/4).
+    /// The worker itself is width-agnostic — padded f32 blocks in, packed
+    /// u32 words out — so the `CodeWord` dispatch happens one level up in
+    /// [`crate::runtime::PjrtHasher`], keyed off this value.
+    pub fn code_words(&self) -> usize {
+        self.manifest.code_words
     }
 
     fn roundtrip<T>(&self, make: impl FnOnce(mpsc::Sender<Result<T>>) -> Request) -> Result<T> {

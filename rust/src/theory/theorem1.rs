@@ -91,7 +91,7 @@ mod tests {
         // A realistic long-tail instance: the paper's "mild conditions"
         // should hold with a modest number of ranges.
         let d = synthetic::longtail_sift(50_000, 16, 0);
-        let parts = partition(&d, 32, PartitionScheme::Percentile);
+        let parts = partition(&d, 32, PartitionScheme::Percentile).unwrap();
         let us: Vec<f32> = parts.iter().map(|p| p.u_max).collect();
         let s0 = 0.3 * d.max_norm() as f64;
         let rep = theorem1_check(d.len(), &us, d.max_norm(), s0, 0.7);

@@ -7,7 +7,7 @@ use std::sync::Arc;
 
 use rangelsh::data::synthetic;
 use rangelsh::eval::exact_topk;
-use rangelsh::hash::{ItemHasher, NativeHasher, Projection};
+use rangelsh::hash::{Code128, Code256, CodeWord, ItemHasher, NativeHasher, Projection};
 use rangelsh::runtime::{PjrtHasher, PjrtScorer, RuntimeHandle};
 
 fn runtime() -> Option<RuntimeHandle> {
@@ -23,6 +23,20 @@ fn runtime() -> Option<RuntimeHandle> {
     Some(RuntimeHandle::load(dir).expect("artifacts exist but failed to load"))
 }
 
+/// The u64-specific tests additionally need a width-64 artifact dir
+/// (one directory is compiled at exactly one width).
+fn runtime_u64() -> Option<RuntimeHandle> {
+    let rt = runtime()?;
+    if rt.code_words() != 1 {
+        eprintln!(
+            "SKIP: artifacts compiled at {} code words — u64 cross-checks need --width 64",
+            rt.code_words()
+        );
+        return None;
+    }
+    Some(rt)
+}
+
 /// Fraction of differing code bits between two code vectors.
 fn bit_disagreement(a: &[u64], b: &[u64]) -> f64 {
     assert_eq!(a.len(), b.len());
@@ -32,10 +46,10 @@ fn bit_disagreement(a: &[u64], b: &[u64]) -> f64 {
 
 #[test]
 fn pjrt_item_codes_match_native() {
-    let Some(rt) = runtime() else { return };
+    let Some(rt) = runtime_u64() else { return };
     for dim in rt.manifest().hash_dims() {
         let proj = Arc::new(Projection::gaussian(dim + 1, 64, 7));
-        let pjrt = PjrtHasher::new(rt.clone(), proj.clone()).unwrap();
+        let pjrt = PjrtHasher::<u64>::new(rt.clone(), proj.clone()).unwrap();
         let native: NativeHasher = NativeHasher::with_projection(proj);
         // 3000 rows: one full block + a padded tail block.
         let items = synthetic::longtail_sift(3000, dim, 1);
@@ -52,10 +66,10 @@ fn pjrt_item_codes_match_native() {
 
 #[test]
 fn pjrt_query_codes_match_native() {
-    let Some(rt) = runtime() else { return };
+    let Some(rt) = runtime_u64() else { return };
     for dim in rt.manifest().hash_dims() {
         let proj = Arc::new(Projection::gaussian(dim + 1, 64, 8));
-        let pjrt = PjrtHasher::new(rt.clone(), proj.clone()).unwrap();
+        let pjrt = PjrtHasher::<u64>::new(rt.clone(), proj.clone()).unwrap();
         let native: NativeHasher = NativeHasher::with_projection(proj);
         let queries = synthetic::gaussian_queries(500, dim, 2);
         let a = pjrt.hash_queries(queries.flat()).unwrap();
@@ -67,7 +81,7 @@ fn pjrt_query_codes_match_native() {
 
 #[test]
 fn pjrt_scorer_matches_native_ground_truth() {
-    let Some(rt) = runtime() else { return };
+    let Some(rt) = runtime_u64() else { return };
     let dim = rt.manifest().hash_dims()[0];
     let items = synthetic::longtail_sift(2500, dim, 3);
     let queries = synthetic::gaussian_queries(50, dim, 4);
@@ -88,11 +102,11 @@ fn pjrt_scorer_matches_native_ground_truth() {
 fn pjrt_index_build_equals_native_index_build() {
     use rangelsh::index::range::{RangeLshIndex, RangeLshParams};
     use rangelsh::index::MipsIndex;
-    let Some(rt) = runtime() else { return };
+    let Some(rt) = runtime_u64() else { return };
     let dim = rt.manifest().hash_dims()[0];
     let items = synthetic::longtail_sift(4000, dim, 5);
     let proj = Arc::new(Projection::gaussian(dim + 1, 64, 9));
-    let pjrt = PjrtHasher::new(rt, proj.clone()).unwrap();
+    let pjrt = PjrtHasher::<u64>::new(rt, proj.clone()).unwrap();
     let native: NativeHasher = NativeHasher::with_projection(proj);
     let a = RangeLshIndex::build(&items, &pjrt, RangeLshParams::new(32, 16)).unwrap();
     let b = RangeLshIndex::build(&items, &native, RangeLshParams::new(32, 16)).unwrap();
@@ -116,7 +130,7 @@ fn pjrt_index_build_equals_native_index_build() {
 
 #[test]
 fn runtime_rejects_wrong_shapes() {
-    let Some(rt) = runtime() else { return };
+    let Some(rt) = runtime_u64() else { return };
     let dim = rt.manifest().hash_dims()[0];
     // Bad block size must error, not crash.
     let err = rt.hash_items_block(dim, vec![0.0; 17], 1.0, Arc::new(vec![0.0; (dim + 1) * 64]));
@@ -129,8 +143,61 @@ fn runtime_rejects_wrong_shapes() {
 
 #[test]
 fn pjrt_hasher_rejects_uncompiled_dim() {
-    let Some(rt) = runtime() else { return };
+    let Some(rt) = runtime_u64() else { return };
     // dim 999 has no artifact.
     let proj = Arc::new(Projection::gaussian(1000, 64, 0));
-    assert!(PjrtHasher::new(rt, proj).is_err());
+    assert!(PjrtHasher::<u64>::new(rt, proj).is_err());
+}
+
+/// PJRT vs blocked-native cross-check at whatever width the artifact
+/// directory was compiled at (the multi-word kernel path at 128/256).
+fn check_pjrt_matches_native_wide<C: CodeWord>(rt: RuntimeHandle) {
+    for dim in rt.manifest().hash_dims() {
+        let width = rt.manifest().proj_width;
+        let proj = Arc::new(Projection::gaussian(dim + 1, width, 11));
+        let pjrt: PjrtHasher<C> = PjrtHasher::new(rt.clone(), proj.clone()).unwrap();
+        let native: NativeHasher<C> = NativeHasher::with_projection(proj);
+        let items = synthetic::longtail_sift(3000, dim, 12);
+        let u = items.max_norm();
+        let a = pjrt.hash_items(items.flat(), u).unwrap();
+        let b = native.hash_items(items.flat(), u).unwrap();
+        assert_eq!(a.len(), 3000);
+        let diff: u32 = a
+            .iter()
+            .zip(&b)
+            .map(|(x, y)| x.hamming(*y))
+            .sum();
+        let rate = diff as f64 / (a.len() as f64 * width as f64);
+        assert!(rate < 1e-4, "dim {dim} width {width}: bit disagreement rate {rate}");
+        let queries = synthetic::gaussian_queries(500, dim, 13);
+        let a = pjrt.hash_queries(queries.flat()).unwrap();
+        let b = native.hash_queries(queries.flat()).unwrap();
+        let diff: u32 = a.iter().zip(&b).map(|(x, y)| x.hamming(*y)).sum();
+        let rate = diff as f64 / (a.len() as f64 * width as f64);
+        assert!(rate < 1e-4, "dim {dim} width {width} queries: rate {rate}");
+    }
+}
+
+#[test]
+fn pjrt_multiword_codes_match_native_at_artifact_width() {
+    let Some(rt) = runtime() else { return };
+    match rt.code_words() {
+        1 => check_pjrt_matches_native_wide::<u64>(rt),
+        2 => check_pjrt_matches_native_wide::<Code128>(rt),
+        _ => check_pjrt_matches_native_wide::<Code256>(rt),
+    }
+}
+
+#[test]
+fn pjrt_hasher_rejects_mismatched_code_words() {
+    // A width-64 dir must refuse to feed a Code128 engine and vice
+    // versa — the code_words key is what AnyEngine's selection trusts.
+    let Some(rt) = runtime() else { return };
+    let dim = rt.manifest().hash_dims()[0];
+    let proj = Arc::new(Projection::gaussian(dim + 1, rt.manifest().proj_width, 0));
+    if rt.code_words() == 1 {
+        assert!(PjrtHasher::<Code128>::new(rt, proj).is_err());
+    } else {
+        assert!(PjrtHasher::<u64>::new(rt, proj).is_err());
+    }
 }

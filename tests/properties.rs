@@ -58,7 +58,7 @@ fn prop_partition_is_exact_cover() {
         let dim = 2 + rng.gen_index(10);
         let d = synthetic::longtail_sift(n, dim, seed);
         for scheme in [PartitionScheme::Percentile, PartitionScheme::UniformRange] {
-            let parts = partition(&d, m, scheme);
+            let parts = partition(&d, m, scheme).unwrap();
             let mut seen = vec![false; n];
             for p in &parts {
                 assert!(!p.ids.is_empty(), "empty partition, seed {seed}");
@@ -79,7 +79,7 @@ fn prop_partition_ranges_are_norm_sorted() {
         let m = 1 + rng.gen_index(16);
         let d = synthetic::longtail_sift(n, 4, seed);
         for scheme in [PartitionScheme::Percentile, PartitionScheme::UniformRange] {
-            let parts = partition(&d, m, scheme);
+            let parts = partition(&d, m, scheme).unwrap();
             for w in parts.windows(2) {
                 assert!(
                     w[0].u_max <= w[1].u_min + 1e-6,
@@ -317,6 +317,114 @@ fn prop_wide_native_hasher_extends_scalar_bit_convention() {
         let s = scalar.hash_queries(&q).unwrap()[0];
         let w = wide.hash_queries(&q).unwrap()[0];
         assert_eq!(w, widen::<Code256>(s), "seed {seed}: wide code must zero-extend scalar");
+    });
+}
+
+/// Blocked == per-item, bit for bit: the equivalence contract of the
+/// blocked bulk-hashing path, across random shapes at one width.
+fn check_blocked_hash_equals_per_item<C: CodeWord>(rng: &mut Rng, seed: u64, width: usize) {
+    let dim = 2 + rng.gen_index(12);
+    let n = 1 + rng.gen_index(200);
+    let h: NativeHasher<C> = NativeHasher::new(dim, width, seed ^ width as u64);
+    let d = synthetic::longtail_sift(n, dim, seed ^ 0x5EED);
+    let u = d.max_norm();
+    assert_eq!(
+        h.hash_items_blocked(d.flat(), u).unwrap(),
+        h.hash_items_unblocked(d.flat(), u).unwrap(),
+        "seed {seed} width {width} n {n}: blocked items diverge"
+    );
+    let q = synthetic::gaussian_queries(n, dim, seed ^ 0xF00D);
+    assert_eq!(
+        h.hash_queries_blocked(q.flat()).unwrap(),
+        h.hash_queries_unblocked(q.flat()).unwrap(),
+        "seed {seed} width {width} n {n}: blocked queries diverge"
+    );
+}
+
+#[test]
+fn prop_blocked_hashing_bitwise_equals_per_item_oracle() {
+    forall(10, |rng, seed| {
+        check_blocked_hash_equals_per_item::<u64>(rng, seed, 64);
+        check_blocked_hash_equals_per_item::<Code128>(rng, seed, 128);
+        check_blocked_hash_equals_per_item::<Code256>(rng, seed, 256);
+    });
+}
+
+/// An [`ItemHasher`] forced onto the per-item oracle paths — used to
+/// prove an index built through the default (blocked) path is identical
+/// to one built item-at-a-time.
+struct UnblockedHasher<C: CodeWord>(NativeHasher<C>);
+
+impl<C: CodeWord> ItemHasher<C> for UnblockedHasher<C> {
+    fn projection(&self) -> &std::sync::Arc<rangelsh::hash::Projection> {
+        self.0.projection()
+    }
+
+    fn hash_items(&self, rows: &[f32], u: f32) -> rangelsh::Result<Vec<C>> {
+        self.0.hash_items_unblocked(rows, u)
+    }
+
+    fn hash_queries(&self, rows: &[f32]) -> rangelsh::Result<Vec<C>> {
+        self.0.hash_queries_unblocked(rows)
+    }
+}
+
+/// Index-level stream equivalence for the blocked hash path: RANGE-LSH
+/// built through the blocked default must probe the identical candidate
+/// stream as one built through the per-item oracle, at every budget.
+fn check_blocked_built_index_streams_equal<C: CodeWord>(
+    d: &Dataset,
+    q: &Dataset,
+    params: RangeLshParams,
+    seed: u64,
+    m: usize,
+    width: usize,
+) {
+    use std::sync::Arc;
+    let proj = Arc::new(rangelsh::hash::Projection::gaussian(d.dim() + 1, width, seed));
+    let blocked: NativeHasher<C> = NativeHasher::with_projection(proj.clone());
+    let per_item = UnblockedHasher::<C>(NativeHasher::with_projection(proj));
+    let a = RangeLshIndex::build(d, &blocked, params).unwrap();
+    let b = RangeLshIndex::build(d, &per_item, params).unwrap();
+    for qi in 0..q.len() {
+        let qcode = a.hash_query(q.row(qi));
+        for budget in [1usize, 7, d.len() / 2, usize::MAX] {
+            let (mut oa, mut ob) = (Vec::new(), Vec::new());
+            a.probe_with_code(qcode, budget, &mut oa);
+            b.probe_with_code(qcode, budget, &mut ob);
+            assert_eq!(oa, ob, "seed {seed} m {m} width {width} budget {budget}");
+        }
+    }
+}
+
+#[test]
+fn prop_blocked_built_range_index_equals_per_item_built() {
+    forall(3, |rng, seed| {
+        let n = 200 + rng.gen_index(300);
+        let d = synthetic::longtail_sift(n, 8, seed ^ 0xB10C);
+        let q = synthetic::gaussian_queries(2, 8, seed ^ 0xD00D);
+        for &m in &[1usize, 8, 32] {
+            let p64 = RangeLshParams::new(16, m);
+            check_blocked_built_index_streams_equal::<u64>(&d, &q, p64, seed, m, 64);
+            let p128 = RangeLshParams::new(128, m);
+            check_blocked_built_index_streams_equal::<Code128>(
+                &d,
+                &q,
+                p128,
+                seed,
+                m,
+                p128.hash_bits(),
+            );
+            let p256 = RangeLshParams::new(256, m);
+            check_blocked_built_index_streams_equal::<Code256>(
+                &d,
+                &q,
+                p256,
+                seed,
+                m,
+                p256.hash_bits(),
+            );
+        }
     });
 }
 
