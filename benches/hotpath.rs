@@ -14,6 +14,12 @@
 //!      client pattern of a fresh one-shot re-probe per target — the
 //!      auditable record of the Prober cursor's resume payoff
 //!   4. exact re-rank
+//!   4b. rerank axis (k = 1 / 10 / 100 on the long-tail m=32 config):
+//!      the fused streaming-pruned path (Cauchy–Schwarz admission +
+//!      schedule early-out + range-ordered RerankView reads) vs the
+//!      exhaustive probe-then-score oracle, plus a range-ordered vs
+//!      original-layout gather pair over one probed candidate set —
+//!      the auditable record of the streaming re-rank's payoff
 //!   5. engine end-to-end (batched)
 //!   6. exact ground-truth scan (the brute-force baseline RANGE beats)
 //!
@@ -331,6 +337,113 @@ fn main() -> rangelsh::Result<()> {
         format!("{:.2} Mdots/s", t.throughput(4096) / 1e6),
     ]);
 
+    // 4b. rerank axis: the fused streaming-pruned path vs the exhaustive
+    // probe-then-score oracle, end to end per query on the long-tail m=32
+    // config (acceptance: at k=10 the streaming median must beat the
+    // oracle twin, target >= 2x — the pruned dots plus the early-out pay
+    // for the admission tests). Plus the storage-layout pair: scoring one
+    // probed candidate set through the range-ordered RerankView vs
+    // gathering from the original-order matrix.
+    struct RerankRow {
+        k: usize,
+        mode: &'static str,
+        timing: Timing,
+    }
+    let mut rerank_rows: Vec<RerankRow> = Vec::new();
+    let rerank_budget = if smoke { 4_096usize } else { 16_384 };
+    {
+        use rangelsh::config::{QueryParams, RerankMode};
+        use rangelsh::data::RerankView;
+        let params = RangeLshParams::new(32, 32);
+        let index: Arc<RangeLshIndex> =
+            Arc::new(RangeLshIndex::build(&items, native.as_ref(), params)?);
+        let budget = rerank_budget;
+        let reps = if smoke { 5 } else { 20 };
+        let nq = 8usize;
+        // One engine pair serves every k via per-request overrides — a
+        // per-k rebuild would copy the whole matrix into a fresh
+        // RerankView each round for an identical measured path.
+        let cfg = ServeConfig {
+            probe_budget: budget,
+            top_k: 10,
+            rerank: RerankMode::Streaming,
+            ..Default::default()
+        };
+        let streaming = SearchEngine::new(index.clone(), items.clone(), native.clone(), cfg)?;
+        let cfg = ServeConfig {
+            probe_budget: budget,
+            top_k: 10,
+            rerank: RerankMode::Exhaustive,
+            ..Default::default()
+        };
+        let oracle = SearchEngine::new(index.clone(), items.clone(), native.clone(), cfg)?;
+        for &k in &[1usize, 10, 100] {
+            let p = QueryParams::new().with_top_k(k);
+            let t_stream = bench(1, reps, || {
+                for qi in 0..nq {
+                    std::hint::black_box(streaming.search_with(queries.row(qi), &p).unwrap());
+                }
+            });
+            let t_oracle = bench(1, reps, || {
+                for qi in 0..nq {
+                    std::hint::black_box(oracle.search_with(queries.row(qi), &p).unwrap());
+                }
+            });
+            let speedup =
+                t_oracle.median.as_secs_f64() / t_stream.median.as_secs_f64().max(1e-12);
+            table.row(vec![
+                format!("rerank m=32 k={k} budget {budget} (exhaustive)"),
+                format!("{:?}", t_oracle.median),
+                format!("{:.0} q/s", t_oracle.throughput(nq)),
+            ]);
+            table.row(vec![
+                format!("rerank m=32 k={k} budget {budget} (streaming)"),
+                format!("{:?}", t_stream.median),
+                format!("{speedup:.1}x vs exhaustive"),
+            ]);
+            rerank_rows.push(RerankRow { k, mode: "exhaustive", timing: t_oracle });
+            rerank_rows.push(RerankRow { k, mode: "streaming", timing: t_stream });
+        }
+
+        // Layout pair: same candidate ids, same dots — only the storage
+        // order differs. The probe stream arrives roughly range-by-range,
+        // so the view reads contiguous lines where the original layout
+        // scatters (k = 0 marks these rows in the JSON).
+        let view = RerankView::build(&items);
+        let qcode = index.hash_query(queries.row(0));
+        let mut probe_cands: Vec<u32> = Vec::with_capacity(budget);
+        index.probe_with_code(qcode, budget, &mut probe_cands);
+        let slots: Vec<usize> =
+            probe_cands.iter().map(|&id| view.slot_of(id)).collect();
+        let t_orig = bench(2, reps, || {
+            let mut s = 0.0f32;
+            for &id in &probe_cands {
+                s += items.dot(id as usize, &q0);
+            }
+            std::hint::black_box(s);
+        });
+        let t_view = bench(2, reps, || {
+            let mut s = 0.0f32;
+            for &slot in &slots {
+                s += view.dot_at(slot, &q0);
+            }
+            std::hint::black_box(s);
+        });
+        let speedup = t_orig.median.as_secs_f64() / t_view.median.as_secs_f64().max(1e-12);
+        table.row(vec![
+            format!("gather+dot {} cands (original layout)", probe_cands.len()),
+            format!("{:?}", t_orig.median),
+            format!("{:.2} Mdots/s", t_orig.throughput(probe_cands.len()) / 1e6),
+        ]);
+        table.row(vec![
+            format!("gather+dot {} cands (range-ordered view)", probe_cands.len()),
+            format!("{:?}", t_view.median),
+            format!("{speedup:.2}x vs original"),
+        ]);
+        rerank_rows.push(RerankRow { k: 0, mode: "gather_original", timing: t_orig });
+        rerank_rows.push(RerankRow { k: 0, mode: "gather_view", timing: t_view });
+    }
+
     // 5. engine end-to-end, batched (the original u64 serving path)
     let index: Arc<RangeLshIndex> = Arc::new(RangeLshIndex::build(
         &items,
@@ -440,6 +553,28 @@ fn main() -> rangelsh::Result<()> {
                             ("code_bits", Json::Num(32.0)),
                             ("m", Json::Num(32.0)),
                             ("cumulative_budget", Json::Num(r.budget as f64)),
+                            ("mode", Json::Str(r.mode.into())),
+                            ("median_us", Json::Num(r.timing.median.as_secs_f64() * 1e6)),
+                            ("min_us", Json::Num(r.timing.min.as_secs_f64() * 1e6)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            // streaming/exhaustive engine pairs per k (8 queries per
+            // rep); k = 0 rows are the storage-layout gather pair over
+            // the same probed candidate set.
+            "rerank_axis",
+            Json::Arr(
+                rerank_rows
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("code_bits", Json::Num(32.0)),
+                            ("m", Json::Num(32.0)),
+                            ("budget", Json::Num(rerank_budget as f64)),
+                            ("k", Json::Num(r.k as f64)),
                             ("mode", Json::Str(r.mode.into())),
                             ("median_us", Json::Num(r.timing.median.as_secs_f64() * 1e6)),
                             ("min_us", Json::Num(r.timing.min.as_secs_f64() * 1e6)),

@@ -77,6 +77,10 @@ fn main() -> rangelsh::Result<()> {
         deadline_us: 500,
         probe_budget: 4096, // ~2% of the corpus
         top_k: 10,
+        // Fused streaming re-rank (the default, spelled out here):
+        // Cauchy–Schwarz pruning + schedule early-out, bit-identical
+        // answers to the exhaustive oracle — README §"Re-rank cost model".
+        rerank: rangelsh::config::RerankMode::Streaming,
         code_bits: 32,
     };
     let engine = Arc::new(SearchEngine::new(index, items.clone(), hasher, cfg)?);

@@ -158,6 +158,38 @@ impl Default for EvalConfig {
     }
 }
 
+/// How the engine turns probed candidates into ranked answers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RerankMode {
+    /// Fused streaming re-rank (the default): the probe session is
+    /// extended in blocks that feed straight into a
+    /// [`crate::runtime::BoundedTopK`]; candidates whose Cauchy–Schwarz
+    /// bound `‖q‖·‖x‖` cannot beat the current kth score are skipped
+    /// without a dot (rows are read through the range-ordered
+    /// [`crate::data::RerankView`]), and the whole query stops early once
+    /// the schedule's remaining norm bound `‖q‖·U_j` falls below the kth
+    /// score. Results are bit-identical to `Exhaustive`.
+    #[default]
+    Streaming,
+    /// Probe the full budget, then re-rank every candidate
+    /// ([`crate::runtime::PjrtScorer::rerank_scored`]). Kept as the
+    /// equivalence oracle, and as the mode that keeps SIMPLE-LSH's
+    /// batched codes-vector probe scan for uniform one-shot batches.
+    Exhaustive,
+}
+
+impl FromStr for RerankMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "streaming" => Ok(Self::Streaming),
+            "exhaustive" => Ok(Self::Exhaustive),
+            other => anyhow::bail!("unknown rerank mode {other:?} (streaming | exhaustive)"),
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
     /// Max queries hashed per PJRT batch.
@@ -167,6 +199,11 @@ pub struct ServeConfig {
     /// Per-query probe budget.
     pub probe_budget: usize,
     pub top_k: usize,
+    /// Re-rank strategy (see [`RerankMode`]); `Streaming` builds a
+    /// [`crate::data::RerankView`] at engine construction — one extra
+    /// copy of the matrix traded for contiguous candidate reads and
+    /// norm-bound pruning on every query.
+    pub rerank: RerankMode,
     /// Total code budget L served by the engine (1..=256). Selects the
     /// monomorphized code-word width at index-build time: L <= 64 runs
     /// the original `u64` hot path (PJRT-batchable), wider L runs the
@@ -184,6 +221,7 @@ impl Default for ServeConfig {
             deadline_us: 500,
             probe_budget: 2048,
             top_k: 10,
+            rerank: RerankMode::Streaming,
             code_bits: 64,
         }
     }
@@ -343,6 +381,7 @@ impl Config {
             deadline_us: sv.u64_or("deadline_us", serve_default.deadline_us)?,
             probe_budget: sv.usize_or("probe_budget", serve_default.probe_budget)?,
             top_k: sv.usize_or("top_k", serve_default.top_k)?,
+            rerank: sv.str_or("rerank", "streaming")?.parse()?,
             // Serving width follows the index budget unless overridden.
             code_bits: sv.usize_or("code_bits", index.code_bits)?,
         };
@@ -435,6 +474,17 @@ recall_targets = [0.5, 0.9]
         assert_eq!(cfg.serve.code_bits, 64);
         let bad = format!("{EXAMPLE}\n[serve]\ncode_bits = 300\n");
         assert!(Config::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rerank_mode_parses_and_defaults_to_streaming() {
+        let cfg = Config::parse(EXAMPLE).unwrap();
+        assert_eq!(cfg.serve.rerank, RerankMode::Streaming);
+        let text = format!("{EXAMPLE}\n[serve]\nrerank = \"exhaustive\"\n");
+        assert_eq!(Config::parse(&text).unwrap().serve.rerank, RerankMode::Exhaustive);
+        let bad = format!("{EXAMPLE}\n[serve]\nrerank = \"both\"\n");
+        let err = Config::parse(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("rerank mode"));
     }
 
     #[test]

@@ -7,15 +7,15 @@
 
 use std::sync::Arc;
 
-use crate::config::{QueryParams, ResolvedQueryParams, ServeConfig};
+use crate::config::{QueryParams, RerankMode, ResolvedQueryParams, ServeConfig};
 use crate::coordinator::metrics::Metrics;
-use crate::data::Dataset;
+use crate::data::{Dataset, RerankView};
 use crate::hash::{
     Code128, Code256, CodeWord, ItemHasher, NativeHasher, Projection, MAX_CODE_BITS,
 };
 use crate::index::range::{RangeLshIndex, RangeLshParams};
 use crate::index::{AnyRangeLshIndex, CodeProbe, Prober};
-use crate::runtime::{PjrtHasher, PjrtScorer, RuntimeHandle};
+use crate::runtime::{BoundedTopK, PjrtHasher, PjrtScorer, RuntimeHandle};
 use crate::{ItemId, Result};
 
 /// One ranked answer.
@@ -38,10 +38,22 @@ pub struct SearchResult {
 pub struct SearchEngine<C: CodeWord = u64> {
     index: Arc<dyn CodeProbe<C>>,
     dataset: Arc<Dataset>,
+    /// Range-ordered storage for the streaming re-rank (built once at
+    /// engine construction when `cfg.rerank` is `Streaming`): candidate
+    /// rows are read from this norm-descending permutation instead of
+    /// scattering across the original-order matrix.
+    view: Option<Arc<RerankView>>,
     hasher: Arc<dyn ItemHasher<C>>,
     cfg: ServeConfig,
     metrics: Arc<Metrics>,
 }
+
+/// Probe-session block size of the fused streaming path when the request
+/// is one-shot (no `min_candidates`/`extend_step` semantics to honor):
+/// big enough to amortize the session walk, small enough that the
+/// Cauchy–Schwarz early-out can stop a query long before the full budget
+/// is probed.
+const STREAM_BLOCK: usize = 512;
 
 thread_local! {
     /// Per-worker candidate scratch pool, one buffer per query of the
@@ -71,9 +83,14 @@ impl<C: CodeWord> SearchEngine<C> {
         );
         anyhow::ensure!(cfg.top_k >= 1, "top_k must be >= 1");
         anyhow::ensure!(cfg.probe_budget >= cfg.top_k, "budget below top_k");
+        let view = match cfg.rerank {
+            RerankMode::Streaming => Some(Arc::new(RerankView::build(&dataset))),
+            RerankMode::Exhaustive => None,
+        };
         Ok(Self {
             index,
             dataset,
+            view,
             hasher,
             cfg,
             metrics: Arc::new(Metrics::new()),
@@ -183,6 +200,18 @@ impl<C: CodeWord> SearchEngine<C> {
         let per_chunk: Vec<Vec<Vec<SearchResult>>> =
             crate::util::par::par_map_cutoff(n_chunks, 1, |ci| {
                 let (lo, hi) = (ci * chunk, ((ci + 1) * chunk).min(n));
+                if self.cfg.rerank == RerankMode::Streaming {
+                    // Fused probe + re-rank per query: no candidate
+                    // materialization, no batched codes-vector scan —
+                    // the session blocks feed the accumulator directly.
+                    return (lo..hi)
+                        .map(|qi| {
+                            let rp = resolve_at(qi);
+                            let q = &rows[qi * dim..(qi + 1) * dim];
+                            self.search_streaming(codes[qi], q, &rp, t0)
+                        })
+                        .collect();
+                }
                 CAND_SCRATCH.with(|scratch| {
                     let bufs = &mut *scratch.borrow_mut();
                     if bufs.len() < hi - lo {
@@ -259,6 +288,92 @@ impl<C: CodeWord> SearchEngine<C> {
                 break; // index exhausted
             }
         }
+    }
+
+    /// Fused probe + re-rank for one query (§Perf, the streaming path):
+    /// extend the probe session in blocks and feed each block straight
+    /// into a [`BoundedTopK`]. Three savings over probe-then-re-rank:
+    /// candidates whose `‖q‖·‖x‖` bound cannot beat the kth score are
+    /// never dotted; admitted rows are read from the range-ordered
+    /// [`RerankView`] (contiguous per probed range) instead of gathered
+    /// across the original matrix; and the whole query stops — further
+    /// candidates never even emitted — once the session's remaining norm
+    /// bound `‖q‖·U_j` falls below the kth score.
+    ///
+    /// Results are bit-identical to the exhaustive path: the candidate
+    /// stream prefix is block-size-independent (the PR 3 session
+    /// contract), the stopping points of adaptive requests mirror
+    /// [`Self::probe_one`] exactly (`extend_step` blocks, `min_candidates`
+    /// checks), every skipped candidate is provably outside the top-k
+    /// (see [`BoundedTopK`]), and view dots are bit-equal to dataset dots.
+    fn search_streaming(
+        &self,
+        qcode: C,
+        q: &[f32],
+        rp: &ResolvedQueryParams,
+        t0: std::time::Instant,
+    ) -> Vec<SearchResult> {
+        thread_local! {
+            /// Per-worker block + admitted-candidate scratch (ids, then
+            /// (slot, id) pairs surviving admission) — no allocation per
+            /// query once a thread is warm.
+            static STREAM_SCRATCH: std::cell::RefCell<(Vec<ItemId>, Vec<(usize, ItemId)>)> =
+                const { std::cell::RefCell::new((Vec::new(), Vec::new())) };
+        }
+        let view = self.view.as_ref().expect("streaming engines carry a RerankView");
+        let q_norm = crate::data::dot_slices(q, q).sqrt();
+        let mut acc = BoundedTopK::new(rp.top_k, q_norm, self.dataset.dim());
+        let mut session = self.index.prober_with_code(qcode);
+        // One-shot requests stream in fixed blocks; adaptive requests keep
+        // their `extend_step` blocks so the `min_candidates` stopping
+        // points (and thus the probed prefix) match `probe_one` exactly.
+        let step = if rp.one_shot() { STREAM_BLOCK } else { rp.extend_step };
+        let mut spent = 0usize;
+        let mut emitted = 0usize;
+        STREAM_SCRATCH.with(|scratch| {
+            let (block, admitted) = &mut *scratch.borrow_mut();
+            while spent < rp.probe_budget {
+                if let Some(bound) = session.norm_bound() {
+                    if !acc.would_admit(bound) {
+                        break; // nothing left in the schedule can enter the top-k
+                    }
+                }
+                let take = step.min(rp.probe_budget - spent);
+                block.clear();
+                let got = session.extend(take, block);
+                admitted.clear();
+                for &id in block.iter() {
+                    let slot = view.slot_of(id);
+                    if acc.offer(view.norm_at(slot)) {
+                        admitted.push((slot, id));
+                    }
+                }
+                let mut quads = admitted.chunks_exact(4);
+                for quad in quads.by_ref() {
+                    let s =
+                        view.dot4_at([quad[0].0, quad[1].0, quad[2].0, quad[3].0], q);
+                    for (i, &(_, id)) in quad.iter().enumerate() {
+                        acc.insert(s[i], id);
+                    }
+                }
+                for &(slot, id) in quads.remainder() {
+                    acc.insert(view.dot_at(slot, q), id);
+                }
+                spent += take;
+                emitted += got;
+                if got < take {
+                    break; // index exhausted
+                }
+                if !rp.one_shot() && emitted >= rp.min_candidates {
+                    break; // early-stop target reached (same as probe_one)
+                }
+            }
+        });
+        self.metrics.record_query(t0.elapsed().as_micros() as u64, emitted);
+        acc.into_sorted()
+            .into_iter()
+            .map(|(score, id)| SearchResult { id, score })
+            .collect()
     }
 }
 
@@ -549,20 +664,151 @@ mod tests {
     #[test]
     fn batch_over_simple_index_uses_batched_scan_and_matches_single() {
         // SIMPLE-LSH overrides probe_batch_with_codes with the shared
-        // codes-vector scan; the engine's chunked batch path must still
-        // agree with per-query searches exactly.
+        // codes-vector scan (an Exhaustive-mode path: streaming probes
+        // per-query sessions instead); the engine's chunked batch path
+        // must still agree with per-query searches exactly.
         use crate::index::simple::{SimpleLshIndex, SimpleLshParams};
         let d = Arc::new(synthetic::longtail_sift(1500, 16, 20));
         let h = Arc::new(NativeHasher::<u64>::new(16, 64, 21));
         let idx =
             Arc::new(SimpleLshIndex::build(&d, h.as_ref(), SimpleLshParams::new(16)).unwrap());
-        let cfg = ServeConfig { probe_budget: 200, top_k: 10, ..Default::default() };
+        let cfg = ServeConfig {
+            probe_budget: 200,
+            top_k: 10,
+            rerank: RerankMode::Exhaustive,
+            ..Default::default()
+        };
         let e = SearchEngine::new(idx, d, h, cfg).unwrap();
         let q = synthetic::gaussian_queries(9, 16, 22);
         let batch = e.search_batch(q.flat()).unwrap();
         assert_eq!(batch.len(), 9);
         for qi in 0..9 {
             assert_eq!(batch[qi], e.search(q.row(qi)).unwrap(), "query {qi}");
+        }
+    }
+
+    /// Build streaming + exhaustive twins over one shared index/hasher.
+    fn engine_twins(
+        d: &Arc<Dataset>,
+        budget: usize,
+        k: usize,
+    ) -> (SearchEngine, SearchEngine) {
+        let h = Arc::new(NativeHasher::<u64>::new(d.dim(), 64, 1));
+        let idx: Arc<RangeLshIndex> = Arc::new(
+            RangeLshIndex::build(d, h.as_ref(), RangeLshParams::new(16, 16)).unwrap(),
+        );
+        let cfg = ServeConfig { probe_budget: budget, top_k: k, ..Default::default() };
+        let streaming =
+            SearchEngine::new(idx.clone(), d.clone(), h.clone(), cfg.clone()).unwrap();
+        let cfg = ServeConfig { rerank: RerankMode::Exhaustive, ..cfg };
+        let exhaustive = SearchEngine::new(idx, d.clone(), h, cfg).unwrap();
+        (streaming, exhaustive)
+    }
+
+    /// ids and score *bits* must agree — the streaming path's equivalence
+    /// contract is bit-exact, not approximate.
+    fn assert_results_bit_equal(a: &[SearchResult], b: &[SearchResult], ctx: &str) {
+        assert_eq!(a.len(), b.len(), "{ctx}: lengths");
+        for (i, (ra, rb)) in a.iter().zip(b).enumerate() {
+            assert_eq!(ra.id, rb.id, "{ctx}: id at {i}");
+            assert_eq!(ra.score.to_bits(), rb.score.to_bits(), "{ctx}: score bits at {i}");
+        }
+    }
+
+    #[test]
+    fn streaming_rerank_matches_exhaustive_bitwise() {
+        let d = Arc::new(synthetic::longtail_sift(2000, 16, 70));
+        let (s, e) = engine_twins(&d, 500, 10);
+        let q = synthetic::gaussian_queries(6, 16, 71);
+        // Default params, per-request k/budget overrides, and adaptive
+        // (min_candidates/extend_step) requests all agree bit for bit.
+        let params = [
+            QueryParams::default(),
+            QueryParams::new().with_top_k(1),
+            QueryParams::new().with_top_k(25).with_probe_budget(usize::MAX),
+            QueryParams::new().with_probe_budget(64),
+            QueryParams::new().with_min_candidates(50).with_extend_step(16),
+        ];
+        for (pi, p) in params.iter().enumerate() {
+            for qi in 0..q.len() {
+                assert_results_bit_equal(
+                    &s.search_with(q.row(qi), p).unwrap(),
+                    &e.search_with(q.row(qi), p).unwrap(),
+                    &format!("params {pi} query {qi}"),
+                );
+            }
+        }
+        // Batched entry point too (uniform and heterogeneous).
+        let sb = s.search_batch(q.flat()).unwrap();
+        let eb = e.search_batch(q.flat()).unwrap();
+        for qi in 0..q.len() {
+            assert_results_bit_equal(&sb[qi], &eb[qi], &format!("batch query {qi}"));
+        }
+        let hetero: Vec<QueryParams> = (0..q.len())
+            .map(|i| params[i % params.len()])
+            .collect();
+        let sb = s.search_batch_params(q.flat(), &hetero).unwrap();
+        let eb = e.search_batch_params(q.flat(), &hetero).unwrap();
+        for qi in 0..q.len() {
+            assert_results_bit_equal(&sb[qi], &eb[qi], &format!("hetero query {qi}"));
+        }
+    }
+
+    #[test]
+    fn streaming_early_out_stops_probing_whole_queries() {
+        // One huge query-aligned item: once it is scored, the schedule's
+        // remaining ‖q‖·U_j bound collapses below the kth score and the
+        // session is abandoned — most of the index is never even probed.
+        let q = synthetic::gaussian_queries(1, 16, 80);
+        let base = synthetic::longtail_sift(2000, 16, 81);
+        let mut rows: Vec<Vec<f32>> = (0..2000).map(|i| base.row(i).to_vec()).collect();
+        rows.push(q.row(0).iter().map(|v| v * 1000.0).collect());
+        let d = Arc::new(Dataset::from_rows(&rows));
+        let (s, e) = engine_twins(&d, usize::MAX, 1);
+        let got = s.search(q.row(0)).unwrap();
+        assert_results_bit_equal(&got, &e.search(q.row(0)).unwrap(), "early-out query");
+        assert_eq!(got[0].id, 2000, "the planted item must win");
+        let probed = s.metrics().snapshot().mean_probed;
+        assert!(
+            probed < 1500.0,
+            "early-out should abandon most of the 2001-item stream, probed {probed}"
+        );
+        assert_eq!(e.metrics().snapshot().mean_probed, 2001.0, "oracle probes everything");
+    }
+
+    #[test]
+    fn streaming_handles_all_zero_queries() {
+        // ‖q‖ = 0: every bound is 0, nothing may be pruned, and the
+        // answers (all scores ±0.0) must still match the oracle bitwise.
+        let d = Arc::new(synthetic::longtail_sift(800, 16, 90));
+        let (s, e) = engine_twins(&d, usize::MAX, 10);
+        let zero = vec![0.0f32; 16];
+        let got = s.search(&zero).unwrap();
+        assert_eq!(got.len(), 10);
+        assert_results_bit_equal(&got, &e.search(&zero).unwrap(), "zero query");
+    }
+
+    #[test]
+    fn streaming_serves_norm_bound_free_indexes() {
+        // SIMPLE-LSH probers report no norm bound (norm_bound = None), so
+        // streaming gets per-candidate pruning but no whole-query
+        // early-out — and must still match the oracle exactly.
+        use crate::index::simple::{SimpleLshIndex, SimpleLshParams};
+        let d = Arc::new(synthetic::longtail_sift(1200, 16, 91));
+        let h = Arc::new(NativeHasher::<u64>::new(16, 64, 92));
+        let idx =
+            Arc::new(SimpleLshIndex::build(&d, h.as_ref(), SimpleLshParams::new(16)).unwrap());
+        let cfg = ServeConfig { probe_budget: 300, top_k: 5, ..Default::default() };
+        let s = SearchEngine::new(idx.clone(), d.clone(), h.clone(), cfg.clone()).unwrap();
+        let cfg = ServeConfig { rerank: RerankMode::Exhaustive, ..cfg };
+        let e = SearchEngine::new(idx, d, h, cfg).unwrap();
+        let q = synthetic::gaussian_queries(5, 16, 93);
+        for qi in 0..q.len() {
+            assert_results_bit_equal(
+                &s.search(q.row(qi)).unwrap(),
+                &e.search(q.row(qi)).unwrap(),
+                &format!("query {qi}"),
+            );
         }
     }
 

@@ -36,6 +36,35 @@ impl Dataset {
         Self { dim, data, norms }
     }
 
+    /// Build from a flat row-major buffer plus already-known 2-norms,
+    /// skipping the per-row sqrt-sum pass of [`Self::from_flat`]. The
+    /// caller vouches that `norms[i]` is exactly the value `from_flat`
+    /// would compute for row `i` (checked bit-for-bit in debug builds) —
+    /// gathered sub-datasets and permuted views carry the parent's cached
+    /// norms through here instead of re-deriving them.
+    pub fn from_flat_with_norms(dim: usize, data: Vec<f32>, norms: Vec<f32>) -> Self {
+        assert!(dim > 0, "dim must be positive");
+        assert_eq!(
+            data.len() % dim,
+            0,
+            "flat buffer length {} not a multiple of dim {}",
+            data.len(),
+            dim
+        );
+        assert_eq!(norms.len(), data.len() / dim, "one norm per row");
+        #[cfg(debug_assertions)]
+        for (i, &nrm) in norms.iter().enumerate() {
+            let want: f32 =
+                data[i * dim..(i + 1) * dim].iter().map(|v| v * v).sum::<f32>().sqrt();
+            debug_assert_eq!(
+                nrm.to_bits(),
+                want.to_bits(),
+                "carried norm for row {i} does not match the recomputed value"
+            );
+        }
+        Self { dim, data, norms }
+    }
+
     /// Build from rows.
     pub fn from_rows(rows: &[Vec<f32>]) -> Self {
         assert!(!rows.is_empty(), "need at least one row");
@@ -101,28 +130,38 @@ impl Dataset {
         dot4_slices([self.row(ids[0]), self.row(ids[1]), self.row(ids[2]), self.row(ids[3])], q)
     }
 
-    /// A sub-dataset view materialised from item ids (used by partitioners).
+    /// A sub-dataset view materialised from item ids (used by partitioners
+    /// and the range-ordered [`crate::data::RerankView`]). The gathered
+    /// rows keep the parent's cached 2-norms — no sqrt-sum per row.
     pub fn gather(&self, ids: &[ItemId]) -> Dataset {
         let mut data = Vec::with_capacity(ids.len() * self.dim);
+        let mut norms = Vec::with_capacity(ids.len());
         for &id in ids {
             data.extend_from_slice(self.row(id as usize));
+            norms.push(self.norms[id as usize]);
         }
-        Dataset::from_flat(self.dim, data)
+        Dataset::from_flat_with_norms(self.dim, data, norms)
     }
 
     /// Summary statistics of the 2-norm distribution (Fig. 1(b) material).
+    /// Each percentile is an O(n) `select_nth_unstable` on a working copy
+    /// instead of a full sort, with the nearest rank rounded half-up
+    /// (the old truncating cast read one rank low at small `n`: the
+    /// median of [1, 3] was 1, not 3).
     pub fn norm_stats(&self) -> NormStats {
-        let mut sorted = self.norms.clone();
-        sorted.sort_by(|a, b| a.total_cmp(b));
-        let n = sorted.len();
-        let pct = |p: f64| sorted[((n - 1) as f64 * p) as usize];
+        let mut work = self.norms.clone();
+        let n = work.len();
+        let mut pct = |p: f64| {
+            let idx = ((n - 1) as f64 * p + 0.5).floor() as usize;
+            *work.select_nth_unstable_by(idx, |a, b| a.total_cmp(b)).1
+        };
         NormStats {
-            min: sorted[0],
             p25: pct(0.25),
             median: pct(0.5),
             p75: pct(0.75),
             p95: pct(0.95),
-            max: sorted[n - 1],
+            min: self.norms.iter().copied().fold(f32::INFINITY, f32::min),
+            max: self.max_norm(),
         }
     }
 }
@@ -258,6 +297,47 @@ mod tests {
         let d = Dataset::from_flat(1, vec![10.0, 20.0, 30.0]);
         let g = d.gather(&[2, 0]);
         assert_eq!(g.flat(), &[30.0, 10.0]);
+    }
+
+    #[test]
+    fn gather_carries_cached_norms_bit_exactly() {
+        let d = crate::data::synthetic::longtail_sift(40, 7, 11);
+        let ids: Vec<ItemId> = vec![3, 39, 0, 17, 17, 8];
+        let g = d.gather(&ids);
+        for (k, &id) in ids.iter().enumerate() {
+            assert_eq!(g.norm(k).to_bits(), d.norm(id as usize).to_bits(), "row {k}");
+            assert_eq!(g.row(k), d.row(id as usize), "row {k}");
+        }
+    }
+
+    #[test]
+    fn from_flat_with_norms_skips_recompute_but_checks_shape() {
+        let data = vec![3.0, 4.0, 0.0, 1.0];
+        let d = Dataset::from_flat_with_norms(2, data.clone(), vec![5.0, 1.0]);
+        assert_eq!(d.norm(0), 5.0);
+        assert_eq!(d, Dataset::from_flat(2, data));
+    }
+
+    #[test]
+    #[should_panic(expected = "one norm per row")]
+    fn from_flat_with_norms_rejects_length_mismatch() {
+        Dataset::from_flat_with_norms(2, vec![0.0; 4], vec![0.0; 3]);
+    }
+
+    #[test]
+    fn norm_stats_percentile_rank_rounds_half_up() {
+        // Median of [1, 3]: rank (n-1)*0.5 = 0.5 rounds up to index 1.
+        let d = Dataset::from_flat(1, vec![1.0, 3.0]);
+        assert_eq!(d.norm_stats().median, 3.0);
+        // Odd length: the true middle element, not the one below it.
+        let d = Dataset::from_flat(1, vec![5.0, 1.0, 3.0]);
+        let s = d.norm_stats();
+        assert_eq!(s.median, 3.0);
+        assert_eq!((s.min, s.max), (1.0, 5.0));
+        // Single row: every percentile is that row.
+        let d = Dataset::from_flat(1, vec![2.0]);
+        let s = d.norm_stats();
+        assert_eq!((s.min, s.p25, s.median, s.p95, s.max), (2.0, 2.0, 2.0, 2.0, 2.0));
     }
 
     #[test]

@@ -9,7 +9,9 @@
 
 mod dataset;
 mod io;
+mod rerank_view;
 pub mod synthetic;
 
 pub use dataset::{dot4_slices, dot_slices, Dataset, NormStats};
 pub use io::{load_dataset, save_dataset};
+pub use rerank_view::RerankView;

@@ -1,0 +1,205 @@
+//! [`RerankView`]: a re-rank-optimized storage layout — the dataset
+//! permuted into range order, so the exact-scoring stage of a query reads
+//! contiguous cache lines instead of scattering gathers across the whole
+//! original-order matrix.
+//!
+//! Slots are ordered by descending 2-norm, ties by descending id — the
+//! exact reverse of the partitioner's `(norm asc, id asc)` ranking
+//! (`crate::index::partition`). Because both percentile and uniform-range
+//! partitioning cut that ranking into contiguous rank intervals, every
+//! norm range `S_j` occupies one contiguous, norm-descending slot block
+//! here: candidates emitted by a probed range land next to each other,
+//! and the high-`U_j` ranges the Eq. 12 schedule visits first sit at the
+//! front of the buffer.
+//!
+//! Two invariants the streaming re-rank leans on:
+//! - **Bit-exact rows.** `dot_at(slot_of(id), q)` is the same float as
+//!   `Dataset::dot(id, q)` on the original layout (rows are byte copies,
+//!   the accumulation order is identical), so a re-rank through the view
+//!   cannot shift any candidate ordering.
+//! - **Descending norms.** `norm_at(s) >= norm_at(t)` for `s <= t`, so
+//!   `norm_at(s)` bounds the norm of every item stored at slot `s` or
+//!   later — the per-range prefix maximum of norms is simply the block's
+//!   first slot, with no auxiliary table.
+
+use crate::data::Dataset;
+use crate::ItemId;
+
+/// A norm-descending, range-contiguous permutation of a [`Dataset`] with
+/// id↔slot maps. Costs one extra copy of the matrix; built once per
+/// serving engine (see `ServeConfig::rerank`).
+pub struct RerankView {
+    view: Dataset,
+    /// slot → original item id.
+    id_of: Vec<ItemId>,
+    /// original item id → slot.
+    slot_of: Vec<u32>,
+}
+
+impl RerankView {
+    /// Permute `dataset` into range order. O(n log n) sort of the cached
+    /// norms plus one pass over the matrix; the view carries the parent's
+    /// norms (no recompute).
+    pub fn build(dataset: &Dataset) -> Self {
+        let n = dataset.len();
+        let dim = dataset.dim();
+        let mut id_of: Vec<ItemId> = (0..n as ItemId).collect();
+        id_of.sort_unstable_by(|&a, &b| {
+            dataset
+                .norm(b as usize)
+                .total_cmp(&dataset.norm(a as usize))
+                .then(b.cmp(&a))
+        });
+        let mut slot_of = vec![0u32; n];
+        let mut data = Vec::with_capacity(n * dim);
+        let mut norms = Vec::with_capacity(n);
+        for (slot, &id) in id_of.iter().enumerate() {
+            slot_of[id as usize] = slot as u32;
+            data.extend_from_slice(dataset.row(id as usize));
+            norms.push(dataset.norm(id as usize));
+        }
+        let view = Dataset::from_flat_with_norms(dim, data, norms);
+        Self { view, id_of, slot_of }
+    }
+
+    pub fn len(&self) -> usize {
+        self.id_of.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.id_of.is_empty()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.view.dim()
+    }
+
+    /// The permuted storage itself (range-ordered rows, carried norms).
+    pub fn dataset(&self) -> &Dataset {
+        &self.view
+    }
+
+    /// Where the original item `id` lives in the permuted layout.
+    #[inline]
+    pub fn slot_of(&self, id: ItemId) -> usize {
+        self.slot_of[id as usize] as usize
+    }
+
+    /// Which original item the permuted `slot` holds.
+    #[inline]
+    pub fn id_at(&self, slot: usize) -> ItemId {
+        self.id_of[slot]
+    }
+
+    /// Cached 2-norm of the item at `slot`. By the layout invariant this
+    /// also bounds the norm of every item at `slot` or later.
+    #[inline]
+    pub fn norm_at(&self, slot: usize) -> f32 {
+        self.view.norm(slot)
+    }
+
+    /// Exact inner product of `q` with the item at `slot` — bit-identical
+    /// to [`Dataset::dot`] on the original layout (see module docs).
+    #[inline]
+    pub fn dot_at(&self, slot: usize, q: &[f32]) -> f32 {
+        self.view.dot(slot, q)
+    }
+
+    /// Four exact inner products in one pass ([`Dataset::dot4`]).
+    #[inline]
+    pub fn dot4_at(&self, slots: [usize; 4], q: &[f32]) -> [f32; 4] {
+        self.view.dot4(slots, q)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn maps_are_inverse_bijections() {
+        let d = synthetic::longtail_sift(300, 8, 1);
+        let v = RerankView::build(&d);
+        assert_eq!(v.len(), 300);
+        for slot in 0..v.len() {
+            assert_eq!(v.slot_of(v.id_at(slot)), slot);
+        }
+        for id in 0..300u32 {
+            assert_eq!(v.id_at(v.slot_of(id)), id);
+        }
+    }
+
+    #[test]
+    fn slots_descend_in_norm_and_carry_bit_exact_norms() {
+        let d = synthetic::longtail_sift(500, 8, 2);
+        let v = RerankView::build(&d);
+        for slot in 0..v.len() {
+            assert_eq!(
+                v.norm_at(slot).to_bits(),
+                d.norm(v.id_at(slot) as usize).to_bits(),
+                "slot {slot}"
+            );
+            if slot > 0 {
+                assert!(v.norm_at(slot - 1) >= v.norm_at(slot), "slot {slot} not descending");
+            }
+        }
+    }
+
+    #[test]
+    fn view_dots_are_bit_identical_to_original_layout() {
+        let d = synthetic::longtail_sift(100, 17, 3);
+        let q = synthetic::gaussian_queries(1, 17, 4);
+        let v = RerankView::build(&d);
+        for id in 0..100u32 {
+            assert_eq!(
+                v.dot_at(v.slot_of(id), q.row(0)).to_bits(),
+                d.dot(id as usize, q.row(0)).to_bits(),
+                "id {id}"
+            );
+        }
+    }
+
+    #[test]
+    fn duplicated_rows_still_permute_bijectively() {
+        // Tie-heavy norms: every row appears twice, so the (norm, id)
+        // tie-break does real work.
+        let base = synthetic::longtail_sift(50, 4, 5);
+        let mut rows: Vec<Vec<f32>> = Vec::new();
+        for i in 0..50 {
+            rows.push(base.row(i).to_vec());
+            rows.push(base.row(i).to_vec());
+        }
+        let d = Dataset::from_rows(&rows);
+        let v = RerankView::build(&d);
+        for slot in 0..v.len() {
+            assert_eq!(v.slot_of(v.id_at(slot)), slot);
+        }
+    }
+
+    #[test]
+    fn partition_ranges_occupy_contiguous_slot_blocks() {
+        // The "range order" claim: each percentile/uniform range's members
+        // sit in one contiguous slot interval of the view.
+        use crate::index::{partition, PartitionScheme};
+        let d = synthetic::longtail_sift(400, 8, 6);
+        let v = RerankView::build(&d);
+        for scheme in [PartitionScheme::Percentile, PartitionScheme::UniformRange] {
+            for (j, part) in partition(&d, 16, scheme).unwrap().iter().enumerate() {
+                let mut slots: Vec<usize> =
+                    part.ids.iter().map(|&id| v.slot_of(id)).collect();
+                slots.sort_unstable();
+                let lo = slots[0];
+                for (off, &s) in slots.iter().enumerate() {
+                    assert_eq!(s, lo + off, "{scheme:?} range {j} not contiguous");
+                }
+                // ... and the block's first slot is the range's prefix max.
+                assert_eq!(
+                    v.norm_at(lo).to_bits(),
+                    part.u_max.to_bits(),
+                    "{scheme:?} range {j}"
+                );
+            }
+        }
+    }
+}

@@ -26,6 +26,11 @@ pub fn s_hat(u_j: f32, l: u32, l_bits: usize, epsilon: f32) -> f32 {
 pub struct MetricOrder {
     /// `(range index j, matching-bit count l)`, best `ŝ` first.
     entries: Vec<(u32, u32)>,
+    /// `suffix_umax[p] = max_{i >= p} U_{j_i}` over `entries` (one extra
+    /// trailing `0.0` for the exhausted position) — the schedule is
+    /// ordered by `ŝ`, not by `U_j`, so a plain "current entry's `U_j`"
+    /// would understate what later entries can still deliver.
+    suffix_umax: Vec<f32>,
     l_bits: usize,
     epsilon: f32,
 }
@@ -49,13 +54,27 @@ impl MetricOrder {
         keyed.sort_by(|&(sa, ja, la), &(sb, jb, lb)| {
             sb.total_cmp(&sa).then(ja.cmp(&jb)).then(lb.cmp(&la))
         });
-        let entries = keyed.into_iter().map(|(_, j, l)| (j, l)).collect();
-        Self { entries, l_bits, epsilon }
+        let entries: Vec<(u32, u32)> = keyed.into_iter().map(|(_, j, l)| (j, l)).collect();
+        let mut suffix_umax = vec![0.0f32; entries.len() + 1];
+        for (i, &(j, _)) in entries.iter().enumerate().rev() {
+            suffix_umax[i] = u_maxes[j as usize].max(suffix_umax[i + 1]);
+        }
+        Self { entries, suffix_umax, l_bits, epsilon }
     }
 
     /// The probing schedule, best estimated inner product first.
     pub fn entries(&self) -> &[(u32, u32)] {
         &self.entries
+    }
+
+    /// Upper bound on the 2-norm of any item in a bucket at schedule
+    /// position `pos` or later — the suffix maximum of `U_j`, precomputed
+    /// at build. Positions at or past the end return `0.0` (nothing
+    /// remains). The streaming re-rank's whole-query early-out compares
+    /// `‖q‖ · remaining_u_max(cursor)` against its kth exact score
+    /// (`q·x ≤ ‖q‖·‖x‖ ≤ ‖q‖·U_j` for every `x` still unemitted).
+    pub fn remaining_u_max(&self, pos: usize) -> f32 {
+        self.suffix_umax.get(pos).copied().unwrap_or(0.0)
     }
 
     pub fn l_bits(&self) -> usize {
@@ -150,6 +169,29 @@ mod tests {
             pos_partial_big < pos_exact_small,
             "l=12 in U=1.0 range must precede exact match in U=0.05 range"
         );
+    }
+
+    #[test]
+    fn remaining_u_max_is_the_suffix_maximum() {
+        let us = [0.4f32, 1.0, 0.75];
+        let order = MetricOrder::build(&us, 8, 0.1);
+        let entries = order.entries();
+        for p in 0..=entries.len() {
+            let want = entries[p..]
+                .iter()
+                .map(|&(j, _)| us[j as usize])
+                .fold(0.0f32, f32::max);
+            assert_eq!(order.remaining_u_max(p), want, "position {p}");
+            if p > 0 {
+                assert!(
+                    order.remaining_u_max(p - 1) >= order.remaining_u_max(p),
+                    "suffix maxima must be non-increasing"
+                );
+            }
+        }
+        assert_eq!(order.remaining_u_max(0), 1.0, "head bound is the global max U_j");
+        assert_eq!(order.remaining_u_max(entries.len()), 0.0, "exhausted bound");
+        assert_eq!(order.remaining_u_max(entries.len() + 5), 0.0, "past-the-end bound");
     }
 
     #[test]

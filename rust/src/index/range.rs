@@ -438,6 +438,13 @@ impl<C: CodeWord> Prober for RangeProber<'_, C> {
     fn stats(&self) -> ProbeStats {
         self.stats
     }
+
+    /// Suffix maximum of `U_j` over the remaining schedule. Valid
+    /// mid-bucket too: a partially drained bucket belongs to the entry at
+    /// `sched_pos`, whose `U_j` the suffix maximum includes.
+    fn norm_bound(&self) -> Option<f32> {
+        Some(self.index.order.remaining_u_max(self.sched_pos))
+    }
 }
 
 impl<C: CodeWord> RangeLshIndex<C> {
@@ -788,6 +795,44 @@ mod tests {
         let drained = session.stats();
         assert_eq!(drained.ranges_sorted, 32);
         assert_eq!(drained.items_emitted, d.len());
+    }
+
+    #[test]
+    fn session_norm_bound_is_sound_and_non_increasing() {
+        let d = synthetic::longtail_sift(1000, 8, 40);
+        let idx = build(&d, 16, 16);
+        let q = synthetic::gaussian_queries(1, 8, 41);
+        let qcode = idx.hash_query(q.row(0));
+        let mut session = idx.session(qcode);
+        let global_u = idx.u_maxes().iter().copied().fold(0.0f32, f32::max);
+        assert_eq!(session.norm_bound(), Some(global_u), "fresh session bounds everything");
+        let mut out = Vec::new();
+        let mut prev = global_u;
+        loop {
+            let got = session.extend(100, &mut out);
+            let bound = session.norm_bound().expect("range sessions always have a bound");
+            assert!(bound <= prev, "bound must be non-increasing across extends");
+            // Soundness: every item not yet emitted has norm <= bound.
+            let mut emitted = vec![false; d.len()];
+            for &id in &out {
+                emitted[id as usize] = true;
+            }
+            for id in 0..d.len() {
+                if !emitted[id] {
+                    assert!(
+                        d.norm(id) <= bound,
+                        "unemitted item {id} (norm {}) above the bound {bound}",
+                        d.norm(id)
+                    );
+                }
+            }
+            prev = bound;
+            if got < 100 {
+                break;
+            }
+        }
+        assert!(session.is_exhausted());
+        assert_eq!(session.norm_bound(), Some(0.0), "drained session bounds nothing");
     }
 
     #[test]

@@ -29,6 +29,17 @@ pub trait Prober {
 
     /// Cumulative instrumentation over every `extend` call so far.
     fn stats(&self) -> ProbeStats;
+
+    /// Upper bound on the 2-norm of every item this session has **not
+    /// yet** emitted, when the index can prove one cheaply — `None` means
+    /// unknown/unbounded and callers must not assume anything. RANGE-LSH
+    /// returns the suffix maximum of `U_j` over its remaining `(U_j, l)`
+    /// schedule ([`crate::index::MetricOrder::remaining_u_max`]); since
+    /// `q·x ≤ ‖q‖·‖x‖`, the streaming re-rank stops the whole query once
+    /// `‖q‖ · bound` can no longer beat its kth exact score.
+    fn norm_bound(&self) -> Option<f32> {
+        None
+    }
 }
 
 /// Shared inner step of every session's walk: emit as much of `items` as

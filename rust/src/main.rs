@@ -47,7 +47,7 @@ SUBCOMMANDS:
   eval       --config FILE.toml [--compare] [--json-out FILE.json]
   theory     --config FILE.toml [--c 0.7]
   serve      --config FILE.toml [--load DIR] [--n-queries 2000] [--native]
-             [--artifacts DIR] [--clients 16]
+             [--artifacts DIR] [--clients 16] [--rerank streaming|exhaustive]
              [--k K] [--budget B] [--min-candidates M] [--extend-step S]
              (per-request QueryParams overriding the [serve] defaults)
   artifacts  [--dir DIR]
@@ -347,7 +347,13 @@ fn pick_u64_hasher(
 }
 
 fn serve(args: &Args) -> Result<()> {
-    let cfg = Config::from_path(args.req("config")?)?;
+    let mut cfg = Config::from_path(args.req("config")?)?;
+    // --rerank streaming|exhaustive: override the [serve] re-rank mode
+    // (streaming is the default; exhaustive keeps the probe-then-score
+    // oracle path and SIMPLE-LSH's batched codes-vector scan).
+    if let Some(mode) = args.opt("rerank") {
+        cfg.serve.rerank = mode.parse()?;
+    }
     let n_queries: usize = args.opt_parse("n-queries", 2000)?;
     let clients: usize = args.opt_parse("clients", 16)?;
     let artifacts = PathBuf::from(args.opt("artifacts").unwrap_or(DEFAULT_ARTIFACT_DIR));
@@ -432,10 +438,11 @@ fn serve(args: &Args) -> Result<()> {
         }
     };
     println!(
-        "engine ready in {:.2}s ({} x u64 code words, {} hashing)",
+        "engine ready in {:.2}s ({} x u64 code words, {} hashing, {:?} re-rank)",
         t0.elapsed().as_secs_f64(),
         engine.code_words(),
-        engine.hasher_backend()
+        engine.hasher_backend(),
+        cfg.serve.rerank
     );
 
     // Per-request overrides of the [serve] defaults — the knobs every

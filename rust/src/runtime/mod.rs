@@ -24,7 +24,7 @@ mod worker;
 
 pub use hasher::PjrtHasher;
 pub use manifest::{ArtifactEntry, Manifest};
-pub use scorer::PjrtScorer;
+pub use scorer::{BoundedTopK, PjrtScorer, RerankStats};
 pub use worker::RuntimeHandle;
 
 /// Default artifact directory relative to the repo root.

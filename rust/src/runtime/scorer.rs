@@ -136,6 +136,139 @@ impl PjrtScorer {
     }
 }
 
+/// Streaming top-k accumulator with Cauchy–Schwarz admission pruning —
+/// the scorer half of the fused probe/re-rank path (§Perf).
+///
+/// Feed candidates in any order: [`Self::offer`] the candidate's cached
+/// 2-norm first, and only when it is admitted pay the full-dimension dot
+/// and [`Self::insert`] the exact score. Once `k` results are held, a
+/// candidate is rejected exactly when its guarded upper bound
+/// `‖q‖·‖x‖·(1+guard)` is **strictly below** the current kth score —
+/// the strict-inequality tie rule: a candidate whose bound merely *ties*
+/// the threshold could still equal it exactly and win the ascending-id
+/// tie-break, so it must be scored.
+///
+/// Equivalence to the exhaustive oracle ([`PjrtScorer::rerank_scored`]):
+/// every comparison that decides membership uses the exact
+/// `(score desc, id asc)` total order on exactly-computed dots, and a
+/// rejected candidate has `fl(q·x) <= ‖q‖·‖x‖·(1+guard) < kth`, i.e. it
+/// is strictly worse than `k` already-held candidates — so the final set
+/// and its order are identical, ids and score bits both
+/// (property-tested in `tests/properties.rs` across widths, `m`, `k`,
+/// budgets, tie-heavy data and all-zero queries).
+///
+/// The guard covers floating-point slack in the bound chain: the f32 dot
+/// accumulates relative error up to ~`dim · 2⁻²⁴` of `‖q‖‖x‖`
+/// (each partial product is bounded by Cauchy–Schwarz on the absolute
+/// values), and the cached norms carry their own rounding. Inflating the
+/// bound can only *admit more* candidates — pruning power varies, results
+/// cannot. An all-zero query (`‖q‖ = 0`) has bound `0`, which is never
+/// strictly below a kth score of `±0.0`, so nothing is ever pruned and
+/// the accumulator degenerates to the plain top-k heap.
+pub struct BoundedTopK {
+    k: usize,
+    heap: BinaryHeap<Entry>,
+    /// `‖q‖ · (1 + guard)` in f64 — multiplied by a candidate's norm to
+    /// form the admission bound.
+    q_norm_guarded: f64,
+    stats: RerankStats,
+}
+
+/// Instrumentation from one streaming re-rank (the §Perf hook behind the
+/// pruning tests and the hotpath bench's `rerank_axis` rows).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct RerankStats {
+    /// Candidates offered to the accumulator.
+    pub seen: usize,
+    /// Candidates whose exact dot was computed.
+    pub scored: usize,
+    /// Candidates skipped by the norm-bound admission test.
+    pub pruned: usize,
+}
+
+impl BoundedTopK {
+    /// `q_norm` is the query's 2-norm; `dim` sizes the rounding guard.
+    pub fn new(k: usize, q_norm: f32, dim: usize) -> Self {
+        let guard = 1.0 + 8.0 * (dim as f64 + 4.0) * f64::from(f32::EPSILON);
+        Self {
+            k,
+            heap: BinaryHeap::with_capacity(k.saturating_add(1)),
+            q_norm_guarded: f64::from(q_norm) * guard,
+            stats: RerankStats::default(),
+        }
+    }
+
+    /// The kth-best exact score, once `k` results are held — the pruning
+    /// threshold. `None` while the heap is still filling (every candidate
+    /// is admitted then).
+    pub fn threshold(&self) -> Option<f32> {
+        if self.heap.len() == self.k {
+            self.heap.peek().map(|e| e.0)
+        } else {
+            None
+        }
+    }
+
+    /// Could an item of 2-norm `x_norm` still enter the top-k? Strict
+    /// rule: reject only when the guarded bound is strictly below the
+    /// threshold (`!(bound < kth)` rather than `bound >= kth`, so a NaN
+    /// norm is conservatively admitted and scored exactly). Also the
+    /// whole-query early-out test: pass the probe schedule's remaining
+    /// norm bound to learn whether any not-yet-emitted candidate matters.
+    pub fn would_admit(&self, x_norm: f32) -> bool {
+        match self.threshold() {
+            None => true,
+            Some(kth) => !(self.q_norm_guarded * f64::from(x_norm) < f64::from(kth)),
+        }
+    }
+
+    /// Counted admission test for one candidate: true means the caller
+    /// must compute the exact dot and [`Self::insert`] it.
+    pub fn offer(&mut self, x_norm: f32) -> bool {
+        self.stats.seen += 1;
+        let admit = self.would_admit(x_norm);
+        if !admit {
+            self.stats.pruned += 1;
+        }
+        admit
+    }
+
+    /// Insert an exactly-scored candidate. Membership is decided by the
+    /// exact `(score desc, id asc)` order, never by the bound.
+    pub fn insert(&mut self, score: f32, id: ItemId) {
+        self.stats.scored += 1;
+        let e = Entry(score, id);
+        if self.heap.len() < self.k {
+            self.heap.push(e);
+        } else if let Some(top) = self.heap.peek() {
+            if e < *top {
+                self.heap.pop();
+                self.heap.push(e);
+            }
+        }
+    }
+
+    pub fn stats(&self) -> RerankStats {
+        self.stats
+    }
+
+    /// The accumulated top-k as `(score, id)`, best first — the same
+    /// order [`PjrtScorer::rerank_scored`] returns.
+    pub fn into_sorted(self) -> Vec<(f32, ItemId)> {
+        let mut v: Vec<(f32, ItemId)> =
+            self.heap.into_vec().into_iter().map(|e| (e.0, e.1)).collect();
+        v.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+        v
+    }
+}
+
+/// Max-heap entry whose `Ord` ranks "worse = greater" under the result
+/// order `(score desc, id asc)`: the peek is the entry the oracle would
+/// drop first — lowest score, and among exact score ties the *largest*
+/// id (ascending id wins ties, so the largest tied id is the worst).
+/// The tie arm must be `self.1.cmp(&other.1)`, not the reverse: an
+/// inverted tie-break would evict the smallest tied id and silently
+/// diverge from the `rerank_scored` oracle on duplicated rows.
 #[derive(PartialEq)]
 struct Entry(f32, ItemId);
 impl Eq for Entry {}
@@ -146,7 +279,7 @@ impl PartialOrd for Entry {
 }
 impl Ord for Entry {
     fn cmp(&self, other: &Self) -> Ordering {
-        other.0.total_cmp(&self.0).then(other.1.cmp(&self.1))
+        other.0.total_cmp(&self.0).then(self.1.cmp(&other.1))
     }
 }
 
@@ -178,6 +311,16 @@ mod tests {
     }
 
     #[test]
+    fn topk_row_evicts_largest_tied_id_first() {
+        // Regression for the inverted Entry tie-break: with ids 0 and 1
+        // tied at the cut, the strictly better late arrival must evict
+        // the *largest* tied id — a full sort keeps [2, 0], not [2, 1].
+        assert_eq!(topk_row(&[1.0, 1.0, 3.0], 2), vec![2, 0]);
+        // Ties that straddle the cut keep the smallest ids.
+        assert_eq!(topk_row(&[5.0, 2.0, 2.0, 2.0], 2), vec![0, 1]);
+    }
+
+    #[test]
     fn rerank_keeps_best_k() {
         let d = crate::data::synthetic::longtail_sift(50, 8, 0);
         let q = crate::data::synthetic::gaussian_queries(1, 8, 1);
@@ -186,6 +329,109 @@ mod tests {
         assert_eq!(cands.len(), 5);
         let gt = crate::eval::exact_topk(&d, &q, 5);
         assert_eq!(cands, gt[0]);
+    }
+
+    /// Drive a [`BoundedTopK`] over `candidates` exactly as the engine's
+    /// streaming path does (offer norm, dot only when admitted) and
+    /// assert the result matches `rerank_scored` bit for bit.
+    fn check_bounded_matches_oracle(
+        d: &Dataset,
+        query: &[f32],
+        candidates: &[ItemId],
+        k: usize,
+    ) -> RerankStats {
+        let q_norm = crate::data::dot_slices(query, query).sqrt();
+        let mut acc = BoundedTopK::new(k, q_norm, d.dim());
+        for &id in candidates {
+            if acc.offer(d.norm(id as usize)) {
+                acc.insert(d.dot(id as usize, query), id);
+            }
+        }
+        let stats = acc.stats();
+        assert_eq!(stats.seen, candidates.len());
+        assert_eq!(stats.scored + stats.pruned, stats.seen);
+        let got = acc.into_sorted();
+        let mut want_ids = candidates.to_vec();
+        let mut want_scores = Vec::new();
+        PjrtScorer::rerank_scored(d, query, &mut want_ids, k, &mut want_scores);
+        assert_eq!(got.len(), want_ids.len(), "k={k}");
+        for (i, &(s, id)) in got.iter().enumerate() {
+            assert_eq!(id, want_ids[i], "k={k} position {i}");
+            assert_eq!(s.to_bits(), want_scores[i].to_bits(), "k={k} position {i}");
+        }
+        stats
+    }
+
+    #[test]
+    fn bounded_topk_matches_oracle_and_prunes_on_norm_sorted_stream() {
+        let base = crate::data::synthetic::longtail_sift(400, 8, 7);
+        let q = crate::data::synthetic::gaussian_queries(1, 8, 8);
+        // Plant a query-aligned huge-norm row: once it is scored, the kth
+        // score towers over every other candidate's ‖q‖·‖x‖ bound, so
+        // pruning is guaranteed to fire, not just likely.
+        let mut rows: Vec<Vec<f32>> = (0..400).map(|i| base.row(i).to_vec()).collect();
+        rows.push(q.row(0).iter().map(|v| v * 1000.0).collect());
+        let d = Dataset::from_rows(&rows);
+        // Norm-descending candidate order (what the range schedule roughly
+        // emits) puts the planted row first.
+        let mut cands: Vec<ItemId> = (0..401).collect();
+        cands.sort_by(|&a, &b| d.norm(b as usize).total_cmp(&d.norm(a as usize)));
+        for k in [1usize, 10, 401] {
+            let stats = check_bounded_matches_oracle(&d, q.row(0), &cands, k);
+            if k == 1 {
+                assert!(stats.pruned > 0, "k=1 after the planted row must prune the tail");
+            }
+        }
+        // Original (unsorted) order must agree too.
+        let cands: Vec<ItemId> = (0..401).collect();
+        check_bounded_matches_oracle(&d, q.row(0), &cands, 10);
+    }
+
+    #[test]
+    fn bounded_topk_zero_query_prunes_nothing() {
+        let d = crate::data::synthetic::longtail_sift(100, 8, 9);
+        let zero = vec![0.0f32; 8];
+        let cands: Vec<ItemId> = (0..100).collect();
+        let stats = check_bounded_matches_oracle(&d, &zero, &cands, 5);
+        assert_eq!(stats.pruned, 0, "‖q‖ = 0 must not prune anything");
+        assert_eq!(stats.scored, 100);
+    }
+
+    #[test]
+    fn bounded_topk_handles_tie_heavy_duplicates() {
+        // Duplicated rows: identical scores, membership decided purely by
+        // the ascending-id tie-break — the case the strict-inequality
+        // admission rule exists for.
+        let base = crate::data::synthetic::longtail_sift(30, 8, 10);
+        let mut rows: Vec<Vec<f32>> = Vec::new();
+        for i in 0..30 {
+            rows.push(base.row(i).to_vec());
+            rows.push(base.row(i).to_vec());
+            rows.push(base.row(i).to_vec());
+        }
+        let d = Dataset::from_rows(&rows);
+        let q = crate::data::synthetic::gaussian_queries(1, 8, 11);
+        let cands: Vec<ItemId> = (0..90).collect();
+        for k in [1usize, 4, 10, 90] {
+            check_bounded_matches_oracle(&d, q.row(0), &cands, k);
+        }
+    }
+
+    #[test]
+    fn bounded_topk_threshold_appears_only_when_full() {
+        let mut acc = BoundedTopK::new(2, 1.0, 4);
+        assert_eq!(acc.threshold(), None);
+        assert!(acc.would_admit(0.0));
+        acc.insert(1.0, 7);
+        assert_eq!(acc.threshold(), None);
+        acc.insert(3.0, 2);
+        assert_eq!(acc.threshold(), Some(1.0));
+        // Bound strictly below the kth score → rejected; ties admitted.
+        assert!(!acc.would_admit(0.5));
+        assert!(acc.would_admit(1.0));
+        acc.insert(2.0, 9);
+        assert_eq!(acc.threshold(), Some(2.0));
+        assert_eq!(acc.into_sorted(), vec![(3.0, 2), (2.0, 9)]);
     }
 
     #[test]

@@ -652,6 +652,84 @@ fn prop_batched_probe_equals_per_query_probes() {
     });
 }
 
+/// Pruned streaming re-rank vs the exhaustive oracle, element for element
+/// (ids **and** bit-exact scores) — the equivalence contract of the fused
+/// probe/re-rank path: the Cauchy–Schwarz admission test and the
+/// whole-query `‖q‖·U_j` early-out may only skip work, never change an
+/// answer.
+fn check_streaming_rerank_equals_exhaustive<C: CodeWord>(
+    d: &std::sync::Arc<Dataset>,
+    queries: &[Vec<f32>],
+    code_bits: usize,
+    m: usize,
+    seed: u64,
+) {
+    use rangelsh::config::{QueryParams, RerankMode, ServeConfig};
+    use rangelsh::coordinator::SearchEngine;
+    use std::sync::Arc;
+    let params = RangeLshParams::new(code_bits, m);
+    let h: Arc<NativeHasher<C>> =
+        Arc::new(NativeHasher::new(d.dim(), params.hash_bits(), seed));
+    let idx: Arc<RangeLshIndex<C>> =
+        Arc::new(RangeLshIndex::build(d, h.as_ref(), params).unwrap());
+    let cfg = ServeConfig { probe_budget: usize::MAX, top_k: 1, ..Default::default() };
+    let streaming: SearchEngine<C> =
+        SearchEngine::new(idx.clone(), d.clone(), h.clone(), cfg.clone()).unwrap();
+    let cfg = ServeConfig { rerank: RerankMode::Exhaustive, ..cfg };
+    let oracle: SearchEngine<C> = SearchEngine::new(idx, d.clone(), h, cfg).unwrap();
+    let n = d.len();
+    for (qi, q) in queries.iter().enumerate() {
+        for &k in &[1usize, 10, n] {
+            for &budget in &[k, n / 2, usize::MAX] {
+                let p = QueryParams::new().with_top_k(k).with_probe_budget(budget);
+                let got = streaming.search_with(q, &p).unwrap();
+                let want = oracle.search_with(q, &p).unwrap();
+                let ctx = format!("seed {seed} L={code_bits} m={m} q={qi} k={k} b={budget}");
+                assert_eq!(got.len(), want.len(), "{ctx}: lengths");
+                for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(g.id, w.id, "{ctx} position {i}: ids diverge");
+                    assert_eq!(
+                        g.score.to_bits(),
+                        w.score.to_bits(),
+                        "{ctx} position {i}: score bits diverge"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_streaming_pruned_rerank_equals_exhaustive_oracle() {
+    use std::sync::Arc;
+    forall(2, |rng, seed| {
+        let n = 200 + rng.gen_index(100);
+        let base = synthetic::longtail_sift(n, 8, seed);
+        // Tie-heavy twin: every row duplicated, so scores tie exactly and
+        // membership hangs on the ascending-id tie-break.
+        let mut rows: Vec<Vec<f32>> = Vec::new();
+        for i in 0..n {
+            rows.push(base.row(i).to_vec());
+            rows.push(base.row(i).to_vec());
+        }
+        let dup = Arc::new(Dataset::from_rows(&rows));
+        let base = Arc::new(base);
+        let q = synthetic::gaussian_queries(2, 8, seed ^ 0x51);
+        let mut queries: Vec<Vec<f32>> = (0..q.len()).map(|i| q.row(i).to_vec()).collect();
+        // ‖q‖ = 0: every bound is zero; nothing may be pruned away.
+        queries.push(vec![0.0; 8]);
+        for &m in &[1usize, 8, 32] {
+            check_streaming_rerank_equals_exhaustive::<u64>(&base, &queries, 16, m, seed);
+            check_streaming_rerank_equals_exhaustive::<Code128>(&base, &queries, 128, m, seed);
+            check_streaming_rerank_equals_exhaustive::<Code256>(&base, &queries, 256, m, seed);
+            // The tie-heavy dataset at the scalar width per m keeps the
+            // matrix (and runtime) bounded; width does not interact with
+            // the re-rank tie-break, only the probe order feeding it.
+            check_streaming_rerank_equals_exhaustive::<u64>(&dup, &queries, 16, m, seed);
+        }
+    });
+}
+
 #[test]
 fn prop_engine_results_sorted_and_exact() {
     use rangelsh::config::ServeConfig;
