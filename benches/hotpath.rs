@@ -13,6 +13,11 @@
 //!      resumable session extended to each target vs the pre-session
 //!      client pattern of a fresh one-shot re-probe per target — the
 //!      auditable record of the Prober cursor's resume payoff
+//!   3d. probe-backend axis (64 / 128 / 256-bit codes at budgets
+//!      10 / 100 / 1k / 10k on the m=8 config): multi-index Hamming
+//!      chunk tables vs the dense counting-sort scan — the auditable
+//!      record of MIH's sub-linear candidate generation and the width
+//!      gate on the auto default
 //!   4. exact re-rank
 //!   4b. rerank axis (k = 1 / 10 / 100 on the long-tail m=32 config):
 //!      the fused streaming-pruned path (Cauchy–Schwarz admission +
@@ -118,6 +123,63 @@ fn bench_probe_width<C: CodeWord>(
             format!("{:.0} probes/s", t.throughput(1)),
         ]);
         rows.push(ProbeRow { code_bits, budget, timing: t });
+    }
+    Ok(())
+}
+
+/// One candidate-generation-backend measurement (MIH vs counting sort)
+/// at a given code width and budget.
+struct BackendRow {
+    code_bits: usize,
+    budget: usize,
+    mode: &'static str,
+    timing: Timing,
+}
+
+/// Build one RANGE-LSH index at width `C` on the m=8 config (~n/8 items
+/// per range) and measure `probe_with_code` with the counting-sort scan
+/// vs the MIH chunk tables at each budget — the same index, toggled
+/// between backends, so the pair differs only in candidate generation.
+fn bench_probe_backend_width<C: CodeWord>(
+    items: &rangelsh::data::Dataset,
+    query: &[f32],
+    code_bits: usize,
+    budgets: &[usize],
+    reps: usize,
+    rows: &mut Vec<BackendRow>,
+    table: &mut Table,
+) -> rangelsh::Result<()> {
+    let params = RangeLshParams::new(code_bits, 8);
+    let width = params.hash_bits().min(C::MAX_BITS);
+    let hasher: NativeHasher<C> = NativeHasher::new(items.dim(), width, 3);
+    let mut index: RangeLshIndex<C> = RangeLshIndex::build(items, &hasher, params)?;
+    let qcode = index.hash_query(query);
+    for &budget in budgets {
+        index.clear_mih();
+        let t_sort = bench(2, reps, || {
+            let mut out = Vec::with_capacity(budget);
+            index.probe_with_code(qcode, budget, &mut out);
+            std::hint::black_box(out);
+        });
+        index.enable_mih();
+        let t_mih = bench(2, reps, || {
+            let mut out = Vec::with_capacity(budget);
+            index.probe_with_code(qcode, budget, &mut out);
+            std::hint::black_box(out);
+        });
+        let speedup = t_sort.median.as_secs_f64() / t_mih.median.as_secs_f64().max(1e-12);
+        table.row(vec![
+            format!("probe L={code_bits} m=8 budget {budget} (counting_sort)"),
+            format!("{:?}", t_sort.median),
+            format!("{:.0} probes/s", t_sort.throughput(1)),
+        ]);
+        table.row(vec![
+            format!("probe L={code_bits} m=8 budget {budget} (mih)"),
+            format!("{:?}", t_mih.median),
+            format!("{speedup:.1}x vs counting_sort"),
+        ]);
+        rows.push(BackendRow { code_bits, budget, mode: "counting_sort", timing: t_sort });
+        rows.push(BackendRow { code_bits, budget, mode: "mih", timing: t_mih });
     }
     Ok(())
 }
@@ -321,6 +383,45 @@ fn main() -> rangelsh::Result<()> {
             session_rows.push(BudgetRow { budget: cum, mode: "reprobe", timing: t_reprobe });
             session_rows.push(BudgetRow { budget: cum, mode: "session", timing: t_session });
         }
+    }
+
+    // 3d. probe-backend axis: MIH chunk tables vs the counting-sort scan,
+    // per code width and budget on the m=8 config (~n/8 items per range —
+    // the 10k-item-per-range shape at paper scale). Acceptance: MIH must
+    // beat counting sort at 256-bit codes on this shape; it may lose at
+    // 64-bit, where one XOR+POPCNT per bucket is already near memory
+    // speed — exactly why the auto default is width-gated at 128.
+    let mut backend_rows: Vec<BackendRow> = Vec::new();
+    {
+        let reps = if smoke { 5 } else { 30 };
+        let budgets = [10usize, 100, 1_000, 10_000];
+        bench_probe_backend_width::<u64>(
+            &items,
+            queries.row(0),
+            64,
+            &budgets,
+            reps,
+            &mut backend_rows,
+            &mut table,
+        )?;
+        bench_probe_backend_width::<Code128>(
+            &items,
+            queries.row(0),
+            128,
+            &budgets,
+            reps,
+            &mut backend_rows,
+            &mut table,
+        )?;
+        bench_probe_backend_width::<Code256>(
+            &items,
+            queries.row(0),
+            256,
+            &budgets,
+            reps,
+            &mut backend_rows,
+            &mut table,
+        )?;
     }
 
     // 4. exact re-rank of 4096 candidates
@@ -575,6 +676,26 @@ fn main() -> rangelsh::Result<()> {
                             ("m", Json::Num(32.0)),
                             ("budget", Json::Num(rerank_budget as f64)),
                             ("k", Json::Num(r.k as f64)),
+                            ("mode", Json::Str(r.mode.into())),
+                            ("median_us", Json::Num(r.timing.median.as_secs_f64() * 1e6)),
+                            ("min_us", Json::Num(r.timing.min.as_secs_f64() * 1e6)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            // counting_sort/mih pairs per code width and budget on the
+            // m=8 config — the probe-backend axis.
+            "probe_backend_axis",
+            Json::Arr(
+                backend_rows
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("code_bits", Json::Num(r.code_bits as f64)),
+                            ("m", Json::Num(8.0)),
+                            ("budget", Json::Num(r.budget as f64)),
                             ("mode", Json::Str(r.mode.into())),
                             ("median_us", Json::Num(r.timing.median.as_secs_f64() * 1e6)),
                             ("min_us", Json::Num(r.timing.min.as_secs_f64() * 1e6)),

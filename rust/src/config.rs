@@ -190,6 +190,66 @@ impl FromStr for RerankMode {
     }
 }
 
+/// Candidate-generation backend for the per-range Hamming ranking (see
+/// [`crate::index::mih`] and README §"Candidate generation backends").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ProbeBackend {
+    /// Width-gated heuristic (the default): multi-index Hamming at
+    /// `code_bits >= 128` — where the dense counting-sort scan dominates
+    /// query time — counting sort below, where one XOR+POPCNT per bucket
+    /// is hard to beat.
+    #[default]
+    Auto,
+    /// Always the dense counting-sort scan (O(#buckets) per query).
+    CountingSort,
+    /// Always multi-index Hamming chunk tables (sub-linear candidate
+    /// generation; identical emitted stream).
+    Mih,
+}
+
+impl ProbeBackend {
+    /// Collapse `Auto` to a concrete backend for an index serving
+    /// `code_bits`-bit codes.
+    pub fn resolve(self, code_bits: usize) -> ProbeBackend {
+        match self {
+            Self::Auto => {
+                if code_bits >= 128 {
+                    Self::Mih
+                } else {
+                    Self::CountingSort
+                }
+            }
+            other => other,
+        }
+    }
+}
+
+impl FromStr for ProbeBackend {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "auto" => Ok(Self::Auto),
+            "counting_sort" => Ok(Self::CountingSort),
+            "mih" => Ok(Self::Mih),
+            other => {
+                anyhow::bail!("unknown probe backend {other:?} (auto | counting_sort | mih)")
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for ProbeBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Self::Auto => "auto",
+            Self::CountingSort => "counting_sort",
+            Self::Mih => "mih",
+        };
+        f.write_str(s)
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
     /// Max queries hashed per PJRT batch.
@@ -212,6 +272,11 @@ pub struct ServeConfig {
     /// `rangelsh serve` builds its own index (no `--load`), an explicit
     /// override replaces the index budget at serve time.
     pub code_bits: usize,
+    /// Candidate-generation backend (see [`ProbeBackend`]); `Auto`
+    /// width-gates — MIH chunk tables at `code_bits >= 128`, counting
+    /// sort below. Resolved against the served index's actual code width,
+    /// not the config default.
+    pub probe_backend: ProbeBackend,
 }
 
 impl Default for ServeConfig {
@@ -223,6 +288,7 @@ impl Default for ServeConfig {
             top_k: 10,
             rerank: RerankMode::Streaming,
             code_bits: 64,
+            probe_backend: ProbeBackend::Auto,
         }
     }
 }
@@ -384,6 +450,7 @@ impl Config {
             rerank: sv.str_or("rerank", "streaming")?.parse()?,
             // Serving width follows the index budget unless overridden.
             code_bits: sv.usize_or("code_bits", index.code_bits)?,
+            probe_backend: sv.str_or("probe_backend", "auto")?.parse()?,
         };
 
         let cfg = Config { dataset, index, eval, serve };
@@ -485,6 +552,36 @@ recall_targets = [0.5, 0.9]
         let bad = format!("{EXAMPLE}\n[serve]\nrerank = \"both\"\n");
         let err = Config::parse(&bad).unwrap_err();
         assert!(format!("{err:#}").contains("rerank mode"));
+    }
+
+    #[test]
+    fn probe_backend_parses_and_defaults_to_auto() {
+        let cfg = Config::parse(EXAMPLE).unwrap();
+        assert_eq!(cfg.serve.probe_backend, ProbeBackend::Auto);
+        let text = format!("{EXAMPLE}\n[serve]\nprobe_backend = \"mih\"\n");
+        assert_eq!(Config::parse(&text).unwrap().serve.probe_backend, ProbeBackend::Mih);
+        let text = format!("{EXAMPLE}\n[serve]\nprobe_backend = \"counting_sort\"\n");
+        assert_eq!(
+            Config::parse(&text).unwrap().serve.probe_backend,
+            ProbeBackend::CountingSort
+        );
+        let bad = format!("{EXAMPLE}\n[serve]\nprobe_backend = \"radix\"\n");
+        let err = Config::parse(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("probe backend"));
+    }
+
+    #[test]
+    fn probe_backend_auto_resolves_on_code_width() {
+        assert_eq!(ProbeBackend::Auto.resolve(64), ProbeBackend::CountingSort);
+        assert_eq!(ProbeBackend::Auto.resolve(127), ProbeBackend::CountingSort);
+        assert_eq!(ProbeBackend::Auto.resolve(128), ProbeBackend::Mih);
+        assert_eq!(ProbeBackend::Auto.resolve(256), ProbeBackend::Mih);
+        // Explicit choices pass through untouched.
+        assert_eq!(ProbeBackend::Mih.resolve(16), ProbeBackend::Mih);
+        assert_eq!(ProbeBackend::CountingSort.resolve(256), ProbeBackend::CountingSort);
+        for b in [ProbeBackend::Auto, ProbeBackend::CountingSort, ProbeBackend::Mih] {
+            assert_eq!(b.to_string().parse::<ProbeBackend>().unwrap(), b);
+        }
     }
 
     #[test]

@@ -7,7 +7,7 @@
 
 use std::sync::Arc;
 
-use crate::config::{QueryParams, RerankMode, ResolvedQueryParams, ServeConfig};
+use crate::config::{ProbeBackend, QueryParams, RerankMode, ResolvedQueryParams, ServeConfig};
 use crate::coordinator::metrics::Metrics;
 use crate::data::{Dataset, RerankView};
 use crate::hash::{
@@ -471,15 +471,18 @@ impl AnyEngine {
         runtime: Option<&RuntimeHandle>,
     ) -> Result<AnyEngine> {
         match index {
-            AnyRangeLshIndex::W64(i) => {
+            AnyRangeLshIndex::W64(mut i) => {
+                apply_probe_backend(&mut i, &cfg);
                 let hasher = pick_hasher::<u64>(runtime, i.projection().clone());
                 Ok(AnyEngine::W64(Arc::new(SearchEngine::new(Arc::new(i), items, hasher, cfg)?)))
             }
-            AnyRangeLshIndex::W128(i) => {
+            AnyRangeLshIndex::W128(mut i) => {
+                apply_probe_backend(&mut i, &cfg);
                 let hasher = pick_hasher::<Code128>(runtime, i.projection().clone());
                 Ok(AnyEngine::W128(Arc::new(SearchEngine::new(Arc::new(i), items, hasher, cfg)?)))
             }
-            AnyRangeLshIndex::W256(i) => {
+            AnyRangeLshIndex::W256(mut i) => {
+                apply_probe_backend(&mut i, &cfg);
                 let hasher = pick_hasher::<Code256>(runtime, i.projection().clone());
                 Ok(AnyEngine::W256(Arc::new(SearchEngine::new(Arc::new(i), items, hasher, cfg)?)))
             }
@@ -574,8 +577,9 @@ fn build_arm<C: CodeWord>(
             match PjrtHasher::<C>::new(rt.clone(), proj) {
                 Ok(h) => {
                     let hasher: Arc<dyn ItemHasher<C>> = Arc::new(h);
-                    let index: Arc<RangeLshIndex<C>> =
-                        Arc::new(RangeLshIndex::build(&items, hasher.as_ref(), params)?);
+                    let mut index = RangeLshIndex::build(&items, hasher.as_ref(), params)?;
+                    apply_probe_backend(&mut index, &cfg);
+                    let index: Arc<RangeLshIndex<C>> = Arc::new(index);
                     return SearchEngine::new(index, items, hasher, cfg);
                 }
                 Err(e) => {
@@ -586,9 +590,22 @@ fn build_arm<C: CodeWord>(
     }
     let hasher: Arc<NativeHasher<C>> =
         Arc::new(NativeHasher::new(items.dim(), native_width, seed));
-    let index: Arc<RangeLshIndex<C>> =
-        Arc::new(RangeLshIndex::build(&items, hasher.as_ref(), params)?);
+    let mut index = RangeLshIndex::build(&items, hasher.as_ref(), params)?;
+    apply_probe_backend(&mut index, &cfg);
+    let index: Arc<RangeLshIndex<C>> = Arc::new(index);
     SearchEngine::new(index, items, hasher, cfg)
+}
+
+/// Attach or drop the index's MIH chunk tables per the configured
+/// candidate-generation backend; `Auto` gates on the index's own total
+/// code budget (MIH at `code_bits >= 128`). `enable_mih` is a no-op when
+/// the tables are already present (e.g. loaded from a `.rlsh` file), so
+/// persisted tables are served as-is rather than rebuilt.
+fn apply_probe_backend<C: CodeWord>(index: &mut RangeLshIndex<C>, cfg: &ServeConfig) {
+    match cfg.probe_backend.resolve(index.params().code_bits) {
+        ProbeBackend::Mih => index.enable_mih(),
+        _ => index.clear_mih(),
+    }
 }
 
 /// The query-hashing backend for a loaded index's stored panel: PJRT
@@ -1011,6 +1028,45 @@ mod tests {
                 let ids: Vec<ItemId> = batch[qi].iter().map(|r| r.id).collect();
                 assert_eq!(ids, gt[qi], "bits {bits} query {qi}");
                 assert_eq!(batch[qi], engine.search(q.row(qi)).unwrap(), "bits {bits} q {qi}");
+            }
+        }
+    }
+
+    #[test]
+    fn probe_backend_selection_is_answer_invariant() {
+        // The MIH backend is a candidate-generation strategy, not a
+        // different index: explicit mih / counting_sort / auto engines
+        // must return identical answers at every width.
+        let d = Arc::new(synthetic::longtail_sift(900, 8, 40));
+        let q = synthetic::gaussian_queries(4, 8, 41);
+        for bits in [32usize, 128] {
+            let engines: Vec<AnyEngine> = [
+                ProbeBackend::Auto,
+                ProbeBackend::CountingSort,
+                ProbeBackend::Mih,
+            ]
+            .into_iter()
+            .map(|backend| {
+                let cfg = ServeConfig {
+                    probe_budget: 200,
+                    top_k: 5,
+                    code_bits: bits,
+                    probe_backend: backend,
+                    ..Default::default()
+                };
+                AnyEngine::build_native_range(d.clone(), RangeLshParams::new(bits, 8), 42, cfg)
+                    .unwrap()
+            })
+            .collect();
+            for qi in 0..q.len() {
+                let want = engines[0].search(q.row(qi)).unwrap();
+                for (ei, e) in engines.iter().enumerate().skip(1) {
+                    assert_eq!(
+                        e.search(q.row(qi)).unwrap(),
+                        want,
+                        "bits {bits} engine {ei} query {qi}"
+                    );
+                }
             }
         }
     }

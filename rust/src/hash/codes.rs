@@ -223,6 +223,57 @@ impl<const W: usize> CodeWord for [u64; W] {
     }
 }
 
+/// 16-bit chunk view of a code word for multi-index hashing
+/// ([`crate::index::mih`]): chunk `k` is bits `16k .. 16(k+1)` of the
+/// code, little-endian across words (`u64` → 4 chunks, [`Code128`] → 8,
+/// [`Code256`] → 16). Blanket-implemented for every [`CodeWord`]; since
+/// 16 divides 64 each chunk lives inside one backing word, so extraction
+/// is one shift per chunk.
+pub trait CodeChunks: CodeWord {
+    /// Chunks per full code word (`MAX_BITS / 16`).
+    const N_CHUNKS: usize = Self::MAX_BITS / 16;
+
+    /// Chunk `k` of the code (bits `16k .. 16k + 16`).
+    #[inline]
+    fn chunk(&self, k: usize) -> u16 {
+        debug_assert!(k < Self::N_CHUNKS);
+        (self.as_words()[k / 4] >> (16 * (k % 4))) as u16
+    }
+
+    /// All [`Self::N_CHUNKS`] chunks, low chunk first.
+    fn chunks(&self) -> ChunkIter<Self> {
+        ChunkIter { code: *self, k: 0 }
+    }
+}
+
+impl<C: CodeWord> CodeChunks for C {}
+
+/// Iterator over a code word's 16-bit chunks (see [`CodeChunks`]).
+pub struct ChunkIter<C: CodeWord> {
+    code: C,
+    k: usize,
+}
+
+impl<C: CodeWord> Iterator for ChunkIter<C> {
+    type Item = u16;
+
+    fn next(&mut self) -> Option<u16> {
+        if self.k >= C::MAX_BITS / 16 {
+            return None;
+        }
+        let c = self.code.chunk(self.k);
+        self.k += 1;
+        Some(c)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let rem = C::MAX_BITS / 16 - self.k;
+        (rem, Some(rem))
+    }
+}
+
+impl<C: CodeWord> ExactSizeIterator for ChunkIter<C> {}
+
 /// Zero-extend a scalar `u64` code into any wider (or equal) code word —
 /// the embedding under which the wide path must agree bit-for-bit with
 /// the scalar path (checked by `tests/properties.rs`).
@@ -379,6 +430,50 @@ mod tests {
         assert_eq!(Code128::from_words(w.as_words()), w);
         let s = 42u64;
         assert_eq!(u64::from_words(s.as_words()), s);
+    }
+
+    #[test]
+    fn chunks_round_trip_per_width() {
+        // Reassembling the 16-bit chunks must reproduce the code exactly,
+        // at every width (u64 → 4 chunks, Code128 → 8, Code256 → 16).
+        fn check<C: CodeWord>(code: C) {
+            let chunks: Vec<u16> = code.chunks().collect();
+            assert_eq!(chunks.len(), C::N_CHUNKS);
+            assert_eq!(C::N_CHUNKS, C::MAX_BITS / 16);
+            let mut rebuilt = C::zero();
+            for (k, &c) in chunks.iter().enumerate() {
+                for j in 0..16 {
+                    if (c >> j) & 1 == 1 {
+                        rebuilt.set_bit(16 * k + j);
+                    }
+                }
+            }
+            assert_eq!(rebuilt, code);
+            // The indexed accessor agrees with the iterator.
+            for (k, &c) in chunks.iter().enumerate() {
+                assert_eq!(code.chunk(k), c);
+            }
+        }
+        check(0xDEAD_BEEF_0BAD_F00Du64);
+        check::<Code128>([0x0123_4567_89AB_CDEF, u64::MAX - 12345]);
+        check::<Code256>([u64::MAX, 0, 0x5555_5555_5555_5555, 0xAAAA_0000_FFFF_0001]);
+    }
+
+    #[test]
+    fn chunk_extraction_examples() {
+        // Chunk k covers bits 16k..16k+16, little-endian across words.
+        let c = 0x3333_2222_1111_0000u64;
+        assert_eq!(c.chunk(0), 0x0000);
+        assert_eq!(c.chunk(1), 0x1111);
+        assert_eq!(c.chunk(2), 0x2222);
+        assert_eq!(c.chunk(3), 0x3333);
+        let w: Code128 = [0, 0xBBBB_0000_0000_AAAA];
+        assert_eq!(w.chunk(4), 0xAAAA);
+        assert_eq!(w.chunk(7), 0xBBBB);
+        // A masked code's partial top chunk is zero-extended.
+        let c = u64::MAX.masked(43);
+        assert_eq!(c.chunk(2), (1 << 11) - 1);
+        assert_eq!(c.chunk(3), 0);
     }
 
     #[test]

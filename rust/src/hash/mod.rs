@@ -13,7 +13,9 @@ pub mod l2hash;
 pub mod projection;
 pub mod sign_rp;
 
-pub use codes::{hamming, mask_bits, matches, Code128, Code256, CodeWord, MAX_CODE_BITS};
+pub use codes::{
+    hamming, mask_bits, matches, Code128, Code256, CodeChunks, CodeWord, MAX_CODE_BITS,
+};
 pub use l2hash::L2Hash;
 pub use projection::Projection;
 pub use sign_rp::NativeHasher;

@@ -17,6 +17,7 @@
 //! word, with the word count a compile-time constant.
 
 use crate::hash::CodeWord;
+use crate::index::mih::{MihScratch, MihTable};
 use crate::index::traits::{drain_bucket, ProbeStats, Prober};
 use crate::util::fxhash::FxHashMap;
 use crate::ItemId;
@@ -59,15 +60,20 @@ pub struct SortScratch {
     /// least the budget the sort was run with, so a budget-respecting
     /// walk never needs to read below it.
     pub floor: u32,
-    l_cache: Vec<u32>,
-    cursor: Vec<u32>,
+    pub(crate) l_cache: Vec<u32>,
+    pub(crate) cursor: Vec<u32>,
     /// `item_hist[l]` = total items (not buckets) at match count `l` —
     /// the histogram that decides the materialization floor.
-    item_hist: Vec<u32>,
+    pub(crate) item_hist: Vec<u32>,
     /// The budget the last sort materialized for — lets
     /// [`BucketTable::emit_ranked`] check its precondition in debug
-    /// builds.
-    sorted_budget: usize,
+    /// builds. Written by both the counting sort and
+    /// [`MihTable::rank_partial`].
+    pub(crate) sorted_budget: usize,
+    /// Buffers for the MIH backend ([`MihTable::rank_partial`]), embedded
+    /// here so every scratch pool (single-table, per-range, batch)
+    /// carries MIH capability without separate plumbing.
+    pub(crate) mih: MihScratch,
 }
 
 impl SortScratch {
@@ -81,6 +87,7 @@ impl SortScratch {
             cursor: Vec::new(),
             item_hist: Vec::new(),
             sorted_budget: 0,
+            mih: MihScratch::new(),
         }
     }
 }
@@ -163,6 +170,13 @@ impl<C: CodeWord> BucketTable<C> {
     #[inline]
     pub fn bucket_items(&self, b: usize) -> &[ItemId] {
         &self.items[self.starts[b] as usize..self.starts[b + 1] as usize]
+    }
+
+    /// Code of dense bucket `b` (masked to `bits`) — the scan target the
+    /// counting sort popcounts and the MIH chunk tables are built from.
+    #[inline]
+    pub fn bucket_code(&self, b: usize) -> C {
+        self.codes[b]
     }
 
     /// Items whose code equals `qcode` exactly (single-probe protocol).
@@ -370,7 +384,18 @@ impl<C: CodeWord> BucketTable<C> {
     /// Open a resumable Hamming-ranked probe session for `qcode` — the
     /// cursor shared by the single-table indexes (SIMPLE-LSH, SIGN-ALSH).
     pub fn prober(&self, qcode: C) -> TableProber<'_, C> {
-        TableProber::new(self, qcode)
+        TableProber::new(self, qcode, None)
+    }
+
+    /// Like [`Self::prober`], but ranking through the MIH backend when
+    /// `mih` is present (the table it was built from must be `self`).
+    /// The emitted stream is element-for-element identical either way.
+    pub fn prober_mih<'a>(
+        &'a self,
+        qcode: C,
+        mih: Option<&'a MihTable<C>>,
+    ) -> TableProber<'a, C> {
+        TableProber::new(self, qcode, mih)
     }
 }
 
@@ -382,6 +407,10 @@ impl<C: CodeWord> BucketTable<C> {
 pub struct TableProber<'a, C: CodeWord> {
     table: &'a BucketTable<C>,
     qcode: C,
+    /// MIH backend for the initial ranking, when enabled on the owning
+    /// index. Below-floor re-materialization always uses the counting
+    /// sort (it is full-depth anyway).
+    mih: Option<&'a MihTable<C>>,
     scratch: SortScratch,
     /// Sort runs lazily at the first nonzero `extend`, so `extend(0)` on
     /// a fresh session is a true no-op.
@@ -397,10 +426,11 @@ pub struct TableProber<'a, C: CodeWord> {
 }
 
 impl<'a, C: CodeWord> TableProber<'a, C> {
-    fn new(table: &'a BucketTable<C>, qcode: C) -> Self {
+    fn new(table: &'a BucketTable<C>, qcode: C, mih: Option<&'a MihTable<C>>) -> Self {
         Self {
             table,
             qcode,
+            mih,
             scratch: take_scratch(),
             sorted: false,
             level: 0,
@@ -425,11 +455,16 @@ impl<C: CodeWord> Prober for TableProber<'_, C> {
         }
         let table = self.table;
         if !self.sorted {
-            table.counting_sort_partial(self.qcode, additional_budget, &mut self.scratch);
+            if let Some(mih) = self.mih {
+                self.stats.buckets_scanned +=
+                    mih.rank_partial(table, self.qcode, additional_budget, &mut self.scratch);
+            } else {
+                table.counting_sort_partial(self.qcode, additional_budget, &mut self.scratch);
+                self.stats.buckets_scanned += table.n_buckets();
+            }
             self.sorted = true;
             self.level = table.bits;
             self.stats.ranges_sorted += 1;
-            self.stats.buckets_scanned += table.n_buckets();
         }
         let mut remaining = additional_budget;
         loop {

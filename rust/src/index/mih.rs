@@ -1,0 +1,569 @@
+//! Multi-index Hamming (MIH) probing: sub-linear candidate generation
+//! for wide codes (Norouzi, Punjani & Fleet, "Fast Search in Hamming
+//! Space with Multi-Index Hashing").
+//!
+//! The counting sort in [`bucket`](crate::index::bucket) popcounts every
+//! bucket of a table per query — O(#buckets) regardless of budget. At
+//! L ∈ {128, 256} that dense scan dominates query time. MIH splits each
+//! bucket code into 16-bit chunks and builds one inverted table per
+//! chunk: a radius-`r` probe around the query's chunk values touches only
+//! the buckets whose *some* chunk lies within `r` flips of the query's,
+//! and by the pigeonhole principle a code at full Hamming distance `d`
+//! has at least one chunk within `floor(d / n_chunks)` of the query — so
+//! after probing all chunks at chunk-radius `r`, every bucket at full
+//! distance `<= n_chunks * (r + 1) - 1` has been discovered and those
+//! distance levels are *complete*. Discovered buckets are verified by one
+//! full popcount each, grouped by match count, and materialized into the
+//! same [`SortScratch`] level slices the counting sort produces — so the
+//! budget walkers ([`TableProber`](crate::index::bucket::TableProber),
+//! [`RangeProber`](crate::index::range::RangeProber)), `emit_ranked`, and
+//! the streaming re-rank run unchanged on either backend.
+//!
+//! Tie-order contract (pinned, property-tested): the emitted candidate
+//! stream is *element-for-element identical* to the counting sort's —
+//! levels descend by match count, buckets within a level ascend by dense
+//! bucket index (MIH sorts each finalized level's discovery list), items
+//! within a bucket keep arena (build) order.
+//!
+//! Chunk tables are CSR: one `offsets` array spanning all chunks
+//! (`n_chunks * 2^16 + 1` slice bounds) plus a dense `values` array of
+//! bucket indices (`n_chunks * n_buckets` entries — every bucket appears
+//! once per chunk). Built once at index-build time next to the
+//! [`BucketTable`]; persisted as an optional `.rlsh` v2 section.
+
+use std::marker::PhantomData;
+
+use anyhow::{ensure, Result};
+
+use crate::hash::{CodeChunks, CodeWord};
+use crate::index::bucket::{BucketTable, SortScratch};
+
+/// Width of one MIH chunk in bits. 16 bits ⇒ 2^16 buckets per chunk
+/// table, small enough that a dense CSR `offsets` array (256 KiB per
+/// chunk) beats any hash lookup on the probe path.
+pub const CHUNK_BITS: usize = 16;
+
+/// Dense buckets per chunk table (`2^CHUNK_BITS`).
+const CHUNK_BUCKETS: usize = 1 << CHUNK_BITS;
+
+/// Number of 16-bit chunks covering a `bits`-bit code. The last chunk is
+/// partial when `16 ∤ bits` (e.g. 251 hash bits → 16 chunks, last 11
+/// bits wide).
+pub fn n_chunks(bits: usize) -> usize {
+    bits.div_ceil(CHUNK_BITS)
+}
+
+/// Width in bits of chunk `k` of a `bits`-bit code.
+#[inline]
+fn chunk_width(bits: usize, k: usize) -> usize {
+    CHUNK_BITS.min(bits - k * CHUNK_BITS)
+}
+
+/// Per-chunk inverted bucket tables for one [`BucketTable`], CSR layout.
+///
+/// Chunk `k`'s bucket `v` owns the dense-bucket-index list
+/// `values[offsets[k * 2^16 + v] .. offsets[k * 2^16 + v + 1]]`,
+/// ascending (the build scans buckets in ascending order).
+#[derive(Debug, Clone)]
+pub struct MihTable<C: CodeWord> {
+    /// Hash bits of the backing table (codes are pre-masked to this).
+    bits: usize,
+    /// `n_chunks(bits)`, cached.
+    n_chunks: usize,
+    /// CSR slice bounds, `n_chunks * 2^16 + 1` entries.
+    offsets: Box<[u32]>,
+    /// Dense bucket indices, `n_chunks * n_buckets` entries.
+    values: Box<[u32]>,
+    _code: PhantomData<C>,
+}
+
+impl<C: CodeWord> MihTable<C> {
+    /// Build the chunk tables for `table` (one histogram + placement pass
+    /// over its bucket codes, like the item-arena build itself).
+    pub fn build(table: &BucketTable<C>) -> Self {
+        let bits = table.bits();
+        let nc = n_chunks(bits);
+        let nb = table.n_buckets();
+        assert!(nc * nb <= u32::MAX as usize, "MIH table too large for u32 CSR");
+        let mut offsets = vec![0u32; nc * CHUNK_BUCKETS + 1].into_boxed_slice();
+        // Pass 1: histogram each bucket code's chunks (shifted by one for
+        // the prefix sum below).
+        for b in 0..nb {
+            let code = table.bucket_code(b);
+            for k in 0..nc {
+                offsets[k * CHUNK_BUCKETS + code.chunk(k) as usize + 1] += 1;
+            }
+        }
+        for i in 1..offsets.len() {
+            offsets[i] += offsets[i - 1];
+        }
+        // Pass 2: place bucket indices through per-list cursors. Buckets
+        // ascend, so every CSR list ends up sorted ascending.
+        let mut cursor: Vec<u32> = offsets[..offsets.len() - 1].to_vec();
+        let mut values = vec![0u32; nc * nb].into_boxed_slice();
+        for b in 0..nb {
+            let code = table.bucket_code(b);
+            for k in 0..nc {
+                let c = &mut cursor[k * CHUNK_BUCKETS + code.chunk(k) as usize];
+                values[*c as usize] = b as u32;
+                *c += 1;
+            }
+        }
+        Self { bits, n_chunks: nc, offsets, values, _code: PhantomData }
+    }
+
+    /// Reassemble from persisted parts, validating the CSR structure
+    /// against the freshly rebuilt `table` — a corrupt section yields a
+    /// clear error here instead of an out-of-bounds panic on the first
+    /// probe.
+    pub fn from_parts(
+        bits: usize,
+        offsets: Vec<u32>,
+        values: Vec<u32>,
+        table: &BucketTable<C>,
+    ) -> Result<Self> {
+        let nc = n_chunks(bits);
+        let nb = table.n_buckets();
+        ensure!(bits == table.bits(), "MIH section bits {bits} != table bits {}", table.bits());
+        ensure!(
+            offsets.len() == nc * CHUNK_BUCKETS + 1,
+            "MIH offsets length {} != {} ({nc} chunks)",
+            offsets.len(),
+            nc * CHUNK_BUCKETS + 1
+        );
+        ensure!(
+            values.len() == nc * nb,
+            "MIH values length {} != n_chunks {nc} * n_buckets {nb}",
+            values.len()
+        );
+        ensure!(offsets[0] == 0, "MIH offsets must start at 0");
+        ensure!(
+            offsets.windows(2).all(|w| w[0] <= w[1]),
+            "MIH offsets are not non-decreasing (corrupt section?)"
+        );
+        ensure!(
+            *offsets.last().unwrap() as usize == values.len(),
+            "MIH offsets end {} != values length {}",
+            offsets.last().unwrap(),
+            values.len()
+        );
+        ensure!(
+            values.iter().all(|&v| (v as usize) < nb),
+            "MIH values reference buckets past the table's {nb}"
+        );
+        Ok(Self {
+            bits,
+            n_chunks: nc,
+            offsets: offsets.into_boxed_slice(),
+            values: values.into_boxed_slice(),
+            _code: PhantomData,
+        })
+    }
+
+    /// Hash bits of the backing table.
+    pub fn bits(&self) -> usize {
+        self.bits
+    }
+
+    /// CSR slice bounds (persistence).
+    pub(crate) fn offsets(&self) -> &[u32] {
+        &self.offsets
+    }
+
+    /// CSR bucket-index lists (persistence).
+    pub(crate) fn values(&self) -> &[u32] {
+        &self.values
+    }
+
+    /// Budget-adaptive MIH ranking: fill `scratch` with exactly the level
+    /// slices [`BucketTable::counting_sort_partial`] would produce — same
+    /// materialization-floor rule, same within-level bucket-ascending
+    /// order — but popcount only the buckets discovered by walking
+    /// Hamming balls around the query's chunks in increasing radius.
+    ///
+    /// Returns the number of buckets popcounted (the MIH analogue of the
+    /// counting sort's full `n_buckets` scan, for `buckets_scanned`
+    /// stats): sub-linear whenever the budget is covered by near levels.
+    pub fn rank_partial(
+        &self,
+        table: &BucketTable<C>,
+        qcode: C,
+        budget: usize,
+        scratch: &mut SortScratch,
+    ) -> usize {
+        let bits = self.bits;
+        debug_assert_eq!(bits, table.bits(), "MIH table built for a different bit width");
+        let n = table.n_buckets();
+        let nc = self.n_chunks;
+        let q = qcode.masked(bits);
+
+        let SortScratch { order, levels, floor, sorted_budget, mih: ms, .. } = scratch;
+        *sorted_budget = budget;
+        levels.clear();
+        levels.resize(bits + 2, 0);
+        ms.reset(n, bits);
+
+        // The floor rule must match the counting sort's: floor 0 (full
+        // materialization) when the budget covers the table, else the
+        // highest level at which the best-first cumulative item count
+        // reaches the budget. Levels become *complete* (all their buckets
+        // discovered) in descending order as the chunk radius grows, so
+        // the cumulative walk can run incrementally over complete levels.
+        let mut cut: Option<usize> = if budget >= table.n_items() { Some(0) } else { None };
+        let mut complete_l = bits + 1;
+        let mut cum = 0usize;
+        let mut found = 0usize;
+
+        // Chunk 0 is the widest (`min(16, bits)` bits), so every bucket's
+        // chunk 0 lies within that many flips of the query's — the radius
+        // loop always terminates with every bucket discovered.
+        for r in 0..=CHUNK_BITS.min(bits) {
+            if found < n {
+                for k in 0..nc {
+                    let wk = chunk_width(bits, k);
+                    if r > wk {
+                        continue;
+                    }
+                    let qc = q.chunk(k);
+                    let base = k * CHUNK_BUCKETS;
+                    for_each_flip_mask(wk as u32, r as u32, |mask| {
+                        let v = (qc ^ mask) as usize;
+                        let lo = self.offsets[base + v] as usize;
+                        let hi = self.offsets[base + v + 1] as usize;
+                        for &b in &self.values[lo..hi] {
+                            if ms.test_and_set(b) {
+                                continue;
+                            }
+                            // New bucket: verify true distance by one
+                            // full popcount, group by match count.
+                            let l = table.bucket_code(b as usize).matches(q, bits) as usize;
+                            ms.pending[l].push(b);
+                            ms.item_hist[l] += table.bucket_items(b as usize).len() as u32;
+                            found += 1;
+                        }
+                    });
+                }
+            }
+            // Pigeonhole: after chunk-radius r, full distances up to
+            // `nc * (r + 1) - 1` are complete, i.e. match counts down to
+            // `bits - (nc * (r + 1) - 1)`.
+            let ball = nc * (r + 1) - 1;
+            let new_complete = if found == n || ball >= bits { 0 } else { bits - ball };
+            while complete_l > new_complete {
+                complete_l -= 1;
+                if cut.is_none() {
+                    cum += ms.item_hist[complete_l] as usize;
+                    if cum >= budget {
+                        cut = Some(complete_l);
+                    }
+                }
+            }
+            if let Some(f) = cut {
+                if complete_l <= f {
+                    break;
+                }
+            }
+        }
+        debug_assert!(cut.is_some(), "radius loop ended without covering the budget");
+        let cut = cut.unwrap_or(0);
+        *floor = cut as u32;
+
+        // Materialize levels `cut..=bits`: ascending level start offsets
+        // into `order`, each level's buckets sorted ascending (discovery
+        // order across chunks and rounds is arbitrary). Levels below the
+        // floor keep zeroed bounds — walkers never read them, and a
+        // below-floor resume re-sorts to full depth via the counting
+        // sort, which reproduces every materialized slice bit-for-bit.
+        let total: usize = (cut..=bits).map(|l| ms.pending[l].len()).sum();
+        if order.len() < total {
+            order.resize(total, 0);
+        }
+        let mut pos = 0u32;
+        for l in cut..=bits {
+            levels[l] = pos;
+            let pending = &mut ms.pending[l];
+            pending.sort_unstable();
+            for &b in pending.iter() {
+                order[pos as usize] = b;
+                pos += 1;
+            }
+        }
+        levels[bits + 1] = pos;
+        found
+    }
+}
+
+/// Reusable per-query buffers for [`MihTable::rank_partial`], embedded in
+/// [`SortScratch`] so every existing scratch pool (single-table, per-range,
+/// batch) carries MIH capability without new plumbing.
+#[derive(Debug, Default, Clone)]
+pub struct MihScratch {
+    /// Seen-bitmap over dense bucket indices (one bit per bucket).
+    seen: Vec<u64>,
+    /// Discovered buckets grouped by match count, finalized (sorted and
+    /// placed) once their level is pigeonhole-complete.
+    pending: Vec<Vec<u32>>,
+    /// Items per match count among discovered buckets — the histogram
+    /// that decides the materialization floor.
+    item_hist: Vec<u32>,
+}
+
+impl MihScratch {
+    /// Empty scratch, usable in `const` thread-local initialisers.
+    pub const fn new() -> Self {
+        Self { seen: Vec::new(), pending: Vec::new(), item_hist: Vec::new() }
+    }
+
+    /// Prepare for a query over `n` buckets and `bits + 1` match levels;
+    /// clears state, reuses buffers.
+    fn reset(&mut self, n: usize, bits: usize) {
+        self.seen.clear();
+        self.seen.resize(n.div_ceil(64), 0);
+        for p in self.pending.iter_mut() {
+            p.clear();
+        }
+        if self.pending.len() < bits + 1 {
+            self.pending.resize_with(bits + 1, Vec::new);
+        }
+        self.item_hist.clear();
+        self.item_hist.resize(bits + 1, 0);
+    }
+
+    /// Mark bucket `b` seen; returns whether it already was.
+    #[inline]
+    fn test_and_set(&mut self, b: u32) -> bool {
+        let w = (b >> 6) as usize;
+        let bit = 1u64 << (b & 63);
+        let seen = self.seen[w] & bit != 0;
+        self.seen[w] |= bit;
+        seen
+    }
+}
+
+/// Enumerate every `width`-bit mask with exactly `ones` set bits, in
+/// increasing numeric order (Gosper's hack). `ones == 0` yields the
+/// single zero mask; `ones > width` yields nothing.
+fn for_each_flip_mask(width: u32, ones: u32, mut f: impl FnMut(u16)) {
+    debug_assert!((1..=CHUNK_BITS as u32).contains(&width));
+    if ones > width {
+        return;
+    }
+    if ones == 0 {
+        f(0);
+        return;
+    }
+    // u32 arithmetic: the hack transiently overflows 16 bits at the last
+    // mask (e.g. width 16, ones 16).
+    let limit = 1u32 << width;
+    let mut m = (1u32 << ones) - 1;
+    while m < limit {
+        f(m as u16);
+        let c = m & m.wrapping_neg();
+        let r = m + c;
+        m = (((r ^ m) >> 2) / c) | r;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hash::codes::{widen, Code128, Code256};
+
+    fn table_from_codes<C: CodeWord>(codes: &[C], bits: usize) -> BucketTable<C> {
+        BucketTable::build(codes, None, bits)
+    }
+
+    /// Oracle comparison: MIH rank + emit equals counting sort + emit,
+    /// element for element, and the floors agree.
+    fn assert_matches_counting_sort<C: CodeWord>(
+        codes: &[C],
+        q: C,
+        bits: usize,
+        budgets: &[usize],
+    ) {
+        let t = table_from_codes(codes, bits);
+        let mih = MihTable::build(&t);
+        for &budget in budgets {
+            let mut cs = SortScratch::default();
+            t.counting_sort_partial(q, budget, &mut cs);
+            let mut ms = SortScratch::default();
+            mih.rank_partial(&t, q, budget, &mut ms);
+            assert_eq!(ms.floor, cs.floor, "floor, budget {budget}");
+            let mut want = Vec::new();
+            t.emit_ranked(&cs, budget, &mut want);
+            let mut got = Vec::new();
+            t.emit_ranked(&ms, budget, &mut got);
+            assert_eq!(got, want, "budget {budget}");
+        }
+    }
+
+    fn pseudo_codes<C: CodeWord>(n: u64, bits: usize) -> Vec<C> {
+        (0..n)
+            .map(|i| {
+                let mut w = [0u64; 4];
+                let mut s = i.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(0xD1B54A32D192ED03);
+                for word in w.iter_mut().take(C::WORDS) {
+                    s ^= s >> 27;
+                    s = s.wrapping_mul(0x2545F4914F6CDD1D);
+                    *word = s;
+                }
+                C::from_words(&w[..C::WORDS]).masked(bits)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn flip_mask_enumeration_is_exhaustive() {
+        for width in [1u32, 5, 11, 16] {
+            for ones in 0..=width {
+                let mut got = Vec::new();
+                for_each_flip_mask(width, ones, |m| got.push(m));
+                let want: Vec<u16> = (0..1u32 << width)
+                    .filter(|v| v.count_ones() == ones)
+                    .map(|v| v as u16)
+                    .collect();
+                assert_eq!(got, want, "width {width} ones {ones}");
+            }
+            // ones > width yields nothing.
+            let mut got = Vec::new();
+            for_each_flip_mask(width, width + 1, |m| got.push(m));
+            assert!(got.is_empty());
+        }
+    }
+
+    #[test]
+    fn csr_build_round_trips_chunks() {
+        // Every bucket must appear exactly once per chunk, in the CSR
+        // list of its own chunk value — across all three widths and with
+        // a partial last chunk.
+        fn check<C: CodeWord>(bits: usize) {
+            let codes = pseudo_codes::<C>(300, bits);
+            let t = table_from_codes(&codes, bits);
+            let mih = MihTable::build(&t);
+            let nc = n_chunks(bits);
+            assert_eq!(mih.values().len(), nc * t.n_buckets());
+            for b in 0..t.n_buckets() {
+                let code = t.bucket_code(b);
+                for k in 0..nc {
+                    let v = code.chunk(k) as usize;
+                    let lo = mih.offsets()[k * CHUNK_BUCKETS + v] as usize;
+                    let hi = mih.offsets()[k * CHUNK_BUCKETS + v + 1] as usize;
+                    assert!(
+                        mih.values()[lo..hi].binary_search(&(b as u32)).is_ok(),
+                        "bucket {b} missing from chunk {k} list (bits {bits})"
+                    );
+                }
+            }
+        }
+        check::<u64>(11);
+        check::<u64>(64);
+        check::<Code128>(123);
+        check::<Code256>(251);
+    }
+
+    #[test]
+    fn csr_lists_cover_empty_and_singleton_buckets() {
+        // All items in one bucket: one bucket, one entry per chunk list.
+        let t = table_from_codes(&[7u64, 7, 7, 7], 16);
+        let mih = MihTable::build(&t);
+        assert_eq!(t.n_buckets(), 1);
+        assert_eq!(mih.values(), &[0u32]);
+        let lo = mih.offsets()[7] as usize;
+        let hi = mih.offsets()[8] as usize;
+        assert_eq!(&mih.values()[lo..hi], &[0u32]);
+        // Empty table: no values, all-zero offsets.
+        let t = table_from_codes(&[] as &[u64], 16);
+        let mih = MihTable::build(&t);
+        assert!(mih.values().is_empty());
+        assert!(mih.offsets().iter().all(|&o| o == 0));
+        let mut s = SortScratch::default();
+        assert_eq!(mih.rank_partial(&t, 0u64, 10, &mut s), 0);
+        let mut out = Vec::new();
+        t.emit_ranked(&s, 10, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn rank_matches_counting_sort_u64() {
+        let codes = pseudo_codes::<u64>(400, 40);
+        let n = codes.len();
+        let q = 0xA5A5_5A5A_1234u64;
+        assert_matches_counting_sort(&codes, q, 40, &[1, 7, n / 2, usize::MAX]);
+    }
+
+    #[test]
+    fn rank_matches_counting_sort_wide() {
+        let codes = pseudo_codes::<Code128>(300, 123);
+        let q: Code128 = [0xDEAD_BEEF_0BAD_F00D, 0x0123_4567_89AB_CDEF];
+        assert_matches_counting_sort(&codes, q.masked(123), 123, &[1, 7, 150, usize::MAX]);
+        let codes = pseudo_codes::<Code256>(200, 251);
+        let q: Code256 = [1, u64::MAX, 0x5555_5555_5555_5555, 42];
+        assert_matches_counting_sort(&codes, q.masked(251), 251, &[1, 7, 100, usize::MAX]);
+    }
+
+    #[test]
+    fn rank_matches_counting_sort_tiny_bits() {
+        // bits < 16: a single partial chunk, radius loop bounded by bits.
+        let codes: Vec<u64> = (0..200).map(|i| i * 0x9E3779B9 % (1 << 11)).collect();
+        assert_matches_counting_sort(&codes, 0x3FFu64, 11, &[1, 7, 100, usize::MAX]);
+    }
+
+    #[test]
+    fn rank_matches_counting_sort_widened_scalar() {
+        // Zero-extended scalar codes: wide path agrees with itself and
+        // with the scalar oracle through the shared emit order.
+        let scalar = pseudo_codes::<u64>(250, 33);
+        let wide: Vec<Code128> = scalar.iter().map(|&c| widen(c)).collect();
+        let q = 0x1_2345_6789u64;
+        assert_matches_counting_sort(&wide, widen(q), 33, &[1, 13, 125, usize::MAX]);
+    }
+
+    #[test]
+    fn from_parts_validates_structure() {
+        let codes = pseudo_codes::<u64>(100, 32);
+        let t = table_from_codes(&codes, 32);
+        let built = MihTable::build(&t);
+        // Faithful parts round-trip.
+        let ok = MihTable::from_parts(32, built.offsets().to_vec(), built.values().to_vec(), &t);
+        assert!(ok.is_ok());
+        // Wrong bits.
+        let err = MihTable::from_parts(31, built.offsets().to_vec(), built.values().to_vec(), &t)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("bits"), "{err:#}");
+        // Truncated offsets.
+        let err =
+            MihTable::from_parts(32, built.offsets()[..10].to_vec(), built.values().to_vec(), &t)
+                .unwrap_err();
+        assert!(format!("{err:#}").contains("offsets length"), "{err:#}");
+        // Out-of-range bucket index.
+        let mut values = built.values().to_vec();
+        values[0] = t.n_buckets() as u32;
+        let err = MihTable::from_parts(32, built.offsets().to_vec(), values, &t).unwrap_err();
+        assert!(format!("{err:#}").contains("past the table"), "{err:#}");
+        // Non-monotone offsets.
+        let mut offsets = built.offsets().to_vec();
+        let last = offsets.len() - 1;
+        offsets.swap(1, last);
+        let err = MihTable::from_parts(32, offsets, built.values().to_vec(), &t).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("non-decreasing") || msg.contains("start at 0"), "{msg}");
+    }
+
+    #[test]
+    fn scanned_buckets_are_sublinear_on_small_budgets() {
+        // A budget-1 probe with a matching bucket present must not touch
+        // every bucket (the whole point of the backend).
+        let mut codes = pseudo_codes::<Code256>(2000, 251);
+        let q: Code256 = [3, 5, 7, 9];
+        let q = q.masked(251);
+        codes.push(q); // guarantee a radius-0 hit
+        let t = table_from_codes(&codes, 251);
+        let mih = MihTable::build(&t);
+        let mut s = SortScratch::default();
+        let scanned = mih.rank_partial(&t, q, 1, &mut s);
+        assert!(scanned < t.n_buckets() / 2, "scanned {scanned} of {}", t.n_buckets());
+        let mut out = Vec::new();
+        t.emit_ranked(&s, 1, &mut out);
+        assert_eq!(out.len(), 1);
+    }
+}

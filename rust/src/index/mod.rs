@@ -19,6 +19,7 @@
 pub mod bucket;
 pub mod l2alsh;
 pub mod metric;
+pub mod mih;
 pub mod multitable;
 pub mod partition;
 pub mod persist;
@@ -29,6 +30,7 @@ pub mod simple;
 mod traits;
 
 pub use bucket::{BucketTable, SortScratch, TableProber};
+pub use mih::MihTable;
 pub use metric::MetricOrder;
 pub use partition::{partition, Partition, PartitionScheme};
 pub use persist::{load_any_range_index, load_range_index, save_range_index, AnyRangeLshIndex};

@@ -20,6 +20,18 @@
 //! then per range: `U_j`, `u_min`, and the `(code, id)` pairs of its
 //! bucket table. Codes are stored masked; the table is rebuilt on load
 //! (cheap — it is a single grouping pass).
+//!
+//! ## Optional MIH section
+//!
+//! After the ranges, v2 files may carry the prebuilt multi-index Hamming
+//! chunk tables (see [`crate::index::mih`]): a tag byte (0 = absent,
+//! 1 = present; clean EOF = absent, which is what v1 and older v2 files
+//! hit), then `n_ranges` (u32), the per-range hash bit width (u32), and
+//! per range the CSR `offsets` / `values` arrays. The section is
+//! validated against the header on load (range count, bit width, CSR
+//! structure) and rejected with a clear error on any mismatch; files
+//! without it simply load without MIH tables — callers that want MIH
+//! rebuild them via [`RangeLshIndex::enable_mih`].
 
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
@@ -29,6 +41,7 @@ use std::sync::Arc;
 use anyhow::{ensure, Context};
 
 use crate::hash::{Code128, Code256, CodeWord, Projection, MAX_CODE_BITS};
+use crate::index::mih::MihTable;
 use crate::index::partition::{Partition, PartitionScheme};
 use crate::index::range::{RangeLshIndex, RangeLshParams};
 use crate::index::MipsIndex;
@@ -77,7 +90,30 @@ pub fn save_range_index<C: CodeWord>(
     w.write_all(MAGIC_V2)?;
     write_u32(&mut w, C::WORDS as u32)?;
     write_params_and_ranges(index, &mut w)?;
+    write_mih_section(index, &mut w)?;
     w.flush()?;
+    Ok(())
+}
+
+/// Append the optional MIH section: present iff the index has its chunk
+/// tables built (`enable_mih`), so a plain counting-sort index costs one
+/// tag byte and an MIH index serves straight from the file without the
+/// O(n · n_chunks) rebuild.
+fn write_mih_section<C: CodeWord>(
+    index: &RangeLshIndex<C>,
+    w: &mut impl Write,
+) -> Result<()> {
+    let Some(tables) = index.mih_tables() else {
+        write_u8(w, 0)?;
+        return Ok(());
+    };
+    write_u8(w, 1)?;
+    write_u32(w, tables.len() as u32)?;
+    write_u32(w, index.params().hash_bits() as u32)?;
+    for t in tables {
+        write_u32s(w, t.offsets())?;
+        write_u32s(w, t.values())?;
+    }
     Ok(())
 }
 
@@ -217,7 +253,56 @@ fn read_body<C: CodeWord>(r: &mut impl Read, path: &Path) -> Result<RangeLshInde
         let codes: Vec<C> = words.chunks_exact(C::WORDS).map(C::from_words).collect();
         ranges.push((Partition { ids, u_max, u_min }, codes));
     }
-    RangeLshIndex::from_parts(params, proj, n_items, ranges)
+    let mut index = RangeLshIndex::from_parts(params, proj, n_items, ranges)?;
+    read_mih_section(r, path, &mut index)?;
+    Ok(index)
+}
+
+/// Read the optional trailing MIH section. A clean EOF right after the
+/// ranges means the section is absent (v1 files and v2 files written
+/// before the section existed) — not an error.
+fn read_mih_section<C: CodeWord>(
+    r: &mut impl Read,
+    path: &Path,
+    index: &mut RangeLshIndex<C>,
+) -> Result<()> {
+    let mut tag = [0u8; 1];
+    match r.read_exact(&mut tag) {
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(()),
+        Err(e) => return Err(e.into()),
+        Ok(()) => {}
+    }
+    match tag[0] {
+        0 => Ok(()),
+        1 => {
+            let sect_ranges = read_u32(r)? as usize;
+            let sect_bits = read_u32(r)? as usize;
+            ensure!(
+                sect_ranges == index.n_ranges(),
+                "{}: MIH section covers {sect_ranges} ranges but the index has {} \
+                 (corrupt section?)",
+                path.display(),
+                index.n_ranges()
+            );
+            let hash_bits = index.params().hash_bits();
+            ensure!(
+                sect_bits == hash_bits,
+                "{}: MIH section built for {sect_bits}-bit codes but the header's \
+                 code_bits implies {hash_bits} hash bits per range (corrupt section?)",
+                path.display()
+            );
+            let mut tables = Vec::with_capacity(sect_ranges);
+            for j in 0..sect_ranges {
+                let offsets = read_u32s(r)?;
+                let values = read_u32s(r)?;
+                let table = MihTable::from_parts(sect_bits, offsets, values, index.sub_table(j))
+                    .with_context(|| format!("{}: MIH section, range {j}", path.display()))?;
+                tables.push(table);
+            }
+            index.set_mih(tables)
+        }
+        other => anyhow::bail!("{}: unknown MIH section tag {other}", path.display()),
+    }
 }
 
 #[cfg(test)]
@@ -380,5 +465,99 @@ mod tests {
             .err()
             .expect("loading a missing file must fail");
         assert!(format!("{err:#}").contains("/no/such/index.rlsh"));
+    }
+
+    #[test]
+    fn mih_section_round_trips() {
+        let (_, mut idx) = build_wide();
+        idx.enable_mih();
+        let tmp = TempPath::new("rlsh-mih");
+        save_range_index(&idx, tmp.path()).unwrap();
+        let loaded = match load_any_range_index(tmp.path()).unwrap() {
+            AnyRangeLshIndex::W128(i) => i,
+            other => panic!("expected 128-bit index, got {} words", other.code_words()),
+        };
+        // The chunk tables came from the file, not a rebuild — and the
+        // probe stream through them matches the saved index's.
+        assert!(loaded.has_mih());
+        let q = synthetic::gaussian_queries(5, 8, 4);
+        for qi in 0..q.len() {
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            idx.probe(q.row(qi), 100, &mut a);
+            loaded.probe(q.row(qi), 100, &mut b);
+            assert_eq!(a, b, "query {qi}");
+        }
+    }
+
+    #[test]
+    fn files_without_mih_section_load_without_tables() {
+        // v2 without the section (tag 0) and v1 (clean EOF) both load
+        // MIH-less; callers rebuild via enable_mih when they want it.
+        let (_, idx) = build_one();
+        let tmp = TempPath::new("rlsh-nomih");
+        save_range_index(&idx, tmp.path()).unwrap();
+        assert!(!load_range_index(tmp.path()).unwrap().has_mih());
+        let tmp_v1 = TempPath::new("rlsh-nomih-v1");
+        save_v1(&idx, tmp_v1.path()).unwrap();
+        assert!(!load_range_index(tmp_v1.path()).unwrap().has_mih());
+    }
+
+    /// A saved MIH-less v2 file with its trailing `0` tag stripped, ready
+    /// for a hand-built MIH section to be appended.
+    fn v2_bytes_without_tail_tag(idx: &RangeLshIndex<u64>) -> Vec<u8> {
+        let tmp = TempPath::new("rlsh-tailless");
+        save_range_index(idx, tmp.path()).unwrap();
+        let mut bytes = std::fs::read(tmp.path()).unwrap();
+        assert_eq!(bytes.pop(), Some(0), "expected an absent-MIH tag byte");
+        bytes
+    }
+
+    #[test]
+    fn rejects_mih_section_disagreeing_with_header() {
+        let (_, idx) = build_one();
+        let base = v2_bytes_without_tail_tag(&idx);
+        let hash_bits = idx.params().hash_bits() as u32;
+
+        // Range count mismatch.
+        let mut bad = base.clone();
+        bad.push(1);
+        bad.extend_from_slice(&((idx.n_ranges() as u32) + 1).to_le_bytes());
+        bad.extend_from_slice(&hash_bits.to_le_bytes());
+        let tmp = TempPath::new("rlsh-mih-ranges");
+        std::fs::write(tmp.path(), &bad).unwrap();
+        let err = load_range_index(tmp.path()).unwrap_err();
+        assert!(format!("{err:#}").contains("ranges"), "{err:#}");
+
+        // Bit width mismatch vs what the header's code_bits implies.
+        let mut bad = base.clone();
+        bad.push(1);
+        bad.extend_from_slice(&(idx.n_ranges() as u32).to_le_bytes());
+        bad.extend_from_slice(&(hash_bits + 1).to_le_bytes());
+        let tmp = TempPath::new("rlsh-mih-bits");
+        std::fs::write(tmp.path(), &bad).unwrap();
+        let err = load_range_index(tmp.path()).unwrap_err();
+        assert!(format!("{err:#}").contains("hash bits"), "{err:#}");
+
+        // Structurally broken CSR arrays surface the per-range context.
+        let mut bad = base.clone();
+        bad.push(1);
+        bad.extend_from_slice(&(idx.n_ranges() as u32).to_le_bytes());
+        bad.extend_from_slice(&hash_bits.to_le_bytes());
+        write_u32s(&mut bad, &[0u32]).unwrap(); // offsets: wrong length
+        write_u32s(&mut bad, &[]).unwrap(); // values
+        let tmp = TempPath::new("rlsh-mih-csr");
+        std::fs::write(tmp.path(), &bad).unwrap();
+        let err = load_range_index(tmp.path()).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("MIH section, range 0"), "{msg}");
+        assert!(msg.contains("offsets length"), "{msg}");
+
+        // An unknown tag byte is a clean error too, not a panic.
+        let mut bad = base;
+        bad.push(7);
+        let tmp = TempPath::new("rlsh-mih-tag");
+        std::fs::write(tmp.path(), &bad).unwrap();
+        let err = load_range_index(tmp.path()).unwrap_err();
+        assert!(format!("{err:#}").contains("MIH section tag"), "{err:#}");
     }
 }

@@ -37,6 +37,7 @@ use std::sync::Arc;
 use crate::data::Dataset;
 use crate::hash::codes::partition_id_bits;
 use crate::hash::{CodeWord, ItemHasher, NativeHasher, Projection};
+use crate::index::mih::MihTable;
 use crate::index::partition::{partition, Partition, PartitionScheme};
 use crate::index::traits::drain_bucket;
 use crate::index::{
@@ -106,6 +107,10 @@ pub struct RangeLshIndex<C: CodeWord = u64> {
     qhasher: NativeHasher<C>,
     params: RangeLshParams,
     n_items: usize,
+    /// Per-range MIH chunk tables (the sub-linear candidate-generation
+    /// backend), present iff [`Self::enable_mih`] ran — probers use them
+    /// automatically when attached. Aligned with `subs`.
+    mih: Option<Vec<MihTable<C>>>,
 }
 
 impl<C: CodeWord> RangeLshIndex<C> {
@@ -162,6 +167,7 @@ impl<C: CodeWord> RangeLshIndex<C> {
             proj,
             params,
             n_items: dataset.len(),
+            mih: None,
         })
     }
 
@@ -229,11 +235,50 @@ impl<C: CodeWord> RangeLshIndex<C> {
         let u_maxes: Vec<f32> = subs.iter().map(|s| s.part.u_max).collect();
         let order = MetricOrder::build(&u_maxes, hash_bits, params.epsilon);
         let qhasher = NativeHasher::with_projection(proj.clone());
-        Ok(Self { subs, order, proj, qhasher, params, n_items })
+        Ok(Self { subs, order, proj, qhasher, params, n_items, mih: None })
     }
 
-    /// One range's bucket table (tests/diagnostics).
-    #[cfg(test)]
+    /// Enable the MIH candidate-generation backend
+    /// ([`crate::index::mih`]): build the per-range chunk tables if
+    /// absent. Idempotent; probers use the tables whenever present, and
+    /// the emitted candidate stream is element-for-element identical to
+    /// the counting sort's (property-tested).
+    pub fn enable_mih(&mut self) {
+        if self.mih.is_none() {
+            self.mih = Some(self.subs.iter().map(|s| MihTable::build(&s.table)).collect());
+        }
+    }
+
+    /// Drop the MIH tables: probing falls back to the counting sort.
+    pub fn clear_mih(&mut self) {
+        self.mih = None;
+    }
+
+    /// Whether MIH tables are attached.
+    pub fn has_mih(&self) -> bool {
+        self.mih.is_some()
+    }
+
+    /// Per-range MIH tables, range order (persistence).
+    pub(crate) fn mih_tables(&self) -> Option<&[MihTable<C>]> {
+        self.mih.as_deref()
+    }
+
+    /// Attach loaded MIH tables, one per range in range order
+    /// (persistence; each table is already validated against its range's
+    /// rebuilt bucket table).
+    pub(crate) fn set_mih(&mut self, tables: Vec<MihTable<C>>) -> Result<()> {
+        anyhow::ensure!(
+            tables.len() == self.subs.len(),
+            "MIH section holds {} tables for {} ranges",
+            tables.len(),
+            self.subs.len()
+        );
+        self.mih = Some(tables);
+        Ok(())
+    }
+
+    /// One range's bucket table (persistence/tests/diagnostics).
     pub(crate) fn sub_table(&self, j: usize) -> &BucketTable<C> {
         &self.subs[j].table
     }
@@ -385,14 +430,28 @@ impl<C: CodeWord> Prober for RangeProber<'_, C> {
             let (j, l) = (j as usize, l as usize);
             let sub = &index.subs[j];
             if !self.scratch.sorted[j] {
-                sub.table.counting_sort_partial(
-                    self.qcode,
-                    remaining,
-                    &mut self.scratch.per_sub[j],
-                );
+                // First touch: rank this range's buckets for the budget
+                // still remaining — through the MIH chunk tables when
+                // attached (popcounting only the buckets the Hamming-ball
+                // walk discovers), else the dense counting sort. Both fill
+                // the same level slices, so the walk below is shared.
+                if let Some(mih) = index.mih.as_deref() {
+                    self.stats.buckets_scanned += mih[j].rank_partial(
+                        &sub.table,
+                        self.qcode,
+                        remaining,
+                        &mut self.scratch.per_sub[j],
+                    );
+                } else {
+                    sub.table.counting_sort_partial(
+                        self.qcode,
+                        remaining,
+                        &mut self.scratch.per_sub[j],
+                    );
+                    self.stats.buckets_scanned += sub.table.n_buckets();
+                }
                 self.scratch.sorted[j] = true;
                 self.stats.ranges_sorted += 1;
-                self.stats.buckets_scanned += sub.table.n_buckets();
             }
             if l < self.scratch.per_sub[j].floor as usize {
                 // Session resumed below this range's floor: re-sort to
@@ -872,6 +931,56 @@ mod tests {
             assert_eq!(stats.items_emitted, out.len());
         }
         assert_eq!(prev, 32, "exhaustive probe sorts all ranges");
+    }
+
+    #[test]
+    fn mih_backend_emits_identical_stream() {
+        // The tie-order contract: with MIH tables attached, the candidate
+        // stream is element-for-element the counting sort's, at any budget.
+        let d = synthetic::longtail_sift(1500, 8, 50);
+        for m in [1usize, 8] {
+            let mut idx = build(&d, 16, m);
+            let q = synthetic::gaussian_queries(2, 8, 51);
+            for qi in 0..q.len() {
+                let qcode = idx.hash_query(q.row(qi));
+                idx.clear_mih();
+                assert!(!idx.has_mih());
+                let mut want = Vec::new();
+                idx.probe_with_code(qcode, usize::MAX, &mut want);
+                idx.enable_mih();
+                assert!(idx.has_mih());
+                for budget in [0usize, 1, 7, 750, usize::MAX] {
+                    let mut got = Vec::new();
+                    idx.probe_with_code(qcode, budget, &mut got);
+                    assert_eq!(
+                        got[..],
+                        want[..budget.min(want.len())],
+                        "m={m} q={qi} budget={budget}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mih_session_resume_matches_counting_sort_session() {
+        // Resumable sessions over the MIH backend, including a resume
+        // below the first sort's materialization floor (which re-sorts to
+        // full depth through the counting sort).
+        let d = synthetic::longtail_sift(1000, 8, 52);
+        let mut idx = build(&d, 16, 8);
+        let q = synthetic::gaussian_queries(1, 8, 53);
+        let qcode = idx.hash_query(q.row(0));
+        let mut want = Vec::new();
+        idx.probe_with_code(qcode, usize::MAX, &mut want);
+        idx.enable_mih();
+        let mut got = Vec::new();
+        let mut session = idx.session(qcode);
+        session.extend(3, &mut got); // small first rank → high floor
+        session.extend(500, &mut got); // resumes below the floor
+        session.extend(usize::MAX, &mut got);
+        assert!(session.is_exhausted());
+        assert_eq!(got, want);
     }
 
     #[test]

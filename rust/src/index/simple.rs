@@ -12,6 +12,7 @@ use std::sync::Arc;
 
 use crate::data::Dataset;
 use crate::hash::{CodeWord, ItemHasher, NativeHasher, Projection};
+use crate::index::mih::MihTable;
 use crate::index::{BucketTable, CodeProbe, IndexStats, MipsIndex, Prober, SingleProbe};
 use crate::{ItemId, Result};
 
@@ -39,6 +40,10 @@ pub struct SimpleLshIndex<C: CodeWord = u64> {
     qhasher: NativeHasher<C>,
     code_bits: usize,
     n_items: usize,
+    /// MIH chunk tables (the sub-linear candidate-generation backend),
+    /// present iff [`Self::enable_mih`] ran — probers use them
+    /// automatically when attached.
+    mih: Option<MihTable<C>>,
     /// Global normalisation constant `U` (kept for diagnostics/Fig 1(c)).
     pub u: f32,
 }
@@ -83,8 +88,29 @@ impl<C: CodeWord> SimpleLshIndex<C> {
             proj,
             code_bits: params.code_bits,
             n_items: dataset.len(),
+            mih: None,
             u,
         })
+    }
+
+    /// Enable the MIH candidate-generation backend
+    /// ([`crate::index::mih`]): build the chunk tables if absent.
+    /// Idempotent; the emitted candidate stream is element-for-element
+    /// identical to the counting sort's (property-tested).
+    pub fn enable_mih(&mut self) {
+        if self.mih.is_none() {
+            self.mih = Some(MihTable::build(&self.table));
+        }
+    }
+
+    /// Drop the MIH tables: probing falls back to the counting sort.
+    pub fn clear_mih(&mut self) {
+        self.mih = None;
+    }
+
+    /// Whether MIH tables are attached.
+    pub fn has_mih(&self) -> bool {
+        self.mih.is_some()
     }
 
     /// Hash one query natively through the cached hasher, alloc-free (the
@@ -113,7 +139,7 @@ impl<C: CodeWord> MipsIndex for SimpleLshIndex<C> {
     }
 
     fn prober(&self, query: &[f32]) -> Box<dyn Prober + '_> {
-        Box::new(self.table.prober(self.hash_query(query)))
+        Box::new(self.table.prober_mih(self.hash_query(query), self.mih.as_ref()))
     }
 
     fn len(&self) -> usize {
@@ -142,14 +168,15 @@ thread_local! {
 
 impl<C: CodeWord> CodeProbe<C> for SimpleLshIndex<C> {
     fn probe_with_code(&self, qcode: C, budget: usize, out: &mut Vec<ItemId>) {
-        // Thin wrapper over a fresh session: budget-adaptive counting
-        // sort + Hamming-ranked (most matching bits first) emission,
-        // alloc-free once a thread is warm (pooled scratch).
-        self.table.prober(qcode).extend(budget, out);
+        // Thin wrapper over a fresh session: budget-adaptive ranking
+        // (counting sort, or MIH when enabled) + Hamming-ranked (most
+        // matching bits first) emission, alloc-free once a thread is
+        // warm (pooled scratch).
+        self.table.prober_mih(qcode, self.mih.as_ref()).extend(budget, out);
     }
 
     fn prober_with_code(&self, qcode: C) -> Box<dyn Prober + '_> {
-        Box::new(self.table.prober(qcode))
+        Box::new(self.table.prober_mih(qcode, self.mih.as_ref()))
     }
 
     fn probe_batch_with_codes(&self, qcodes: &[C], budget: usize, outs: &mut [Vec<ItemId>]) {
@@ -158,6 +185,17 @@ impl<C: CodeWord> CodeProbe<C> for SimpleLshIndex<C> {
             let pool = &mut *scratch.borrow_mut();
             if pool.len() < qcodes.len() {
                 pool.resize_with(qcodes.len(), Default::default);
+            }
+            if let Some(mih) = &self.mih {
+                // MIH ranks per query (the chunk-table walk has no
+                // cross-query pass to share), same emitted stream.
+                for ((&qcode, s), out) in
+                    qcodes.iter().zip(pool.iter_mut()).zip(outs.iter_mut())
+                {
+                    mih.rank_partial(&self.table, qcode, budget, s);
+                    self.table.emit_ranked(s, budget, out);
+                }
+                return;
             }
             // One streaming pass over the dense codes vector for the
             // whole batch, then per-query Hamming-ranked emission.
@@ -293,6 +331,42 @@ mod tests {
                 assert_eq!(batched[qi], single, "query {qi} budget {budget}");
             }
         }
+    }
+
+    #[test]
+    fn mih_backend_matches_counting_sort_streams() {
+        // Single-query, session, and batched paths all emit the same
+        // stream with MIH tables attached.
+        let d = synthetic::longtail_sift(400, 8, 12);
+        let h: NativeHasher = NativeHasher::new(8, 64, 0xFACE);
+        let mut idx = SimpleLshIndex::build(&d, &h, SimpleLshParams::new(24)).unwrap();
+        let q = synthetic::gaussian_queries(4, 8, 13);
+        let qcodes: Vec<u64> = (0..q.len()).map(|i| idx.hash_query(q.row(i))).collect();
+        for budget in [1usize, 23, 200, usize::MAX] {
+            idx.clear_mih();
+            let mut want: Vec<Vec<crate::ItemId>> = vec![Vec::new(); qcodes.len()];
+            idx.probe_batch_with_codes(&qcodes, budget, &mut want);
+            idx.enable_mih();
+            assert!(idx.has_mih());
+            let mut got: Vec<Vec<crate::ItemId>> = vec![Vec::new(); qcodes.len()];
+            idx.probe_batch_with_codes(&qcodes, budget, &mut got);
+            assert_eq!(got, want, "batched, budget {budget}");
+            for (qi, &qcode) in qcodes.iter().enumerate() {
+                let mut single = Vec::new();
+                idx.probe_with_code(qcode, budget, &mut single);
+                assert_eq!(single, want[qi], "single, query {qi} budget {budget}");
+            }
+        }
+        // Resumable session over MIH, with a below-floor resume.
+        idx.enable_mih();
+        let mut want = Vec::new();
+        let mut cs = idx.table().prober(qcodes[0]);
+        cs.extend(usize::MAX, &mut want);
+        let mut got = Vec::new();
+        let mut p = idx.prober_with_code(qcodes[0]);
+        p.extend(2, &mut got);
+        p.extend(usize::MAX, &mut got);
+        assert_eq!(got, want);
     }
 
     #[test]

@@ -17,7 +17,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Context};
 
-use rangelsh::config::{Config, DatasetKind, IndexAlgo};
+use rangelsh::config::{Config, DatasetKind, IndexAlgo, ProbeBackend};
 use rangelsh::coordinator::server::drive_any_with;
 use rangelsh::coordinator::{AnyEngine, BatchPolicy, QueryParams, SearchEngine};
 use rangelsh::data::{load_dataset, save_dataset, synthetic, Dataset};
@@ -48,6 +48,7 @@ SUBCOMMANDS:
   theory     --config FILE.toml [--c 0.7]
   serve      --config FILE.toml [--load DIR] [--n-queries 2000] [--native]
              [--artifacts DIR] [--clients 16] [--rerank streaming|exhaustive]
+             [--probe-backend auto|counting_sort|mih]
              [--k K] [--budget B] [--min-candidates M] [--extend-step S]
              (per-request QueryParams overriding the [serve] defaults)
   artifacts  [--dir DIR]
@@ -189,12 +190,27 @@ fn build(args: &Args) -> Result<()> {
     // Monomorphized dispatch on the code budget: u64 keeps its historical
     // 64-wide panel; wider budgets hash with a hash_bits-wide panel.
     let out_path = out_dir.join("index.rlsh");
+    let backend = cfg.serve.probe_backend;
     let stats = if cfg.index.code_bits <= 64 {
-        build_and_save::<u64>(&items, params, cfg.index.seed, 64, &out_path)?
+        build_and_save::<u64>(&items, params, cfg.index.seed, 64, &out_path, backend)?
     } else if cfg.index.code_bits <= 128 {
-        build_and_save::<Code128>(&items, params, cfg.index.seed, params.hash_bits(), &out_path)?
+        build_and_save::<Code128>(
+            &items,
+            params,
+            cfg.index.seed,
+            params.hash_bits(),
+            &out_path,
+            backend,
+        )?
     } else {
-        build_and_save::<Code256>(&items, params, cfg.index.seed, params.hash_bits(), &out_path)?
+        build_and_save::<Code256>(
+            &items,
+            params,
+            cfg.index.seed,
+            params.hash_bits(),
+            &out_path,
+            backend,
+        )?
     };
     println!("built index in {:.2}s: {stats:?}", t0.elapsed().as_secs_f64());
     save_dataset(&items, out_dir.join("items.rdat"))?;
@@ -203,16 +219,22 @@ fn build(args: &Args) -> Result<()> {
 }
 
 /// Build a RANGE-LSH index at one code width and persist it (v2 format,
-/// width header included).
+/// width header included). When the `[serve]` probe backend resolves to
+/// MIH at this width, the chunk tables are built now and saved in the
+/// file's optional MIH section, so `serve --load` skips the rebuild.
 fn build_and_save<C: CodeWord>(
     items: &Dataset,
     params: RangeLshParams,
     seed: u64,
     width: usize,
     out_path: &std::path::Path,
+    backend: ProbeBackend,
 ) -> Result<IndexStats> {
     let hasher: NativeHasher<C> = NativeHasher::new(items.dim(), width, seed);
-    let index = RangeLshIndex::build(items, &hasher, params)?;
+    let mut index = RangeLshIndex::build(items, &hasher, params)?;
+    if backend.resolve(params.code_bits) == ProbeBackend::Mih {
+        index.enable_mih();
+    }
     save_range_index(&index, out_path)?;
     Ok(index.stats())
 }
@@ -354,6 +376,12 @@ fn serve(args: &Args) -> Result<()> {
     if let Some(mode) = args.opt("rerank") {
         cfg.serve.rerank = mode.parse()?;
     }
+    // --probe-backend auto|counting_sort|mih: override the [serve]
+    // candidate-generation backend (auto width-gates — MIH chunk tables
+    // at code_bits >= 128, counting sort below).
+    if let Some(backend) = args.opt("probe-backend") {
+        cfg.serve.probe_backend = backend.parse()?;
+    }
     let n_queries: usize = args.opt_parse("n-queries", 2000)?;
     let clients: usize = args.opt_parse("clients", 16)?;
     let artifacts = PathBuf::from(args.opt("artifacts").unwrap_or(DEFAULT_ARTIFACT_DIR));
@@ -403,11 +431,17 @@ fn serve(args: &Args) -> Result<()> {
             );
             let proj = Arc::new(Projection::gaussian(dim + 1, 64, cfg.index.seed));
             let hasher = pick_u64_hasher(runtime.as_ref(), proj);
-            let index: Arc<dyn CodeProbe> = Arc::new(SimpleLshIndex::build(
+            let mut simple = SimpleLshIndex::build(
                 &items,
                 hasher.as_ref(),
                 SimpleLshParams::new(cfg.serve.code_bits),
-            )?);
+            )?;
+            // Honour an explicit MIH request (auto resolves to counting
+            // sort at <= 64 bits, simple_lsh's whole range).
+            if cfg.serve.probe_backend.resolve(cfg.serve.code_bits) == ProbeBackend::Mih {
+                simple.enable_mih();
+            }
+            let index: Arc<dyn CodeProbe> = Arc::new(simple);
             AnyEngine::W64(Arc::new(SearchEngine::new(
                 index,
                 items.clone(),

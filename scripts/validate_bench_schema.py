@@ -1,0 +1,80 @@
+#!/usr/bin/env python3
+"""Validate the schema of BENCH_hotpath.json.
+
+The bench harness (`cargo bench --bench hotpath`) overwrites the file and
+downstream tooling diffs its axes across commits, so schema drift — a
+renamed axis, a scalar where an array of row objects is expected, a
+missing acceptance note — must fail CI rather than silently break the
+cross-commit diff. Content (the measured numbers) is deliberately NOT
+validated: axes are allowed to be empty placeholders on machines without
+a toolchain.
+
+Usage: validate_bench_schema.py [BENCH_hotpath.json]
+Exits non-zero with a message on the first schema violation.
+"""
+
+import json
+import sys
+
+# Every axis the bench writes; each must be an array of row objects.
+REQUIRED_AXES = [
+    "hash_width_axis",
+    "probe_schedule",
+    "probe_budget_axis",
+    "probe_session_axis",
+    "rerank_axis",
+    "probe_backend_axis",
+]
+
+# Scalar fields the bench stamps alongside the axes.
+REQUIRED_SCALARS = {"bench": str, "note": str, "n_items": (int, float), "dim": (int, float)}
+
+# Fields every row of an axis must carry (all axes record timings).
+REQUIRED_ROW_FIELDS = {"median_us": (int, float), "min_us": (int, float)}
+
+
+def fail(msg):
+    print(f"BENCH schema error: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_hotpath.json"
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"{path}: {e}")
+
+    if not isinstance(doc, dict):
+        fail(f"{path}: top level must be an object, got {type(doc).__name__}")
+
+    for key, ty in REQUIRED_SCALARS.items():
+        if key not in doc:
+            fail(f"{path}: missing required field {key!r}")
+        if not isinstance(doc[key], ty):
+            fail(f"{path}: field {key!r} must be {ty}, got {type(doc[key]).__name__}")
+
+    for axis in REQUIRED_AXES:
+        if axis not in doc:
+            fail(f"{path}: missing required axis {axis!r}")
+        rows = doc[axis]
+        if not isinstance(rows, list):
+            fail(f"{path}: axis {axis!r} must be an array, got {type(rows).__name__}")
+        for i, row in enumerate(rows):
+            if not isinstance(row, dict):
+                fail(f"{path}: {axis}[{i}] must be an object, got {type(row).__name__}")
+            for field, fty in REQUIRED_ROW_FIELDS.items():
+                if field not in row:
+                    fail(f"{path}: {axis}[{i}] missing field {field!r}")
+                if not isinstance(row[field], fty):
+                    fail(
+                        f"{path}: {axis}[{i}].{field} must be a number, "
+                        f"got {type(row[field]).__name__}"
+                    )
+
+    print(f"{path}: schema ok ({len(REQUIRED_AXES)} axes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -600,6 +600,125 @@ fn prop_code_session_stream_equals_code_oneshot() {
     });
 }
 
+/// MIH vs counting sort, RANGE-LSH: with the chunk tables attached the
+/// index must emit the *identical* candidate stream (tie order pinned as
+/// exact, element for element), one-shot and through resumable sessions,
+/// at every budget. The two indexes share a hasher seed, so any
+/// divergence is the candidate-generation backend's fault alone.
+fn check_mih_stream_equals_counting_sort<C: CodeWord>(
+    d: &Dataset,
+    q: &Dataset,
+    code_bits: usize,
+    m: usize,
+    seed: u64,
+) {
+    let params = RangeLshParams::new(code_bits, m);
+    let h: NativeHasher<C> = NativeHasher::new(d.dim(), params.hash_bits(), seed);
+    let oracle_idx = RangeLshIndex::build(d, &h, params).unwrap();
+    let mut mih_idx = RangeLshIndex::build(d, &h, params).unwrap();
+    mih_idx.enable_mih();
+    let n = d.len();
+    let budgets = [1usize, 7, n / 2, usize::MAX];
+    for qi in 0..q.len() {
+        let qcode = oracle_idx.hash_query(q.row(qi));
+        for &budget in &budgets {
+            let (mut oracle, mut mih) = (Vec::new(), Vec::new());
+            oracle_idx.probe_with_code(qcode, budget, &mut oracle);
+            mih_idx.probe_with_code(qcode, budget, &mut mih);
+            assert_eq!(
+                mih, oracle,
+                "seed {seed} L={code_bits} m={m} q {qi} budget {budget}: streams diverge"
+            );
+        }
+        // Any two-way budget split through an MIH session concatenates to
+        // the counting-sort one-shot with the summed budget — including
+        // splits that force the below-floor re-sort on resume.
+        for &b1 in &budgets {
+            for &b2 in &budgets {
+                let mut oracle = Vec::new();
+                oracle_idx.probe_with_code(qcode, b1.saturating_add(b2), &mut oracle);
+                let mut streamed = Vec::new();
+                let mut session = mih_idx.prober_with_code(qcode);
+                session.extend(b1, &mut streamed);
+                session.extend(b2, &mut streamed);
+                assert_eq!(
+                    streamed, oracle,
+                    "seed {seed} L={code_bits} m={m} q {qi} b1={b1} b2={b2}: session diverges"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_mih_probe_stream_equals_counting_sort_oracle() {
+    forall(3, |rng, seed| {
+        let n = 300 + rng.gen_index(300);
+        let d = synthetic::longtail_sift(n, 8, seed ^ 0x314);
+        let q = synthetic::gaussian_queries(2, 8, seed ^ 0x159);
+        for &m in &[1usize, 8, 32] {
+            check_mih_stream_equals_counting_sort::<u64>(&d, &q, 16, m, seed);
+            check_mih_stream_equals_counting_sort::<Code128>(&d, &q, 128, m, seed);
+            check_mih_stream_equals_counting_sort::<Code256>(&d, &q, 256, m, seed);
+        }
+    });
+}
+
+/// The SIMPLE-LSH twin of [`check_mih_stream_equals_counting_sort`]: the
+/// single-table probe + session paths through the chunk tables.
+fn check_simple_mih_stream_equals_counting_sort<C: CodeWord>(
+    d: &Dataset,
+    q: &Dataset,
+    code_bits: usize,
+    width: usize,
+    seed: u64,
+) {
+    let h: NativeHasher<C> = NativeHasher::new(d.dim(), width, seed);
+    let oracle_idx = SimpleLshIndex::build(d, &h, SimpleLshParams::new(code_bits)).unwrap();
+    let mut mih_idx = SimpleLshIndex::build(d, &h, SimpleLshParams::new(code_bits)).unwrap();
+    mih_idx.enable_mih();
+    let n = d.len();
+    let budgets = [1usize, 7, n / 2, usize::MAX];
+    for qi in 0..q.len() {
+        let qcode = oracle_idx.hash_query(q.row(qi));
+        for &budget in &budgets {
+            let (mut oracle, mut mih) = (Vec::new(), Vec::new());
+            oracle_idx.probe_with_code(qcode, budget, &mut oracle);
+            mih_idx.probe_with_code(qcode, budget, &mut mih);
+            assert_eq!(
+                mih, oracle,
+                "seed {seed} simple L={code_bits} q {qi} budget {budget}: streams diverge"
+            );
+        }
+        for &b1 in &budgets {
+            for &b2 in &budgets {
+                let mut oracle = Vec::new();
+                oracle_idx.probe_with_code(qcode, b1.saturating_add(b2), &mut oracle);
+                let mut streamed = Vec::new();
+                let mut session = mih_idx.prober_with_code(qcode);
+                session.extend(b1, &mut streamed);
+                session.extend(b2, &mut streamed);
+                assert_eq!(
+                    streamed, oracle,
+                    "seed {seed} simple L={code_bits} q {qi} b1={b1} b2={b2}: session diverges"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_mih_simple_stream_equals_counting_sort_oracle() {
+    forall(3, |rng, seed| {
+        let n = 200 + rng.gen_index(300);
+        let d = synthetic::longtail_sift(n, 8, seed ^ 0x265);
+        let q = synthetic::gaussian_queries(2, 8, seed ^ 0x358);
+        check_simple_mih_stream_equals_counting_sort::<u64>(&d, &q, 24, 64, seed);
+        check_simple_mih_stream_equals_counting_sort::<Code128>(&d, &q, 96, 128, seed);
+        check_simple_mih_stream_equals_counting_sort::<Code256>(&d, &q, 200, 256, seed);
+    });
+}
+
 #[test]
 fn prop_simple_partial_probe_matches_full_sort_reference() {
     forall(10, |rng, seed| {
