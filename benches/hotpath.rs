@@ -574,6 +574,53 @@ fn main() -> rangelsh::Result<()> {
         format!("{:.0} q/s", t.throughput(64)),
     ]);
 
+    // 7. degraded-serving axis: the same engine under a per-query
+    // wall-clock budget (`--deadline-ms` in the CLI). Each row records
+    // end-to-end latency plus the fraction of queries answered with a
+    // `Degraded { Deadline }` tag — the knob's trade: tighter deadlines
+    // cap tail latency and raise the degraded fraction. deadline_us = 0
+    // is the budget-less baseline (its degraded fraction must be 0).
+    struct DegradedRow {
+        deadline_us: u64,
+        degraded_pct: f64,
+        timing: Timing,
+    }
+    let mut degraded_rows: Vec<DegradedRow> = Vec::new();
+    {
+        use rangelsh::config::QueryParams;
+        use std::time::Duration;
+        let reps = if smoke { 3 } else { 10 };
+        let nq = 64usize;
+        for &deadline_us in &[0u64, 50, 500, 5_000] {
+            let p = if deadline_us == 0 {
+                QueryParams::new()
+            } else {
+                QueryParams::new().with_time_budget(Duration::from_micros(deadline_us))
+            };
+            let mut degraded = 0usize;
+            for qi in 0..nq {
+                degraded += usize::from(engine.search_full(queries.row(qi), &p)?.is_degraded());
+            }
+            let degraded_pct = 100.0 * degraded as f64 / nq as f64;
+            let t = bench(1, reps, || {
+                for qi in 0..nq {
+                    std::hint::black_box(engine.search_full(queries.row(qi), &p).unwrap());
+                }
+            });
+            let label = if deadline_us == 0 {
+                format!("engine e2e no deadline ({nq} queries)")
+            } else {
+                format!("engine e2e deadline {deadline_us}us ({nq} queries)")
+            };
+            table.row(vec![
+                label,
+                format!("{:?}", t.median),
+                format!("{:.0} q/s, {degraded_pct:.0}% degraded", t.throughput(nq)),
+            ]);
+            degraded_rows.push(DegradedRow { deadline_us, degraded_pct, timing: t });
+        }
+    }
+
     println!("{}", table.render());
 
     if smoke {
@@ -697,6 +744,28 @@ fn main() -> rangelsh::Result<()> {
                             ("m", Json::Num(8.0)),
                             ("budget", Json::Num(r.budget as f64)),
                             ("mode", Json::Str(r.mode.into())),
+                            ("median_us", Json::Num(r.timing.median.as_secs_f64() * 1e6)),
+                            ("min_us", Json::Num(r.timing.min.as_secs_f64() * 1e6)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            // per-deadline latency + degraded fraction on the m=64
+            // serving engine; deadline_us = 0 is the budget-less
+            // baseline. Optional in the schema so older files stay
+            // valid — see scripts/validate_bench_schema.py.
+            "degraded_axis",
+            Json::Arr(
+                degraded_rows
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("code_bits", Json::Num(32.0)),
+                            ("m", Json::Num(64.0)),
+                            ("deadline_us", Json::Num(r.deadline_us as f64)),
+                            ("degraded_pct", Json::Num(r.degraded_pct)),
                             ("median_us", Json::Num(r.timing.median.as_secs_f64() * 1e6)),
                             ("min_us", Json::Num(r.timing.min.as_secs_f64() * 1e6)),
                         ])

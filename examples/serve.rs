@@ -82,6 +82,9 @@ fn main() -> rangelsh::Result<()> {
         // answers to the exhaustive oracle — README §"Re-rank cost model".
         rerank: rangelsh::config::RerankMode::Streaming,
         code_bits: 32,
+        // No per-query time budget: this driver measures steady-state
+        // throughput, so nothing is degraded or shed.
+        time_budget_us: 0,
     };
     let engine = Arc::new(SearchEngine::new(index, items.clone(), hasher, cfg)?);
     let policy = BatchPolicy::new(256, Duration::from_micros(500));

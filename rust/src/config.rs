@@ -5,6 +5,7 @@
 
 use std::path::Path;
 use std::str::FromStr;
+use std::time::Duration;
 
 use anyhow::Context;
 
@@ -277,6 +278,14 @@ pub struct ServeConfig {
     /// sort below. Resolved against the served index's actual code width,
     /// not the config default.
     pub probe_backend: ProbeBackend,
+    /// Default per-query wall-clock time budget in microseconds; `0`
+    /// means unlimited. A query that exhausts its budget mid-probe
+    /// returns the best-so-far top-k tagged
+    /// `Degraded { reason: Deadline }` instead of blocking past the
+    /// deadline or erroring (README §"Failure model & degraded
+    /// serving"). Distinct from [`ServeConfig::deadline_us`], which is
+    /// the *batch flush* window, not a per-query bound.
+    pub time_budget_us: u64,
 }
 
 impl Default for ServeConfig {
@@ -289,6 +298,7 @@ impl Default for ServeConfig {
             rerank: RerankMode::Streaming,
             code_bits: 64,
             probe_backend: ProbeBackend::Auto,
+            time_budget_us: 0,
         }
     }
 }
@@ -315,6 +325,12 @@ pub struct QueryParams {
     /// how far past the target one chunk can overshoot. Defaults to the
     /// resolved budget (a single one-shot extend).
     pub extend_step: Option<usize>,
+    /// Wall-clock budget for this query (overrides
+    /// [`ServeConfig::time_budget_us`]; `None` defers to it, and a config
+    /// value of `0` means unlimited). Checked between `Prober::extend`
+    /// blocks; on expiry the query returns its current best-so-far
+    /// results tagged degraded rather than erroring.
+    pub time_budget: Option<Duration>,
 }
 
 impl QueryParams {
@@ -342,6 +358,11 @@ impl QueryParams {
         self
     }
 
+    pub fn with_time_budget(mut self, budget: Duration) -> Self {
+        self.time_budget = Some(budget);
+        self
+    }
+
     /// True when every field defers to the serving defaults.
     pub fn is_default(&self) -> bool {
         *self == Self::default()
@@ -356,7 +377,11 @@ impl QueryParams {
         let min_candidates =
             self.min_candidates.unwrap_or(probe_budget).clamp(top_k, probe_budget);
         let extend_step = self.extend_step.unwrap_or(probe_budget).max(1);
-        ResolvedQueryParams { top_k, probe_budget, min_candidates, extend_step }
+        let time_budget = self.time_budget.or(match cfg.time_budget_us {
+            0 => None,
+            us => Some(Duration::from_micros(us)),
+        });
+        ResolvedQueryParams { top_k, probe_budget, min_candidates, extend_step, time_budget }
     }
 }
 
@@ -368,6 +393,10 @@ pub struct ResolvedQueryParams {
     pub probe_budget: usize,
     pub min_candidates: usize,
     pub extend_step: usize,
+    /// `None` = unlimited. The engine anchors the deadline at batch entry
+    /// (hashing included); the server additionally subtracts queue wait
+    /// before handing jobs to the engine.
+    pub time_budget: Option<Duration>,
 }
 
 impl ResolvedQueryParams {
@@ -451,6 +480,7 @@ impl Config {
             // Serving width follows the index budget unless overridden.
             code_bits: sv.usize_or("code_bits", index.code_bits)?,
             probe_backend: sv.str_or("probe_backend", "auto")?.parse()?,
+            time_budget_us: sv.u64_or("time_budget_us", serve_default.time_budget_us)?,
         };
 
         let cfg = Config { dataset, index, eval, serve };
@@ -627,6 +657,24 @@ recall_targets = [0.5, 0.9]
         let rp = QueryParams::new().with_min_candidates(64).with_extend_step(16).resolve(&cfg);
         assert!(!rp.one_shot());
         assert_eq!((rp.min_candidates, rp.extend_step), (64, 16));
+    }
+
+    #[test]
+    fn time_budget_resolves_from_config_and_override() {
+        // Default config: unlimited.
+        let cfg = ServeConfig::default();
+        assert_eq!(QueryParams::default().resolve(&cfg).time_budget, None);
+        // Config default applies when the request is silent...
+        let cfg = ServeConfig { time_budget_us: 2_500, ..Default::default() };
+        let rp = QueryParams::default().resolve(&cfg);
+        assert_eq!(rp.time_budget, Some(Duration::from_micros(2_500)));
+        // ... and the per-request override wins.
+        let rp = QueryParams::new().with_time_budget(Duration::from_millis(7)).resolve(&cfg);
+        assert_eq!(rp.time_budget, Some(Duration::from_millis(7)));
+        // TOML round trip.
+        let text = format!("{EXAMPLE}\n[serve]\ntime_budget_us = 1500\n");
+        assert_eq!(Config::parse(&text).unwrap().serve.time_budget_us, 1500);
+        assert_eq!(Config::parse(EXAMPLE).unwrap().serve.time_budget_us, 0);
     }
 
     #[test]

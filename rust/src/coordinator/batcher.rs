@@ -11,12 +11,33 @@ use std::time::{Duration, Instant};
 pub struct BatchPolicy {
     pub max_batch: usize,
     pub deadline: Duration,
+    /// Submission-side queue bound: a request arriving at depth
+    /// `max_queue` is shed with a typed `Overloaded` error instead of
+    /// enqueued. Default `usize::MAX` (no shedding).
+    pub max_queue: usize,
 }
 
 impl BatchPolicy {
     pub fn new(max_batch: usize, deadline: Duration) -> Self {
         assert!(max_batch >= 1, "max_batch must be >= 1");
-        Self { max_batch, deadline }
+        Self { max_batch, deadline, max_queue: usize::MAX }
+    }
+
+    pub fn with_max_queue(mut self, max_queue: usize) -> Self {
+        assert!(max_queue >= 1, "max_queue must be >= 1");
+        self.max_queue = max_queue;
+        self
+    }
+
+    /// Pessimistic wait estimate for a request arriving at queue depth
+    /// `depth`, given a per-batch service-time estimate: the current
+    /// batch window (up to `deadline`) plus one `batch_service` per
+    /// full batch already queued ahead. Pure, so the shedding decision
+    /// in the server is unit-testable without a clock.
+    pub fn projected_wait(&self, depth: usize, batch_service: Duration) -> Duration {
+        let batches_ahead = depth.div_ceil(self.max_batch) as u32;
+        self.deadline
+            .saturating_add(batch_service.saturating_mul(batches_ahead))
     }
 
     /// Should a batch of `len` requests, whose oldest arrived at
@@ -136,5 +157,39 @@ mod tests {
     #[should_panic(expected = "max_batch")]
     fn rejects_zero_batch() {
         BatchPolicy::new(0, Duration::from_millis(1));
+    }
+
+    #[test]
+    fn default_queue_is_unbounded() {
+        assert_eq!(policy().max_queue, usize::MAX);
+        assert_eq!(policy().with_max_queue(7).max_queue, 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "max_queue")]
+    fn rejects_zero_queue() {
+        policy().with_max_queue(0);
+    }
+
+    #[test]
+    fn projected_wait_grows_with_depth_in_batch_steps() {
+        // max_batch = 4, deadline = 10ms.
+        let p = policy();
+        let svc = Duration::from_millis(2);
+        // Empty queue: just the batch window.
+        assert_eq!(p.projected_wait(0, svc), Duration::from_millis(10));
+        // Depths 1..=4 all fit in one batch ahead.
+        for depth in 1..=4 {
+            assert_eq!(p.projected_wait(depth, svc), Duration::from_millis(12), "depth {depth}");
+        }
+        // Depth 5 spills into a second batch.
+        assert_eq!(p.projected_wait(5, svc), Duration::from_millis(14));
+        // Monotone in depth (pure, so exhaustively checkable).
+        let mut prev = Duration::ZERO;
+        for depth in 0..64 {
+            let w = p.projected_wait(depth, svc);
+            assert!(w >= prev, "depth {depth}");
+            prev = w;
+        }
     }
 }

@@ -6,8 +6,10 @@
 //! so the `u64` hot path keeps its exact original codegen.
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::config::{ProbeBackend, QueryParams, RerankMode, ResolvedQueryParams, ServeConfig};
+use crate::coordinator::fault::{DegradeReason, QueryResponse};
 use crate::coordinator::metrics::Metrics;
 use crate::data::{Dataset, RerankView};
 use crate::hash::{
@@ -123,8 +125,17 @@ impl<C: CodeWord> SearchEngine<C> {
     /// Search a single query with per-request overrides of the serving
     /// defaults (k, probe budget, early-stop target, extend step).
     pub fn search_with(&self, query: &[f32], params: &QueryParams) -> Result<Vec<SearchResult>> {
+        Ok(self.search_full(query, params)?.into_results())
+    }
+
+    /// [`Self::search_with`] keeping the full [`QueryResponse`] envelope:
+    /// a query whose time budget expires mid-probe returns its
+    /// best-so-far results with a `Degraded { reason: Deadline }` tag
+    /// instead of erroring or silently presenting a truncated top-k as
+    /// complete.
+    pub fn search_full(&self, query: &[f32], params: &QueryParams) -> Result<QueryResponse> {
         Ok(self
-            .search_batch_params(query, std::slice::from_ref(params))?
+            .search_batch_full(query, std::slice::from_ref(params))?
             .pop()
             .expect("one query in, one out"))
     }
@@ -158,6 +169,24 @@ impl<C: CodeWord> SearchEngine<C> {
         rows: &[f32],
         params: &[QueryParams],
     ) -> Result<Vec<Vec<SearchResult>>> {
+        Ok(self
+            .search_batch_full(rows, params)?
+            .into_iter()
+            .map(QueryResponse::into_results)
+            .collect())
+    }
+
+    /// [`Self::search_batch_params`] keeping the per-query
+    /// [`QueryResponse`] envelopes. Time budgets (per-request
+    /// `QueryParams::time_budget` or the `ServeConfig::time_budget_us`
+    /// default) are anchored at batch entry — hashing counts against the
+    /// budget — and checked between `Prober::extend` blocks; an expired
+    /// query is tagged degraded with whatever its bounded top-k holds.
+    pub fn search_batch_full(
+        &self,
+        rows: &[f32],
+        params: &[QueryParams],
+    ) -> Result<Vec<QueryResponse>> {
         let dim = self.dataset.dim();
         anyhow::ensure!(
             !rows.is_empty() && rows.len() % dim == 0,
@@ -197,7 +226,7 @@ impl<C: CodeWord> SearchEngine<C> {
         // tiny batches fan out (chunks of at most 16 queries, cutoff 1).
         let chunk = n.div_ceil(crate::util::par::n_threads()).clamp(1, 16);
         let n_chunks = n.div_ceil(chunk);
-        let per_chunk: Vec<Vec<Vec<SearchResult>>> =
+        let per_chunk: Vec<Vec<QueryResponse>> =
             crate::util::par::par_map_cutoff(n_chunks, 1, |ci| {
                 let (lo, hi) = (ci * chunk, ((ci + 1) * chunk).min(n));
                 if self.cfg.rerank == RerankMode::Streaming {
@@ -220,8 +249,13 @@ impl<C: CodeWord> SearchEngine<C> {
                     for buf in bufs[..hi - lo].iter_mut() {
                         buf.clear();
                     }
+                    // Deadline cut per query of the chunk (None = ran to
+                    // completion). The batched codes-vector scan is kept
+                    // only for budget-less uniform one-shot requests —
+                    // it has no extend boundaries to check a deadline at.
+                    let mut cut: Vec<Option<DegradeReason>> = vec![None; hi - lo];
                     match uniform {
-                        Some(rp) if rp.one_shot() => {
+                        Some(rp) if rp.one_shot() && rp.time_budget.is_none() => {
                             self.index.probe_batch_with_codes(
                                 &codes[lo..hi],
                                 rp.probe_budget,
@@ -231,7 +265,9 @@ impl<C: CodeWord> SearchEngine<C> {
                         _ => {
                             for qi in lo..hi {
                                 let rp = resolve_at(qi);
-                                self.probe_one(codes[qi], &rp, &mut bufs[qi - lo]);
+                                let deadline = rp.time_budget.map(|tb| t0 + tb);
+                                cut[qi - lo] =
+                                    self.probe_one(codes[qi], &rp, deadline, &mut bufs[qi - lo]);
                             }
                         }
                     }
@@ -254,11 +290,18 @@ impl<C: CodeWord> SearchEngine<C> {
                             );
                             self.metrics
                                 .record_query(t0.elapsed().as_micros() as u64, probed);
-                            cands
+                            let results = cands
                                 .iter()
                                 .zip(scores.iter())
                                 .map(|(&id, &score)| SearchResult { id, score })
-                                .collect()
+                                .collect();
+                            match cut[qi - lo] {
+                                Some(reason) => {
+                                    self.metrics.record_degraded();
+                                    QueryResponse::degraded(results, reason)
+                                }
+                                None => QueryResponse::complete(results),
+                            }
                         })
                         .collect()
                 })
@@ -270,17 +313,31 @@ impl<C: CodeWord> SearchEngine<C> {
     /// parameterizations take the classic probe; early-stop/chunked ones
     /// open a resumable session and extend it in `extend_step` slices
     /// until `min_candidates` are gathered, the budget is spent, or the
-    /// index runs dry.
-    fn probe_one(&self, qcode: C, rp: &ResolvedQueryParams, out: &mut Vec<ItemId>) {
-        if rp.one_shot() {
+    /// index runs dry. A `deadline` forces the session path even for
+    /// one-shot requests (STREAM_BLOCK slices — the candidate stream is
+    /// block-size-independent, so the prefix is unchanged) and returns
+    /// `Some(Deadline)` when the clock cuts the probe short; `out` then
+    /// holds the best-bounded prefix gathered so far.
+    fn probe_one(
+        &self,
+        qcode: C,
+        rp: &ResolvedQueryParams,
+        deadline: Option<Instant>,
+        out: &mut Vec<ItemId>,
+    ) -> Option<DegradeReason> {
+        if rp.one_shot() && deadline.is_none() {
             self.index.probe_with_code(qcode, rp.probe_budget, out);
-            return;
+            return None;
         }
         let mut session = self.index.prober_with_code(qcode);
+        let block = if rp.one_shot() { STREAM_BLOCK } else { rp.extend_step };
         let mut emitted = 0usize;
         let mut spent = 0usize;
         while spent < rp.probe_budget && emitted < rp.min_candidates {
-            let step = rp.extend_step.min(rp.probe_budget - spent);
+            if deadline.is_some_and(|d| Instant::now() >= d) {
+                return Some(DegradeReason::Deadline);
+            }
+            let step = block.min(rp.probe_budget - spent);
             let got = session.extend(step, out);
             emitted += got;
             spent += step;
@@ -288,6 +345,7 @@ impl<C: CodeWord> SearchEngine<C> {
                 break; // index exhausted
             }
         }
+        None
     }
 
     /// Fused probe + re-rank for one query (§Perf, the streaming path):
@@ -306,13 +364,19 @@ impl<C: CodeWord> SearchEngine<C> {
     /// [`Self::probe_one`] exactly (`extend_step` blocks, `min_candidates`
     /// checks), every skipped candidate is provably outside the top-k
     /// (see [`BoundedTopK`]), and view dots are bit-equal to dataset dots.
+    ///
+    /// Deadline semantics: `rp.time_budget` is anchored at `t0` (batch
+    /// entry) and checked at the top of every block — deadline-degraded
+    /// answers hold the exact top-k over the probed prefix, never a
+    /// half-scored block. A budget already expired at the first check
+    /// (e.g. zero) degrades with empty results rather than probing.
     fn search_streaming(
         &self,
         qcode: C,
         q: &[f32],
         rp: &ResolvedQueryParams,
-        t0: std::time::Instant,
-    ) -> Vec<SearchResult> {
+        t0: Instant,
+    ) -> QueryResponse {
         thread_local! {
             /// Per-worker block + admitted-candidate scratch (ids, then
             /// (slot, id) pairs surviving admission) — no allocation per
@@ -328,8 +392,10 @@ impl<C: CodeWord> SearchEngine<C> {
         // their `extend_step` blocks so the `min_candidates` stopping
         // points (and thus the probed prefix) match `probe_one` exactly.
         let step = if rp.one_shot() { STREAM_BLOCK } else { rp.extend_step };
+        let deadline = rp.time_budget.map(|tb| t0 + tb);
         let mut spent = 0usize;
         let mut emitted = 0usize;
+        let mut expired = false;
         STREAM_SCRATCH.with(|scratch| {
             let (block, admitted) = &mut *scratch.borrow_mut();
             while spent < rp.probe_budget {
@@ -337,6 +403,10 @@ impl<C: CodeWord> SearchEngine<C> {
                     if !acc.would_admit(bound) {
                         break; // nothing left in the schedule can enter the top-k
                     }
+                }
+                if deadline.is_some_and(|d| Instant::now() >= d) {
+                    expired = true; // return the best-so-far top-k, tagged
+                    break;
                 }
                 let take = step.min(rp.probe_budget - spent);
                 block.clear();
@@ -370,10 +440,17 @@ impl<C: CodeWord> SearchEngine<C> {
             }
         });
         self.metrics.record_query(t0.elapsed().as_micros() as u64, emitted);
-        acc.into_sorted()
+        let results: Vec<SearchResult> = acc
+            .into_sorted()
             .into_iter()
             .map(|(score, id)| SearchResult { id, score })
-            .collect()
+            .collect();
+        if expired {
+            self.metrics.record_degraded();
+            QueryResponse::degraded(results, DegradeReason::Deadline)
+        } else {
+            QueryResponse::complete(results)
+        }
     }
 }
 
@@ -526,6 +603,29 @@ impl AnyEngine {
             Self::W64(e) => e.search_with(query, params),
             Self::W128(e) => e.search_with(query, params),
             Self::W256(e) => e.search_with(query, params),
+        }
+    }
+
+    /// Width-erased [`SearchEngine::search_full`]: the degraded-aware
+    /// envelope entry point.
+    pub fn search_full(&self, query: &[f32], params: &QueryParams) -> Result<QueryResponse> {
+        match self {
+            Self::W64(e) => e.search_full(query, params),
+            Self::W128(e) => e.search_full(query, params),
+            Self::W256(e) => e.search_full(query, params),
+        }
+    }
+
+    /// Width-erased [`SearchEngine::search_batch_full`].
+    pub fn search_batch_full(
+        &self,
+        rows: &[f32],
+        params: &[QueryParams],
+    ) -> Result<Vec<QueryResponse>> {
+        match self {
+            Self::W64(e) => e.search_batch_full(rows, params),
+            Self::W128(e) => e.search_batch_full(rows, params),
+            Self::W256(e) => e.search_batch_full(rows, params),
         }
     }
 
@@ -1067,6 +1167,93 @@ mod tests {
                         "bits {bits} engine {ei} query {qi}"
                     );
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_time_budget_degrades_before_probing() {
+        // An already-expired budget must not hang or error: both rerank
+        // modes return an (empty) degraded answer tagged Deadline, and
+        // the degraded counter ticks.
+        let d = Arc::new(synthetic::longtail_sift(2000, 16, 70));
+        let (s, e) = engine_twins(&d, usize::MAX, 10);
+        let q = synthetic::gaussian_queries(1, 16, 71);
+        let p = QueryParams::new().with_time_budget(std::time::Duration::ZERO);
+        for (name, engine) in [("streaming", &s), ("exhaustive", &e)] {
+            let resp = engine.search_full(q.row(0), &p).unwrap();
+            assert!(resp.is_degraded(), "{name}: zero budget must degrade");
+            assert_eq!(
+                resp.degraded.as_ref().unwrap().reason,
+                crate::coordinator::fault::DegradeReason::Deadline,
+                "{name}"
+            );
+            assert!(resp.results.is_empty(), "{name}: nothing probed before expiry");
+            assert_eq!(engine.metrics().snapshot().queries_degraded, 1, "{name}");
+        }
+    }
+
+    #[test]
+    fn generous_time_budget_is_answer_invariant() {
+        // A budget that never expires must leave answers bit-identical to
+        // the budget-less run — the deadline check sits between extend
+        // blocks and must not perturb the stream.
+        let d = Arc::new(synthetic::longtail_sift(1500, 16, 72));
+        let (s, e) = engine_twins(&d, 400, 10);
+        let q = synthetic::gaussian_queries(4, 16, 73);
+        let generous = QueryParams::new().with_time_budget(std::time::Duration::from_secs(600));
+        for engine in [&s, &e] {
+            for qi in 0..q.len() {
+                let resp = engine.search_full(q.row(qi), &generous).unwrap();
+                assert!(!resp.is_degraded(), "query {qi}: 10min budget expired?");
+                assert_results_bit_equal(
+                    &resp.results,
+                    &engine.search(q.row(qi)).unwrap(),
+                    &format!("query {qi}"),
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn deadline_mid_session_returns_probed_prefix_topk() {
+        // Expiry at an extend boundary: where exactly the clock cuts the
+        // session is wall-clock-dependent, so assert the envelope
+        // invariant instead of a fixed cut point — a deadline-tagged
+        // answer is a descending top-k of exact scores over the probed
+        // prefix, and an untagged answer is the complete one (bit-equal
+        // to a budget-less run). With 1µs over 4000 items the degraded
+        // branch is what actually executes.
+        let d = Arc::new(synthetic::longtail_sift(4000, 16, 74));
+        let (s, _) = engine_twins(&d, usize::MAX, 5);
+        let q = synthetic::gaussian_queries(1, 16, 75);
+        let tight = QueryParams::new()
+            .with_extend_step(64)
+            .with_min_candidates(usize::MAX >> 1)
+            .with_time_budget(std::time::Duration::from_micros(1));
+        let resp = s.search_full(q.row(0), &tight).unwrap();
+        match &resp.degraded {
+            Some(tag) => {
+                assert_eq!(tag.reason, crate::coordinator::fault::DegradeReason::Deadline);
+                for w in resp.results.windows(2) {
+                    assert!(w[0].score >= w[1].score, "degraded prefix top-k must stay sorted");
+                }
+                for r in &resp.results {
+                    let want = d.dot(r.id as usize, q.row(0));
+                    assert!((r.score - want).abs() < 1e-6, "degraded scores stay exact");
+                }
+            }
+            None => {
+                // Only reachable if the whole stream fit inside 1µs —
+                // then the answer must equal the budget-less run.
+                let free = QueryParams::new()
+                    .with_extend_step(64)
+                    .with_min_candidates(usize::MAX >> 1);
+                assert_results_bit_equal(
+                    &resp.results,
+                    &s.search_with(q.row(0), &free).unwrap(),
+                    "untagged tight-budget answer",
+                );
             }
         }
     }

@@ -1,0 +1,354 @@
+//! Failure model for the serving path: the degraded-result envelope,
+//! typed overload/shard-loss errors, and the deterministic fault
+//! injection plan behind the chaos tests.
+//!
+//! RANGE-LSH's probing schedule visits ranges in decreasing upper-bound
+//! order, so a query cut short by a deadline still holds the
+//! *best-bounded* candidates seen so far — degradation returns that
+//! prefix tagged with a [`Degraded`] marker instead of erroring or
+//! silently presenting a truncated top-k as complete. See README
+//! §"Failure model & degraded serving".
+
+use std::fmt;
+use std::time::Duration;
+
+use crate::coordinator::engine::SearchResult;
+
+/// Why a response carries fewer/worse results than a healthy run would.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum DegradeReason {
+    /// The query's whole time budget was consumed before probing started
+    /// (batcher queue wait ate it); the result set is empty.
+    BudgetExhausted,
+    /// The wall-clock time budget expired between `Prober::extend`
+    /// blocks; the results are the best-so-far bounded top-k.
+    Deadline,
+    /// One or more shards failed past the retry cap; the merge covers
+    /// only the surviving shards (which ones died is in
+    /// [`Degraded::lost_shards`]).
+    ShardLoss,
+}
+
+/// Degradation tag on a [`QueryResponse`]. Ordered by severity
+/// (`BudgetExhausted < Deadline < ShardLoss`) so a router merging
+/// per-shard responses can keep the worst tag.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Degraded {
+    pub reason: DegradeReason,
+    /// Shard indices missing from the merge ([`DegradeReason::ShardLoss`]
+    /// only; empty otherwise).
+    pub lost_shards: Vec<usize>,
+}
+
+impl Degraded {
+    pub fn new(reason: DegradeReason) -> Self {
+        Self { reason, lost_shards: Vec::new() }
+    }
+
+    pub fn shard_loss(mut lost_shards: Vec<usize>) -> Self {
+        lost_shards.sort_unstable();
+        Self { reason: DegradeReason::ShardLoss, lost_shards }
+    }
+
+    /// Keep the more severe of two tags (shard loss outranks a deadline
+    /// expiry on one shard, which outranks queue-wait exhaustion).
+    pub fn worst(a: Option<Degraded>, b: Option<Degraded>) -> Option<Degraded> {
+        match (a, b) {
+            (None, x) | (x, None) => x,
+            (Some(a), Some(b)) => Some(if b.reason > a.reason { b } else { a }),
+        }
+    }
+}
+
+/// Result envelope for the fault-aware entry points (`search_full`,
+/// `query_full`): the ranked results plus an honest account of whether
+/// they are complete. The legacy `Vec<SearchResult>` entry points strip
+/// the envelope (callers that never set budgets or tolerate shard loss
+/// see no change).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QueryResponse {
+    pub results: Vec<SearchResult>,
+    /// `None` = the full, healthy answer.
+    pub degraded: Option<Degraded>,
+}
+
+impl QueryResponse {
+    pub fn complete(results: Vec<SearchResult>) -> Self {
+        Self { results, degraded: None }
+    }
+
+    pub fn degraded(results: Vec<SearchResult>, reason: DegradeReason) -> Self {
+        Self { results, degraded: Some(Degraded::new(reason)) }
+    }
+
+    pub fn is_degraded(&self) -> bool {
+        self.degraded.is_some()
+    }
+
+    pub fn into_results(self) -> Vec<SearchResult> {
+        self.results
+    }
+}
+
+/// Typed rejection from the bounded server queue: admitting the request
+/// could not possibly answer it within its time budget (or the queue hit
+/// its hard bound). Recover via [`crate::Error::downcast_ref`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OverloadedError {
+    /// Jobs queued ahead of the rejected request.
+    pub queue_depth: usize,
+    /// The wait the shedding policy projected for this depth.
+    pub projected_wait: Duration,
+    /// The budget that projection exceeded (`None` when the queue hit
+    /// its hard depth bound instead).
+    pub time_budget: Option<Duration>,
+}
+
+impl fmt::Display for OverloadedError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "server overloaded: {} queued, projected wait {:?}",
+            self.queue_depth, self.projected_wait
+        )?;
+        if let Some(tb) = self.time_budget {
+            write!(f, " exceeds time budget {tb:?}")?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for OverloadedError {}
+
+/// Typed router failure: fewer than `min_shards` shards answered even
+/// after retries, so no merge is trustworthy enough to return.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardLossError {
+    /// `(shard index, final error)` for every shard that failed.
+    pub failed: Vec<(usize, String)>,
+    /// Shards that did answer.
+    pub responded: usize,
+    /// The quorum the router was configured to require.
+    pub min_shards: usize,
+}
+
+impl fmt::Display for ShardLossError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "shard quorum lost: {} of {} required shards responded ({} failed",
+            self.responded,
+            self.min_shards,
+            self.failed.len()
+        )?;
+        for (i, (shard, err)) in self.failed.iter().enumerate() {
+            write!(f, "{} shard {shard}: {err}", if i == 0 { ":" } else { ";" })?;
+        }
+        f.write_str(")")
+    }
+}
+
+impl std::error::Error for ShardLossError {}
+
+/// Deterministic fault injection for the chaos tests: a seeded plan maps
+/// `(shard, query index, attempt)` to an optional fault, so every run of
+/// a given seed exercises the identical failure pattern. Compiled in
+/// only for tests and the `fault-injection` feature — release servers
+/// carry no injection branch.
+#[cfg(any(test, feature = "fault-injection"))]
+pub use self::injection::{Fault, FaultPlan};
+
+#[cfg(any(test, feature = "fault-injection"))]
+mod injection {
+    use std::time::Duration;
+
+    /// One injected misbehaviour at a `(shard, query)` site.
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub enum Fault {
+        /// Sleep before answering (models a slow replica; succeeds).
+        Delay(Duration),
+        /// Return an error (models a transient RPC failure; retryable).
+        Error,
+        /// Panic inside the shard call (models a crashed replica; the
+        /// router's `catch_unwind` must contain it).
+        Panic,
+    }
+
+    /// Seeded, deterministic fault schedule. `fault_for` is a pure
+    /// function of `(seed, shard, query, attempt)`: a site draws a fault
+    /// with probability `rate_pct`, the fault kind and how many attempts
+    /// it persists (1..=`persist_max`) are further hash bits. Scripted
+    /// overrides pin exact behaviour at chosen sites for unit tests.
+    #[derive(Debug, Clone)]
+    pub struct FaultPlan {
+        seed: u64,
+        rate_pct: u32,
+        persist_max: u32,
+        delay: Duration,
+        /// `(shard, query, fault, attempts it persists)` — wins over the
+        /// seeded draw at its site.
+        scripted: Vec<(usize, u64, Fault, u32)>,
+    }
+
+    impl FaultPlan {
+        pub fn seeded(seed: u64, rate_pct: u32) -> Self {
+            Self {
+                seed,
+                rate_pct: rate_pct.min(100),
+                persist_max: 2,
+                delay: Duration::from_micros(200),
+                scripted: Vec::new(),
+            }
+        }
+
+        /// Cap on how many consecutive attempts a drawn fault persists.
+        /// Above the router's retry budget this manufactures shard loss.
+        pub fn with_persistence(mut self, attempts: u32) -> Self {
+            self.persist_max = attempts.max(1);
+            self
+        }
+
+        pub fn with_delay(mut self, delay: Duration) -> Self {
+            self.delay = delay;
+            self
+        }
+
+        /// Pin `fault` at `(shard, query)` for the first `attempts`
+        /// attempts (then the site behaves healthily).
+        pub fn script(mut self, shard: usize, query: u64, fault: Fault, attempts: u32) -> Self {
+            self.scripted.push((shard, query, fault, attempts));
+            self
+        }
+
+        /// The fault (if any) for attempt number `attempt` (0-based) of
+        /// `query` on `shard`.
+        pub fn fault_for(&self, shard: usize, query: u64, attempt: u32) -> Option<Fault> {
+            for &(s, q, fault, attempts) in &self.scripted {
+                if s == shard && q == query {
+                    return (attempt < attempts).then_some(fault);
+                }
+            }
+            if self.rate_pct == 0 {
+                return None;
+            }
+            let h = mix(self.seed, shard as u64, query);
+            if (h % 100) as u32 >= self.rate_pct {
+                return None;
+            }
+            let persists = 1 + ((h >> 8) % self.persist_max as u64) as u32;
+            if attempt >= persists {
+                return None;
+            }
+            Some(match (h >> 40) % 3 {
+                0 => Fault::Delay(self.delay),
+                1 => Fault::Error,
+                _ => Fault::Panic,
+            })
+        }
+
+        /// Execute the fault for this site, if any: sleep, fail, or
+        /// panic (contained by the router's `catch_unwind`).
+        pub fn apply(&self, shard: usize, query: u64, attempt: u32) -> crate::Result<()> {
+            match self.fault_for(shard, query, attempt) {
+                None => Ok(()),
+                Some(Fault::Delay(d)) => {
+                    std::thread::sleep(d);
+                    Ok(())
+                }
+                Some(Fault::Error) => Err(anyhow::anyhow!(
+                    "injected transient fault (shard {shard}, query {query}, attempt {attempt})"
+                )),
+                Some(Fault::Panic) => {
+                    panic!("injected panic (shard {shard}, query {query}, attempt {attempt})")
+                }
+            }
+        }
+    }
+
+    /// splitmix64-style avalanche over the (seed, shard, query) triple.
+    fn mix(seed: u64, shard: u64, query: u64) -> u64 {
+        let mut z = seed
+            ^ shard.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ query.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn degraded_worst_keeps_severity_order() {
+        let budget = Some(Degraded::new(DegradeReason::BudgetExhausted));
+        let deadline = Some(Degraded::new(DegradeReason::Deadline));
+        let loss = Some(Degraded::shard_loss(vec![2, 0]));
+        assert_eq!(Degraded::worst(None, None), None);
+        assert_eq!(Degraded::worst(budget.clone(), None), budget);
+        assert_eq!(Degraded::worst(budget.clone(), deadline.clone()), deadline);
+        assert_eq!(Degraded::worst(loss.clone(), deadline.clone()), loss);
+        // Shard lists come out sorted.
+        assert_eq!(loss.unwrap().lost_shards, vec![0, 2]);
+    }
+
+    #[test]
+    fn typed_errors_downcast_through_anyhow() {
+        let over = OverloadedError {
+            queue_depth: 17,
+            projected_wait: Duration::from_millis(4),
+            time_budget: Some(Duration::from_millis(1)),
+        };
+        let e = crate::Error::new(over.clone()).context("submitting query");
+        assert_eq!(e.downcast_ref::<OverloadedError>(), Some(&over));
+        assert!(format!("{e:#}").contains("overloaded"));
+
+        let loss = ShardLossError {
+            failed: vec![(1, "injected".into())],
+            responded: 1,
+            min_shards: 2,
+        };
+        let e: crate::Error = loss.clone().into();
+        assert_eq!(e.downcast_ref::<ShardLossError>(), Some(&loss));
+        let msg = format!("{e}");
+        assert!(msg.contains("1 of 2"), "unexpected: {msg}");
+        assert!(msg.contains("shard 1"), "unexpected: {msg}");
+    }
+
+    #[test]
+    fn fault_plan_is_deterministic_and_rate_bounded() {
+        let plan = FaultPlan::seeded(42, 30);
+        let mut faults = 0;
+        for shard in 0..4usize {
+            for query in 0..200u64 {
+                let a = plan.fault_for(shard, query, 0);
+                // Same site, same answer — determinism is what makes the
+                // chaos property reproducible from a seed.
+                assert_eq!(a, plan.fault_for(shard, query, 0));
+                faults += usize::from(a.is_some());
+            }
+        }
+        // ~30% of 800 sites; generous tolerance, zero/all would be a bug.
+        assert!((100..400).contains(&faults), "fault count {faults} implausible for 30%");
+        // Rate 0 injects nothing.
+        let calm = FaultPlan::seeded(42, 0);
+        assert!((0..200u64).all(|q| calm.fault_for(0, q, 0).is_none()));
+    }
+
+    #[test]
+    fn fault_plan_persistence_and_scripts() {
+        // Default persistence ≤ 2 attempts: every drawn fault clears by
+        // attempt 2 (the third try), so retries always win eventually.
+        let plan = FaultPlan::seeded(7, 100);
+        for query in 0..100u64 {
+            assert_eq!(plan.fault_for(0, query, 2), None, "query {query} persisted past cap");
+        }
+        // Scripted sites override the draw exactly.
+        let plan = FaultPlan::seeded(7, 0).script(1, 5, Fault::Error, 2);
+        assert_eq!(plan.fault_for(1, 5, 0), Some(Fault::Error));
+        assert_eq!(plan.fault_for(1, 5, 1), Some(Fault::Error));
+        assert_eq!(plan.fault_for(1, 5, 2), None);
+        assert_eq!(plan.fault_for(0, 5, 0), None);
+    }
+}

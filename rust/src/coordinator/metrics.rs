@@ -12,6 +12,15 @@ pub struct Metrics {
     probed_items: AtomicU64,
     batches: AtomicU64,
     batch_rows: AtomicU64,
+    /// Queries answered with a `Degraded` tag (deadline expiry,
+    /// queue-wait exhaustion, or partial shard merge).
+    queries_degraded: AtomicU64,
+    /// Shard calls that failed past the retry cap (router).
+    shard_failures: AtomicU64,
+    /// Shard call retries after a transient failure (router).
+    retries: AtomicU64,
+    /// Requests rejected `Overloaded` at submission (server).
+    shed: AtomicU64,
     /// histogram[i] counts latencies in [2^i, 2^{i+1}) microseconds.
     histogram: [AtomicU64; BUCKETS],
 }
@@ -31,6 +40,22 @@ impl Metrics {
     pub fn record_batch(&self, rows: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batch_rows.fetch_add(rows as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_degraded(&self) {
+        self.queries_degraded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_shard_failure(&self) {
+        self.shard_failures.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_retry(&self) {
+        self.retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -70,6 +95,10 @@ impl Metrics {
             } else {
                 self.batch_rows.load(Ordering::Relaxed) as f64 / batches as f64
             },
+            queries_degraded: self.queries_degraded.load(Ordering::Relaxed),
+            shard_failures: self.shard_failures.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
             p50_us: pct(0.50),
             p95_us: pct(0.95),
             p99_us: pct(0.99),
@@ -84,6 +113,13 @@ pub struct MetricsSnapshot {
     pub mean_probed: f64,
     pub batches: u64,
     pub mean_batch_rows: f64,
+    /// Degraded-serving counters (see README §"Failure model & degraded
+    /// serving"): tagged responses, shard calls lost past retries,
+    /// retries issued, and requests shed at submission.
+    pub queries_degraded: u64,
+    pub shard_failures: u64,
+    pub retries: u64,
+    pub shed: u64,
     /// Latency percentiles (bucket upper bounds, µs).
     pub p50_us: u64,
     pub p95_us: u64,
@@ -134,5 +170,48 @@ mod tests {
         let m = Metrics::new();
         m.record_query(0, 0);
         assert_eq!(m.snapshot().queries, 1);
+    }
+
+    #[test]
+    fn degraded_serving_counters_round_trip() {
+        let m = Metrics::new();
+        m.record_degraded();
+        m.record_degraded();
+        m.record_shard_failure();
+        m.record_retry();
+        m.record_retry();
+        m.record_retry();
+        m.record_shed();
+        let s = m.snapshot();
+        assert_eq!(
+            (s.queries_degraded, s.shard_failures, s.retries, s.shed),
+            (2, 1, 3, 1)
+        );
+        // Independent of the query counters.
+        assert_eq!(s.queries, 0);
+    }
+
+    #[test]
+    fn snapshot_is_coherent() {
+        // Percentiles must be monotone, bracket the recorded latencies,
+        // and the histogram mass must equal the query count — the
+        // invariants a reader of the serve-loop printout relies on.
+        let m = Metrics::new();
+        let latencies = [1u64, 3, 7, 50, 120, 900, 4_000, 30_000, 250_000, 2_000_000];
+        for (i, &us) in latencies.iter().enumerate() {
+            m.record_query(us, i * 11);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.queries, latencies.len() as u64);
+        assert!(s.p50_us <= s.p95_us && s.p95_us <= s.p99_us, "{s:?}");
+        // Bucket upper edges: p50 covers at least half the samples, p99
+        // at least all-but-one, and every percentile is at least the
+        // smallest latency and at most 2x the largest (upper-edge slack).
+        let max = *latencies.iter().max().unwrap();
+        for p in [s.p50_us, s.p95_us, s.p99_us] {
+            assert!(p >= 1 && p <= max.next_power_of_two() * 2, "percentile {p} out of range");
+        }
+        assert!(s.p50_us >= 120, "p50 {} below the true median", s.p50_us);
+        assert!(s.p99_us >= 2_000_000, "p99 {} must cover the tail", s.p99_us);
     }
 }

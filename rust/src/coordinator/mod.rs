@@ -11,10 +11,17 @@
 //!   amortises PJRT query hashing across concurrent requests.
 //! - [`metrics`] — latency histograms and counters (p50/p95/p99, QPS).
 //! - [`router`] — a shard router: fan out a query to per-shard engines and
-//!   merge top-k (the multi-node story, exercised single-process).
+//!   merge top-k (the multi-node story, exercised single-process), with
+//!   per-shard `catch_unwind` fault isolation, retry/backoff, and a
+//!   `min_shards` partial-merge quorum.
+//! - [`fault`] — the failure model: the [`fault::QueryResponse`] envelope
+//!   with its [`fault::Degraded`] tag, typed overload/shard-loss errors,
+//!   and (tests / `fault-injection` feature only) the deterministic
+//!   [`fault::FaultPlan`] behind the chaos suite.
 
 pub mod batcher;
 pub mod engine;
+pub mod fault;
 pub mod metrics;
 pub mod router;
 pub mod server;
@@ -22,6 +29,9 @@ pub mod server;
 pub use crate::config::{QueryParams, ResolvedQueryParams};
 pub use batcher::BatchPolicy;
 pub use engine::{AnyEngine, SearchEngine, SearchResult};
+pub use fault::{DegradeReason, Degraded, OverloadedError, QueryResponse, ShardLossError};
+#[cfg(any(test, feature = "fault-injection"))]
+pub use fault::{Fault, FaultPlan};
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use router::ShardedRouter;
+pub use router::{RouterPolicy, Shard, ShardedRouter};
 pub use server::{QueryServer, ServerHandle};

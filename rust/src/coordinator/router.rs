@@ -4,11 +4,30 @@
 //! owns a horizontal slice of the corpus with its own RANGE-LSH index
 //! (norm ranges live *inside* each shard, as Alg. 1 prescribes per
 //! sub-dataset owner). Ids are translated back to the global space here.
+//!
+//! Fault isolation (README §"Failure model & degraded serving"): every
+//! shard call runs under `catch_unwind`, transient failures retry with
+//! capped exponential backoff, and when at least
+//! [`RouterPolicy::min_shards`] shards answer, the partial merge is
+//! returned tagged `Degraded { reason: ShardLoss }` naming the lost
+//! shards — never a silently truncated top-k presented as complete.
+//! Below the quorum the query fails with a typed
+//! [`ShardLossError`](crate::coordinator::fault::ShardLossError). The
+//! norm-range partition makes this merge honest: each shard's answer is
+//! an exact top-k over its own slice, so the partial merge is exactly
+//! the full answer minus the lost slices.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::config::QueryParams;
 use crate::coordinator::engine::{SearchEngine, SearchResult};
+#[cfg(any(test, feature = "fault-injection"))]
+use crate::coordinator::fault::FaultPlan;
+use crate::coordinator::fault::{Degraded, QueryResponse, ShardLossError};
+use crate::coordinator::metrics::Metrics;
 use crate::hash::CodeWord;
 use crate::{ItemId, Result};
 
@@ -21,21 +40,91 @@ pub struct Shard<C: CodeWord = u64> {
     pub id_offset: ItemId,
 }
 
+/// Fault-tolerance knobs of the [`ShardedRouter`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RouterPolicy {
+    /// Minimum shards that must answer for a merge to be returned; below
+    /// it the query fails with a typed `ShardLossError`. Clamped to the
+    /// shard count at construction — the default (`usize::MAX`) therefore
+    /// means "all shards", the strict pre-fault-tolerance behaviour.
+    pub min_shards: usize,
+    /// Retries per shard after the initial attempt (0 = fail fast).
+    pub max_retries: u32,
+    /// Backoff before retry `r` is `backoff_base * 2^r`, capped at
+    /// `backoff_cap`.
+    pub backoff_base: Duration,
+    pub backoff_cap: Duration,
+}
+
+impl Default for RouterPolicy {
+    fn default() -> Self {
+        Self {
+            min_shards: usize::MAX,
+            max_retries: 2,
+            backoff_base: Duration::from_micros(200),
+            backoff_cap: Duration::from_millis(5),
+        }
+    }
+}
+
 /// Fan-out/merge router over shards.
 pub struct ShardedRouter<C: CodeWord = u64> {
     shards: Vec<Shard<C>>,
     top_k: usize,
+    policy: RouterPolicy,
+    metrics: Arc<Metrics>,
+    /// Per-router query counter — the deterministic query index fault
+    /// plans key on.
+    seq: AtomicU64,
+    #[cfg(any(test, feature = "fault-injection"))]
+    fault_plan: Option<FaultPlan>,
 }
 
 impl<C: CodeWord> ShardedRouter<C> {
     pub fn new(shards: Vec<Shard<C>>, top_k: usize) -> Result<Self> {
+        Self::with_policy(shards, top_k, RouterPolicy::default())
+    }
+
+    /// [`Self::new`] with explicit fault-tolerance knobs; `min_shards`
+    /// is clamped into `1..=n_shards`.
+    pub fn with_policy(shards: Vec<Shard<C>>, top_k: usize, policy: RouterPolicy) -> Result<Self> {
         anyhow::ensure!(!shards.is_empty(), "need at least one shard");
         anyhow::ensure!(top_k >= 1, "top_k must be >= 1");
-        Ok(Self { shards, top_k })
+        anyhow::ensure!(policy.min_shards >= 1, "min_shards must be >= 1");
+        let policy =
+            RouterPolicy { min_shards: policy.min_shards.min(shards.len()), ..policy };
+        Ok(Self {
+            shards,
+            top_k,
+            policy,
+            metrics: Arc::new(Metrics::new()),
+            seq: AtomicU64::new(0),
+            #[cfg(any(test, feature = "fault-injection"))]
+            fault_plan: None,
+        })
     }
 
     pub fn n_shards(&self) -> usize {
         self.shards.len()
+    }
+
+    pub fn policy(&self) -> &RouterPolicy {
+        &self.policy
+    }
+
+    /// Router-level fault counters (`shard_failures`, `retries`,
+    /// `queries_degraded`); per-shard latency lives in each shard
+    /// engine's own metrics.
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    /// Install a deterministic fault plan: every shard call first runs
+    /// `plan.apply(shard, query_index, attempt)`, which may sleep, fail,
+    /// or panic. Tests and the `fault-injection` feature only.
+    #[cfg(any(test, feature = "fault-injection"))]
+    pub fn set_fault_plan(&mut self, plan: Option<FaultPlan>) {
+        self.fault_plan = plan;
     }
 
     /// Query every shard, merge by exact score, return global-id top-k.
@@ -48,21 +137,127 @@ impl<C: CodeWord> ShardedRouter<C> {
     /// [`Self::query`] with per-request overrides: each shard probes and
     /// re-ranks under `params` (its own engine defaults filling the
     /// `None` fields), and the merge keeps `params.top_k` results (the
-    /// router's construction-time `top_k` when unset).
+    /// router's construction-time `top_k` when unset). Strips the
+    /// degraded envelope; callers that must distinguish a partial merge
+    /// from a complete one use [`Self::query_full`].
     pub fn query_with(&self, query: &[f32], params: &QueryParams) -> Result<Vec<SearchResult>> {
+        Ok(self.query_full(query, params)?.into_results())
+    }
+
+    /// The fault-aware entry point: fan out under `catch_unwind`, retry
+    /// transient failures with capped exponential backoff, and merge
+    /// whatever quorum survives. Shard-level degradation (e.g. a
+    /// deadline expiry inside one shard engine) propagates as the worst
+    /// tag; lost shards dominate and are listed in the tag.
+    pub fn query_full(&self, query: &[f32], params: &QueryParams) -> Result<QueryResponse> {
+        let qi = self.seq.fetch_add(1, Ordering::Relaxed);
         let top_k = params.top_k.unwrap_or(self.top_k).max(1);
         let mut merged: Vec<SearchResult> = Vec::with_capacity(top_k * self.shards.len());
-        for shard in &self.shards {
-            let local = shard.engine.search_with(query, params)?;
-            merged.extend(local.into_iter().map(|r| SearchResult {
-                id: r.id + shard.id_offset,
-                score: r.score,
-            }));
+        let mut lost: Vec<usize> = Vec::new();
+        let mut failures: Vec<(usize, String)> = Vec::new();
+        let mut shard_tag: Option<Degraded> = None;
+        for (si, shard) in self.shards.iter().enumerate() {
+            match self.query_shard(si, qi, shard, query, params) {
+                Ok(resp) => {
+                    shard_tag = Degraded::worst(shard_tag, resp.degraded);
+                    merged.extend(resp.results.into_iter().map(|r| SearchResult {
+                        id: r.id + shard.id_offset,
+                        score: r.score,
+                    }));
+                }
+                Err(e) => {
+                    self.metrics.record_shard_failure();
+                    failures.push((si, format!("{e:#}")));
+                    lost.push(si);
+                }
+            }
+        }
+        let responded = self.shards.len() - lost.len();
+        if responded < self.policy.min_shards {
+            return Err(ShardLossError {
+                failed: failures,
+                responded,
+                min_shards: self.policy.min_shards,
+            }
+            .into());
         }
         merged.sort_by(|a, b| b.score.total_cmp(&a.score).then(a.id.cmp(&b.id)));
         merged.truncate(top_k);
-        Ok(merged)
+        let degraded = if lost.is_empty() {
+            shard_tag
+        } else {
+            // Shard loss subsumes any per-shard deadline tag: the lost
+            // list is the actionable fact for the caller.
+            Some(Degraded::shard_loss(lost))
+        };
+        if degraded.is_some() {
+            self.metrics.record_degraded();
+        }
+        Ok(QueryResponse { results: merged, degraded })
     }
+
+    /// One shard call with fault containment: panics become errors via
+    /// `catch_unwind`, and failures retry up to `policy.max_retries`
+    /// times with exponential backoff. `AssertUnwindSafe` is justified
+    /// because a shard engine holds no interior state a query mutates
+    /// besides atomics and per-thread scratch that is cleared on entry;
+    /// an unwound query leaves the engine servable.
+    fn query_shard(
+        &self,
+        si: usize,
+        qi: u64,
+        shard: &Shard<C>,
+        query: &[f32],
+        params: &QueryParams,
+    ) -> Result<QueryResponse> {
+        let mut attempt: u32 = 0;
+        loop {
+            let outcome = catch_unwind(AssertUnwindSafe(|| {
+                self.inject(si, qi, attempt)?;
+                shard.engine.search_full(query, params)
+            }));
+            let err = match outcome {
+                Ok(Ok(resp)) => return Ok(resp),
+                Ok(Err(e)) => e,
+                Err(payload) => anyhow::anyhow!("shard panicked: {}", panic_message(&payload)),
+            };
+            if attempt >= self.policy.max_retries {
+                return Err(err.context(format!("shard {si} failed after {} attempts", attempt + 1)));
+            }
+            self.metrics.record_retry();
+            let backoff = self
+                .policy
+                .backoff_base
+                .saturating_mul(1u32 << attempt.min(16))
+                .min(self.policy.backoff_cap);
+            std::thread::sleep(backoff);
+            attempt += 1;
+        }
+    }
+
+    #[cfg(any(test, feature = "fault-injection"))]
+    fn inject(&self, si: usize, qi: u64, attempt: u32) -> Result<()> {
+        match &self.fault_plan {
+            Some(plan) => plan.apply(si, qi, attempt),
+            None => Ok(()),
+        }
+    }
+
+    #[cfg(not(any(test, feature = "fault-injection")))]
+    #[inline(always)]
+    fn inject(&self, _si: usize, _qi: u64, _attempt: u32) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Best-effort human-readable panic payload (`&str` and `String` cover
+/// everything `panic!` in this codebase produces).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    payload
+        .downcast_ref::<&str>()
+        .copied()
+        .or_else(|| payload.downcast_ref::<String>().map(String::as_str))
+        .unwrap_or("opaque panic payload")
 }
 
 #[cfg(test)]
@@ -144,5 +339,117 @@ mod tests {
     #[test]
     fn rejects_empty_shard_list() {
         assert!(ShardedRouter::<u64>::new(vec![], 5).is_err());
+    }
+
+    use crate::coordinator::fault::{DegradeReason, Fault, FaultPlan};
+
+    fn fast_policy(min_shards: usize, max_retries: u32) -> RouterPolicy {
+        RouterPolicy {
+            min_shards,
+            max_retries,
+            backoff_base: Duration::from_micros(1),
+            backoff_cap: Duration::from_micros(10),
+        }
+    }
+
+    #[test]
+    fn min_shards_clamps_to_shard_count() {
+        let d = Arc::new(synthetic::longtail_sift(50, 8, 6));
+        let router = ShardedRouter::with_policy(
+            vec![Shard { engine: make_engine(d), id_offset: 0 }],
+            5,
+            RouterPolicy::default(),
+        )
+        .unwrap();
+        assert_eq!(router.policy().min_shards, 1);
+    }
+
+    #[test]
+    fn retries_recover_from_transient_faults() {
+        // Shard 0 fails its first two attempts at query 0; with
+        // max_retries = 2 the third attempt succeeds and the answer is
+        // identical to the fault-free one.
+        let d = Arc::new(synthetic::longtail_sift(200, 8, 7));
+        let mut router = ShardedRouter::with_policy(
+            vec![Shard { engine: make_engine(d), id_offset: 0 }],
+            5,
+            fast_policy(1, 2),
+        )
+        .unwrap();
+        router.set_fault_plan(Some(FaultPlan::seeded(1, 0).script(0, 0, Fault::Error, 2)));
+        let q = synthetic::gaussian_queries(1, 8, 8);
+        let faulted = router.query_full(q.row(0), &QueryParams::default()).unwrap();
+        assert!(faulted.degraded.is_none(), "recovered query must not be tagged");
+        // Query 1 hits no scripted fault: the clean oracle.
+        let clean = router.query_full(q.row(0), &QueryParams::default()).unwrap();
+        assert_eq!(faulted.results, clean.results);
+        let s = router.metrics().snapshot();
+        assert_eq!(s.retries, 2);
+        assert_eq!(s.shard_failures, 0);
+    }
+
+    #[test]
+    fn persistent_failure_exhausts_retries_into_typed_shard_loss() {
+        let d = Arc::new(synthetic::longtail_sift(100, 8, 9));
+        let mut router = ShardedRouter::with_policy(
+            vec![Shard { engine: make_engine(d), id_offset: 0 }],
+            5,
+            fast_policy(1, 2),
+        )
+        .unwrap();
+        router.set_fault_plan(Some(FaultPlan::seeded(2, 0).script(
+            0,
+            0,
+            Fault::Error,
+            u32::MAX,
+        )));
+        let q = synthetic::gaussian_queries(1, 8, 10);
+        let err = router.query_full(q.row(0), &QueryParams::default()).unwrap_err();
+        let loss = err
+            .downcast_ref::<ShardLossError>()
+            .expect("quorum failure must carry a typed ShardLossError");
+        assert_eq!((loss.responded, loss.min_shards), (0, 1));
+        assert_eq!(loss.failed.len(), 1);
+        assert_eq!(loss.failed[0].0, 0);
+        let s = router.metrics().snapshot();
+        assert_eq!(s.shard_failures, 1);
+        assert_eq!(s.retries, 2, "retry cap must bound the attempts");
+    }
+
+    #[test]
+    fn min_shards_quorum_merges_surviving_shards_as_degraded() {
+        // Shard 1 panics persistently; with min_shards = 1 the router
+        // isolates the panic and returns shard 0's exact answer tagged
+        // ShardLoss naming the lost shard.
+        let full = synthetic::longtail_sift(400, 8, 11);
+        let half = 200 * 8;
+        let d1 = Arc::new(Dataset::from_flat(8, full.flat()[..half].to_vec()));
+        let d2 = Arc::new(Dataset::from_flat(8, full.flat()[half..].to_vec()));
+        let surviving = make_engine(d1);
+        let mut router = ShardedRouter::with_policy(
+            vec![
+                Shard { engine: Arc::clone(&surviving), id_offset: 0 },
+                Shard { engine: make_engine(d2), id_offset: 200 },
+            ],
+            5,
+            fast_policy(1, 0),
+        )
+        .unwrap();
+        router.set_fault_plan(Some(FaultPlan::seeded(3, 0).script(
+            1,
+            0,
+            Fault::Panic,
+            u32::MAX,
+        )));
+        let q = synthetic::gaussian_queries(1, 8, 12);
+        let resp = router.query_full(q.row(0), &QueryParams::default()).unwrap();
+        let tag = resp.degraded.as_ref().expect("partial merge must be tagged");
+        assert_eq!(tag.reason, DegradeReason::ShardLoss);
+        assert_eq!(tag.lost_shards, vec![1]);
+        let oracle = surviving.search_with(q.row(0), &QueryParams::default()).unwrap();
+        assert_eq!(resp.results, oracle, "partial merge must equal the surviving shard");
+        let s = router.metrics().snapshot();
+        assert_eq!(s.shard_failures, 1);
+        assert_eq!(s.queries_degraded, 1);
     }
 }

@@ -8,6 +8,7 @@
 //! channel, and the PJRT hash batch amortises across everything that
 //! arrived within the window.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -17,6 +18,7 @@ use anyhow::anyhow;
 use crate::config::QueryParams;
 use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::engine::{AnyEngine, SearchEngine, SearchResult};
+use crate::coordinator::fault::{DegradeReason, OverloadedError, QueryResponse};
 use crate::coordinator::metrics::MetricsSnapshot;
 use crate::hash::CodeWord;
 use crate::Result;
@@ -26,7 +28,7 @@ struct Job {
     /// Per-request overrides of the engine's serving defaults; requests
     /// with different parameters still share the batch's hash pass.
     params: QueryParams,
-    reply: mpsc::Sender<Result<Vec<SearchResult>>>,
+    reply: mpsc::Sender<Result<QueryResponse>>,
     enqueued: Instant,
 }
 
@@ -39,6 +41,12 @@ struct Job {
 pub struct ServerHandle<C: CodeWord = u64> {
     tx: Mutex<mpsc::Sender<Job>>,
     engine: Arc<SearchEngine<C>>,
+    policy: BatchPolicy,
+    /// Jobs submitted but not yet picked up by the batcher thread — the
+    /// queue depth the load shedder consults. Check-then-increment is
+    /// deliberately non-atomic: the bound is a shedding heuristic, and a
+    /// rare off-by-few under contention only shifts the shed point.
+    depth: Arc<AtomicUsize>,
 }
 
 impl<C: CodeWord> Clone for ServerHandle<C> {
@@ -46,6 +54,8 @@ impl<C: CodeWord> Clone for ServerHandle<C> {
         Self {
             tx: Mutex::new(self.tx.lock().unwrap().clone()),
             engine: self.engine.clone(),
+            policy: self.policy,
+            depth: self.depth.clone(),
         }
     }
 }
@@ -57,16 +67,48 @@ impl<C: CodeWord> ServerHandle<C> {
     }
 
     /// Submit one query with per-request overrides (k, probe budget,
-    /// early-stop target) and wait for its answer. Requests with
-    /// different parameters batch together — hashing is shared, probe and
-    /// re-rank honour each request's own resolved parameters.
+    /// early-stop target, time budget) and wait for its answer. Requests
+    /// with different parameters batch together — hashing is shared,
+    /// probe and re-rank honour each request's own resolved parameters.
+    /// Strips the degraded envelope; callers that must distinguish a
+    /// deadline-cut answer from a complete one use [`Self::query_full`].
     pub fn query_with(&self, query: Vec<f32>, params: QueryParams) -> Result<Vec<SearchResult>> {
+        Ok(self.query_full(query, params)?.into_results())
+    }
+
+    /// The deadline-aware entry point. Two admission checks run before
+    /// the job is enqueued (README §"Failure model & degraded serving"):
+    /// the queue bound (`BatchPolicy::max_queue`) and, when the request
+    /// carries a time budget, the projected wait — current batch window
+    /// plus one batch-service estimate (the engine's p50) per queued
+    /// batch ahead. Either trips a typed [`OverloadedError`] so callers
+    /// can back off instead of queueing work that is already dead; a
+    /// budget smaller than the batch window is therefore shed
+    /// deterministically. Jobs whose budget expires *in* the queue are
+    /// answered at flush time with an empty
+    /// `Degraded { reason: BudgetExhausted }` response.
+    pub fn query_full(&self, query: Vec<f32>, params: QueryParams) -> Result<QueryResponse> {
+        let depth = self.depth.load(Ordering::Relaxed);
+        let time_budget = params.resolve(self.engine.config()).time_budget;
+        let service = Duration::from_micros(self.engine.metrics().snapshot().p50_us);
+        let projected_wait = self.policy.projected_wait(depth, service);
+        if depth >= self.policy.max_queue
+            || time_budget.is_some_and(|tb| projected_wait > tb)
+        {
+            self.engine.metrics().record_shed();
+            return Err(OverloadedError { queue_depth: depth, projected_wait, time_budget }.into());
+        }
         let (reply_tx, reply_rx) = mpsc::channel();
-        self.tx
+        self.depth.fetch_add(1, Ordering::Relaxed);
+        let sent = self
+            .tx
             .lock()
             .unwrap()
-            .send(Job { query, params, reply: reply_tx, enqueued: Instant::now() })
-            .map_err(|_| anyhow!("server is shut down"))?;
+            .send(Job { query, params, reply: reply_tx, enqueued: Instant::now() });
+        if sent.is_err() {
+            self.depth.fetch_sub(1, Ordering::Relaxed);
+            return Err(anyhow!("server is shut down"));
+        }
         reply_rx
             .recv()
             .map_err(|_| anyhow!("server dropped the reply"))?
@@ -89,11 +131,25 @@ impl QueryServer {
     ) -> ServerHandle<C> {
         let (tx, rx) = mpsc::channel::<Job>();
         let loop_engine = engine.clone();
+        let depth = Arc::new(AtomicUsize::new(0));
+        let loop_depth = depth.clone();
         std::thread::Builder::new()
             .name("rangelsh-batcher".into())
-            .spawn(move || batch_loop(loop_engine, policy, rx))
+            .spawn(move || batch_loop(loop_engine, policy, rx, loop_depth))
             .expect("spawning batcher thread");
-        ServerHandle { tx: Mutex::new(tx), engine }
+        ServerHandle { tx: Mutex::new(tx), engine, policy, depth }
+    }
+}
+
+/// Queue-wait accounting at flush time, pure so it is unit-testable:
+/// `None` = the request's whole budget was consumed waiting (answer
+/// `BudgetExhausted` without touching the engine); `Some(b)` = run the
+/// engine with remaining budget `b` (`Some(remaining)` or budget-less).
+fn budget_after_wait(budget: Option<Duration>, wait: Duration) -> Option<Option<Duration>> {
+    match budget {
+        Some(tb) if wait >= tb => None,
+        Some(tb) => Some(Some(tb - wait)),
+        None => Some(None),
     }
 }
 
@@ -101,12 +157,20 @@ fn batch_loop<C: CodeWord>(
     engine: Arc<SearchEngine<C>>,
     policy: BatchPolicy,
     rx: mpsc::Receiver<Job>,
+    depth: Arc<AtomicUsize>,
 ) {
     let mut pending: Vec<Job> = Vec::with_capacity(policy.max_batch);
+    let take = |r: std::result::Result<Job, mpsc::RecvTimeoutError>| {
+        // Receipt is what moves a job out of the shedder's queue depth.
+        if r.is_ok() {
+            depth.fetch_sub(1, Ordering::Relaxed);
+        }
+        r
+    };
     loop {
         // Wait (indefinitely) for the first job of the next batch.
         if pending.is_empty() {
-            match rx.recv() {
+            match take(rx.recv().map_err(|_| mpsc::RecvTimeoutError::Disconnected)) {
                 Ok(job) => pending.push(job),
                 Err(_) => return, // all senders gone
             }
@@ -117,10 +181,13 @@ fn batch_loop<C: CodeWord>(
         // the deadline at the oldest job's *enqueue* time would make every
         // post-flush batch flush instantly with one member.)
         while pending.len() < policy.max_batch {
-            match rx.try_recv() {
+            match take(rx.try_recv().map_err(|e| match e {
+                mpsc::TryRecvError::Empty => mpsc::RecvTimeoutError::Timeout,
+                mpsc::TryRecvError::Disconnected => mpsc::RecvTimeoutError::Disconnected,
+            })) {
                 Ok(job) => pending.push(job),
-                Err(mpsc::TryRecvError::Empty) => break,
-                Err(mpsc::TryRecvError::Disconnected) => {
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
                     closed = true;
                     break;
                 }
@@ -134,7 +201,7 @@ fn batch_loop<C: CodeWord>(
             if now >= deadline {
                 break;
             }
-            match rx.recv_timeout(deadline - now) {
+            match take(rx.recv_timeout(deadline - now)) {
                 Ok(job) => pending.push(job),
                 Err(mpsc::RecvTimeoutError::Timeout) => break,
                 Err(mpsc::RecvTimeoutError::Disconnected) => {
@@ -143,11 +210,40 @@ fn batch_loop<C: CodeWord>(
                 }
             }
         }
-        // Flush.
-        let batch = std::mem::take(&mut pending);
+        // Flush. First settle queue-wait accounting: jobs whose time
+        // budget was consumed entirely by waiting are answered degraded
+        // right here; survivors carry their *remaining* budget into the
+        // engine (whose own deadline anchors at batch entry, so the
+        // end-to-end bound is enqueue + budget).
+        let now = Instant::now();
+        let mut batch: Vec<Job> = Vec::with_capacity(pending.len());
+        for mut job in std::mem::take(&mut pending) {
+            let wait = now.duration_since(job.enqueued);
+            let budget = job.params.resolve(engine.config()).time_budget;
+            match budget_after_wait(budget, wait) {
+                None => {
+                    engine.metrics().record_degraded();
+                    engine.metrics().record_query(wait.as_micros() as u64, 0);
+                    let _ = job.reply.send(Ok(QueryResponse::degraded(
+                        Vec::new(),
+                        DegradeReason::BudgetExhausted,
+                    )));
+                }
+                Some(remaining) => {
+                    job.params.time_budget = remaining;
+                    batch.push(job);
+                }
+            }
+        }
+        if batch.is_empty() {
+            if closed {
+                return;
+            }
+            continue;
+        }
         let rows: Vec<f32> = batch.iter().flat_map(|j| j.query.iter().copied()).collect();
         let params: Vec<QueryParams> = batch.iter().map(|j| j.params).collect();
-        match engine.search_batch_params(&rows, &params) {
+        match engine.search_batch_full(&rows, &params) {
             Ok(per_query) => {
                 debug_assert_eq!(per_query.len(), batch.len());
                 for (job, res) in batch.into_iter().zip(per_query) {
@@ -375,5 +471,88 @@ mod tests {
         drop(handle);
         let q = synthetic::gaussian_queries(1, 8, 5);
         assert_eq!(h2.query(q.row(0).to_vec()).unwrap().len(), 5);
+    }
+
+    #[test]
+    fn budget_after_wait_accounts_queue_time() {
+        let ms = Duration::from_millis;
+        // No budget: always runs, still budget-less.
+        assert_eq!(budget_after_wait(None, ms(500)), Some(None));
+        // Budget outlives the wait: remainder is exact.
+        assert_eq!(budget_after_wait(Some(ms(10)), ms(3)), Some(Some(ms(7))));
+        assert_eq!(budget_after_wait(Some(ms(10)), Duration::ZERO), Some(Some(ms(10))));
+        // Wait consumed the whole budget (boundary inclusive): expired.
+        assert_eq!(budget_after_wait(Some(ms(10)), ms(10)), None);
+        assert_eq!(budget_after_wait(Some(ms(10)), ms(11)), None);
+    }
+
+    #[test]
+    fn budget_below_batch_window_sheds_deterministically() {
+        // A time budget smaller than the flush deadline can never be met:
+        // the projected wait (>= the batch window) exceeds it at any
+        // queue depth, so admission rejects it with a typed Overloaded.
+        let eng = engine();
+        let policy = BatchPolicy::new(8, Duration::from_millis(10));
+        let handle = QueryServer::spawn(eng.clone(), policy);
+        let q = synthetic::gaussian_queries(1, 8, 9);
+        let params = QueryParams::new().with_time_budget(Duration::from_millis(1));
+        let err = handle.query_full(q.row(0).to_vec(), params).unwrap_err();
+        let over = err
+            .downcast_ref::<OverloadedError>()
+            .expect("shed must carry a typed OverloadedError");
+        assert_eq!(over.queue_depth, 0);
+        assert!(over.projected_wait >= Duration::from_millis(10));
+        assert_eq!(over.time_budget, Some(Duration::from_millis(1)));
+        assert_eq!(handle.metrics().shed, 1);
+        // A budget-less request on the same server is admitted fine.
+        assert_eq!(handle.query(q.row(0).to_vec()).unwrap().len(), 5);
+    }
+
+    #[test]
+    fn queue_wait_near_budget_degrades_or_completes_never_lies() {
+        // Budget barely above the batch window: depending on scheduling
+        // the job either survives the queue (complete or deadline-cut
+        // answer) or expires in it (empty BudgetExhausted). Either way
+        // the envelope must say what happened — this asserts the
+        // invariant, not the timing.
+        let eng = engine();
+        let policy = BatchPolicy::new(10_000, Duration::from_millis(30));
+        let handle = QueryServer::spawn(eng.clone(), policy);
+        let q = synthetic::gaussian_queries(1, 8, 10);
+        let params = QueryParams::new().with_time_budget(Duration::from_millis(31));
+        let resp = handle.query_full(q.row(0).to_vec(), params).unwrap();
+        match &resp.degraded {
+            None => {
+                let want = eng.search_with(q.row(0), &QueryParams::default()).unwrap();
+                assert_eq!(resp.results, want, "untagged answer must be the complete one");
+            }
+            Some(tag) => {
+                assert!(
+                    tag.reason == DegradeReason::BudgetExhausted
+                        || tag.reason == DegradeReason::Deadline,
+                    "unexpected tag {tag:?}"
+                );
+                if tag.reason == DegradeReason::BudgetExhausted {
+                    assert!(resp.results.is_empty(), "queue expiry never ran the engine");
+                }
+                assert_eq!(handle.metrics().queries_degraded, 1);
+            }
+        }
+    }
+
+    #[test]
+    fn generous_budget_through_server_is_answer_invariant() {
+        let eng = engine();
+        let policy = BatchPolicy::new(8, Duration::from_millis(2));
+        let handle = QueryServer::spawn(eng.clone(), policy);
+        let q = synthetic::gaussian_queries(4, 8, 11);
+        let params = QueryParams::new().with_time_budget(Duration::from_secs(600));
+        for qi in 0..q.len() {
+            let resp = handle.query_full(q.row(qi).to_vec(), params).unwrap();
+            assert!(resp.degraded.is_none(), "query {qi} spuriously degraded");
+            let want = eng.search(q.row(qi)).unwrap();
+            assert_eq!(resp.results, want, "query {qi}");
+        }
+        assert_eq!(handle.metrics().shed, 0);
     }
 }

@@ -8,10 +8,24 @@
 //!   header. Still readable; always loads as a `RangeLshIndex<u64>`.
 //! - **v2** (`RLSHIDX\x02`): adds a `code_words` header (u32: 1, 2 or 4)
 //!   right after the magic; per-range codes are stored as a flat little-
-//!   endian `u64` word array, `code_words` words per item. Written by
-//!   [`save_range_index`] for every width.
+//!   endian `u64` word array, `code_words` words per item.
+//! - **v3** (`RLSHIDX\x03`): same payload as v2 split into four
+//!   CRC32-trailed sections — *header* (magic through `n_items`),
+//!   *projection*, *ranges*, *MIH* — each followed by the little-endian
+//!   digest of its bytes. Written by [`save_range_index`] for every
+//!   width, atomically: the file is staged as a `.tmp` sibling, fsynced,
+//!   and renamed into place, so a crashed save never leaves a torn
+//!   `.rlsh` behind.
 //!
-//! Loading a wide (v2, `code_words > 1`) file through the scalar
+//! On load, a checksum mismatch in a *required* section (header,
+//! projection, ranges) fails with an error naming the section; a bad
+//! *MIH* section — optional acceleration state — is dropped with a
+//! warning and the index loads without tables, which callers rebuild via
+//! [`RangeLshIndex::enable_mih`] (rebuild-on-demand). Every version is
+//! read to strict EOF: bytes past the last section are trailing garbage
+//! and rejected, not silently ignored.
+//!
+//! Loading a wide (`code_words > 1`) file through the scalar
 //! [`load_range_index`] fails with a clear error naming the stored width;
 //! [`load_any_range_index`] dispatches on the header and returns the
 //! matching monomorphized index wrapped in [`AnyRangeLshIndex`].
@@ -23,19 +37,18 @@
 //!
 //! ## Optional MIH section
 //!
-//! After the ranges, v2 files may carry the prebuilt multi-index Hamming
-//! chunk tables (see [`crate::index::mih`]): a tag byte (0 = absent,
-//! 1 = present; clean EOF = absent, which is what v1 and older v2 files
-//! hit), then `n_ranges` (u32), the per-range hash bit width (u32), and
-//! per range the CSR `offsets` / `values` arrays. The section is
-//! validated against the header on load (range count, bit width, CSR
-//! structure) and rejected with a clear error on any mismatch; files
-//! without it simply load without MIH tables — callers that want MIH
-//! rebuild them via [`RangeLshIndex::enable_mih`].
+//! After the ranges, v2/v3 files may carry the prebuilt multi-index
+//! Hamming chunk tables (see [`crate::index::mih`]): a tag byte (0 =
+//! absent, 1 = present; in v1/v2 a clean EOF also means absent), then
+//! `n_ranges` (u32), the per-range hash bit width (u32), and per range
+//! the CSR `offsets` / `values` arrays. The section is validated against
+//! the header on load (range count, bit width, CSR structure); v1/v2
+//! files reject a malformed section outright, v3 files degrade it to
+//! rebuild-on-demand as described above.
 
 use std::fs::File;
-use std::io::{BufReader, BufWriter, Read, Write};
-use std::path::Path;
+use std::io::{self, BufReader, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use anyhow::{ensure, Context};
@@ -50,6 +63,7 @@ use crate::Result;
 
 const MAGIC_V1: &[u8; 8] = b"RLSHIDX\x01";
 const MAGIC_V2: &[u8; 8] = b"RLSHIDX\x02";
+const MAGIC_V3: &[u8; 8] = b"RLSHIDX\x03";
 
 /// A loaded RANGE-LSH index of whatever code width the file declares.
 pub enum AnyRangeLshIndex {
@@ -78,20 +92,52 @@ impl AnyRangeLshIndex {
     }
 }
 
-/// Write `index` to `path` (always the v2 format, with the width header).
+/// Write `index` to `path` (always the v3 format: width header, four
+/// CRC32-trailed sections). The write is atomic: bytes are staged in a
+/// `.tmp` sibling, fsynced, and renamed over `path` — a crash mid-save
+/// leaves the previous file (or nothing) in place, never a torn index.
 pub fn save_range_index<C: CodeWord>(
     index: &RangeLshIndex<C>,
     path: impl AsRef<Path>,
 ) -> Result<()> {
     let path = path.as_ref();
-    let mut w = BufWriter::new(
-        File::create(path).with_context(|| format!("creating {}", path.display()))?,
-    );
-    w.write_all(MAGIC_V2)?;
+    let tmp = tmp_sibling(path);
+    match write_v3(index, &tmp) {
+        Ok(()) => std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming {} into place", tmp.display())),
+        Err(e) => {
+            let _ = std::fs::remove_file(&tmp);
+            Err(e)
+        }
+    }
+}
+
+/// `<path>.tmp`, next to the target so the rename stays within one
+/// filesystem (rename across mount points is not atomic — or possible).
+fn tmp_sibling(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    PathBuf::from(os)
+}
+
+fn write_v3<C: CodeWord>(index: &RangeLshIndex<C>, tmp: &Path) -> Result<()> {
+    let file =
+        File::create(tmp).with_context(|| format!("creating {}", tmp.display()))?;
+    let mut w = HashingWriter::new(BufWriter::new(file));
+    // Header section (the magic and width are covered by its digest).
+    w.write_all(MAGIC_V3)?;
     write_u32(&mut w, C::WORDS as u32)?;
-    write_params_and_ranges(index, &mut w)?;
+    write_params(index, &mut w)?;
+    w.emit_section_crc()?;
+    write_projection(index, &mut w)?;
+    w.emit_section_crc()?;
+    write_ranges(index, &mut w)?;
+    w.emit_section_crc()?;
     write_mih_section(index, &mut w)?;
+    w.emit_section_crc()?;
     w.flush()?;
+    // Durability before the rename publishes the file.
+    w.get_ref().get_ref().sync_all().with_context(|| format!("syncing {}", tmp.display()))?;
     Ok(())
 }
 
@@ -117,10 +163,7 @@ fn write_mih_section<C: CodeWord>(
     Ok(())
 }
 
-fn write_params_and_ranges<C: CodeWord>(
-    index: &RangeLshIndex<C>,
-    w: &mut impl Write,
-) -> Result<()> {
+fn write_params<C: CodeWord>(index: &RangeLshIndex<C>, w: &mut impl Write) -> Result<()> {
     let p = index.params();
     write_u32(w, p.code_bits as u32)?;
     write_u32(w, p.n_partitions as u32)?;
@@ -130,12 +173,17 @@ fn write_params_and_ranges<C: CodeWord>(
     })?;
     write_f32(w, p.epsilon)?;
     write_u64(w, index.len() as u64)?;
-    // Projection panel.
+    Ok(())
+}
+
+fn write_projection<C: CodeWord>(index: &RangeLshIndex<C>, w: &mut impl Write) -> Result<()> {
     let proj = index.projection();
     write_u32(w, proj.dim_in() as u32)?;
     write_u32(w, proj.width() as u32)?;
-    write_f32s(w, proj.flat())?;
-    // Ranges.
+    write_f32s(w, proj.flat())
+}
+
+fn write_ranges<C: CodeWord>(index: &RangeLshIndex<C>, w: &mut impl Write) -> Result<()> {
     write_u32(w, index.n_ranges() as u32)?;
     index.for_each_range(|part, table| -> Result<()> {
         write_f32(w, part.u_max)?;
@@ -153,8 +201,19 @@ fn write_params_and_ranges<C: CodeWord>(
         write_u64s(w, &words)?;
         write_u32s(w, &ids)?;
         Ok(())
-    })?;
-    Ok(())
+    })
+}
+
+/// The v1/v2 body: params, projection, ranges back to back with no
+/// checksums (kept for the legacy-writer test helpers).
+#[cfg(test)]
+fn write_params_and_ranges<C: CodeWord>(
+    index: &RangeLshIndex<C>,
+    w: &mut impl Write,
+) -> Result<()> {
+    write_params(index, w)?;
+    write_projection(index, w)?;
+    write_ranges(index, w)
 }
 
 /// Load an index previously written by [`save_range_index`] with `u64`
@@ -176,23 +235,25 @@ pub fn load_range_index(path: impl AsRef<Path>) -> Result<RangeLshIndex<u64>> {
 /// Load an index of any code width, dispatching on the file header.
 pub fn load_any_range_index(path: impl AsRef<Path>) -> Result<AnyRangeLshIndex> {
     let path = path.as_ref();
-    let mut r = BufReader::new(
+    let mut r = HashingReader::new(BufReader::new(
         File::open(path).with_context(|| format!("opening {}", path.display()))?,
-    );
+    ));
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)
         .with_context(|| format!("{}: truncated header", path.display()))?;
-    let code_words = if &magic == MAGIC_V1 {
-        1 // legacy single-word format, no width header
+    let (version, code_words) = if &magic == MAGIC_V1 {
+        (1u8, 1) // legacy single-word format, no width header
     } else if &magic == MAGIC_V2 {
-        read_u32(&mut r)? as usize
+        (2, read_u32(&mut r)? as usize)
+    } else if &magic == MAGIC_V3 {
+        (3, read_u32(&mut r)? as usize)
     } else {
         anyhow::bail!("{}: not a rangelsh index", path.display());
     };
     match code_words {
-        1 => Ok(AnyRangeLshIndex::W64(read_body::<u64>(&mut r, path)?)),
-        2 => Ok(AnyRangeLshIndex::W128(read_body::<Code128>(&mut r, path)?)),
-        4 => Ok(AnyRangeLshIndex::W256(read_body::<Code256>(&mut r, path)?)),
+        1 => Ok(AnyRangeLshIndex::W64(read_body::<u64, _>(&mut r, path, version)?)),
+        2 => Ok(AnyRangeLshIndex::W128(read_body::<Code128, _>(&mut r, path, version)?)),
+        4 => Ok(AnyRangeLshIndex::W256(read_body::<Code256, _>(&mut r, path, version)?)),
         other => anyhow::bail!(
             "{}: unsupported code width {} words (supported: 1, 2, 4)",
             path.display(),
@@ -201,21 +262,32 @@ pub fn load_any_range_index(path: impl AsRef<Path>) -> Result<AnyRangeLshIndex> 
     }
 }
 
-fn read_body<C: CodeWord>(r: &mut impl Read, path: &Path) -> Result<RangeLshIndex<C>> {
+fn read_body<C: CodeWord, R: Read>(
+    r: &mut HashingReader<R>,
+    path: &Path,
+    version: u8,
+) -> Result<RangeLshIndex<C>> {
+    let checksummed = version >= 3;
     let code_bits = read_u32(r)? as usize;
     let n_partitions = read_u32(r)? as usize;
-    let scheme = match read_u8(r)? {
+    let scheme_tag = read_u8(r)?;
+    let epsilon = read_f32(r)?;
+    let n_items = read_u64(r)? as usize;
+    if checksummed {
+        // Verify before interpreting: a corrupt v3 header fails here with
+        // the section named, not on a downstream plausibility check.
+        r.verify_section_crc("header")
+            .with_context(|| path.display().to_string())?;
+    }
+    let scheme = match scheme_tag {
         0 => PartitionScheme::Percentile,
         1 => PartitionScheme::UniformRange,
         other => anyhow::bail!("unknown partition scheme tag {other}"),
     };
-    let epsilon = read_f32(r)?;
-    let n_items = read_u64(r)? as usize;
-    let dim_in = read_u32(r)? as usize;
-    let width = read_u32(r)? as usize;
-    // Validate header fields here so corrupt files fail with a Result
-    // error instead of tripping downstream asserts (Projection::from_flat,
-    // MetricOrder::build, partition_id_bits) and aborting the process.
+    // Validate header fields here so corrupt (v1/v2, checksum-less) files
+    // fail with a Result error instead of tripping downstream asserts
+    // (Projection::from_flat, MetricOrder::build, partition_id_bits) and
+    // aborting the process.
     ensure!(
         n_partitions >= 1,
         "{}: implausible partition count 0 (corrupt header?)",
@@ -226,24 +298,33 @@ fn read_body<C: CodeWord>(r: &mut impl Read, path: &Path) -> Result<RangeLshInde
         "{}: implausible epsilon {epsilon} (corrupt header?)",
         path.display()
     );
+    let dim_in = read_u32(r)? as usize;
+    let width = read_u32(r)? as usize;
     ensure!(
         dim_in >= 1 && width >= 1 && width <= MAX_CODE_BITS,
         "{}: implausible projection shape {dim_in} x {width} (corrupt header?)",
         path.display()
     );
-    let flat = read_f32s(r)?;
+    let flat =
+        read_f32s(r).with_context(|| format!("{}: projection section", path.display()))?;
     ensure!(flat.len() == dim_in * width, "projection size mismatch");
+    if checksummed {
+        r.verify_section_crc("projection")
+            .with_context(|| path.display().to_string())?;
+    }
     let proj = Arc::new(Projection::from_flat(dim_in, width, flat));
     let n_ranges = read_u32(r)? as usize;
     let params = RangeLshParams::new(code_bits, n_partitions)
         .with_scheme(scheme)
         .with_epsilon(epsilon);
     let mut ranges = Vec::with_capacity(n_ranges);
-    for _ in 0..n_ranges {
+    for j in 0..n_ranges {
         let u_max = read_f32(r)?;
         let u_min = read_f32(r)?;
-        let words = read_u64s(r)?;
-        let ids = read_u32s(r)?;
+        let words = read_u64s(r)
+            .with_context(|| format!("{}: ranges section, range {j}", path.display()))?;
+        let ids = read_u32s(r)
+            .with_context(|| format!("{}: ranges section, range {j}", path.display()))?;
         ensure!(
             words.len() == ids.len() * C::WORDS,
             "{}: code words not a multiple of {} per id",
@@ -253,14 +334,50 @@ fn read_body<C: CodeWord>(r: &mut impl Read, path: &Path) -> Result<RangeLshInde
         let codes: Vec<C> = words.chunks_exact(C::WORDS).map(C::from_words).collect();
         ranges.push((Partition { ids, u_max, u_min }, codes));
     }
+    if checksummed {
+        r.verify_section_crc("ranges")
+            .with_context(|| path.display().to_string())?;
+    }
     let mut index = RangeLshIndex::from_parts(params, proj, n_items, ranges)?;
-    read_mih_section(r, path, &mut index)?;
+    if checksummed {
+        // v3: the MIH section is optional acceleration state — any defect
+        // in it (bad checksum, structural mismatch, truncation) degrades
+        // to loading without tables, rebuilt on demand via `enable_mih`.
+        // The stream position is indeterminate after a failed read, so
+        // the strict-EOF check only runs when the section parsed.
+        match read_mih_checked(r, path, &mut index) {
+            Ok(()) => ensure_eof(r, path)?,
+            Err(e) => eprintln!(
+                "warning: {}: dropping MIH section ({e:#}); \
+                 tables will be rebuilt on demand",
+                path.display()
+            ),
+        }
+    } else {
+        read_mih_section(r, path, &mut index)?;
+        ensure_eof(r, path)?;
+    }
     Ok(index)
 }
 
-/// Read the optional trailing MIH section. A clean EOF right after the
-/// ranges means the section is absent (v1 files and v2 files written
-/// before the section existed) — not an error.
+/// Strict end-of-file: any byte past the last section is trailing
+/// garbage — a truncated download glued to another file, a partial
+/// overwrite — and the load refuses it rather than silently ignoring it.
+fn ensure_eof(r: &mut impl Read, path: &Path) -> Result<()> {
+    let mut probe = [0u8; 1];
+    match r.read_exact(&mut probe) {
+        Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => Ok(()),
+        Ok(()) => anyhow::bail!(
+            "{}: trailing garbage after the index payload",
+            path.display()
+        ),
+        Err(e) => Err(e.into()),
+    }
+}
+
+/// Read the optional trailing MIH section of a v1/v2 file. A clean EOF
+/// right after the ranges means the section is absent (v1 files and v2
+/// files written before the section existed) — not an error.
 fn read_mih_section<C: CodeWord>(
     r: &mut impl Read,
     path: &Path,
@@ -275,34 +392,65 @@ fn read_mih_section<C: CodeWord>(
     match tag[0] {
         0 => Ok(()),
         1 => {
-            let sect_ranges = read_u32(r)? as usize;
-            let sect_bits = read_u32(r)? as usize;
-            ensure!(
-                sect_ranges == index.n_ranges(),
-                "{}: MIH section covers {sect_ranges} ranges but the index has {} \
-                 (corrupt section?)",
-                path.display(),
-                index.n_ranges()
-            );
-            let hash_bits = index.params().hash_bits();
-            ensure!(
-                sect_bits == hash_bits,
-                "{}: MIH section built for {sect_bits}-bit codes but the header's \
-                 code_bits implies {hash_bits} hash bits per range (corrupt section?)",
-                path.display()
-            );
-            let mut tables = Vec::with_capacity(sect_ranges);
-            for j in 0..sect_ranges {
-                let offsets = read_u32s(r)?;
-                let values = read_u32s(r)?;
-                let table = MihTable::from_parts(sect_bits, offsets, values, index.sub_table(j))
-                    .with_context(|| format!("{}: MIH section, range {j}", path.display()))?;
-                tables.push(table);
-            }
+            let tables = read_mih_tables(r, path, index)?;
             index.set_mih(tables)
         }
         other => anyhow::bail!("{}: unknown MIH section tag {other}", path.display()),
     }
+}
+
+/// Read the v3 MIH section: the tag byte is mandatory and the section is
+/// CRC-verified *before* the tables are installed, so a torn section
+/// never half-installs.
+fn read_mih_checked<C: CodeWord, R: Read>(
+    r: &mut HashingReader<R>,
+    path: &Path,
+    index: &mut RangeLshIndex<C>,
+) -> Result<()> {
+    match read_u8(r)? {
+        0 => {
+            r.verify_section_crc("MIH")?;
+            Ok(())
+        }
+        1 => {
+            let tables = read_mih_tables(r, path, index)?;
+            r.verify_section_crc("MIH")?;
+            index.set_mih(tables)
+        }
+        other => anyhow::bail!("{}: unknown MIH section tag {other}", path.display()),
+    }
+}
+
+fn read_mih_tables<C: CodeWord>(
+    r: &mut impl Read,
+    path: &Path,
+    index: &RangeLshIndex<C>,
+) -> Result<Vec<MihTable>> {
+    let sect_ranges = read_u32(r)? as usize;
+    let sect_bits = read_u32(r)? as usize;
+    ensure!(
+        sect_ranges == index.n_ranges(),
+        "{}: MIH section covers {sect_ranges} ranges but the index has {} \
+         (corrupt section?)",
+        path.display(),
+        index.n_ranges()
+    );
+    let hash_bits = index.params().hash_bits();
+    ensure!(
+        sect_bits == hash_bits,
+        "{}: MIH section built for {sect_bits}-bit codes but the header's \
+         code_bits implies {hash_bits} hash bits per range (corrupt section?)",
+        path.display()
+    );
+    let mut tables = Vec::with_capacity(sect_ranges);
+    for j in 0..sect_ranges {
+        let offsets = read_u32s(r)?;
+        let values = read_u32s(r)?;
+        let table = MihTable::from_parts(sect_bits, offsets, values, index.sub_table(j))
+            .with_context(|| format!("{}: MIH section, range {j}", path.display()))?;
+        tables.push(table);
+    }
+    Ok(tables)
 }
 
 #[cfg(test)]
@@ -338,11 +486,25 @@ mod tests {
         Ok(())
     }
 
+    /// Write `index` in the legacy v2 layout (width header, no checksums,
+    /// no MIH section) — what pre-v3 builds produced.
+    fn save_v2(index: &RangeLshIndex<u64>, path: &Path) -> Result<()> {
+        let mut w = BufWriter::new(File::create(path)?);
+        w.write_all(MAGIC_V2)?;
+        write_u32(&mut w, 1)?;
+        write_params_and_ranges(index, &mut w)?;
+        w.flush()?;
+        Ok(())
+    }
+
     #[test]
     fn round_trip_preserves_probe_behaviour() {
         let (_, idx) = build_one();
         let tmp = TempPath::new("rlsh");
         save_range_index(&idx, tmp.path()).unwrap();
+        // The atomic save staged through a sibling and renamed: no .tmp
+        // left behind.
+        assert!(!tmp_sibling(tmp.path()).exists(), "stale staging file");
         let loaded = load_range_index(tmp.path()).unwrap();
 
         assert_eq!(loaded.len(), idx.len());
@@ -491,31 +653,158 @@ mod tests {
 
     #[test]
     fn files_without_mih_section_load_without_tables() {
-        // v2 without the section (tag 0) and v1 (clean EOF) both load
-        // MIH-less; callers rebuild via enable_mih when they want it.
+        // v3 without tables (tag 0), v2 (clean EOF) and v1 (clean EOF)
+        // all load MIH-less; callers rebuild via enable_mih on demand.
         let (_, idx) = build_one();
         let tmp = TempPath::new("rlsh-nomih");
         save_range_index(&idx, tmp.path()).unwrap();
         assert!(!load_range_index(tmp.path()).unwrap().has_mih());
+        let tmp_v2 = TempPath::new("rlsh-nomih-v2");
+        save_v2(&idx, tmp_v2.path()).unwrap();
+        assert!(!load_range_index(tmp_v2.path()).unwrap().has_mih());
         let tmp_v1 = TempPath::new("rlsh-nomih-v1");
         save_v1(&idx, tmp_v1.path()).unwrap();
         assert!(!load_range_index(tmp_v1.path()).unwrap().has_mih());
     }
 
-    /// A saved MIH-less v2 file with its trailing `0` tag stripped, ready
-    /// for a hand-built MIH section to be appended.
-    fn v2_bytes_without_tail_tag(idx: &RangeLshIndex<u64>) -> Vec<u8> {
+    #[test]
+    fn legacy_v2_files_still_load() {
+        let (_, idx) = build_one();
+        let tmp = TempPath::new("rlsh-v2");
+        save_v2(&idx, tmp.path()).unwrap();
+        let loaded = load_range_index(tmp.path()).unwrap();
+        assert_eq!(loaded.len(), idx.len());
+        assert_eq!(loaded.u_maxes(), idx.u_maxes());
+        let q = synthetic::gaussian_queries(3, 8, 5);
+        for qi in 0..q.len() {
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            idx.probe(q.row(qi), 50, &mut a);
+            loaded.probe(q.row(qi), 50, &mut b);
+            assert_eq!(a, b, "query {qi}");
+        }
+    }
+
+    #[test]
+    fn rejects_trailing_garbage_every_version() {
+        // Regression: padded buffers (a partial overwrite, a glued-on
+        // download) must be rejected, not silently accepted. Zero padding
+        // is the sneakiest case for v1/v2 — its first byte looks like an
+        // absent-MIH tag — so both paddings are exercised per version.
+        let (_, idx) = build_one();
+        let save_as: [(&str, fn(&RangeLshIndex<u64>, &Path) -> Result<()>); 3] = [
+            ("v1", save_v1),
+            ("v2", save_v2),
+            ("v3", |i, p| save_range_index(i, p)),
+        ];
+        for (version, save) in save_as {
+            let tmp = TempPath::new("rlsh-padded");
+            save(&idx, tmp.path()).unwrap();
+            let clean = std::fs::read(tmp.path()).unwrap();
+            for (kind, pad) in [("zeros", &[0u8; 8][..]), ("text", b"garbage!")] {
+                let mut padded = clean.clone();
+                padded.extend_from_slice(pad);
+                std::fs::write(tmp.path(), &padded).unwrap();
+                let err = load_range_index(tmp.path())
+                    .expect_err(&format!("{version}+{kind} padding must be rejected"));
+                let msg = format!("{err:#}");
+                assert!(
+                    msg.contains("trailing garbage") || msg.contains("MIH"),
+                    "{version}+{kind}: unhelpful error: {msg}"
+                );
+            }
+            // The pristine bytes still load.
+            std::fs::write(tmp.path(), &clean).unwrap();
+            load_range_index(tmp.path())
+                .unwrap_or_else(|e| panic!("{version} clean reload: {e:#}"));
+        }
+    }
+
+    #[test]
+    fn bit_flip_in_required_section_names_the_section() {
+        let (_, idx) = build_one();
+        let tmp = TempPath::new("rlsh-flip");
+        save_range_index(&idx, tmp.path()).unwrap();
+        let clean = std::fs::read(tmp.path()).unwrap();
+        // v3 layout offsets: header = magic 8 + code_words 4 + params 21,
+        // CRC at 33..37; projection floats start at 53; the MIH-less tail
+        // is ranges CRC (4) + tag (1) + MIH CRC (4) = last 9 bytes.
+        assert!(clean.len() > 110, "layout assumption broken: {}", clean.len());
+        let cases = [
+            (16usize, "header"), // n_partitions field
+            (100, "projection"), // inside the float panel
+            (clean.len() - 10, "ranges"), // last payload byte of ranges
+        ];
+        for (offset, section) in cases {
+            let mut bad = clean.clone();
+            bad[offset] ^= 0x40;
+            std::fs::write(tmp.path(), &bad).unwrap();
+            let err = load_range_index(tmp.path())
+                .expect_err(&format!("bit flip at {offset} must be rejected"));
+            let msg = format!("{err:#}");
+            assert!(msg.contains(section), "flip at {offset}: wrong section in: {msg}");
+            assert!(msg.contains("checksum mismatch"), "flip at {offset}: {msg}");
+        }
+    }
+
+    #[test]
+    fn corrupt_mih_section_degrades_to_rebuild_on_demand() {
+        // A bit flip in the optional MIH section must not kill the load:
+        // the index comes back MIH-less and probes exactly like a fresh
+        // build without tables.
+        let (_, mut idx) = build_one();
+        idx.enable_mih();
+        let tmp = TempPath::new("rlsh-mihflip");
+        save_range_index(&idx, tmp.path()).unwrap();
+        let clean = std::fs::read(tmp.path()).unwrap();
+        let (_, oracle) = build_one(); // same seeds, no MIH
+        for offset in [clean.len() - 3, clean.len() - 20] {
+            let mut bad = clean.clone();
+            bad[offset] ^= 0x08;
+            std::fs::write(tmp.path(), &bad).unwrap();
+            let loaded = load_range_index(tmp.path())
+                .unwrap_or_else(|e| panic!("MIH flip at {offset} must degrade, got: {e:#}"));
+            assert!(!loaded.has_mih(), "flip at {offset}: corrupt tables installed");
+            let q = synthetic::gaussian_queries(3, 8, 6);
+            for qi in 0..q.len() {
+                let (mut a, mut b) = (Vec::new(), Vec::new());
+                oracle.probe(q.row(qi), 50, &mut a);
+                loaded.probe(q.row(qi), 50, &mut b);
+                assert_eq!(a, b, "flip at {offset}, query {qi}");
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_file_names_the_failing_section() {
+        let (_, idx) = build_one();
+        let tmp = TempPath::new("rlsh-trunc");
+        save_range_index(&idx, tmp.path()).unwrap();
+        let clean = std::fs::read(tmp.path()).unwrap();
+        // Mid-projection cut.
+        std::fs::write(tmp.path(), &clean[..60]).unwrap();
+        let err = load_range_index(tmp.path()).unwrap_err();
+        assert!(format!("{err:#}").contains("projection"), "{err:#}");
+        // Mid-ranges cut (drop the 9-byte tail plus some range payload).
+        std::fs::write(tmp.path(), &clean[..clean.len() - 40]).unwrap();
+        let err = load_range_index(tmp.path()).unwrap_err();
+        assert!(format!("{err:#}").contains("ranges"), "{err:#}");
+        // A cut inside the header is still an error (io-level is fine).
+        std::fs::write(tmp.path(), &clean[..20]).unwrap();
+        assert!(load_range_index(tmp.path()).is_err());
+    }
+
+    /// A MIH-less v2 file's bytes (no tag at all — legacy clean-EOF
+    /// layout), ready for a hand-built MIH section to be appended.
+    fn v2_bytes_without_mih(idx: &RangeLshIndex<u64>) -> Vec<u8> {
         let tmp = TempPath::new("rlsh-tailless");
-        save_range_index(idx, tmp.path()).unwrap();
-        let mut bytes = std::fs::read(tmp.path()).unwrap();
-        assert_eq!(bytes.pop(), Some(0), "expected an absent-MIH tag byte");
-        bytes
+        save_v2(idx, tmp.path()).unwrap();
+        std::fs::read(tmp.path()).unwrap()
     }
 
     #[test]
     fn rejects_mih_section_disagreeing_with_header() {
         let (_, idx) = build_one();
-        let base = v2_bytes_without_tail_tag(&idx);
+        let base = v2_bytes_without_mih(&idx);
         let hash_bits = idx.params().hash_bits() as u32;
 
         // Range count mismatch.

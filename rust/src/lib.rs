@@ -69,3 +69,8 @@ pub type ItemId = u32;
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;
+
+/// Crate-wide error type (vendored `anyhow`). Typed errors such as
+/// [`coordinator::OverloadedError`] and [`coordinator::ShardLossError`]
+/// travel through it and are recovered with [`Error::downcast_ref`].
+pub use anyhow::Error;

@@ -19,7 +19,10 @@ use anyhow::{bail, Context};
 
 use rangelsh::config::{Config, DatasetKind, IndexAlgo, ProbeBackend};
 use rangelsh::coordinator::server::drive_any_with;
-use rangelsh::coordinator::{AnyEngine, BatchPolicy, QueryParams, SearchEngine};
+use rangelsh::coordinator::{
+    AnyEngine, BatchPolicy, DegradeReason, QueryParams, RouterPolicy, SearchEngine, Shard,
+    ShardedRouter,
+};
 use rangelsh::data::{load_dataset, save_dataset, synthetic, Dataset};
 use rangelsh::eval::harness::{format_probe_table, ground_truth, run_curve, CurveSpec};
 use rangelsh::eval::recall::geometric_checkpoints;
@@ -51,6 +54,11 @@ SUBCOMMANDS:
              [--probe-backend auto|counting_sort|mih]
              [--k K] [--budget B] [--min-candidates M] [--extend-step S]
              (per-request QueryParams overriding the [serve] defaults)
+             [--deadline-ms MS]  per-query time budget: an expired query
+             returns its best-so-far top-k tagged degraded, never an error
+             [--shards N] [--min-shards M]  fan out over N row-sliced
+             shards with fault isolation; a merge needs >= M live shards
+             (default: all)
   artifacts  [--dir DIR]
 ";
 
@@ -218,8 +226,9 @@ fn build(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Build a RANGE-LSH index at one code width and persist it (v2 format,
-/// width header included). When the `[serve]` probe backend resolves to
+/// Build a RANGE-LSH index at one code width and persist it (v3 format:
+/// checksummed sections, atomic temp-file + rename write). When the
+/// `[serve]` probe backend resolves to
 /// MIH at this width, the chunk tables are built now and saved in the
 /// file's optional MIH section, so `serve --load` skips the rebuild.
 fn build_and_save<C: CodeWord>(
@@ -382,6 +391,12 @@ fn serve(args: &Args) -> Result<()> {
     if let Some(backend) = args.opt("probe-backend") {
         cfg.serve.probe_backend = backend.parse()?;
     }
+    // --shards N: the fault-isolated multi-shard serving story takes a
+    // separate path (router fan-out instead of the batch server).
+    if let Some(n_shards) = args.opt_some::<usize>("shards")? {
+        anyhow::ensure!(n_shards >= 1, "--shards must be >= 1");
+        return serve_sharded(args, &cfg, n_shards);
+    }
     let n_queries: usize = args.opt_parse("n-queries", 2000)?;
     let clients: usize = args.opt_parse("clients", 16)?;
     let artifacts = PathBuf::from(args.opt("artifacts").unwrap_or(DEFAULT_ARTIFACT_DIR));
@@ -482,12 +497,7 @@ fn serve(args: &Args) -> Result<()> {
     // Per-request overrides of the [serve] defaults — the knobs every
     // request could set individually through `ServerHandle::query_with`;
     // the CLI applies one override to the whole workload.
-    let qp = QueryParams {
-        top_k: args.opt_some("k")?,
-        probe_budget: args.opt_some("budget")?,
-        min_candidates: args.opt_some("min-candidates")?,
-        extend_step: args.opt_some("extend-step")?,
-    };
+    let qp = query_params_from(args)?;
     if !qp.is_default() {
         println!("per-request params: {qp:?}");
     }
@@ -500,7 +510,7 @@ fn serve(args: &Args) -> Result<()> {
     let snap = engine.metrics().snapshot();
     println!(
         "served {} queries in {:.2}s — {:.0} qps, p50 {}us, p95 {}us, p99 {}us, \
-         mean probed {:.0}, mean batch {:.1}",
+         mean probed {:.0}, mean batch {:.1}, degraded {}, shed {}",
         results.len(),
         wall.as_secs_f64(),
         results.len() as f64 / wall.as_secs_f64(),
@@ -509,6 +519,146 @@ fn serve(args: &Args) -> Result<()> {
         snap.p99_us,
         snap.mean_probed,
         snap.mean_batch_rows,
+        snap.queries_degraded,
+        snap.shed,
+    );
+    Ok(())
+}
+
+/// The per-request override flags shared by the single-engine and sharded
+/// serve paths (`--k` / `--budget` / `--min-candidates` / `--extend-step`
+/// / `--deadline-ms`).
+fn query_params_from(args: &Args) -> Result<QueryParams> {
+    Ok(QueryParams {
+        top_k: args.opt_some("k")?,
+        probe_budget: args.opt_some("budget")?,
+        min_candidates: args.opt_some("min-candidates")?,
+        extend_step: args.opt_some("extend-step")?,
+        time_budget: args.opt_some::<u64>("deadline-ms")?.map(Duration::from_millis),
+    })
+}
+
+/// `serve --shards N`: fan the workload over `N` row-sliced shards, each
+/// with its own RANGE-LSH index and engine (Alg. 1 per sub-dataset owner),
+/// behind the fault-isolating [`ShardedRouter`]. Queries go straight to
+/// the router (no batch server: fan-out parallelism replaces batching);
+/// degraded merges are counted, not hidden.
+fn serve_sharded(args: &Args, cfg: &Config, n_shards: usize) -> Result<()> {
+    anyhow::ensure!(args.opt("load").is_none(), "--shards serves fresh builds only (no --load)");
+    anyhow::ensure!(
+        matches!(cfg.index.algo, IndexAlgo::RangeLsh),
+        "--shards serves algo range_lsh (got {})",
+        cfg.index.algo
+    );
+    let params = RangeLshParams::new(cfg.serve.code_bits, cfg.index.n_partitions)
+        .with_scheme(cfg.index.scheme)
+        .with_epsilon(cfg.index.epsilon);
+    if cfg.serve.code_bits <= 64 {
+        serve_sharded_width::<u64>(args, cfg, n_shards, params, 64)
+    } else if cfg.serve.code_bits <= 128 {
+        serve_sharded_width::<Code128>(args, cfg, n_shards, params, params.hash_bits())
+    } else {
+        serve_sharded_width::<Code256>(args, cfg, n_shards, params, params.hash_bits())
+    }
+}
+
+fn serve_sharded_width<C: CodeWord>(
+    args: &Args,
+    cfg: &Config,
+    n_shards: usize,
+    params: RangeLshParams,
+    width: usize,
+) -> Result<()> {
+    let items = cfg.dataset.build_items();
+    let (dim, n) = (items.dim(), items.len());
+    anyhow::ensure!(n >= n_shards, "{n} items cannot fill {n_shards} shards");
+    let t0 = std::time::Instant::now();
+    let per = n.div_ceil(n_shards);
+    let mut shards = Vec::with_capacity(n_shards);
+    for s in 0..n_shards {
+        let (lo, hi) = (s * per, ((s + 1) * per).min(n));
+        if lo >= hi {
+            break;
+        }
+        let d = Arc::new(Dataset::from_flat(dim, items.flat()[lo * dim..hi * dim].to_vec()));
+        let hasher: Arc<NativeHasher<C>> =
+            Arc::new(NativeHasher::new(dim, width, cfg.index.seed + s as u64));
+        let index = Arc::new(RangeLshIndex::build(&d, hasher.as_ref(), params)?);
+        let engine = Arc::new(SearchEngine::new(index, d, hasher, cfg.serve.clone())?);
+        shards.push(Shard { engine, id_offset: lo as u32 });
+    }
+    let policy = RouterPolicy {
+        min_shards: args.opt_parse("min-shards", usize::MAX)?,
+        ..RouterPolicy::default()
+    };
+    let router =
+        Arc::new(ShardedRouter::with_policy(shards, cfg.serve.top_k, policy)?);
+    println!(
+        "sharded engine ready in {:.2}s ({} shards x ~{per} items, min_shards {})",
+        t0.elapsed().as_secs_f64(),
+        router.n_shards(),
+        router.policy().min_shards
+    );
+
+    let qp = query_params_from(args)?;
+    if !qp.is_default() {
+        println!("per-request params: {qp:?}");
+    }
+    let n_queries: usize = args.opt_parse("n-queries", 2000)?;
+    let clients: usize = args.opt_parse("clients", 16)?.max(1);
+    let queries = synthetic::gaussian_queries(n_queries, dim, cfg.dataset.seed ^ 0xDEAD);
+    let t0 = std::time::Instant::now();
+    let chunk = n_queries.div_ceil(clients);
+    let mut served = 0usize;
+    let mut degraded = [0usize; 3]; // indexed by DegradeReason severity
+    let mut failed = 0usize;
+    std::thread::scope(|scope| -> Result<()> {
+        let mut handles = Vec::new();
+        for t in 0..clients {
+            let (lo, hi) = (t * chunk, ((t + 1) * chunk).min(n_queries));
+            let (router, queries, qp) = (router.clone(), &queries, &qp);
+            handles.push(scope.spawn(move || {
+                let mut counts = (0usize, [0usize; 3], 0usize);
+                for qi in lo..hi {
+                    match router.query_full(queries.row(qi), qp) {
+                        Ok(resp) => {
+                            counts.0 += 1;
+                            if let Some(tag) = resp.degraded {
+                                counts.1[match tag.reason {
+                                    DegradeReason::BudgetExhausted => 0,
+                                    DegradeReason::Deadline => 1,
+                                    DegradeReason::ShardLoss => 2,
+                                }] += 1;
+                            }
+                        }
+                        Err(_) => counts.2 += 1,
+                    }
+                }
+                counts
+            }));
+        }
+        for h in handles {
+            let (s, d, f) = h.join().expect("client thread panicked");
+            served += s;
+            for (acc, v) in degraded.iter_mut().zip(d) {
+                *acc += v;
+            }
+            failed += f;
+        }
+        Ok(())
+    })?;
+    let wall = t0.elapsed();
+    let snap = router.metrics().snapshot();
+    println!(
+        "served {served} queries in {:.2}s — {:.0} qps; degraded: {} budget / {} deadline / \
+         {} shard-loss; failed {failed}; shard failures {}, retries {}",
+        wall.as_secs_f64(),
+        served as f64 / wall.as_secs_f64(),
+        degraded[0],
+        degraded[1],
+        degraded[2],
+        snap.shard_failures,
+        snap.retries,
     );
     Ok(())
 }

@@ -1,9 +1,102 @@
 //! Little-endian binary IO helpers for the on-disk formats
-//! (`.rdat` datasets, `.rlsh` indexes).
+//! (`.rdat` datasets, `.rlsh` indexes), plus CRC-accumulating stream
+//! wrappers for the v3 per-section checksums.
 
-use std::io::{Read, Write};
+use std::io::{self, Read, Write};
 
 use anyhow::Result;
+
+use super::crc32::Crc32;
+
+/// A `Write` adapter that CRC32s everything written through it. Call
+/// [`HashingWriter::emit_section_crc`] at a section boundary to append
+/// the digest of the bytes since the previous boundary; the 4 digest
+/// bytes bypass the hash, so reader and writer stay in lockstep.
+pub struct HashingWriter<W: Write> {
+    inner: W,
+    crc: Crc32,
+}
+
+impl<W: Write> HashingWriter<W> {
+    pub fn new(inner: W) -> Self {
+        Self { inner, crc: Crc32::new() }
+    }
+
+    /// Append the running section digest (little-endian, unhashed) and
+    /// reset the accumulator for the next section.
+    pub fn emit_section_crc(&mut self) -> Result<()> {
+        let digest = self.crc.finalize();
+        self.crc.reset();
+        self.inner.write_all(&digest.to_le_bytes())?;
+        Ok(())
+    }
+
+    pub fn get_ref(&self) -> &W {
+        &self.inner
+    }
+
+    pub fn get_mut(&mut self) -> &mut W {
+        &mut self.inner
+    }
+}
+
+impl<W: Write> Write for HashingWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        let n = self.inner.write(buf)?;
+        self.crc.update(&buf[..n]);
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+/// The read-side twin of [`HashingWriter`]: CRC32s everything read
+/// through it, and [`HashingReader::verify_section_crc`] consumes the
+/// stored digest (unhashed) and compares it against the accumulator.
+pub struct HashingReader<R: Read> {
+    inner: R,
+    crc: Crc32,
+}
+
+impl<R: Read> HashingReader<R> {
+    pub fn new(inner: R) -> Self {
+        Self { inner, crc: Crc32::new() }
+    }
+
+    /// Read the 4-byte stored digest at a section boundary, compare it to
+    /// the digest of the bytes read since the previous boundary, and
+    /// reset the accumulator. `section` names the section in the error.
+    pub fn verify_section_crc(&mut self, section: &str) -> Result<()> {
+        let computed = self.crc.finalize();
+        self.crc.reset();
+        let mut b = [0u8; 4];
+        self.inner
+            .read_exact(&mut b)
+            .map_err(|e| anyhow::anyhow!("{section} section: reading checksum: {e}"))?;
+        let stored = u32::from_le_bytes(b);
+        anyhow::ensure!(
+            computed == stored,
+            "{section} section: checksum mismatch (stored {stored:08x}, computed {computed:08x})"
+        );
+        Ok(())
+    }
+
+    /// Discard the accumulated digest (used for formats predating the
+    /// checksum trailers, where the hash is never verified).
+    pub fn reset_crc(&mut self) {
+        self.crc.reset();
+    }
+}
+
+impl<R: Read> Read for HashingReader<R> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        self.crc.update(&buf[..n]);
+        Ok(n)
+    }
+}
 
 pub fn write_u8(w: &mut impl Write, v: u8) -> Result<()> {
     w.write_all(&[v])?;
@@ -125,5 +218,39 @@ mod tests {
         let mut buf = Vec::new();
         write_u64(&mut buf, u64::MAX).unwrap();
         assert!(read_u32s(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn hashing_streams_round_trip_sections() {
+        let mut w = HashingWriter::new(Vec::new());
+        write_u32(&mut w, 0xFEED).unwrap();
+        write_f32s(&mut w, &[1.5, -2.0]).unwrap();
+        w.emit_section_crc().unwrap();
+        write_u64(&mut w, 99).unwrap();
+        w.emit_section_crc().unwrap();
+        let bytes = std::mem::take(w.get_mut());
+
+        let mut r = HashingReader::new(bytes.as_slice());
+        assert_eq!(read_u32(&mut r).unwrap(), 0xFEED);
+        assert_eq!(read_f32s(&mut r).unwrap(), vec![1.5, -2.0]);
+        r.verify_section_crc("first").unwrap();
+        assert_eq!(read_u64(&mut r).unwrap(), 99);
+        r.verify_section_crc("second").unwrap();
+    }
+
+    #[test]
+    fn hashing_reader_flags_corrupt_section() {
+        let mut w = HashingWriter::new(Vec::new());
+        write_u64(&mut w, 0xAB).unwrap();
+        w.emit_section_crc().unwrap();
+        let mut bytes = std::mem::take(w.get_mut());
+        bytes[2] ^= 0x10;
+
+        let mut r = HashingReader::new(bytes.as_slice());
+        read_u64(&mut r).unwrap();
+        let err = r.verify_section_crc("params").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("params"), "unexpected error: {msg}");
+        assert!(msg.contains("checksum mismatch"), "unexpected error: {msg}");
     }
 }

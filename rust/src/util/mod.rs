@@ -12,6 +12,7 @@
 //!   config system).
 
 pub mod bytes;
+pub mod crc32;
 pub mod fxhash;
 pub mod json;
 pub mod par;

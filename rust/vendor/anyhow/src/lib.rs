@@ -2,26 +2,41 @@
 //!
 //! Implements the subset the rangelsh crate uses: [`Error`] with a context
 //! chain, [`Result`], the [`Context`] extension trait for `Result`/`Option`,
-//! and the `anyhow!` / `bail!` / `ensure!` macros. Display semantics match
-//! upstream: `{}` prints the outermost message, `{:#}` prints the whole
-//! chain joined with `": "` (which is also the `Debug` rendering, so
-//! `unwrap()` failures show the full story).
+//! the `anyhow!` / `bail!` / `ensure!` macros, and [`Error::downcast_ref`]
+//! for typed errors (the payload survives `.context(..)` wrapping, like
+//! upstream; unlike upstream, only the root error is downcastable — context
+//! values are stored as strings). Display semantics match upstream: `{}`
+//! prints the outermost message, `{:#}` prints the whole chain joined with
+//! `": "` (which is also the `Debug` rendering, so `unwrap()` failures show
+//! the full story).
 
+use std::any::Any;
 use std::fmt;
 
 /// An error: a chain of human-readable messages, outermost context first,
-/// root cause last.
+/// root cause last, optionally carrying the typed root error for
+/// [`Error::downcast_ref`].
 pub struct Error {
     chain: Vec<String>,
+    payload: Option<Box<dyn Any + Send + Sync>>,
 }
 
 impl Error {
-    /// Build an error from a single message.
+    /// Build an error from a single message (no typed payload).
     pub fn msg<M: fmt::Display>(message: M) -> Self {
-        Self { chain: vec![message.to_string()] }
+        Self { chain: vec![message.to_string()], payload: None }
+    }
+
+    /// Build an error from a typed `std::error::Error`, keeping it
+    /// available through [`Error::downcast_ref`]. Equivalent to the
+    /// `From` conversion, spelled out for call sites that want to be
+    /// explicit about preserving the type.
+    pub fn new<E: std::error::Error + Send + Sync + 'static>(error: E) -> Self {
+        Self::from(error)
     }
 
     /// Wrap with an outer context message (what `Context::context` does).
+    /// The typed payload, if any, is preserved.
     pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
         self.chain.insert(0, context.to_string());
         self
@@ -35,6 +50,13 @@ impl Error {
     /// The innermost (root-cause) message.
     pub fn root_cause(&self) -> &str {
         self.chain.last().map(String::as_str).unwrap_or("")
+    }
+
+    /// The typed root error, when this `Error` was built from one of type
+    /// `T` (via `From`/[`Error::new`]/`?`). Context wrapping does not
+    /// erase it. `anyhow!`-style message errors return `None`.
+    pub fn downcast_ref<T: 'static>(&self) -> Option<&T> {
+        self.payload.as_ref()?.downcast_ref::<T>()
     }
 }
 
@@ -64,7 +86,7 @@ impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
             chain.push(s.to_string());
             source = s.source();
         }
-        Self { chain }
+        Self { chain, payload: Some(Box::new(e)) }
     }
 }
 
@@ -184,6 +206,26 @@ mod tests {
         }
         let e = inner().context("mid").context("top").unwrap_err();
         assert_eq!(format!("{e:#}"), "top: mid: root 42");
+    }
+
+    #[test]
+    fn downcast_ref_survives_context() {
+        #[derive(Debug, PartialEq)]
+        struct Typed(u32);
+        impl fmt::Display for Typed {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, "typed error {}", self.0)
+            }
+        }
+        impl std::error::Error for Typed {}
+
+        let e = Error::new(Typed(7)).context("outer");
+        assert_eq!(e.downcast_ref::<Typed>(), Some(&Typed(7)));
+        assert!(e.downcast_ref::<std::io::Error>().is_none());
+        assert_eq!(format!("{e:#}"), "outer: typed error 7");
+
+        // Message-only errors carry no payload.
+        assert!(anyhow!("plain").downcast_ref::<Typed>().is_none());
     }
 
     #[test]

@@ -26,6 +26,14 @@ REQUIRED_AXES = [
     "probe_backend_axis",
 ]
 
+# Optional axes: validated when present (same row shape plus extra
+# required fields), absent is fine. `degraded_axis` measures the
+# deadline-degraded serving path, which only exists on builds new enough
+# to carry time budgets — older BENCH files stay valid.
+OPTIONAL_AXES = {
+    "degraded_axis": {"deadline_us": (int, float), "degraded_pct": (int, float)},
+}
+
 # Scalar fields the bench stamps alongside the axes.
 REQUIRED_SCALARS = {"bench": str, "note": str, "n_items": (int, float), "dim": (int, float)}
 
@@ -55,16 +63,15 @@ def main():
         if not isinstance(doc[key], ty):
             fail(f"{path}: field {key!r} must be {ty}, got {type(doc[key]).__name__}")
 
-    for axis in REQUIRED_AXES:
-        if axis not in doc:
-            fail(f"{path}: missing required axis {axis!r}")
+    def check_axis(axis, extra_fields):
         rows = doc[axis]
         if not isinstance(rows, list):
             fail(f"{path}: axis {axis!r} must be an array, got {type(rows).__name__}")
+        fields = {**REQUIRED_ROW_FIELDS, **extra_fields}
         for i, row in enumerate(rows):
             if not isinstance(row, dict):
                 fail(f"{path}: {axis}[{i}] must be an object, got {type(row).__name__}")
-            for field, fty in REQUIRED_ROW_FIELDS.items():
+            for field, fty in fields.items():
                 if field not in row:
                     fail(f"{path}: {axis}[{i}] missing field {field!r}")
                 if not isinstance(row[field], fty):
@@ -73,7 +80,17 @@ def main():
                         f"got {type(row[field]).__name__}"
                     )
 
-    print(f"{path}: schema ok ({len(REQUIRED_AXES)} axes)")
+    for axis in REQUIRED_AXES:
+        if axis not in doc:
+            fail(f"{path}: missing required axis {axis!r}")
+        check_axis(axis, {})
+
+    present_optional = [a for a in OPTIONAL_AXES if a in doc]
+    for axis in present_optional:
+        check_axis(axis, OPTIONAL_AXES[axis])
+
+    n = len(REQUIRED_AXES) + len(present_optional)
+    print(f"{path}: schema ok ({n} axes)")
 
 
 if __name__ == "__main__":

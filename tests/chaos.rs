@@ -1,0 +1,198 @@
+//! Chaos suite (run with `--features fault-injection`): seeded fault
+//! plans against the sharded router, asserting the degraded-serving
+//! contract from README §"Failure model & degraded serving" — a faulted
+//! query NEVER panics the caller and NEVER presents a silently truncated
+//! top-k as complete. Every outcome must be one of:
+//!
+//! 1. `Ok` untagged — element-identical to the fault-free oracle;
+//! 2. `Ok` tagged `ShardLoss` — element-identical to the exact merge over
+//!    the shards *not* named in `lost_shards`;
+//! 3. `Err` carrying a typed `ShardLossError` (quorum lost).
+//!
+//! Fault plans are pure functions of a seed, so any failure here replays
+//! exactly; there is no flakiness to tolerate.
+#![cfg(feature = "fault-injection")]
+
+use std::sync::{Arc, Once};
+use std::time::Duration;
+
+use rangelsh::config::ServeConfig;
+use rangelsh::coordinator::{
+    BatchPolicy, FaultPlan, OverloadedError, QueryParams, QueryServer, RouterPolicy, SearchEngine,
+    SearchResult, Shard, ShardLossError, ShardedRouter,
+};
+use rangelsh::data::{synthetic, Dataset};
+use rangelsh::hash::NativeHasher;
+use rangelsh::index::range::{RangeLshIndex, RangeLshParams};
+use rangelsh::ItemId;
+
+const DIM: usize = 8;
+const N_SHARDS: usize = 3;
+const PER_SHARD: usize = 200;
+const TOP_K: usize = 5;
+
+/// Injected panics go through the global panic hook before the router's
+/// `catch_unwind` contains them; silence exactly those (and only those)
+/// so the chaos sweep doesn't bury real failures in expected backtraces.
+fn quiet_injected_panics() {
+    static INSTALL: Once = Once::new();
+    INSTALL.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let injected = info
+                .payload()
+                .downcast_ref::<String>()
+                .map(String::as_str)
+                .or_else(|| info.payload().downcast_ref::<&str>().copied())
+                .is_some_and(|msg| msg.contains("injected panic"));
+            if !injected {
+                prev(info);
+            }
+        }));
+    });
+}
+
+/// A 3-shard router corpus: `N_SHARDS` row-slices of one long-tailed
+/// dataset, each with its own exact-budget engine (so per-shard answers
+/// are exact top-k over the slice and merges are analytically checkable).
+fn build_shards(seed: u64) -> Vec<Shard> {
+    let full = synthetic::longtail_sift(N_SHARDS * PER_SHARD, DIM, seed);
+    (0..N_SHARDS)
+        .map(|s| {
+            let (lo, hi) = (s * PER_SHARD * DIM, (s + 1) * PER_SHARD * DIM);
+            let slice = Arc::new(Dataset::from_flat(DIM, full.flat()[lo..hi].to_vec()));
+            let hasher: Arc<NativeHasher> = Arc::new(NativeHasher::new(DIM, 64, seed + s as u64));
+            let index = Arc::new(
+                RangeLshIndex::build(&slice, hasher.as_ref(), RangeLshParams::new(16, 4)).unwrap(),
+            );
+            let cfg = ServeConfig { probe_budget: usize::MAX, top_k: TOP_K, ..Default::default() };
+            Shard {
+                engine: Arc::new(SearchEngine::new(index, slice, hasher, cfg).unwrap()),
+                id_offset: (s * PER_SHARD) as ItemId,
+            }
+        })
+        .collect()
+}
+
+/// Fault-free oracle: exact merge over every shard not in `lost`,
+/// replicating the router's tie-break (score desc, then global id).
+fn merged_oracle(shards: &[Shard], lost: &[usize], query: &[f32]) -> Vec<SearchResult> {
+    let mut merged: Vec<SearchResult> = Vec::new();
+    for (s, shard) in shards.iter().enumerate() {
+        if lost.contains(&s) {
+            continue;
+        }
+        merged.extend(
+            shard
+                .engine
+                .search_with(query, &QueryParams::default())
+                .unwrap()
+                .into_iter()
+                .map(|r| SearchResult { id: r.id + shard.id_offset, score: r.score }),
+        );
+    }
+    merged.sort_by(|a, b| b.score.total_cmp(&a.score).then(a.id.cmp(&b.id)));
+    merged.truncate(TOP_K);
+    merged
+}
+
+#[test]
+fn seeded_fault_storms_never_lie_about_completeness() {
+    quiet_injected_panics();
+    let policy = RouterPolicy {
+        min_shards: 2,
+        max_retries: 2,
+        backoff_base: Duration::from_micros(1),
+        backoff_cap: Duration::from_micros(10),
+    };
+    let (mut untagged, mut partial, mut quorum_lost) = (0usize, 0usize, 0usize);
+    for seed in [11u64, 29, 47] {
+        let queries = synthetic::gaussian_queries(40, DIM, seed ^ 0x77);
+        for rate_pct in [10u32, 30, 60] {
+            for persistence in [1u32, 2, 4] {
+                // Fresh router per plan so the deterministic query index
+                // restarts at 0 and the run is a pure function of
+                // (seed, rate_pct, persistence).
+                let shards = build_shards(seed);
+                let mut router =
+                    ShardedRouter::with_policy(build_shards(seed), TOP_K, policy).unwrap();
+                router.set_fault_plan(Some(
+                    FaultPlan::seeded(seed.wrapping_mul(101) + rate_pct as u64, rate_pct)
+                        .with_persistence(persistence)
+                        .with_delay(Duration::from_micros(50)),
+                ));
+                for qi in 0..queries.len() {
+                    let q = queries.row(qi);
+                    let ctx = format!("seed {seed} rate {rate_pct}% persist {persistence} q {qi}");
+                    match router.query_full(q, &QueryParams::default()) {
+                        Ok(resp) => match resp.degraded {
+                            None => {
+                                assert_eq!(
+                                    resp.results,
+                                    merged_oracle(&shards, &[], q),
+                                    "untagged response must equal the fault-free oracle ({ctx})"
+                                );
+                                untagged += 1;
+                            }
+                            Some(tag) => {
+                                assert!(
+                                    !tag.lost_shards.is_empty(),
+                                    "no budgets are set, so the only legal tag is \
+                                     shard loss ({ctx})"
+                                );
+                                assert!(
+                                    N_SHARDS - tag.lost_shards.len() >= policy.min_shards,
+                                    "tagged response below quorum ({ctx})"
+                                );
+                                assert_eq!(
+                                    resp.results,
+                                    merged_oracle(&shards, &tag.lost_shards, q),
+                                    "partial merge must equal the surviving-shard \
+                                     oracle ({ctx})"
+                                );
+                                partial += 1;
+                            }
+                        },
+                        Err(e) => {
+                            let loss = e.downcast_ref::<ShardLossError>().unwrap_or_else(|| {
+                                panic!("router error must be a typed ShardLossError ({ctx}): {e:#}")
+                            });
+                            assert!(loss.responded < policy.min_shards, "{ctx}");
+                            assert!(!loss.failed.is_empty(), "{ctx}");
+                            quorum_lost += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    // Deterministic plans, so coverage assertions cannot flake: the sweep
+    // must exercise the healthy path and at least one failure path.
+    assert!(untagged > 0, "sweep never produced a clean answer");
+    assert!(
+        partial + quorum_lost > 0,
+        "sweep never lost a shard — fault injection is not reaching the router"
+    );
+}
+
+#[test]
+fn overload_shedding_is_typed_under_fault_injection_build() {
+    // The server's admission control (not the router) rejects a budget
+    // smaller than the batch window before enqueueing; same contract as
+    // the in-crate unit test, exercised here under the feature build.
+    let shard = build_shards(5).remove(0);
+    let policy = BatchPolicy::new(64, Duration::from_millis(10));
+    let handle = QueryServer::spawn(shard.engine.clone(), policy);
+    let queries = synthetic::gaussian_queries(1, DIM, 6);
+    let params = QueryParams::new().with_time_budget(Duration::from_millis(1));
+    let err = handle.query_full(queries.row(0).to_vec(), params).unwrap_err();
+    let over = err
+        .downcast_ref::<OverloadedError>()
+        .expect("sub-window budget must shed with a typed OverloadedError");
+    assert_eq!(over.queue_depth, 0);
+    assert_eq!(over.time_budget, Some(Duration::from_millis(1)));
+    // A budget-less query on the same handle still answers completely.
+    let resp = handle.query_full(queries.row(0).to_vec(), QueryParams::default()).unwrap();
+    assert!(resp.degraded.is_none());
+    assert_eq!(resp.results.len(), TOP_K);
+}
