@@ -1,0 +1,14 @@
+"""Make the suite runnable from any cwd.
+
+Puts `python/` (the `compile` package) and `scripts/` (the `staticcheck`
+package) on sys.path so `python3 -m pytest python/tests` works from the
+repo root as well as from `python/`.
+"""
+
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[2]
+for p in (REPO_ROOT / "python", REPO_ROOT / "scripts"):
+    if str(p) not in sys.path:
+        sys.path.insert(0, str(p))

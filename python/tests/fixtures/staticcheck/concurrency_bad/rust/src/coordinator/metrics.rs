@@ -1,0 +1,5 @@
+impl Metrics {
+    pub fn snapshot(&self) -> u64 {
+        self.queries.load(Ordering::Relaxed)
+    }
+}

@@ -1,0 +1,9 @@
+impl Metrics {
+    pub fn record(&self) {
+        self.queries.fetch_add(1, Ordering::Release);
+    }
+
+    pub fn snapshot(&self) -> u64 {
+        self.queries.load(Ordering::Acquire)
+    }
+}

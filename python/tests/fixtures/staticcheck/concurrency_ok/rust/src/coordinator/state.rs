@@ -1,0 +1,9 @@
+pub fn forward(&self) {
+    let _a = self.alpha.lock().unwrap();
+    let _b = self.beta.lock().unwrap();
+}
+
+pub fn also_forward(&self) {
+    let _a = self.alpha.lock().unwrap();
+    let _b = self.beta.lock().unwrap();
+}

@@ -1,0 +1,7 @@
+const MAGIC_V1: &[u8; 8] = b"RLSHIDX\x01";
+const MAGIC_V9: &[u8; 8] = b"RLSHIDX\x09";
+
+fn load(r: &mut Reader) {
+    r.verify_section_crc("header");
+    r.verify_section_crc("phantom-section");
+}

@@ -1,0 +1,5 @@
+fn main() {
+    let args = Args::parse(rest, &["verbose"]);
+    let _cfg = args.req("config");
+    let _secret = args.opt("secret-flag");
+}

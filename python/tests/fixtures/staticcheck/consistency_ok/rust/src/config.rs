@@ -1,0 +1,4 @@
+pub fn parse(doc: &TomlDoc) -> Config {
+    let sv = Section::of(doc, "serve");
+    Config { max_batch: sv.usize_or("max_batch", 256) }
+}

@@ -1,0 +1,5 @@
+const MAGIC_V1: &[u8; 8] = b"RLSHIDX\x01";
+
+fn load(r: &mut Reader) {
+    r.verify_section_crc("header");
+}

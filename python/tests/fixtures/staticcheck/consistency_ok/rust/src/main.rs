@@ -1,0 +1,4 @@
+fn main() {
+    let args = Args::parse(rest, &["verbose"]);
+    let _cfg = args.req("config");
+}

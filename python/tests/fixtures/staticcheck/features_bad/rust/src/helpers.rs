@@ -1,0 +1,2 @@
+#[cfg(test)]
+pub struct TestOnly;

@@ -1,0 +1,11 @@
+pub mod helpers;
+
+use crate::helpers::TestOnly;
+
+#[cfg(feature = "typo-feature")]
+pub fn gated() {}
+
+#[cfg(feature = "real-feature")]
+pub fn fine() {}
+
+pub fn touch(_t: TestOnly) {}

@@ -1,0 +1,14 @@
+pub mod helpers;
+
+#[cfg(feature = "real-feature")]
+pub fn gated() {}
+
+#[cfg(any(test, feature = "fault-injection"))]
+pub fn chaos_hook() {}
+
+#[cfg(test)]
+mod tests {
+    use crate::helpers::TestOnly;
+
+    fn touch(_t: TestOnly) {}
+}

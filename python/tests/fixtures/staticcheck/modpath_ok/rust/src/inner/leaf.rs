@@ -1,0 +1,6 @@
+pub struct Widget;
+
+pub enum Kind {
+    Fast,
+    Slow,
+}

@@ -1,0 +1,2 @@
+pub mod leaf;
+pub use leaf::Widget;

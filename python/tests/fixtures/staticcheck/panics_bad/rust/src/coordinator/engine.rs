@@ -1,0 +1,22 @@
+pub fn serve(xs: &[u32], i: usize) -> u32 {
+    let first = xs.first().unwrap();
+    let second = xs.get(1).expect("needs two");
+    if i > xs.len() {
+        panic!("out of range");
+    }
+    first + second + xs[i]
+}
+
+// staticcheck: allow(panic, "")
+pub fn empty_reason(xs: &[u32]) -> u32 {
+    xs[0]
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_is_fine_here() {
+        let v: Option<u32> = Some(1);
+        assert_eq!(v.unwrap(), 1);
+    }
+}

@@ -1,0 +1,23 @@
+pub fn serve(xs: &[u32], i: usize) -> Option<u32> {
+    let first = xs.first()?;
+    // staticcheck: allow(panic, "i is clamped to xs.len() - 1 above")
+    let picked = xs[i.min(xs.len().checked_sub(1)?)];
+    Some(first + picked)
+}
+
+pub fn slice_pattern(xs: &[u32]) -> u32 {
+    // a slice pattern is not an index expression
+    if let [a, b] = xs {
+        return a + b;
+    }
+    0
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_is_fine_here() {
+        let v: Option<u32> = Some(1);
+        assert_eq!(v.unwrap(), 1);
+    }
+}

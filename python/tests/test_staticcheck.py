@@ -1,0 +1,236 @@
+"""Golden-file tests for the staticcheck analyzer (scripts/staticcheck).
+
+Each lint gets at least one positive case (a fixture tree seeded with
+violations it must flag) and one negative case (a clean tree it must
+pass). Fixtures live under fixtures/staticcheck/<case>/ as miniature
+repo trees mirroring the real layout (rust/src/…, configs/, README.md).
+
+The final tests run the battery — and the `scripts/check.py` driver —
+against the real repository: the tree must stay free of unwaived
+findings.
+"""
+
+from pathlib import Path
+
+import pytest
+
+import check
+from staticcheck import RepoContext
+from staticcheck.report import collect_waivers
+from staticcheck.tokenizer import tokenize, code_tokens
+from staticcheck.lints import modpath, features, panics, consistency, concurrency
+
+FIXTURES = Path(__file__).resolve().parent / "fixtures" / "staticcheck"
+REPO_ROOT = Path(__file__).resolve().parents[2]
+
+
+def run_lint(lint, case):
+    return lint.run(RepoContext(FIXTURES / case))
+
+
+def errors(findings):
+    return [f for f in findings if not f.waived]
+
+
+def waived(findings):
+    return [f for f in findings if f.waived]
+
+
+# -- tokenizer ------------------------------------------------------------
+
+
+def test_tokenizer_strings_and_comments_hide_code():
+    toks = tokenize('let s = "xs[0] // not a comment"; // real comment\nlet i = xs[0];')
+    strs = [t for t in toks if t.kind == "str"]
+    comments = [t for t in toks if t.kind == "comment"]
+    assert len(strs) == 1 and "not a comment" in strs[0].value
+    assert len(comments) == 1 and comments[0].value == "// real comment"
+    # only the second line's real index expression survives as puncts
+    brackets = [t for t in code_tokens(toks) if t.value == "["]
+    assert len(brackets) == 1 and brackets[0].line == 2
+
+
+def test_tokenizer_lifetimes_vs_char_literals():
+    toks = tokenize("fn f<'a>(x: &'a str) -> char { 'x' }")
+    kinds = {t.value: t.kind for t in toks if t.kind in ("lifetime", "char")}
+    assert kinds["'a"] == "lifetime"
+    assert kinds["'x'"] == "char"
+
+
+def test_tokenizer_nested_block_comments_and_raw_strings():
+    toks = tokenize('/* outer /* inner */ still comment */ let r = r#"a "quoted" b"#;')
+    assert toks[0].kind == "comment" and "still comment" in toks[0].value
+    assert any(t.kind == "str" and "quoted" in t.value for t in toks)
+
+
+# -- waiver grammar -------------------------------------------------------
+
+
+def test_waiver_parsing_and_coverage():
+    src = (
+        '// staticcheck: allow(panic, "standalone covers next line")\n'
+        "let a = xs[0];\n"
+        'let b = xs[1]; // staticcheck: allow(panic, "trailing covers its line")\n'
+    )
+    waivers, errs = collect_waivers(src, tokenize(src))
+    assert not errs
+    assert len(waivers) == 2
+    standalone, trailing = waivers
+    assert standalone.standalone and standalone.covers(2) and not standalone.covers(3)
+    assert not trailing.standalone and trailing.covers(3) and not trailing.covers(4)
+
+
+def test_waiver_empty_reason_is_an_error():
+    src = '// staticcheck: allow(panic, "")\nlet a = xs[0];\n'
+    waivers, errs = collect_waivers(src, tokenize(src))
+    assert not waivers
+    assert len(errs) == 1 and "empty reason" in errs[0][1]
+
+
+# -- lint 1: module/path resolution --------------------------------------
+
+
+def test_modpath_flags_dangling_mod_and_use():
+    found = errors(run_lint(modpath, "modpath_bad"))
+    msgs = "\n".join(f.message for f in found)
+    assert "mod missing;" in msgs  # no backing file
+    assert "crate::real::no_such_item" in msgs
+    assert "crate::ghost::Anything" in msgs
+    assert len(found) == 3
+
+
+def test_modpath_clean_tree_passes():
+    assert run_lint(modpath, "modpath_ok") == []
+
+
+# -- lint 2: feature-gate coherence ---------------------------------------
+
+
+def test_features_flags_undeclared_feature_and_test_only_leak():
+    found = errors(run_lint(features, "features_bad"))
+    msgs = "\n".join(f.message for f in found)
+    assert '"typo-feature"' in msgs
+    assert "cfg(test)-only" in msgs and "TestOnly" in msgs
+    assert len(found) == 2
+
+
+def test_features_clean_tree_passes():
+    assert run_lint(features, "features_ok") == []
+
+
+# -- lint 3: panic paths ---------------------------------------------------
+
+
+def test_panics_flags_unwrap_expect_macro_indexing():
+    found = run_lint(panics, "panics_bad")
+    errs = errors(found)
+    msgs = "\n".join(f.message for f in errs)
+    assert ".unwrap()" in msgs
+    assert ".expect()" in msgs
+    assert "panic!" in msgs
+    assert "bare index" in msgs
+    assert "empty reason" in msgs  # allow(panic, "") is itself a finding
+    # the cfg(test) mod's unwrap is exempt
+    assert all("unwrap_is_fine_here" not in f.message for f in errs)
+    assert len(errs) == 6
+    assert not waived(found)
+
+
+def test_panics_waived_and_test_code_pass():
+    found = run_lint(panics, "panics_ok")
+    assert errors(found) == []
+    assert len(waived(found)) == 1
+    assert "clamped" in waived(found)[0].waive_reason
+
+
+# -- lint 4: cross-layer consistency --------------------------------------
+
+
+def test_consistency_flags_drift_in_all_three_layers():
+    found = errors(run_lint(consistency, "consistency_bad"))
+    msgs = "\n".join(f.message for f in found)
+    assert "`ghost_key`" in msgs  # toml key config.rs never parses
+    assert "[mystery]" in msgs  # section config.rs never names
+    assert "--secret-flag" in msgs  # parsed but undocumented
+    assert "--verbose" in msgs  # bool flag parsed but undocumented
+    assert "--imaginary-flag" in msgs  # documented but not parsed
+    assert "v9" in msgs  # persistence version README misses
+    assert '"phantom-section"' in msgs  # checksummed section README misses
+    # 8 findings: the unknown [mystery] section is flagged once for the
+    # section and once for its key
+    assert len(found) == 8
+
+
+def test_consistency_clean_tree_passes():
+    assert run_lint(consistency, "consistency_ok") == []
+
+
+# -- lint 5: concurrency audit ---------------------------------------------
+
+
+def test_concurrency_flags_inversion_and_relaxed_snapshot():
+    found = errors(run_lint(concurrency, "concurrency_bad"))
+    msgs = "\n".join(f.message for f in found)
+    assert "lock-order inversion" in msgs
+    assert "Relaxed" in msgs and "snapshot" in msgs
+    assert len(found) == 2
+
+
+def test_concurrency_clean_tree_passes():
+    assert run_lint(concurrency, "concurrency_ok") == []
+
+
+# -- the real repository must stay clean ----------------------------------
+
+
+def test_real_repo_has_no_unwaived_findings(capsys):
+    errs, _ = check.run_lints(REPO_ROOT)
+    capsys.readouterr()  # silence the lint progress lines
+    assert errs == [], "\n".join(f.format() for f in errs)
+
+
+def test_real_repo_panic_waivers_all_carry_reasons():
+    _, waived_findings = check.run_lints(REPO_ROOT)
+    assert waived_findings, "the coordinator triage should have waivers"
+    assert all(f.waive_reason.strip() for f in waived_findings)
+
+
+def test_real_repo_indexer_is_not_vacuous():
+    repo = RepoContext(REPO_ROOT)
+    lib = repo.lib_index()
+    mods = list(lib.all_modules())
+    assert len(mods) > 50, "the lib crate should index dozens of modules"
+    assert sum(len(m.items) for m in mods) > 300
+    assert sum(1 for _ in lib.all_uses()) > 200
+
+
+# -- driver ----------------------------------------------------------------
+
+
+def test_driver_exits_nonzero_on_seeded_violations(capsys):
+    rc = check.main(["--root", str(FIXTURES / "panics_bad"), "--no-bench-schema"])
+    capsys.readouterr()
+    assert rc == 1
+
+
+def test_driver_exits_zero_on_clean_tree(capsys):
+    rc = check.main(["--root", str(FIXTURES / "panics_ok"), "--no-bench-schema"])
+    capsys.readouterr()
+    assert rc == 0
+
+
+@pytest.mark.parametrize("case,lint,clean", [
+    ("modpath_bad", modpath, False),
+    ("modpath_ok", modpath, True),
+    ("features_bad", features, False),
+    ("features_ok", features, True),
+    ("panics_bad", panics, False),
+    ("panics_ok", panics, True),
+    ("consistency_bad", consistency, False),
+    ("consistency_ok", consistency, True),
+    ("concurrency_bad", concurrency, False),
+    ("concurrency_ok", concurrency, True),
+])
+def test_every_lint_fails_its_seeded_fixture_and_passes_clean(case, lint, clean):
+    errs = errors(run_lint(lint, case))
+    assert (errs == []) == clean

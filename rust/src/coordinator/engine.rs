@@ -137,6 +137,7 @@ impl<C: CodeWord> SearchEngine<C> {
         Ok(self
             .search_batch_full(query, std::slice::from_ref(params))?
             .pop()
+            // staticcheck: allow(panic, "search_batch_full returns exactly one response per input query")
             .expect("one query in, one out"))
     }
 
@@ -214,6 +215,7 @@ impl<C: CodeWord> SearchEngine<C> {
         let resolve_at = |qi: usize| -> ResolvedQueryParams {
             match uniform {
                 Some(rp) => rp,
+                // staticcheck: allow(panic, "non-uniform branch: params.len() == n and qi < n by loop bounds")
                 None => params[qi].resolve(&self.cfg),
             }
         };
@@ -236,7 +238,9 @@ impl<C: CodeWord> SearchEngine<C> {
                     return (lo..hi)
                         .map(|qi| {
                             let rp = resolve_at(qi);
+                            // staticcheck: allow(panic, "rows.len() == n * dim is validated at entry; qi < n")
                             let q = &rows[qi * dim..(qi + 1) * dim];
+                            // staticcheck: allow(panic, "codes holds one code per query from the batch hash pass; qi < n")
                             self.search_streaming(codes[qi], q, &rp, t0)
                         })
                         .collect();
@@ -246,6 +250,7 @@ impl<C: CodeWord> SearchEngine<C> {
                     if bufs.len() < hi - lo {
                         bufs.resize_with(hi - lo, Vec::new);
                     }
+                    // staticcheck: allow(panic, "bufs was resized to at least hi - lo just above")
                     for buf in bufs[..hi - lo].iter_mut() {
                         buf.clear();
                     }
@@ -257,8 +262,10 @@ impl<C: CodeWord> SearchEngine<C> {
                     match uniform {
                         Some(rp) if rp.one_shot() && rp.time_budget.is_none() => {
                             self.index.probe_batch_with_codes(
+                                // staticcheck: allow(panic, "lo < hi <= n == codes.len()")
                                 &codes[lo..hi],
                                 rp.probe_budget,
+                                // staticcheck: allow(panic, "bufs was resized to at least hi - lo just above")
                                 &mut bufs[..hi - lo],
                             );
                         }
@@ -266,7 +273,9 @@ impl<C: CodeWord> SearchEngine<C> {
                             for qi in lo..hi {
                                 let rp = resolve_at(qi);
                                 let deadline = rp.time_budget.map(|tb| t0 + tb);
+                                // staticcheck: allow(panic, "cut and bufs both have hi - lo entries; qi in lo..hi")
                                 cut[qi - lo] =
+                                    // staticcheck: allow(panic, "codes[qi]: qi < n; bufs[qi - lo]: qi in lo..hi")
                                     self.probe_one(codes[qi], &rp, deadline, &mut bufs[qi - lo]);
                             }
                         }
@@ -275,7 +284,9 @@ impl<C: CodeWord> SearchEngine<C> {
                     (lo..hi)
                         .map(|qi| {
                             let rp = resolve_at(qi);
+                            // staticcheck: allow(panic, "rows.len() == n * dim is validated at entry; qi < n")
                             let q = &rows[qi * dim..(qi + 1) * dim];
+                            // staticcheck: allow(panic, "bufs has hi - lo entries; qi in lo..hi")
                             let cands = &mut bufs[qi - lo];
                             let probed = cands.len();
                             // The re-rank already computes every winner's
@@ -295,6 +306,7 @@ impl<C: CodeWord> SearchEngine<C> {
                                 .zip(scores.iter())
                                 .map(|(&id, &score)| SearchResult { id, score })
                                 .collect();
+                            // staticcheck: allow(panic, "cut has hi - lo entries; qi in lo..hi")
                             match cut[qi - lo] {
                                 Some(reason) => {
                                     self.metrics.record_degraded();
@@ -384,6 +396,7 @@ impl<C: CodeWord> SearchEngine<C> {
             static STREAM_SCRATCH: std::cell::RefCell<(Vec<ItemId>, Vec<(usize, ItemId)>)> =
                 const { std::cell::RefCell::new((Vec::new(), Vec::new())) };
         }
+        // staticcheck: allow(panic, "constructor invariant: streaming-mode engines are always built with a RerankView")
         let view = self.view.as_ref().expect("streaming engines carry a RerankView");
         let q_norm = crate::data::dot_slices(q, q).sqrt();
         let mut acc = BoundedTopK::new(rp.top_k, q_norm, self.dataset.dim());
@@ -421,8 +434,10 @@ impl<C: CodeWord> SearchEngine<C> {
                 let mut quads = admitted.chunks_exact(4);
                 for quad in quads.by_ref() {
                     let s =
+                        // staticcheck: allow(panic, "chunks_exact(4) yields exactly 4-element windows")
                         view.dot4_at([quad[0].0, quad[1].0, quad[2].0, quad[3].0], q);
                     for (i, &(_, id)) in quad.iter().enumerate() {
+                        // staticcheck: allow(panic, "dot4_at returns [f32; 4] and i < 4 from the 4-element quad")
                         acc.insert(s[i], id);
                     }
                 }

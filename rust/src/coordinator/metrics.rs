@@ -31,38 +31,43 @@ impl Metrics {
     }
 
     pub fn record_query(&self, latency_us: u64, probed: usize) {
-        self.queries.fetch_add(1, Ordering::Relaxed);
-        self.probed_items.fetch_add(probed as u64, Ordering::Relaxed);
+        self.queries.fetch_add(1, Ordering::Release);
+        self.probed_items.fetch_add(probed as u64, Ordering::Release);
         let bucket = (64 - latency_us.max(1).leading_zeros() - 1).min(BUCKETS as u32 - 1);
-        self.histogram[bucket as usize].fetch_add(1, Ordering::Relaxed);
+        self.histogram[bucket as usize].fetch_add(1, Ordering::Release);
     }
 
     pub fn record_batch(&self, rows: usize) {
-        self.batches.fetch_add(1, Ordering::Relaxed);
-        self.batch_rows.fetch_add(rows as u64, Ordering::Relaxed);
+        self.batches.fetch_add(1, Ordering::Release);
+        self.batch_rows.fetch_add(rows as u64, Ordering::Release);
     }
 
     pub fn record_degraded(&self) {
-        self.queries_degraded.fetch_add(1, Ordering::Relaxed);
+        self.queries_degraded.fetch_add(1, Ordering::Release);
     }
 
     pub fn record_shard_failure(&self) {
-        self.shard_failures.fetch_add(1, Ordering::Relaxed);
+        self.shard_failures.fetch_add(1, Ordering::Release);
     }
 
     pub fn record_retry(&self) {
-        self.retries.fetch_add(1, Ordering::Relaxed);
+        self.retries.fetch_add(1, Ordering::Release);
     }
 
     pub fn record_shed(&self) {
-        self.shed.fetch_add(1, Ordering::Relaxed);
+        self.shed.fetch_add(1, Ordering::Release);
     }
 
+    /// Point-in-time read of every counter. Loads are `Acquire` against
+    /// the `Release` bumps above: a snapshot that observes a counter
+    /// increment also observes the writes that preceded it, so derived
+    /// ratios (mean probed, mean batch rows) never mix a new numerator
+    /// with a stale denominator from the same recording thread.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let hist: Vec<u64> = self
             .histogram
             .iter()
-            .map(|b| b.load(Ordering::Relaxed))
+            .map(|b| b.load(Ordering::Acquire))
             .collect();
         let total: u64 = hist.iter().sum();
         let pct = |p: f64| -> u64 {
@@ -80,25 +85,25 @@ impl Metrics {
             }
             1u64 << BUCKETS
         };
-        let queries = self.queries.load(Ordering::Relaxed);
-        let batches = self.batches.load(Ordering::Relaxed);
+        let queries = self.queries.load(Ordering::Acquire);
+        let batches = self.batches.load(Ordering::Acquire);
         MetricsSnapshot {
             queries,
             mean_probed: if queries == 0 {
                 0.0
             } else {
-                self.probed_items.load(Ordering::Relaxed) as f64 / queries as f64
+                self.probed_items.load(Ordering::Acquire) as f64 / queries as f64
             },
             batches,
             mean_batch_rows: if batches == 0 {
                 0.0
             } else {
-                self.batch_rows.load(Ordering::Relaxed) as f64 / batches as f64
+                self.batch_rows.load(Ordering::Acquire) as f64 / batches as f64
             },
-            queries_degraded: self.queries_degraded.load(Ordering::Relaxed),
-            shard_failures: self.shard_failures.load(Ordering::Relaxed),
-            retries: self.retries.load(Ordering::Relaxed),
-            shed: self.shed.load(Ordering::Relaxed),
+            queries_degraded: self.queries_degraded.load(Ordering::Acquire),
+            shard_failures: self.shard_failures.load(Ordering::Acquire),
+            retries: self.retries.load(Ordering::Acquire),
+            shed: self.shed.load(Ordering::Acquire),
             p50_us: pct(0.50),
             p95_us: pct(0.95),
             p99_us: pct(0.99),

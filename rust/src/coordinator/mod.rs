@@ -6,8 +6,9 @@
 //!   (PJRT) when batched, the native path for singles. Every entry point
 //!   takes optional per-request [`QueryParams`] overriding the engine's
 //!   `ServeConfig` defaults (k, probe budget, early-stop target).
-//! - [`batcher`] / [`server`] — the async front: a tokio request loop with
-//!   a dynamic batcher (flush on size or deadline, vLLM-router style) that
+//! - [`batcher`] / [`server`] — the serving front: a dedicated batcher
+//!   thread (plain threads + channels, no async runtime) with a dynamic
+//!   batcher (flush on size or deadline, vLLM-router style) that
 //!   amortises PJRT query hashing across concurrent requests.
 //! - [`metrics`] — latency histograms and counters (p50/p95/p99, QPS).
 //! - [`router`] — a shard router: fan out a query to per-shard engines and

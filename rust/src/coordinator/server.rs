@@ -10,7 +10,7 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, PoisonError};
 use std::time::{Duration, Instant};
 
 use anyhow::anyhow;
@@ -52,7 +52,12 @@ pub struct ServerHandle<C: CodeWord = u64> {
 impl<C: CodeWord> Clone for ServerHandle<C> {
     fn clone(&self) -> Self {
         Self {
-            tx: Mutex::new(self.tx.lock().unwrap().clone()),
+            // A panicked holder cannot leave a Sender mid-update (clone
+            // and send are atomic on the channel), so a poisoned lock is
+            // safe to recover rather than propagate.
+            tx: Mutex::new(
+                self.tx.lock().unwrap_or_else(PoisonError::into_inner).clone(),
+            ),
             engine: self.engine.clone(),
             policy: self.policy,
             depth: self.depth.clone(),
@@ -103,7 +108,9 @@ impl<C: CodeWord> ServerHandle<C> {
         let sent = self
             .tx
             .lock()
-            .unwrap()
+            // Same recovery argument as Clone: the Sender is never left
+            // in a torn state by a panicked lock holder.
+            .unwrap_or_else(PoisonError::into_inner)
             .send(Job { query, params, reply: reply_tx, enqueued: Instant::now() });
         if sent.is_err() {
             self.depth.fetch_sub(1, Ordering::Relaxed);
@@ -124,11 +131,13 @@ pub struct QueryServer;
 
 impl QueryServer {
     /// Spawn the batcher thread; returns the client handle. The server
-    /// stops when every handle (hence the sender) is dropped.
+    /// stops when every handle (hence the sender) is dropped. Errs when
+    /// the OS refuses the thread — real fallibility at saturation, so
+    /// it flows to the caller instead of panicking the serving path.
     pub fn spawn<C: CodeWord>(
         engine: Arc<SearchEngine<C>>,
         policy: BatchPolicy,
-    ) -> ServerHandle<C> {
+    ) -> Result<ServerHandle<C>> {
         let (tx, rx) = mpsc::channel::<Job>();
         let loop_engine = engine.clone();
         let depth = Arc::new(AtomicUsize::new(0));
@@ -136,8 +145,8 @@ impl QueryServer {
         std::thread::Builder::new()
             .name("rangelsh-batcher".into())
             .spawn(move || batch_loop(loop_engine, policy, rx, loop_depth))
-            .expect("spawning batcher thread");
-        ServerHandle { tx: Mutex::new(tx), engine, policy, depth }
+            .map_err(|e| anyhow!("spawning batcher thread: {e}"))?;
+        Ok(ServerHandle { tx: Mutex::new(tx), engine, policy, depth })
     }
 }
 
@@ -195,6 +204,7 @@ fn batch_loop<C: CodeWord>(
         }
         // Then wait out the remainder of the oldest job's batching window
         // (none left if it already waited through the previous flush).
+        // staticcheck: allow(panic, "pending is non-empty here: the blocking recv above either pushed a job or returned")
         let deadline = (pending[0].enqueued + policy.deadline).max(Instant::now());
         while !closed && pending.len() < policy.max_batch {
             let now = Instant::now();
@@ -311,7 +321,7 @@ pub fn drive_workload_with<C: CodeWord>(
     params: QueryParams,
 ) -> Result<(Vec<Vec<SearchResult>>, Duration)> {
     let clients = clients.max(1);
-    let handle = QueryServer::spawn(engine, policy);
+    let handle = QueryServer::spawn(engine, policy)?;
     let n = queries.len();
     let t0 = Instant::now();
     let mut out: Vec<Option<Vec<SearchResult>>> = Vec::with_capacity(n);
@@ -332,8 +342,16 @@ pub fn drive_workload_with<C: CodeWord>(
             }));
         }
         for h in handles {
-            if let Err(e) = h.join().expect("client thread panicked") {
-                failure.get_or_insert(e);
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    failure.get_or_insert(e);
+                }
+                // A panicked client is a workload failure, not a process
+                // abort: surface it as a typed error like any other.
+                Err(_) => {
+                    failure.get_or_insert(anyhow!("client worker thread panicked"));
+                }
             }
         }
     });
@@ -341,10 +359,11 @@ pub fn drive_workload_with<C: CodeWord>(
         return Err(e);
     }
     let wall = t0.elapsed();
-    Ok((
-        out.into_iter().map(|o| o.expect("client filled slot")).collect(),
-        wall,
-    ))
+    let results: Vec<Vec<SearchResult>> = out
+        .into_iter()
+        .map(|o| o.ok_or_else(|| anyhow!("client worker left a result slot unfilled")))
+        .collect::<Result<_>>()?;
+    Ok((results, wall))
 }
 
 #[cfg(test)]
@@ -385,7 +404,7 @@ mod tests {
         let eng = engine();
         // Huge batch size: only the deadline can flush.
         let policy = BatchPolicy::new(10_000, Duration::from_millis(5));
-        let handle = QueryServer::spawn(eng, policy);
+        let handle = QueryServer::spawn(eng, policy).unwrap();
         let q = synthetic::gaussian_queries(1, 8, 3);
         let t0 = Instant::now();
         let res = handle.query(q.row(0).to_vec()).unwrap();
@@ -437,7 +456,7 @@ mod tests {
         // honours its own parameters and matches the direct engine call.
         let eng = engine();
         let policy = BatchPolicy::new(16, Duration::from_millis(10));
-        let handle = QueryServer::spawn(eng.clone(), policy);
+        let handle = QueryServer::spawn(eng.clone(), policy).unwrap();
         let q = synthetic::gaussian_queries(12, 8, 8);
         let param_for = |qi: usize| match qi % 3 {
             0 => QueryParams::default(),
@@ -466,7 +485,7 @@ mod tests {
     fn server_survives_handle_drop_and_new_queries() {
         let eng = engine();
         let policy = BatchPolicy::new(4, Duration::from_millis(1));
-        let handle = QueryServer::spawn(eng, policy);
+        let handle = QueryServer::spawn(eng, policy).unwrap();
         let h2 = handle.clone();
         drop(handle);
         let q = synthetic::gaussian_queries(1, 8, 5);
@@ -493,7 +512,7 @@ mod tests {
         // queue depth, so admission rejects it with a typed Overloaded.
         let eng = engine();
         let policy = BatchPolicy::new(8, Duration::from_millis(10));
-        let handle = QueryServer::spawn(eng.clone(), policy);
+        let handle = QueryServer::spawn(eng.clone(), policy).unwrap();
         let q = synthetic::gaussian_queries(1, 8, 9);
         let params = QueryParams::new().with_time_budget(Duration::from_millis(1));
         let err = handle.query_full(q.row(0).to_vec(), params).unwrap_err();
@@ -517,7 +536,7 @@ mod tests {
         // invariant, not the timing.
         let eng = engine();
         let policy = BatchPolicy::new(10_000, Duration::from_millis(30));
-        let handle = QueryServer::spawn(eng.clone(), policy);
+        let handle = QueryServer::spawn(eng.clone(), policy).unwrap();
         let q = synthetic::gaussian_queries(1, 8, 10);
         let params = QueryParams::new().with_time_budget(Duration::from_millis(31));
         let resp = handle.query_full(q.row(0).to_vec(), params).unwrap();
@@ -544,7 +563,7 @@ mod tests {
     fn generous_budget_through_server_is_answer_invariant() {
         let eng = engine();
         let policy = BatchPolicy::new(8, Duration::from_millis(2));
-        let handle = QueryServer::spawn(eng.clone(), policy);
+        let handle = QueryServer::spawn(eng.clone(), policy).unwrap();
         let q = synthetic::gaussian_queries(4, 8, 11);
         let params = QueryParams::new().with_time_budget(Duration::from_secs(600));
         for qi in 0..q.len() {

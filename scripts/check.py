@@ -1,0 +1,104 @@
+#!/usr/bin/env python3
+"""Unified static verification driver.
+
+Runs the staticcheck lint battery (see `scripts/staticcheck/`) over the
+repository, then the bench-schema validator — one entry point for CI
+and authoring containers alike:
+
+    python3 scripts/check.py            # whole repo, all lints + schema
+    python3 scripts/check.py --root X   # point at another tree (tests)
+    python3 scripts/check.py --no-bench-schema
+
+Exits non-zero if any lint produced an unwaived finding or the bench
+schema is invalid. Waived findings are listed (with their reasons) but
+do not fail the run. This pass complements tier-1 (`cargo build &&
+cargo test`) — it never replaces it.
+"""
+
+import argparse
+import subprocess
+import sys
+from pathlib import Path
+
+SCRIPTS_DIR = Path(__file__).resolve().parent
+sys.path.insert(0, str(SCRIPTS_DIR))
+
+from staticcheck import RepoContext  # noqa: E402
+from staticcheck.lints import ALL_LINTS  # noqa: E402
+
+
+def run_lints(root, out=sys.stdout):
+    """Run every lint against `root`; returns (errors, waived)."""
+    repo = RepoContext(root)
+    errors, waived = [], []
+    for lint in ALL_LINTS:
+        findings = lint.run(repo)
+        lint_errors = [f for f in findings if not f.waived]
+        lint_waived = [f for f in findings if f.waived]
+        status = "ok" if not lint_errors else f"{len(lint_errors)} error(s)"
+        extra = f", {len(lint_waived)} waived" if lint_waived else ""
+        print(f"[{lint.NAME}] {status}{extra}", file=out)
+        for f in lint_errors:
+            print(f.format(), file=out)
+        errors.extend(lint_errors)
+        waived.extend(lint_waived)
+    return errors, waived
+
+
+def run_bench_schema(root, out=sys.stdout):
+    """Invoke the bench-schema validator; returns True on success."""
+    validator = Path(root) / "scripts" / "validate_bench_schema.py"
+    bench = Path(root) / "BENCH_hotpath.json"
+    if not validator.is_file() or not bench.is_file():
+        print("[bench-schema] skipped (validator or BENCH file absent)", file=out)
+        return True
+    proc = subprocess.run(
+        [sys.executable, str(validator), str(bench)],
+        capture_output=True, text=True,
+    )
+    tag = "ok" if proc.returncode == 0 else "FAILED"
+    print(f"[bench-schema] {tag}", file=out)
+    for stream in (proc.stdout, proc.stderr):
+        if stream.strip():
+            for line in stream.strip().splitlines():
+                print(f"  {line}", file=out)
+    return proc.returncode == 0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--root", default=str(SCRIPTS_DIR.parent),
+        help="repository root to check (default: this repo)",
+    )
+    ap.add_argument(
+        "--no-bench-schema", action="store_true",
+        help="skip the BENCH_hotpath.json schema validation step",
+    )
+    ap.add_argument(
+        "--list-waived", action="store_true",
+        help="also print every waived finding with its reason",
+    )
+    args = ap.parse_args(argv)
+
+    errors, waived = run_lints(args.root)
+    if args.list_waived:
+        print(f"-- {len(waived)} waived finding(s):")
+        for f in waived:
+            print(f.format())
+
+    schema_ok = True
+    if not args.no_bench_schema:
+        schema_ok = run_bench_schema(args.root)
+
+    n_waived = len(waived)
+    if errors or not schema_ok:
+        print(f"check: FAILED — {len(errors)} unwaived finding(s)"
+              + ("" if schema_ok else ", bench schema invalid"))
+        return 1
+    print(f"check: ok ({n_waived} waived finding(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

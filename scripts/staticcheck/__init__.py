@@ -1,0 +1,20 @@
+"""staticcheck — toolchain-free static verification for this repo.
+
+A stdlib-only static analysis pass over the Rust sources (and the
+layers they must agree with: Cargo.toml, configs/*.toml, README.md).
+It exists because the authoring containers for this repo historically
+lacked cargo/rustc: the lints here catch the compiler-shaped and
+repo-contract-shaped bug classes (dangling module paths, undeclared
+features, panics on the degraded-serving path, doc drift) *before*
+tier-1 ever runs. It complements — never replaces — `cargo build &&
+cargo test`.
+
+Entry point: `scripts/check.py` (or `python3 -m` on this package's
+driver functions). Lints live in `staticcheck.lints`; each exposes
+`run(repo) -> list[Finding]`.
+"""
+
+from .report import Finding, Waiver  # noqa: F401
+from .repo import RepoContext  # noqa: F401
+
+__version__ = "1.0"

@@ -1,0 +1,585 @@
+"""Module tree + item index over the Rust sources.
+
+Builds, from a crate root (`rust/src/lib.rs`, or any of the bin / test /
+bench / example roots), the tree of modules with every item each one
+declares: structs, enums (with variants), traits, fns, consts, statics,
+type aliases, `macro_rules!` macros, unions, re-exports (`pub use`) and
+plain `use` declarations. Each carries its `#[cfg(…)]` condition so the
+feature-gate lint can reason about test-only items.
+
+This is a *recognizer* for the Rust subset the repo uses, not a parser
+for the language: item boundaries are found by keyword + balanced
+delimiter scanning over the token stream from `tokenizer`.
+"""
+
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+
+from .tokenizer import tokenize, code_tokens, match_brace
+
+FEATURE_RE = re.compile(r"feature\s*=\s*\"([^\"]+)\"")
+
+# Item-introducing keywords handled by the body scanner.
+_SEMI_ITEMS = frozenset(["const", "static", "type"])
+_BRACE_ITEMS = frozenset(["trait", "union"])
+
+
+@dataclass
+class Cfg:
+    """A `#[cfg(…)]` condition attached to an item."""
+
+    raw: str = ""  # the condition text, e.g. 'any(test, feature = "x")'
+    test_only: bool = False  # item vanishes from non-test builds
+    features: tuple = ()  # every feature name the condition mentions
+
+    @staticmethod
+    def none():
+        return Cfg()
+
+
+@dataclass
+class Item:
+    name: str
+    kind: str  # fn | struct | enum | trait | const | static | type | macro | union | extern-crate
+    line: int
+    cfg: Cfg = field(default_factory=Cfg.none)
+    variants: tuple = ()  # enum variants
+
+
+@dataclass
+class ReExport:
+    name: str  # exposed name (alias or last target segment); "" for glob
+    target: tuple  # target path segments as written
+    glob: bool
+    line: int
+    cfg: Cfg = field(default_factory=Cfg.none)
+
+
+@dataclass
+class UseDecl:
+    segments: tuple
+    line: int
+    path: str  # repo-relative file it appears in
+    in_test: bool  # inside a cfg(test)-only scope
+    glob: bool = False
+
+
+@dataclass
+class Module:
+    name: str
+    file: str  # repo-relative path of the file declaring its body
+    test_only: bool = False
+    items: dict = field(default_factory=dict)
+    submodules: dict = field(default_factory=dict)
+    reexports: list = field(default_factory=list)
+    uses: list = field(default_factory=list)
+
+
+@dataclass
+class CrateIndex:
+    root: Module
+    crate_name: str
+    problems: list = field(default_factory=list)  # (path, line, message)
+    cfg_features: list = field(default_factory=list)  # (path, line, feature)
+
+    def all_modules(self):
+        stack = [self.root]
+        while stack:
+            m = stack.pop()
+            yield m
+            stack.extend(m.submodules.values())
+
+    def all_uses(self):
+        for m in self.all_modules():
+            yield from m.uses
+
+
+def _parse_cfg_condition(cond):
+    """Evaluate a cfg condition with test=False, everything else True.
+
+    An item is test-only exactly when its condition is False under that
+    assignment: cfg(test) and cfg(all(test, …)) vanish from non-test
+    builds, cfg(any(test, feature = "x")) does not.
+    """
+    toks = re.findall(r'[A-Za-z_][A-Za-z0-9_]*|"[^"]*"|[(),=]', cond)
+    pos = [0]
+
+    def parse():
+        if pos[0] >= len(toks):
+            return True
+        t = toks[pos[0]]
+        pos[0] += 1
+        if t in ("any", "all", "not") and pos[0] < len(toks) and toks[pos[0]] == "(":
+            pos[0] += 1  # '('
+            args = []
+            while pos[0] < len(toks) and toks[pos[0]] != ")":
+                if toks[pos[0]] == ",":
+                    pos[0] += 1
+                    continue
+                args.append(parse())
+            pos[0] += 1  # ')'
+            if t == "any":
+                return any(args)
+            if t == "all":
+                return all(args)
+            return not args[0] if args else True
+        # key = "value" pairs: consume them
+        if pos[0] + 1 < len(toks) and toks[pos[0]] == "=":
+            pos[0] += 2
+            return True  # feature/target_os/… assumed enabled
+        return t != "test"
+
+    return parse()
+
+
+def make_cfg(attr_texts):
+    """Combine the cfg conditions of an item's attributes."""
+    conds, features = [], []
+    for a in attr_texts:
+        m = re.search(r"\bcfg\s*\((.*)\)\s*\]\s*$", a, re.S)
+        if m:
+            conds.append(m.group(1).strip())
+        features.extend(FEATURE_RE.findall(a))
+    test_only = any(not _parse_cfg_condition(c) for c in conds)
+    return Cfg(raw="; ".join(conds), test_only=test_only, features=tuple(features))
+
+
+class _Parser:
+    def __init__(self, index, repo_root):
+        self.index = index
+        self.repo_root = Path(repo_root)
+
+    def parse_file(self, module, file_path, child_dir, in_test):
+        rel = str(Path(file_path).relative_to(self.repo_root))
+        try:
+            text = Path(file_path).read_text()
+        except OSError as e:
+            self.index.problems.append((rel, 0, f"unreadable module file: {e}"))
+            return
+        toks = code_tokens(tokenize(text))
+        self.parse_body(module, toks, 0, len(toks), rel, child_dir, in_test)
+
+    def parse_body(self, module, toks, lo, hi, rel, child_dir, in_test):
+        i = lo
+        pending_attrs = []
+        while i < hi:
+            t = toks[i]
+            if t.kind == "punct" and t.value == "#":
+                # attribute: # [ … ]  (or inner #![…])
+                j = i + 1
+                if j < hi and toks[j].kind == "punct" and toks[j].value == "!":
+                    j += 1
+                if j < hi and toks[j].kind == "punct" and toks[j].value == "[":
+                    end = _match_bracket(toks, j, hi)
+                    attr = " ".join(tk.value for tk in toks[i : end + 1])
+                    pending_attrs.append((attr, t.line))
+                    for feat in FEATURE_RE.findall(attr):
+                        self.index.cfg_features.append((rel, t.line, feat))
+                    i = end + 1
+                    continue
+                i += 1
+                continue
+            if t.kind != "ident":
+                i += 1
+                pending_attrs = []
+                continue
+
+            kw = t.value
+            cfg = make_cfg([a for a, _ in pending_attrs])
+            if in_test and not cfg.test_only:
+                # items inside a cfg(test) module are test-only too
+                cfg = Cfg(cfg.raw, True, cfg.features)
+            pending_attrs = []
+
+            # visibility prefix
+            if kw == "pub":
+                i += 1
+                if i < hi and toks[i].kind == "punct" and toks[i].value == "(":
+                    i = _match_paren(toks, i, hi) + 1
+                if i >= hi or toks[i].kind != "ident":
+                    continue
+                kw = toks[i].value
+                t = toks[i]
+                is_pub = True
+            else:
+                is_pub = False
+            if kw == "unsafe" and i + 1 < hi and toks[i + 1].kind == "ident":
+                i += 1
+                kw = toks[i].value
+                t = toks[i]
+
+            if kw == "use":
+                trees, i = _parse_use(toks, i + 1, hi)
+                for segs, glob, alias in trees:
+                    module.uses.append(
+                        UseDecl(tuple(segs), t.line, rel, in_test or cfg.test_only, glob)
+                    )
+                    if is_pub:
+                        name = alias or (segs[-1] if segs else "")
+                        module.reexports.append(
+                            ReExport(name if not glob else "", tuple(segs), glob, t.line, cfg)
+                        )
+                continue
+            if kw == "mod":
+                i = self._parse_mod(module, toks, i, hi, rel, child_dir, in_test, cfg)
+                continue
+            if kw == "fn":
+                name, i = _ident_after(toks, i + 1, hi)
+                if name:
+                    module.items.setdefault(name, Item(name, "fn", t.line, cfg))
+                i = _skip_to_body_or_semi(toks, i, hi)
+                continue
+            if kw == "struct":
+                name, i = _ident_after(toks, i + 1, hi)
+                if name:
+                    module.items[name] = Item(name, "struct", t.line, cfg)
+                i = _skip_to_body_or_semi(toks, i, hi)
+                continue
+            if kw == "enum":
+                name, i = _ident_after(toks, i + 1, hi)
+                body_end = _skip_to_body_or_semi(toks, i, hi)
+                variants = _enum_variants(toks, i, body_end)
+                if name:
+                    module.items[name] = Item(name, "enum", t.line, cfg, tuple(variants))
+                i = body_end
+                continue
+            if kw in _BRACE_ITEMS:
+                name, i = _ident_after(toks, i + 1, hi)
+                if name:
+                    module.items[name] = Item(name, kw, t.line, cfg)
+                i = _skip_to_body_or_semi(toks, i, hi)
+                continue
+            if kw in _SEMI_ITEMS:
+                # `const fn` is a fn, `const _: () = …` is unnamed
+                if kw == "const" and i + 1 < hi and toks[i + 1].value == "fn":
+                    i += 1
+                    continue
+                name, i = _ident_after(toks, i + 1, hi)
+                if name and name != "_":
+                    module.items[name] = Item(name, kw, t.line, cfg)
+                i = _skip_to_body_or_semi(toks, i, hi)
+                continue
+            if kw == "macro_rules":
+                # macro_rules ! name { … }
+                j = i + 1
+                if j < hi and toks[j].value == "!":
+                    name, j = _ident_after(toks, j + 1, hi)
+                    if name:
+                        module.items[name] = Item(name, "macro", t.line, cfg)
+                i = _skip_to_body_or_semi(toks, j if j > i else i + 1, hi)
+                continue
+            if kw == "impl":
+                i = _skip_to_body_or_semi(toks, i + 1, hi)
+                continue
+            if kw == "extern":
+                if i + 1 < hi and toks[i + 1].value == "crate":
+                    name, i = _ident_after(toks, i + 2, hi)
+                    if name:
+                        module.items[name] = Item(name, "extern-crate", t.line, cfg)
+                i = _skip_to_body_or_semi(toks, i, hi)
+                continue
+            i += 1
+
+    def _parse_mod(self, module, toks, i, hi, rel, child_dir, in_test, cfg):
+        line = toks[i].line
+        name, i = _ident_after(toks, i + 1, hi)
+        if not name:
+            return i
+        child = Module(name, rel, test_only=in_test or cfg.test_only)
+        if i < hi and toks[i].kind == "punct" and toks[i].value == ";":
+            # file module: child_dir/name.rs or child_dir/name/mod.rs
+            cand = [child_dir / f"{name}.rs", child_dir / name / "mod.rs"]
+            found = next((c for c in cand if c.is_file()), None)
+            if found is None:
+                self.index.problems.append(
+                    (rel, line,
+                     f"mod {name}; has no backing file ({cand[0].relative_to(self.repo_root)}"
+                     f" or {cand[1].relative_to(self.repo_root)})")
+                )
+            else:
+                child.file = str(found.relative_to(self.repo_root))
+                self.parse_file(child, found, child_dir / name, child.test_only)
+            module.submodules[name] = child
+            return i + 1
+        if i < hi and toks[i].kind == "punct" and toks[i].value == "{":
+            end = match_brace(toks, i)
+            self.parse_body(child, toks, i + 1, end, rel, child_dir / name, child.test_only)
+            module.submodules[name] = child
+            return end + 1
+        return i
+
+
+def _ident_after(toks, i, hi):
+    if i < hi and toks[i].kind == "ident":
+        return toks[i].value, i + 1
+    return None, i
+
+
+def _match_bracket(toks, open_idx, hi):
+    depth = 0
+    for k in range(open_idx, hi):
+        v = toks[k].value if toks[k].kind == "punct" else ""
+        if v == "[":
+            depth += 1
+        elif v == "]":
+            depth -= 1
+            if depth == 0:
+                return k
+    return hi - 1
+
+
+def _match_paren(toks, open_idx, hi):
+    depth = 0
+    for k in range(open_idx, hi):
+        v = toks[k].value if toks[k].kind == "punct" else ""
+        if v == "(":
+            depth += 1
+        elif v == ")":
+            depth -= 1
+            if depth == 0:
+                return k
+    return hi - 1
+
+
+def _skip_to_body_or_semi(toks, i, hi):
+    """Skip past an item tail: its `{…}` body or terminating `;`.
+
+    `;` only terminates at zero (), [] nesting so `[u64; 2]` and tuple
+    struct bodies are crossed correctly; a `{` at zero nesting opens the
+    item body (matched and skipped). Initializer braces after `=`
+    (struct literals in consts) are also just balanced groups here.
+    """
+    par = brk = 0
+    k = i
+    while k < hi:
+        t = toks[k]
+        if t.kind != "punct":
+            k += 1
+            continue
+        v = t.value
+        if v == "(":
+            par += 1
+        elif v == ")":
+            par -= 1
+        elif v == "[":
+            brk += 1
+        elif v == "]":
+            brk -= 1
+        elif v == "{" and par == 0 and brk == 0:
+            return match_brace(toks, k) + 1
+        elif v == ";" and par == 0 and brk == 0:
+            return k + 1
+        k += 1
+    return hi
+
+
+def _enum_variants(toks, i, body_end):
+    """Variant names of the enum whose tokens end at body_end."""
+    # find the opening brace of the enum body
+    par = brk = 0
+    k = i
+    while k < body_end:
+        t = toks[k]
+        if t.kind == "punct":
+            if t.value == "(":
+                par += 1
+            elif t.value == ")":
+                par -= 1
+            elif t.value == "[":
+                brk += 1
+            elif t.value == "]":
+                brk -= 1
+            elif t.value == "{" and par == 0 and brk == 0:
+                break
+        k += 1
+    if k >= body_end:
+        return []
+    variants, depth, expect = [], 0, True
+    for j in range(k, body_end):
+        t = toks[j]
+        if t.kind == "punct":
+            if t.value in "{([":
+                depth += 1
+            elif t.value in "})]":
+                depth -= 1
+            elif t.value == "," and depth == 1:
+                expect = True
+            elif t.value == "#":
+                continue
+            continue
+        if t.kind == "ident" and depth == 1 and expect:
+            variants.append(t.value)
+            expect = False
+    return variants
+
+
+def _parse_use(toks, i, hi):
+    """Expand the use-tree starting at `i`; returns (trees, index_after).
+
+    Each tree is (segments, is_glob, alias). Stops after the closing `;`.
+    """
+    trees, i = _parse_use_tree(toks, i, hi, [])
+    while i < hi and not (toks[i].kind == "punct" and toks[i].value == ";"):
+        i += 1
+    return trees, i + 1
+
+
+def _parse_use_tree(toks, i, hi, prefix):
+    segs = list(prefix)
+    alias = None
+    while i < hi:
+        t = toks[i]
+        if t.kind == "ident" and t.value == "as":
+            if i + 1 < hi and toks[i + 1].kind == "ident":
+                alias = toks[i + 1].value
+                i += 2
+            else:
+                i += 1
+            break
+        if t.kind == "ident":
+            segs.append(t.value)
+            i += 1
+            # `::` ?
+            if (
+                i + 1 < hi
+                and toks[i].kind == "punct" and toks[i].value == ":"
+                and toks[i + 1].kind == "punct" and toks[i + 1].value == ":"
+            ):
+                i += 2
+                continue
+            break
+        if t.kind == "punct" and t.value == "*":
+            return [(segs, True, None)], i + 1
+        if t.kind == "punct" and t.value == "{":
+            out = []
+            i += 1
+            while i < hi and not (toks[i].kind == "punct" and toks[i].value == "}"):
+                if toks[i].kind == "punct" and toks[i].value == ",":
+                    i += 1
+                    continue
+                sub, i = _parse_use_tree(toks, i, hi, segs)
+                out.extend(sub)
+            return out, i + 1
+        break
+    return [(segs, False, alias)], i
+
+
+def build_crate_index(repo_root, root_file, crate_name):
+    """Index the crate rooted at `root_file` (repo-relative or absolute)."""
+    repo_root = Path(repo_root)
+    root_path = repo_root / root_file if not Path(root_file).is_absolute() else Path(root_file)
+    root = Module("crate", str(root_path.relative_to(repo_root)))
+    index = CrateIndex(root, crate_name)
+    _Parser(index, repo_root).parse_file(root, root_path, root_path.parent, False)
+    return index
+
+
+# ---------------------------------------------------------------------------
+# Path resolution
+
+RESOLVED, UNRESOLVED, EXTERNAL = "resolved", "unresolved", "external"
+
+
+def resolve_path(index, segments, lib_index=None):
+    """Resolve a use path against a crate index.
+
+    Returns (status, obj) where status is RESOLVED / UNRESOLVED /
+    EXTERNAL and obj is the Module or Item reached (RESOLVED only).
+    `lib_index` lets bin/test/bench crates resolve `<libname>::…` paths
+    against the library crate.
+    """
+    segs = list(segments)
+    if not segs:
+        return EXTERNAL, None
+    head = segs[0]
+    if head == "crate":
+        return _resolve_in(index, index.root, segs[1:])
+    if lib_index is not None and head == lib_index.crate_name:
+        return _resolve_in(lib_index, lib_index.root, segs[1:])
+    if index is not None and head == index.crate_name:
+        return _resolve_in(index, index.root, segs[1:])
+    return EXTERNAL, None
+
+
+def _resolve_in(index, module, segs, depth=0):
+    if depth > 16:  # re-export cycle guard
+        return UNRESOLVED, None
+    if not segs:
+        return RESOLVED, module
+    cur = module
+    for k, seg in enumerate(segs):
+        last = k == len(segs) - 1
+        rest = segs[k + 1 :]
+        if seg in ("self",):
+            continue
+        if seg in cur.submodules:
+            cur = cur.submodules[seg]
+            if last:
+                return RESOLVED, cur
+            continue
+        if seg in cur.items:
+            item = cur.items[seg]
+            if last:
+                return RESOLVED, item
+            # Enum::Variant is the only multi-segment item path in use
+            # decls this subset accepts.
+            if len(rest) == 1 and item.kind == "enum" and rest[0] in item.variants:
+                return RESOLVED, item
+            return UNRESOLVED, None
+        # named re-exports
+        rex = next((r for r in cur.reexports if not r.glob and r.name == seg), None)
+        if rex is not None:
+            status, obj = _resolve_relative(index, cur, rex.target, depth + 1)
+            if status != RESOLVED:
+                return status, None
+            if last:
+                return RESOLVED, obj
+            if isinstance(obj, Module):
+                cur = obj
+                continue
+            return UNRESOLVED, None
+        # glob re-exports: try each target module
+        saw_external = False
+        for r in (r for r in cur.reexports if r.glob):
+            status, obj = _resolve_relative(index, cur, r.target, depth + 1)
+            if status == EXTERNAL:
+                saw_external = True
+                continue
+            if status == RESOLVED and isinstance(obj, Module):
+                status2, obj2 = _resolve_in(index, obj, segs[k:], depth + 1)
+                if status2 == RESOLVED:
+                    return status2, obj2
+        if saw_external:
+            return EXTERNAL, None
+        return UNRESOLVED, None
+    return RESOLVED, cur
+
+
+def _resolve_relative(index, module, target, depth):
+    """Resolve a re-export target written relative to `module`."""
+    segs = list(target)
+    if not segs:
+        return UNRESOLVED, None
+    if segs[0] == "crate":
+        return _resolve_in(index, index.root, segs[1:], depth)
+    if segs[0] == "self":
+        return _resolve_in(index, module, segs[1:], depth)
+    if segs[0] == "super":
+        # parents aren't tracked on Module; resolve supers from the root
+        # by path — conservatively treat as external (repo doesn't use
+        # `pub use super::…`).
+        return EXTERNAL, None
+    # 2018 edition: a bare leading segment names a sibling submodule or
+    # item of `module`; otherwise it is an external crate.
+    if segs[0] in module.submodules or segs[0] in module.items:
+        return _resolve_in(index, module, segs, depth)
+    return EXTERNAL, None
+
+
+def is_test_only(obj):
+    if isinstance(obj, Module):
+        return obj.test_only
+    if isinstance(obj, Item):
+        return obj.cfg.test_only
+    return False

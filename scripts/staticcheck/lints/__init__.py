@@ -1,0 +1,5 @@
+"""Lint registry. Each lint module exposes `NAME` and `run(repo)`."""
+
+from . import modpath, features, panics, consistency, concurrency
+
+ALL_LINTS = [modpath, features, panics, consistency, concurrency]

@@ -1,0 +1,147 @@
+"""Lint 5 — concurrency audit over the coordinator.
+
+Two checks:
+
+1. **Lock-order inversions.** Records, per function across
+   `rust/src/coordinator/*.rs`, the order in which named mutexes are
+   acquired (`<name>.lock()` call sites, first occurrence each). Any
+   cycle in the resulting global acquisition-order graph — `a` before
+   `b` in one function, `b` before `a` in another — is a potential
+   deadlock and is flagged. Guard lifetimes are not modeled, so the
+   check is conservative; waive a provably-released pair with
+   `// staticcheck: allow(concurrency, "…")` on the later acquisition.
+
+2. **Relaxed reads in `Metrics::snapshot`.** The snapshot-coherence
+   contract wants `Ordering::Acquire` loads in `snapshot()` so a
+   reader that observes a bumped counter also observes the writes that
+   preceded the bump; `Ordering::Relaxed` there is flagged.
+"""
+
+from ..report import Finding, collect_waivers, apply_waivers
+from ..tokenizer import code_tokens, match_brace
+
+NAME = "concurrency"
+CATEGORY = "concurrency"
+
+COORD_GLOB = "rust/src/coordinator/*.rs"
+
+
+def run(repo):
+    findings = []
+    edges = {}  # (a, b) -> (path, line, fn_name) of the b-acquisition
+    for rel in repo.glob(COORD_GLOB):
+        text = repo.read(rel)
+        all_toks = repo.tokens(rel)
+        waivers, waiver_errors = collect_waivers(text, all_toks)
+        for line, msg in waiver_errors:
+            findings.append(Finding(NAME, CATEGORY, rel, line, msg))
+        toks = code_tokens(all_toks)
+        file_findings = []
+        for fn_name, lo, hi in _functions(toks):
+            seq = _lock_sequence(toks, lo, hi)
+            for ai in range(len(seq)):
+                for bi in range(ai + 1, len(seq)):
+                    a, (b, line) = seq[ai][0], (seq[bi][0], seq[bi][1])
+                    if a != b and (a, b) not in edges:
+                        edges[(a, b)] = (rel, line, fn_name)
+            if fn_name == "snapshot":
+                file_findings.extend(_relaxed_loads(toks, lo, hi, rel))
+        apply_waivers(file_findings, waivers)
+        findings.extend(file_findings)
+
+    findings.extend(_order_cycles(edges))
+    return findings
+
+
+def _functions(toks):
+    """Yield (name, body_lo, body_hi) for every fn in the token stream."""
+    i, n = 0, len(toks)
+    while i < n:
+        t = toks[i]
+        if t.kind == "ident" and t.value == "fn" and i + 1 < n and toks[i + 1].kind == "ident":
+            name = toks[i + 1].value
+            j = i + 2
+            par = brk = 0
+            while j < n:
+                v = toks[j].value if toks[j].kind == "punct" else ""
+                if v == "(":
+                    par += 1
+                elif v == ")":
+                    par -= 1
+                elif v == "[":
+                    brk += 1
+                elif v == "]":
+                    brk -= 1
+                elif v == "{" and par == 0 and brk == 0:
+                    end = match_brace(toks, j)
+                    yield name, j + 1, end
+                    break
+                elif v == ";" and par == 0 and brk == 0:
+                    break  # trait method declaration, no body
+                j += 1
+            i = j
+        i += 1
+
+
+def _lock_sequence(toks, lo, hi):
+    """First-acquisition order of named mutexes in a function body."""
+    seen, seq = set(), []
+    for i in range(lo, hi):
+        t = toks[i]
+        if (
+            t.kind == "ident" and t.value == "lock"
+            and i > 1 and toks[i - 1].kind == "punct" and toks[i - 1].value == "."
+            and i + 1 < hi and toks[i + 1].kind == "punct" and toks[i + 1].value == "("
+            and toks[i - 2].kind == "ident"
+        ):
+            name = toks[i - 2].value
+            if name not in seen:
+                seen.add(name)
+                seq.append((name, t.line))
+    return seq
+
+
+def _relaxed_loads(toks, lo, hi, rel):
+    out = []
+    for i in range(lo, hi):
+        t = toks[i]
+        if t.kind == "ident" and t.value == "Relaxed":
+            out.append(
+                Finding(NAME, CATEGORY, rel, t.line,
+                        "Ordering::Relaxed read inside Metrics::snapshot —"
+                        " the snapshot-coherence contract wants Acquire")
+            )
+    return out
+
+
+def _order_cycles(edges):
+    """Flag every edge that participates in an acquisition-order cycle."""
+    graph = {}
+    for (a, b) in edges:
+        graph.setdefault(a, set()).add(b)
+
+    def reaches(src, dst):
+        stack, seen = [src], set()
+        while stack:
+            x = stack.pop()
+            if x == dst:
+                return True
+            if x in seen:
+                continue
+            seen.add(x)
+            stack.extend(graph.get(x, ()))
+        return False
+
+    out, reported = [], set()
+    for (a, b), (rel, line, fn_name) in sorted(edges.items()):
+        if frozenset((a, b)) in reported:
+            continue
+        if reaches(b, a):
+            reported.add(frozenset((a, b)))
+            out.append(
+                Finding(NAME, CATEGORY, rel, line,
+                        f"lock-order inversion: `{a}` is acquired before"
+                        f" `{b}` in fn {fn_name}, but a path acquires them"
+                        " in the opposite order")
+            )
+    return out

@@ -1,0 +1,219 @@
+"""Lint 4 — cross-layer consistency.
+
+Three agreements that live in different files and drift independently:
+
+1. `configs/*.toml` ↔ `rust/src/config.rs`: every section and key a
+   shipped config uses must appear as a string literal in config.rs —
+   a key the parser never names is silently ignored at load time.
+2. CLI flags: the `--flag` set parsed by `rust/src/main.rs`
+   (`req`/`opt`/`opt_parse`/`opt_some`/`has` call sites and the
+   boolean-flag lists passed to `Args::parse`) must match the `--flag`
+   set the README documents, in both directions. README lines invoking
+   other tools (`cargo …`, `aot.py …`) are exempt.
+3. `.rlsh` persistence ↔ README: every format version constant
+   (`MAGIC_Vn`) and every checksummed section name that
+   `rust/src/index/persist.rs` verifies must be mentioned in README.
+"""
+
+import re
+
+from ..report import Finding
+from ..tokenizer import code_tokens
+
+NAME = "cross-layer"
+CATEGORY = "consistency"
+
+CONFIG_RS = "rust/src/config.rs"
+MAIN_RS = "rust/src/main.rs"
+PERSIST_RS = "rust/src/index/persist.rs"
+README = "README.md"
+
+ARG_METHODS = frozenset(["req", "opt", "opt_parse", "opt_some", "has"])
+README_FLAG_RE = re.compile(r"--([a-z][a-z0-9-]*)")
+# README lines whose --flags belong to other tools, not our CLI.
+FOREIGN_TOOL_RE = re.compile(
+    r"\bcargo\b|\baot\.py\b|\bpython3?\b|\bcompile\.aot\b|\bcheck\.py\b|\bpip\b|\bgit\b"
+)
+
+
+def run(repo):
+    findings = []
+    findings.extend(_check_configs(repo))
+    findings.extend(_check_cli_flags(repo))
+    findings.extend(_check_persistence(repo))
+    return findings
+
+
+# -- 1: configs ↔ config.rs -----------------------------------------------
+
+
+def _check_configs(repo):
+    cfg_rs = repo.read(CONFIG_RS)
+    files = repo.config_files()
+    if cfg_rs is None or not files:
+        return []
+    literals = {
+        t.value.strip('"')
+        for t in code_tokens(repo.tokens(CONFIG_RS))
+        if t.kind == "str"
+    }
+    out = []
+    for rel in files:
+        section = ""
+        for lineno, raw in enumerate((repo.read(rel) or "").splitlines(), 1):
+            s = raw.split("#", 1)[0].strip()
+            if not s:
+                continue
+            if s.startswith("[") and s.endswith("]"):
+                section = s[1:-1].strip()
+                if section not in literals:
+                    out.append(
+                        Finding(NAME, CATEGORY, rel, lineno,
+                                f"section [{section}] is never named by"
+                                f" {CONFIG_RS}")
+                    )
+                continue
+            if "=" in s:
+                key = s.split("=", 1)[0].strip()
+                if key not in literals:
+                    out.append(
+                        Finding(NAME, CATEGORY, rel, lineno,
+                                f"[{section}] key `{key}` is never parsed by"
+                                f" {CONFIG_RS} — it would be silently ignored")
+                    )
+    return out
+
+
+# -- 2: CLI flags ↔ README -------------------------------------------------
+
+
+def _main_rs_flags(repo):
+    """flag -> first definition line in main.rs."""
+    toks = code_tokens(repo.tokens(MAIN_RS))
+    flags = {}
+    i, n = 0, len(toks)
+    while i < n:
+        t = toks[i]
+        if t.kind == "ident" and t.value in ARG_METHODS:
+            j = i + 1
+            # optional turbofish ::<…>
+            if j + 1 < n and toks[j].value == ":" and toks[j + 1].value == ":":
+                j += 2
+                if j < n and toks[j].value == "<":
+                    depth = 0
+                    while j < n:
+                        if toks[j].value == "<":
+                            depth += 1
+                        elif toks[j].value == ">":
+                            depth -= 1
+                            if depth == 0:
+                                j += 1
+                                break
+                        j += 1
+            if j < n and toks[j].kind == "punct" and toks[j].value == "(":
+                if j + 1 < n and toks[j + 1].kind == "str":
+                    name = toks[j + 1].value.strip('"')
+                    flags.setdefault(name, toks[j + 1].line)
+        # boolean-flag lists: Args::parse(rest, &["compare", …])
+        if t.kind == "ident" and t.value == "parse" and i + 1 < n and toks[i + 1].value == "(":
+            depth, j = 0, i + 1
+            in_list = False
+            while j < n:
+                v = toks[j].value if toks[j].kind == "punct" else ""
+                if v == "(":
+                    depth += 1
+                elif v == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+                elif v == "[":
+                    in_list = True
+                elif v == "]":
+                    in_list = False
+                elif in_list and toks[j].kind == "str":
+                    name = toks[j].value.strip('"')
+                    flags.setdefault(name, toks[j].line)
+                j += 1
+        i += 1
+    return flags
+
+
+def _readme_flags(repo):
+    """flag -> first mention line in README."""
+    flags = {}
+    for lineno, line in enumerate((repo.read(README) or "").splitlines(), 1):
+        if FOREIGN_TOOL_RE.search(line):
+            continue
+        for m in README_FLAG_RE.finditer(line):
+            flags.setdefault(m.group(1), lineno)
+    return flags
+
+
+def _check_cli_flags(repo):
+    if repo.read(MAIN_RS) is None or repo.read(README) is None:
+        return []
+    impl = _main_rs_flags(repo)
+    docs = _readme_flags(repo)
+    out = []
+    for flag, line in sorted(impl.items()):
+        if flag not in docs:
+            out.append(
+                Finding(NAME, CATEGORY, MAIN_RS, line,
+                        f"CLI flag --{flag} is parsed here but undocumented"
+                        " in README.md")
+            )
+    for flag, line in sorted(docs.items()):
+        if flag not in impl:
+            out.append(
+                Finding(NAME, CATEGORY, README, line,
+                        f"README documents --{flag}, which main.rs does not"
+                        " parse")
+            )
+    return out
+
+
+# -- 3: persistence tags ↔ README -----------------------------------------
+
+
+def _check_persistence(repo):
+    persist = repo.read(PERSIST_RS)
+    readme = repo.read(README)
+    if persist is None or readme is None:
+        return []
+    out = []
+    versions = sorted(set(re.findall(r"MAGIC_V(\d+)", persist)))
+    if versions and ".rlsh" not in readme:
+        out.append(
+            Finding(NAME, CATEGORY, README, 1,
+                    "README never mentions the .rlsh persistence format")
+        )
+    for v in versions:
+        if not re.search(rf"\bv{v}\b", readme):
+            out.append(
+                Finding(NAME, CATEGORY, PERSIST_RS, _line_of(persist, f"MAGIC_V{v}"),
+                        f".rlsh format v{v} exists in persist.rs but README"
+                        " never mentions it")
+            )
+    toks = code_tokens(repo.tokens(PERSIST_RS))
+    sections = {}
+    for i, t in enumerate(toks):
+        if (
+            t.kind == "ident" and t.value == "verify_section_crc"
+            and i + 2 < len(toks) and toks[i + 1].value == "(" and toks[i + 2].kind == "str"
+        ):
+            sections.setdefault(toks[i + 2].value.strip('"'), toks[i + 2].line)
+    for name, line in sorted(sections.items()):
+        if name not in readme:
+            out.append(
+                Finding(NAME, CATEGORY, PERSIST_RS, line,
+                        f'checksummed section "{name}" is not described in'
+                        " the README persistence section")
+            )
+    return out
+
+
+def _line_of(text, needle):
+    for i, line in enumerate(text.splitlines(), 1):
+        if needle in line:
+            return i
+    return 1

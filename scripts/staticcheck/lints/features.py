@@ -1,0 +1,56 @@
+"""Lint 2 — feature-gate coherence.
+
+Two contracts:
+
+1. Every `feature = "name"` mentioned in a `#[cfg(…)]` / `#[cfg_attr(…)]`
+   across the Rust sources names a feature declared in Cargo.toml
+   `[features]` — a typo'd gate silently compiles the code out (or in)
+   forever.
+2. `#[cfg(test)]`-only items are never referenced from non-test code:
+   a `use` outside a test scope that resolves to a test-only item or
+   module would not compile under `cargo build`.
+"""
+
+from ..items import resolve_path, RESOLVED, is_test_only
+from ..report import Finding
+
+NAME = "feature-gates"
+CATEGORY = "features"
+
+
+def run(repo):
+    findings = []
+    declared = repo.cargo_features()
+    lib = repo.lib_index()
+
+    indices = []
+    if lib is not None:
+        indices.append((lib, None))
+    for _, idx in repo.aux_indices():
+        if idx is not None:
+            indices.append((idx, lib))
+
+    for idx, lib_idx in indices:
+        if declared is not None:
+            for path, line, feat in idx.cfg_features:
+                if feat not in declared:
+                    findings.append(
+                        Finding(
+                            NAME, CATEGORY, path, line,
+                            f'cfg references feature "{feat}" not declared in'
+                            " Cargo.toml [features]",
+                        )
+                    )
+        for use in idx.all_uses():
+            if use.in_test:
+                continue
+            status, obj = resolve_path(idx, use.segments, lib_index=lib_idx)
+            if status == RESOLVED and is_test_only(obj):
+                findings.append(
+                    Finding(
+                        NAME, CATEGORY, use.path, use.line,
+                        f"non-test code imports cfg(test)-only item"
+                        f" `{'::'.join(use.segments)}`",
+                    )
+                )
+    return findings

@@ -1,0 +1,40 @@
+"""Lint 1 — module/path resolution.
+
+Every `mod foo;` must map to a backing file (`foo.rs` or `foo/mod.rs`
+next to the declaring module), and every `use crate::…` path — plus
+`use rangelsh::…` in the bin/test/bench/example crates — must resolve
+to a declared item, module, re-export, or enum variant. Paths into
+external crates (`std`, vendored `anyhow`, …) are out of scope.
+"""
+
+from ..items import resolve_path, RESOLVED, UNRESOLVED
+from ..report import Finding
+
+NAME = "mod-path"
+CATEGORY = "modpath"
+
+
+def run(repo):
+    findings = []
+    lib = repo.lib_index()
+    indices = []
+    if lib is not None:
+        indices.append((lib, None))
+    for _, idx in repo.aux_indices():
+        if idx is not None:
+            indices.append((idx, lib))
+
+    for idx, lib_idx in indices:
+        for path, line, msg in idx.problems:
+            findings.append(Finding(NAME, CATEGORY, path, line, msg))
+        for use in idx.all_uses():
+            status, _ = resolve_path(idx, use.segments, lib_index=lib_idx)
+            if status == UNRESOLVED:
+                findings.append(
+                    Finding(
+                        NAME, CATEGORY, use.path, use.line,
+                        f"use path `{'::'.join(use.segments)}` does not resolve"
+                        " to any declared item",
+                    )
+                )
+    return findings

@@ -1,0 +1,112 @@
+"""Lint 3 — panic paths in the serving coordinator.
+
+PR 7's degraded-serving contract routes *injected* shard panics through
+`catch_unwind` and treats them as shard loss; an accidental panic on the
+serving path is therefore silently misreported as infrastructure
+failure instead of crashing loudly in development. Inside the four
+serving modules, `unwrap()` / `expect()` / `unwrap_err()` /
+`expect_err()`, the panicking macros (`panic!`, `unreachable!`, `todo!`,
+`unimplemented!`), and bare index/slice expressions (`xs[i]`,
+`&rows[lo..hi]`) are forbidden unless annotated
+
+    // staticcheck: allow(panic, "<why this cannot fire>")
+
+`#[cfg(test)]` items (including inline `mod tests`) are exempt: they
+never ship, and tests *should* unwrap.
+"""
+
+from ..items import make_cfg, _match_bracket, _skip_to_body_or_semi
+from ..report import Finding, collect_waivers, apply_waivers
+from ..tokenizer import code_tokens, KEYWORDS
+
+NAME = "panic-path"
+CATEGORY = "panic"
+
+SERVING_FILES = [
+    "rust/src/coordinator/engine.rs",
+    "rust/src/coordinator/router.rs",
+    "rust/src/coordinator/server.rs",
+    "rust/src/coordinator/batcher.rs",
+]
+
+PANIC_METHODS = frozenset(["unwrap", "expect", "unwrap_err", "expect_err"])
+PANIC_MACROS = frozenset(["panic", "unreachable", "todo", "unimplemented"])
+
+
+def run(repo):
+    findings = []
+    for rel in SERVING_FILES:
+        text = repo.read(rel)
+        if text is None:
+            continue
+        all_toks = repo.tokens(rel)
+        waivers, waiver_errors = collect_waivers(text, all_toks)
+        for line, msg in waiver_errors:
+            findings.append(Finding(NAME, CATEGORY, rel, line, msg))
+        file_findings = _scan(code_tokens(all_toks), rel)
+        apply_waivers(file_findings, waivers)
+        findings.extend(file_findings)
+    return findings
+
+
+def _scan(toks, rel):
+    out = []
+    i, n = 0, len(toks)
+    while i < n:
+        t = toks[i]
+        # Attributes: capture cfg; a test-only item is skipped wholesale.
+        if t.kind == "punct" and t.value == "#":
+            j = i + 1
+            if j < n and toks[j].kind == "punct" and toks[j].value == "!":
+                j += 1
+            if j < n and toks[j].kind == "punct" and toks[j].value == "[":
+                end = _match_bracket(toks, j, n)
+                attr = " ".join(tk.value for tk in toks[i : end + 1])
+                if make_cfg([attr]).test_only:
+                    k = end + 1
+                    # further attributes on the same item
+                    while k < n and toks[k].kind == "punct" and toks[k].value == "#":
+                        k2 = k + 1
+                        if k2 < n and toks[k2].value == "[":
+                            k = _match_bracket(toks, k2, n) + 1
+                        else:
+                            break
+                    i = _skip_to_body_or_semi(toks, k, n)
+                    continue
+                i = end + 1
+                continue
+        if t.kind == "ident":
+            nxt = toks[i + 1] if i + 1 < n else None
+            prv = toks[i - 1] if i > 0 else None
+            if (
+                t.value in PANIC_METHODS
+                and prv is not None and prv.kind == "punct" and prv.value == "."
+                and nxt is not None and nxt.kind == "punct" and nxt.value == "("
+            ):
+                out.append(
+                    Finding(NAME, CATEGORY, rel, t.line,
+                            f".{t.value}() on the serving path can panic")
+                )
+            elif (
+                t.value in PANIC_MACROS
+                and nxt is not None and nxt.kind == "punct" and nxt.value == "!"
+            ):
+                out.append(
+                    Finding(NAME, CATEGORY, rel, t.line,
+                            f"{t.value}! on the serving path")
+                )
+        elif t.kind == "punct" and t.value == "[" and i > 0:
+            prv = toks[i - 1]
+            is_index = (
+                (prv.kind == "ident" and prv.value not in KEYWORDS)
+                or (prv.kind == "punct" and prv.value in ")]")
+                or prv.kind == "num"  # tuple-field slicing: x.0[..]
+            )
+            if is_index:
+                out.append(
+                    Finding(NAME, CATEGORY, rel, t.line,
+                            "bare index/slice expression can panic on the"
+                            " serving path")
+                )
+        i += 1
+    return out

@@ -1,0 +1,135 @@
+"""RepoContext — lazily loaded view of everything the lints read.
+
+One instance is shared by every lint in a `scripts/check.py` run so
+files are read and tokenized once. All accessors tolerate a missing
+file (tests point the context at minimal fixture trees that only carry
+what one lint needs); lints skip the checks whose inputs are absent.
+"""
+
+import re
+from pathlib import Path
+
+from . import items
+from .tokenizer import tokenize
+
+LIB_ROOT = "rust/src/lib.rs"
+BIN_ROOT = "rust/src/main.rs"
+CRATE_NAME = "rangelsh"
+
+
+class RepoContext:
+    def __init__(self, root):
+        self.root = Path(root)
+        self._texts = {}
+        self._tokens = {}
+        self._indices = {}
+
+    # -- file access --------------------------------------------------
+
+    def read(self, rel):
+        """File text, or None when absent."""
+        if rel not in self._texts:
+            p = self.root / rel
+            self._texts[rel] = p.read_text() if p.is_file() else None
+        return self._texts[rel]
+
+    def tokens(self, rel):
+        """Full token stream (comments included), or None when absent."""
+        if rel not in self._tokens:
+            text = self.read(rel)
+            self._tokens[rel] = None if text is None else tokenize(text)
+        return self._tokens[rel]
+
+    def glob(self, pattern):
+        return sorted(
+            str(p.relative_to(self.root)) for p in self.root.glob(pattern) if p.is_file()
+        )
+
+    # -- crate indices ------------------------------------------------
+
+    @property
+    def crate_name(self):
+        return self._cargo_package_name() or CRATE_NAME
+
+    def lib_index(self):
+        """Item index of the library crate, or None when absent."""
+        return self._index_for(LIB_ROOT)
+
+    def aux_crate_roots(self):
+        """Compilation roots other than the library: bin, tests, benches,
+        examples. Each is its own crate whose `use <lib>::…` paths must
+        resolve against the library index."""
+        roots = []
+        if (self.root / BIN_ROOT).is_file():
+            roots.append(BIN_ROOT)
+        for pat in ("tests/*.rs", "benches/*.rs", "examples/*.rs"):
+            roots.extend(self.glob(pat))
+        return roots
+
+    def _index_for(self, rel):
+        if rel not in self._indices:
+            if not (self.root / rel).is_file():
+                self._indices[rel] = None
+            else:
+                self._indices[rel] = items.build_crate_index(self.root, rel, self.crate_name)
+        return self._indices[rel]
+
+    def aux_indices(self):
+        return [(r, self._index_for(r)) for r in self.aux_crate_roots()]
+
+    # -- Cargo.toml ----------------------------------------------------
+
+    def _cargo_package_name(self):
+        text = self.read("Cargo.toml")
+        if text is None:
+            return None
+        in_pkg = False
+        for line in text.splitlines():
+            s = line.strip()
+            if s.startswith("["):
+                in_pkg = s == "[package]" or s == "[lib]"
+                continue
+            if in_pkg:
+                m = re.match(r'name\s*=\s*"([^"]+)"', s)
+                if m:
+                    return m.group(1).replace("-", "_")
+        return None
+
+    def cargo_features(self):
+        """Feature names declared in Cargo.toml [features], or None."""
+        text = self.read("Cargo.toml")
+        if text is None:
+            return None
+        feats, in_features = set(), False
+        for line in text.splitlines():
+            s = line.split("#", 1)[0].strip()
+            if s.startswith("["):
+                in_features = s == "[features]"
+                continue
+            if in_features:
+                m = re.match(r'("?)([A-Za-z0-9_-]+)\1\s*=', s)
+                if m:
+                    feats.add(m.group(2))
+        return feats
+
+    # -- configs -------------------------------------------------------
+
+    def config_files(self):
+        return self.glob("configs/*.toml")
+
+    def parse_toml_keys(self, rel):
+        """section -> set of keys for a configs/*.toml file (the same
+        TOML subset `rust/src/util/toml.rs` accepts)."""
+        text = self.read(rel)
+        out, section = {}, ""
+        for line in (text or "").splitlines():
+            s = line.split("#", 1)[0].strip()
+            if not s:
+                continue
+            if s.startswith("[") and s.endswith("]"):
+                section = s[1:-1].strip()
+                out.setdefault(section, set())
+                continue
+            if "=" in s:
+                out.setdefault(section, set()).add(s.split("=", 1)[0].strip())
+        return out

@@ -1,0 +1,107 @@
+"""Findings, waivers, and report formatting.
+
+Waiver grammar (documented in README §"Static verification"):
+
+    // staticcheck: allow(<category>, "<reason>")
+
+- `<category>` names the lint family being waived (today: `panic`,
+  `concurrency`).
+- `<reason>` is mandatory and non-empty — an empty reason is itself a
+  finding.
+- A *trailing* waiver (code before the comment on the same line) covers
+  findings on that line only. A *standalone* waiver comment covers
+  findings on the next line of code. One waiver covers every finding of
+  its category on the covered line.
+"""
+
+import re
+from dataclasses import dataclass, field
+
+WAIVER_RE = re.compile(
+    r"staticcheck:\s*allow\(\s*([A-Za-z_-]+)\s*,\s*\"([^\"]*)\"\s*\)"
+)
+
+
+@dataclass
+class Finding:
+    lint: str  # lint name, e.g. "panic-path"
+    category: str  # waiver category it answers to, e.g. "panic"
+    path: str  # repo-relative file path
+    line: int
+    message: str
+    waived: bool = False
+    waive_reason: str = ""
+
+    def format(self):
+        mark = f"waived ({self.waive_reason})" if self.waived else "ERROR"
+        return f"  {self.path}:{self.line}: [{self.lint}] {self.message} — {mark}"
+
+
+@dataclass
+class Waiver:
+    category: str
+    reason: str
+    line: int  # line the waiver comment sits on
+    standalone: bool  # True when the comment is the whole line
+    used: bool = False
+
+    def covers(self, line):
+        return line == self.line or (self.standalone and line == self.line + 1)
+
+
+def collect_waivers(text, toks):
+    """Extract waivers from a file's comment tokens.
+
+    `text` is the file source (to decide standalone vs trailing),
+    `toks` the full token stream including comments. Malformed or
+    reason-less waivers are returned as error findings alongside.
+    """
+    lines = text.split("\n")
+    waivers, errors = [], []
+    for t in toks:
+        if t.kind != "comment":
+            continue
+        m = WAIVER_RE.search(t.value)
+        if m is None:
+            if "staticcheck:" in t.value:
+                errors.append(
+                    (t.line, "malformed staticcheck annotation (want "
+                     'staticcheck: allow(<category>, "<reason>"))')
+                )
+            continue
+        category, reason = m.group(1), m.group(2).strip()
+        if not reason:
+            errors.append((t.line, f"allow({category}, …) has an empty reason"))
+            continue
+        src_line = lines[t.line - 1] if t.line - 1 < len(lines) else ""
+        standalone = src_line.strip().startswith("//")
+        waivers.append(Waiver(category, reason, t.line, standalone))
+    return waivers, errors
+
+
+def apply_waivers(findings, waivers):
+    """Mark findings covered by a matching-category waiver."""
+    for f in findings:
+        for w in waivers:
+            if w.category == f.category and w.covers(f.line):
+                f.waived = True
+                f.waive_reason = w.reason
+                w.used = True
+                break
+    return findings
+
+
+@dataclass
+class Report:
+    findings: list = field(default_factory=list)
+
+    def extend(self, fs):
+        self.findings.extend(fs)
+
+    @property
+    def errors(self):
+        return [f for f in self.findings if not f.waived]
+
+    @property
+    def waived(self):
+        return [f for f in self.findings if f.waived]

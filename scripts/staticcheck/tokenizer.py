@@ -1,0 +1,203 @@
+"""Tokenizer for the Rust subset this repository uses.
+
+Produces a flat token stream with line numbers. The goal is *lexical
+fidelity*, not a grammar: downstream lints only need to know what is an
+identifier, what is a string, what is a comment (comments carry the
+`staticcheck: allow(...)` waivers), and where braces nest. Handles the
+constructs that break naive regex scanning of Rust:
+
+- line (`//`, `///`, `//!`) and nested block (`/* /* */ */`) comments
+- string / raw-string / byte-string literals (`"…"`, `r#"…"#`, `b"…"`)
+- char literals vs lifetimes (`'a'` vs `'a`)
+- numeric literals with suffixes and `0..n` ranges (the `..` is not
+  swallowed into the number)
+
+Anything else is a single-character punct token.
+"""
+
+from dataclasses import dataclass
+
+# Rust keywords that can precede `[` without forming an index
+# expression (`let [a, b] = …`, `in [..]`, `return [..]`, …).
+KEYWORDS = frozenset(
+    """as async await box break const continue crate dyn else enum extern
+    fn for if impl in let loop match mod move mut pub ref return self
+    Self static struct super trait type union unsafe use where while
+    yield""".split()
+)
+
+
+@dataclass
+class Tok:
+    kind: str  # ident | num | str | char | lifetime | punct | comment
+    value: str
+    line: int  # 1-based
+
+    def __repr__(self):  # compact, for test failure messages
+        return f"{self.kind}:{self.value!r}@{self.line}"
+
+
+def _is_ident_start(c):
+    return c.isalpha() or c == "_"
+
+
+def _is_ident_cont(c):
+    return c.isalnum() or c == "_"
+
+
+def tokenize(text):
+    """Tokenize Rust source `text` into a list of Tok."""
+    toks = []
+    i, n, line = 0, len(text), 1
+    while i < n:
+        c = text[i]
+        if c == "\n":
+            line += 1
+            i += 1
+            continue
+        if c in " \t\r":
+            i += 1
+            continue
+        # Comments.
+        if c == "/" and i + 1 < n:
+            nxt = text[i + 1]
+            if nxt == "/":
+                j = text.find("\n", i)
+                if j == -1:
+                    j = n
+                toks.append(Tok("comment", text[i:j], line))
+                i = j
+                continue
+            if nxt == "*":
+                start, depth, j = i, 1, i + 2
+                while j < n and depth:
+                    if text.startswith("/*", j):
+                        depth += 1
+                        j += 2
+                    elif text.startswith("*/", j):
+                        depth -= 1
+                        j += 2
+                    else:
+                        j += 1
+                body = text[start:j]
+                toks.append(Tok("comment", body, line))
+                line += body.count("\n")
+                i = j
+                continue
+        # Raw / byte strings: r"…", r#"…"#, b"…", br#"…"#.
+        if c in "rb":
+            j = i
+            prefix = c
+            if c == "b" and j + 1 < n and text[j + 1] == "r":
+                prefix = "br"
+                j += 1
+            if prefix in ("r", "br") or (c == "b" and j + 1 < n and text[j + 1] == '"'):
+                k = j + 1
+                hashes = 0
+                while prefix != "b" and k < n and text[k] == "#":
+                    hashes += 1
+                    k += 1
+                if k < n and text[k] == '"' and (prefix != "b" or hashes == 0):
+                    if prefix == "b":
+                        # plain byte string b"…": fall through to the
+                        # normal string scanner below with the b eaten
+                        body, end, nl = _scan_string(text, k)
+                        toks.append(Tok("str", text[i:end], line))
+                        line += nl
+                        i = end
+                        continue
+                    close = '"' + "#" * hashes
+                    end = text.find(close, k + 1)
+                    end = n if end == -1 else end + len(close)
+                    toks.append(Tok("str", text[i:end], line))
+                    line += text.count("\n", i, end)
+                    i = end
+                    continue
+        if c == '"':
+            body, end, nl = _scan_string(text, i)
+            toks.append(Tok("str", text[i:end], line))
+            line += nl
+            i = end
+            continue
+        # Char literal vs lifetime.
+        if c == "'":
+            if i + 1 < n and text[i + 1] == "\\":
+                j = i + 2
+                if j < n:
+                    j += 1  # escaped char (or first of \x.., \u{..})
+                while j < n and text[j] != "'":
+                    j += 1
+                toks.append(Tok("char", text[i : j + 1], line))
+                i = j + 1
+                continue
+            if i + 2 < n and text[i + 2] == "'" and text[i + 1] != "'":
+                toks.append(Tok("char", text[i : i + 3], line))
+                i += 3
+                continue
+            # Lifetime: 'ident (includes 'static, '_).
+            j = i + 1
+            while j < n and _is_ident_cont(text[j]):
+                j += 1
+            toks.append(Tok("lifetime", text[i:j], line))
+            i = j
+            continue
+        if _is_ident_start(c):
+            j = i + 1
+            while j < n and _is_ident_cont(text[j]):
+                j += 1
+            toks.append(Tok("ident", text[i:j], line))
+            i = j
+            continue
+        if c.isdigit():
+            j = i + 1
+            while j < n and (_is_ident_cont(text[j])):
+                j += 1
+            # Fraction — but not a `..` range and not a method call `.0`-style.
+            if j + 1 < n and text[j] == "." and text[j + 1].isdigit():
+                j += 1
+                while j < n and _is_ident_cont(text[j]):
+                    j += 1
+            toks.append(Tok("num", text[i:j], line))
+            i = j
+            continue
+        toks.append(Tok("punct", c, line))
+        i += 1
+    return toks
+
+
+def _scan_string(text, i):
+    """Scan a normal string starting at the opening quote `text[i]`.
+
+    Returns (body, end_index_after_closing_quote, newlines_crossed).
+    """
+    j, n = i + 1, len(text)
+    while j < n:
+        if text[j] == "\\":
+            j += 2
+            continue
+        if text[j] == '"':
+            j += 1
+            break
+        j += 1
+    else:
+        j = n
+    return text[i:j], j, text.count("\n", i, j)
+
+
+def code_tokens(toks):
+    """The token stream without comments (most lints want this view)."""
+    return [t for t in toks if t.kind != "comment"]
+
+
+def match_brace(toks, open_idx):
+    """Index of the `}` matching the `{` at `open_idx` (or len(toks))."""
+    depth = 0
+    for k in range(open_idx, len(toks)):
+        t = toks[k]
+        if t.kind == "punct" and t.value == "{":
+            depth += 1
+        elif t.kind == "punct" and t.value == "}":
+            depth -= 1
+            if depth == 0:
+                return k
+    return len(toks)

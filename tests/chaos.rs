@@ -182,7 +182,7 @@ fn overload_shedding_is_typed_under_fault_injection_build() {
     // the in-crate unit test, exercised here under the feature build.
     let shard = build_shards(5).remove(0);
     let policy = BatchPolicy::new(64, Duration::from_millis(10));
-    let handle = QueryServer::spawn(shard.engine.clone(), policy);
+    let handle = QueryServer::spawn(shard.engine.clone(), policy).unwrap();
     let queries = synthetic::gaussian_queries(1, DIM, 6);
     let params = QueryParams::new().with_time_budget(Duration::from_millis(1));
     let err = handle.query_full(queries.row(0).to_vec(), params).unwrap_err();
