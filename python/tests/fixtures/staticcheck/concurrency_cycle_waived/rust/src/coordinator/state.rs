@@ -1,0 +1,11 @@
+impl State {
+    pub fn forward(&self) {
+        let _a = self.alpha.read().unwrap();
+        let _b = self.beta.write().unwrap(); // staticcheck: allow(concurrency, "beta is dropped before alpha is ever re-taken; the pair is proven disjoint")
+    }
+
+    pub fn backward(&self) {
+        let _b = self.beta.read().unwrap();
+        let _a = self.alpha.write().unwrap();
+    }
+}

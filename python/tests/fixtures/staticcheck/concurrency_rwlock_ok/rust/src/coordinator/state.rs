@@ -1,0 +1,18 @@
+use std::io::{Read, Write};
+
+impl State {
+    pub fn forward(&self) {
+        let _a = self.alpha.read().unwrap();
+        let _b = self.beta.write().unwrap();
+    }
+
+    pub fn also_forward(&self) {
+        let _a = self.alpha.write().unwrap();
+        let _b = self.beta.read().unwrap();
+    }
+
+    pub fn io_copy(&mut self, buf: &mut [u8]) {
+        let n = self.src.read(buf).unwrap();
+        self.dst.write(&buf[..n]).unwrap();
+    }
+}

@@ -1,0 +1,25 @@
+pub struct Table {
+    rows: Vec<u32>,
+}
+
+impl Table {
+    pub fn new() -> Self {
+        Table { rows: Vec::new() }
+    }
+
+    pub fn probe_fast(&self, q: usize) -> u32 {
+        (q as u32).wrapping_mul(3)
+    }
+
+    pub fn probe_eager(&self, q: usize) -> u32 {
+        let mut acc = 0u32;
+        for _ in 0..3 {
+            acc = acc.wrapping_add(q as u32);
+        }
+        acc
+    }
+}
+
+pub fn scan_oracle(rows: &[u32]) -> u32 {
+    rows.iter().copied().fold(0, u32::wrapping_add)
+}

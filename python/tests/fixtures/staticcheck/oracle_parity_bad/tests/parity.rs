@@ -1,0 +1,7 @@
+use rangelsh::table::Table;
+
+#[test]
+fn prop_fast_equals_eager() {
+    let t = Table::new();
+    assert_eq!(t.probe_fast(3), 9);
+}

@@ -1,0 +1,9 @@
+use rangelsh::table::Table;
+
+#[test]
+fn prop_fast_equals_eager() {
+    let t = Table::new();
+    for q in 0..16 {
+        assert_eq!(t.probe_fast(q), t.probe_eager(q));
+    }
+}

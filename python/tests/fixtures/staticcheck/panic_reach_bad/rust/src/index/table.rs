@@ -1,0 +1,13 @@
+pub struct Table {
+    rows: Vec<u32>,
+}
+
+impl Table {
+    pub fn lookup(&self, q: usize) -> u32 {
+        self.rows[q]
+    }
+
+    pub fn dead_end(&self) -> u32 {
+        self.rows[0]
+    }
+}

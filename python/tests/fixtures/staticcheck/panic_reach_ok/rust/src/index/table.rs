@@ -1,0 +1,14 @@
+pub struct Table {
+    rows: Vec<u32>,
+}
+
+impl Table {
+    // staticcheck: allow(panic-reach, "q is produced by the probe schedule and stays below rows.len()")
+    pub fn lookup(&self, q: usize) -> u32 {
+        self.rows[q]
+    }
+
+    pub fn safe_lookup(&self, q: usize) -> u32 {
+        self.rows.get(q).copied().unwrap_or(0)
+    }
+}

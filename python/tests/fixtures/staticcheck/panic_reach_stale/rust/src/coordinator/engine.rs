@@ -1,0 +1,11 @@
+use crate::index::table::Table;
+
+pub struct SearchEngine {
+    table: Table,
+}
+
+impl SearchEngine {
+    pub fn search_streaming(&self, q: usize) -> u32 {
+        self.table.lookup(q)
+    }
+}

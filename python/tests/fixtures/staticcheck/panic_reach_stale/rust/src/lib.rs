@@ -1,0 +1,2 @@
+pub mod coordinator;
+pub mod index;

@@ -1,0 +1,6 @@
+impl Engine {
+    pub fn run(&self) -> u32 {
+        // staticcheck: allow(panic, "the index this covered was removed but the waiver lingers")
+        self.count
+    }
+}

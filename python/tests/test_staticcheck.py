@@ -17,8 +17,12 @@ import pytest
 import check
 from staticcheck import RepoContext
 from staticcheck.report import collect_waivers
+from staticcheck.sarif import to_sarif
 from staticcheck.tokenizer import tokenize, code_tokens
-from staticcheck.lints import modpath, features, panics, consistency, concurrency
+from staticcheck.lints import (
+    modpath, features, panics, consistency, concurrency,
+    panic_reach, oracle_parity,
+)
 
 FIXTURES = Path(__file__).resolve().parent / "fixtures" / "staticcheck"
 REPO_ROOT = Path(__file__).resolve().parents[2]
@@ -180,17 +184,127 @@ def test_concurrency_clean_tree_passes():
     assert run_lint(concurrency, "concurrency_ok") == []
 
 
+# -- lint 5: RwLock acquisitions + cycle waivers ---------------------------
+
+
+def test_concurrency_rwlock_inversion_is_flagged():
+    found = errors(run_lint(concurrency, "concurrency_rwlock_bad"))
+    assert len(found) == 1
+    assert "lock-order inversion" in found[0].message
+    assert "`alpha`" in found[0].message and "`beta`" in found[0].message
+
+
+def test_concurrency_io_read_write_are_not_acquisitions():
+    # `read(buf)` / `write(&buf[..n])` take arguments, so the io::Read /
+    # io::Write methods never count as lock acquisitions.
+    assert run_lint(concurrency, "concurrency_rwlock_ok") == []
+
+
+def test_concurrency_cycle_finding_honors_waiver():
+    found = run_lint(concurrency, "concurrency_cycle_waived")
+    assert errors(found) == []
+    assert len(waived(found)) == 1
+    assert "proven disjoint" in waived(found)[0].waive_reason
+
+
+# -- call graph -------------------------------------------------------------
+
+
+def test_callgraph_resolves_method_call_across_modules():
+    repo = RepoContext(FIXTURES / "panic_reach_bad")
+    graph = repo.lib_graph()
+    entry = next(n for n in graph.nodes if n.qname == "SearchEngine::search_streaming")
+    callees = {graph.nodes[c].qname for c, _ in graph.edges().get(entry.id, [])}
+    assert "Table::lookup" in callees
+
+
+def test_callgraph_trait_method_fans_out_to_every_impl():
+    graph = RepoContext(REPO_ROOT).lib_graph()
+    impls = [n for n in graph.nodes if n.name == "extend" and n.trait_name == "Prober"]
+    assert len(impls) >= 5, "every index prober implements Prober::extend"
+    entry = next(n for n in graph.nodes if n.qname == "SearchEngine::search_streaming")
+    callees = {graph.nodes[c].qname for c, _ in graph.edges().get(entry.id, [])}
+    ext = {q for q in callees if q.endswith("::extend")}
+    assert len(ext) >= 5, f"conservative fan-out should reach every impl, got {ext}"
+
+
+def test_callgraph_witness_path_names_the_entry_point():
+    repo = RepoContext(FIXTURES / "panic_reach_bad")
+    graph, parent, flagged = panic_reach.analyze(repo)
+    assert [n.qname for n in flagged] == ["Table::lookup"]
+    path = graph.format_path(parent, flagged[0].id)
+    assert path.startswith("SearchEngine::search_streaming")
+    assert "Table::lookup" in path
+
+
+# -- lint 6: interprocedural panic reachability ----------------------------
+
+
+def test_panic_reach_flags_reachable_panic_with_witness_path():
+    found = errors(run_lint(panic_reach, "panic_reach_bad"))
+    assert len(found) == 1
+    f = found[0]
+    assert f.path == "rust/src/index/table.rs"
+    assert "Table::lookup" in f.message and "index/slice" in f.message
+    assert "SearchEngine::search_streaming -> Table::lookup" in f.message
+    # the panicking fn nothing calls is NOT reachable, so not flagged
+    assert all("dead_end" not in g.message for g in found)
+
+
+def test_panic_reach_function_level_waiver_covers_the_body():
+    found = run_lint(panic_reach, "panic_reach_ok")
+    assert errors(found) == []
+    assert len(waived(found)) == 1
+    assert "probe schedule" in waived(found)[0].waive_reason
+
+
+def test_panic_reach_stale_waiver_is_a_finding():
+    found = errors(run_lint(panic_reach, "panic_reach_stale"))
+    assert len(found) == 1
+    assert "stale waiver" in found[0].message
+    assert "no remaining may-panic construct" in found[0].message
+
+
+def test_panics_stale_waiver_is_a_finding():
+    found = errors(run_lint(panics, "panics_stale"))
+    assert len(found) == 1
+    assert "stale waiver" in found[0].message
+
+
+# -- lint 7: oracle parity --------------------------------------------------
+
+
+def test_oracle_parity_flags_unmatched_unresolved_and_undeclared():
+    found = errors(run_lint(oracle_parity, "oracle_parity_bad"))
+    msgs = "\n".join(f.message for f in found)
+    assert "no single test matching `prop_fast_equals_eager`" in msgs
+    assert "`Table::probe_vanished` resolves to no function" in msgs
+    assert "`scan_oracle` looks like a kept oracle" in msgs
+    assert len(found) == 3
+
+
+def test_oracle_parity_matched_pair_passes():
+    assert run_lint(oracle_parity, "oracle_parity_ok") == []
+
+
+def test_oracle_parity_fixture_pair_matches_its_named_test():
+    matches = oracle_parity.match_pairs(RepoContext(FIXTURES / "oracle_parity_ok"))
+    matched, _, fast_ok, oracle_ok = matches["probe"]
+    assert fast_ok and oracle_ok
+    assert matched == "prop_fast_equals_eager"
+
+
 # -- the real repository must stay clean ----------------------------------
 
 
 def test_real_repo_has_no_unwaived_findings(capsys):
-    errs, _ = check.run_lints(REPO_ROOT)
+    errs, _, _ = check.run_lints(REPO_ROOT)
     capsys.readouterr()  # silence the lint progress lines
     assert errs == [], "\n".join(f.format() for f in errs)
 
 
 def test_real_repo_panic_waivers_all_carry_reasons():
-    _, waived_findings = check.run_lints(REPO_ROOT)
+    _, waived_findings, _ = check.run_lints(REPO_ROOT)
     assert waived_findings, "the coordinator triage should have waivers"
     assert all(f.waive_reason.strip() for f in waived_findings)
 
@@ -204,7 +318,128 @@ def test_real_repo_indexer_is_not_vacuous():
     assert sum(1 for _ in lib.all_uses()) > 200
 
 
+def test_real_repo_callgraph_is_not_vacuous():
+    repo = RepoContext(REPO_ROOT)
+    graph = repo.lib_graph()
+    assert len(graph.nodes) > 400, "the lib crate defines hundreds of functions"
+    assert graph.edge_count() > 1500, "resolution should land thousands of edges"
+    assert len(panic_reach.entry_ids(graph)) >= 5, (
+        "every serving entry-point family must resolve to concrete functions"
+    )
+
+
+def test_real_repo_panic_reach_triage_is_waived_with_reasons():
+    findings = panic_reach.run(RepoContext(REPO_ROOT))
+    assert errors(findings) == []
+    triage = waived(findings)
+    assert len(triage) >= 40, "the serving-reachable panic triage spans ~50 fns"
+    assert all(f.waive_reason.strip() for f in triage)
+    files = {f.path for f in triage}
+    # transitive coverage: the triage reaches beyond the coordinator
+    assert any(p.startswith("rust/src/index/") for p in files)
+    assert any(p.startswith("rust/src/hash/") for p in files)
+    assert any(p.startswith("rust/src/data/") for p in files)
+    assert any(p.startswith("rust/src/util/") for p in files)
+
+
+def test_real_repo_every_oracle_pair_is_witnessed_by_its_named_test():
+    matches = oracle_parity.match_pairs(RepoContext(REPO_ROOT))
+    assert set(matches) == {
+        "lazy-probe", "mih-rank", "streaming-rerank",
+        "blocked-hash-items", "blocked-hash-queries",
+    }
+    expected = {
+        "lazy-probe": "prop_lazy_probe_stream_equals_eager_stream",
+        "streaming-rerank": "prop_streaming_pruned_rerank_equals_exhaustive_oracle",
+    }
+    for name, (matched, pair, fast_ok, oracle_ok) in matches.items():
+        assert fast_ok and oracle_ok, f"pair {name}: member did not resolve"
+        assert matched is not None, f"pair {name}: no witnessing test"
+        if name in expected:
+            assert matched == expected[name]
+        elif name == "mih-rank":
+            assert matched.startswith("prop_mih_") and "counting_sort_oracle" in matched
+        else:
+            assert matched.startswith("prop_blocked_")
+
+
+def test_real_repo_waiver_audit_reports_no_stale_waivers(capsys):
+    _, _, repo = check.run_lints(REPO_ROOT)
+    capsys.readouterr()
+    assert len(repo.waiver_log) >= 60, "panic + panic-reach triage alone is ~66"
+    stale = [(k, w) for k, w in repo.waiver_log.items() if not w["live"]]
+    assert stale == []
+
+
+# -- SARIF ------------------------------------------------------------------
+
+
+def test_sarif_structure_errors_suppressions_and_line_clamp():
+    findings = run_lint(oracle_parity, "oracle_parity_bad")
+    findings += run_lint(panic_reach, "panic_reach_ok")
+    from staticcheck.lints import ALL_LINTS
+
+    log = to_sarif(findings, ALL_LINTS)
+    assert log["version"] == "2.1.0"
+    run = log["runs"][0]
+    assert run["tool"]["driver"]["name"] == "staticcheck"
+    assert len(run["tool"]["driver"]["rules"]) == len(ALL_LINTS)
+    results = run["results"]
+    assert len(results) == len(findings)
+    by_level = {}
+    for r in results:
+        by_level.setdefault(r["level"], []).append(r)
+    assert len(by_level["error"]) == 3  # oracle_parity_bad's findings
+    assert len(by_level["note"]) == 1  # the waived panic-reach finding
+    # waived results are suppressed in-source with the waiver reason
+    (note,) = by_level["note"]
+    assert note["suppressions"][0]["kind"] == "inSource"
+    assert "probe schedule" in note["suppressions"][0]["justification"]
+    assert all("suppressions" not in r for r in by_level["error"])
+    # line-0 manifest findings clamp to SARIF's 1-based startLine
+    lines = [
+        r["locations"][0]["physicalLocation"]["region"]["startLine"]
+        for r in results
+    ]
+    assert min(lines) == 1
+
+
+def test_driver_writes_sarif_log(tmp_path, capsys):
+    out = tmp_path / "out.sarif"
+    rc = check.main([
+        "--root", str(FIXTURES / "panic_reach_ok"),
+        "--no-bench-schema", "--sarif", str(out),
+    ])
+    capsys.readouterr()
+    assert rc == 0
+    import json
+
+    log = json.loads(out.read_text())
+    assert log["version"] == "2.1.0"
+    assert log["runs"][0]["results"], "the waived finding must be in the log"
+
+
 # -- driver ----------------------------------------------------------------
+
+
+def test_driver_list_waived_marks_stale_waivers(capsys):
+    rc = check.main([
+        "--root", str(FIXTURES / "panic_reach_stale"),
+        "--no-bench-schema", "--list-waived",
+    ])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "STALE" in out
+
+
+def test_driver_list_waived_marks_live_waivers(capsys):
+    rc = check.main([
+        "--root", str(FIXTURES / "panic_reach_ok"),
+        "--no-bench-schema", "--list-waived",
+    ])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "— live" in out and "STALE" not in out
 
 
 def test_driver_exits_nonzero_on_seeded_violations(capsys):
@@ -230,6 +465,15 @@ def test_driver_exits_zero_on_clean_tree(capsys):
     ("consistency_ok", consistency, True),
     ("concurrency_bad", concurrency, False),
     ("concurrency_ok", concurrency, True),
+    ("concurrency_rwlock_bad", concurrency, False),
+    ("concurrency_rwlock_ok", concurrency, True),
+    ("concurrency_cycle_waived", concurrency, True),
+    ("panics_stale", panics, False),
+    ("panic_reach_bad", panic_reach, False),
+    ("panic_reach_ok", panic_reach, True),
+    ("panic_reach_stale", panic_reach, False),
+    ("oracle_parity_bad", oracle_parity, False),
+    ("oracle_parity_ok", oracle_parity, True),
 ])
 def test_every_lint_fails_its_seeded_fixture_and_passes_clean(case, lint, clean):
     errs = errors(run_lint(lint, case))

@@ -248,6 +248,7 @@ mod injection {
 
         /// Execute the fault for this site, if any: sleep, fail, or
         /// panic (contained by the router's `catch_unwind`).
+        // staticcheck: allow(panic-reach, "the panic IS the injected fault: FaultPlan routes it into the router's catch_unwind by design (degraded-serving contract)")
         pub fn apply(&self, shard: usize, query: u64, attempt: u32) -> crate::Result<()> {
             match self.fault_for(shard, query, attempt) {
                 None => Ok(()),

@@ -89,6 +89,7 @@ impl Dataset {
         self.dim
     }
 
+    // staticcheck: allow(panic-reach, "callers pass row ids produced by an index built over this dataset, so i < n_items and the slice lies inside the row-major buffer")
     pub fn row(&self, i: usize) -> &[f32] {
         &self.data[i * self.dim..(i + 1) * self.dim]
     }
@@ -99,6 +100,7 @@ impl Dataset {
     }
 
     /// Cached 2-norm of item `i`.
+    // staticcheck: allow(panic-reach, "norms has one cached entry per row; callers pass row ids from the index over this dataset")
     pub fn norm(&self, i: usize) -> f32 {
         self.norms[i]
     }
@@ -125,6 +127,7 @@ impl Dataset {
     /// accumulation order is identical to [`Self::dot`], so the results
     /// are bit-for-bit the same floats.
     #[inline]
+    // staticcheck: allow(panic-reach, "the four ids are index-produced row ids (i < n_items); Dataset::row slices stay inside the buffer")
     pub fn dot4(&self, ids: [usize; 4], q: &[f32]) -> [f32; 4] {
         debug_assert_eq!(q.len(), self.dim);
         dot4_slices([self.row(ids[0]), self.row(ids[1]), self.row(ids[2]), self.row(ids[3])], q)
@@ -171,6 +174,7 @@ impl Dataset {
 /// a naive `zip().map().sum()` serialises on add latency. This sits under
 /// every exact scan, ground-truth build and candidate re-rank.
 #[inline]
+// staticcheck: allow(panic-reach, "split points sit at chunks*8 <= len and lane indices stay below 8 inside chunks_exact(8) blocks - arithmetic identities with no data dependence")
 pub fn dot_slices(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
     let mut acc = [0.0f32; 8];
@@ -197,6 +201,7 @@ pub fn dot_slices(a: &[f32], b: &[f32]) -> f32 {
 /// `[dot_slices(a, q), ..., dot_slices(d, q)]` bit for bit — re-rank
 /// ordering cannot shift between the paths.
 #[inline]
+// staticcheck: allow(panic-reach, "rows come from Dataset::row so each has length q.len(); every chunk index stays below chunks*8 <= dim")
 pub fn dot4_slices(rows: [&[f32]; 4], q: &[f32]) -> [f32; 4] {
     let d = q.len();
     for r in &rows {

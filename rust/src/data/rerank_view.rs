@@ -81,6 +81,7 @@ impl RerankView {
 
     /// Where the original item `id` lives in the permuted layout.
     #[inline]
+    // staticcheck: allow(panic-reach, "slot_of is a permutation table with one entry per item; ids are dataset row ids, so id < n")
     pub fn slot_of(&self, id: ItemId) -> usize {
         self.slot_of[id as usize] as usize
     }

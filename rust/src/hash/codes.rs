@@ -235,6 +235,7 @@ pub trait CodeChunks: CodeWord {
 
     /// Chunk `k` of the code (bits `16k .. 16k + 16`).
     #[inline]
+    // staticcheck: allow(panic-reach, "k < N_CHUNKS (debug_asserted) implies k/4 < WORDS - as_words() always covers the chunk range")
     fn chunk(&self, k: usize) -> u16 {
         debug_assert!(k < Self::N_CHUNKS);
         (self.as_words()[k / 4] >> (16 * (k % 4))) as u16

@@ -49,6 +49,7 @@ impl Projection {
 
     /// Row `k` of the panel: the `k`-th input coordinate's weights across
     /// all hash functions.
+    // staticcheck: allow(panic-reach, "k enumerates the dim_in input coordinates and data is allocated dim_in * width at construction")
     pub fn row(&self, k: usize) -> &[f32] {
         &self.data[k * self.width..(k + 1) * self.width]
     }

@@ -101,6 +101,7 @@ impl<C: CodeWord> NativeHasher<C> {
     ///
     /// Accumulates all `width` dot products in a single pass over the input
     /// coordinates (row-major panel ⇒ unit-stride inner loop, auto-vectorised).
+    // staticcheck: allow(panic-reach, "width <= MAX_CODE_BITS is a Projection construction invariant, so acc[..width] stays inside the fixed array")
     fn hash_transformed(&self, xt: &[f32]) -> C {
         let width = self.proj.width();
         debug_assert_eq!(xt.len(), self.proj.dim_in());
@@ -211,6 +212,7 @@ impl<C: CodeWord> NativeHasher<C> {
     }
 
     /// Per-item query oracle, the [`Self::hash_items_unblocked`] twin.
+    // staticcheck: allow(panic-reach, "check_rows validates rows.len() as a multiple of the query dim before the per-row slices")
     pub fn hash_queries_unblocked(&self, rows: &[f32]) -> Result<Vec<C>> {
         let n = self.check_rows(rows)?;
         let dim = self.proj.dim_in() - 1;

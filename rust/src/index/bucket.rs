@@ -109,6 +109,7 @@ impl<C: CodeWord> BucketTable<C> {
     /// Build from per-item codes. `ids[i]` is the dataset-global id of the
     /// item whose code is `codes[i]` (RANGE-LSH passes each range's ids).
     /// Codes are masked to `bits` internally (`1 <= bits <= C::MAX_BITS`).
+    // staticcheck: allow(panic-reach, "bucket handles are dense indices this pass just allocated; counts/bucket_codes grow in lockstep with the map, and codes/ids lengths are asserted equal")
     pub fn build(codes: &[C], ids: Option<&[ItemId]>, bits: usize) -> Self {
         if let Some(ids) = ids {
             assert_eq!(codes.len(), ids.len(), "codes/ids length mismatch");
@@ -168,6 +169,7 @@ impl<C: CodeWord> BucketTable<C> {
 
     /// Items of dense bucket `b`.
     #[inline]
+    // staticcheck: allow(panic-reach, "starts is a CSR offset array with n_buckets + 1 entries; every caller iterates b < n_buckets")
     pub fn bucket_items(&self, b: usize) -> &[ItemId] {
         &self.items[self.starts[b] as usize..self.starts[b + 1] as usize]
     }
@@ -175,6 +177,7 @@ impl<C: CodeWord> BucketTable<C> {
     /// Code of dense bucket `b` (masked to `bits`) — the scan target the
     /// counting sort popcounts and the MIH chunk tables are built from.
     #[inline]
+    // staticcheck: allow(panic-reach, "codes has one entry per dense bucket; callers pass b < n_buckets")
     pub fn bucket_code(&self, b: usize) -> C {
         self.codes[b]
     }
@@ -206,6 +209,7 @@ impl<C: CodeWord> BucketTable<C> {
     /// levels `floor..=bits` jointly hold >= `budget` items (or `floor`
     /// is 0 and everything is materialized). Slices at or above the floor
     /// are identical to what [`Self::counting_sort_by_matches`] produces.
+    // staticcheck: allow(panic-reach, "levels is resized to bits + 2 and matches() returns l <= bits; starts[b + 1] is CSR-valid for b < n_buckets")
     pub fn counting_sort_partial(&self, qcode: C, budget: usize, scratch: &mut SortScratch) {
         let q = qcode.and(C::mask(self.bits));
         let n = self.n_buckets();
@@ -232,6 +236,7 @@ impl<C: CodeWord> BucketTable<C> {
     /// level histogram into slice bounds, derive the materialization
     /// floor from the item histogram, and place bucket indices at or
     /// above the floor.
+    // staticcheck: allow(panic-reach, "prefix sums index levels[l + 1] for l <= bits with levels sized bits + 2; order placement stays below n_buckets")
     fn finish_sort(&self, budget: usize, scratch: &mut SortScratch) {
         let n = self.n_buckets();
         let SortScratch { order, levels, floor, l_cache, cursor, item_hist, sorted_budget } =
@@ -283,6 +288,7 @@ impl<C: CodeWord> BucketTable<C> {
     /// per *batch* instead of once per query. Per query, the result in
     /// `scratches[i]` is identical to
     /// `counting_sort_partial(qcodes[i], budget, &mut scratches[i])`.
+    // staticcheck: allow(panic-reach, "block bounds satisfy b1 <= n_buckets and level indices are <= bits with levels sized bits + 2")
     pub fn counting_sort_batch(&self, qcodes: &[C], budget: usize, scratches: &mut [SortScratch]) {
         assert_eq!(qcodes.len(), scratches.len(), "one scratch per query");
         let n = self.n_buckets();
@@ -326,6 +332,7 @@ impl<C: CodeWord> BucketTable<C> {
     /// scratch's materialization floor, which by the
     /// [`Self::counting_sort_partial`] postcondition covers any budget no
     /// larger than the one the sort ran with.
+    // staticcheck: allow(panic-reach, "the sort postcondition materializes every level down to the floor; slice bounds come from its prefix sums, and take is min(len, remaining)")
     pub fn emit_ranked(&self, scratch: &SortScratch, budget: usize, out: &mut Vec<ItemId>) {
         debug_assert!(
             budget <= scratch.sorted_budget,
@@ -366,6 +373,7 @@ impl<C: CodeWord> BucketTable<C> {
     }
 
     /// Iterate all buckets (stats / diagnostics / persistence).
+    // staticcheck: allow(panic-reach, "b ranges over 0..n_buckets with CSR-valid starts")
     pub fn buckets(&self) -> impl Iterator<Item = (C, &[ItemId])> {
         (0..self.n_buckets()).map(|b| (self.codes[b], self.bucket_items(b)))
     }
@@ -449,6 +457,7 @@ impl<C: CodeWord> Drop for TableProber<'_, C> {
 }
 
 impl<C: CodeWord> Prober for TableProber<'_, C> {
+    // staticcheck: allow(panic-reach, "level walks bits..floor with levels sized bits + 2; order slices are the sort's own materialized bounds")
     fn extend(&mut self, additional_budget: usize, out: &mut Vec<ItemId>) -> usize {
         if additional_budget == 0 || self.done {
             return 0;

@@ -164,6 +164,7 @@ struct L2Prober<'a> {
 }
 
 impl Prober for L2Prober<'_> {
+    // staticcheck: allow(panic-reach, "bucket < groups[level].len() is the loop guard and level follows the finite per-level schedule")
     fn extend(&mut self, additional_budget: usize, out: &mut Vec<ItemId>) -> usize {
         if additional_budget == 0 || self.done {
             return 0;

@@ -41,6 +41,7 @@ impl MetricOrder {
     /// `ŝ` sort keys are computed once per entry — m(L+1) cosines — and
     /// the sort compares cached floats, instead of re-evaluating Eq. 12
     /// inside the comparator (O(mL log(mL)) cosine calls).
+    // staticcheck: allow(panic-reach, "j enumerates 0..u_maxes.len(), so the key computation indexes in bounds")
     pub fn build(u_maxes: &[f32], l_bits: usize, epsilon: f32) -> Self {
         assert!(l_bits >= 1);
         assert!((0.0..1.0).contains(&epsilon), "epsilon must be in [0,1)");

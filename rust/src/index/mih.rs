@@ -116,6 +116,7 @@ impl<C: CodeWord> MihTable<C> {
     /// against the freshly rebuilt `table` — a corrupt section yields a
     /// clear error here instead of an out-of-bounds panic on the first
     /// probe.
+    // staticcheck: allow(panic-reach, "last().unwrap() follows the ensure! that offsets has nc*CHUNK_BUCKETS + 1 >= 1 entries; all other access is behind the validation chain")
     pub fn from_parts(
         bits: usize,
         offsets: Vec<u32>,
@@ -184,6 +185,7 @@ impl<C: CodeWord> MihTable<C> {
     /// Returns the number of buckets popcounted (the MIH analogue of the
     /// counting sort's full `n_buckets` scan, for `buckets_scanned`
     /// stats): sub-linear whenever the budget is covered by near levels.
+    // staticcheck: allow(panic-reach, "CSR offset/value bounds are validated at build/from_parts; popcount levels are <= bits with levels sized bits + 2")
     pub fn rank_partial(
         &self,
         table: &BucketTable<C>,
@@ -331,6 +333,7 @@ impl MihScratch {
 
     /// Mark bucket `b` seen; returns whether it already was.
     #[inline]
+    // staticcheck: allow(panic-reach, "reset() sizes the seen bitmap to cover every bucket index; b comes from CSR values validated against n_buckets")
     fn test_and_set(&mut self, b: u32) -> bool {
         let w = (b >> 6) as usize;
         let bit = 1u64 << (b & 63);

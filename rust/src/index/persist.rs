@@ -378,6 +378,7 @@ fn ensure_eof(r: &mut impl Read, path: &Path) -> Result<()> {
 /// Read the optional trailing MIH section of a v1/v2 file. A clean EOF
 /// right after the ranges means the section is absent (v1 files and v2
 /// files written before the section existed) — not an error.
+// staticcheck: allow(panic-reach, "tag is a [u8; 1] and the index is the constant 0")
 fn read_mih_section<C: CodeWord>(
     r: &mut impl Read,
     path: &Path,

@@ -279,6 +279,7 @@ impl<C: CodeWord> RangeLshIndex<C> {
     }
 
     /// One range's bucket table (persistence/tests/diagnostics).
+    // staticcheck: allow(panic-reach, "j enumerates this index's own range count at every call site (persistence and diagnostics)")
     pub(crate) fn sub_table(&self, j: usize) -> &BucketTable<C> {
         &self.subs[j].table
     }
@@ -418,6 +419,7 @@ impl<C: CodeWord> Prober for RangeProber<'_, C> {
     /// bit-for-bit with the earlier walk, and the candidate stream
     /// remains element-for-element the eager oracle's
     /// ([`RangeLshIndex::probe_with_code_eager`], property-tested).
+    // staticcheck: allow(panic-reach, "sched_pos < entries.len() is the loop guard and (j, l) come from the schedule built over this index's ranges and levels")
     fn extend(&mut self, additional_budget: usize, out: &mut Vec<ItemId>) -> usize {
         if additional_budget == 0 || self.done {
             return 0;

@@ -155,6 +155,7 @@ struct RangedL2Prober<'a> {
 }
 
 impl Prober for RangedL2Prober<'_> {
+    // staticcheck: allow(panic-reach, "(j, l) come from the prebuilt schedule over this index's ranges and levels; per-bucket cursors are drained with clamped takes")
     fn extend(&mut self, additional_budget: usize, out: &mut Vec<ItemId>) -> usize {
         if additional_budget == 0 || self.done {
             return 0;

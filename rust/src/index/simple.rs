@@ -179,6 +179,7 @@ impl<C: CodeWord> CodeProbe<C> for SimpleLshIndex<C> {
         Box::new(self.table.prober_mih(qcode, self.mih.as_ref()))
     }
 
+    // staticcheck: allow(panic-reach, "the scratch pool is resized to qcodes.len() immediately before the slice")
     fn probe_batch_with_codes(&self, qcodes: &[C], budget: usize, outs: &mut [Vec<ItemId>]) {
         assert_eq!(qcodes.len(), outs.len(), "one output buffer per query code");
         SCRATCH.with(|scratch| {

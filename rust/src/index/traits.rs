@@ -48,6 +48,7 @@ pub trait Prober {
 /// first item is taken). Returns true when the bucket is fully consumed —
 /// the cursor is then reset to 0 and the caller advances to the next
 /// bucket. Must be called with `*remaining > 0` between checks.
+// staticcheck: allow(panic-reach, "take = min(len - cursor, remaining), so cursor + take <= items.len()")
 pub(crate) fn drain_bucket(
     items: &[ItemId],
     cursor: &mut usize,
@@ -87,6 +88,7 @@ impl BufferedProber {
 }
 
 impl Prober for BufferedProber {
+    // staticcheck: allow(panic-reach, "take is clamped to items.len() - pos, so the slice end never passes the buffer")
     fn extend(&mut self, additional_budget: usize, out: &mut Vec<ItemId>) -> usize {
         let take = additional_budget.min(self.items.len() - self.pos);
         out.extend_from_slice(&self.items[self.pos..self.pos + take]);

@@ -64,6 +64,7 @@ impl<C: CodeWord> PjrtHasher<C> {
         self.proj.width().div_ceil(32)
     }
 
+    // staticcheck: allow(panic-reach, "the kernel output length is ensure!d to block_rows * words before the unpack loop, and words <= 2 * C::WORDS keeps w / 2 inside w64")
     fn hash_blocks(&self, rows: &[f32], u: Option<f32>) -> Result<Vec<C>> {
         let dim = self.dim();
         anyhow::ensure!(

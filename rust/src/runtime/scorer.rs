@@ -90,6 +90,7 @@ impl PjrtScorer {
     /// `scores` (aligned with the surviving `candidates`): the engine
     /// builds its ranked answers from these instead of re-computing a
     /// full-dimension dot per returned result.
+    // staticcheck: allow(panic-reach, "chunks_exact(4) guarantees quad.len() == 4; candidate ids are index-produced dataset row ids")
     pub fn rerank_scored(
         dataset: &Dataset,
         query: &[f32],

@@ -41,6 +41,7 @@ impl<W: Write> HashingWriter<W> {
 }
 
 impl<W: Write> Write for HashingWriter<W> {
+    // staticcheck: allow(panic-reach, "n <= buf.len() by the io::Write contract of the inner writer, so buf[..n] is in bounds")
     fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
         let n = self.inner.write(buf)?;
         self.crc.update(&buf[..n]);
@@ -142,6 +143,7 @@ pub fn write_f32s(w: &mut impl Write, vs: &[f32]) -> Result<()> {
     Ok(())
 }
 
+// staticcheck: allow(panic-reach, "b is a [u8; 1] filled by read_exact; index 0 is in bounds by construction")
 pub fn read_u8(r: &mut impl Read) -> Result<u8> {
     let mut b = [0u8; 1];
     r.read_exact(&mut b)?;

@@ -35,6 +35,7 @@ impl Crc32 {
         Self { state: 0xFFFF_FFFF }
     }
 
+    // staticcheck: allow(panic-reach, "the table index is masked with & 0xFF and TABLE has 256 entries")
     pub fn update(&mut self, bytes: &[u8]) {
         for &b in bytes {
             self.state = TABLE[((self.state ^ b as u32) & 0xFF) as usize] ^ (self.state >> 8);

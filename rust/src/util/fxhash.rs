@@ -32,6 +32,7 @@ impl Hasher for FxHasher {
     }
 
     #[inline]
+    // staticcheck: allow(panic-reach, "chunks_exact(8) makes try_into::<[u8; 8]>() infallible and the tail copy is bounded by rem.len() < 8")
     fn write(&mut self, bytes: &[u8]) {
         let mut chunks = bytes.chunks_exact(8);
         for c in &mut chunks {

@@ -8,6 +8,9 @@ and authoring containers alike:
     python3 scripts/check.py            # whole repo, all lints + schema
     python3 scripts/check.py --root X   # point at another tree (tests)
     python3 scripts/check.py --no-bench-schema
+    python3 scripts/check.py --sarif out.sarif   # SARIF 2.1.0 log for CI
+    python3 scripts/check.py --list-waived       # waived findings + waiver
+                                                 # live/stale audit
 
 Exits non-zero if any lint produced an unwaived finding or the bench
 schema is invalid. Waived findings are listed (with their reasons) but
@@ -28,7 +31,11 @@ from staticcheck.lints import ALL_LINTS  # noqa: E402
 
 
 def run_lints(root, out=sys.stdout):
-    """Run every lint against `root`; returns (errors, waived)."""
+    """Run every lint against `root`; returns (errors, waived, repo).
+
+    The RepoContext is returned so callers can read `repo.waiver_log`
+    (the per-waiver live/stale audit filled in by the lints).
+    """
     repo = RepoContext(root)
     errors, waived = [], []
     for lint in ALL_LINTS:
@@ -42,7 +49,7 @@ def run_lints(root, out=sys.stdout):
             print(f.format(), file=out)
         errors.extend(lint_errors)
         waived.extend(lint_waived)
-    return errors, waived
+    return errors, waived, repo
 
 
 def run_bench_schema(root, out=sys.stdout):
@@ -77,15 +84,32 @@ def main(argv=None):
     )
     ap.add_argument(
         "--list-waived", action="store_true",
-        help="also print every waived finding with its reason",
+        help="also print every waived finding with its reason, plus a"
+             " live/stale line per waiver comment",
+    )
+    ap.add_argument(
+        "--sarif", metavar="PATH",
+        help="write all findings (waived ones as suppressed results) as a"
+             " SARIF 2.1.0 log to PATH",
     )
     args = ap.parse_args(argv)
 
-    errors, waived = run_lints(args.root)
+    errors, waived, repo = run_lints(args.root)
     if args.list_waived:
         print(f"-- {len(waived)} waived finding(s):")
         for f in waived:
             print(f.format())
+        print(f"-- {len(repo.waiver_log)} waiver comment(s):")
+        for (rel, line), w in sorted(repo.waiver_log.items()):
+            state = "live" if w["live"] else "STALE"
+            print(f"  {rel}:{line}: allow({w['category']}, "
+                  f"\"{w['reason']}\") — {state}")
+
+    if args.sarif:
+        from staticcheck.sarif import write_sarif
+
+        write_sarif(args.sarif, errors + waived, ALL_LINTS)
+        print(f"-- SARIF log written to {args.sarif}")
 
     schema_ok = True
     if not args.no_bench_schema:

@@ -1,0 +1,764 @@
+"""Whole-crate call graph over the tokenized item index.
+
+Extracts every function/method *definition* (with its `impl` self type,
+trait, `#[cfg(test)]` status and `#[test]` marker) and every call *site*
+(direct `foo(…)`, path `Type::method(…)` / `module::foo(…)` incl.
+turbofish and `<Type as Trait>::method(…)` UFCS, and method `recv.m(…)`
+with best-effort receiver resolution), then links sites to definitions:
+
+- `self.m(…)` / `Self::helper(…)` resolve against the enclosing `impl`
+  block's self type.
+- A receiver that is a typed `fn` parameter or a `let` binding with an
+  explicit annotation (or a `Type::ctor(…)` right-hand side) resolves to
+  that type's methods; wrapper types (`&`, `&mut`, `Arc`, `Rc`, `Box`,
+  `Cow`) are stripped down to the inner type first.
+- A call through a *trait* method (qualifier is a trait name, or the
+  receiver's resolved type has no own method of that name) fans out
+  conservatively to every in-crate impl of the method — e.g.
+  `Prober::extend` edges to all index probers — plus the trait's default
+  body, if any.
+- An unresolvable receiver (chained calls, field access, untyped
+  locals) fans out to *every* in-crate method of that name. This
+  over-approximates reachability, never under-approximates it: the
+  panic-reach lint stays sound, at the price of false edges that the
+  waiver file documents.
+
+Known false-negative classes (documented in README §"Static
+verification"): function pointers / closures passed as values, macro
+bodies that call crate functions, trait objects dispatched through
+external-crate traits, and `Deref`-chained calls to types the wrapper
+list above does not name.
+
+Like `items.py`, this is a recognizer for the Rust subset the repo
+uses, not a language parser.
+"""
+
+import re
+from dataclasses import dataclass, field
+
+from .items import make_cfg, _match_bracket
+from .tokenizer import code_tokens, match_brace, KEYWORDS
+
+# Wrapper types stripped when resolving a receiver's base type:
+# `&Arc<RangeLshIndex<C>>` resolves to `RangeLshIndex`.
+WRAPPERS = frozenset(["Arc", "Rc", "Box", "Cow", "RefCell", "Cell"])
+
+PANIC_METHODS = frozenset(["unwrap", "expect", "unwrap_err", "expect_err"])
+PANIC_MACROS = frozenset(["panic", "unreachable", "todo", "unimplemented"])
+
+
+@dataclass
+class PanicSite:
+    line: int
+    what: str  # e.g. ".unwrap()", "panic!", "index/slice"
+
+
+@dataclass
+class CallSite:
+    name: str  # called function/method name
+    line: int
+    kind: str  # "method" | "path" | "bare"
+    recv: str = ""  # resolved receiver/qualifier type or trait name; "" unknown
+
+
+@dataclass
+class FnNode:
+    name: str
+    file: str  # repo-relative path
+    line: int
+    crate: str  # root file of the crate this definition belongs to
+    self_type: str = ""  # impl self type ("" for free fns / trait decls)
+    trait_name: str = ""  # trait implemented / defaulted on ("" otherwise)
+    test_only: bool = False  # under cfg(test) (or in a test-only module)
+    is_test: bool = False  # carries #[test]
+    calls: list = field(default_factory=list)  # [CallSite]
+    panics: list = field(default_factory=list)  # [PanicSite]
+    id: int = -1
+
+    @property
+    def qname(self):
+        owner = self.self_type or self.trait_name
+        return f"{owner}::{self.name}" if owner else self.name
+
+
+@dataclass
+class CallGraph:
+    nodes: list = field(default_factory=list)
+    # name -> [node ids]; methods_by_name only lists fns with an owner
+    by_name: dict = field(default_factory=dict)
+    methods_by_name: dict = field(default_factory=dict)
+    free_by_name: dict = field(default_factory=dict)
+    # self type -> {method name -> [ids]}
+    by_type: dict = field(default_factory=dict)
+    # trait name -> {method name -> [ids]} (impls + default bodies)
+    trait_impls: dict = field(default_factory=dict)
+    trait_names: set = field(default_factory=set)
+    type_names: set = field(default_factory=set)
+    # (caller id -> [(callee id, call line)]), built lazily
+    _edges: dict = field(default_factory=dict)
+
+    def add(self, node):
+        node.id = len(self.nodes)
+        self.nodes.append(node)
+        self.by_name.setdefault(node.name, []).append(node.id)
+        if node.self_type or node.trait_name:
+            self.methods_by_name.setdefault(node.name, []).append(node.id)
+        else:
+            self.free_by_name.setdefault(node.name, []).append(node.id)
+        if node.self_type:
+            self.by_type.setdefault(node.self_type, {}).setdefault(
+                node.name, []
+            ).append(node.id)
+            self.type_names.add(node.self_type)
+        if node.trait_name:
+            self.trait_impls.setdefault(node.trait_name, {}).setdefault(
+                node.name, []
+            ).append(node.id)
+            self.trait_names.add(node.trait_name)
+        return node
+
+    # -- call resolution ----------------------------------------------
+
+    def resolve_call(self, site, caller):
+        """Node ids a call site may dispatch to (conservative)."""
+        name = site.name
+        if site.kind == "method":
+            return self._resolve_method(name, site.recv)
+        if site.kind == "path":
+            q = site.recv
+            if q in ("Self",):
+                q = caller.self_type
+            if q == "":
+                return list(self.free_by_name.get(name, ()))
+            if q in self.trait_names:
+                return self._trait_fanout(q, name)
+            if q in self.by_type:
+                own = self.by_type[q].get(name)
+                if own:
+                    return list(own)
+                # inherent name not found on the type: maybe a trait
+                # method called through the type — fan out.
+                return self._resolve_method(name, "")
+            # lowercase qualifier: a module path — free functions
+            if q[:1].islower():
+                return list(self.free_by_name.get(name, ()))
+            # Unknown type qualifier (external / generic): enum variant
+            # constructors land here too — only match if the crate
+            # defines methods of that name somewhere.
+            return []
+        # bare call: free functions only (locals/closures resolve to
+        # nothing, which is correct — we cannot see through fn values).
+        return list(self.free_by_name.get(name, ()))
+
+    def _resolve_method(self, name, recv_type):
+        if recv_type:
+            own = self.by_type.get(recv_type, {}).get(name)
+            if own:
+                return list(own)
+            if recv_type in self.trait_names:
+                return self._trait_fanout(recv_type, name)
+        # Unresolved (or resolved to a type without that inherent
+        # method, e.g. a generic param bound by a trait): every in-crate
+        # method of that name, trait defaults included.
+        return list(self.methods_by_name.get(name, ()))
+
+    def _trait_fanout(self, trait, name):
+        return list(self.trait_impls.get(trait, {}).get(name, ()))
+
+    # -- graph queries ------------------------------------------------
+
+    def edges(self):
+        """caller id -> [(callee id, call line)], resolved once."""
+        if not self._edges:
+            for node in self.nodes:
+                out = []
+                for site in node.calls:
+                    for callee in self.resolve_call(site, node):
+                        out.append((callee, site.line))
+                self._edges[node.id] = out
+        return self._edges
+
+    def edge_count(self):
+        return sum(len(set(c for c, _ in v)) for v in self.edges().values())
+
+    def reachable_from(self, start_ids, node_filter=None):
+        """BFS; returns {reached id: (parent id or None, call line)}.
+
+        `node_filter(node) -> bool` prunes traversal (e.g. keep the walk
+        inside the library crate). Parent pointers give shortest witness
+        paths because the walk is breadth-first.
+        """
+        edges = self.edges()
+        parent = {}
+        frontier = []
+        for s in start_ids:
+            if s not in parent:
+                parent[s] = (None, 0)
+                frontier.append(s)
+        while frontier:
+            nxt = []
+            for u in frontier:
+                for v, line in edges.get(u, ()):
+                    if v in parent:
+                        continue
+                    if node_filter is not None and not node_filter(self.nodes[v]):
+                        continue
+                    parent[v] = (u, line)
+                    nxt.append(v)
+            frontier = nxt
+        return parent
+
+    def witness_path(self, parent, node_id):
+        """[(FnNode, call line)] from an entry point down to `node_id`."""
+        path = []
+        cur = node_id
+        while cur is not None:
+            p, line = parent[cur]
+            path.append((self.nodes[cur], line))
+            cur = p
+        path.reverse()
+        return path
+
+    def format_path(self, parent, node_id):
+        parts = []
+        for node, line in self.witness_path(parent, node_id):
+            loc = f" ({node.file}:{line})" if line else ""
+            parts.append(f"{node.qname}{loc}")
+        return " -> ".join(parts)
+
+
+# ---------------------------------------------------------------------------
+# Extraction
+
+
+class _Scanner:
+    def __init__(self, graph, crate_root):
+        self.graph = graph
+        self.crate = crate_root
+
+    def scan_file(self, rel, toks, test_only):
+        self._scope(toks, 0, len(toks), rel, "", "", test_only, None, None)
+
+    # ctx: (impl self type, trait name, test_only); owner: enclosing FnNode
+    def _scope(self, toks, lo, hi, rel, self_ty, trait, test_only, owner, env):
+        i = lo
+        attrs = []
+        while i < hi:
+            t = toks[i]
+            if t.kind == "punct" and t.value == "#":
+                j = i + 1
+                if j < hi and toks[j].kind == "punct" and toks[j].value == "!":
+                    j += 1
+                if j < hi and toks[j].kind == "punct" and toks[j].value == "[":
+                    end = _match_bracket(toks, j, hi)
+                    attrs.append(" ".join(tk.value for tk in toks[i : end + 1]))
+                    i = end + 1
+                    continue
+                i += 1
+                continue
+            if t.kind != "ident":
+                if owner is not None:
+                    self._expr_token(toks, i, hi, rel, owner)
+                attrs = []
+                i += 1
+                continue
+
+            kw = t.value
+            # visibility / unsafe prefixes
+            if kw == "pub":
+                i += 1
+                if i < hi and toks[i].kind == "punct" and toks[i].value == "(":
+                    i = _match_paren(toks, i, hi) + 1
+                continue
+            if kw == "unsafe" and i + 1 < hi and toks[i + 1].kind == "ident" and (
+                toks[i + 1].value in ("fn", "impl", "trait")
+            ):
+                i += 1
+                continue
+            if kw == "mod" and i + 1 < hi and toks[i + 1].kind == "ident":
+                cfg = make_cfg(attrs)
+                attrs = []
+                j = i + 2
+                if j < hi and toks[j].kind == "punct" and toks[j].value == "{":
+                    end = match_brace(toks, j)
+                    self._scope(
+                        toks, j + 1, end, rel, "", "",
+                        test_only or cfg.test_only, None, None,
+                    )
+                    i = end + 1
+                else:
+                    i = j + 1  # `mod foo;` — the file scanner covers it
+                continue
+            if kw == "impl" and owner is None:
+                cfg = make_cfg(attrs)
+                attrs = []
+                i = self._impl(toks, i, hi, rel, test_only or cfg.test_only)
+                continue
+            if kw == "trait" and i + 1 < hi and toks[i + 1].kind == "ident":
+                cfg = make_cfg(attrs)
+                attrs = []
+                name = toks[i + 1].value
+                j = _skip_to_brace(toks, i + 2, hi)
+                if j < hi:
+                    end = match_brace(toks, j)
+                    self._scope(
+                        toks, j + 1, end, rel, "", name,
+                        test_only or cfg.test_only, None, None,
+                    )
+                    i = end + 1
+                else:
+                    i = j
+                continue
+            if kw == "fn" and i + 1 < hi and toks[i + 1].kind == "ident":
+                cfg = make_cfg(attrs)
+                is_test = any(_is_test_attr(a) for a in attrs)
+                attrs = []
+                i = self._fn(
+                    toks, i, hi, rel, self_ty, trait,
+                    test_only or cfg.test_only, is_test,
+                )
+                continue
+            if kw == "let" and owner is not None and env is not None:
+                i = self._let(toks, i, hi, env)
+                continue
+
+            if owner is not None:
+                self._ident_in_expr(toks, i, hi, rel, owner, env, self_ty)
+            attrs = []
+            i += 1
+
+    # -- items --------------------------------------------------------
+
+    def _impl(self, toks, i, hi, rel, test_only):
+        """Parse `impl<…> [Trait<…> for] Type<…> [where …] { … }`."""
+        j = i + 1
+        if j < hi and toks[j].kind == "punct" and toks[j].value == "<":
+            j = _match_angle(toks, j, hi) + 1
+        first, j = _type_path(toks, j, hi)
+        trait, self_ty = "", first
+        if j < hi and toks[j].kind == "ident" and toks[j].value == "for":
+            second, j = _type_path(toks, j + 1, hi)
+            trait, self_ty = first, second
+        j = _skip_to_brace(toks, j, hi)
+        if j >= hi:
+            return j
+        end = match_brace(toks, j)
+        self._scope(toks, j + 1, end, rel, self_ty, trait, test_only, None, None)
+        return end + 1
+
+    def _fn(self, toks, i, hi, rel, self_ty, trait, test_only, is_test):
+        name_tok = toks[i + 1]
+        node = self.graph.add(
+            FnNode(
+                name=name_tok.value, file=rel, line=name_tok.line,
+                crate=self.crate, self_type=self_ty, trait_name=trait,
+                test_only=test_only, is_test=is_test,
+            )
+        )
+        j = i + 2
+        if j < hi and toks[j].kind == "punct" and toks[j].value == "<":
+            j = _match_angle(toks, j, hi) + 1
+        env = {}
+        if j < hi and toks[j].kind == "punct" and toks[j].value == "(":
+            close = _match_paren(toks, j, hi)
+            _param_env(toks, j + 1, close, env, self_ty)
+            j = close + 1
+        # skip the return type / where clause to the body `{` or `;`
+        depth_p = depth_b = 0
+        while j < hi:
+            t = toks[j]
+            v = t.value if t.kind == "punct" else ""
+            if v == "(":
+                depth_p += 1
+            elif v == ")":
+                depth_p -= 1
+            elif v == "[":
+                depth_b += 1
+            elif v == "]":
+                depth_b -= 1
+            elif v == "{" and depth_p == 0 and depth_b == 0:
+                end = match_brace(toks, j)
+                self._scope(
+                    toks, j + 1, end, rel, self_ty, trait, test_only, node, env
+                )
+                return end + 1
+            elif v == ";" and depth_p == 0 and depth_b == 0:
+                return j + 1  # declaration without body (trait method)
+            j += 1
+        return hi
+
+    def _let(self, toks, i, hi, env):
+        """`let [mut] name [: Type] = …` — record the binding's type."""
+        j = i + 1
+        if j < hi and toks[j].kind == "ident" and toks[j].value == "mut":
+            j += 1
+        if j >= hi or toks[j].kind != "ident":
+            return i + 1  # destructuring pattern — ignore
+        name = toks[j].value
+        j += 1
+        if j < hi and toks[j].kind == "punct" and toks[j].value == ":":
+            ty, j = _base_type(toks, j + 1, hi, stop=("=", ";"))
+            if ty:
+                env[name] = ty
+            return i + 1
+        if (
+            j + 2 < hi
+            and toks[j].kind == "punct" and toks[j].value == "="
+            and toks[j + 1].kind == "ident"
+            and toks[j + 1].value[:1].isupper()
+            and toks[j + 2].kind == "punct" and toks[j + 2].value == ":"
+        ):
+            # `let x = Type::ctor(…)…` — the common constructor idiom.
+            env[name] = toks[j + 1].value
+        return i + 1
+
+    # -- expression-level scanning ------------------------------------
+
+    def _ident_in_expr(self, toks, i, hi, rel, owner, env, self_ty):
+        t = toks[i]
+        nxt = toks[i + 1] if i + 1 < hi else None
+        prv = toks[i - 1] if i > 0 else None
+
+        # macro invocation: `name ! (…)` / `name ! [...]` / `name ! {…}`
+        if nxt is not None and nxt.kind == "punct" and nxt.value == "!":
+            if t.value in PANIC_MACROS:
+                owner.panics.append(PanicSite(t.line, f"{t.value}!"))
+            return
+
+        is_call_head = nxt is not None and nxt.kind == "punct" and nxt.value == "("
+        # turbofish: `name ::< … > (`
+        if (
+            not is_call_head
+            and nxt is not None and nxt.kind == "punct" and nxt.value == ":"
+            and i + 3 < hi
+            and toks[i + 2].kind == "punct" and toks[i + 2].value == ":"
+            and toks[i + 3].kind == "punct" and toks[i + 3].value == "<"
+        ):
+            close = _match_angle(toks, i + 3, hi)
+            if close + 1 < hi and toks[close + 1].kind == "punct" and toks[close + 1].value == "(":
+                is_call_head = True
+        if not is_call_head:
+            return
+
+        name = t.value
+        if name in KEYWORDS:
+            return
+        if prv is not None and prv.kind == "punct" and prv.value == ".":
+            if name in PANIC_METHODS:
+                owner.panics.append(PanicSite(t.line, f".{name}()"))
+                return
+            recv = self._receiver(toks, i - 2, env, self_ty)
+            owner.calls.append(CallSite(name, t.line, "method", recv))
+            return
+        if (
+            prv is not None and prv.kind == "punct" and prv.value == ":"
+            and i >= 2 and toks[i - 2].kind == "punct" and toks[i - 2].value == ":"
+        ):
+            qual = self._path_qualifier(toks, i - 2, env, self_ty)
+            owner.calls.append(CallSite(name, t.line, "path", qual))
+            return
+        if prv is not None and prv.kind == "ident" and prv.value == "fn":
+            return  # definition, handled structurally
+        owner.calls.append(CallSite(name, t.line, "bare", ""))
+
+    def _receiver(self, toks, ri, env, self_ty):
+        """Type of the receiver ending at token index `ri`, or ""."""
+        if ri < 0:
+            return ""
+        r = toks[ri]
+        if r.kind != "ident":
+            return ""  # chained call `f(x).m()`, index `xs[i].m()`, …
+        before = toks[ri - 1] if ri > 0 else None
+        if before is not None and before.kind == "punct" and before.value in ".:":
+            return ""  # field access / path — unresolved
+        if r.value == "self":
+            return self_ty
+        return env.get(r.value, "") if env is not None else ""
+
+    def _path_qualifier(self, toks, colon_i, env, self_ty):
+        """Qualifier of `Qual::name(` whose `::` ends at `colon_i`."""
+        j = colon_i - 1
+        if j >= 0 and toks[j].kind == "punct" and toks[j].value == ">":
+            # turbofish `Type::<T>::m(` or UFCS `<Type as Trait>::m(`
+            open_i = _match_angle_back(toks, j)
+            k = open_i - 1
+            if (
+                k >= 2
+                and toks[k].kind == "punct" and toks[k].value == ":"
+                and toks[k - 1].kind == "punct" and toks[k - 1].value == ":"
+                and toks[k - 2].kind == "ident"
+            ):
+                j = k - 2  # `Type ::< T > :: m(` — qualifier before `::<`
+            elif k >= 0 and toks[k].kind == "ident":
+                j = k  # `Type< T > :: m(` in type position
+            else:
+                # UFCS: first ident inside `<…>` is the concrete type
+                for k2 in range(open_i + 1, j):
+                    if toks[k2].kind == "ident":
+                        ty = toks[k2].value
+                        return self_ty if ty == "Self" else ty
+                return ""
+        if j < 0 or toks[j].kind != "ident":
+            return ""
+        ty = toks[j].value
+        if ty == "Self":
+            return self_ty
+        return ty
+
+    def _expr_token(self, toks, i, hi, rel, owner):
+        """Non-ident token inside a body: bare index/slice detection."""
+        t = toks[i]
+        if t.kind != "punct" or t.value != "[" or i == 0:
+            return
+        prv = toks[i - 1]
+        is_index = (
+            (prv.kind == "ident" and prv.value not in KEYWORDS)
+            or (prv.kind == "punct" and prv.value in ")]")
+            or prv.kind == "num"
+        )
+        if is_index:
+            owner.panics.append(PanicSite(t.line, "index/slice"))
+
+
+def _is_test_attr(attr):
+    return re.fullmatch(r"#\s*\[\s*test\s*\]", attr) is not None
+
+
+def _match_paren(toks, open_idx, hi):
+    depth = 0
+    for k in range(open_idx, hi):
+        v = toks[k].value if toks[k].kind == "punct" else ""
+        if v == "(":
+            depth += 1
+        elif v == ")":
+            depth -= 1
+            if depth == 0:
+                return k
+    return hi - 1
+
+
+def _match_angle(toks, open_idx, hi):
+    """Match `<…>` skipping `->` arrows; returns index of closing `>`."""
+    depth = 0
+    k = open_idx
+    while k < hi:
+        t = toks[k]
+        v = t.value if t.kind == "punct" else ""
+        if v == "<":
+            depth += 1
+        elif v == ">":
+            if k > 0 and toks[k - 1].kind == "punct" and toks[k - 1].value == "-":
+                k += 1
+                continue
+            depth -= 1
+            if depth == 0:
+                return k
+        k += 1
+    return hi - 1
+
+
+def _match_angle_back(toks, close_idx):
+    """Index of the `<` matching the `>` at `close_idx` (backwards)."""
+    depth = 0
+    for k in range(close_idx, -1, -1):
+        v = toks[k].value if toks[k].kind == "punct" else ""
+        if v == ">":
+            depth += 1
+        elif v == "<":
+            depth -= 1
+            if depth == 0:
+                return k
+    return 0
+
+
+def _skip_to_brace(toks, i, hi):
+    depth_p = depth_b = 0
+    while i < hi:
+        t = toks[i]
+        v = t.value if t.kind == "punct" else ""
+        if v == "(":
+            depth_p += 1
+        elif v == ")":
+            depth_p -= 1
+        elif v == "[":
+            depth_b += 1
+        elif v == "]":
+            depth_b -= 1
+        elif v == "{" and depth_p == 0 and depth_b == 0:
+            return i
+        elif v == ";" and depth_p == 0 and depth_b == 0:
+            return hi
+        i += 1
+    return hi
+
+
+def _type_path(toks, i, hi):
+    """Read `seg::seg<…>` at `i`; returns (last segment name, next index)."""
+    last = ""
+    while i < hi:
+        t = toks[i]
+        if t.kind == "ident":
+            if t.value in ("for", "where"):
+                break
+            last = t.value
+            i += 1
+            if i < hi and toks[i].kind == "punct" and toks[i].value == "<":
+                i = _match_angle(toks, i, hi) + 1
+            if (
+                i + 1 < hi
+                and toks[i].kind == "punct" and toks[i].value == ":"
+                and toks[i + 1].kind == "punct" and toks[i + 1].value == ":"
+            ):
+                i += 2
+                continue
+            break
+        if t.kind == "punct" and t.value in "&'":
+            i += 1
+            continue
+        if t.kind == "lifetime":
+            i += 1
+            continue
+        break
+    return last, i
+
+
+def _param_env(toks, lo, hi, env, self_ty):
+    """Bind `name: Type` fn parameters into `env`."""
+    # split on top-level commas
+    start, depth = lo, 0
+    spans = []
+    for k in range(lo, hi):
+        t = toks[k]
+        v = t.value if t.kind == "punct" else ""
+        if v in "([<":
+            # `<` here is generic args inside a type — arrows are rare
+            # in param lists; treat all three as nesting.
+            depth += 1
+        elif v in ")]>":
+            depth -= 1
+        elif v == "," and depth == 0:
+            spans.append((start, k))
+            start = k + 1
+    if start < hi:
+        spans.append((start, hi))
+    for lo2, hi2 in spans:
+        # find top-level `:`
+        depth = 0
+        colon = -1
+        for k in range(lo2, hi2):
+            t = toks[k]
+            v = t.value if t.kind == "punct" else ""
+            if v in "([<":
+                depth += 1
+            elif v in ")]>":
+                depth -= 1
+            elif v == ":" and depth == 0:
+                # `::` is two tokens; skip path separators
+                if k + 1 < hi2 and toks[k + 1].kind == "punct" and toks[k + 1].value == ":":
+                    continue
+                if k > lo2 and toks[k - 1].kind == "punct" and toks[k - 1].value == ":":
+                    continue
+                colon = k
+                break
+        if colon < 0:
+            continue
+        # pattern: accept `name` / `mut name` / `ref name`
+        pat = [t for t in toks[lo2:colon] if t.kind == "ident"]
+        if not pat:
+            continue
+        name = pat[-1].value
+        if name in ("self", "mut", "ref") or any(
+            t.kind == "punct" and t.value in "({" for t in toks[lo2:colon]
+        ):
+            continue
+        ty, _ = _base_type(toks, colon + 1, hi2, stop=(",",))
+        if ty:
+            env[name] = ty
+    if self_ty:
+        env.setdefault("self", self_ty)
+
+
+def _base_type(toks, i, hi, stop=()):
+    """Base type name of the type starting at `i`, wrappers stripped.
+
+    `&mut Arc<RangeLshIndex<C>>` -> "RangeLshIndex". Returns ("",
+    index) when the type is not a plain path (slices, tuples, fn
+    pointers, …).
+    """
+    # strip leading `&`, lifetimes, `mut`, `dyn`, `impl`
+    while i < hi:
+        t = toks[i]
+        if t.kind == "punct" and t.value == "&":
+            i += 1
+        elif t.kind == "lifetime":
+            i += 1
+        elif t.kind == "ident" and t.value in ("mut", "dyn", "impl"):
+            i += 1
+        else:
+            break
+    last = ""
+    while i < hi:
+        t = toks[i]
+        v = t.value if t.kind == "punct" else ""
+        if t.kind == "ident":
+            if v and v in stop:
+                break
+            last = t.value
+            i += 1
+            if i < hi and toks[i].kind == "punct" and toks[i].value == "<":
+                close = _match_angle(toks, i, hi)
+                if last in WRAPPERS:
+                    inner, _ = _base_type(toks, i + 1, close, stop=(",",))
+                    if inner:
+                        last = inner
+                i = close + 1
+            if (
+                i + 1 < hi
+                and toks[i].kind == "punct" and toks[i].value == ":"
+                and toks[i + 1].kind == "punct" and toks[i + 1].value == ":"
+            ):
+                i += 2
+                continue
+            break
+        if v in stop or v in ";)":
+            break
+        # non-path types (slices `[T]`, tuples, fn pointers) — give up
+        return "", i
+    return last, i
+
+
+# ---------------------------------------------------------------------------
+# Crate walking
+
+
+def crate_files(index):
+    """(repo-relative file, test_only) pairs for every module file of an
+    item index, de-duplicated (a file hosting inline submodules appears
+    once, with its outermost module's test status)."""
+    seen = {}
+    for mod in index.all_modules():
+        if mod.file not in seen or (seen[mod.file] and not mod.test_only):
+            seen[mod.file] = mod.test_only
+    return sorted(seen.items())
+
+
+def build_graph(repo, crate_roots):
+    """One merged CallGraph over the given crate roots.
+
+    `crate_roots` are root files (e.g. `rust/src/lib.rs`,
+    `tests/properties.rs`); every module file each root pulls in is
+    scanned. Files shared between crates (rare) are scanned once per
+    crate, so nodes carry their crate of origin.
+    """
+    graph = CallGraph()
+    for root in crate_roots:
+        index = repo.index_for(root)
+        if index is None:
+            continue
+        scanner = _Scanner(graph, root)
+        for rel, test_only in crate_files(index):
+            toks = repo.tokens(rel)
+            if toks is None:
+                continue
+            scanner.scan_file(rel, code_tokens(toks), test_only)
+    return graph

@@ -1,5 +1,11 @@
 """Lint registry. Each lint module exposes `NAME` and `run(repo)`."""
 
-from . import modpath, features, panics, consistency, concurrency
+from . import (
+    modpath, features, panics, consistency, concurrency,
+    panic_reach, oracle_parity,
+)
 
-ALL_LINTS = [modpath, features, panics, consistency, concurrency]
+ALL_LINTS = [
+    modpath, features, panics, consistency, concurrency,
+    panic_reach, oracle_parity,
+]

@@ -3,12 +3,18 @@
 Two checks:
 
 1. **Lock-order inversions.** Records, per function across
-   `rust/src/coordinator/*.rs`, the order in which named mutexes are
-   acquired (`<name>.lock()` call sites, first occurrence each). Any
-   cycle in the resulting global acquisition-order graph — `a` before
-   `b` in one function, `b` before `a` in another — is a potential
-   deadlock and is flagged. Guard lifetimes are not modeled, so the
-   check is conservative; waive a provably-released pair with
+   `rust/src/coordinator/*.rs`, the order in which named locks are
+   acquired — `<name>.lock()` for mutexes plus zero-argument
+   `<name>.read()` / `<name>.write()` for RwLocks (the zero-argument
+   requirement keeps `io::Read::read(&mut buf)` and
+   `Write::write(&bytes)` out); first occurrence each. Any cycle in the
+   resulting global acquisition-order graph — `a` before `b` in one
+   function, `b` before `a` in another — is a potential deadlock and is
+   flagged. Read and write guards on the same RwLock count as the same
+   lock: read/read cannot deadlock on its own, but a writer arriving
+   between two readers can under writer-preferring fairness, so the
+   conservative merge is intentional. Guard lifetimes are not modeled
+   either; waive a provably-released pair with
    `// staticcheck: allow(concurrency, "…")` on the later acquisition.
 
 2. **Relaxed reads in `Metrics::snapshot`.** The snapshot-coherence
@@ -17,7 +23,7 @@ Two checks:
    preceded the bump; `Ordering::Relaxed` there is flagged.
 """
 
-from ..report import Finding, collect_waivers, apply_waivers
+from ..report import Finding, collect_waivers, apply_waivers, finish_waivers
 from ..tokenizer import code_tokens, match_brace
 
 NAME = "concurrency"
@@ -29,10 +35,12 @@ COORD_GLOB = "rust/src/coordinator/*.rs"
 def run(repo):
     findings = []
     edges = {}  # (a, b) -> (path, line, fn_name) of the b-acquisition
+    waivers_by_file = {}
     for rel in repo.glob(COORD_GLOB):
         text = repo.read(rel)
         all_toks = repo.tokens(rel)
         waivers, waiver_errors = collect_waivers(text, all_toks)
+        waivers_by_file[rel] = waivers
         for line, msg in waiver_errors:
             findings.append(Finding(NAME, CATEGORY, rel, line, msg))
         toks = code_tokens(all_toks)
@@ -49,7 +57,16 @@ def run(repo):
         apply_waivers(file_findings, waivers)
         findings.extend(file_findings)
 
-    findings.extend(_order_cycles(edges))
+    # Cycle findings span files, so their waivers can only be applied
+    # once every file's edges are in — match each against the waivers of
+    # the file its reported acquisition sits in.
+    cycle_findings = _order_cycles(edges)
+    for f in cycle_findings:
+        apply_waivers([f], waivers_by_file.get(f.path, []))
+    findings.extend(cycle_findings)
+
+    for rel, waivers in waivers_by_file.items():
+        findings.extend(finish_waivers(repo, NAME, CATEGORY, rel, waivers))
     return findings
 
 
@@ -83,15 +100,26 @@ def _functions(toks):
         i += 1
 
 
+ACQUIRE_METHODS = frozenset(["lock", "read", "write"])
+
+
 def _lock_sequence(toks, lo, hi):
-    """First-acquisition order of named mutexes in a function body."""
+    """First-acquisition order of named Mutex/RwLock guards in a body.
+
+    Only zero-argument calls count — `Mutex::lock()`, `RwLock::read()`,
+    `RwLock::write()` all take no arguments, while the `io::Read` /
+    `io::Write` methods that share the `read`/`write` names take a
+    buffer.
+    """
     seen, seq = set(), []
     for i in range(lo, hi):
         t = toks[i]
         if (
-            t.kind == "ident" and t.value == "lock"
+            t.kind == "ident" and t.value in ACQUIRE_METHODS
             and i > 1 and toks[i - 1].kind == "punct" and toks[i - 1].value == "."
-            and i + 1 < hi and toks[i + 1].kind == "punct" and toks[i + 1].value == "("
+            and i + 2 < hi
+            and toks[i + 1].kind == "punct" and toks[i + 1].value == "("
+            and toks[i + 2].kind == "punct" and toks[i + 2].value == ")"
             and toks[i - 2].kind == "ident"
         ):
             name = toks[i - 2].value

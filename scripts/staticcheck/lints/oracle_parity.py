@@ -1,0 +1,178 @@
+"""Lint 7 — oracle parity: every fast path is pinned to its kept oracle.
+
+Every optimized read path in this repo ships next to a bit-identical
+reference implementation (PRs 2–6): lazy probing vs the eager counting
+sort, MIH Hamming walks vs the counting sort, the streaming re-rank vs
+the exhaustive scorer, blocked hashing vs per-item hashing. The
+equivalence only means something while a test actually exercises *both*
+members of each pair — an edit that quietly drops one side of a
+property test would leave the oracle dead code and the claim unchecked.
+
+The manifest `scripts/staticcheck/oracle_pairs.json` declares the
+pairs:
+
+    {"pairs": [{"name": "...", "fast": "Type::fn", "oracle": "Type::fn"}]}
+
+(a bare `fn` name declares a free function). For each pair this lint
+requires, via the merged lib + test-crate call graph, at least one
+`#[test]` function whose reachable set contains both members — the test
+is named in `--list-waived`-style reports and pinned by the pytest
+suite. Findings:
+
+- a manifest member that resolves to no function in the lib crate;
+- a pair no single test reaches both members of;
+- a non-test lib function whose name carries an oracle-style suffix
+  (`_oracle`, `_eager`, `_unblocked`) but appears in no manifest pair —
+  an undeclared oracle. Waivable at the `fn` line with
+  `// staticcheck: allow(oracle-parity, "<reason>")`.
+"""
+
+import fnmatch
+import json
+
+from ..report import Finding, collect_waivers, finish_waivers
+from ..repo import LIB_ROOT
+
+NAME = "oracle-parity"
+CATEGORY = "oracle-parity"
+
+MANIFEST = "scripts/staticcheck/oracle_pairs.json"
+ORACLE_SUFFIXES = ("_oracle", "_eager", "_unblocked")
+
+
+def load_manifest(repo):
+    text = repo.read(MANIFEST)
+    if text is None:
+        return []
+    return json.loads(text).get("pairs", [])
+
+
+def _resolve_member(graph, spec):
+    """Lib-crate node ids a manifest member spec names."""
+    if "::" in spec:
+        owner, name = spec.rsplit("::", 1)
+        ids = [
+            i for i in graph.by_name.get(name, ())
+            if graph.nodes[i].crate == LIB_ROOT
+            and (graph.nodes[i].self_type or graph.nodes[i].trait_name) == owner
+        ]
+    else:
+        ids = [
+            i for i in graph.free_by_name.get(spec, ())
+            if graph.nodes[i].crate == LIB_ROOT
+        ]
+    return ids
+
+
+def match_pairs(repo):
+    """pair name -> (matched test qname or None, pair dict).
+
+    The lint's core; exposed so the test suite can pin every real-repo
+    pair to a concrete named test (non-vacuity).
+    """
+    pairs = load_manifest(repo)
+    graph = repo.call_graph([LIB_ROOT] + repo.test_crate_roots())
+    # Deterministic order, dedicated test crates ahead of inline
+    # `mod tests` units: the cross-member equivalence properties live in
+    # `tests/*.rs`, and conservative fan-out makes "reaches" generous
+    # enough that some unit test usually reaches too.
+    tests = sorted(
+        (n for n in graph.nodes if n.is_test),
+        key=lambda n: (n.crate == LIB_ROOT, n.file, n.line),
+    )
+    reach_cache = {}
+
+    def reachable(test_id):
+        if test_id not in reach_cache:
+            reach_cache[test_id] = set(graph.reachable_from([test_id]))
+        return reach_cache[test_id]
+
+    out = {}
+    for pair in pairs:
+        fast = set(_resolve_member(graph, pair["fast"]))
+        oracle = set(_resolve_member(graph, pair["oracle"]))
+        matched = None
+        if fast and oracle:
+            # An optional `test` fnmatch pattern names the test(s) that
+            # are allowed to witness the pair — without it, any test
+            # counts, and fan-out noise can match vacuously.
+            pat = pair.get("test", "*")
+            for t in tests:
+                if not fnmatch.fnmatch(t.name, pat):
+                    continue
+                r = reachable(t.id)
+                if r & fast and r & oracle:
+                    matched = t.qname
+                    break
+        out[pair["name"]] = (matched, pair, bool(fast), bool(oracle))
+    return out
+
+
+def run(repo):
+    graph = repo.lib_graph()
+    if not graph.nodes:
+        return []  # no library crate in this tree
+    pairs = load_manifest(repo)
+    findings = []
+
+    manifest_members = set()
+    for pair in pairs:
+        manifest_members.add(pair["fast"])
+        manifest_members.add(pair["oracle"])
+
+    if pairs:
+        for name, (matched, pair, fast_ok, oracle_ok) in match_pairs(repo).items():
+            for member, ok in ((pair["fast"], fast_ok), (pair["oracle"], oracle_ok)):
+                if not ok:
+                    findings.append(
+                        Finding(
+                            NAME, CATEGORY, MANIFEST, 0,
+                            f"pair `{name}`: member `{member}` resolves to no"
+                            " function in the library crate",
+                        )
+                    )
+            if fast_ok and oracle_ok and matched is None:
+                pat = pair.get("test", "*")
+                scope = f" matching `{pat}`" if pat != "*" else ""
+                findings.append(
+                    Finding(
+                        NAME, CATEGORY, MANIFEST, 0,
+                        f"pair `{name}`: no single test{scope} has a call graph"
+                        f" reaching both `{pair['fast']}` and `{pair['oracle']}`"
+                        " — the parity property is unverified",
+                    )
+                )
+
+    # Undeclared oracles: suffix-named lib functions outside the manifest.
+    suffix_nodes = [
+        n for n in graph.nodes
+        if not n.test_only
+        and n.crate == LIB_ROOT
+        and n.name.endswith(ORACLE_SUFFIXES)
+    ]
+    waivers_by_file = {}
+    for n in suffix_nodes:
+        if n.qname in manifest_members or n.name in manifest_members:
+            continue
+        if n.file not in waivers_by_file:
+            text, toks = repo.read(n.file), repo.tokens(n.file)
+            ws, werrs = collect_waivers(text or "", toks or [])
+            waivers_by_file[n.file] = [w for w in ws if w.category == CATEGORY]
+            for line, msg in werrs:
+                findings.append(Finding(NAME, CATEGORY, n.file, line, msg))
+        waiver = next(
+            (w for w in waivers_by_file[n.file] if w.covers(n.line)), None
+        )
+        f = Finding(
+            NAME, CATEGORY, n.file, n.line,
+            f"fn `{n.qname}` looks like a kept oracle (suffix) but no"
+            " oracle_pairs.json pair declares it — parity is unchecked",
+        )
+        if waiver is not None:
+            f.waived, f.waive_reason, waiver.used = True, waiver.reason, True
+        findings.append(f)
+
+    # live/stale bookkeeping for oracle-parity waivers seen above
+    for rel, ws in waivers_by_file.items():
+        findings.extend(finish_waivers(repo, NAME, CATEGORY, rel, ws))
+    return findings

@@ -1,0 +1,143 @@
+"""Lint 6 — interprocedural panic reachability from the serving surface.
+
+The degraded-serving contract (PR 7) and the equal-recall speedup claim
+both assume the serving path never panics: `catch_unwind` would report
+an accidental panic as shard loss, and a panic inside `.rlsh` load/save
+turns a corrupt-file error into a crash. `panic-path` (lint 3) checks
+the four coordinator modules line by line; this lint closes the
+transitive gap: starting from the serving entry points
+
+    ServerHandle::query*   ShardedRouter::query*
+    AnyEngine::search*     SearchEngine::search*
+    save_range_index       load_range_index     load_any_range_index
+
+it walks the whole-crate call graph (`staticcheck/callgraph.py` —
+conservative trait fan-out, unresolved receivers over-approximate) and
+flags every reachable non-test function in `index/`, `hash/`, `data/`,
+`util/` (anywhere outside the four panic-path files) that contains a
+may-panic construct: `unwrap`/`expect`, a panicking macro, or a bare
+index/slice expression. Each finding reports a shortest witness path
+from an entry point.
+
+A function the review has bounds-checked is waived *at the function
+level* — the waiver sits on (or directly above) its `fn` line and
+covers every site in the body:
+
+    // staticcheck: allow(panic-reach, "<why no site in here can fire>")
+    pub fn counting_sort_partial(&self, …)
+
+A `panic-reach` waiver anchored to a function that no longer contains
+any may-panic construct is stale and becomes a finding itself.
+"""
+
+import fnmatch
+
+from ..report import Finding, collect_waivers
+from .panics import SERVING_FILES
+
+NAME = "panic-reach"
+CATEGORY = "panic-reach"
+
+ENTRY_PATTERNS = [
+    "ServerHandle::query*",
+    "ShardedRouter::query*",
+    "AnyEngine::search*",
+    "SearchEngine::search*",
+    "save_range_index",
+    "load_range_index",
+    "load_any_range_index",
+]
+
+SERVING = frozenset(SERVING_FILES)
+
+
+def entry_ids(graph):
+    return [
+        n.id
+        for n in graph.nodes
+        if not n.test_only
+        and any(fnmatch.fnmatch(n.qname, p) for p in ENTRY_PATTERNS)
+    ]
+
+
+def analyze(repo):
+    """(graph, parent map, [panicking reachable nodes]) for the lib crate.
+
+    Exposed separately so the test suite can pin non-vacuity (entry
+    count, reachable-set size) without re-deriving the BFS.
+    """
+    graph = repo.lib_graph()
+    entries = entry_ids(graph)
+    parent = graph.reachable_from(entries, node_filter=lambda n: not n.test_only)
+    flagged = [
+        graph.nodes[i]
+        for i in parent
+        if graph.nodes[i].panics
+        and not graph.nodes[i].test_only
+        and graph.nodes[i].file not in SERVING
+    ]
+    flagged.sort(key=lambda n: (n.file, n.line))
+    return graph, parent, flagged
+
+
+def run(repo):
+    graph = repo.lib_graph()
+    if not graph.nodes:
+        return []  # no library crate in this tree
+    graph, parent, flagged = analyze(repo)
+
+    # Function-level waivers, gathered per file that defines functions.
+    findings = []
+    waivers_by_file = {}
+    for rel in sorted({n.file for n in graph.nodes}):
+        text = repo.read(rel)
+        toks = repo.tokens(rel)
+        if text is None or toks is None:
+            continue
+        waivers, waiver_errors = collect_waivers(text, toks)
+        mine = [w for w in waivers if w.category == CATEGORY]
+        waivers_by_file[rel] = mine
+        for line, msg in waiver_errors:
+            findings.append(Finding(NAME, CATEGORY, rel, line, msg))
+
+    # A waiver is *live* when the function it anchors still contains a
+    # may-panic construct — reachable or not. (An unreachable panicking
+    # fn keeps its waiver: the construct the reason argues about is
+    # still there, and reachability can silently return as call sites
+    # move.)
+    panicking_lines = {}
+    for n in graph.nodes:
+        if n.panics:
+            panicking_lines.setdefault(n.file, set()).add(n.line)
+
+    for node in flagged:
+        waiver = next(
+            (w for w in waivers_by_file.get(node.file, ()) if w.covers(node.line)),
+            None,
+        )
+        site = node.panics[0]
+        more = f" (+{len(node.panics) - 1} more site(s))" if len(node.panics) > 1 else ""
+        msg = (
+            f"fn `{node.qname}` may panic — {site.what} at line {site.line}{more} —"
+            f" and is reachable from a serving entry point:"
+            f" {graph.format_path(parent, node.id)}"
+        )
+        f = Finding(NAME, CATEGORY, node.file, node.line, msg)
+        if waiver is not None:
+            f.waived, f.waive_reason, waiver.used = True, waiver.reason, True
+        findings.append(f)
+
+    # Stale waivers + the shared live/stale log for --list-waived.
+    for rel, mine in waivers_by_file.items():
+        for w in mine:
+            live = any(w.covers(line) for line in panicking_lines.get(rel, ()))
+            repo.log_waiver(rel, w, live)
+            if not live:
+                findings.append(
+                    Finding(
+                        NAME, CATEGORY, rel, w.line,
+                        f"stale waiver: allow({CATEGORY}, \"{w.reason}\") anchors"
+                        " a function with no remaining may-panic construct",
+                    )
+                )
+    return findings

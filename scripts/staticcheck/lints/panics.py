@@ -16,7 +16,7 @@ never ship, and tests *should* unwrap.
 """
 
 from ..items import make_cfg, _match_bracket, _skip_to_body_or_semi
-from ..report import Finding, collect_waivers, apply_waivers
+from ..report import Finding, collect_waivers, apply_waivers, finish_waivers
 from ..tokenizer import code_tokens, KEYWORDS
 
 NAME = "panic-path"
@@ -46,6 +46,7 @@ def run(repo):
         file_findings = _scan(code_tokens(all_toks), rel)
         apply_waivers(file_findings, waivers)
         findings.extend(file_findings)
+        findings.extend(finish_waivers(repo, NAME, CATEGORY, rel, waivers))
     return findings
 
 

@@ -23,6 +23,19 @@ class RepoContext:
         self._texts = {}
         self._tokens = {}
         self._indices = {}
+        self._graphs = {}
+        # (path, line) -> {"category", "reason", "live"} — filled by the
+        # lints as they apply waivers; `check.py --list-waived` reads it.
+        self.waiver_log = {}
+
+    def log_waiver(self, rel, waiver, live):
+        key = (rel, waiver.line)
+        prev = self.waiver_log.get(key)
+        self.waiver_log[key] = {
+            "category": waiver.category,
+            "reason": waiver.reason,
+            "live": live or (prev["live"] if prev else False),
+        }
 
     # -- file access --------------------------------------------------
 
@@ -74,8 +87,29 @@ class RepoContext:
                 self._indices[rel] = items.build_crate_index(self.root, rel, self.crate_name)
         return self._indices[rel]
 
+    def index_for(self, rel):
+        return self._index_for(rel)
+
     def aux_indices(self):
         return [(r, self._index_for(r)) for r in self.aux_crate_roots()]
+
+    # -- call graphs ---------------------------------------------------
+
+    def call_graph(self, roots):
+        """Merged CallGraph over the given crate roots, cached per set."""
+        from . import callgraph
+
+        key = tuple(sorted(roots))
+        if key not in self._graphs:
+            self._graphs[key] = callgraph.build_graph(self, list(key))
+        return self._graphs[key]
+
+    def lib_graph(self):
+        """Call graph of the library crate alone."""
+        return self.call_graph([LIB_ROOT])
+
+    def test_crate_roots(self):
+        return sorted(self.glob("tests/*.rs"))
 
     # -- Cargo.toml ----------------------------------------------------
 

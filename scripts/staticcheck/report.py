@@ -91,6 +91,32 @@ def apply_waivers(findings, waivers):
     return findings
 
 
+def finish_waivers(repo, lint, category, rel, waivers):
+    """Post-`apply_waivers` bookkeeping for one file's waivers.
+
+    Records every waiver of the lint's own category in the repo-wide
+    live/stale log (`check.py --list-waived`) and returns a finding for
+    each *stale* one — a waiver whose anchored line no longer produces
+    the finding it was written to cover survives edits silently
+    otherwise, and a reason argued about vanished code is worse than no
+    waiver at all.
+    """
+    out = []
+    for w in waivers:
+        if w.category != category:
+            continue
+        repo.log_waiver(rel, w, w.used)
+        if not w.used:
+            out.append(
+                Finding(
+                    lint, category, rel, w.line,
+                    f"stale waiver: allow({category}, \"{w.reason}\") covers no"
+                    f" finding on its anchored line",
+                )
+            )
+    return out
+
+
 @dataclass
 class Report:
     findings: list = field(default_factory=list)

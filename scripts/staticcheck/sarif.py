@@ -1,0 +1,86 @@
+"""SARIF 2.1.0 serialization of a staticcheck run.
+
+`check.py --sarif <path>` writes one run per invocation so CI can
+upload the findings to GitHub code scanning
+(`github/codeql-action/upload-sarif`). Mapping:
+
+- each lint module becomes a `rule` (id = lint NAME, short description
+  = first line of its module docstring);
+- each finding becomes a `result` at its file/line; unwaived findings
+  are `level: error`, waived ones `level: note` with an in-source
+  `suppression` carrying the waiver reason, so code scanning shows them
+  as dismissed rather than open;
+- manifest-level findings that carry line 0 (e.g. oracle-parity pair
+  failures) are clamped to line 1 — SARIF regions are 1-based.
+"""
+
+import json
+
+SCHEMA_URI = (
+    "https://raw.githubusercontent.com/oasis-tcs/sarif-spec/"
+    "master/Schemata/sarif-schema-2.1.0.json"
+)
+
+
+def to_sarif(findings, lints):
+    """SARIF 2.1.0 log dict for a list of Findings and lint modules."""
+    rules, rule_index = [], {}
+    for lint in lints:
+        doc = (lint.__doc__ or "").strip().splitlines()
+        rule_index[lint.NAME] = len(rules)
+        rules.append(
+            {
+                "id": lint.NAME,
+                "shortDescription": {"text": doc[0] if doc else lint.NAME},
+                "defaultConfiguration": {"level": "error"},
+            }
+        )
+
+    results = []
+    for f in findings:
+        result = {
+            "ruleId": f.lint,
+            "level": "note" if f.waived else "error",
+            "message": {"text": f.message},
+            "locations": [
+                {
+                    "physicalLocation": {
+                        "artifactLocation": {
+                            "uri": f.path,
+                            "uriBaseId": "%SRCROOT%",
+                        },
+                        "region": {"startLine": max(f.line, 1)},
+                    }
+                }
+            ],
+        }
+        if f.lint in rule_index:
+            result["ruleIndex"] = rule_index[f.lint]
+        if f.waived:
+            result["suppressions"] = [
+                {"kind": "inSource", "justification": f.waive_reason}
+            ]
+        results.append(result)
+
+    return {
+        "$schema": SCHEMA_URI,
+        "version": "2.1.0",
+        "runs": [
+            {
+                "tool": {
+                    "driver": {
+                        "name": "staticcheck",
+                        "rules": rules,
+                    }
+                },
+                "results": results,
+                "columnKind": "utf16CodeUnits",
+            }
+        ],
+    }
+
+
+def write_sarif(path, findings, lints):
+    with open(path, "w") as fh:
+        json.dump(to_sarif(findings, lints), fh, indent=2)
+        fh.write("\n")
