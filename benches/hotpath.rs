@@ -27,6 +27,11 @@
 //!      the auditable record of the streaming re-rank's payoff
 //!   5. engine end-to-end (batched)
 //!   6. exact ground-truth scan (the brute-force baseline RANGE beats)
+//!   7. degraded-serving axis: end-to-end latency + degraded fraction
+//!      under per-query wall-clock deadlines
+//!   8. mutation axis: the WAL-backed mutable store — acked ingest
+//!      batches, recovery replay over the accumulated WAL, and
+//!      tombstone-laden vs compacted query twins
 //!
 //! Results are printed as a table and written to `BENCH_hotpath.json`
 //! (schema: see the repo-root file) so width-64 probe throughput can be
@@ -621,6 +626,119 @@ fn main() -> rangelsh::Result<()> {
         }
     }
 
+    // 8. mutation axis: the WAL-backed mutable-store write path. One
+    // store on the 16-bit m=8 config (the fsync and the insert routing
+    // dominate these costs, not the hash width), three op families:
+    //   - ingest: one acked 64-row batch = WAL append + fsync + per-range
+    //     insert routing into a freshly swapped epoch
+    //   - recover_replay: `MutableStore::open` over the accumulated WAL
+    //     (open never consumes the log, so every rep replays the same
+    //     records into the last published checkpoint)
+    //   - query_tombstoned vs query_compacted: the same live set served
+    //     through a ~20%-tombstoned epoch (just below the 0.25
+    //     auto-compaction trigger) vs after `compact()` — the probe
+    //     stream's per-candidate tombstone-filter overhead
+    struct MutationRow {
+        op: &'static str,
+        n_mutations: usize,
+        timing: Timing,
+    }
+    let mut mutation_rows: Vec<MutationRow> = Vec::new();
+    {
+        use rangelsh::coordinator::{MutableConfig, MutableStore};
+        use rangelsh::util::tmp::TempPath;
+        use rangelsh::ItemId;
+
+        let reps = if smoke { 3 } else { 10 };
+        let n0 = if smoke { 2_000usize } else { 10_000usize };
+        let scfg = ServeConfig {
+            probe_budget: usize::MAX,
+            top_k: 10,
+            code_bits: 16,
+            ..Default::default()
+        };
+        let dir = TempPath::new("bench-mutation");
+        let store: MutableStore<u64> = MutableStore::create(
+            dir.path(),
+            Arc::new(synthetic::longtail_sift(n0, dim, 43)),
+            RangeLshParams::new(16, 8),
+            7,
+            scfg.clone(),
+            MutableConfig::manual(),
+        )?;
+
+        let batch = 64usize;
+        let n_batches = reps + 1; // one warmup call + `reps` measured calls
+        let pool = synthetic::longtail_sift(batch * n_batches, dim, 44);
+        let mut cursor = 0usize;
+        let t_ingest = bench(1, reps, || {
+            let b = cursor % n_batches;
+            cursor += 1;
+            let rows = &pool.flat()[b * batch * dim..(b + 1) * batch * dim];
+            std::hint::black_box(store.ingest(rows).unwrap());
+        });
+        table.row(vec![
+            format!("store ingest ({batch}-row acked batch)"),
+            format!("{:?}", t_ingest.median),
+            format!("{:.0} rows/s", t_ingest.throughput(batch)),
+        ]);
+        mutation_rows.push(MutationRow { op: "ingest", n_mutations: batch, timing: t_ingest });
+
+        // Tombstone ~20% of the rows, spread across the norm ranges.
+        let victims: Vec<ItemId> = (0..store.n_rows() as u32).step_by(5).collect();
+        store.delete(&victims)?;
+
+        let wal_records = cursor * batch + victims.len();
+        let t_recover = bench(0, reps, || {
+            let reopened: MutableStore<u64> =
+                MutableStore::open(dir.path(), scfg.clone(), MutableConfig::manual()).unwrap();
+            std::hint::black_box(reopened.live_len());
+        });
+        table.row(vec![
+            format!("store recover ({wal_records}-record WAL replay)"),
+            format!("{:?}", t_recover.median),
+            format!("{:.0} records/s", t_recover.throughput(wal_records)),
+        ]);
+        mutation_rows.push(MutationRow {
+            op: "recover_replay",
+            n_mutations: wal_records,
+            timing: t_recover,
+        });
+
+        let nq = 64usize;
+        let n_tombs = store.tombstoned_len();
+        let tombstoned = store.current();
+        let t_tomb = bench(1, reps, || {
+            for qi in 0..nq {
+                std::hint::black_box(tombstoned.search(queries.row(qi)).unwrap());
+            }
+        });
+        store.compact()?;
+        let compacted = store.current();
+        let t_comp = bench(1, reps, || {
+            for qi in 0..nq {
+                std::hint::black_box(compacted.search(queries.row(qi)).unwrap());
+            }
+        });
+        let overhead = t_tomb.median.as_secs_f64() / t_comp.median.as_secs_f64().max(1e-12);
+        table.row(vec![
+            format!("query {n_tombs}-tombstoned ({nq} queries)"),
+            format!("{:?}", t_tomb.median),
+            format!("{overhead:.2}x vs compacted"),
+        ]);
+        table.row(vec![
+            format!("query compacted ({nq} queries)"),
+            format!("{:?}", t_comp.median),
+            format!("{:.0} q/s", t_comp.throughput(nq)),
+        ]);
+        mutation_rows.push(MutationRow {
+            op: "query_tombstoned",
+            n_mutations: n_tombs,
+            timing: t_tomb,
+        });
+        mutation_rows.push(MutationRow { op: "query_compacted", n_mutations: 0, timing: t_comp });
+    }
+
     println!("{}", table.render());
 
     if smoke {
@@ -633,6 +751,24 @@ fn main() -> rangelsh::Result<()> {
     // lazy small-budget rows >= 5x faster than their eager twins).
     let json = Json::obj(vec![
         ("bench", Json::Str("hotpath".into())),
+        (
+            // Required by scripts/validate_bench_schema.py; the committed
+            // file's hand-written note carries the full per-axis
+            // acceptance criteria, so regeneration keeps a summary of
+            // them rather than dropping the field.
+            "note",
+            Json::Str(
+                "Measured by `cargo bench --bench hotpath`. Acceptance per axis: \
+                 lazy >= 5x eager at budgets <= 100; session below reprobe at 10k; \
+                 blocked hashing never slower than per-item; streaming re-rank >= 2x \
+                 exhaustive at k=10 with gather_view at-or-below gather_original; \
+                 mih below counting_sort at 256-bit codes at every budget; \
+                 query_tombstoned within 1.5x of query_compacted and recover_replay \
+                 roughly linear in n_mutations. Full rationale: the note field in \
+                 the pre-regeneration git history of BENCH_hotpath.json."
+                    .into(),
+            ),
+        ),
         ("n_items", Json::Num(n as f64)),
         ("dim", Json::Num(dim as f64)),
         (
@@ -766,6 +902,28 @@ fn main() -> rangelsh::Result<()> {
                             ("m", Json::Num(64.0)),
                             ("deadline_us", Json::Num(r.deadline_us as f64)),
                             ("degraded_pct", Json::Num(r.degraded_pct)),
+                            ("median_us", Json::Num(r.timing.median.as_secs_f64() * 1e6)),
+                            ("min_us", Json::Num(r.timing.min.as_secs_f64() * 1e6)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            // WAL-backed mutable-store write path: acked ingest batches,
+            // recovery replay over the accumulated WAL, and the
+            // tombstone filter's query overhead vs the compacted twin.
+            // Optional in the schema, like degraded_axis.
+            "mutation_axis",
+            Json::Arr(
+                mutation_rows
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("code_bits", Json::Num(16.0)),
+                            ("m", Json::Num(8.0)),
+                            ("op", Json::Str(r.op.into())),
+                            ("n_mutations", Json::Num(r.n_mutations as f64)),
                             ("median_us", Json::Num(r.timing.median.as_secs_f64() * 1e6)),
                             ("min_us", Json::Num(r.timing.min.as_secs_f64() * 1e6)),
                         ])

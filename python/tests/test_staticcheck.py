@@ -347,10 +347,13 @@ def test_real_repo_every_oracle_pair_is_witnessed_by_its_named_test():
     assert set(matches) == {
         "lazy-probe", "mih-rank", "streaming-rerank",
         "blocked-hash-items", "blocked-hash-queries",
+        "mutated-vs-rebuilt", "tombstone-sessions",
     }
     expected = {
         "lazy-probe": "prop_lazy_probe_stream_equals_eager_stream",
         "streaming-rerank": "prop_streaming_pruned_rerank_equals_exhaustive_oracle",
+        "mutated-vs-rebuilt": "prop_mutated_store_answers_equal_freshly_rebuilt_oracle",
+        "tombstone-sessions": "prop_tombstone_sessions_equal_oneshot_and_never_leak",
     }
     for name, (matched, pair, fast_ok, oracle_ok) in matches.items():
         assert fast_ok and oracle_ok, f"pair {name}: member did not resolve"

@@ -89,14 +89,42 @@ impl<C: CodeWord> SearchEngine<C> {
             RerankMode::Streaming => Some(Arc::new(RerankView::build(&dataset))),
             RerankMode::Exhaustive => None,
         };
-        Ok(Self {
-            index,
-            dataset,
-            view,
-            hasher,
-            cfg,
-            metrics: Arc::new(Metrics::new()),
-        })
+        Self::from_epoch(index, dataset, view, hasher, cfg, Arc::new(Metrics::new()))
+    }
+
+    /// Assemble an engine for one index *epoch* — the
+    /// [`crate::coordinator::store::MutableStore`] constructor: unlike
+    /// [`Self::new`], the re-rank view and the metrics sink are supplied
+    /// by the caller, so successive epochs of a mutable store share one
+    /// metrics stream and reuse the previous epoch's [`RerankView`] when
+    /// the dataset did not change (delete-only epochs).
+    pub(crate) fn from_epoch(
+        index: Arc<dyn CodeProbe<C>>,
+        dataset: Arc<Dataset>,
+        view: Option<Arc<RerankView>>,
+        hasher: Arc<dyn ItemHasher<C>>,
+        cfg: ServeConfig,
+        metrics: Arc<Metrics>,
+    ) -> Result<Self> {
+        anyhow::ensure!(
+            hasher.dim() == dataset.dim(),
+            "hasher dim {} != dataset dim {}",
+            hasher.dim(),
+            dataset.dim()
+        );
+        anyhow::ensure!(cfg.top_k >= 1, "top_k must be >= 1");
+        anyhow::ensure!(cfg.probe_budget >= cfg.top_k, "budget below top_k");
+        anyhow::ensure!(
+            view.is_some() == (cfg.rerank == RerankMode::Streaming),
+            "rerank view must be present exactly for streaming engines"
+        );
+        Ok(Self { index, dataset, view, hasher, cfg, metrics })
+    }
+
+    /// The streaming re-rank view, when this engine carries one (epoch
+    /// reuse by the mutable store).
+    pub(crate) fn view(&self) -> Option<&Arc<RerankView>> {
+        self.view.as_ref()
     }
 
     pub fn metrics(&self) -> &Arc<Metrics> {

@@ -156,11 +156,39 @@ impl std::error::Error for ShardLossError {}
 /// only for tests and the `fault-injection` feature — release servers
 /// carry no injection branch.
 #[cfg(any(test, feature = "fault-injection"))]
-pub use self::injection::{Fault, FaultPlan};
+pub use self::injection::{CrashPoint, Fault, FaultPlan};
 
 #[cfg(any(test, feature = "fault-injection"))]
 mod injection {
     use std::time::Duration;
+
+    /// Named crash sites on the mutable store's durability path (README
+    /// §"Mutability & recovery model", crash matrix). Each point marks a
+    /// distinct window of the WAL/checkpoint protocol; the chaos tests
+    /// crash a store at every point and prove reopen + replay recovers a
+    /// state bit-identical to the last *acknowledged* mutation.
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub enum CrashPoint {
+        /// After the WAL record is appended and fsynced, before the
+        /// in-memory epoch applies it: the mutation is acknowledged-
+        /// durable, so recovery must REPLAY it.
+        PostWalAppend,
+        /// After the mutation's new index structures are built in memory,
+        /// before the epoch swap publishes them: on-disk state is
+        /// identical to [`CrashPoint::PostWalAppend`]; recovery must
+        /// still replay the logged record.
+        PreApply,
+        /// Inside compaction, after the re-partitioned index is built in
+        /// memory but before any checkpoint file is written: disk still
+        /// holds the pre-compaction checkpoint + WAL, so recovery
+        /// reopens the pre-compaction state.
+        MidCompaction,
+        /// Inside the checkpoint, after the staged temp files are written
+        /// and fsynced but before any rename publishes them: the old
+        /// manifest still governs, so recovery reopens the
+        /// pre-checkpoint state (the temp siblings are dead bytes).
+        PreRename,
+    }
 
     /// One injected misbehaviour at a `(shard, query)` site.
     #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -188,6 +216,9 @@ mod injection {
         /// `(shard, query, fault, attempts it persists)` — wins over the
         /// seeded draw at its site.
         scripted: Vec<(usize, u64, Fault, u32)>,
+        /// Crash the mutable store at this durability-path site (see
+        /// [`CrashPoint`]); `None` = never crash.
+        crash_at: Option<CrashPoint>,
     }
 
     impl FaultPlan {
@@ -198,6 +229,29 @@ mod injection {
                 persist_max: 2,
                 delay: Duration::from_micros(200),
                 scripted: Vec::new(),
+                crash_at: None,
+            }
+        }
+
+        /// Arm a crash at `point` on the store's durability path. The
+        /// "crash" is an error return that abandons the operation with
+        /// the disk exactly as a real crash at that site would leave it
+        /// — the chaos tests then drop the store and reopen the
+        /// directory to exercise recovery.
+        pub fn with_crash(mut self, point: CrashPoint) -> Self {
+            self.crash_at = Some(point);
+            self
+        }
+
+        /// Fail (once per matching site) when the plan arms `point`.
+        /// Called by [`crate::coordinator::store::MutableStore`] at each
+        /// named site; a healthy plan is a no-op.
+        pub fn crash_if(&self, point: CrashPoint) -> crate::Result<()> {
+            match self.crash_at {
+                Some(p) if p == point => {
+                    Err(anyhow::anyhow!("injected crash at {point:?}"))
+                }
+                _ => Ok(()),
             }
         }
 

@@ -26,13 +26,15 @@ pub mod fault;
 pub mod metrics;
 pub mod router;
 pub mod server;
+pub mod store;
 
 pub use crate::config::{QueryParams, ResolvedQueryParams};
 pub use batcher::BatchPolicy;
 pub use engine::{AnyEngine, SearchEngine, SearchResult};
 pub use fault::{DegradeReason, Degraded, OverloadedError, QueryResponse, ShardLossError};
 #[cfg(any(test, feature = "fault-injection"))]
-pub use fault::{Fault, FaultPlan};
+pub use fault::{CrashPoint, Fault, FaultPlan};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use router::{RouterPolicy, Shard, ShardedRouter};
-pub use server::{QueryServer, ServerHandle};
+pub use server::{MutationAck, MutationOp, QueryServer, ServerHandle};
+pub use store::{AnyStore, MutableConfig, MutableStore};

@@ -22,12 +22,15 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
+use anyhow::anyhow;
+
 use crate::config::QueryParams;
 use crate::coordinator::engine::{SearchEngine, SearchResult};
 #[cfg(any(test, feature = "fault-injection"))]
 use crate::coordinator::fault::FaultPlan;
 use crate::coordinator::fault::{Degraded, QueryResponse, ShardLossError};
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::store::MutableStore;
 use crate::hash::CodeWord;
 use crate::{ItemId, Result};
 
@@ -70,12 +73,19 @@ impl Default for RouterPolicy {
 /// Fan-out/merge router over shards.
 pub struct ShardedRouter<C: CodeWord = u64> {
     shards: Vec<Shard<C>>,
+    /// Optional [`MutableStore`] behind each shard (parallel to `shards`).
+    /// A store-backed shard serves queries from its store's *current*
+    /// epoch (re-resolved per shard call) and accepts routed mutations;
+    /// a `None` shard keeps its fixed engine, read-only.
+    stores: Vec<Option<Arc<MutableStore<C>>>>,
     top_k: usize,
     policy: RouterPolicy,
     metrics: Arc<Metrics>,
     /// Per-router query counter — the deterministic query index fault
     /// plans key on.
     seq: AtomicU64,
+    /// Rotation counter for [`Self::ingest`]'s shard placement.
+    ingest_seq: AtomicU64,
     #[cfg(any(test, feature = "fault-injection"))]
     fault_plan: Option<FaultPlan>,
 }
@@ -93,15 +103,29 @@ impl<C: CodeWord> ShardedRouter<C> {
         anyhow::ensure!(policy.min_shards >= 1, "min_shards must be >= 1");
         let policy =
             RouterPolicy { min_shards: policy.min_shards.min(shards.len()), ..policy };
+        let stores = (0..shards.len()).map(|_| None).collect();
         Ok(Self {
             shards,
+            stores,
             top_k,
             policy,
             metrics: Arc::new(Metrics::new()),
             seq: AtomicU64::new(0),
+            ingest_seq: AtomicU64::new(0),
             #[cfg(any(test, feature = "fault-injection"))]
             fault_plan: None,
         })
+    }
+
+    /// Back shard `si` with a mutable store: its queries re-resolve the
+    /// store's current epoch per call, and routed mutations
+    /// ([`Self::ingest`] / [`Self::delete`]) may land on it. The shard's
+    /// fixed engine becomes the fallback only if the store is detached.
+    pub fn set_store(&mut self, si: usize, store: Arc<MutableStore<C>>) -> Result<()> {
+        anyhow::ensure!(si < self.shards.len(), "shard index {si} out of range");
+        // staticcheck: allow(panic, "si < shards.len() is ensured above and stores is built parallel to shards")
+        self.stores[si] = Some(store);
+        Ok(())
     }
 
     pub fn n_shards(&self) -> usize {
@@ -201,7 +225,10 @@ impl<C: CodeWord> ShardedRouter<C> {
     /// times with exponential backoff. `AssertUnwindSafe` is justified
     /// because a shard engine holds no interior state a query mutates
     /// besides atomics and per-thread scratch that is cleared on entry;
-    /// an unwound query leaves the engine servable.
+    /// an unwound query leaves the engine servable — and a store
+    /// mutation either completed (epoch swapped) or left replayable WAL
+    /// records whose re-application is idempotent, so an unwound or
+    /// retried mutation cannot corrupt the shard.
     fn query_shard(
         &self,
         si: usize,
@@ -210,11 +237,25 @@ impl<C: CodeWord> ShardedRouter<C> {
         query: &[f32],
         params: &QueryParams,
     ) -> Result<QueryResponse> {
+        self.apply_shard(si, qi, || {
+            // Store-backed shards answer from the store's current epoch;
+            // the fixed engine serves the rest.
+            // staticcheck: allow(panic, "si indexes shards in every caller and stores is built parallel to shards")
+            let engine = match &self.stores[si] {
+                Some(store) => store.current(),
+                None => shard.engine.clone(),
+            };
+            engine.search_full(query, params)
+        })
+    }
+
+    /// The retry/containment core shared by queries and mutations.
+    fn apply_shard<T>(&self, si: usize, qi: u64, f: impl Fn() -> Result<T>) -> Result<T> {
         let mut attempt: u32 = 0;
         loop {
             let outcome = catch_unwind(AssertUnwindSafe(|| {
                 self.inject(si, qi, attempt)?;
-                shard.engine.search_full(query, params)
+                f()
             }));
             let err = match outcome {
                 Ok(Ok(resp)) => return Ok(resp),
@@ -233,6 +274,73 @@ impl<C: CodeWord> ShardedRouter<C> {
             std::thread::sleep(backoff);
             attempt += 1;
         }
+    }
+
+    /// Ingest rows into one store-backed shard (rotating across all
+    /// store-backed shards) under the router's retry policy; returns
+    /// *global* ids. Retrying a half-failed ingest is safe: the store's
+    /// WAL replay is idempotent, so re-logged rows deduplicate on
+    /// recovery. Global ids stay unique as long as shard `id_offset`s
+    /// leave growth headroom — offset assignment is the deployment's
+    /// contract, exactly as for the initial corpus split.
+    pub fn ingest(&self, rows: &[f32]) -> Result<Vec<ItemId>> {
+        let backed: Vec<usize> =
+            // staticcheck: allow(panic, "stores is built parallel to shards, so 0..shards.len() is in range")
+            (0..self.shards.len()).filter(|&si| self.stores[si].is_some()).collect();
+        let si = match backed.as_slice() {
+            [] => anyhow::bail!("no shard has a mutable store attached"),
+            // staticcheck: allow(panic, "the index is reduced mod some.len(), and the empty case matched above")
+            some => some[self.ingest_seq.fetch_add(1, Ordering::Relaxed) as usize % some.len()],
+        };
+        // staticcheck: allow(panic, "si came from `backed`, which only holds indices below stores.len()")
+        let Some(store) = self.stores[si].clone() else {
+            anyhow::bail!("shard {si} lost its store between selection and apply");
+        };
+        let qi = self.seq.fetch_add(1, Ordering::Relaxed);
+        // staticcheck: allow(panic, "si came from `backed`, which only holds indices below shards.len()")
+        let offset = self.shards[si].id_offset;
+        let local = self.apply_shard(si, qi, || store.ingest(rows))?;
+        Ok(local.into_iter().map(|id| id + offset).collect())
+    }
+
+    /// Tombstone global ids, each routed to its owning shard (the shard
+    /// with the largest `id_offset <= id`), under the router's retry
+    /// policy. Returns the total newly-deleted count. A multi-shard
+    /// batch applies shard-by-shard; on a shard failure the earlier
+    /// shards' deletes stand (deletes are idempotent — retry the whole
+    /// batch safely) and the error names the failed shard.
+    pub fn delete(&self, ids: &[ItemId]) -> Result<usize> {
+        anyhow::ensure!(!ids.is_empty(), "empty delete batch");
+        let mut per_shard: Vec<Vec<ItemId>> = vec![Vec::new(); self.shards.len()];
+        for &id in ids {
+            let si = self.owner_of(id)?;
+            // staticcheck: allow(panic, "owner_of returns a position inside shards and per_shard is sized shards.len()")
+            per_shard[si].push(id - self.shards[si].id_offset);
+        }
+        let mut total = 0;
+        for (si, local) in per_shard.into_iter().enumerate() {
+            if local.is_empty() {
+                continue;
+            }
+            // staticcheck: allow(panic, "si enumerates per_shard, which is sized shards.len() == stores.len()")
+            let Some(store) = self.stores[si].clone() else {
+                anyhow::bail!("shard {si} owns ids in this batch but has no mutable store");
+            };
+            let qi = self.seq.fetch_add(1, Ordering::Relaxed);
+            total += self.apply_shard(si, qi, || store.delete(&local))?;
+        }
+        Ok(total)
+    }
+
+    /// The shard owning a global id: largest `id_offset <= id`.
+    fn owner_of(&self, id: ItemId) -> Result<usize> {
+        self.shards
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.id_offset <= id)
+            .max_by_key(|(_, s)| s.id_offset)
+            .map(|(si, _)| si)
+            .ok_or_else(|| anyhow!("id {id} precedes every shard's id range"))
     }
 
     #[cfg(any(test, feature = "fault-injection"))]
@@ -414,6 +522,115 @@ mod tests {
         let s = router.metrics().snapshot();
         assert_eq!(s.shard_failures, 1);
         assert_eq!(s.retries, 2, "retry cap must bound the attempts");
+    }
+
+    use crate::coordinator::store::{MutableConfig, MutableStore};
+    use crate::util::tmp::TempPath;
+
+    fn make_store(dir: &std::path::Path, d: Arc<Dataset>) -> Arc<MutableStore<u64>> {
+        let cfg = ServeConfig {
+            probe_budget: usize::MAX,
+            top_k: 5,
+            code_bits: 16,
+            ..Default::default()
+        };
+        Arc::new(
+            MutableStore::create(
+                dir,
+                d,
+                RangeLshParams::new(16, 4),
+                7,
+                cfg,
+                MutableConfig::manual(),
+            )
+            .unwrap(),
+        )
+    }
+
+    #[test]
+    fn store_backed_shards_route_mutations_and_track_epochs() {
+        // Two store-backed shards at offsets 0 and 1000 (headroom for
+        // growth). Mutations route by ownership; queries always see the
+        // current epochs.
+        let full = synthetic::longtail_sift(600, 8, 13);
+        let half = 300 * 8;
+        let d1 = Arc::new(Dataset::from_flat(8, full.flat()[..half].to_vec()));
+        let d2 = Arc::new(Dataset::from_flat(8, full.flat()[half..].to_vec()));
+        let (t1, t2) = (TempPath::new("router-store-1"), TempPath::new("router-store-2"));
+        let (s1, s2) = (make_store(t1.path(), d1), make_store(t2.path(), d2));
+        let mut router = ShardedRouter::with_policy(
+            vec![
+                Shard { engine: s1.current(), id_offset: 0 },
+                Shard { engine: s2.current(), id_offset: 1000 },
+            ],
+            5,
+            fast_policy(2, 1),
+        )
+        .unwrap();
+        router.set_store(0, s1.clone()).unwrap();
+        router.set_store(1, s2.clone()).unwrap();
+        let q = synthetic::gaussian_queries(2, 8, 14);
+
+        // Delete the global winner through the router: it must route to
+        // the owning shard and vanish from the merged answer.
+        let victim = router.query(q.row(0)).unwrap()[0].id;
+        assert_eq!(router.delete(&[victim]).unwrap(), 1);
+        assert!(router.query(q.row(0)).unwrap().iter().all(|r| r.id != victim));
+        let owner_tombs = if victim >= 1000 { s2.tombstoned_len() } else { s1.tombstoned_len() };
+        assert_eq!(owner_tombs, 1, "delete must land on the owning shard");
+
+        // Ingest rotates across the store-backed shards and globalizes
+        // the returned ids.
+        let extra = synthetic::longtail_sift(4, 8, 15);
+        let a = router.ingest(&extra.flat()[..16]).unwrap();
+        let b = router.ingest(&extra.flat()[16..]).unwrap();
+        assert_eq!(a, vec![300, 301], "first ingest lands on shard 0");
+        assert_eq!(b, vec![1300, 1301], "second rotates to shard 1 (offset 1000)");
+        assert_eq!(s1.live_len() + s2.live_len(), 603);
+
+        // The merged answer equals each store's current epoch merged
+        // by exact score — no stale fixed-engine reads.
+        let resp = router.query(q.row(1)).unwrap();
+        let mut want: Vec<SearchResult> = Vec::new();
+        for (s, off) in [(&s1, 0), (&s2, 1000)] {
+            want.extend(s.current().search(q.row(1)).unwrap().into_iter().map(|r| {
+                SearchResult { id: r.id + off, score: r.score }
+            }));
+        }
+        want.sort_by(|x, y| y.score.total_cmp(&x.score).then(x.id.cmp(&y.id)));
+        want.truncate(5);
+        assert_eq!(resp, want);
+    }
+
+    #[test]
+    fn mutations_on_storeless_shards_fail_typed() {
+        let d = Arc::new(synthetic::longtail_sift(100, 8, 16));
+        let router =
+            ShardedRouter::new(vec![Shard { engine: make_engine(d), id_offset: 0 }], 5).unwrap();
+        let err = router.ingest(&[1.0; 8]).unwrap_err();
+        assert!(format!("{err:#}").contains("no shard has a mutable store"));
+        let err = router.delete(&[3]).unwrap_err();
+        assert!(format!("{err:#}").contains("no mutable store"));
+    }
+
+    #[test]
+    fn mutation_retries_recover_from_transient_faults() {
+        // The shard's first two mutation attempts fail via the scripted
+        // plan; the third succeeds and the delete lands exactly once.
+        let d = Arc::new(synthetic::longtail_sift(200, 8, 17));
+        let t = TempPath::new("router-store-retry");
+        let store = make_store(t.path(), d);
+        let mut router = ShardedRouter::with_policy(
+            vec![Shard { engine: store.current(), id_offset: 0 }],
+            5,
+            fast_policy(1, 2),
+        )
+        .unwrap();
+        router.set_store(0, store.clone()).unwrap();
+        router.set_fault_plan(Some(FaultPlan::seeded(4, 0).script(0, 0, Fault::Error, 2)));
+        assert_eq!(router.delete(&[7]).unwrap(), 1);
+        assert_eq!(store.tombstoned_len(), 1);
+        assert_eq!(router.metrics().snapshot().retries, 2);
     }
 
     #[test]

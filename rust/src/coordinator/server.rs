@@ -2,6 +2,14 @@
 //! concurrent queries (flush on size or deadline), runs the engine's
 //! batched hash+probe, and answers per-request reply channels.
 //!
+//! Mutations ([`ServerHandle::ingest`] / [`ServerHandle::delete`]) ride
+//! the same channel and the same admission shedder as queries when the
+//! server fronts a [`MutableStore`] ([`QueryServer::spawn_mutable`]).
+//! The batcher flushes the queries batched *before* a mutation with the
+//! pre-mutation epoch, applies the mutation, and serves everything after
+//! from the new epoch — single-consumer ordering gives read-your-writes
+//! to any client that has seen its mutation acknowledged.
+//!
 //! Offline build note: this is a plain-thread implementation of the same
 //! design a tokio front would have — the batcher is the only consumer of
 //! the request channel, request submitters block on a per-request reply
@@ -20,16 +28,84 @@ use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::engine::{AnyEngine, SearchEngine, SearchResult};
 use crate::coordinator::fault::{DegradeReason, OverloadedError, QueryResponse};
 use crate::coordinator::metrics::MetricsSnapshot;
+use crate::coordinator::store::MutableStore;
 use crate::hash::CodeWord;
-use crate::Result;
+use crate::{ItemId, Result};
 
-struct Job {
+/// A mutation submitted through the serving front.
+#[derive(Debug, Clone)]
+pub enum MutationOp {
+    /// Row-major, `dim`-aligned rows to append and index.
+    Ingest(Vec<f32>),
+    /// Ids to tombstone.
+    Delete(Vec<ItemId>),
+}
+
+/// The acknowledgement for a [`MutationOp`] — returned only after the
+/// mutation's WAL records are fsynced (durability) and the new epoch is
+/// installed (visibility).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MutationAck {
+    /// The ids assigned to the ingested rows, in row order.
+    Ingested(Vec<ItemId>),
+    /// How many ids were newly tombstoned (idempotent re-deletes excluded).
+    Deleted(usize),
+}
+
+struct QueryJob {
     query: Vec<f32>,
     /// Per-request overrides of the engine's serving defaults; requests
     /// with different parameters still share the batch's hash pass.
     params: QueryParams,
     reply: mpsc::Sender<Result<QueryResponse>>,
     enqueued: Instant,
+}
+
+struct MutateJob {
+    op: MutationOp,
+    reply: mpsc::Sender<Result<MutationAck>>,
+}
+
+enum Job {
+    Query(QueryJob),
+    Mutate(MutateJob),
+}
+
+/// Where the batcher gets its engine: pinned to one immutable engine, or
+/// re-resolved from a [`MutableStore`]'s current epoch at every flush.
+enum EngineSource<C: CodeWord> {
+    Fixed(Arc<SearchEngine<C>>),
+    Mutable(Arc<MutableStore<C>>),
+}
+
+impl<C: CodeWord> Clone for EngineSource<C> {
+    fn clone(&self) -> Self {
+        match self {
+            Self::Fixed(e) => Self::Fixed(e.clone()),
+            Self::Mutable(s) => Self::Mutable(s.clone()),
+        }
+    }
+}
+
+impl<C: CodeWord> EngineSource<C> {
+    fn current(&self) -> Arc<SearchEngine<C>> {
+        match self {
+            Self::Fixed(e) => e.clone(),
+            Self::Mutable(s) => s.current(),
+        }
+    }
+
+    fn apply(&self, op: MutationOp) -> Result<MutationAck> {
+        match self {
+            Self::Fixed(_) => Err(anyhow!(
+                "server fronts an immutable engine; spawn_mutable for ingest/delete"
+            )),
+            Self::Mutable(store) => match op {
+                MutationOp::Ingest(rows) => store.ingest(&rows).map(MutationAck::Ingested),
+                MutationOp::Delete(ids) => store.delete(&ids).map(MutationAck::Deleted),
+            },
+        }
+    }
 }
 
 /// Cloneable client handle to a running [`QueryServer`]. Generic over the
@@ -40,7 +116,7 @@ struct Job {
 /// spawn client threads (or use [`drive_workload`]) for concurrency.
 pub struct ServerHandle<C: CodeWord = u64> {
     tx: Mutex<mpsc::Sender<Job>>,
-    engine: Arc<SearchEngine<C>>,
+    source: EngineSource<C>,
     policy: BatchPolicy,
     /// Jobs submitted but not yet picked up by the batcher thread — the
     /// queue depth the load shedder consults. Check-then-increment is
@@ -58,7 +134,7 @@ impl<C: CodeWord> Clone for ServerHandle<C> {
             tx: Mutex::new(
                 self.tx.lock().unwrap_or_else(PoisonError::into_inner).clone(),
             ),
-            engine: self.engine.clone(),
+            source: self.source.clone(),
             policy: self.policy,
             depth: self.depth.clone(),
         }
@@ -93,17 +169,76 @@ impl<C: CodeWord> ServerHandle<C> {
     /// answered at flush time with an empty
     /// `Degraded { reason: BudgetExhausted }` response.
     pub fn query_full(&self, query: Vec<f32>, params: QueryParams) -> Result<QueryResponse> {
+        let engine = self.source.current();
         let depth = self.depth.load(Ordering::Relaxed);
-        let time_budget = params.resolve(self.engine.config()).time_budget;
-        let service = Duration::from_micros(self.engine.metrics().snapshot().p50_us);
+        let time_budget = params.resolve(engine.config()).time_budget;
+        let service = Duration::from_micros(engine.metrics().snapshot().p50_us);
         let projected_wait = self.policy.projected_wait(depth, service);
         if depth >= self.policy.max_queue
             || time_budget.is_some_and(|tb| projected_wait > tb)
         {
-            self.engine.metrics().record_shed();
+            engine.metrics().record_shed();
             return Err(OverloadedError { queue_depth: depth, projected_wait, time_budget }.into());
         }
         let (reply_tx, reply_rx) = mpsc::channel();
+        self.send_job(Job::Query(QueryJob {
+            query,
+            params,
+            reply: reply_tx,
+            enqueued: Instant::now(),
+        }))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("server dropped the reply"))?
+    }
+
+    /// Append rows through the serving front; blocks until the mutation
+    /// is durable and visible. See [`Self::mutate`] for ordering.
+    pub fn ingest(&self, rows: Vec<f32>) -> Result<Vec<ItemId>> {
+        match self.mutate(MutationOp::Ingest(rows))? {
+            MutationAck::Ingested(ids) => Ok(ids),
+            other => Err(anyhow!("mismatched mutation ack: {other:?}")),
+        }
+    }
+
+    /// Tombstone ids through the serving front; blocks until the delete
+    /// is durable and visible. See [`Self::mutate`] for ordering.
+    pub fn delete(&self, ids: Vec<ItemId>) -> Result<usize> {
+        match self.mutate(MutationOp::Delete(ids))? {
+            MutationAck::Deleted(n) => Ok(n),
+            other => Err(anyhow!("mismatched mutation ack: {other:?}")),
+        }
+    }
+
+    /// Submit a mutation through the same queue and admission shedder as
+    /// queries (an overloaded server sheds writes exactly like reads —
+    /// nothing is logged for a shed mutation, so there is nothing to
+    /// replay). The batcher flushes the queries that arrived before the
+    /// mutation against the pre-mutation epoch, applies the mutation,
+    /// and serves later queries from the new epoch: once this returns
+    /// `Ok`, every subsequent query observes the mutation. Errs when the
+    /// server fronts an immutable engine ([`QueryServer::spawn`]).
+    pub fn mutate(&self, op: MutationOp) -> Result<MutationAck> {
+        let depth = self.depth.load(Ordering::Relaxed);
+        if depth >= self.policy.max_queue {
+            let engine = self.source.current();
+            engine.metrics().record_shed();
+            let service = Duration::from_micros(engine.metrics().snapshot().p50_us);
+            return Err(OverloadedError {
+                queue_depth: depth,
+                projected_wait: self.policy.projected_wait(depth, service),
+                time_budget: None,
+            }
+            .into());
+        }
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.send_job(Job::Mutate(MutateJob { op, reply: reply_tx }))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("server dropped the reply"))?
+    }
+
+    fn send_job(&self, job: Job) -> Result<()> {
         self.depth.fetch_add(1, Ordering::Relaxed);
         let sent = self
             .tx
@@ -111,18 +246,16 @@ impl<C: CodeWord> ServerHandle<C> {
             // Same recovery argument as Clone: the Sender is never left
             // in a torn state by a panicked lock holder.
             .unwrap_or_else(PoisonError::into_inner)
-            .send(Job { query, params, reply: reply_tx, enqueued: Instant::now() });
+            .send(job);
         if sent.is_err() {
             self.depth.fetch_sub(1, Ordering::Relaxed);
             return Err(anyhow!("server is shut down"));
         }
-        reply_rx
-            .recv()
-            .map_err(|_| anyhow!("server dropped the reply"))?
+        Ok(())
     }
 
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.engine.metrics().snapshot()
+        self.source.current().metrics().snapshot()
     }
 }
 
@@ -138,15 +271,32 @@ impl QueryServer {
         engine: Arc<SearchEngine<C>>,
         policy: BatchPolicy,
     ) -> Result<ServerHandle<C>> {
+        Self::spawn_source(EngineSource::Fixed(engine), policy)
+    }
+
+    /// [`Self::spawn`] over a [`MutableStore`]: queries are answered from
+    /// the store's current epoch, and [`ServerHandle::ingest`] /
+    /// [`ServerHandle::delete`] are live.
+    pub fn spawn_mutable<C: CodeWord>(
+        store: Arc<MutableStore<C>>,
+        policy: BatchPolicy,
+    ) -> Result<ServerHandle<C>> {
+        Self::spawn_source(EngineSource::Mutable(store), policy)
+    }
+
+    fn spawn_source<C: CodeWord>(
+        source: EngineSource<C>,
+        policy: BatchPolicy,
+    ) -> Result<ServerHandle<C>> {
         let (tx, rx) = mpsc::channel::<Job>();
-        let loop_engine = engine.clone();
+        let loop_source = source.clone();
         let depth = Arc::new(AtomicUsize::new(0));
         let loop_depth = depth.clone();
         std::thread::Builder::new()
             .name("rangelsh-batcher".into())
-            .spawn(move || batch_loop(loop_engine, policy, rx, loop_depth))
+            .spawn(move || batch_loop(loop_source, policy, rx, loop_depth))
             .map_err(|e| anyhow!("spawning batcher thread: {e}"))?;
-        Ok(ServerHandle { tx: Mutex::new(tx), engine, policy, depth })
+        Ok(ServerHandle { tx: Mutex::new(tx), source, policy, depth })
     }
 }
 
@@ -163,12 +313,16 @@ fn budget_after_wait(budget: Option<Duration>, wait: Duration) -> Option<Option<
 }
 
 fn batch_loop<C: CodeWord>(
-    engine: Arc<SearchEngine<C>>,
+    source: EngineSource<C>,
     policy: BatchPolicy,
     rx: mpsc::Receiver<Job>,
     depth: Arc<AtomicUsize>,
 ) {
-    let mut pending: Vec<Job> = Vec::with_capacity(policy.max_batch);
+    let mut pending: Vec<QueryJob> = Vec::with_capacity(policy.max_batch);
+    // A staged mutation acts as a batch barrier: queries already pending
+    // flush first (on the pre-mutation epoch), then the mutation applies,
+    // then the loop resumes on the new epoch.
+    let mut staged: Option<MutateJob> = None;
     let take = |r: std::result::Result<Job, mpsc::RecvTimeoutError>| {
         // Receipt is what moves a job out of the shedder's queue depth.
         if r.is_ok() {
@@ -178,9 +332,10 @@ fn batch_loop<C: CodeWord>(
     };
     loop {
         // Wait (indefinitely) for the first job of the next batch.
-        if pending.is_empty() {
+        if pending.is_empty() && staged.is_none() {
             match take(rx.recv().map_err(|_| mpsc::RecvTimeoutError::Disconnected)) {
-                Ok(job) => pending.push(job),
+                Ok(Job::Query(job)) => pending.push(job),
+                Ok(Job::Mutate(job)) => staged = Some(job),
                 Err(_) => return, // all senders gone
             }
         }
@@ -188,13 +343,15 @@ fn batch_loop<C: CodeWord>(
         // Drain whatever queued up while the previous batch was running —
         // these are "free" batch members, no waiting involved. (Anchoring
         // the deadline at the oldest job's *enqueue* time would make every
-        // post-flush batch flush instantly with one member.)
-        while pending.len() < policy.max_batch {
+        // post-flush batch flush instantly with one member.) A mutation
+        // stops the drain: it must not reorder past queries behind it.
+        while staged.is_none() && pending.len() < policy.max_batch {
             match take(rx.try_recv().map_err(|e| match e {
                 mpsc::TryRecvError::Empty => mpsc::RecvTimeoutError::Timeout,
                 mpsc::TryRecvError::Disconnected => mpsc::RecvTimeoutError::Disconnected,
             })) {
-                Ok(job) => pending.push(job),
+                Ok(Job::Query(job)) => pending.push(job),
+                Ok(Job::Mutate(job)) => staged = Some(job),
                 Err(mpsc::RecvTimeoutError::Timeout) => break,
                 Err(mpsc::RecvTimeoutError::Disconnected) => {
                     closed = true;
@@ -203,30 +360,39 @@ fn batch_loop<C: CodeWord>(
             }
         }
         // Then wait out the remainder of the oldest job's batching window
-        // (none left if it already waited through the previous flush).
-        // staticcheck: allow(panic, "pending is non-empty here: the blocking recv above either pushed a job or returned")
-        let deadline = (pending[0].enqueued + policy.deadline).max(Instant::now());
-        while !closed && pending.len() < policy.max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match take(rx.recv_timeout(deadline - now)) {
-                Ok(job) => pending.push(job),
-                Err(mpsc::RecvTimeoutError::Timeout) => break,
-                Err(mpsc::RecvTimeoutError::Disconnected) => {
-                    closed = true;
+        // (none left if it already waited through the previous flush, and
+        // none at all when a mutation is staged — the barrier flushes now).
+        if staged.is_none() && !pending.is_empty() {
+            // staticcheck: allow(panic, "pending is non-empty: guarded by the enclosing condition")
+            let deadline = (pending[0].enqueued + policy.deadline).max(Instant::now());
+            while !closed && pending.len() < policy.max_batch {
+                let now = Instant::now();
+                if now >= deadline {
                     break;
+                }
+                match take(rx.recv_timeout(deadline - now)) {
+                    Ok(Job::Query(job)) => pending.push(job),
+                    Ok(Job::Mutate(job)) => {
+                        staged = Some(job);
+                        break;
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        closed = true;
+                        break;
+                    }
                 }
             }
         }
-        // Flush. First settle queue-wait accounting: jobs whose time
+        // Flush against the epoch current *now* — pre-mutation if one is
+        // staged. First settle queue-wait accounting: jobs whose time
         // budget was consumed entirely by waiting are answered degraded
         // right here; survivors carry their *remaining* budget into the
         // engine (whose own deadline anchors at batch entry, so the
         // end-to-end bound is enqueue + budget).
+        let engine = source.current();
         let now = Instant::now();
-        let mut batch: Vec<Job> = Vec::with_capacity(pending.len());
+        let mut batch: Vec<QueryJob> = Vec::with_capacity(pending.len());
         for mut job in std::mem::take(&mut pending) {
             let wait = now.duration_since(job.enqueued);
             let budget = job.params.resolve(engine.config()).time_budget;
@@ -245,27 +411,29 @@ fn batch_loop<C: CodeWord>(
                 }
             }
         }
-        if batch.is_empty() {
-            if closed {
-                return;
+        if !batch.is_empty() {
+            let rows: Vec<f32> = batch.iter().flat_map(|j| j.query.iter().copied()).collect();
+            let params: Vec<QueryParams> = batch.iter().map(|j| j.params).collect();
+            match engine.search_batch_full(&rows, &params) {
+                Ok(per_query) => {
+                    debug_assert_eq!(per_query.len(), batch.len());
+                    for (job, res) in batch.into_iter().zip(per_query) {
+                        let _ = job.reply.send(Ok(res));
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("batch failed: {e:#}");
+                    for job in batch {
+                        let _ = job.reply.send(Err(anyhow!("{msg}")));
+                    }
+                }
             }
-            continue;
         }
-        let rows: Vec<f32> = batch.iter().flat_map(|j| j.query.iter().copied()).collect();
-        let params: Vec<QueryParams> = batch.iter().map(|j| j.params).collect();
-        match engine.search_batch_full(&rows, &params) {
-            Ok(per_query) => {
-                debug_assert_eq!(per_query.len(), batch.len());
-                for (job, res) in batch.into_iter().zip(per_query) {
-                    let _ = job.reply.send(Ok(res));
-                }
-            }
-            Err(e) => {
-                let msg = format!("batch failed: {e:#}");
-                for job in batch {
-                    let _ = job.reply.send(Err(anyhow!("{msg}")));
-                }
-            }
+        // The barrier: apply the staged mutation after the pre-mutation
+        // flush. Its ack (or error) goes straight back to the submitter;
+        // the next iteration re-resolves the epoch.
+        if let Some(job) = staged.take() {
+            let _ = job.reply.send(source.apply(job.op));
         }
         if closed {
             return;
@@ -490,6 +658,60 @@ mod tests {
         drop(handle);
         let q = synthetic::gaussian_queries(1, 8, 5);
         assert_eq!(h2.query(q.row(0).to_vec()).unwrap().len(), 5);
+    }
+
+    #[test]
+    fn mutable_server_gives_read_your_writes() {
+        use crate::coordinator::store::{MutableConfig, MutableStore};
+        use crate::util::tmp::TempPath;
+        let dir = TempPath::new("server-mutable");
+        let items = Arc::new(synthetic::longtail_sift(500, 8, 20));
+        let cfg = ServeConfig {
+            probe_budget: usize::MAX,
+            top_k: 5,
+            code_bits: 16,
+            ..Default::default()
+        };
+        let store = Arc::new(
+            MutableStore::<u64>::create(
+                dir.path(),
+                items,
+                RangeLshParams::new(16, 8),
+                7,
+                cfg,
+                MutableConfig::manual(),
+            )
+            .unwrap(),
+        );
+        let policy = BatchPolicy::new(8, Duration::from_millis(1));
+        let handle = QueryServer::spawn_mutable(store.clone(), policy).unwrap();
+        let q = synthetic::gaussian_queries(1, 8, 21);
+
+        // Acked delete: the id is invisible to every later query.
+        let victim = handle.query(q.row(0).to_vec()).unwrap()[0].id;
+        assert_eq!(handle.delete(vec![victim]).unwrap(), 1);
+        let after = handle.query(q.row(0).to_vec()).unwrap();
+        assert!(after.iter().all(|r| r.id != victim), "acked delete resurfaced");
+        // Acked ingest: the rows are immediately searchable.
+        let extra = synthetic::longtail_sift(10, 8, 22);
+        let ids = handle.ingest(extra.flat().to_vec()).unwrap();
+        assert_eq!(ids, (500..510).collect::<Vec<crate::ItemId>>());
+        assert_eq!(store.live_len(), 509);
+        // Server answers match the store's current epoch exactly.
+        let want = store.current().search(q.row(0)).unwrap();
+        assert_eq!(handle.query(q.row(0).to_vec()).unwrap(), want);
+    }
+
+    #[test]
+    fn fixed_server_rejects_mutations() {
+        let eng = engine();
+        let policy = BatchPolicy::new(4, Duration::from_millis(1));
+        let handle = QueryServer::spawn(eng, policy).unwrap();
+        let err = handle.delete(vec![0]).unwrap_err();
+        assert!(format!("{err:#}").contains("immutable engine"));
+        // The failed mutation leaves the query path healthy.
+        let q = synthetic::gaussian_queries(1, 8, 23);
+        assert_eq!(handle.query(q.row(0).to_vec()).unwrap().len(), 5);
     }
 
     #[test]

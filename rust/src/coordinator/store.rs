@@ -1,0 +1,1061 @@
+//! The crash-consistent mutable store: a WAL-backed, checkpointed
+//! directory serving an online-mutable RANGE-LSH index through epoch
+//! handles (README §"Mutability & recovery model").
+//!
+//! ## Directory layout
+//!
+//! ```text
+//! <dir>/items.rdat   row matrix (append-only, prefix-stable)
+//! <dir>/index.rlsh   v3 index snapshot of the last checkpoint
+//! <dir>/wal.log      CRC32-framed mutations since that checkpoint
+//! <dir>/MANIFEST     epoch, row count, dim, tombstones (checksummed)
+//! ```
+//!
+//! ## Durability protocol
+//!
+//! Every mutation is appended to the WAL and fsynced *before* it is
+//! applied to the in-memory epoch — the `Ok` return of [`MutableStore::
+//! ingest`] / [`MutableStore::delete`] is the durability acknowledgement.
+//! A checkpoint ([`MutableStore::checkpoint`], also run by compaction)
+//! stages `items.rdat` and `index.rlsh` as fsynced siblings, renames them
+//! into place, atomically rewrites the manifest, and only then truncates
+//! the WAL. [`MutableStore::open`] therefore recovers from a crash at
+//! *any* point by loading the last published checkpoint and replaying the
+//! WAL idempotently — the result is bit-identical to the state after the
+//! last acknowledged mutation (chaos-tested at the [`CrashPoint`] sites).
+//!
+//! ## Epoch handles
+//!
+//! Queries go through [`MutableStore::current`], an `Arc`'d
+//! [`SearchEngine`] over an immutable `(index, tombstones)` pair wrapped
+//! in a [`TombstonedIndex`]. Mutations build the next pair and *replace*
+//! the handle; in-flight probe sessions keep borrowing the epoch they
+//! were opened on, so a query never observes a half-applied mutation.
+
+use std::fs::File;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+
+use anyhow::Context;
+
+use crate::config::{ProbeBackend, RerankMode, ServeConfig};
+use crate::coordinator::engine::{AnyEngine, SearchEngine};
+use crate::coordinator::metrics::Metrics;
+#[cfg(any(test, feature = "fault-injection"))]
+use crate::coordinator::fault::{CrashPoint, FaultPlan};
+use crate::data::{load_dataset, save_dataset, Dataset, RerankView};
+use crate::hash::{Code128, Code256, CodeWord, ItemHasher, NativeHasher};
+use crate::index::mutable::{
+    compact_index, indexed_ids, insert_into_index, TombstonedIndex, Tombstones,
+};
+use crate::index::range::{RangeLshIndex, RangeLshParams};
+use crate::index::{load_any_range_index, save_range_index, AnyRangeLshIndex};
+use crate::persist::{load_manifest, save_manifest, Manifest, Wal, WalRecord};
+use crate::{ItemId, Result};
+
+const ITEMS_FILE: &str = "items.rdat";
+const INDEX_FILE: &str = "index.rlsh";
+const WAL_FILE: &str = "wal.log";
+const MANIFEST_FILE: &str = "MANIFEST";
+
+/// Fault-injection hook: under tests / the `fault-injection` feature this
+/// expands to a `?`-propagated crash check against the store's armed
+/// [`FaultPlan`]; release builds compile it away entirely. The injected
+/// "crash" is an error return that abandons the operation with the disk
+/// exactly as a real crash at that site would leave it.
+macro_rules! crash_point {
+    ($store:expr, $point:ident) => {
+        #[cfg(any(test, feature = "fault-injection"))]
+        $store.crash_if(CrashPoint::$point)?;
+    };
+}
+
+/// Drift thresholds for the compaction trigger. After every applied
+/// mutation the store compares the current epoch against the baseline
+/// captured at the last compaction (or open): compaction fires when any
+/// range overfills, when tombstones pile up, or when the top range's
+/// `U_j` has grown stale (README §"Mutability & recovery model").
+#[derive(Debug, Clone, Copy)]
+pub struct MutableConfig {
+    /// Per-range fill trigger: compact when any range holds more than
+    /// `(1 + compact_fill) ×` its baseline item count.
+    pub compact_fill: f32,
+    /// Tombstone trigger: compact when at least this fraction of the
+    /// indexed items is tombstoned.
+    pub compact_tombstones: f32,
+    /// `U_j` staleness trigger: compact when the top range's `u_max` has
+    /// grown by more than this factor over its baseline — inserts above
+    /// the old maximum norm stretch the top range's normalization and
+    /// erode the per-range `U_j` tightness the paper's ranging buys.
+    pub compact_u_growth: f32,
+    /// Run the drift check (and compaction) automatically after every
+    /// mutation; `false` leaves compaction to explicit
+    /// [`MutableStore::compact`] calls.
+    pub auto_compact: bool,
+}
+
+impl Default for MutableConfig {
+    fn default() -> Self {
+        Self {
+            compact_fill: 0.5,
+            compact_tombstones: 0.25,
+            compact_u_growth: 1.25,
+            auto_compact: true,
+        }
+    }
+}
+
+impl MutableConfig {
+    /// No automatic compaction — mutations only ever move the epoch.
+    pub fn manual() -> Self {
+        Self { auto_compact: false, ..Self::default() }
+    }
+}
+
+/// Width-typed extraction from the width-erased loaded index — the glue
+/// that lets a typed [`MutableStore<C>`] open a `.rlsh` file whose width
+/// is only known at runtime. Implemented exactly for the three supported
+/// code words; a width mismatch is a clear error, not a coercion.
+pub trait StoredWidth: CodeWord {
+    fn extract(any: AnyRangeLshIndex) -> Result<RangeLshIndex<Self>>;
+}
+
+macro_rules! stored_width {
+    ($ty:ty, $arm:ident) => {
+        impl StoredWidth for $ty {
+            fn extract(any: AnyRangeLshIndex) -> Result<RangeLshIndex<Self>> {
+                match any {
+                    AnyRangeLshIndex::$arm(i) => Ok(i),
+                    other => anyhow::bail!(
+                        "stored index is {} words per code, this store serves {}",
+                        other.code_words(),
+                        <$ty as CodeWord>::WORDS
+                    ),
+                }
+            }
+        }
+    };
+}
+
+stored_width!(u64, W64);
+stored_width!(Code128, W128);
+stored_width!(Code256, W256);
+
+/// Per-range item counts plus the top `u_max` at the last compaction (or
+/// open) — what [`MutableConfig`]'s drift thresholds are measured against.
+struct DriftBaseline {
+    range_lens: Vec<usize>,
+    top_u_max: f32,
+}
+
+fn baseline_of<C: CodeWord>(index: &RangeLshIndex<C>) -> DriftBaseline {
+    DriftBaseline { range_lens: range_lens(index), top_u_max: top_u_max(index) }
+}
+
+fn range_lens<C: CodeWord>(index: &RangeLshIndex<C>) -> Vec<usize> {
+    let mut lens = Vec::with_capacity(index.n_ranges());
+    let _ = index.for_each_range::<std::convert::Infallible>(|part, _| {
+        lens.push(part.ids.len());
+        Ok(())
+    });
+    lens
+}
+
+fn top_u_max<C: CodeWord>(index: &RangeLshIndex<C>) -> f32 {
+    index.u_maxes().last().copied().unwrap_or(0.0)
+}
+
+/// One epoch's shared state, swapped wholesale under the store mutex.
+struct StoreState<C: CodeWord> {
+    engine: Arc<SearchEngine<C>>,
+    index: Arc<RangeLshIndex<C>>,
+    tombs: Arc<Tombstones>,
+    dataset: Arc<Dataset>,
+    wal: Wal,
+    epoch: u64,
+    base: DriftBaseline,
+}
+
+/// A directory-backed mutable index: WAL-acknowledged ingest and delete,
+/// epoch-handle queries, drift-triggered compaction, crash-consistent
+/// reopen. See the module docs for the protocol.
+pub struct MutableStore<C: CodeWord = u64> {
+    dir: PathBuf,
+    cfg: ServeConfig,
+    mcfg: MutableConfig,
+    metrics: Arc<Metrics>,
+    state: Mutex<StoreState<C>>,
+    #[cfg(any(test, feature = "fault-injection"))]
+    faults: Mutex<Option<FaultPlan>>,
+}
+
+/// Build one epoch's engine: the tombstone-filtered index over the
+/// epoch's dataset, hashed with the index's own stored panel (codes
+/// identical to the build path), metrics shared across epochs.
+fn epoch_engine<C: CodeWord>(
+    index: &Arc<RangeLshIndex<C>>,
+    tombs: &Arc<Tombstones>,
+    dataset: &Arc<Dataset>,
+    view: Option<Arc<RerankView>>,
+    cfg: &ServeConfig,
+    metrics: &Arc<Metrics>,
+) -> Result<Arc<SearchEngine<C>>> {
+    let hasher: Arc<dyn ItemHasher<C>> =
+        Arc::new(NativeHasher::<C>::with_projection(index.projection().clone()));
+    Ok(Arc::new(SearchEngine::from_epoch(
+        Arc::new(TombstonedIndex::new(index.clone(), tombs.clone())),
+        dataset.clone(),
+        view,
+        hasher,
+        cfg.clone(),
+        metrics.clone(),
+    )?))
+}
+
+/// The re-rank view for a *new* dataset (fresh build when streaming).
+fn fresh_view(cfg: &ServeConfig, dataset: &Dataset) -> Option<Arc<RerankView>> {
+    match cfg.rerank {
+        RerankMode::Streaming => Some(Arc::new(RerankView::build(dataset))),
+        RerankMode::Exhaustive => None,
+    }
+}
+
+impl<C: StoredWidth> MutableStore<C> {
+    /// Initialise `dir` as a new store over `items`: build the index,
+    /// write the first checkpoint, and leave an empty WAL. Fails if the
+    /// directory already holds a store.
+    pub fn create(
+        dir: impl AsRef<Path>,
+        items: Arc<Dataset>,
+        params: RangeLshParams,
+        seed: u64,
+        cfg: ServeConfig,
+        mcfg: MutableConfig,
+    ) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating store dir {}", dir.display()))?;
+        anyhow::ensure!(
+            !dir.join(MANIFEST_FILE).exists(),
+            "{} already holds a store (found {MANIFEST_FILE})",
+            dir.display()
+        );
+        anyhow::ensure!(
+            params.code_bits == cfg.code_bits,
+            "index code_bits {} != serve code_bits {}",
+            params.code_bits,
+            cfg.code_bits
+        );
+        // The u64 arm keeps its historical 64-wide panel; wide arms use a
+        // panel exactly as wide as the per-range hash bits (the same
+        // convention as `AnyEngine::build_native_range`).
+        let native_width = if C::WORDS == 1 { 64 } else { params.hash_bits() };
+        let hasher: NativeHasher<C> = NativeHasher::new(items.dim(), native_width, seed);
+        let mut index = RangeLshIndex::build(&items, &hasher, params)?;
+        match cfg.probe_backend.resolve(params.code_bits) {
+            ProbeBackend::Mih => index.enable_mih(),
+            _ => index.clear_mih(),
+        }
+        let (wal, _) = Wal::open(dir.join(WAL_FILE))?;
+        let index = Arc::new(index);
+        let tombs = Arc::new(Tombstones::new());
+        let metrics = Arc::new(Metrics::new());
+        let view = fresh_view(&cfg, &items);
+        let engine = epoch_engine(&index, &tombs, &items, view, &cfg, &metrics)?;
+        let base = baseline_of(&index);
+        let store = Self {
+            dir,
+            cfg,
+            mcfg,
+            metrics,
+            state: Mutex::new(StoreState {
+                engine,
+                index,
+                tombs,
+                dataset: items,
+                wal,
+                epoch: 0,
+                base,
+            }),
+            #[cfg(any(test, feature = "fault-injection"))]
+            faults: Mutex::new(None),
+        };
+        store.checkpoint()?;
+        Ok(store)
+    }
+
+    /// Reopen a store directory: load the last published checkpoint,
+    /// replay the WAL idempotently, and serve the recovered epoch. Safe
+    /// after a crash at any point of the mutation/checkpoint protocol.
+    pub fn open(dir: impl AsRef<Path>, cfg: ServeConfig, mcfg: MutableConfig) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let any = load_any_range_index(dir.join(INDEX_FILE))?;
+        Self::open_with_index(dir, C::extract(any)?, cfg, mcfg)
+    }
+
+    /// [`Self::open`] with the snapshot already loaded and width-typed
+    /// (the dispatch point [`AnyStore::open`] goes through).
+    fn open_with_index(
+        dir: PathBuf,
+        mut index: RangeLshIndex<C>,
+        cfg: ServeConfig,
+        mcfg: MutableConfig,
+    ) -> Result<Self> {
+        // Staging leftovers from a checkpoint that crashed pre-rename are
+        // dead bytes — the manifest never pointed at them.
+        for stale in [
+            "items.rdat.stage",
+            "items.rdat.stage.tmp",
+            "index.rlsh.stage",
+            "index.rlsh.stage.tmp",
+            "MANIFEST.tmp",
+            "wal.log.tmp",
+        ] {
+            let _ = std::fs::remove_file(dir.join(stale));
+        }
+        let man = load_manifest(dir.join(MANIFEST_FILE))?;
+        let file_ds = load_dataset(dir.join(ITEMS_FILE))?;
+        anyhow::ensure!(
+            man.dim as usize == file_ds.dim(),
+            "manifest dim {} != items dim {}",
+            man.dim,
+            file_ds.dim()
+        );
+        // `items.rdat` may run *ahead* of the manifest (a checkpoint that
+        // crashed between the items rename and the manifest write): the
+        // file is append-only and prefix-stable, so the extra rows are
+        // exactly the WAL's logged inserts and replay below reconciles.
+        anyhow::ensure!(
+            man.n_rows as usize <= file_ds.len(),
+            "items file holds {} rows but the manifest claims {}",
+            file_ds.len(),
+            man.n_rows
+        );
+        match cfg.probe_backend.resolve(index.params().code_bits) {
+            ProbeBackend::Mih => index.enable_mih(),
+            _ => index.clear_mih(),
+        }
+        let (wal, records) = Wal::open(dir.join(WAL_FILE))?;
+
+        let dim = file_ds.dim();
+        let indexed = indexed_ids(&index);
+        let mut flat = file_ds.flat().to_vec();
+        let mut n_rows = file_ds.len();
+        // First pass: rows + the inserts the snapshot has not applied.
+        let mut pending: Vec<ItemId> = Vec::new();
+        for rec in &records {
+            if let WalRecord::Insert { id, row } = rec {
+                anyhow::ensure!(
+                    row.len() == dim,
+                    "WAL insert {id} has {} dims, store rows have {dim}",
+                    row.len()
+                );
+                if *id as usize >= n_rows {
+                    anyhow::ensure!(
+                        *id as usize == n_rows,
+                        "WAL insert id {id} leaves a row gap (next row is {n_rows})"
+                    );
+                    flat.extend_from_slice(row);
+                    n_rows += 1;
+                }
+                if indexed.binary_search(id).is_err() && !pending.contains(id) {
+                    pending.push(*id);
+                }
+            }
+        }
+        // Tombstones: the manifest's set intersected with what is still
+        // indexed (a checkpoint that crashed between the index rename and
+        // the manifest write leaves compacted-away ids in the old
+        // manifest), plus the WAL's logged deletes — which may target the
+        // pending inserts above (insert-then-delete before a checkpoint).
+        let mut tombs = Tombstones::new();
+        for &id in &man.tombstones {
+            if indexed.binary_search(&id).is_ok() {
+                tombs.set(id);
+            }
+        }
+        for rec in &records {
+            if let WalRecord::Delete { id } = rec {
+                if indexed.binary_search(id).is_ok() || pending.contains(id) {
+                    tombs.set(*id);
+                }
+            }
+        }
+        let dataset = Arc::new(Dataset::from_flat(dim, flat));
+        let index = if pending.is_empty() {
+            index
+        } else {
+            insert_into_index(&index, &dataset, &pending)?
+        };
+        let index = Arc::new(index);
+        let tombs = Arc::new(tombs);
+        let metrics = Arc::new(Metrics::new());
+        let view = fresh_view(&cfg, &dataset);
+        let engine = epoch_engine(&index, &tombs, &dataset, view, &cfg, &metrics)?;
+        let base = baseline_of(&index);
+        Ok(Self {
+            dir,
+            cfg,
+            mcfg,
+            metrics,
+            state: Mutex::new(StoreState {
+                engine,
+                index,
+                tombs,
+                dataset,
+                wal,
+                epoch: man.epoch,
+                base,
+            }),
+            #[cfg(any(test, feature = "fault-injection"))]
+            faults: Mutex::new(None),
+        })
+    }
+
+    fn lock(&self) -> MutexGuard<'_, StoreState<C>> {
+        // A panicking mutation thread leaves consistent state behind (the
+        // epoch swap is a handful of Arc stores at the very end), so the
+        // store keeps serving rather than poisoning every later caller.
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// The current epoch's engine. Clone-and-go: the returned handle keeps
+    /// serving a consistent pre-mutation view even while later mutations
+    /// swap the store's epoch.
+    pub fn current(&self) -> Arc<SearchEngine<C>> {
+        self.lock().engine.clone()
+    }
+
+    /// Append `rows` (row-major, `dim`-aligned) and index them. The `Ok`
+    /// ids are the durability acknowledgement: each row's WAL record is
+    /// fsynced before the epoch applies it, so an acknowledged insert
+    /// survives any later crash.
+    // staticcheck: allow(panic-reach, "ids has one entry per chunks_exact(dim) chunk of the validated buffer, so i < ids.len()")
+    pub fn ingest(&self, rows: &[f32]) -> Result<Vec<ItemId>> {
+        let mut st = self.lock();
+        let dim = st.dataset.dim();
+        anyhow::ensure!(
+            !rows.is_empty() && rows.len() % dim == 0,
+            "ingest buffer length {} not a positive multiple of dim {dim}",
+            rows.len()
+        );
+        let n_new = rows.len() / dim;
+        let mut norms = Vec::with_capacity(n_new);
+        for row in rows.chunks_exact(dim) {
+            // Same per-row expression as `Dataset::from_flat`, so replayed
+            // and online norms are bit-identical.
+            let norm = row.iter().map(|v| v * v).sum::<f32>().sqrt();
+            anyhow::ensure!(norm.is_finite(), "ingested row has a non-finite norm");
+            norms.push(norm);
+        }
+        let first = st.dataset.len() as ItemId;
+        let ids: Vec<ItemId> = (first..first + n_new as ItemId).collect();
+        for (i, row) in rows.chunks_exact(dim).enumerate() {
+            st.wal.append(&WalRecord::Insert { id: ids[i], row: row.to_vec() })?;
+        }
+        crash_point!(self, PostWalAppend);
+
+        let mut flat = Vec::with_capacity((st.dataset.len() + n_new) * dim);
+        flat.extend_from_slice(st.dataset.flat());
+        flat.extend_from_slice(rows);
+        let mut all_norms = Vec::with_capacity(st.dataset.len() + n_new);
+        all_norms.extend_from_slice(st.dataset.norms());
+        all_norms.extend_from_slice(&norms);
+        let dataset = Arc::new(Dataset::from_flat_with_norms(dim, flat, all_norms));
+        let index = Arc::new(insert_into_index(&st.index, &dataset, &ids)?);
+        crash_point!(self, PreApply);
+
+        // The dataset changed, so a streaming epoch rebuilds its view.
+        let view = fresh_view(&self.cfg, &dataset);
+        let engine = epoch_engine(&index, &st.tombs, &dataset, view, &self.cfg, &self.metrics)?;
+        st.dataset = dataset;
+        st.index = index;
+        st.engine = engine;
+        st.epoch += 1;
+        self.maybe_compact(&mut st);
+        Ok(ids)
+    }
+
+    /// Tombstone `ids`. Returns how many were newly deleted (deleting an
+    /// already-tombstoned id is an idempotent no-op); an id that was never
+    /// indexed — or was already compacted away — is an error, reported
+    /// before anything is logged.
+    pub fn delete(&self, ids: &[ItemId]) -> Result<usize> {
+        let mut st = self.lock();
+        anyhow::ensure!(!ids.is_empty(), "empty delete batch");
+        let indexed = indexed_ids(&st.index);
+        let mut next = (*st.tombs).clone();
+        let mut fresh = Vec::new();
+        for &id in ids {
+            anyhow::ensure!(
+                indexed.binary_search(&id).is_ok(),
+                "delete of unknown id {id} (never ingested, or already compacted away)"
+            );
+            if next.set(id) {
+                fresh.push(id);
+            }
+        }
+        if fresh.is_empty() {
+            return Ok(0);
+        }
+        for &id in &fresh {
+            st.wal.append(&WalRecord::Delete { id })?;
+        }
+        crash_point!(self, PostWalAppend);
+        crash_point!(self, PreApply);
+
+        // Delete-only epoch: the dataset is untouched, so the previous
+        // epoch's re-rank view is reused as-is.
+        let tombs = Arc::new(next);
+        let view = st.engine.view().cloned();
+        let engine =
+            epoch_engine(&st.index, &tombs, &st.dataset, view, &self.cfg, &self.metrics)?;
+        st.tombs = tombs;
+        st.engine = engine;
+        st.epoch += 1;
+        self.maybe_compact(&mut st);
+        Ok(fresh.len())
+    }
+
+    /// Run the drift check; compact when any threshold trips. Compaction
+    /// failure must not fail the already-acknowledged mutation — the
+    /// store keeps serving the uncompacted epoch and reports to stderr.
+    fn maybe_compact(&self, st: &mut StoreState<C>) {
+        if !self.mcfg.auto_compact || !self.drift_exceeded(st) {
+            return;
+        }
+        if let Err(e) = self.compact_locked(st) {
+            eprintln!(
+                "[rangelsh] auto-compaction failed (serving continues uncompacted): {e:#}"
+            );
+        }
+    }
+
+    /// Has the epoch drifted past any [`MutableConfig`] threshold?
+    fn drift_exceeded(&self, st: &StoreState<C>) -> bool {
+        let indexed = st.index.len();
+        if indexed == 0 || indexed == st.tombs.len() {
+            return false; // nothing live to re-partition
+        }
+        if !st.tombs.is_empty()
+            && st.tombs.len() as f32 >= self.mcfg.compact_tombstones * indexed as f32
+        {
+            return true;
+        }
+        let lens = range_lens(&st.index);
+        for (now, &then) in lens.iter().zip(&st.base.range_lens) {
+            if *now as f32 > then.max(1) as f32 * (1.0 + self.mcfg.compact_fill) {
+                return true;
+            }
+        }
+        top_u_max(&st.index) > st.base.top_u_max * self.mcfg.compact_u_growth
+    }
+
+    /// Re-partition the live items from scratch and checkpoint the result
+    /// — drift repair. The new epoch has no tombstones; surviving items
+    /// keep their original ids; in-flight sessions on the old epoch keep
+    /// their consistent pre-compaction view.
+    pub fn compact(&self) -> Result<()> {
+        let mut st = self.lock();
+        self.compact_locked(&mut st)
+    }
+
+    fn compact_locked(&self, st: &mut StoreState<C>) -> Result<()> {
+        let (compacted, _live) = compact_index(&st.index, &st.dataset, &st.tombs)?;
+        crash_point!(self, MidCompaction);
+        let index = Arc::new(compacted);
+        let tombs = Arc::new(Tombstones::new());
+        self.checkpoint_files(st, &index, &tombs)?;
+        // The dataset is unchanged (dead rows stay as unreferenced
+        // padding), so the re-rank view carries over.
+        let view = st.engine.view().cloned();
+        let engine = epoch_engine(&index, &tombs, &st.dataset, view, &self.cfg, &self.metrics)?;
+        st.index = index;
+        st.tombs = tombs;
+        st.engine = engine;
+        st.epoch += 1;
+        st.base = baseline_of(&st.index);
+        Ok(())
+    }
+
+    /// Publish the current epoch as the on-disk checkpoint and truncate
+    /// the WAL. Crash-safe: see the module docs for the staging order.
+    pub fn checkpoint(&self) -> Result<()> {
+        let mut st = self.lock();
+        let (index, tombs) = (st.index.clone(), st.tombs.clone());
+        self.checkpoint_files(&mut st, &index, &tombs)
+    }
+
+    /// The checkpoint protocol: stage + fsync both data files, rename
+    /// them into place, atomically rewrite the manifest, then truncate
+    /// the WAL. A crash between any two steps leaves a state `open`
+    /// recovers exactly (each file is either the old or the new version,
+    /// and the WAL still holds every uncheckpointed record).
+    fn checkpoint_files(
+        &self,
+        st: &mut StoreState<C>,
+        index: &RangeLshIndex<C>,
+        tombs: &Tombstones,
+    ) -> Result<()> {
+        let items_stage = self.dir.join("items.rdat.stage");
+        save_dataset(&st.dataset, &items_stage)?;
+        File::open(&items_stage)?
+            .sync_all()
+            .with_context(|| format!("syncing {}", items_stage.display()))?;
+        // `save_range_index` stages + fsyncs + renames internally — to the
+        // *stage* name, so the live snapshot is untouched until the single
+        // rename below.
+        let index_stage = self.dir.join("index.rlsh.stage");
+        save_range_index(index, &index_stage)?;
+        crash_point!(self, PreRename);
+        std::fs::rename(&items_stage, self.dir.join(ITEMS_FILE))
+            .context("publishing items.rdat")?;
+        std::fs::rename(&index_stage, self.dir.join(INDEX_FILE))
+            .context("publishing index.rlsh")?;
+        crate::persist::sync_dir(&self.dir);
+        save_manifest(
+            self.dir.join(MANIFEST_FILE),
+            &Manifest {
+                epoch: st.epoch,
+                n_rows: st.dataset.len() as u64,
+                dim: st.dataset.dim() as u32,
+                tombstones: tombs.ids(),
+            },
+        )?;
+        st.wal.reset()
+    }
+
+    /// Mutation epoch counter (resumes from the manifest on open).
+    pub fn epoch(&self) -> u64 {
+        self.lock().epoch
+    }
+
+    /// Items indexed and not tombstoned.
+    pub fn live_len(&self) -> usize {
+        let st = self.lock();
+        st.index.len() - st.tombs.len()
+    }
+
+    /// Items currently tombstoned (drops to 0 at each compaction).
+    pub fn tombstoned_len(&self) -> usize {
+        self.lock().tombs.len()
+    }
+
+    /// Rows in the dataset, dead compacted rows included.
+    pub fn n_rows(&self) -> usize {
+        self.lock().dataset.len()
+    }
+
+    /// Row dimensionality.
+    pub fn dim(&self) -> usize {
+        self.lock().dataset.dim()
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    /// Arm (or clear) the deterministic crash plan for the chaos tests.
+    #[cfg(any(test, feature = "fault-injection"))]
+    pub fn set_fault_plan(&self, plan: Option<FaultPlan>) {
+        *self.faults.lock().unwrap_or_else(PoisonError::into_inner) = plan;
+    }
+
+    #[cfg(any(test, feature = "fault-injection"))]
+    fn crash_if(&self, point: CrashPoint) -> Result<()> {
+        match self.faults.lock().unwrap_or_else(PoisonError::into_inner).as_ref() {
+            Some(plan) => plan.crash_if(point),
+            None => Ok(()),
+        }
+    }
+}
+
+/// A [`MutableStore`] monomorphized to the width its `.rlsh` snapshot
+/// declares — the dispatch point between the CLI/server layers (which
+/// know the width only at runtime) and the typed stores. Mirrors
+/// [`AnyEngine`].
+pub enum AnyStore {
+    W64(Arc<MutableStore<u64>>),
+    W128(Arc<MutableStore<Code128>>),
+    W256(Arc<MutableStore<Code256>>),
+}
+
+impl AnyStore {
+    /// Initialise a new store at the width selected by `cfg.code_bits`.
+    pub fn create(
+        dir: impl AsRef<Path>,
+        items: Arc<Dataset>,
+        params: RangeLshParams,
+        seed: u64,
+        cfg: ServeConfig,
+        mcfg: MutableConfig,
+    ) -> Result<AnyStore> {
+        if cfg.code_bits <= 64 {
+            Ok(Self::W64(Arc::new(MutableStore::create(dir, items, params, seed, cfg, mcfg)?)))
+        } else if cfg.code_bits <= 128 {
+            Ok(Self::W128(Arc::new(MutableStore::create(dir, items, params, seed, cfg, mcfg)?)))
+        } else {
+            Ok(Self::W256(Arc::new(MutableStore::create(dir, items, params, seed, cfg, mcfg)?)))
+        }
+    }
+
+    /// Reopen a store at whatever width its snapshot declares.
+    pub fn open(
+        dir: impl AsRef<Path>,
+        cfg: ServeConfig,
+        mcfg: MutableConfig,
+    ) -> Result<AnyStore> {
+        let dir = dir.as_ref().to_path_buf();
+        match load_any_range_index(dir.join(INDEX_FILE))? {
+            AnyRangeLshIndex::W64(i) => Ok(Self::W64(Arc::new(
+                MutableStore::open_with_index(dir, i, cfg, mcfg)?,
+            ))),
+            AnyRangeLshIndex::W128(i) => Ok(Self::W128(Arc::new(
+                MutableStore::open_with_index(dir, i, cfg, mcfg)?,
+            ))),
+            AnyRangeLshIndex::W256(i) => Ok(Self::W256(Arc::new(
+                MutableStore::open_with_index(dir, i, cfg, mcfg)?,
+            ))),
+        }
+    }
+
+    /// The current epoch's engine, width-erased for querying.
+    pub fn engine(&self) -> AnyEngine {
+        match self {
+            Self::W64(s) => AnyEngine::W64(s.current()),
+            Self::W128(s) => AnyEngine::W128(s.current()),
+            Self::W256(s) => AnyEngine::W256(s.current()),
+        }
+    }
+
+    pub fn ingest(&self, rows: &[f32]) -> Result<Vec<ItemId>> {
+        match self {
+            Self::W64(s) => s.ingest(rows),
+            Self::W128(s) => s.ingest(rows),
+            Self::W256(s) => s.ingest(rows),
+        }
+    }
+
+    pub fn delete(&self, ids: &[ItemId]) -> Result<usize> {
+        match self {
+            Self::W64(s) => s.delete(ids),
+            Self::W128(s) => s.delete(ids),
+            Self::W256(s) => s.delete(ids),
+        }
+    }
+
+    pub fn compact(&self) -> Result<()> {
+        match self {
+            Self::W64(s) => s.compact(),
+            Self::W128(s) => s.compact(),
+            Self::W256(s) => s.compact(),
+        }
+    }
+
+    pub fn checkpoint(&self) -> Result<()> {
+        match self {
+            Self::W64(s) => s.checkpoint(),
+            Self::W128(s) => s.checkpoint(),
+            Self::W256(s) => s.checkpoint(),
+        }
+    }
+
+    /// Words per code (1, 2 or 4).
+    pub fn code_words(&self) -> usize {
+        match self {
+            Self::W64(_) => 1,
+            Self::W128(_) => 2,
+            Self::W256(_) => 4,
+        }
+    }
+
+    pub fn epoch(&self) -> u64 {
+        match self {
+            Self::W64(s) => s.epoch(),
+            Self::W128(s) => s.epoch(),
+            Self::W256(s) => s.epoch(),
+        }
+    }
+
+    pub fn live_len(&self) -> usize {
+        match self {
+            Self::W64(s) => s.live_len(),
+            Self::W128(s) => s.live_len(),
+            Self::W256(s) => s.live_len(),
+        }
+    }
+
+    pub fn tombstoned_len(&self) -> usize {
+        match self {
+            Self::W64(s) => s.tombstoned_len(),
+            Self::W128(s) => s.tombstoned_len(),
+            Self::W256(s) => s.tombstoned_len(),
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        match self {
+            Self::W64(s) => s.dim(),
+            Self::W128(s) => s.dim(),
+            Self::W256(s) => s.dim(),
+        }
+    }
+
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        match self {
+            Self::W64(s) => s.metrics(),
+            Self::W128(s) => s.metrics(),
+            Self::W256(s) => s.metrics(),
+        }
+    }
+
+    #[cfg(any(test, feature = "fault-injection"))]
+    pub fn set_fault_plan(&self, plan: Option<FaultPlan>) {
+        match self {
+            Self::W64(s) => s.set_fault_plan(plan),
+            Self::W128(s) => s.set_fault_plan(plan),
+            Self::W256(s) => s.set_fault_plan(plan),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::util::tmp::TempPath;
+
+    fn small_cfg() -> ServeConfig {
+        ServeConfig { probe_budget: usize::MAX, top_k: 5, code_bits: 16, ..Default::default() }
+    }
+
+    fn new_store(dir: &Path, n: usize, seed: u64) -> MutableStore<u64> {
+        let items = Arc::new(synthetic::longtail_sift(n, 8, seed));
+        MutableStore::create(
+            dir,
+            items,
+            RangeLshParams::new(16, 8),
+            7,
+            small_cfg(),
+            MutableConfig::manual(),
+        )
+        .unwrap()
+    }
+
+    fn answers(store: &MutableStore<u64>, queries: &Dataset) -> Vec<Vec<(ItemId, u32)>> {
+        let engine = store.current();
+        (0..queries.len())
+            .map(|qi| {
+                engine
+                    .search(queries.row(qi))
+                    .unwrap()
+                    .into_iter()
+                    .map(|r| (r.id, r.score.to_bits()))
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn create_then_reopen_serves_identical_answers() {
+        let dir = TempPath::new("store-reopen");
+        let store = new_store(dir.path(), 500, 1);
+        let q = synthetic::gaussian_queries(4, 8, 2);
+        let want = answers(&store, &q);
+        drop(store);
+        let reopened: MutableStore<u64> =
+            MutableStore::open(dir.path(), small_cfg(), MutableConfig::manual()).unwrap();
+        assert_eq!(answers(&reopened, &q), want);
+    }
+
+    #[test]
+    fn ingest_is_replayed_without_a_checkpoint() {
+        let dir = TempPath::new("store-ingest");
+        let store = new_store(dir.path(), 400, 3);
+        let extra = synthetic::longtail_sift(30, 8, 4);
+        let ids = store.ingest(extra.flat()).unwrap();
+        assert_eq!(ids, (400..430).collect::<Vec<ItemId>>());
+        assert_eq!(store.live_len(), 430);
+        let q = synthetic::gaussian_queries(3, 8, 5);
+        let want = answers(&store, &q);
+        drop(store); // no checkpoint: recovery must come from the WAL
+        let reopened: MutableStore<u64> =
+            MutableStore::open(dir.path(), small_cfg(), MutableConfig::manual()).unwrap();
+        assert_eq!(reopened.live_len(), 430);
+        assert_eq!(answers(&reopened, &q), want);
+    }
+
+    #[test]
+    fn delete_hides_ids_and_survives_reopen() {
+        let dir = TempPath::new("store-delete");
+        let store = new_store(dir.path(), 300, 6);
+        let q = synthetic::gaussian_queries(2, 8, 7);
+        // Delete the current winners; they must vanish from the answers.
+        let victims: Vec<ItemId> = answers(&store, &q)[0].iter().map(|&(id, _)| id).collect();
+        assert_eq!(store.delete(&victims).unwrap(), victims.len());
+        assert_eq!(store.delete(&victims).unwrap(), 0, "double delete is a no-op");
+        let after = answers(&store, &q);
+        for row in &after {
+            for (id, _) in row {
+                assert!(!victims.contains(id), "deleted id {id} surfaced");
+            }
+        }
+        drop(store);
+        let reopened: MutableStore<u64> =
+            MutableStore::open(dir.path(), small_cfg(), MutableConfig::manual()).unwrap();
+        assert_eq!(answers(&reopened, &q), after);
+        assert!(reopened.delete(&[99999]).is_err(), "unknown id must be rejected");
+    }
+
+    #[test]
+    fn old_epoch_handles_keep_serving_across_mutations() {
+        let dir = TempPath::new("store-epoch");
+        let store = new_store(dir.path(), 300, 8);
+        let q = synthetic::gaussian_queries(1, 8, 9);
+        let before = store.current();
+        let want = before.search(q.row(0)).unwrap();
+        let victim = want[0].id;
+        store.delete(&[victim]).unwrap();
+        // The pre-delete handle still sees the victim...
+        assert_eq!(before.search(q.row(0)).unwrap(), want);
+        // ... and the current epoch does not.
+        let now = store.current().search(q.row(0)).unwrap();
+        assert!(now.iter().all(|r| r.id != victim));
+    }
+
+    #[test]
+    fn crash_before_apply_recovers_the_acknowledged_mutation() {
+        // PostWalAppend and PreApply leave identical disk state: the
+        // record is fsynced, so reopen must replay it even though the
+        // in-memory apply never happened.
+        for point in [CrashPoint::PostWalAppend, CrashPoint::PreApply] {
+            let dir = TempPath::new("store-crash-apply");
+            let twin_dir = TempPath::new("store-crash-apply-twin");
+            let store = new_store(dir.path(), 300, 10);
+            let twin = new_store(twin_dir.path(), 300, 10);
+            let extra = synthetic::longtail_sift(10, 8, 11);
+            store.set_fault_plan(Some(FaultPlan::seeded(0, 0).with_crash(point)));
+            let err = store.ingest(extra.flat()).unwrap_err();
+            assert!(format!("{err:#}").contains("injected crash"), "{point:?}");
+            drop(store);
+            twin.ingest(extra.flat()).unwrap(); // the healthy twin
+            let reopened: MutableStore<u64> =
+                MutableStore::open(dir.path(), small_cfg(), MutableConfig::manual()).unwrap();
+            let q = synthetic::gaussian_queries(3, 8, 12);
+            assert_eq!(answers(&reopened, &q), answers(&twin, &q), "{point:?}");
+            // Deletes recover through the same protocol.
+            reopened.set_fault_plan(Some(FaultPlan::seeded(0, 0).with_crash(point)));
+            assert!(reopened.delete(&[5]).is_err(), "{point:?}");
+            drop(reopened);
+            twin.delete(&[5]).unwrap();
+            let reopened: MutableStore<u64> =
+                MutableStore::open(dir.path(), small_cfg(), MutableConfig::manual()).unwrap();
+            assert_eq!(answers(&reopened, &q), answers(&twin, &q), "{point:?} delete");
+        }
+    }
+
+    #[test]
+    fn crash_during_compaction_recovers_the_precompaction_state() {
+        // MidCompaction writes nothing; PreRename stages but never
+        // publishes. Both reopen to the pre-compaction epoch with every
+        // acknowledged mutation intact.
+        for point in [CrashPoint::MidCompaction, CrashPoint::PreRename] {
+            let dir = TempPath::new("store-crash-compact");
+            let store = new_store(dir.path(), 300, 13);
+            store.delete(&(0..30).collect::<Vec<ItemId>>()).unwrap();
+            let q = synthetic::gaussian_queries(3, 8, 14);
+            let want = answers(&store, &q);
+            store.set_fault_plan(Some(FaultPlan::seeded(0, 0).with_crash(point)));
+            let err = store.compact().unwrap_err();
+            assert!(format!("{err:#}").contains("injected crash"), "{point:?}");
+            drop(store);
+            let reopened: MutableStore<u64> =
+                MutableStore::open(dir.path(), small_cfg(), MutableConfig::manual()).unwrap();
+            assert_eq!(reopened.tombstoned_len(), 30, "{point:?}");
+            assert_eq!(answers(&reopened, &q), want, "{point:?}");
+        }
+    }
+
+    #[test]
+    fn compaction_drops_tombstones_and_preserves_answers() {
+        let dir = TempPath::new("store-compact");
+        let store = new_store(dir.path(), 400, 15);
+        store.delete(&(0..50).collect::<Vec<ItemId>>()).unwrap();
+        let q = synthetic::gaussian_queries(3, 8, 16);
+        let want = answers(&store, &q);
+        store.compact().unwrap();
+        assert_eq!(store.tombstoned_len(), 0);
+        assert_eq!(store.live_len(), 350);
+        assert_eq!(answers(&store, &q), want, "full-budget answers survive compaction");
+        // The WAL was truncated: reopen comes straight from the snapshot.
+        drop(store);
+        let reopened: MutableStore<u64> =
+            MutableStore::open(dir.path(), small_cfg(), MutableConfig::manual()).unwrap();
+        assert_eq!(reopened.tombstoned_len(), 0);
+        assert_eq!(answers(&reopened, &q), want);
+    }
+
+    #[test]
+    fn auto_compaction_triggers_on_tombstone_drift() {
+        let dir = TempPath::new("store-drift");
+        let items = Arc::new(synthetic::longtail_sift(200, 8, 17));
+        let mcfg = MutableConfig {
+            compact_tombstones: 0.1,
+            auto_compact: true,
+            ..MutableConfig::manual()
+        };
+        let store: MutableStore<u64> = MutableStore::create(
+            dir.path(),
+            items,
+            RangeLshParams::new(16, 4),
+            7,
+            small_cfg(),
+            mcfg,
+        )
+        .unwrap();
+        store.delete(&(0..30).collect::<Vec<ItemId>>()).unwrap();
+        assert_eq!(store.tombstoned_len(), 0, "drift must have compacted");
+        assert_eq!(store.live_len(), 170);
+    }
+
+    #[test]
+    fn any_store_round_trips_width() {
+        let dir = TempPath::new("store-any");
+        let items = Arc::new(synthetic::longtail_sift(300, 8, 18));
+        let cfg = ServeConfig { code_bits: 128, ..small_cfg() };
+        let store = AnyStore::create(
+            dir.path(),
+            items,
+            RangeLshParams::new(128, 8),
+            7,
+            cfg.clone(),
+            MutableConfig::manual(),
+        )
+        .unwrap();
+        assert_eq!(store.code_words(), 2);
+        let ids = store.ingest(&vec![0.25f32; 16]).unwrap();
+        assert_eq!(ids, vec![300, 301]);
+        drop(store);
+        let reopened = AnyStore::open(dir.path(), cfg, MutableConfig::manual()).unwrap();
+        assert_eq!(reopened.code_words(), 2);
+        assert_eq!(reopened.live_len(), 302);
+        let q = synthetic::gaussian_queries(1, 8, 19);
+        assert_eq!(reopened.engine().search(q.row(0)).unwrap().len(), 5);
+        // A typed open at the wrong width is a clear error.
+        let err = MutableStore::<u64>::open(
+            dir.path(),
+            ServeConfig { code_bits: 128, ..small_cfg() },
+            MutableConfig::manual(),
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("words per code"));
+    }
+}

@@ -16,6 +16,7 @@ pub struct Dataset {
 
 impl Dataset {
     /// Build from a flat row-major buffer. `data.len()` must be a multiple of `dim`.
+    // staticcheck: allow(panic-reach, "row slices are bounded by n = data.len()/dim, asserted a multiple of dim above them")
     pub fn from_flat(dim: usize, data: Vec<f32>) -> Self {
         assert!(dim > 0, "dim must be positive");
         assert_eq!(
@@ -42,6 +43,7 @@ impl Dataset {
     /// would compute for row `i` (checked bit-for-bit in debug builds) —
     /// gathered sub-datasets and permuted views carry the parent's cached
     /// norms through here instead of re-deriving them.
+    // staticcheck: allow(panic-reach, "the debug norm-check slices rows i < norms.len(), asserted equal to data.len()/dim")
     pub fn from_flat_with_norms(dim: usize, data: Vec<f32>, norms: Vec<f32>) -> Self {
         assert!(dim > 0, "dim must be positive");
         assert_eq!(
@@ -136,6 +138,7 @@ impl Dataset {
     /// A sub-dataset view materialised from item ids (used by partitioners
     /// and the range-ordered [`crate::data::RerankView`]). The gathered
     /// rows keep the parent's cached 2-norms — no sqrt-sum per row.
+    // staticcheck: allow(panic-reach, "callers pass ids drawn from this dataset's own partitions/live lists, all < len")
     pub fn gather(&self, ids: &[ItemId]) -> Dataset {
         let mut data = Vec::with_capacity(ids.len() * self.dim);
         let mut norms = Vec::with_capacity(ids.len());

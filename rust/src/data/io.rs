@@ -33,6 +33,7 @@ pub fn save_dataset(dataset: &Dataset, path: impl AsRef<Path>) -> Result<()> {
 }
 
 /// Read a `.rdat` dataset from `path`.
+// staticcheck: allow(panic-reach, "byte indices 0..4 come from chunks_exact(4), which only yields full chunks")
 pub fn load_dataset(path: impl AsRef<Path>) -> Result<Dataset> {
     let path = path.as_ref();
     let mut r = BufReader::new(

@@ -40,6 +40,7 @@ impl RerankView {
     /// Permute `dataset` into range order. O(n log n) sort of the cached
     /// norms plus one pass over the matrix; the view carries the parent's
     /// norms (no recompute).
+    // staticcheck: allow(panic-reach, "id_of is a permutation of 0..n and slot_of has n entries")
     pub fn build(dataset: &Dataset) -> Self {
         let n = dataset.len();
         let dim = dataset.dim();

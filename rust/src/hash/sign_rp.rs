@@ -149,6 +149,7 @@ impl<C: CodeWord> NativeHasher<C> {
         self.hash_rows_blocked(rows, None)
     }
 
+    // staticcheck: allow(panic-reach, "check_rows pins rows.len() == n*dim and every tile row index is < n")
     fn hash_rows_blocked(&self, rows: &[f32], u: Option<f32>) -> Result<Vec<C>> {
         let n = self.check_rows(rows)?;
         let dim = self.proj.dim_in() - 1;

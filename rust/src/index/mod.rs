@@ -21,6 +21,7 @@ pub mod l2alsh;
 pub mod metric;
 pub mod mih;
 pub mod multitable;
+pub mod mutable;
 pub mod partition;
 pub mod persist;
 pub mod range;
@@ -31,6 +32,7 @@ mod traits;
 
 pub use bucket::{BucketTable, SortScratch, TableProber};
 pub use mih::MihTable;
+pub use mutable::{TombstoneProber, Tombstones, TombstonedIndex};
 pub use metric::MetricOrder;
 pub use partition::{partition, Partition, PartitionScheme};
 pub use persist::{load_any_range_index, load_range_index, save_range_index, AnyRangeLshIndex};

@@ -1,0 +1,661 @@
+//! Online mutability for RANGE-LSH: tombstone deletes, in-place inserts,
+//! and re-partitioning compaction — the pure (no-IO) index layer under
+//! [`crate::coordinator::store::MutableStore`] (README §"Mutability &
+//! recovery model").
+//!
+//! The paper's index is build-once; this module makes it *maintained*
+//! without giving up the immutable probing core:
+//!
+//! - an epoch is an immutable `Arc<RangeLshIndex<C>>` plus an immutable
+//!   [`Tombstones`] set, wrapped in a [`TombstonedIndex`] that filters the
+//!   probe stream. In-flight [`Prober`] sessions borrow the epoch they
+//!   were opened on, so a concurrent mutation (which only *replaces* the
+//!   current epoch `Arc`) never changes what they see;
+//! - [`insert_into_index`] routes each new item to the existing range
+//!   whose `[_, u_max]` covers its norm and rebuilds only the touched
+//!   ranges' tables — untouched ranges are structurally shared with the
+//!   previous epoch (`Arc` clones), so an insert is O(touched ranges),
+//!   not O(index);
+//! - deletes never touch the index at all: a tombstoned id is filtered
+//!   at the probe-stream choke point ([`TombstoneProber`]), which every
+//!   consumer — `BoundedTopK` admission, `RerankView` scoring, candidate
+//!   buffers — sits downstream of, so a deleted id can never surface;
+//! - [`compact_index`] re-partitions the live items from scratch
+//!   (restoring the paper's per-range `U_j` invariant after drift) while
+//!   keeping every surviving item's *original* id.
+
+use std::sync::Arc;
+
+use crate::data::Dataset;
+use crate::hash::{CodeWord, ItemHasher, NativeHasher};
+use crate::index::mih::MihTable;
+use crate::index::partition::{partition, Partition};
+use crate::index::range::{RangeLshIndex, RangeProber, SubIndex};
+use crate::index::{BucketTable, CodeProbe, IndexStats, MipsIndex, ProbeStats, Prober};
+use crate::{ItemId, Result};
+
+/// An immutable set of deleted ids: a fixed-capacity bitmap plus a count.
+/// Each delete epoch clones the previous set and marks the new ids — the
+/// set is shared (`Arc`) between the epoch handle and every in-flight
+/// session opened on that epoch.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Tombstones {
+    words: Vec<u64>,
+    count: usize,
+}
+
+impl Tombstones {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Build from a list of ids (the manifest's tombstone section).
+    pub fn from_ids(ids: &[ItemId]) -> Self {
+        let mut t = Self::new();
+        for &id in ids {
+            t.set(id);
+        }
+        t
+    }
+
+    /// Mark `id` deleted. Returns `true` if it was live before.
+    // staticcheck: allow(panic-reach, "words is resized to w+1 immediately before the access")
+    pub fn set(&mut self, id: ItemId) -> bool {
+        let (w, b) = (id as usize / 64, id as usize % 64);
+        if w >= self.words.len() {
+            self.words.resize(w + 1, 0);
+        }
+        let fresh = self.words[w] & (1 << b) == 0;
+        if fresh {
+            self.words[w] |= 1 << b;
+            self.count += 1;
+        }
+        fresh
+    }
+
+    #[inline]
+    pub fn contains(&self, id: ItemId) -> bool {
+        let (w, b) = (id as usize / 64, id as usize % 64);
+        self.words.get(w).is_some_and(|word| word & (1 << b) != 0)
+    }
+
+    /// Number of tombstoned ids.
+    pub fn len(&self) -> usize {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// The tombstoned ids, ascending (the manifest serialization order).
+    pub fn ids(&self) -> Vec<ItemId> {
+        let mut out = Vec::with_capacity(self.count);
+        for (w, &word) in self.words.iter().enumerate() {
+            let mut bits = word;
+            while bits != 0 {
+                let b = bits.trailing_zeros();
+                out.push((w * 64) as ItemId + b as ItemId);
+                bits &= bits - 1;
+            }
+        }
+        out
+    }
+}
+
+/// One epoch's queryable view: an immutable index plus the tombstones in
+/// force at that epoch. Implements the same [`MipsIndex`] + [`CodeProbe`]
+/// interface as the raw index, so it drops into
+/// [`crate::coordinator::SearchEngine`] unchanged — the engine's probe
+/// stream, `BoundedTopK` admission, and `RerankView` scoring all consume
+/// candidates downstream of the tombstone filter and therefore can never
+/// see a deleted id.
+pub struct TombstonedIndex<C: CodeWord = u64> {
+    inner: Arc<RangeLshIndex<C>>,
+    tombs: Arc<Tombstones>,
+}
+
+impl<C: CodeWord> TombstonedIndex<C> {
+    pub fn new(inner: Arc<RangeLshIndex<C>>, tombs: Arc<Tombstones>) -> Self {
+        Self { inner, tombs }
+    }
+
+    pub fn inner(&self) -> &Arc<RangeLshIndex<C>> {
+        &self.inner
+    }
+
+    pub fn tombstones(&self) -> &Arc<Tombstones> {
+        &self.tombs
+    }
+
+    /// Live (indexed and not tombstoned) item count.
+    pub fn live_len(&self) -> usize {
+        self.inner.len() - self.tombs.len()
+    }
+
+    /// Open a filtered session over a precomputed code (concrete form).
+    pub fn session(&self, qcode: C) -> TombstoneProber<'_, C> {
+        TombstoneProber {
+            inner: self.inner.session(qcode),
+            tombs: &self.tombs,
+            block: Vec::new(),
+        }
+    }
+}
+
+/// The probe-stream choke point of the delete path: wraps a
+/// [`RangeProber`] and drops tombstoned ids from its output, *refilling*
+/// the dropped slots from the underlying walk so the [`Prober`] contract
+/// is preserved exactly — `extend` returns fewer than requested only when
+/// the underlying index ran out during the call, and `0` thereafter.
+/// Downstream consumers (the engine's `got < step` exhaustion checks, the
+/// streaming re-rank's block loop) therefore need no changes.
+pub struct TombstoneProber<'a, C: CodeWord = u64> {
+    inner: RangeProber<'a, C>,
+    tombs: &'a Tombstones,
+    /// Pre-filter staging buffer, reused across `extend` calls.
+    block: Vec<ItemId>,
+}
+
+impl<C: CodeWord> Prober for TombstoneProber<'_, C> {
+    fn extend(&mut self, additional_budget: usize, out: &mut Vec<ItemId>) -> usize {
+        if additional_budget == 0 {
+            return 0;
+        }
+        let mut emitted = 0usize;
+        // Fill-gap loop: every tombstoned candidate the filter drops is
+        // replaced by asking the underlying walk for more, until the
+        // budget is met in *live* candidates or the index runs dry.
+        while emitted < additional_budget {
+            let want = additional_budget - emitted;
+            self.block.clear();
+            let got = self.inner.extend(want, &mut self.block);
+            for &id in &self.block {
+                if !self.tombs.contains(id) {
+                    out.push(id);
+                    emitted += 1;
+                }
+            }
+            if got < want {
+                break; // underlying index exhausted
+            }
+        }
+        emitted
+    }
+
+    fn is_exhausted(&self) -> bool {
+        self.inner.is_exhausted()
+    }
+
+    /// Instrumentation of the *underlying* walk: `items_emitted` counts
+    /// candidates the walk produced, including the tombstoned ones this
+    /// filter absorbed (they were genuinely probed work).
+    fn stats(&self) -> ProbeStats {
+        self.inner.stats()
+    }
+
+    /// The underlying bound is over every un-emitted indexed item, a
+    /// superset of the un-emitted *live* items — still sound for the
+    /// streaming early-out.
+    fn norm_bound(&self) -> Option<f32> {
+        self.inner.norm_bound()
+    }
+}
+
+impl<C: CodeWord> MipsIndex for TombstonedIndex<C> {
+    fn probe(&self, query: &[f32], budget: usize, out: &mut Vec<ItemId>) {
+        self.probe_with_code(self.inner.hash_query(query), budget, out);
+    }
+
+    fn prober(&self, query: &[f32]) -> Box<dyn Prober + '_> {
+        Box::new(self.session(self.inner.hash_query(query)))
+    }
+
+    /// Live item count (tombstoned ids are not probeable).
+    fn len(&self) -> usize {
+        self.live_len()
+    }
+
+    fn stats(&self) -> IndexStats {
+        IndexStats { n_items: self.live_len(), ..self.inner.stats() }
+    }
+}
+
+impl<C: CodeWord> CodeProbe<C> for TombstonedIndex<C> {
+    fn probe_with_code(&self, qcode: C, budget: usize, out: &mut Vec<ItemId>) {
+        self.session(qcode).extend(budget, out);
+    }
+
+    fn prober_with_code(&self, qcode: C) -> Box<dyn Prober + '_> {
+        Box::new(self.session(qcode))
+    }
+}
+
+/// Route each id in `new_ids` (rows already appended to `dataset`) into
+/// the index and return the next epoch. Routing picks the first range
+/// (ascending `u_max`) whose `u_max` covers the item's norm; an item above
+/// every `u_max` lands in the top range and *grows* its `u_max` — that
+/// range is then re-hashed in full, because its codes are normalized by
+/// `U_j`. Every other touched range keeps its existing items' codes
+/// (reconstructed from its bucket table, never re-hashed) and appends the
+/// new items' codes. Untouched ranges are shared with `index` by `Arc`.
+///
+/// The per-range MIH tables, when attached, are rebuilt for touched
+/// ranges and shared for the rest, so the configured probe backend
+/// survives mutation.
+// staticcheck: allow(panic-reach, "per-range vectors are sized subs.len(), j indexes subs, and MIH tables are parallel to subs")
+pub fn insert_into_index<C: CodeWord>(
+    index: &RangeLshIndex<C>,
+    dataset: &Dataset,
+    new_ids: &[ItemId],
+) -> Result<RangeLshIndex<C>> {
+    let params = *index.params();
+    let hash_bits = params.hash_bits();
+    let subs = index.shared_subs();
+    anyhow::ensure!(!subs.is_empty(), "cannot insert into an empty index");
+    for &id in new_ids {
+        anyhow::ensure!((id as usize) < dataset.len(), "insert id {id} beyond dataset");
+        anyhow::ensure!(
+            dataset.norm(id as usize).is_finite(),
+            "item {id} has a non-finite norm"
+        );
+    }
+    // The item hasher: the index's own panel, hashed natively — identical
+    // codes to the build-time path (PJRT-built indexes store the same
+    // panel, and the backends are code-identical by contract).
+    let hasher: NativeHasher<C> = NativeHasher::with_projection(index.projection().clone());
+
+    // Route: first range (ascending norm order) with norm <= u_max, else
+    // the top range (growing its u_max).
+    let top = subs.len() - 1;
+    let mut per_range: Vec<Vec<ItemId>> = vec![Vec::new(); subs.len()];
+    for &id in new_ids {
+        let norm = dataset.norm(id as usize);
+        let j = subs
+            .iter()
+            .position(|s| norm <= s.part.u_max)
+            .unwrap_or(top);
+        per_range[j].push(id);
+    }
+
+    let old_mih = index.mih_tables();
+    let mut new_subs = Vec::with_capacity(subs.len());
+    let mut new_mih: Option<Vec<Arc<MihTable<C>>>> =
+        old_mih.map(|_| Vec::with_capacity(subs.len()));
+    for (j, sub) in subs.iter().enumerate() {
+        if per_range[j].is_empty() {
+            // Untouched: share the previous epoch's table (and MIH) verbatim.
+            new_subs.push(sub.clone());
+            if let (Some(acc), Some(old)) = (new_mih.as_mut(), old_mih) {
+                acc.push(old[j].clone());
+            }
+            continue;
+        }
+        let added = &per_range[j];
+        let new_max =
+            added.iter().map(|&id| dataset.norm(id as usize)).fold(sub.part.u_max, f32::max);
+        let new_min =
+            added.iter().map(|&id| dataset.norm(id as usize)).fold(sub.part.u_min, f32::min);
+        let mut ids = Vec::with_capacity(sub.part.ids.len() + added.len());
+        let mut codes = Vec::with_capacity(sub.part.ids.len() + added.len());
+        if new_max > sub.part.u_max {
+            // u_max grew (only reachable for the top range): every code in
+            // the range is normalized by U_j, so the whole range re-hashes.
+            ids.extend_from_slice(&sub.part.ids);
+            ids.extend_from_slice(added);
+            let rows = dataset.gather(&ids);
+            codes = hasher.hash_items(rows.flat(), new_max)?;
+        } else {
+            // U_j unchanged: existing items keep their codes — read back
+            // from the bucket table (one shared code per bucket) instead
+            // of re-hashing the whole range.
+            for (code, bucket_ids) in sub.table.buckets() {
+                for &id in bucket_ids {
+                    ids.push(id);
+                    codes.push(code);
+                }
+            }
+            let rows = dataset.gather(added);
+            codes.extend(hasher.hash_items(rows.flat(), new_max)?);
+            ids.extend_from_slice(added);
+        }
+        let table = BucketTable::build(&codes, Some(&ids), hash_bits);
+        if let Some(acc) = new_mih.as_mut() {
+            acc.push(Arc::new(MihTable::build(&table)));
+        }
+        let part = Partition { ids, u_max: new_max, u_min: new_min };
+        new_subs.push(Arc::new(SubIndex { part, table }));
+    }
+    RangeLshIndex::from_shared(
+        params,
+        index.projection().clone(),
+        index.len() + new_ids.len(),
+        new_subs,
+        new_mih,
+    )
+}
+
+/// Re-partition the live items from scratch — the drift-repair step. The
+/// surviving items keep their **original** ids: the live set is gathered
+/// into a dense scratch dataset, partitioned and hashed exactly as a
+/// fresh [`RangeLshIndex::build`] over those rows would be, and the dense
+/// positions are mapped back through the (monotonic) live-id list. The
+/// result is bit-identical to building a fresh index over the live rows
+/// (property-tested), with MIH tables re-attached iff `index` had them.
+///
+/// Returns the compacted index and the ascending live-id list.
+// staticcheck: allow(panic-reach, "partition ids are dense positions into `dense`, which has live.len() rows")
+pub fn compact_index<C: CodeWord>(
+    index: &RangeLshIndex<C>,
+    dataset: &Dataset,
+    tombs: &Tombstones,
+) -> Result<(RangeLshIndex<C>, Vec<ItemId>)> {
+    let mut live: Vec<ItemId> = Vec::with_capacity(index.len());
+    index.for_each_range::<std::convert::Infallible>(|part, _| {
+        live.extend(part.ids.iter().copied().filter(|&id| !tombs.contains(id)));
+        Ok(())
+    })?;
+    live.sort_unstable();
+    anyhow::ensure!(!live.is_empty(), "compaction would empty the index");
+
+    let params = *index.params();
+    let dense = dataset.gather(&live); // dense position i <-> original live[i]
+    let hasher: NativeHasher<C> = NativeHasher::with_projection(index.projection().clone());
+    let parts = partition(&dense, params.n_partitions, params.scheme)?;
+    let mut ranges = Vec::with_capacity(parts.len());
+    for part in parts {
+        let rows = dense.gather(&part.ids);
+        let codes = hasher.hash_items(rows.flat(), part.u_max)?;
+        let ids: Vec<ItemId> = part.ids.iter().map(|&i| live[i as usize]).collect();
+        ranges.push((Partition { ids, u_max: part.u_max, u_min: part.u_min }, codes));
+    }
+    let mut compacted =
+        RangeLshIndex::from_parts(params, index.projection().clone(), live.len(), ranges)?;
+    if index.has_mih() {
+        compacted.enable_mih();
+    }
+    Ok((compacted, live))
+}
+
+/// The ascending list of ids currently indexed (live or tombstoned) —
+/// used at store open to reconcile the dataset against the index: a
+/// dataset row that is *not* indexed is a dead row left behind by an
+/// earlier compaction.
+pub fn indexed_ids<C: CodeWord>(index: &RangeLshIndex<C>) -> Vec<ItemId> {
+    let mut out = Vec::with_capacity(index.len());
+    let _ = index.for_each_range::<std::convert::Infallible>(|part, _| {
+        out.extend_from_slice(&part.ids);
+        Ok(())
+    });
+    out.sort_unstable();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::index::range::RangeLshParams;
+
+    fn build(d: &Dataset, bits: usize, m: usize) -> RangeLshIndex {
+        let h: NativeHasher = NativeHasher::new(d.dim(), 64, 99);
+        RangeLshIndex::build(d, &h, RangeLshParams::new(bits, m)).unwrap()
+    }
+
+    fn grown(base: &Dataset, extra: &Dataset) -> (Dataset, Vec<ItemId>) {
+        let mut flat = base.flat().to_vec();
+        flat.extend_from_slice(extra.flat());
+        let mut norms = base.norms().to_vec();
+        norms.extend_from_slice(extra.norms());
+        let ids = (base.len() as ItemId..(base.len() + extra.len()) as ItemId).collect();
+        (Dataset::from_flat_with_norms(base.dim(), flat, norms), ids)
+    }
+
+    #[test]
+    fn tombstones_set_contains_and_enumerate() {
+        let mut t = Tombstones::new();
+        assert!(t.is_empty());
+        assert!(t.set(130));
+        assert!(t.set(0));
+        assert!(t.set(63));
+        assert!(!t.set(130), "double delete is not fresh");
+        assert_eq!(t.len(), 3);
+        assert!(t.contains(0) && t.contains(63) && t.contains(130));
+        assert!(!t.contains(64) && !t.contains(1000));
+        assert_eq!(t.ids(), vec![0, 63, 130]);
+        assert_eq!(Tombstones::from_ids(&t.ids()), t);
+    }
+
+    #[test]
+    fn tombstoned_ids_never_surface_at_any_budget() {
+        let d = synthetic::longtail_sift(600, 8, 1);
+        let idx = Arc::new(build(&d, 16, 8));
+        let mut tombs = Tombstones::new();
+        for id in (0..600).step_by(3) {
+            tombs.set(id);
+        }
+        let view = TombstonedIndex::new(idx.clone(), Arc::new(tombs));
+        let q = synthetic::gaussian_queries(2, 8, 2);
+        for qi in 0..q.len() {
+            let qcode = idx.hash_query(q.row(qi));
+            for budget in [1usize, 7, 100, usize::MAX] {
+                let mut out = Vec::new();
+                view.probe_with_code(qcode, budget, &mut out);
+                assert!(out.iter().all(|&id| id % 3 != 0), "q={qi} budget={budget}");
+                assert_eq!(out.len(), budget.min(view.live_len()), "q={qi} budget={budget}");
+            }
+        }
+    }
+
+    #[test]
+    fn filtered_stream_is_the_unfiltered_stream_minus_tombstones() {
+        // The fill-gap filter must be order-preserving: the live stream is
+        // exactly the raw stream with tombstoned ids removed, at every
+        // budget and across resumed sessions.
+        let d = synthetic::longtail_sift(500, 8, 3);
+        let idx = Arc::new(build(&d, 16, 8));
+        let mut tombs = Tombstones::new();
+        for id in [0u32, 5, 17, 200, 201, 202, 499] {
+            tombs.set(id);
+        }
+        let tombs = Arc::new(tombs);
+        let view = TombstonedIndex::new(idx.clone(), tombs.clone());
+        let q = synthetic::gaussian_queries(1, 8, 4);
+        let qcode = idx.hash_query(q.row(0));
+        let mut raw = Vec::new();
+        idx.probe_with_code(qcode, usize::MAX, &mut raw);
+        let want: Vec<ItemId> =
+            raw.iter().copied().filter(|&id| !tombs.contains(id)).collect();
+        let mut full = Vec::new();
+        view.probe_with_code(qcode, usize::MAX, &mut full);
+        assert_eq!(full, want);
+        // Resumed sessions emit the same stream in pieces, and the
+        // exhaustion contract holds: short return exactly at dry-up.
+        let mut session = view.session(qcode);
+        let mut chunks = Vec::new();
+        loop {
+            let got = session.extend(7, &mut chunks);
+            if got < 7 {
+                assert!(session.is_exhausted());
+                assert_eq!(session.extend(7, &mut chunks), 0, "post-exhaustion extends are 0");
+                break;
+            }
+        }
+        assert_eq!(chunks, want);
+    }
+
+    #[test]
+    fn insert_routes_to_covering_range_and_preserves_stream_of_old_items() {
+        let base = synthetic::longtail_sift(400, 8, 5);
+        let idx = build(&base, 16, 8);
+        let extra = synthetic::longtail_sift(60, 8, 6);
+        let (dataset, new_ids) = grown(&base, &extra);
+        let mutated = insert_into_index(&idx, &dataset, &new_ids).unwrap();
+        assert_eq!(mutated.len(), 460);
+        // Every id probes out exactly once.
+        let q = synthetic::gaussian_queries(1, 8, 7);
+        let qcode = mutated.hash_query(q.row(0));
+        let mut out = Vec::new();
+        mutated.probe_with_code(qcode, usize::MAX, &mut out);
+        assert_eq!(out.len(), 460);
+        let mut sorted = out.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 460);
+        // Ranges stay norm-sound: each indexed item's norm lies within
+        // its range's [u_min, u_max].
+        mutated
+            .for_each_range::<std::convert::Infallible>(|part, _| {
+                for &id in &part.ids {
+                    let n = dataset.norm(id as usize);
+                    assert!(n >= part.u_min && n <= part.u_max, "id {id} outside its range");
+                }
+                Ok(())
+            })
+            .unwrap();
+    }
+
+    #[test]
+    fn insert_above_top_range_grows_u_max_and_rehashes() {
+        let base = synthetic::longtail_sift(300, 8, 8);
+        let idx = build(&base, 16, 4);
+        let old_top = *idx.u_maxes().last().unwrap();
+        // One row with double the max norm: guaranteed above every u_max.
+        let argmax = (0..base.len())
+            .max_by(|&a, &b| base.norm(a).total_cmp(&base.norm(b)))
+            .unwrap();
+        let big: Vec<f32> = base.row(argmax).iter().map(|v| v * 2.0).collect();
+        let extra = Dataset::from_rows(&[big]);
+        let (dataset, new_ids) = grown(&base, &extra);
+        assert!(dataset.norm(300) > old_top);
+        let mutated = insert_into_index(&idx, &dataset, &new_ids).unwrap();
+        let new_top = *mutated.u_maxes().last().unwrap();
+        assert_eq!(new_top.to_bits(), dataset.norm(300).to_bits());
+        // The stream still covers everything exactly once.
+        let q = synthetic::gaussian_queries(1, 8, 9);
+        let mut out = Vec::new();
+        mutated.probe(q.row(0), usize::MAX, &mut out);
+        assert_eq!(out.len(), 301);
+        let mut s = out.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 301);
+    }
+
+    #[test]
+    fn insert_shares_untouched_ranges_structurally() {
+        let base = synthetic::longtail_sift(800, 8, 10);
+        let idx = build(&base, 16, 16);
+        // One median-norm row: routes into exactly one existing range.
+        let mid = base.len() / 2;
+        let extra = Dataset::from_rows(&[base.row(mid).to_vec()]);
+        let (dataset, new_ids) = grown(&base, &extra);
+        let mutated = insert_into_index(&idx, &dataset, &new_ids).unwrap();
+        let shared = idx
+            .shared_subs()
+            .iter()
+            .zip(mutated.shared_subs())
+            .filter(|(a, b)| Arc::ptr_eq(a, b))
+            .count();
+        assert_eq!(shared, idx.n_ranges() - 1, "exactly one range may be rebuilt");
+    }
+
+    #[test]
+    fn insert_rebuilds_mih_only_for_touched_ranges() {
+        let base = synthetic::longtail_sift(600, 8, 11);
+        let mut idx = build(&base, 16, 8);
+        idx.enable_mih();
+        let mid = base.len() / 2;
+        let extra = Dataset::from_rows(&[base.row(mid).to_vec()]);
+        let (dataset, new_ids) = grown(&base, &extra);
+        let mutated = insert_into_index(&idx, &dataset, &new_ids).unwrap();
+        assert!(mutated.has_mih(), "probe backend must survive mutation");
+        let (old_t, new_t) = (idx.mih_tables().unwrap(), mutated.mih_tables().unwrap());
+        let shared = old_t.iter().zip(new_t).filter(|(a, b)| Arc::ptr_eq(a, b)).count();
+        assert_eq!(shared, idx.n_ranges() - 1);
+        // And the MIH stream still matches the counting sort's.
+        let q = synthetic::gaussian_queries(1, 8, 12);
+        let qcode = mutated.hash_query(q.row(0));
+        let mut got = Vec::new();
+        mutated.probe_with_code(qcode, usize::MAX, &mut got);
+        let mut plain = insert_into_index(&idx, &dataset, &new_ids).unwrap();
+        plain.clear_mih();
+        let mut want = Vec::new();
+        plain.probe_with_code(qcode, usize::MAX, &mut want);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn compaction_matches_fresh_build_over_live_rows() {
+        let base = synthetic::longtail_sift(500, 8, 13);
+        let idx = build(&base, 16, 8);
+        let mut tombs = Tombstones::new();
+        for id in (0..500).step_by(7) {
+            tombs.set(id);
+        }
+        let (compacted, live) = compact_index(&idx, &base, &tombs).unwrap();
+        assert_eq!(live.len(), compacted.len());
+        assert!(live.windows(2).all(|w| w[0] < w[1]), "live ids ascend");
+        // Bit-identical to a fresh build over the gathered live rows,
+        // modulo the dense->original id mapping.
+        let dense = base.gather(&live);
+        let h: NativeHasher = NativeHasher::with_projection(idx.projection().clone());
+        let fresh = RangeLshIndex::build(&dense, &h, *idx.params()).unwrap();
+        let q = synthetic::gaussian_queries(2, 8, 14);
+        for qi in 0..q.len() {
+            let qcode = compacted.hash_query(q.row(qi));
+            let (mut got, mut want) = (Vec::new(), Vec::new());
+            compacted.probe_with_code(qcode, usize::MAX, &mut got);
+            fresh.probe_with_code(qcode, usize::MAX, &mut want);
+            let want_mapped: Vec<ItemId> =
+                want.iter().map(|&i| live[i as usize]).collect();
+            assert_eq!(got, want_mapped, "q={qi}");
+        }
+        // No tombstoned id survives compaction.
+        assert!(live.iter().all(|&id| !tombs.contains(id)));
+    }
+
+    #[test]
+    fn compaction_keeps_mih_attachment() {
+        let base = synthetic::longtail_sift(300, 8, 15);
+        let mut idx = build(&base, 16, 4);
+        idx.enable_mih();
+        let mut tombs = Tombstones::new();
+        tombs.set(3);
+        let (compacted, _) = compact_index(&idx, &base, &tombs).unwrap();
+        assert!(compacted.has_mih());
+        idx.clear_mih();
+        let (compacted, _) = compact_index(&idx, &base, &tombs).unwrap();
+        assert!(!compacted.has_mih());
+    }
+
+    #[test]
+    fn compacting_everything_away_is_an_error() {
+        let base = synthetic::longtail_sift(50, 8, 16);
+        let idx = build(&base, 16, 2);
+        let mut tombs = Tombstones::new();
+        for id in 0..50 {
+            tombs.set(id);
+        }
+        assert!(compact_index(&idx, &base, &tombs).is_err());
+    }
+
+    #[test]
+    fn indexed_ids_reports_every_id_once() {
+        let base = synthetic::longtail_sift(200, 8, 17);
+        let idx = build(&base, 16, 4);
+        let ids = indexed_ids(&idx);
+        assert_eq!(ids, (0..200).collect::<Vec<ItemId>>());
+    }
+
+    #[test]
+    fn insert_rejects_out_of_range_and_non_finite() {
+        let base = synthetic::longtail_sift(100, 8, 18);
+        let idx = build(&base, 16, 4);
+        assert!(insert_into_index(&idx, &base, &[100]).is_err(), "id beyond dataset");
+        let mut flat = base.flat().to_vec();
+        flat.extend(std::iter::repeat(f32::NAN).take(8));
+        let bad = Dataset::from_flat(8, flat);
+        assert!(insert_into_index(&idx, &bad, &[100]).is_err(), "non-finite norm");
+    }
+}

@@ -69,6 +69,7 @@ pub fn partition(dataset: &Dataset, m: usize, scheme: PartitionScheme) -> Result
     })
 }
 
+// staticcheck: allow(panic-reach, "rank slices end at hi = (j+1)n/m <= n, and lo >= hi ranges are skipped")
 fn percentile(dataset: &Dataset, m: usize) -> Vec<Partition> {
     let n = dataset.len();
     // Rank by (norm, id): stable under ties, as Algorithm 1 requires.
@@ -93,6 +94,7 @@ fn percentile(dataset: &Dataset, m: usize) -> Vec<Partition> {
     out
 }
 
+// staticcheck: allow(panic-reach, "the bucket index is clamped to m-1 and buckets has m entries (partition ensures m >= 1)")
 fn uniform_range(dataset: &Dataset, m: usize) -> Vec<Partition> {
     let n = dataset.len();
     let max = dataset.max_norm();

@@ -426,7 +426,7 @@ fn read_mih_tables<C: CodeWord>(
     r: &mut impl Read,
     path: &Path,
     index: &RangeLshIndex<C>,
-) -> Result<Vec<MihTable>> {
+) -> Result<Vec<MihTable<C>>> {
     let sect_ranges = read_u32(r)? as usize;
     let sect_bits = read_u32(r)? as usize;
     ensure!(

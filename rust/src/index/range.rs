@@ -92,14 +92,19 @@ impl RangeLshParams {
 }
 
 /// One norm range's index: ids, local max norm, bucket table.
-struct SubIndex<C: CodeWord> {
-    part: Partition,
-    table: BucketTable<C>,
+///
+/// `Arc`-shared between index epochs (see [`crate::index::mutable`]): a
+/// mutation that touches one range clones `m` `Arc`s and rebuilds only the
+/// touched range's table, so the untouched ranges are structurally shared
+/// between the pre- and post-mutation indexes.
+pub(crate) struct SubIndex<C: CodeWord> {
+    pub(crate) part: Partition,
+    pub(crate) table: BucketTable<C>,
 }
 
 /// A built NORM-RANGING LSH index over `C`-wide codes.
 pub struct RangeLshIndex<C: CodeWord = u64> {
-    subs: Vec<SubIndex<C>>,
+    subs: Vec<Arc<SubIndex<C>>>,
     order: MetricOrder,
     proj: Arc<Projection>,
     /// Query hasher over the shared panel, built once at index build —
@@ -109,8 +114,9 @@ pub struct RangeLshIndex<C: CodeWord = u64> {
     n_items: usize,
     /// Per-range MIH chunk tables (the sub-linear candidate-generation
     /// backend), present iff [`Self::enable_mih`] ran — probers use them
-    /// automatically when attached. Aligned with `subs`.
-    mih: Option<Vec<MihTable<C>>>,
+    /// automatically when attached. Aligned with `subs`; `Arc`-shared
+    /// across epochs like the sub-indexes themselves.
+    mih: Option<Vec<Arc<MihTable<C>>>>,
 }
 
 impl<C: CodeWord> RangeLshIndex<C> {
@@ -155,7 +161,7 @@ impl<C: CodeWord> RangeLshIndex<C> {
             let rows = dataset.gather(&part.ids);
             let codes = hasher.hash_items(rows.flat(), part.u_max)?;
             let table = BucketTable::build(&codes, Some(&part.ids), hash_bits);
-            subs.push(SubIndex { part, table });
+            subs.push(Arc::new(SubIndex { part, table }));
         }
         let u_maxes: Vec<f32> = subs.iter().map(|s| s.part.u_max).collect();
         let order = MetricOrder::build(&u_maxes, hash_bits, params.epsilon);
@@ -230,12 +236,49 @@ impl<C: CodeWord> RangeLshIndex<C> {
         for (part, codes) in ranges {
             anyhow::ensure!(codes.len() == part.ids.len(), "codes/ids mismatch");
             let table = BucketTable::build(&codes, Some(&part.ids), hash_bits);
-            subs.push(SubIndex { part, table });
+            subs.push(Arc::new(SubIndex { part, table }));
         }
         let u_maxes: Vec<f32> = subs.iter().map(|s| s.part.u_max).collect();
         let order = MetricOrder::build(&u_maxes, hash_bits, params.epsilon);
         let qhasher = NativeHasher::with_projection(proj.clone());
         Ok(Self { subs, order, proj, qhasher, params, n_items, mih: None })
+    }
+
+    /// Assemble an epoch from already-built, `Arc`-shared range
+    /// sub-indexes (the [`crate::index::mutable`] mutation path): only the
+    /// ranges a mutation touched carry fresh tables; the rest are the
+    /// previous epoch's `Arc`s verbatim. The metric schedule is rebuilt
+    /// (it is a few hundred bytes), and the optional MIH tables must be
+    /// aligned with `subs` when present.
+    pub(crate) fn from_shared(
+        params: RangeLshParams,
+        proj: Arc<Projection>,
+        n_items: usize,
+        subs: Vec<Arc<SubIndex<C>>>,
+        mih: Option<Vec<Arc<MihTable<C>>>>,
+    ) -> Result<Self> {
+        let hash_bits = params.hash_bits();
+        anyhow::ensure!(hash_bits >= 1, "bad params: zero hash bits");
+        let total: usize = subs.iter().map(|s| s.part.ids.len()).sum();
+        anyhow::ensure!(total == n_items, "ranges hold {total} items, expected {n_items}");
+        if let Some(tables) = &mih {
+            anyhow::ensure!(
+                tables.len() == subs.len(),
+                "MIH tables ({}) not aligned with ranges ({})",
+                tables.len(),
+                subs.len()
+            );
+        }
+        let u_maxes: Vec<f32> = subs.iter().map(|s| s.part.u_max).collect();
+        let order = MetricOrder::build(&u_maxes, hash_bits, params.epsilon);
+        let qhasher = NativeHasher::with_projection(proj.clone());
+        Ok(Self { subs, order, proj, qhasher, params, n_items, mih })
+    }
+
+    /// The `Arc`-shared range sub-indexes, ascending norm order (the
+    /// mutation layer clones these to assemble the next epoch).
+    pub(crate) fn shared_subs(&self) -> &[Arc<SubIndex<C>>] {
+        &self.subs
     }
 
     /// Enable the MIH candidate-generation backend
@@ -245,7 +288,8 @@ impl<C: CodeWord> RangeLshIndex<C> {
     /// the counting sort's (property-tested).
     pub fn enable_mih(&mut self) {
         if self.mih.is_none() {
-            self.mih = Some(self.subs.iter().map(|s| MihTable::build(&s.table)).collect());
+            self.mih =
+                Some(self.subs.iter().map(|s| Arc::new(MihTable::build(&s.table))).collect());
         }
     }
 
@@ -259,8 +303,8 @@ impl<C: CodeWord> RangeLshIndex<C> {
         self.mih.is_some()
     }
 
-    /// Per-range MIH tables, range order (persistence).
-    pub(crate) fn mih_tables(&self) -> Option<&[MihTable<C>]> {
+    /// Per-range MIH tables, range order (persistence + mutation layer).
+    pub(crate) fn mih_tables(&self) -> Option<&[Arc<MihTable<C>>]> {
         self.mih.as_deref()
     }
 
@@ -274,7 +318,7 @@ impl<C: CodeWord> RangeLshIndex<C> {
             tables.len(),
             self.subs.len()
         );
-        self.mih = Some(tables);
+        self.mih = Some(tables.into_iter().map(Arc::new).collect());
         Ok(())
     }
 

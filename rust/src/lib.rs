@@ -59,6 +59,7 @@ pub mod data;
 pub mod eval;
 pub mod hash;
 pub mod index;
+pub mod persist;
 pub mod runtime;
 pub mod theory;
 pub mod transform;

@@ -5,6 +5,9 @@
 //! - `eval`       run a probed-items/recall experiment from a TOML config
 //! - `theory`     print ρ curves and the Theorem 1 report for a config
 //! - `serve`      build an index and drive a batched serving workload
+//! - `ingest`     append rows to a crash-consistent mutable store
+//!                (creating it on first use)
+//! - `delete`     tombstone ids in a mutable store
 //! - `artifacts`  check the AOT artifact directory and runtime
 //!
 //! The argument parser is in-tree (offline build, no clap): flags are
@@ -20,8 +23,8 @@ use anyhow::{bail, Context};
 use rangelsh::config::{Config, DatasetKind, IndexAlgo, ProbeBackend};
 use rangelsh::coordinator::server::drive_any_with;
 use rangelsh::coordinator::{
-    AnyEngine, BatchPolicy, DegradeReason, QueryParams, RouterPolicy, SearchEngine, Shard,
-    ShardedRouter,
+    AnyEngine, AnyStore, BatchPolicy, DegradeReason, MutableConfig, QueryParams, RouterPolicy,
+    SearchEngine, Shard, ShardedRouter,
 };
 use rangelsh::data::{load_dataset, save_dataset, synthetic, Dataset};
 use rangelsh::eval::harness::{format_probe_table, ground_truth, run_curve, CurveSpec};
@@ -59,6 +62,17 @@ SUBCOMMANDS:
              [--shards N] [--min-shards M]  fan out over N row-sliced
              shards with fault isolation; a merge needs >= M live shards
              (default: all)
+             [--wal-dir DIR]  serve a crash-consistent mutable store
+             (from `rangelsh ingest`) instead of building/loading an
+             immutable index
+  ingest     --dir DIR --data FILE.rdat [--compact]
+             [--code-bits L] [--partitions M] [--seed S]
+             append rows to the store at DIR (WAL-acknowledged, replayed
+             on reopen after any crash); first use creates the store
+             from the data file with the given index shape
+  delete     --dir DIR --ids 1,2,3 [--compact]
+             tombstone ids in the store at DIR; deleted ids never
+             surface in any answer, compaction reclaims them
   artifacts  [--dir DIR]
 ";
 
@@ -151,6 +165,8 @@ fn run(argv: &[String]) -> Result<()> {
         "eval" => eval(&Args::parse(rest, &["compare"])?),
         "theory" => theory(&Args::parse(rest, &[])?),
         "serve" => serve(&Args::parse(rest, &["native"])?),
+        "ingest" => ingest_cmd(&Args::parse(rest, &["compact"])?),
+        "delete" => delete_cmd(&Args::parse(rest, &["compact"])?),
         "artifacts" => artifacts_check(&Args::parse(rest, &[])?),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
@@ -397,6 +413,15 @@ fn serve(args: &Args) -> Result<()> {
         anyhow::ensure!(n_shards >= 1, "--shards must be >= 1");
         return serve_sharded(args, &cfg, n_shards);
     }
+    // --wal-dir DIR: serve a crash-consistent mutable store (built by
+    // `rangelsh ingest`) through its current epoch handle.
+    if let Some(dir) = args.opt("wal-dir") {
+        anyhow::ensure!(
+            args.opt("load").is_none(),
+            "--wal-dir and --load are mutually exclusive"
+        );
+        return serve_store(args, &cfg, &PathBuf::from(dir));
+    }
     let n_queries: usize = args.opt_parse("n-queries", 2000)?;
     let clients: usize = args.opt_parse("clients", 16)?;
     let artifacts = PathBuf::from(args.opt("artifacts").unwrap_or(DEFAULT_ARTIFACT_DIR));
@@ -522,6 +547,131 @@ fn serve(args: &Args) -> Result<()> {
         snap.queries_degraded,
         snap.shed,
     );
+    Ok(())
+}
+
+/// `serve --wal-dir DIR`: reopen the mutable store (replaying its WAL —
+/// recovery after a crash is exactly this path) and drive the workload
+/// through the current epoch's engine.
+fn serve_store(args: &Args, cfg: &Config, dir: &std::path::Path) -> Result<()> {
+    let t0 = std::time::Instant::now();
+    let store = AnyStore::open(dir, cfg.serve.clone(), MutableConfig::default())?;
+    let engine = store.engine();
+    let dim = store.dim();
+    println!(
+        "mutable store ready in {:.2}s ({} x u64 code words, epoch {}, {} live items, \
+         {} tombstoned)",
+        t0.elapsed().as_secs_f64(),
+        store.code_words(),
+        store.epoch(),
+        store.live_len(),
+        store.tombstoned_len(),
+    );
+    let qp = query_params_from(args)?;
+    if !qp.is_default() {
+        println!("per-request params: {qp:?}");
+    }
+    let n_queries: usize = args.opt_parse("n-queries", 2000)?;
+    let clients: usize = args.opt_parse("clients", 16)?;
+    let queries = synthetic::gaussian_queries(n_queries, dim, cfg.dataset.seed ^ 0xDEAD);
+    let policy = BatchPolicy::new(
+        cfg.serve.max_batch,
+        Duration::from_micros(cfg.serve.deadline_us),
+    );
+    let (results, wall) = drive_any_with(&engine, policy, &queries, clients, qp)?;
+    let snap = engine.metrics().snapshot();
+    println!(
+        "served {} queries in {:.2}s — {:.0} qps, p50 {}us, p95 {}us, p99 {}us, \
+         mean probed {:.0}, mean batch {:.1}, degraded {}, shed {}",
+        results.len(),
+        wall.as_secs_f64(),
+        results.len() as f64 / wall.as_secs_f64(),
+        snap.p50_us,
+        snap.p95_us,
+        snap.p99_us,
+        snap.mean_probed,
+        snap.mean_batch_rows,
+        snap.queries_degraded,
+        snap.shed,
+    );
+    Ok(())
+}
+
+/// `rangelsh ingest`: WAL-acknowledged row append. On a fresh directory
+/// the data file seeds the store (index shape from `--code-bits` /
+/// `--partitions` / `--seed`); on an existing store those flags are
+/// ignored and the rows are ingested into the stored shape.
+fn ingest_cmd(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.req("dir")?);
+    let data = load_dataset(args.req("data")?)?;
+    let mcfg = MutableConfig::default();
+    let t0 = std::time::Instant::now();
+    let store = if dir.join("MANIFEST").exists() {
+        let store = AnyStore::open(&dir, rangelsh::config::ServeConfig::default(), mcfg)?;
+        anyhow::ensure!(
+            data.dim() == store.dim(),
+            "data dim {} != store dim {}",
+            data.dim(),
+            store.dim()
+        );
+        let ids = store.ingest(data.flat())?;
+        println!(
+            "ingested {} rows into {} in {:.2}s (ids {}..={}, epoch {}, {} live)",
+            ids.len(),
+            dir.display(),
+            t0.elapsed().as_secs_f64(),
+            ids.first().copied().unwrap_or(0),
+            ids.last().copied().unwrap_or(0),
+            store.epoch(),
+            store.live_len(),
+        );
+        store
+    } else {
+        let code_bits: usize = args.opt_parse("code-bits", 64)?;
+        let n_partitions: usize = args.opt_parse("partitions", 8)?;
+        let seed: u64 = args.opt_parse("seed", 42)?;
+        let cfg = rangelsh::config::ServeConfig { code_bits, ..Default::default() };
+        let params = RangeLshParams::new(code_bits, n_partitions);
+        let n = data.len();
+        let store = AnyStore::create(&dir, Arc::new(data), params, seed, cfg, mcfg)?;
+        println!(
+            "created store at {} with {n} rows in {:.2}s ({code_bits}-bit codes, \
+             {n_partitions} ranges)",
+            dir.display(),
+            t0.elapsed().as_secs_f64(),
+        );
+        store
+    };
+    if args.has("compact") {
+        store.compact()?;
+        println!("compacted: epoch {}, {} live", store.epoch(), store.live_len());
+    }
+    Ok(())
+}
+
+/// `rangelsh delete`: tombstone ids; re-deletes are idempotent no-ops,
+/// unknown ids are an error before anything is logged.
+fn delete_cmd(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.req("dir")?);
+    let ids = args
+        .req("ids")?
+        .split(',')
+        .map(|s| s.trim().parse::<u32>().map_err(|e| anyhow::anyhow!("--ids {s:?}: {e}")))
+        .collect::<Result<Vec<_>>>()?;
+    let store =
+        AnyStore::open(&dir, rangelsh::config::ServeConfig::default(), MutableConfig::default())?;
+    let n = store.delete(&ids)?;
+    println!(
+        "tombstoned {n} of {} ids (epoch {}, {} live, {} tombstoned)",
+        ids.len(),
+        store.epoch(),
+        store.live_len(),
+        store.tombstoned_len(),
+    );
+    if args.has("compact") {
+        store.compact()?;
+        println!("compacted: epoch {}, {} live", store.epoch(), store.live_len());
+    }
     Ok(())
 }
 

@@ -1,0 +1,176 @@
+//! Checkpoint manifest: the small, checksummed file that names which
+//! epoch a store directory's `items.rdat` + `index.rlsh` pair represents
+//! and which ids were tombstoned as of that checkpoint.
+//!
+//! The manifest is written *last* in the checkpoint sequence (items →
+//! index → manifest → WAL truncate) and published by temp-file/rename,
+//! so its presence certifies that the files it describes are complete.
+//!
+//! ## On-disk format (all little-endian)
+//!
+//! ```text
+//! [magic "RLSHMAN\x01": 8 bytes]
+//! [epoch: u64] [n_rows: u64] [dim: u32] [tombstones: u64 len, u32 × len]
+//! [crc32 of everything after the magic: u32]   -- the "manifest" section
+//! ```
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+use crate::util::bytes::{
+    read_u32, read_u32s, read_u64, write_u32, write_u32s, write_u64, HashingReader,
+    HashingWriter,
+};
+use crate::{ItemId, Result};
+
+/// Manifest file magic (`RLSHMAN`, version 1).
+pub const MANIFEST_MAGIC: &[u8; 8] = b"RLSHMAN\x01";
+
+/// The durable summary of one checkpoint.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Manifest {
+    /// Monotonic epoch counter; bumped by every checkpoint.
+    pub epoch: u64,
+    /// Rows in `items.rdat` at checkpoint time (WAL inserts resume after
+    /// this prefix — the file is append-only and prefix-stable).
+    pub n_rows: u64,
+    /// Row dimensionality, cross-checked against the dataset on open.
+    pub dim: u32,
+    /// Ids tombstoned as of this checkpoint, ascending.
+    pub tombstones: Vec<ItemId>,
+}
+
+/// Atomically write `manifest` to `path`: staged as a `.tmp` sibling,
+/// fsynced, then renamed into place (plus a best-effort directory sync),
+/// so a crash leaves either the old manifest or the new one — never a
+/// torn file.
+pub fn save_manifest(path: impl AsRef<Path>, manifest: &Manifest) -> Result<()> {
+    let path = path.as_ref();
+    let mut tmp = path.as_os_str().to_os_string();
+    tmp.push(".tmp");
+    let tmp = PathBuf::from(tmp);
+    {
+        let file =
+            File::create(&tmp).with_context(|| format!("creating {}", tmp.display()))?;
+        let mut w = BufWriter::new(file);
+        w.write_all(MANIFEST_MAGIC)?;
+        let mut hw = HashingWriter::new(&mut w);
+        write_u64(&mut hw, manifest.epoch)?;
+        write_u64(&mut hw, manifest.n_rows)?;
+        write_u32(&mut hw, manifest.dim)?;
+        write_u32s(&mut hw, &manifest.tombstones)?;
+        hw.emit_section_crc()?;
+        w.flush()?;
+        w.get_ref().sync_all()?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} into place", tmp.display()))?;
+    if let Some(dir) = path.parent() {
+        super::sync_dir(dir);
+    }
+    Ok(())
+}
+
+/// Load and verify a manifest. Fails on a bad magic, a checksum
+/// mismatch, or trailing bytes (strict EOF, like the `.rlsh` loaders).
+pub fn load_manifest(path: impl AsRef<Path>) -> Result<Manifest> {
+    let path = path.as_ref();
+    let file =
+        File::open(path).with_context(|| format!("opening manifest {}", path.display()))?;
+    let mut r = BufReader::new(file);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)
+        .with_context(|| format!("reading manifest magic from {}", path.display()))?;
+    anyhow::ensure!(
+        &magic == MANIFEST_MAGIC,
+        "{}: not a rangelsh manifest",
+        path.display()
+    );
+    let mut hr = HashingReader::new(&mut r);
+    let epoch = read_u64(&mut hr)?;
+    let n_rows = read_u64(&mut hr)?;
+    let dim = read_u32(&mut hr)?;
+    let tombstones = read_u32s(&mut hr)?;
+    hr.verify_section_crc("manifest")?;
+    let mut trailing = [0u8; 1];
+    anyhow::ensure!(
+        r.read(&mut trailing)? == 0,
+        "{}: trailing bytes after manifest",
+        path.display()
+    );
+    Ok(Manifest { epoch, n_rows, dim, tombstones })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempPath;
+
+    fn sample() -> Manifest {
+        Manifest { epoch: 3, n_rows: 1200, dim: 16, tombstones: vec![4, 17, 901] }
+    }
+
+    #[test]
+    fn round_trips() {
+        let tmp = TempPath::new("manifest");
+        save_manifest(tmp.path(), &sample()).unwrap();
+        assert_eq!(load_manifest(tmp.path()).unwrap(), sample());
+    }
+
+    #[test]
+    fn empty_tombstones_round_trip() {
+        let tmp = TempPath::new("manifest-empty");
+        let m = Manifest { epoch: 0, n_rows: 0, dim: 1, tombstones: vec![] };
+        save_manifest(tmp.path(), &m).unwrap();
+        assert_eq!(load_manifest(tmp.path()).unwrap(), m);
+    }
+
+    #[test]
+    fn save_replaces_existing_atomically() {
+        let tmp = TempPath::new("manifest-replace");
+        save_manifest(tmp.path(), &sample()).unwrap();
+        let newer = Manifest { epoch: 4, ..sample() };
+        save_manifest(tmp.path(), &newer).unwrap();
+        assert_eq!(load_manifest(tmp.path()).unwrap(), newer);
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let tmp = TempPath::new("manifest-corrupt");
+        save_manifest(tmp.path(), &sample()).unwrap();
+        let mut bytes = std::fs::read(tmp.path()).unwrap();
+        bytes[10] ^= 0x01; // inside the epoch field
+        std::fs::write(tmp.path(), &bytes).unwrap();
+        let err = load_manifest(tmp.path()).unwrap_err();
+        assert!(format!("{err:#}").contains("manifest section"));
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_trailing_bytes() {
+        let tmp = TempPath::new("manifest-magic");
+        std::fs::write(tmp.path(), b"NOTAMANIFEST").unwrap();
+        let err = load_manifest(tmp.path()).unwrap_err();
+        assert!(format!("{err:#}").contains("not a rangelsh manifest"));
+
+        save_manifest(tmp.path(), &sample()).unwrap();
+        let mut bytes = std::fs::read(tmp.path()).unwrap();
+        bytes.push(0);
+        std::fs::write(tmp.path(), &bytes).unwrap();
+        let err = load_manifest(tmp.path()).unwrap_err();
+        assert!(format!("{err:#}").contains("trailing bytes"));
+    }
+
+    #[test]
+    fn truncated_file_fails_cleanly() {
+        let tmp = TempPath::new("manifest-trunc");
+        save_manifest(tmp.path(), &sample()).unwrap();
+        let bytes = std::fs::read(tmp.path()).unwrap();
+        for cut in 0..bytes.len() {
+            std::fs::write(tmp.path(), &bytes[..cut]).unwrap();
+            assert!(load_manifest(tmp.path()).is_err(), "cut at {cut}");
+        }
+    }
+}

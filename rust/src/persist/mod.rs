@@ -1,0 +1,34 @@
+//! Crash-consistent store persistence: the write-ahead log ([`wal`]) and
+//! the checkpoint manifest ([`manifest`]) that together make the mutable
+//! index durable (README §"Mutability & recovery model").
+//!
+//! The durability contract, shared by both submodules and the
+//! [`crate::coordinator::store::MutableStore`] that drives them:
+//!
+//! - a mutation is **acknowledged** only after its WAL record is written
+//!   and fsynced — an acked mutation survives any crash;
+//! - checkpoint files (`items.rdat`, `index.rlsh`, `MANIFEST`) are only
+//!   ever published by atomic temp-file/rename (like the `.rlsh` v3
+//!   saves), so a reader never observes a torn file;
+//! - the WAL is truncated (atomically, by renaming a fresh header-only
+//!   file over it) strictly *after* the checkpoint that covers its
+//!   records is on disk — a crash between the two merely replays
+//!   idempotent records.
+
+pub mod manifest;
+pub mod wal;
+
+pub use manifest::{load_manifest, save_manifest, Manifest};
+pub use wal::{Wal, WalRecord};
+
+use std::path::Path;
+
+/// Best-effort directory fsync: after a rename publishes a file, the
+/// directory entry itself must reach disk for the publish to survive a
+/// power cut. Errors are ignored — not every platform/filesystem supports
+/// opening a directory for sync, and the rename itself already happened.
+pub(crate) fn sync_dir(dir: &Path) {
+    if let Ok(d) = std::fs::File::open(dir) {
+        let _ = d.sync_all();
+    }
+}

@@ -1,0 +1,371 @@
+//! Write-ahead log for the mutable index: CRC32-framed insert/delete
+//! records, fsynced on append, truncated atomically after a checkpoint.
+//!
+//! ## On-disk format
+//!
+//! The file starts with the 8-byte magic `RLSHWAL\x01`. Each record is a
+//! self-delimiting frame, all little-endian:
+//!
+//! ```text
+//! [payload_len: u32] [crc32(payload): u32] [payload]
+//! payload = [kind: u8] [id: u32] [row: f32 × dim]   kind 1 = insert
+//! payload = [kind: u8] [id: u32]                    kind 2 = delete
+//! ```
+//!
+//! ## Torn-tail recovery
+//!
+//! A crash mid-append leaves a prefix of the last frame on disk. Replay
+//! ([`Wal::open`]) reads frames until the first one that is short,
+//! CRC-mismatched, or structurally invalid, truncates the file back to
+//! the last good frame boundary, and returns the records before it.
+//! Because [`Wal::append`] acknowledges only after `sync_data`, every
+//! record lost this way was never acknowledged — the recovered state is
+//! exactly "all acknowledged mutations" (chaos-tested at the named crash
+//! points in `tests/chaos.rs`).
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+use crate::util::crc32::crc32;
+use crate::{ItemId, Result};
+
+/// WAL file magic (`RLSHWAL`, version 1).
+pub const WAL_MAGIC: &[u8; 8] = b"RLSHWAL\x01";
+
+/// Frame headers are `payload_len` + `crc`, 4 bytes each.
+const FRAME_HEADER: usize = 8;
+
+/// Payload-length sanity bound: a single logged row cannot plausibly
+/// exceed this (it would mean a ~2^28-dimensional item); anything larger
+/// is torn-tail garbage and truncates the log there.
+const MAX_PAYLOAD: u32 = 1 << 30;
+
+const KIND_INSERT: u8 = 1;
+const KIND_DELETE: u8 = 2;
+
+/// One logged mutation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WalRecord {
+    /// Append `row` as item `id` and index it.
+    Insert { id: ItemId, row: Vec<f32> },
+    /// Tombstone item `id`.
+    Delete { id: ItemId },
+}
+
+impl WalRecord {
+    /// Serialized payload (the CRC-covered bytes).
+    fn payload(&self) -> Vec<u8> {
+        match self {
+            Self::Insert { id, row } => {
+                let mut p = Vec::with_capacity(5 + row.len() * 4);
+                p.push(KIND_INSERT);
+                p.extend_from_slice(&id.to_le_bytes());
+                for v in row {
+                    p.extend_from_slice(&v.to_le_bytes());
+                }
+                p
+            }
+            Self::Delete { id } => {
+                let mut p = Vec::with_capacity(5);
+                p.push(KIND_DELETE);
+                p.extend_from_slice(&id.to_le_bytes());
+                p
+            }
+        }
+    }
+
+    /// Decode a payload; `None` means structurally invalid (torn tail).
+    // staticcheck: allow(panic-reach, "payload indices 0..5 sit behind the len<5 early return; chunk bytes come from chunks_exact(4)")
+    fn decode(payload: &[u8]) -> Option<Self> {
+        if payload.len() < 5 {
+            return None;
+        }
+        let id = ItemId::from_le_bytes([payload[1], payload[2], payload[3], payload[4]]);
+        match payload[0] {
+            KIND_INSERT if (payload.len() - 5) % 4 == 0 => {
+                let row = payload[5..]
+                    .chunks_exact(4)
+                    .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                    .collect();
+                Some(Self::Insert { id, row })
+            }
+            KIND_DELETE if payload.len() == 5 => Some(Self::Delete { id }),
+            _ => None,
+        }
+    }
+}
+
+/// An open write-ahead log, positioned at its end for appends.
+pub struct Wal {
+    file: File,
+    path: PathBuf,
+}
+
+impl Wal {
+    /// Open (or create) the log at `path` and replay it: returns the
+    /// acknowledged records in append order, with any torn tail truncated
+    /// off the file first (see the module docs).
+    // staticcheck: allow(panic-reach, "every index is a constant in-bound offset into a fixed [u8; 8] stack array")
+    pub fn open(path: impl AsRef<Path>) -> Result<(Self, Vec<WalRecord>)> {
+        let path = path.as_ref().to_path_buf();
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .open(&path)
+            .with_context(|| format!("opening WAL {}", path.display()))?;
+        let file_len = file.metadata()?.len();
+        if file_len < WAL_MAGIC.len() as u64 {
+            // Fresh file, or a creation torn before the header landed
+            // (nothing was ever acknowledged against it either way).
+            file.set_len(0)?;
+            file.write_all(WAL_MAGIC)?;
+            file.sync_data()?;
+            return Ok((Self { file, path }, Vec::new()));
+        }
+        let mut magic = [0u8; 8];
+        file.seek(SeekFrom::Start(0))?;
+        file.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == WAL_MAGIC, "{}: not a rangelsh WAL", path.display());
+        let mut records = Vec::new();
+        let mut good_end = WAL_MAGIC.len() as u64;
+        loop {
+            let mut header = [0u8; FRAME_HEADER];
+            match read_exact_or_eof(&mut file, &mut header)? {
+                false => break, // clean or torn mid-header: truncate here
+                true => {}
+            }
+            let len = u32::from_le_bytes([header[0], header[1], header[2], header[3]]);
+            let stored_crc = u32::from_le_bytes([header[4], header[5], header[6], header[7]]);
+            if len > MAX_PAYLOAD {
+                break;
+            }
+            let mut payload = vec![0u8; len as usize];
+            if !read_exact_or_eof(&mut file, &mut payload)? {
+                break;
+            }
+            if crc32(&payload) != stored_crc {
+                break;
+            }
+            let Some(rec) = WalRecord::decode(&payload) else { break };
+            records.push(rec);
+            good_end += (FRAME_HEADER + len as usize) as u64;
+        }
+        if good_end < file_len {
+            // Drop the torn tail so the next append starts at a frame
+            // boundary; the dropped bytes were never acknowledged.
+            file.set_len(good_end)?;
+            file.sync_data()?;
+        }
+        file.seek(SeekFrom::Start(good_end))?;
+        Ok((Self { file, path }, records))
+    }
+
+    /// Append one record and fsync it. Returning `Ok` *is* the durability
+    /// acknowledgement: the record will survive any subsequent crash.
+    pub fn append(&mut self, rec: &WalRecord) -> Result<()> {
+        let payload = rec.payload();
+        let mut frame = Vec::with_capacity(FRAME_HEADER + payload.len());
+        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&crc32(&payload).to_le_bytes());
+        frame.extend_from_slice(&payload);
+        self.file
+            .write_all(&frame)
+            .with_context(|| format!("appending to WAL {}", self.path.display()))?;
+        self.file
+            .sync_data()
+            .with_context(|| format!("syncing WAL {}", self.path.display()))?;
+        Ok(())
+    }
+
+    /// Atomically truncate the log back to an empty (header-only) state —
+    /// called after a checkpoint has made its records redundant. A fresh
+    /// header-only file is staged as a `.tmp` sibling, fsynced, and
+    /// renamed over the log, so a crash at any point leaves either the
+    /// full old log (records replay idempotently) or the empty new one.
+    pub fn reset(&mut self) -> Result<()> {
+        let mut tmp = self.path.as_os_str().to_os_string();
+        tmp.push(".tmp");
+        let tmp = PathBuf::from(tmp);
+        let mut f =
+            File::create(&tmp).with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(WAL_MAGIC)?;
+        f.sync_all()?;
+        std::fs::rename(&tmp, &self.path)
+            .with_context(|| format!("renaming {} into place", tmp.display()))?;
+        if let Some(dir) = self.path.parent() {
+            super::sync_dir(dir);
+        }
+        // Appends must go to the *new* inode, not the renamed-away one.
+        self.file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(&self.path)
+            .with_context(|| format!("reopening WAL {}", self.path.display()))?;
+        self.file.seek(SeekFrom::End(0))?;
+        Ok(())
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// `read_exact` that distinguishes "hit EOF (possibly mid-buffer)" —
+/// `Ok(false)`, the torn-tail signal — from real IO errors.
+// staticcheck: allow(panic-reach, "filled < buf.len() is the loop guard, so the range start never passes the end")
+fn read_exact_or_eof(r: &mut impl Read, buf: &mut [u8]) -> Result<bool> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..])? {
+            0 => return Ok(false),
+            n => filled += n,
+        }
+    }
+    Ok(true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempPath;
+
+    fn sample_records() -> Vec<WalRecord> {
+        vec![
+            WalRecord::Insert { id: 7, row: vec![1.0, -2.5, 0.0, 3.25] },
+            WalRecord::Delete { id: 3 },
+            WalRecord::Insert { id: 8, row: vec![0.5; 4] },
+            WalRecord::Delete { id: 7 },
+        ]
+    }
+
+    #[test]
+    fn append_replay_round_trips() {
+        let tmp = TempPath::new("wal");
+        let recs = sample_records();
+        {
+            let (mut wal, replayed) = Wal::open(tmp.path()).unwrap();
+            assert!(replayed.is_empty());
+            for r in &recs {
+                wal.append(r).unwrap();
+            }
+        }
+        let (_, replayed) = Wal::open(tmp.path()).unwrap();
+        assert_eq!(replayed, recs);
+        // Replay is idempotent: a second open sees the same records.
+        let (_, replayed) = Wal::open(tmp.path()).unwrap();
+        assert_eq!(replayed, recs);
+    }
+
+    #[test]
+    fn torn_tail_truncates_to_last_acknowledged_record() {
+        // Cut the file at *every* byte length and reopen: the replay must
+        // recover exactly the records whose frames fit the prefix, and
+        // appending afterwards must work (frame-boundary truncation).
+        let tmp = TempPath::new("wal-torn");
+        let recs = sample_records();
+        {
+            let (mut wal, _) = Wal::open(tmp.path()).unwrap();
+            for r in &recs {
+                wal.append(r).unwrap();
+            }
+        }
+        let clean = std::fs::read(tmp.path()).unwrap();
+        // Frame boundaries: magic, then each frame's cumulative end.
+        let mut boundaries = vec![WAL_MAGIC.len()];
+        for r in &recs {
+            boundaries.push(boundaries.last().unwrap() + FRAME_HEADER + r.payload().len());
+        }
+        assert_eq!(*boundaries.last().unwrap(), clean.len());
+        for cut in 0..clean.len() {
+            std::fs::write(tmp.path(), &clean[..cut]).unwrap();
+            let complete = boundaries.iter().filter(|&&b| b <= cut).count().saturating_sub(1);
+            let (mut wal, replayed) = Wal::open(tmp.path()).unwrap();
+            assert_eq!(replayed, recs[..complete], "cut at {cut}");
+            // The torn tail is gone from disk and appends resume cleanly.
+            wal.append(&WalRecord::Delete { id: 99 }).unwrap();
+            drop(wal);
+            let (_, again) = Wal::open(tmp.path()).unwrap();
+            assert_eq!(again.len(), complete + 1, "cut at {cut}");
+            assert_eq!(again[complete], WalRecord::Delete { id: 99 }, "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn corrupt_payload_truncates_at_the_flip() {
+        let tmp = TempPath::new("wal-flip");
+        let recs = sample_records();
+        {
+            let (mut wal, _) = Wal::open(tmp.path()).unwrap();
+            for r in &recs {
+                wal.append(r).unwrap();
+            }
+        }
+        let clean = std::fs::read(tmp.path()).unwrap();
+        // Flip a byte inside record 2's payload: records 0..2 survive.
+        let rec2_payload_start =
+            WAL_MAGIC.len() + (0..2).map(|i| FRAME_HEADER + recs[i].payload().len()).sum::<usize>()
+                + FRAME_HEADER;
+        let mut bad = clean.clone();
+        bad[rec2_payload_start + 2] ^= 0x40;
+        std::fs::write(tmp.path(), &bad).unwrap();
+        let (_, replayed) = Wal::open(tmp.path()).unwrap();
+        assert_eq!(replayed, recs[..2]);
+    }
+
+    #[test]
+    fn reset_empties_the_log_atomically() {
+        let tmp = TempPath::new("wal-reset");
+        let (mut wal, _) = Wal::open(tmp.path()).unwrap();
+        for r in &sample_records() {
+            wal.append(r).unwrap();
+        }
+        wal.reset().unwrap();
+        // Post-reset appends land in the fresh log.
+        wal.append(&WalRecord::Delete { id: 1 }).unwrap();
+        drop(wal);
+        let (_, replayed) = Wal::open(tmp.path()).unwrap();
+        assert_eq!(replayed, vec![WalRecord::Delete { id: 1 }]);
+    }
+
+    #[test]
+    fn rejects_foreign_files() {
+        let tmp = TempPath::new("wal-foreign");
+        std::fs::write(tmp.path(), b"definitely not a WAL, but long enough").unwrap();
+        let err = Wal::open(tmp.path()).unwrap_err();
+        assert!(format!("{err:#}").contains("not a rangelsh WAL"));
+    }
+
+    #[test]
+    fn sub_header_garbage_is_reinitialised() {
+        // Fewer bytes than the magic: nothing was ever acked, start fresh.
+        let tmp = TempPath::new("wal-stub");
+        std::fs::write(tmp.path(), b"RLS").unwrap();
+        let (_, replayed) = Wal::open(tmp.path()).unwrap();
+        assert!(replayed.is_empty());
+    }
+
+    #[test]
+    fn empty_row_and_zero_id_round_trip() {
+        let tmp = TempPath::new("wal-edge");
+        let recs = vec![
+            WalRecord::Insert { id: 0, row: vec![] },
+            WalRecord::Delete { id: 0 },
+            WalRecord::Insert { id: u32::MAX, row: vec![f32::MIN_POSITIVE] },
+        ];
+        {
+            let (mut wal, _) = Wal::open(tmp.path()).unwrap();
+            for r in &recs {
+                wal.append(r).unwrap();
+            }
+        }
+        let (_, replayed) = Wal::open(tmp.path()).unwrap();
+        assert_eq!(replayed, recs);
+        // Bit-exactness of logged rows (the replay feeds hashing).
+        let WalRecord::Insert { row, .. } = &replayed[2] else { panic!() };
+        assert_eq!(row[0].to_bits(), f32::MIN_POSITIVE.to_bits());
+    }
+}

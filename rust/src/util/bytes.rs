@@ -92,6 +92,7 @@ impl<R: Read> HashingReader<R> {
 }
 
 impl<R: Read> Read for HashingReader<R> {
+    // staticcheck: allow(panic-reach, "Read::read returns n <= buf.len() by contract")
     fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
         let n = self.inner.read(buf)?;
         self.crc.update(&buf[..n]);

@@ -34,6 +34,7 @@ impl Rng {
     }
 
     #[inline]
+    // staticcheck: allow(panic-reach, "state indices are constants into the fixed [u64; 4] xoshiro state")
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
         let result = s[0]

@@ -40,12 +40,25 @@ CATEGORY = "panic-reach"
 
 ENTRY_PATTERNS = [
     "ServerHandle::query*",
+    "ServerHandle::ingest",
+    "ServerHandle::delete",
+    "ServerHandle::mutate",
     "ShardedRouter::query*",
+    "ShardedRouter::ingest",
+    "ShardedRouter::delete",
     "AnyEngine::search*",
     "SearchEngine::search*",
     "save_range_index",
     "load_range_index",
     "load_any_range_index",
+    # PR 10: the WAL-backed mutable store. Every mutation/compaction/
+    # recovery entry is a serving entry — a panic inside WAL replay or
+    # checkpointing turns a recoverable crash into an unrecoverable one.
+    "MutableStore::*",
+    "AnyStore::*",
+    "Wal::*",
+    "load_manifest",
+    "save_manifest",
 ]
 
 SERVING = frozenset(SERVING_FILES)

@@ -32,6 +32,12 @@ REQUIRED_AXES = [
 # to carry time budgets — older BENCH files stay valid.
 OPTIONAL_AXES = {
     "degraded_axis": {"deadline_us": (int, float), "degraded_pct": (int, float)},
+    # `mutation_axis` measures the WAL-backed mutable-store write path:
+    # acked ingest batches, recovery replay over the accumulated WAL, and
+    # the tombstone filter's query overhead vs the compacted twin. Rows
+    # carry `op` naming the measurement and `n_mutations` sizing it
+    # (batch rows / WAL records / tombstones in the queried epoch).
+    "mutation_axis": {"op": str, "n_mutations": (int, float)},
 }
 
 # Scalar fields the bench stamps alongside the axes.
@@ -75,8 +81,9 @@ def main():
                 if field not in row:
                     fail(f"{path}: {axis}[{i}] missing field {field!r}")
                 if not isinstance(row[field], fty):
+                    want = fty.__name__ if isinstance(fty, type) else "a number"
                     fail(
-                        f"{path}: {axis}[{i}].{field} must be a number, "
+                        f"{path}: {axis}[{i}].{field} must be {want}, "
                         f"got {type(row[field]).__name__}"
                     )
 

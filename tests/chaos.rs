@@ -175,6 +175,183 @@ fn seeded_fault_storms_never_lie_about_completeness() {
     );
 }
 
+// ---------------------------------------------------------------------------
+// Crash-point recovery: the WAL-backed mutable store (README §"Mutability &
+// recovery model"). A crash is injected at each named point of the
+// mutation/checkpoint protocol; reopening the directory must recover a
+// state whose query answers are BIT-identical (ids and score bits) to the
+// contract for that point:
+//
+//   PostWalAppend / PreApply  the mutation was acknowledged durable —
+//                             recovery must include it;
+//   MidCompaction             nothing was written — recovery is the exact
+//                             pre-compaction state;
+//   PreRename                 staged files exist but were never published —
+//                             recovery is the exact pre-checkpoint state.
+
+use rangelsh::coordinator::{CrashPoint, MutableConfig, MutableStore};
+use rangelsh::util::tmp::TempPath;
+
+fn store_cfg() -> ServeConfig {
+    ServeConfig { probe_budget: usize::MAX, top_k: TOP_K, code_bits: 16, ..Default::default() }
+}
+
+fn new_store(dir: &std::path::Path, n: usize, seed: u64) -> MutableStore<u64> {
+    MutableStore::create(
+        dir,
+        Arc::new(synthetic::longtail_sift(n, DIM, seed)),
+        RangeLshParams::new(16, 8),
+        7,
+        store_cfg(),
+        MutableConfig::manual(),
+    )
+    .unwrap()
+}
+
+fn reopen(dir: &std::path::Path) -> MutableStore<u64> {
+    MutableStore::open(dir, store_cfg(), MutableConfig::manual()).unwrap()
+}
+
+/// Full-budget answers as (id, score-bits) — bit-identity, not approximate.
+fn bit_answers(store: &MutableStore<u64>, queries: &Dataset) -> Vec<Vec<(ItemId, u32)>> {
+    let engine = store.current();
+    (0..queries.len())
+        .map(|qi| {
+            engine
+                .search(queries.row(qi))
+                .unwrap()
+                .into_iter()
+                .map(|r| (r.id, r.score.to_bits()))
+                .collect()
+        })
+        .collect()
+}
+
+fn crash_plan(point: CrashPoint) -> FaultPlan {
+    FaultPlan::seeded(0, 0).with_crash(point)
+}
+
+#[test]
+fn acked_mutations_survive_crashes_before_apply() {
+    // The WAL record is fsynced at PostWalAppend and PreApply: replay
+    // must reconstruct the acknowledged mutation even though the epoch
+    // swap never happened. The recovered store is compared bit-for-bit
+    // against a twin that applied the same mutations without faults.
+    let queries = synthetic::gaussian_queries(8, DIM, 101);
+    for point in [CrashPoint::PostWalAppend, CrashPoint::PreApply] {
+        let dir = TempPath::new("chaos-crash-mut");
+        let twin_dir = TempPath::new("chaos-crash-mut-twin");
+        let store = new_store(dir.path(), 400, 31);
+        let twin = new_store(twin_dir.path(), 400, 31);
+
+        // Crash an ingest...
+        let extra = synthetic::longtail_sift(25, DIM, 32);
+        store.set_fault_plan(Some(crash_plan(point)));
+        let err = store.ingest(extra.flat()).unwrap_err();
+        assert!(format!("{err:#}").contains("injected crash"), "{point:?}");
+        drop(store);
+        twin.ingest(extra.flat()).unwrap();
+        let store = reopen(dir.path());
+        assert_eq!(store.live_len(), twin.live_len(), "{point:?}");
+        assert_eq!(bit_answers(&store, &queries), bit_answers(&twin, &queries), "{point:?}");
+
+        // ... then a delete of the current winners, on the recovered store.
+        let victims: Vec<ItemId> =
+            bit_answers(&store, &queries)[0].iter().map(|&(id, _)| id).collect();
+        store.set_fault_plan(Some(crash_plan(point)));
+        assert!(store.delete(&victims).is_err(), "{point:?}");
+        drop(store);
+        twin.delete(&victims).unwrap();
+        let store = reopen(dir.path());
+        let recovered = bit_answers(&store, &queries);
+        assert_eq!(recovered, bit_answers(&twin, &queries), "{point:?} delete");
+        for row in &recovered {
+            for (id, _) in row {
+                assert!(!victims.contains(id), "{point:?}: tombstoned id {id} surfaced");
+            }
+        }
+    }
+}
+
+#[test]
+fn compaction_crashes_recover_the_precompaction_epoch() {
+    // MidCompaction writes nothing to disk; PreRename stages fsynced
+    // temp files but never publishes them. Both recover the exact
+    // pre-compaction state — tombstones, answers, and all.
+    let queries = synthetic::gaussian_queries(8, DIM, 102);
+    for point in [CrashPoint::MidCompaction, CrashPoint::PreRename] {
+        let dir = TempPath::new("chaos-crash-compact");
+        let store = new_store(dir.path(), 400, 33);
+        store.delete(&(0..40).collect::<Vec<ItemId>>()).unwrap();
+        let want = bit_answers(&store, &queries);
+        store.set_fault_plan(Some(crash_plan(point)));
+        let err = store.compact().unwrap_err();
+        assert!(format!("{err:#}").contains("injected crash"), "{point:?}");
+        drop(store);
+        let store = reopen(dir.path());
+        assert_eq!(store.tombstoned_len(), 40, "{point:?}");
+        assert_eq!(bit_answers(&store, &queries), want, "{point:?}");
+        // The recovered store is fully live: a real compaction now
+        // succeeds and preserves the answers (full budget, so dropping
+        // tombstoned rows cannot change the top-k).
+        store.compact().unwrap();
+        assert_eq!(store.tombstoned_len(), 0, "{point:?}");
+        assert_eq!(bit_answers(&store, &queries), want, "{point:?} post-compaction");
+    }
+}
+
+#[test]
+fn tombstoned_ids_never_surface_across_recovery_and_reopen() {
+    // The visibility rule end-to-end: once a delete is acknowledged, the
+    // id is invisible to full-budget queries in every recovered epoch —
+    // including the epoch recovered after a crashed compaction, and a
+    // second clean reopen through the width-erased `AnyStore` path.
+    // (Resumed-session filtering is exercised element-for-element by the
+    // property suite; this test pins the recovery surface.)
+    let dir = TempPath::new("chaos-tombstone");
+    let store = new_store(dir.path(), 300, 34);
+    let queries = synthetic::gaussian_queries(4, DIM, 103);
+    let victims: Vec<ItemId> = bit_answers(&store, &queries)[0]
+        .iter()
+        .map(|&(id, _)| id)
+        .chain(0..10)
+        .collect();
+    store.delete(&victims).unwrap();
+    store.set_fault_plan(Some(crash_plan(CrashPoint::PreRename)));
+    assert!(store.compact().is_err());
+    drop(store);
+
+    let store = reopen(dir.path());
+    assert_eq!(store.tombstoned_len(), victims.len());
+    let answers = bit_answers(&store, &queries);
+    for row in &answers {
+        for (id, _) in row {
+            assert!(!victims.contains(id), "recovered epoch surfaced tombstoned id {id}");
+        }
+    }
+    drop(store);
+
+    // A clean reopen through AnyStore sees the same state and the same rule.
+    let any = rangelsh::coordinator::AnyStore::open(
+        dir.path(),
+        store_cfg(),
+        MutableConfig::manual(),
+    )
+    .unwrap();
+    assert_eq!(any.code_words(), 1);
+    assert_eq!(any.tombstoned_len(), victims.len());
+    let engine = any.engine();
+    for (qi, want) in answers.iter().enumerate() {
+        let got: Vec<(ItemId, u32)> = engine
+            .search(queries.row(qi))
+            .unwrap()
+            .into_iter()
+            .map(|r| (r.id, r.score.to_bits()))
+            .collect();
+        assert_eq!(&got, want, "AnyStore reopen diverged on query {qi}");
+    }
+}
+
 #[test]
 fn overload_shedding_is_typed_under_fault_injection_build() {
     // The server's admission control (not the router) rejects a budget

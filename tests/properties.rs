@@ -849,6 +849,209 @@ fn prop_streaming_pruned_rerank_equals_exhaustive_oracle() {
     });
 }
 
+// ---------------------------------------------------------------------------
+// Online mutability (README §"Mutability & recovery model"): a store
+// mutated through the WAL-backed product path, and an index extended
+// in place, must be indistinguishable — answer for answer, id for id,
+// score bit for score bit — from structures freshly rebuilt over only
+// the live rows.
+
+/// Interleaved insert/delete/query schedule through `MutableStore`. At
+/// every checkpoint the store's full-budget answers are compared element
+/// for element against a `SearchEngine` freshly built over only the live
+/// rows with the exhaustive re-rank oracle — local oracle ids mapped back
+/// through the monotone live-id list, scores compared bit for bit. A
+/// final compaction (the drift-repair step) must leave answers unmoved.
+fn check_mutated_store_equals_rebuilt<C>(
+    rng: &mut Rng,
+    seed: u64,
+    code_bits: usize,
+    backend: rangelsh::config::ProbeBackend,
+) where
+    C: rangelsh::coordinator::store::StoredWidth,
+{
+    use rangelsh::config::{RerankMode, ServeConfig};
+    use rangelsh::coordinator::{MutableConfig, MutableStore, SearchEngine};
+    use rangelsh::util::tmp::TempPath;
+    use std::sync::Arc;
+
+    const DIM: usize = 8;
+    let n0 = 120 + rng.gen_index(80);
+    let params = RangeLshParams::new(code_bits, 8);
+    let cfg = ServeConfig {
+        probe_budget: usize::MAX,
+        top_k: 5,
+        code_bits,
+        probe_backend: backend,
+        ..Default::default()
+    };
+    let dir = TempPath::new("prop-mutable");
+    let base = synthetic::longtail_sift(n0, DIM, seed ^ 0xA11CE);
+    let mut rows: Vec<f32> = base.flat().to_vec();
+    let mut dead: Vec<bool> = vec![false; n0];
+    let store = MutableStore::<C>::create(
+        dir.path(),
+        Arc::new(base),
+        params,
+        seed ^ 0x5EED,
+        cfg.clone(),
+        MutableConfig::manual(),
+    )
+    .unwrap();
+    let queries = synthetic::gaussian_queries(2, DIM, seed ^ 0xDA7A);
+
+    let check = |rows: &[f32], dead: &[bool], ctx: &str| {
+        let mut idmap: Vec<ItemId> = Vec::new();
+        let mut flat: Vec<f32> = Vec::new();
+        for (i, &gone) in dead.iter().enumerate() {
+            if !gone {
+                idmap.push(i as ItemId);
+                flat.extend_from_slice(&rows[i * DIM..(i + 1) * DIM]);
+            }
+        }
+        let live = Arc::new(Dataset::from_flat(DIM, flat));
+        let width = if code_bits <= 64 { 64 } else { params.hash_bits() };
+        let h: Arc<NativeHasher<C>> = Arc::new(NativeHasher::new(DIM, width, seed ^ 0x0C));
+        let idx = Arc::new(RangeLshIndex::build(&live, h.as_ref(), params).unwrap());
+        let ocfg = ServeConfig { rerank: RerankMode::Exhaustive, ..cfg.clone() };
+        let oracle: SearchEngine<C> = SearchEngine::new(idx, live, h, ocfg).unwrap();
+        let engine = store.current();
+        for qi in 0..queries.len() {
+            let got: Vec<(ItemId, u32)> = engine
+                .search(queries.row(qi))
+                .unwrap()
+                .into_iter()
+                .map(|r| (r.id, r.score.to_bits()))
+                .collect();
+            let want: Vec<(ItemId, u32)> = oracle
+                .search(queries.row(qi))
+                .unwrap()
+                .into_iter()
+                .map(|r| (idmap[r.id as usize], r.score.to_bits()))
+                .collect();
+            assert_eq!(got, want, "seed {seed} L={code_bits} {backend:?} {ctx} q{qi}");
+        }
+    };
+
+    check(&rows, &dead, "initial");
+    for round in 0u64..3 {
+        // Ingest a fresh batch (acked ids must be dense and sequential)...
+        let extra = synthetic::longtail_sift(10 + rng.gen_index(20), DIM, seed ^ (round + 1));
+        let ids = store.ingest(extra.flat()).unwrap();
+        assert_eq!(ids[0] as usize, dead.len(), "seed {seed} round {round}: ids not dense");
+        assert_eq!(ids.len(), extra.len(), "seed {seed} round {round}");
+        rows.extend_from_slice(extra.flat());
+        dead.extend(std::iter::repeat(false).take(extra.len()));
+        // ...then tombstone a random live subset (old and new ids alike).
+        let live_ids: Vec<ItemId> = (0..dead.len() as ItemId)
+            .filter(|&id| !dead[id as usize])
+            .collect();
+        let mut victims: Vec<ItemId> =
+            (0..8).map(|_| live_ids[rng.gen_index(live_ids.len())]).collect();
+        victims.sort_unstable();
+        victims.dedup();
+        store.delete(&victims).unwrap();
+        for &id in &victims {
+            dead[id as usize] = true;
+        }
+        check(&rows, &dead, &format!("round {round}"));
+    }
+    store.compact().unwrap();
+    assert_eq!(store.tombstoned_len(), 0, "seed {seed}: compaction left tombstones");
+    check(&rows, &dead, "post-compaction");
+}
+
+#[test]
+fn prop_mutated_store_answers_equal_freshly_rebuilt_oracle() {
+    use rangelsh::config::ProbeBackend;
+    forall(2, |rng, seed| {
+        for backend in [ProbeBackend::CountingSort, ProbeBackend::Mih] {
+            check_mutated_store_equals_rebuilt::<u64>(rng, seed, 16, backend);
+            check_mutated_store_equals_rebuilt::<Code128>(rng, seed, 128, backend);
+            check_mutated_store_equals_rebuilt::<Code256>(rng, seed, 256, backend);
+        }
+    });
+}
+
+/// Tombstone-filtered resumable sessions over an in-place-extended index:
+/// any two-way budget split concatenates to the one-shot stream with the
+/// summed budget; no tombstoned id ever appears; the exhausted stream is
+/// exactly the live id set, each id once. Inserts run first so the
+/// fill-gap session contract is exercised on a *mutated* index (touched
+/// ranges rebuilt, untouched ranges shared from the previous epoch).
+fn check_tombstone_session_contract<C: CodeWord>(
+    rng: &mut Rng,
+    seed: u64,
+    code_bits: usize,
+    mih: bool,
+) {
+    use rangelsh::index::mutable::{insert_into_index, Tombstones, TombstonedIndex};
+    use std::sync::Arc;
+
+    const DIM: usize = 8;
+    let n0 = 150 + rng.gen_index(100);
+    let extra = 30 + rng.gen_index(30);
+    let all = synthetic::longtail_sift(n0 + extra, DIM, seed ^ 0x70B);
+    let base = Dataset::from_flat(DIM, all.flat()[..n0 * DIM].to_vec());
+    let params = RangeLshParams::new(code_bits, 8);
+    let width = if code_bits <= 64 { 64 } else { params.hash_bits() };
+    let h: NativeHasher<C> = NativeHasher::new(DIM, width, seed ^ 0x11);
+    let built = RangeLshIndex::build(&base, &h, params).unwrap();
+    let new_ids: Vec<ItemId> = (n0 as ItemId..(n0 + extra) as ItemId).collect();
+    let mut grown = insert_into_index(&built, &all, &new_ids).unwrap();
+    if mih {
+        grown.enable_mih();
+    }
+    let n = n0 + extra;
+    let mut tombs = Tombstones::new();
+    for _ in 0..n / 8 {
+        tombs.set(rng.gen_index(n) as ItemId);
+    }
+    let live_n = n - tombs.len();
+    let view = TombstonedIndex::new(Arc::new(grown), Arc::new(tombs));
+    let q = synthetic::gaussian_queries(2, DIM, seed ^ 0x99);
+    let budgets = [1usize, 7, live_n / 2, usize::MAX];
+    for qi in 0..q.len() {
+        let ctx = format!("seed {seed} L={code_bits} mih={mih} q{qi}");
+        let qcode = view.inner().hash_query(q.row(qi));
+        // Exhausted one-shot == the live set, each id exactly once.
+        let mut full = Vec::new();
+        view.probe_with_code(qcode, usize::MAX, &mut full);
+        assert_eq!(full.len(), live_n, "{ctx}: stream length");
+        let mut sorted = full.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), live_n, "{ctx}: duplicate ids in stream");
+        for &id in &full {
+            assert!(!view.tombstones().contains(id), "{ctx}: tombstoned id {id} surfaced");
+        }
+        for &b1 in &budgets {
+            for &b2 in &budgets {
+                let mut oneshot = Vec::new();
+                view.probe_with_code(qcode, b1.saturating_add(b2), &mut oneshot);
+                let mut streamed = Vec::new();
+                let mut session = view.session(qcode);
+                let got1 = session.extend(b1, &mut streamed);
+                assert_eq!(got1, b1.min(live_n), "{ctx} b1={b1}: first extend length");
+                let got2 = session.extend(b2, &mut streamed);
+                assert_eq!(got1 + got2, streamed.len(), "{ctx} b1={b1} b2={b2}");
+                assert_eq!(streamed, oneshot, "{ctx} b1={b1} b2={b2}: streams diverge");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_tombstone_sessions_equal_oneshot_and_never_leak() {
+    forall(3, |rng, seed| {
+        for mih in [false, true] {
+            check_tombstone_session_contract::<u64>(rng, seed, 16, mih);
+            check_tombstone_session_contract::<Code128>(rng, seed, 128, mih);
+            check_tombstone_session_contract::<Code256>(rng, seed, 256, mih);
+        }
+    });
+}
+
 #[test]
 fn prop_engine_results_sorted_and_exact() {
     use rangelsh::config::ServeConfig;
